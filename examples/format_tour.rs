@@ -1,0 +1,64 @@
+//! Format tour: build the BSB format step by step on a small graph and
+//! print every structure (row windows, compaction, TCBs, bitmaps) next to
+//! the Table-3 footprint comparison — a readable companion to paper §3.1 /
+//! Figure 1.
+//!
+//! ```sh
+//! cargo run --release --example format_tour
+//! ```
+
+use fused3s::bsb::{self, bitmap, footprint, stats};
+use fused3s::graph::CsrGraph;
+
+fn main() -> anyhow::Result<()> {
+    // The Figure-1-style toy matrix: one row window, scattered columns.
+    let edges: &[(u32, u32)] = &[
+        (0, 3), (0, 17), (1, 17), (1, 40), (2, 3), (3, 99), (4, 100),
+        (5, 101), (6, 40), (7, 41), (9, 3), (12, 102), (15, 3), (15, 101),
+    ];
+    let g = CsrGraph::from_edges(128, edges)?;
+    let b = bsb::build(&g);
+
+    println!("matrix: {}x{}, {} nonzeros", g.n, g.n, g.nnz());
+    println!("row windows (r=16): {}", b.num_rw);
+    for rw in 0..b.num_rw {
+        let t = b.rw_tcbs(rw);
+        if t == 0 {
+            continue;
+        }
+        println!("\nrow window {rw}: {t} TCB(s) after column compaction");
+        for j in 0..t {
+            let cols = b.tcb_cols(rw, j);
+            let bm = b.tcb_bitmap(rw, j);
+            println!(
+                "  TCB {j}: columns {:?}  nnz={}",
+                cols.iter()
+                    .map(|&c| if c == u32::MAX { "-".into() } else { c.to_string() })
+                    .collect::<Vec<_>>(),
+                bitmap::popcount(bm),
+            );
+            for r in 0..16 {
+                let row: String = (0..8)
+                    .map(|c| if bitmap::get(bm, r, c) { '#' } else { '.' })
+                    .collect();
+                if row.contains('#') {
+                    println!("    row {r:>2}: {row}");
+                }
+            }
+        }
+    }
+
+    let st = stats::compaction_stats(&b);
+    println!(
+        "\ncompaction stats: TCB/RW avg {:.2} (cv {:.2}), nnz/TCB avg {:.2}",
+        st.tcb_per_rw_avg, st.tcb_per_rw_cv, st.nnz_per_tcb_avg
+    );
+
+    println!("\nTable-3 footprints for a real graph (pubmed-sim):");
+    let d = fused3s::graph::datasets::by_name("pubmed-sim")?;
+    let inputs = footprint::measure(&d.graph);
+    for (name, bits) in footprint::table3_rows(&inputs) {
+        println!("  {:<8} {:>10.2} KiB", name, bits as f64 / 8.0 / 1024.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Memory/perf check used during the §Perf pass: repeated fused runs must
+//! show flat RSS and stable latency (guards against the Literal-execute
+//! leak in xla_extension 0.5.1 regressing back in — see runtime/client.rs).
+
+use fused3s::graph::datasets;
+use fused3s::kernels::{AttentionProblem, Backend, Driver};
+use fused3s::runtime::Runtime;
+use fused3s::util::prng::Rng;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() {
+    let rt = Runtime::from_default_artifacts().unwrap();
+    let ds = datasets::by_name("github-sim").unwrap();
+    let n = ds.graph.n;
+    let d = 64;
+    let mut rng = Rng::new(1);
+    let q = rng.normal_vec(n * d, 1.0);
+    let k = rng.normal_vec(n * d, 1.0);
+    let v = rng.normal_vec(n * d, 1.0);
+    let x = AttentionProblem::new(n, d, &q, &k, &v, 0.125);
+    let driver = Driver::prepare(&rt, &ds.graph, Backend::Fused3S).unwrap();
+    let mut rss_after_warm = 0.0;
+    for i in 0..12 {
+        let t0 = std::time::Instant::now();
+        let _ = driver.run(&rt, &x).unwrap();
+        let rss = rss_mb();
+        if i == 1 {
+            rss_after_warm = rss;
+        }
+        println!(
+            "iter {i}: {:.1} ms, rss {:.0} MB",
+            t0.elapsed().as_secs_f64() * 1e3,
+            rss
+        );
+    }
+    let growth = rss_mb() - rss_after_warm;
+    println!("rss growth after warmup: {growth:.0} MB");
+    assert!(growth < 50.0, "memory leak regression: {growth:.0} MB");
+}

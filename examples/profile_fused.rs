@@ -1,0 +1,86 @@
+//! §Perf probe: wall-clock breakdown of one fused 3S run — gather vs PJRT
+//! execution vs scatter — per bucket, on a chosen dataset.
+
+use fused3s::graph::datasets;
+use fused3s::kernels::gather::{self, CallBuffers};
+use fused3s::kernels::AttentionProblem;
+use fused3s::kernels::fused::{FusedDriver, FusedOpts};
+use fused3s::runtime::buffers::Arg;
+use fused3s::runtime::{Manifest, Runtime};
+use fused3s::util::cli::Args;
+use fused3s::util::prng::Rng;
+use fused3s::{BITMAP_WORDS, TCB_C, TCB_R};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let name = args.get_or("dataset", "github-sim");
+    let d = args.usize_or("d", 64)?;
+    let rt = Runtime::from_default_artifacts()?;
+    let ds = datasets::by_name(&name)?;
+    let n = ds.graph.n;
+    let mut rng = Rng::new(1);
+    let q = rng.normal_vec(n * d, 1.0);
+    let k = rng.normal_vec(n * d, 1.0);
+    let v = rng.normal_vec(n * d, 1.0);
+    let x = AttentionProblem::new(n, d, &q, &k, &v, 0.125);
+    let driver = FusedDriver::new(rt.manifest(), &ds.graph, FusedOpts::default())?;
+    driver.run(&rt, &x)?; // warm compiles
+
+    // Manual per-bucket breakdown (mirrors FusedDriver::run).
+    let batch = rt.manifest().rw_batch;
+    let mut bufs = CallBuffers::default();
+    let (mut t_gather, mut t_exec, mut t_scatter) = (0.0f64, 0.0, 0.0);
+    let mut per_bucket: std::collections::BTreeMap<usize, (usize, f64)> =
+        Default::default();
+    let mut out = vec![0.0f32; n * d];
+    for call in &driver.plan.calls {
+        let exe = rt.executable(&Manifest::fused3s_name(
+            call.t_bucket, d, "bf16", "splitc",
+        ))?;
+        let t0 = Instant::now();
+        gather::gather_call(&mut bufs, &call.rws, call.t_bucket, &driver.bsb, &x, batch);
+        t_gather += t0.elapsed().as_secs_f64();
+        let sq = [batch, TCB_R, d];
+        let sk = [batch, call.t_bucket * TCB_C, d];
+        let sv = [batch, call.t_bucket * TCB_C, d];
+        let sbm = [batch, call.t_bucket, BITMAP_WORDS];
+        let t0 = Instant::now();
+        let outs = rt.run_exe_raw(
+            &exe,
+            &[
+                Arg::F32(&bufs.q, &sq),
+                Arg::F32(&bufs.k, &sk),
+                Arg::F32(&bufs.v, &sv),
+                Arg::I32(&bufs.bm, &sbm),
+            ],
+        )?;
+        let dt = t0.elapsed().as_secs_f64();
+        t_exec += dt;
+        let e = per_bucket.entry(call.t_bucket).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+        let t0 = Instant::now();
+        gather::scatter_call(&mut out, outs[0].as_f32()?, &call.rws, n, d);
+        t_scatter += t0.elapsed().as_secs_f64();
+    }
+    println!(
+        "{name}: {} regular calls, {} chunked RWs",
+        driver.plan.calls.len(),
+        driver.plan.chunked.len()
+    );
+    println!(
+        "gather {:.1} ms | execute {:.1} ms | scatter {:.1} ms",
+        t_gather * 1e3,
+        t_exec * 1e3,
+        t_scatter * 1e3
+    );
+    for (t, (count, secs)) in per_bucket {
+        println!(
+            "  bucket t={t:<4} calls={count:<3} exec total {:.1} ms ({:.2} ms/call)",
+            secs * 1e3,
+            secs * 1e3 / count as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: the smallest end-to-end use of the Fused3S stack.
+//!
+//! Builds a small graph, runs fused sparse attention through the AOT
+//! kernel, and verifies against the host reference.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use fused3s::graph::generators;
+use fused3s::kernels::{reference, AttentionProblem, Backend, Driver};
+use fused3s::runtime::Runtime;
+use fused3s::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The runtime loads + lazily compiles the AOT artifact suite.
+    let rt = Runtime::from_default_artifacts()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. A graph = a sparse attention pattern (adjacency matrix A).
+    let g = generators::barabasi_albert(1000, 5, 42).with_self_loops();
+    println!("graph: n={} nnz={}", g.n, g.nnz());
+
+    // 3. Preprocess once: BSB build + row-window reordering + bucket plan.
+    let driver = Driver::prepare(&rt, &g, Backend::Fused3S)?;
+    if let Driver::Fused(f) = &driver {
+        println!(
+            "BSB: {} row windows, {} TCBs, {} kernel dispatches planned \
+             (padding {:.1}%)",
+            f.bsb.num_rw,
+            f.bsb.total_tcbs(),
+            f.plan.stats.n_calls,
+            f.plan.stats.padding_ratio() * 100.0
+        );
+    }
+
+    // 4. Run O = softmax(QK^T/sqrt(d) ⊙ A) V.
+    let d = 64;
+    let mut rng = Rng::new(7);
+    let q = rng.normal_vec(g.n * d, 1.0);
+    let k = rng.normal_vec(g.n * d, 1.0);
+    let v = rng.normal_vec(g.n * d, 1.0);
+    let x = AttentionProblem::new(g.n, d, &q, &k, &v, 1.0 / (d as f32).sqrt());
+    let t0 = std::time::Instant::now();
+    let out = driver.run(&rt, &x)?;
+    println!("fused 3S: {:.2} ms (first call compiles executables)", t0.elapsed().as_secs_f64() * 1e3);
+    let t0 = std::time::Instant::now();
+    let out2 = driver.run(&rt, &x)?;
+    println!("fused 3S: {:.2} ms (warm)", t0.elapsed().as_secs_f64() * 1e3);
+    assert_eq!(out.len(), out2.len());
+
+    // 5. Verify against the exact host reference.
+    let want = reference::dense_attention_host(&g, &x);
+    let err = reference::max_abs_diff(&out, &want);
+    println!("max |err| vs exact reference: {err:.2e} (bf16 kernel)");
+    assert!(err < 0.15);
+    println!("OK");
+    Ok(())
+}

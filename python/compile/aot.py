@@ -1,0 +1,336 @@
+"""AOT pipeline: lower the L1/L2 suite to HLO-text artifacts + manifest.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Python never runs again after this: the Rust coordinator loads the HLO text
+via ``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+Interchange format is **HLO text**, not ``.serialize()``: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+The artifact *suite* implements the bucketing contract of DESIGN.md §1:
+
+* ``fused3s_t{T}_d{D}``            — the paper's kernel, per TCB bucket T and
+                                     feature dim D, bf16 mixed precision.
+* ``fused3s_f32nc_t{T}_d{D}``      — f32 variant (DF-GNN analog; the "nc" =
+                                     used with the no-compaction BSB build).
+* ``fused3s_splitr_t{T}_d{D}``     — split-row warp-partition ablation.
+* ``fused3s_gat_t{T}_dv{D}``       — LeakyReLU rank-2 score variant for GAT.
+* ``sddmm_* / softmax_* / spmm_*`` — the unfused FlashSparse-analog stages.
+* ``dense_n{N}_d{D}``              — whole-graph dense attention (PyG dense
+                                     fallback + graph-scale oracle).
+* ``qkv_proj_* / linear_* / ffn_* / add_ln_* / ln_*`` — GT row-tile ops.
+* ``fused3s_bwd_*``                — the fused backward pass (paper §6
+                                     future work): dV/dP/dS/dQ/dK̂ in one
+                                     program, E recomputed in-kernel.
+
+Every artifact gets a manifest entry with its input shapes/dtypes so the Rust
+runtime can validate buffers before execution.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fused3s as f3s
+from .kernels import fused3s_bwd as f3s_bwd
+from .kernels import unfused
+from .kernels.ref import BITMAP_WORDS, TCB_C, TCB_R
+
+# ---------------------------------------------------------------------------
+# Suite configuration — kept small enough to lower in minutes, wide enough to
+# cover every experiment in DESIGN.md §3.  The Rust side reads these from the
+# manifest, so changing them here reconfigures the whole stack.
+# ---------------------------------------------------------------------------
+
+RW_BATCH = 8                       # row windows per dispatch (swept 2-64, see EXPERIMENTS.md §Perf)
+T_BUCKETS = [4, 8, 16, 32, 64, 128]
+D_KERNEL = [32, 64, 128]           # 3S kernel feature dims
+D_MODEL = [64, 128, 256]           # GT embedding dims (Fig. 8)
+M_TILE = 1024                      # rows per dense-op tile
+DENSE_N = [256, 1024]              # dense-attention graph sizes
+DENSE_D = [32, 64]
+GAT_T = [4, 8, 16, 32]
+CHUNK_T = 128                      # chunk capacity for oversize row windows
+GAT_DV = [64]
+SPLITR_D = 64                      # split-row ablation feature dim
+F32_D = [32, 64]                   # DF-GNN analog dims (32 = GT head width)
+
+
+def _spec_dtype(s: str):
+    return {"f32": jnp.float32, "i32": jnp.int32}[s]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Suite:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        self.t0 = time.time()
+
+    def add(self, name: str, fn, in_specs, params: dict, n_outputs: int = 1):
+        """Lower ``fn`` at the given input specs and write ``<name>.hlo.txt``."""
+        args = [
+            jax.ShapeDtypeStruct(shape, _spec_dtype(dt))
+            for shape, dt in in_specs
+        ]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.entries.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "params": params,
+                "inputs": [
+                    {"shape": list(shape), "dtype": dt}
+                    for shape, dt in in_specs
+                ],
+                "n_outputs": n_outputs,
+            }
+        )
+        print(
+            f"[{time.time() - self.t0:7.1f}s] {name}  "
+            f"({len(text) / 1024:.0f} KiB)",
+            flush=True,
+        )
+
+    def write_manifest(self):
+        manifest = {
+            "version": 1,
+            "rw_batch": RW_BATCH,
+            "t_buckets": T_BUCKETS,
+            "d_kernel": D_KERNEL,
+            "d_model": D_MODEL,
+            "m_tile": M_TILE,
+            "chunk_t": CHUNK_T,
+            "d_head": model.D_HEAD,
+            "tcb_r": TCB_R,
+            "tcb_c": TCB_C,
+            "bitmap_words": BITMAP_WORDS,
+            "executables": self.entries,
+        }
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"wrote {path} ({len(self.entries)} executables)")
+
+
+def build_fused3s(suite: Suite, fast: bool):
+    t_buckets = T_BUCKETS if not fast else [4, 8]
+    d_kernel = D_KERNEL if not fast else [32]
+    for t in t_buckets:
+        for d in d_kernel:
+            fn = functools.partial(
+                f3s.fused3s, t=t, scale=1.0, variant="splitc", precision="bf16"
+            )
+            suite.add(
+                f"fused3s_t{t}_d{d}",
+                fn,
+                f3s.fused3s_spec(RW_BATCH, t, d),
+                dict(kind="fused3s", t=t, d=d, dv=d, b=RW_BATCH,
+                     precision="bf16", variant="splitc"),
+            )
+    # DF-GNN analog: fused but f32 end-to-end.
+    for t in t_buckets:
+        for d in F32_D if not fast else [32]:
+            fn = functools.partial(
+                f3s.fused3s, t=t, scale=1.0, variant="splitc", precision="f32"
+            )
+            suite.add(
+                f"fused3s_f32nc_t{t}_d{d}",
+                fn,
+                f3s.fused3s_spec(RW_BATCH, t, d),
+                dict(kind="fused3s", t=t, d=d, dv=d, b=RW_BATCH,
+                     precision="f32", variant="splitc"),
+            )
+    # Split-row ablation (all buckets so any graph can run it).
+    for t, d in ([(t, SPLITR_D) for t in t_buckets] if not fast else [(4, 32)]):
+        fn = functools.partial(
+            f3s.fused3s, t=t, scale=1.0, variant="splitr", precision="bf16"
+        )
+        suite.add(
+            f"fused3s_splitr_t{t}_d{d}",
+            fn,
+            f3s.fused3s_spec(RW_BATCH, t, d),
+            dict(kind="fused3s", t=t, d=d, dv=d, b=RW_BATCH,
+                 precision="bf16", variant="splitr"),
+        )
+    # Partial (chunked) kernel for row windows beyond the largest bucket:
+    # returns (o, m, l) so the Rust coordinator can merge chunk softmax
+    # states (flash-decoding-style combine; see fused3s.merge_partials).
+    for d in d_kernel:
+        fn = functools.partial(
+            f3s.fused3s_partial, t=CHUNK_T if not fast else 8, scale=1.0,
+            precision="bf16",
+        )
+        tc = CHUNK_T if not fast else 8
+        suite.add(
+            f"fused3s_partial_t{tc}_d{d}",
+            fn,
+            f3s.fused3s_spec(RW_BATCH, tc, d),
+            dict(kind="fused3s_partial", t=tc, d=d, dv=d, b=RW_BATCH,
+                 precision="bf16"),
+            n_outputs=3,
+        )
+    # Backward pass (paper §6 extension): subset of buckets for training
+    # experiments; E recomputed in-kernel (FlashAttention-2 strategy).
+    for t in ([8, 32] if not fast else [4]):
+        for d in ([32, 64] if not fast else [32]):
+            fn = functools.partial(
+                f3s_bwd.fused3s_bwd, t=t, scale=1.0, precision="bf16"
+            )
+            suite.add(
+                f"fused3s_bwd_t{t}_d{d}",
+                fn,
+                f3s_bwd.fused3s_bwd_spec(RW_BATCH, t, d),
+                dict(kind="fused3s_bwd", t=t, d=d, dv=d, b=RW_BATCH,
+                     precision="bf16"),
+                n_outputs=3,
+            )
+    # GAT: rank-2 scores (d=2) + LeakyReLU, value dim dv.
+    for t in GAT_T if not fast else [4]:
+        for dv in GAT_DV:
+            fn = functools.partial(
+                f3s.fused3s, t=t, scale=1.0, variant="splitc",
+                precision="bf16", activation="leakyrelu",
+            )
+            suite.add(
+                f"fused3s_gat_t{t}_dv{dv}",
+                fn,
+                f3s.fused3s_spec(RW_BATCH, t, 2, dv),
+                dict(kind="fused3s", t=t, d=2, dv=dv, b=RW_BATCH,
+                     precision="bf16", variant="splitc",
+                     activation="leakyrelu"),
+            )
+
+
+def build_unfused(suite: Suite, fast: bool):
+    t_buckets = T_BUCKETS if not fast else [4, 8]
+    d_kernel = ([32, 64] if not fast else [32])
+    for t in t_buckets:
+        for d in d_kernel:
+            suite.add(
+                f"sddmm_t{t}_d{d}",
+                functools.partial(unfused.sddmm, t=t, scale=1.0),
+                unfused.sddmm_spec(RW_BATCH, t, d),
+                dict(kind="sddmm", t=t, d=d, b=RW_BATCH),
+            )
+            suite.add(
+                f"spmm_t{t}_d{d}",
+                unfused.spmm,
+                unfused.spmm_spec(RW_BATCH, t, d),
+                dict(kind="spmm", t=t, d=d, b=RW_BATCH),
+            )
+        suite.add(
+            f"softmax_naive_t{t}",
+            unfused.softmax_naive,
+            unfused.softmax_spec(RW_BATCH, t),
+            dict(kind="softmax_naive", t=t, b=RW_BATCH),
+        )
+        suite.add(
+            f"softmax_stable_t{t}",
+            unfused.softmax_stable,
+            unfused.softmax_spec(RW_BATCH, t),
+            dict(kind="softmax_stable", t=t, b=RW_BATCH),
+        )
+
+
+def build_dense(suite: Suite, fast: bool):
+    for n in DENSE_N if not fast else [256]:
+        for d in DENSE_D if not fast else [32]:
+            suite.add(
+                f"dense_n{n}_d{d}",
+                functools.partial(unfused.dense_attention, scale=1.0),
+                unfused.dense_spec(n, d),
+                dict(kind="dense", n=n, d=d),
+            )
+
+
+def build_model_ops(suite: Suite, fast: bool):
+    for d in D_MODEL if not fast else [64]:
+        m = M_TILE
+        suite.add(
+            f"qkv_proj_m{m}_d{d}",
+            model.qkv_proj,
+            model.qkv_proj_spec(m, d),
+            dict(kind="qkv_proj", m=m, d=d),
+        )
+        suite.add(
+            f"linear_m{m}_d{d}",
+            model.linear,
+            model.linear_spec(m, d, d),
+            dict(kind="linear", m=m, din=d, dout=d),
+        )
+        suite.add(
+            f"ffn_m{m}_d{d}",
+            model.ffn,
+            model.ffn_spec(m, d, 2 * d),
+            dict(kind="ffn", m=m, d=d, h=2 * d),
+        )
+        suite.add(
+            f"add_ln_m{m}_d{d}",
+            model.add_layernorm,
+            model.add_layernorm_spec(m, d),
+            dict(kind="add_ln", m=m, d=d),
+        )
+        suite.add(
+            f"ln_m{m}_d{d}",
+            model.layernorm,
+            model.layernorm_spec(m, d),
+            dict(kind="ln", m=m, d=d),
+        )
+    # AGNN preprocessing (row normalisation) at kernel dims.
+    for d in ([64] if not fast else [32]):
+        suite.add(
+            f"row_norm_m{M_TILE}_d{d}",
+            model.row_normalize,
+            model.row_normalize_spec(M_TILE, d),
+            dict(kind="row_norm", m=M_TILE, d=d),
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--fast", action="store_true",
+        help="tiny suite for CI smoke runs (subset of buckets)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    suite = Suite(args.out)
+    build_fused3s(suite, args.fast)
+    build_unfused(suite, args.fast)
+    build_dense(suite, args.fast)
+    build_model_ops(suite, args.fast)
+    suite.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,348 @@
+"""Fused3S — the paper's Algorithm 1 as a Pallas kernel.
+
+One kernel fuses the three sparse-attention operations (the "3S" pattern):
+
+  1. SDDMM      S_j = Q_i K̂_j^T  ⊙ bitmap_j          (tensor-core GEMM)
+  2. softmax    online, max-stabilized, f32           (Alg. 1 lines 16-18)
+  3. SpMM       O_i += diag(rescale) O_i + E_j V̂_j    (tensor-core GEMM)
+
+Grid layout (node-parallel fusion, §3.2 of the paper): one program instance
+per *row window* (RW) of r=16 rows.  The paper maps an RW to a CUDA thread
+block; we map it to a Pallas grid step.
+
+TPU adaptation of the TCB loop (see DESIGN.md §Hardware-Adaptation): the
+paper walks 16×8 TCBs with per-tile `mma` ops because that is the tensor
+core's operand shape.  The MXU wants *wide, batched* contractions, so one
+Pallas program processes the **whole batch of row windows in a single
+pass**: one batched (B,16,d)x(B,d,t*8) SDDMM contraction, a masked row
+softmax over all t TCBs at once, and one batched (B,16,t*8)x(B,t*8,dv)
+SpMM contraction.  The paper's thread-block axis becomes the GEMM batch
+dim; its split-column warp axis becomes the wide N axis.  S and E still
+never leave the kernel (the fusion claim), and the *online* softmax
+survives where it is actually needed under AOT static shapes: combining
+partial states across the chunks of oversize row windows
+(`fused3s_partial` + the Rust-side merge), which generalises the paper's
+"multiple thread blocks per row window" future-work item.  (An earlier
+revision used grid=(B,) with a per-TCB fori_loop — measured 3–30× slower
+on the CPU substrate and a poor MXU shape; see EXPERIMENTS.md §Perf.)
+
+Static-shape contract (AOT bucketing, see DESIGN.md §1): every executable is
+specialised to a TCB count ``t`` and feature dim ``d``; the Rust coordinator
+routes each RW to the smallest bucket with t >= its TCB count and pads with
+all-zero bitmaps.  Zero bitmaps mask to -inf and exponentiate to 0, so padding
+is numerically exact.
+
+Mixed precision (paper Table 5, fp16→bf16 for TPU): Q/K̂/V̂ are cast to bf16
+for the GEMMs, accumulation and the whole softmax run in f32, E is cast to
+bf16 before the SpMM contraction, O is f32.
+
+All kernels are built with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so the kernel is lowered to plain HLO.  Real-TPU VMEM /
+MXU estimates live in DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BITMAP_WORDS, TCB_C, TCB_R
+
+NEG_INF = float("-inf")
+
+
+def _expand_bitmap(words: jnp.ndarray) -> jnp.ndarray:
+    """Expand one TCB bitmap (4 x i32 words) into a (16, 8) bool mask.
+
+    Bit ``i = row*8 + col`` of the 128-bit map lives in word ``i // 32`` at
+    position ``i % 32``.  There is no dynamic gather: the word for each lane is
+    selected with four equality-masked broadcasts (constant unrolled), which
+    lowers to vector selects — the TPU analog of the paper's "bitmap decoded
+    in registers, no index arithmetic".
+    """
+    idx = (
+        jax.lax.broadcasted_iota(jnp.int32, (TCB_R, TCB_C), 0) * TCB_C
+        + jax.lax.broadcasted_iota(jnp.int32, (TCB_R, TCB_C), 1)
+    )
+    word_idx = jax.lax.shift_right_logical(idx, 5)
+    bit_idx = jnp.bitwise_and(idx, 31)
+    w = jnp.zeros((TCB_R, TCB_C), jnp.int32)
+    for i in range(BITMAP_WORDS):
+        w = jnp.where(word_idx == i, words[i], w)
+    bit = jnp.bitwise_and(jax.lax.shift_right_logical(w, bit_idx), 1)
+    return bit == 1
+
+
+def _expand_bitmaps_batch(words: jnp.ndarray, b: int, t: int) -> jnp.ndarray:
+    """Expand a batch of row-window bitmaps (B, t, 4) -> (B, 16, t*8) bool.
+
+    Same single-bit arithmetic as :func:`_expand_bitmap`, vectorised over
+    the batch and TCB axes so the kernel decodes every block in one shot.
+    """
+    idx = (
+        jax.lax.broadcasted_iota(jnp.int32, (TCB_R, TCB_C), 0) * TCB_C
+        + jax.lax.broadcasted_iota(jnp.int32, (TCB_R, TCB_C), 1)
+    )  # (16, 8): bit index within any block
+    word_idx = jax.lax.shift_right_logical(idx, 5)  # (16, 8)
+    bit_idx = jnp.bitwise_and(idx, 31)
+    # Select each lane's word per (batch, TCB): (B, t, 16, 8).
+    w = jnp.zeros((b, t, TCB_R, TCB_C), jnp.int32)
+    for i in range(BITMAP_WORDS):
+        w = jnp.where(word_idx[None, None] == i, words[:, :, i, None, None], w)
+    bit = jnp.bitwise_and(
+        jax.lax.shift_right_logical(w, bit_idx[None, None]), 1
+    )
+    mask = bit == 1  # (B, t, 16, 8)
+    return jnp.transpose(mask, (0, 2, 1, 3)).reshape(b, TCB_R, t * TCB_C)
+
+
+def _finalize(acc: jnp.ndarray, l: jnp.ndarray) -> jnp.ndarray:
+    """O_i = diag(l)^-1 acc with the empty-row (l == 0) -> 0 convention."""
+    safe_l = jnp.where(l > 0, l, 1.0)
+    return jnp.where((l > 0)[:, None], acc / safe_l[:, None], 0.0)
+
+
+def _leaky_relu(x: jnp.ndarray, slope: float = 0.2) -> jnp.ndarray:
+    """LeakyReLU pre-softmax activation — lets the same kernel express GAT
+    (Eq. 2 of the paper) where scores pass through LeakyReLU before softmax."""
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def _masked_softmax_rows(s, mask):
+    """Row softmax over the masked score strips; empty rows -> (p=0, l=0)."""
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    return p, m, l
+
+
+def _finalize_batch(acc, l):
+    """O = diag(l)^-1 acc with the empty-row (l == 0) -> 0 convention."""
+    safe_l = jnp.where(l > 0, l, 1.0)
+    return jnp.where((l > 0)[..., None], acc / safe_l[..., None], 0.0)
+
+
+def _sddmm_batch(q, k, compute_dtype):
+    """(B,16,d) x (B,t*8,d) -> (B,16,t*8), f32 accumulate."""
+    return jax.lax.dot_general(
+        q.astype(compute_dtype),
+        k.astype(compute_dtype),
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _spmm_batch(p, v, compute_dtype):
+    """(B,16,t*8) x (B,t*8,dv) -> (B,16,dv), f32 accumulate."""
+    return jax.lax.dot_general(
+        p.astype(compute_dtype),
+        v.astype(compute_dtype),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _fused3s_kernel(q_ref, k_ref, v_ref, bm_ref, o_ref, *, t: int, scale: float,
+                    compute_dtype, activation: str = "none"):
+    """Single-pass fused 3S over a batch of row windows (module docstring)."""
+    b = q_ref.shape[0]
+    s = _sddmm_batch(q_ref[...], k_ref[...], compute_dtype)
+    if scale != 1.0:
+        s = s * scale
+    if activation == "leakyrelu":
+        s = _leaky_relu(s)
+    mask = _expand_bitmaps_batch(bm_ref[...], b, t)
+    p, _, l = _masked_softmax_rows(s, mask)
+    pv = _spmm_batch(p, v_ref[...], compute_dtype)
+    o_ref[...] = _finalize_batch(pv, l)
+
+
+def _fused3s_splitr_kernel(q_ref, k_ref, v_ref, bm_ref, o_ref, *, t: int,
+                           scale: float, compute_dtype,
+                           activation: str = "none", dk: int = 32):
+    """Split-row ablation variant (paper §3.3, F3S_splitR).
+
+    The paper's split-row scheme partitions the contraction (feature) axis of
+    each S-tile across warps, forcing every warp to hold only a fragment of
+    Q_i and requiring a cross-warp reduction per tile.  Structural analog:
+    the SDDMM contraction is decomposed into d/dk partial-depth products
+    reduced sequentially — narrower GEMMs plus an explicit reduction instead
+    of one full-depth contraction.
+    """
+    b = q_ref.shape[0]
+    d = q_ref.shape[-1]
+    q = q_ref[...]
+    k = k_ref[...]
+    n_frag = max(1, d // dk)
+    s = jnp.zeros((b, TCB_R, t * TCB_C), jnp.float32)
+    for f in range(n_frag):
+        qf = jax.lax.slice_in_dim(q, f * dk, (f + 1) * dk, axis=2)
+        kf = jax.lax.slice_in_dim(k, f * dk, (f + 1) * dk, axis=2)
+        s = s + _sddmm_batch(qf, kf, compute_dtype)
+    if scale != 1.0:
+        s = s * scale
+    if activation == "leakyrelu":
+        s = _leaky_relu(s)
+    mask = _expand_bitmaps_batch(bm_ref[...], b, t)
+    p, _, l = _masked_softmax_rows(s, mask)
+    pv = _spmm_batch(p, v_ref[...], compute_dtype)
+    o_ref[...] = _finalize_batch(pv, l)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t", "scale", "variant", "precision", "activation"),
+)
+def fused3s(
+    q: jnp.ndarray,
+    khat: jnp.ndarray,
+    vhat: jnp.ndarray,
+    bitmap: jnp.ndarray,
+    *,
+    t: int,
+    scale: float = 1.0,
+    variant: str = "splitc",
+    precision: str = "bf16",
+    activation: str = "none",
+) -> jnp.ndarray:
+    """Fused sparse attention over BSB row-window blocks.
+
+    Args:
+      q:      (B, 16, d) f32 row-window query blocks.
+      khat:   (B, t*8, d) f32 gathered key rows (zero-padded per bucket).
+      vhat:   (B, t*8, d) f32 gathered value rows.
+      bitmap: (B, t, 4) i32 TCB bitmaps (zero words = fully masked padding).
+      t:      TCB-count bucket (static).
+      scale:  score scale baked into the executable (static).
+      variant:   "splitc" (default, paper's choice) or "splitr" (ablation).
+      precision: "bf16" (paper's mixed precision) or "f32" (DF-GNN analog).
+
+    Returns:
+      (B, 16, d) f32 output blocks.
+    """
+    b, r, d = q.shape
+    dv = vhat.shape[-1]
+    assert r == TCB_R, q.shape
+    assert khat.shape == (b, t * TCB_C, d), (khat.shape, (b, t * TCB_C, d))
+    assert vhat.shape == (b, t * TCB_C, dv), vhat.shape
+    assert bitmap.shape == (b, t, BITMAP_WORDS), bitmap.shape
+    compute_dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
+    body = _fused3s_kernel if variant == "splitc" else _fused3s_splitr_kernel
+    kernel = functools.partial(
+        body, t=t, scale=scale, compute_dtype=compute_dtype,
+        activation=activation,
+    )
+    # One program instance covers the whole row-window batch (batched GEMMs
+    # are the MXU-friendly shape; the RW axis is the GEMM batch dim).  On a
+    # real TPU a BlockSpec over the batch axis would stream RWs through
+    # VMEM; interpret mode runs the program whole.
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, TCB_R, dv), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(q, khat, vhat, bitmap)
+
+
+def fused3s_spec(b: int, t: int, d: int, dv: int | None = None):
+    """(shapes, dtypes) of the executable's inputs, for the AOT manifest."""
+    dv = d if dv is None else dv
+    return [
+        ((b, TCB_R, d), "f32"),
+        ((b, t * TCB_C, d), "f32"),
+        ((b, t * TCB_C, dv), "f32"),
+        ((b, t, BITMAP_WORDS), "i32"),
+    ]
+
+
+def default_scale(d: int) -> float:
+    """1/sqrt(d) — the transformer-head convention used by the GT model."""
+    return 1.0 / math.sqrt(d)
+
+
+# ---------------------------------------------------------------------------
+# Partial (chunked) variant — oversize row windows.
+#
+# Row windows whose TCB count exceeds the largest compiled bucket (Reddit-
+# style mega-hubs, Table 7's 9857-TCB tail) are split into chunks; each chunk
+# runs this kernel, which returns the *normalised* chunk output plus its
+# online-softmax state (m, l).  The Rust coordinator merges chunk results:
+#
+#   w_i = l_i * exp(m_i - max_j m_j);   O = sum_i w_i O_i / sum_i w_i
+#
+# This is the online-softmax identity across chunks — the host-side analog of
+# the paper's "multiple thread blocks per row window" future-work item, and
+# exactly the flash-decoding split-KV combine.
+# ---------------------------------------------------------------------------
+
+
+def _fused3s_partial_kernel(q_ref, k_ref, v_ref, bm_ref, o_ref, m_ref, l_ref,
+                            *, t: int, scale: float, compute_dtype):
+    """Single-pass chunk kernel: normalised chunk outputs + softmax states."""
+    b = q_ref.shape[0]
+    s = _sddmm_batch(q_ref[...], k_ref[...], compute_dtype)
+    if scale != 1.0:
+        s = s * scale
+    mask = _expand_bitmaps_batch(bm_ref[...], b, t)
+    p, m, l = _masked_softmax_rows(s, mask)
+    pv = _spmm_batch(p, v_ref[...], compute_dtype)
+    o_ref[...] = _finalize_batch(pv, l)
+    m_ref[...] = m
+    l_ref[...] = l
+
+
+@functools.partial(jax.jit, static_argnames=("t", "scale", "precision"))
+def fused3s_partial(
+    q: jnp.ndarray,
+    khat: jnp.ndarray,
+    vhat: jnp.ndarray,
+    bitmap: jnp.ndarray,
+    *,
+    t: int,
+    scale: float = 1.0,
+    precision: str = "bf16",
+):
+    """Chunk kernel: returns (o, m, l) per row-window chunk.
+
+    Shapes as :func:`fused3s`; extra outputs m, l are (B, 16) f32.
+    """
+    b, r, d = q.shape
+    dv = vhat.shape[-1]
+    assert r == TCB_R
+    compute_dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
+    kernel = functools.partial(
+        _fused3s_partial_kernel, t=t, scale=scale, compute_dtype=compute_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, TCB_R, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, TCB_R), jnp.float32),
+            jax.ShapeDtypeStruct((b, TCB_R), jnp.float32),
+        ],
+        interpret=True,
+    )(q, khat, vhat, bitmap)
+
+
+def merge_partials(os, ms, ls):
+    """Reference implementation of the host-side chunk merge (numpy).
+
+    The Rust coordinator reimplements this; `test_chunking.py` pins both
+    against the unchunked kernel.  os: list of (16, dv); ms, ls: list of (16,).
+    """
+    import numpy as np
+
+    ms_arr = np.stack(ms)            # (C, 16)
+    m_max = ms_arr.max(axis=0)       # (16,)
+    m_safe = np.where(np.isfinite(m_max), m_max, 0.0)
+    w = np.stack(ls) * np.exp(ms_arr - m_safe)  # (C, 16)
+    denom = w.sum(axis=0)            # (16,)
+    num = (w[:, :, None] * np.stack(os)).sum(axis=0)  # (16, dv)
+    return np.where(denom[:, None] > 0,
+                    num / np.where(denom[:, None] > 0, denom[:, None], 1.0),
+                    0.0)

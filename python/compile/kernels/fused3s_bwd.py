@@ -1,0 +1,141 @@
+"""Fused 3S backward pass — the paper's §6 extension, implemented.
+
+The forward kernel computes ``O = softmax(S) V`` with ``S = QK̂ᵀ ⊙ bitmap``.
+Given upstream gradients dO, the backward involves exactly the operations
+the paper names — "SpMM and SDDMM … in reverse order":
+
+    dV  = Eᵀ dO                                  (SpMM, transposed)
+    dP  = dO V̂ᵀ            masked by the bitmap  (SDDMM shape)
+    dS  = E ⊙ (dP − rowsum(dP ⊙ E))              (softmax backward)
+    dQ  = dS K̂ · scale                           (SpMM)
+    dK̂ = dSᵀ Q · scale                           (SpMM, transposed)
+
+All five stay fused in one Pallas program per row-window batch, with the
+same BSB bitmap masking and static-bucket contract as the forward kernel.
+E is recomputed from (Q, K̂, bitmap) inside the kernel — the
+FlashAttention-2 recomputation strategy — so nothing besides the forward
+inputs and dO crosses HBM.
+
+Scatter note: dK̂/dV̂ are gradients w.r.t. the *gathered* rows; the Rust
+coordinator scatter-adds them back to dK/dV rows (a column can appear in
+many row windows, so the host reduction mirrors the forward gather).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused3s import (
+    _expand_bitmaps_batch,
+    _masked_softmax_rows,
+    _sddmm_batch,
+    _spmm_batch,
+)
+from .ref import BITMAP_WORDS, TCB_C, TCB_R
+
+
+def _fused3s_bwd_kernel(q_ref, k_ref, v_ref, bm_ref, do_ref,
+                        dq_ref, dk_ref, dv_ref, *, t: int, scale: float,
+                        compute_dtype):
+    b = q_ref.shape[0]
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    do = do_ref[...]
+    # --- recompute E (forward softmax), f32 ---
+    s = _sddmm_batch(q, k, compute_dtype)
+    if scale != 1.0:
+        s = s * scale
+    mask = _expand_bitmaps_batch(bm_ref[...], b, t)
+    p, _, l = _masked_softmax_rows(s, mask)
+    safe_l = jnp.where(l > 0, l, 1.0)
+    e = jnp.where((l > 0)[..., None], p / safe_l[..., None], 0.0)  # (B,16,t*8)
+
+    # --- dV = Eᵀ dO : (B,t*8,16) x (B,16,dv) ---
+    dv = jax.lax.dot_general(
+        e.astype(compute_dtype),
+        do.astype(compute_dtype),
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    # --- dP = dO V̂ᵀ (SDDMM shape: only masked entries matter) ---
+    dp = jax.lax.dot_general(
+        do.astype(compute_dtype),
+        v.astype(compute_dtype),
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    dp = jnp.where(mask, dp, 0.0)
+    # --- softmax backward: dS = E ⊙ (dP − rowsum(dP ⊙ E)) ---
+    row = jnp.sum(dp * e, axis=-1, keepdims=True)
+    ds = e * (dp - row)
+    if scale != 1.0:
+        ds = ds * scale
+    # --- dQ = dS K̂ : (B,16,t*8) x (B,t*8,d) ---
+    dq = _spmm_batch(ds, k, compute_dtype)
+    # --- dK̂ = dSᵀ Q : (B,t*8,16) x (B,16,d) ---
+    dk = jax.lax.dot_general(
+        ds.astype(compute_dtype),
+        q.astype(compute_dtype),
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    dq_ref[...] = dq
+    dk_ref[...] = dk
+    dv_ref[...] = dv
+
+
+@functools.partial(jax.jit, static_argnames=("t", "scale", "precision"))
+def fused3s_bwd(
+    q: jnp.ndarray,
+    khat: jnp.ndarray,
+    vhat: jnp.ndarray,
+    bitmap: jnp.ndarray,
+    do: jnp.ndarray,
+    *,
+    t: int,
+    scale: float = 1.0,
+    precision: str = "bf16",
+):
+    """Fused backward over BSB row-window blocks.
+
+    Args match :func:`fused3s.fused3s` plus ``do`` (B, 16, dv) upstream
+    gradients.  Returns (dq, dkhat, dvhat) with the forward input shapes;
+    dkhat/dvhat are per-gathered-row and must be scatter-added by column id.
+    """
+    b, r, d = q.shape
+    dv_dim = vhat.shape[-1]
+    assert r == TCB_R
+    assert khat.shape == (b, t * TCB_C, d)
+    assert vhat.shape == (b, t * TCB_C, dv_dim)
+    assert bitmap.shape == (b, t, BITMAP_WORDS)
+    assert do.shape == (b, TCB_R, dv_dim)
+    compute_dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
+    kernel = functools.partial(
+        _fused3s_bwd_kernel, t=t, scale=scale, compute_dtype=compute_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, TCB_R, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, t * TCB_C, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, t * TCB_C, dv_dim), jnp.float32),
+        ],
+        interpret=True,
+    )(q, khat, vhat, bitmap, do)
+
+
+def fused3s_bwd_spec(b: int, t: int, d: int, dv: int | None = None):
+    """Manifest input spec (forward inputs + dO)."""
+    dv = d if dv is None else dv
+    return [
+        ((b, TCB_R, d), "f32"),
+        ((b, t * TCB_C, d), "f32"),
+        ((b, t * TCB_C, dv), "f32"),
+        ((b, t, BITMAP_WORDS), "i32"),
+        ((b, TCB_R, dv), "f32"),
+    ]

@@ -1,0 +1,151 @@
+"""Pure-jnp correctness oracles for the Fused3S kernel.
+
+Two oracles:
+
+* :func:`dense_attention_ref` — the textbook formulation of Eq. (1) of the
+  paper, ``O = softmax(Q K^T * scale  (masked by A)) V`` over the *whole*
+  graph.  This is the ground truth everything else is measured against.
+
+* :func:`bsb_attention_ref` — the same computation expressed over the BSB
+  block layout the Rust coordinator hands to the kernel (per-row-window Q
+  blocks, gathered K̂ / V̂ block stacks, 128-bit TCB bitmaps).  It is written
+  with plain ``jnp`` ops and *global* (not online) softmax, so it exercises
+  the data layout without sharing any code with the Pallas kernel.
+
+Conventions (shared with the Rust side — keep in sync with
+``rust/src/bsb/bitmap.rs``):
+
+* TCB shape is r=16 rows by c=8 columns.
+* A TCB bitmap is four little-endian u32 words; bit index ``i = row * 8 + col``
+  lives in word ``i // 32`` at bit ``i % 32``.
+* Rows with no unmasked entries produce an all-zero output row (softmax over
+  the empty set is defined as 0, matching the paper's graphs where isolated
+  rows simply aggregate nothing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TCB_R = 16
+TCB_C = 8
+BITMAP_WORDS = (TCB_R * TCB_C) // 32  # = 4
+
+
+def expand_bitmap_np(words: np.ndarray) -> np.ndarray:
+    """Expand a (..., 4) uint32/int32 bitmap array to a (..., 16, 8) bool mask.
+
+    NumPy variant used by tests and by the oracle below.
+    """
+    words = np.asarray(words).astype(np.uint32)
+    assert words.shape[-1] == BITMAP_WORDS, words.shape
+    idx = np.arange(TCB_R * TCB_C).reshape(TCB_R, TCB_C)
+    word_idx = idx // 32
+    bit_idx = idx % 32
+    w = words[..., word_idx]  # (..., 16, 8)
+    return ((w >> bit_idx) & 1).astype(bool)
+
+
+def pack_bitmap_np(mask: np.ndarray) -> np.ndarray:
+    """Pack a (..., 16, 8) bool mask into (..., 4) int32 bitmap words."""
+    mask = np.asarray(mask, dtype=bool)
+    assert mask.shape[-2:] == (TCB_R, TCB_C), mask.shape
+    flat = mask.reshape(mask.shape[:-2] + (TCB_R * TCB_C,))
+    out = np.zeros(mask.shape[:-2] + (BITMAP_WORDS,), dtype=np.uint32)
+    for i in range(TCB_R * TCB_C):
+        out[..., i // 32] |= flat[..., i].astype(np.uint32) << np.uint32(i % 32)
+    # int32 view: rust passes i32 words; bit patterns are identical.
+    return out.view(np.int32)
+
+
+def masked_softmax(s: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise max-stabilized softmax over unmasked entries; empty rows -> 0."""
+    neg = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(neg, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(mask, jnp.exp(neg - m_safe), 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.where(denom > 0, e / jnp.where(denom > 0, denom, 1.0), 0.0)
+
+
+def dense_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """O = softmax(scale * Q K^T ⊙ mask) V with the empty-row-is-zero convention.
+
+    Args:
+      q, k, v: (N, d) float arrays.
+      mask:    (N, N) bool adjacency / attention mask.
+      scale:   multiplicative score scale (1/sqrt(d) for transformer heads).
+    """
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    e = masked_softmax(s, mask)
+    return e @ v.astype(jnp.float32)
+
+
+def bsb_attention_ref(
+    q_blk: jnp.ndarray,
+    khat: jnp.ndarray,
+    vhat: jnp.ndarray,
+    bitmap: jnp.ndarray,
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """Global-softmax oracle over the BSB block layout.
+
+    Args:
+      q_blk:  (B, 16, d) row-window Q blocks.
+      khat:   (B, T*8, d) gathered K rows (T TCBs of 8 compacted columns).
+      vhat:   (B, T*8, d) gathered V rows.
+      bitmap: (B, T, 4) int32 TCB bitmaps.
+    Returns:
+      (B, 16, d) float32 output blocks.
+    """
+    b, r, d = q_blk.shape
+    t = bitmap.shape[1]
+    assert r == TCB_R
+    assert khat.shape == (b, t * TCB_C, d), (khat.shape, b, t, d)
+    mask = jnp.asarray(expand_bitmap_np(np.asarray(bitmap)))  # (B, T, 16, 8)
+    mask = jnp.transpose(mask, (0, 2, 1, 3)).reshape(b, TCB_R, t * TCB_C)
+    s = jnp.einsum(
+        "brd,bcd->brc",
+        q_blk.astype(jnp.float32),
+        khat.astype(jnp.float32),
+    ) * scale
+    e = masked_softmax(s, mask)
+    return jnp.einsum("brc,bcd->brd", e, vhat.astype(jnp.float32))
+
+
+def bsb_attention_ref_mixed(
+    q_blk: jnp.ndarray,
+    khat: jnp.ndarray,
+    vhat: jnp.ndarray,
+    bitmap: jnp.ndarray,
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """Like :func:`bsb_attention_ref` but with the paper's mixed-precision
+    pipeline (Table 5, fp16→bf16): bf16 matmul inputs, f32 accumulation,
+    f32 softmax, E cast to bf16 before SpMM.  Used to bound the error the
+    Pallas kernel is allowed to have."""
+    b, r, d = q_blk.shape
+    t = bitmap.shape[1]
+    mask = jnp.asarray(expand_bitmap_np(np.asarray(bitmap)))
+    mask = jnp.transpose(mask, (0, 2, 1, 3)).reshape(b, TCB_R, t * TCB_C)
+    s = jax.lax.dot_general(
+        q_blk.astype(jnp.bfloat16),
+        khat.astype(jnp.bfloat16),
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    e = masked_softmax(s, mask).astype(jnp.bfloat16)
+    return jax.lax.dot_general(
+        e,
+        vhat.astype(jnp.bfloat16),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )

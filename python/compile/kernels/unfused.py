@@ -1,0 +1,202 @@
+"""Unfused 3S baselines — the FlashSparse / PyG execution model.
+
+FlashSparse [32] (and the DGL/PyG framework path) runs the 3S pattern as
+*separate kernels*, materialising the attention-score matrix S and the
+normalised matrix E in HBM between stages:
+
+    S = SDDMM(Q, K, A)      # kernel 1, S written to HBM
+    E = softmax(S)          # kernel 2, S read + E written
+    O = SpMM(E, V)          # kernel 3, E read
+
+This module provides those three stages as independent jittable functions so
+``aot.py`` can lower each one into its *own* executable.  The Rust driver
+(`rust/src/kernels/unfused.rs`) round-trips the intermediates through host
+buffers between the three PJRT executions — reproducing the exact data-
+movement penalty the paper's fusion removes.
+
+Two softmax variants mirror the paper's FlashSparse comparison (§4.1):
+
+* ``softmax_naive``  — no max subtraction.  Faster (no row-max reduction)
+  but overflows once any score exceeds ~88 in f32 (§3.5).
+* ``softmax_stable`` — max-stabilised, the fair-comparison variant.
+
+All stages run over the same BSB block layout as the fused kernel so the
+comparison isolates *fusion*, not format.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ref import BITMAP_WORDS, TCB_C, TCB_R
+
+NEG_INF = float("-inf")
+
+
+def _block_mask(bitmap: jnp.ndarray, t: int) -> jnp.ndarray:
+    """(B, t, 4) i32 bitmaps -> (B, 16, t*8) bool mask, pure jnp (no numpy)."""
+    b = bitmap.shape[0]
+    idx = (
+        jax.lax.broadcasted_iota(jnp.int32, (TCB_R, TCB_C), 0) * TCB_C
+        + jax.lax.broadcasted_iota(jnp.int32, (TCB_R, TCB_C), 1)
+    )
+    word_idx = jax.lax.shift_right_logical(idx, 5)
+    bit_idx = jnp.bitwise_and(idx, 31)
+    w = jnp.zeros((b, t, TCB_R, TCB_C), jnp.int32)
+    for i in range(BITMAP_WORDS):
+        w = jnp.where(word_idx[None, None] == i, bitmap[:, :, i, None, None], w)
+    bits = jnp.bitwise_and(jax.lax.shift_right_logical(w, bit_idx[None, None]), 1)
+    mask = bits == 1  # (B, t, 16, 8)
+    return jnp.transpose(mask, (0, 2, 1, 3)).reshape(b, TCB_R, t * TCB_C)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "scale", "precision"))
+def sddmm(
+    q: jnp.ndarray,
+    khat: jnp.ndarray,
+    bitmap: jnp.ndarray,
+    *,
+    t: int,
+    scale: float = 1.0,
+    precision: str = "bf16",
+) -> jnp.ndarray:
+    """Stage 1: S = (Q K̂^T) * scale, masked to -inf outside the bitmap.
+
+    Returns (B, 16, t*8) f32 — the materialised score matrix (the paper's
+    point: this write is what fusion eliminates).
+    """
+    dt = jnp.bfloat16 if precision == "bf16" else jnp.float32
+    s = jax.lax.dot_general(
+        q.astype(dt),
+        khat.astype(dt),
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    if scale != 1.0:
+        s = s * scale
+    mask = _block_mask(bitmap, t)
+    return jnp.where(mask, s, NEG_INF)
+
+
+@jax.jit
+def softmax_naive(s: jnp.ndarray) -> jnp.ndarray:
+    """Stage 2 (naive): E = exp(S) / rowsum(exp(S)).
+
+    No max subtraction — mirrors FlashSparse's original softmax.  exp(-inf)=0
+    handles masking, but any score > ~88 overflows f32 to inf and the row
+    becomes NaN; the stability experiment (`repro stability`) demonstrates
+    exactly this failure mode.
+    """
+    e = jnp.exp(s)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return e / denom
+
+
+@jax.jit
+def softmax_stable(s: jnp.ndarray) -> jnp.ndarray:
+    """Stage 2 (stable): max-subtracted softmax with the empty-row->0 rule."""
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe), 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.where(denom > 0, e / jnp.where(denom > 0, denom, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def spmm(
+    e: jnp.ndarray,
+    vhat: jnp.ndarray,
+    *,
+    precision: str = "bf16",
+) -> jnp.ndarray:
+    """Stage 3: O = E V̂ (block-sparse aggregation), f32 accumulate."""
+    dt = jnp.bfloat16 if precision == "bf16" else jnp.float32
+    return jax.lax.dot_general(
+        e.astype(dt),
+        vhat.astype(dt),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def unfused_3s(
+    q: jnp.ndarray,
+    khat: jnp.ndarray,
+    vhat: jnp.ndarray,
+    bitmap: jnp.ndarray,
+    *,
+    t: int,
+    scale: float = 1.0,
+    stable: bool = True,
+    precision: str = "bf16",
+) -> jnp.ndarray:
+    """Convenience composition of the three stages (tests / oracles only —
+    the benchmarked path executes the three artifacts separately)."""
+    s = sddmm(q, khat, bitmap, t=t, scale=scale, precision=precision)
+    e = softmax_stable(s) if stable else softmax_naive(s)
+    return spmm(e, vhat, precision=precision)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "precision"))
+def dense_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    scale: float = 1.0,
+    precision: str = "f32",
+) -> jnp.ndarray:
+    """Whole-graph dense masked attention (PyG-like dense fallback and the
+    graph-scale verification oracle).  mask is (N, N) i32 (0/1)."""
+    dt = jnp.bfloat16 if precision == "bf16" else jnp.float32
+    s = jax.lax.dot_general(
+        q.astype(dt), k.astype(dt),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if scale != 1.0:
+        s = s * scale
+    s = jnp.where(mask == 1, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(mask == 1, jnp.exp(s - m_safe), 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    e = jnp.where(denom > 0, e / jnp.where(denom > 0, denom, 1.0), 0.0)
+    return jax.lax.dot_general(
+        e.astype(dt), v.astype(dt),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def sddmm_spec(b: int, t: int, d: int):
+    return [
+        ((b, TCB_R, d), "f32"),
+        ((b, t * TCB_C, d), "f32"),
+        ((b, t, BITMAP_WORDS), "i32"),
+    ]
+
+
+def softmax_spec(b: int, t: int):
+    return [((b, TCB_R, t * TCB_C), "f32")]
+
+
+def spmm_spec(b: int, t: int, d: int):
+    return [
+        ((b, TCB_R, t * TCB_C), "f32"),
+        ((b, t * TCB_C, d), "f32"),
+    ]
+
+
+def dense_spec(n: int, d: int):
+    return [
+        ((n, d), "f32"),
+        ((n, d), "f32"),
+        ((n, d), "f32"),
+        ((n, n), "i32"),
+    ]

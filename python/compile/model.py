@@ -1,0 +1,171 @@
+"""L2 — the Graph Transformer compute graph as fixed-shape tile programs.
+
+The end-to-end model of the paper's §4.4 is the Graph Transformer of
+Dwivedi & Bresson [5]: 10 blocks, each
+
+    h  ->  LN(h + O_proj(MultiHeadSparseAttention(h)))   (attention sub-block)
+       ->  LN(h' + W2 · relu(W1 h' + b1) + b2)           (FFN sub-block)
+
+The sparse attention itself runs through the L1 Fused3S kernel (or one of the
+baseline kernels — that is the experiment of Fig. 8).  Everything dense is
+expressed here as *row-tile* programs over a fixed tile of ``m`` rows: the
+Rust model runtime (`rust/src/model/`) walks a graph's N rows in tiles of m,
+dispatching each tile to the corresponding AOT executable.  This keeps every
+artifact shape static while supporting arbitrary graph sizes — the same
+bucketing idea used for the sparse kernel.
+
+Head convention: d_head = 32, n_heads = d / 32 (so d ∈ {64, 128, 256} of
+Fig. 8 give 2/4/8 heads).  Heads are folded into the kernel's row-window
+batch axis by the Rust coordinator; no head axis appears here.
+
+Mixed precision mirrors the kernel: bf16 GEMM inputs, f32 accumulation,
+f32 LayerNorm statistics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+D_HEAD = 32  # head width shared with rust/src/model/gt.rs
+
+
+def _mm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """bf16 GEMM with f32 accumulation (the MXU-shaped primitive)."""
+    return jax.lax.dot_general(
+        x.astype(jnp.bfloat16),
+        w.astype(jnp.bfloat16),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@jax.jit
+def qkv_proj(x: jnp.ndarray, wqkv: jnp.ndarray, bqkv: jnp.ndarray):
+    """Fused Q/K/V projection: one (m,d)x(d,3d) GEMM instead of three.
+
+    Returns (m, 3d) f32; the Rust side slices Q|K|V and splits heads.
+    """
+    return _mm(x, wqkv) + bqkv[None, :]
+
+
+@jax.jit
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Plain affine map (used for the attention output projection)."""
+    return _mm(x, w) + b[None, :]
+
+
+@jax.jit
+def ffn(x, w1, b1, w2, b2):
+    """Position-wise FFN: relu(x W1 + b1) W2 + b2, hidden = 2d (GT default).
+
+    Both GEMMs and the activation are fused into one executable — one
+    dispatch per row tile instead of three (see DESIGN.md §9 L2 targets).
+    """
+    h = jnp.maximum(_mm(x, w1) + b1[None, :], 0.0)
+    return _mm(h, w2) + b2[None, :]
+
+
+@jax.jit
+def add_layernorm(x, y, gamma, beta):
+    """LN(x + y) — the residual-add and LayerNorm of each sub-block, fused.
+
+    Statistics in f32 over the feature axis, eps = 1e-5 (DGL default).
+    """
+    z = x.astype(jnp.float32) + y.astype(jnp.float32)
+    mu = jnp.mean(z, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(z - mu), axis=-1, keepdims=True)
+    zhat = (z - mu) * jax.lax.rsqrt(var + 1e-5)
+    return zhat * gamma[None, :] + beta[None, :]
+
+
+@jax.jit
+def layernorm(x, gamma, beta):
+    """Plain LayerNorm (input embedding normalisation)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * gamma[None, :] + beta[None, :]
+
+
+@jax.jit
+def row_normalize(x):
+    """L2-normalise rows — the AGNN (Eq. 3) cosine-similarity preprocessing."""
+    n = jnp.sqrt(jnp.sum(jnp.square(x), axis=-1, keepdims=True))
+    return x / jnp.where(n > 0, n, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference of a whole GT block (used by tests and to cross-check the
+# Rust runtime's orchestration on small graphs).
+# ---------------------------------------------------------------------------
+
+
+def gt_block_ref(h, adj_mask, params, *, n_heads: int):
+    """One Graph Transformer block over a whole (small) graph, f32 oracle.
+
+    params: dict with wqkv (d,3d), bqkv, wo (d,d), bo, w1 (d,2d), b1,
+    w2 (2d,d), b2, g1, be1, g2, be2.
+    """
+    from .kernels.ref import dense_attention_ref
+
+    n, d = h.shape
+    dh = d // n_heads
+    qkv = h @ params["wqkv"] + params["bqkv"]
+    q, k, v = qkv[:, :d], qkv[:, d : 2 * d], qkv[:, 2 * d :]
+    heads = []
+    for i in range(n_heads):
+        sl = slice(i * dh, (i + 1) * dh)
+        heads.append(
+            dense_attention_ref(
+                q[:, sl], k[:, sl], v[:, sl], adj_mask, scale=1.0 / dh**0.5
+            )
+        )
+    att = jnp.concatenate(heads, axis=1)
+    att = att @ params["wo"] + params["bo"]
+    h1 = _ln_ref(h + att, params["g1"], params["be1"])
+    f = jnp.maximum(h1 @ params["w1"] + params["b1"], 0.0)
+    f = f @ params["w2"] + params["b2"]
+    return _ln_ref(h1 + f, params["g2"], params["be2"])
+
+
+def _ln_ref(x, gamma, beta):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# Input specs for the AOT manifest.
+# ---------------------------------------------------------------------------
+
+
+def qkv_proj_spec(m: int, d: int):
+    return [((m, d), "f32"), ((d, 3 * d), "f32"), ((3 * d,), "f32")]
+
+
+def linear_spec(m: int, din: int, dout: int):
+    return [((m, din), "f32"), ((din, dout), "f32"), ((dout,), "f32")]
+
+
+def ffn_spec(m: int, d: int, h: int):
+    return [
+        ((m, d), "f32"),
+        ((d, h), "f32"),
+        ((h,), "f32"),
+        ((h, d), "f32"),
+        ((d,), "f32"),
+    ]
+
+
+def add_layernorm_spec(m: int, d: int):
+    return [((m, d), "f32"), ((m, d), "f32"), ((d,), "f32"), ((d,), "f32")]
+
+
+def layernorm_spec(m: int, d: int):
+    return [((m, d), "f32"), ((d,), "f32"), ((d,), "f32")]
+
+
+def row_normalize_spec(m: int, d: int):
+    return [((m, d), "f32")]

@@ -1,0 +1,43 @@
+"""Shared helpers for the kernel test-suite: random BSB problem generation."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from compile.kernels import ref
+
+
+def make_problem(
+    rng: np.random.Generator,
+    b: int,
+    t: int,
+    d: int,
+    density: float = 0.3,
+    value_scale: float = 1.0,
+    pad_blocks: int = 0,
+    guarantee_nonempty: bool = False,
+):
+    """Build a random BSB-layout attention problem.
+
+    Returns (q, khat, vhat, bitmap) with shapes
+    (b,16,d), (b,t*8,d), (b,t*8,d), (b,t,4).
+
+    ``pad_blocks`` forces the last ``pad_blocks`` TCBs of every window to be
+    fully masked (the coordinator's bucket padding).  With
+    ``guarantee_nonempty`` every row gets at least one unmasked entry in the
+    first TCB (models self-loops).
+    """
+    q = (rng.standard_normal((b, ref.TCB_R, d)) * value_scale).astype(np.float32)
+    khat = (rng.standard_normal((b, t * ref.TCB_C, d)) * value_scale).astype(
+        np.float32
+    )
+    vhat = (rng.standard_normal((b, t * ref.TCB_C, d)) * value_scale).astype(
+        np.float32
+    )
+    mask = rng.random((b, t, ref.TCB_R, ref.TCB_C)) < density
+    if pad_blocks > 0:
+        mask[:, t - pad_blocks :] = False
+    if guarantee_nonempty:
+        mask[:, 0, :, 0] = True
+    bitmap = ref.pack_bitmap_np(mask)
+    return q, khat, vhat, bitmap, mask

@@ -1,0 +1,82 @@
+"""Bitmap pack/expand round-trip — the BSB encoding contract shared with
+``rust/src/bsb/bitmap.rs``.  If these conventions drift the whole stack
+silently computes the wrong sparsity pattern, so they are pinned here."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+
+def test_constants():
+    assert ref.TCB_R == 16
+    assert ref.TCB_C == 8
+    assert ref.BITMAP_WORDS == 4
+
+
+def test_empty_bitmap():
+    words = np.zeros((4,), np.int32)
+    assert not ref.expand_bitmap_np(words).any()
+
+
+def test_full_bitmap():
+    words = np.full((4,), -1, np.int32)  # all bits set
+    assert ref.expand_bitmap_np(words).all()
+
+
+def test_single_bit_positions():
+    # bit i = row*8+col -> word i//32, bit i%32
+    for row, col in [(0, 0), (0, 7), (3, 7), (4, 0), (15, 7), (8, 3)]:
+        i = row * 8 + col
+        words = np.zeros((4,), np.uint32)
+        words[i // 32] = np.uint32(1) << np.uint32(i % 32)
+        mask = ref.expand_bitmap_np(words.view(np.int32))
+        assert mask[row, col]
+        assert mask.sum() == 1
+
+
+def test_pack_expand_roundtrip_dense_grid():
+    rng = np.random.default_rng(7)
+    for density in [0.0, 0.1, 0.5, 0.9, 1.0]:
+        mask = rng.random((5, 3, 16, 8)) < density
+        words = ref.pack_bitmap_np(mask)
+        assert words.shape == (5, 3, 4)
+        assert words.dtype == np.int32
+        back = ref.expand_bitmap_np(words)
+        np.testing.assert_array_equal(back, mask)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pack_expand_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((2, 2, 16, 8)) < rng.random()
+    np.testing.assert_array_equal(
+        ref.expand_bitmap_np(ref.pack_bitmap_np(mask)), mask
+    )
+
+
+def test_popcount_matches_nnz():
+    rng = np.random.default_rng(3)
+    mask = rng.random((4, 6, 16, 8)) < 0.37
+    words = ref.pack_bitmap_np(mask).view(np.uint32)
+    pop = np.array(
+        [bin(int(w)).count("1") for w in words.reshape(-1)]
+    ).reshape(words.shape)
+    np.testing.assert_array_equal(pop.sum(axis=-1), mask.sum(axis=(-2, -1)))
+
+
+def test_kernel_expand_matches_numpy():
+    """The in-kernel (jax) bitmap decoder agrees with the numpy oracle."""
+    import jax.numpy as jnp
+
+    from compile.kernels.fused3s import _expand_bitmap
+
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        mask = rng.random((16, 8)) < rng.random()
+        words = ref.pack_bitmap_np(mask[None, None])[0, 0]
+        out = np.asarray(_expand_bitmap(jnp.asarray(words)))
+        np.testing.assert_array_equal(out, mask)

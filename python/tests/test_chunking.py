@@ -1,0 +1,77 @@
+"""Chunked oversize-row-window handling: the partial kernel + host merge
+must reproduce the unchunked kernel exactly up to fp accumulation order."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import fused3s as f3s
+from compile.kernels import ref
+
+from .conftest import make_problem
+
+
+def run_chunked(q, kh, vh, bm, t, chunk):
+    n_chunks = (t + chunk - 1) // chunk
+    os_, ms_, ls_ = [], [], []
+    for c in range(n_chunks):
+        lo_t, hi_t = c * chunk, min((c + 1) * chunk, t)
+        # pad last chunk with zero bitmaps
+        kh_c = np.zeros((1, chunk * 8, kh.shape[-1]), np.float32)
+        vh_c = np.zeros((1, chunk * 8, vh.shape[-1]), np.float32)
+        bm_c = np.zeros((1, chunk, 4), np.int32)
+        kh_c[:, : (hi_t - lo_t) * 8] = kh[:, lo_t * 8 : hi_t * 8]
+        vh_c[:, : (hi_t - lo_t) * 8] = vh[:, lo_t * 8 : hi_t * 8]
+        bm_c[:, : hi_t - lo_t] = bm[:, lo_t:hi_t]
+        o, m, l = f3s.fused3s_partial(q, kh_c, vh_c, bm_c, t=chunk)
+        os_.append(np.asarray(o)[0])
+        ms_.append(np.asarray(m)[0])
+        ls_.append(np.asarray(l)[0])
+    return f3s.merge_partials(os_, ms_, ls_)
+
+
+@pytest.mark.parametrize("t,chunk", [(12, 4), (10, 4), (7, 3), (16, 8)])
+def test_chunked_equals_full(t, chunk):
+    rng = np.random.default_rng(t * 31 + chunk)
+    q, kh, vh, bm, _ = make_problem(rng, 1, t, 64, 0.3)
+    full = np.asarray(f3s.fused3s(q, kh, vh, bm, t=t))[0]
+    merged = run_chunked(q, kh, vh, bm, t, chunk)
+    np.testing.assert_allclose(merged, full, rtol=5e-3, atol=5e-3)
+
+
+def test_chunked_with_empty_chunks():
+    """Chunks that are fully masked must not perturb the merge."""
+    rng = np.random.default_rng(3)
+    t, chunk = 12, 4
+    q, kh, vh, bm, mask = make_problem(rng, 1, t, 32, 0.4)
+    mask[0, 4:8] = False  # middle chunk fully masked
+    bm = ref.pack_bitmap_np(mask)
+    full = np.asarray(f3s.fused3s(q, kh, vh, bm, t=t))[0]
+    merged = run_chunked(q, kh, vh, bm, t, chunk)
+    np.testing.assert_allclose(merged, full, rtol=5e-3, atol=5e-3)
+
+
+def test_chunked_empty_rows_stay_zero():
+    rng = np.random.default_rng(4)
+    t, chunk = 8, 4
+    q, kh, vh, _, _ = make_problem(rng, 1, t, 32, 0.0)
+    mask = np.zeros((1, t, 16, 8), bool)
+    mask[0, 0, 3, :] = True  # only row 3 nonzero
+    bm = ref.pack_bitmap_np(mask)
+    merged = run_chunked(q, kh, vh, bm, t, chunk)
+    assert not np.isnan(merged).any()
+    zero_rows = [r for r in range(16) if r != 3]
+    np.testing.assert_array_equal(merged[zero_rows], 0.0)
+
+
+def test_partial_outputs_state():
+    """m/l outputs must equal the online-softmax state of the chunk."""
+    rng = np.random.default_rng(5)
+    q, kh, vh, bm, mask = make_problem(rng, 2, 4, 32, 0.5)
+    o, m, l = f3s.fused3s_partial(q, kh, vh, bm, t=4)
+    s = np.einsum("brd,bcd->brc", q, kh)
+    fm = np.transpose(mask, (0, 2, 1, 3)).reshape(2, 16, 32)
+    sm = np.where(fm, s, -np.inf)
+    m_ref = sm.max(axis=-1)
+    np.testing.assert_allclose(np.asarray(m), m_ref, rtol=1e-2, atol=1e-2)
+    e = np.where(fm, np.exp(sm - np.where(np.isfinite(m_ref), m_ref, 0)[..., None]), 0)
+    np.testing.assert_allclose(np.asarray(l), e.sum(-1), rtol=2e-2, atol=2e-2)

@@ -1,0 +1,192 @@
+"""Fused3S Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+The kernel runs mixed precision (bf16 GEMMs, f32 softmax/accumulate), so the
+tolerance against the *f32* oracle is bf16-level (~1e-2 relative); against the
+mixed-precision oracle it must agree tightly.  The f32 kernel variant must
+match the f32 oracle to f32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import fused3s as f3s
+from compile.kernels import ref
+
+from .conftest import make_problem
+
+# The kernel's bf16 GEMMs perturb scores by ~0.5%% of |s|; softmax then
+# amplifies that exponentially, so vs the *f32* oracle the honest bound is
+# loose (measured worst ~7e-2 on std-normal inputs).  Algorithmic correctness
+# is pinned tightly against the *mixed-precision* oracle (same rounding, but
+# global instead of online softmax): measured worst ~8e-3.
+MIXED_TOL = dict(rtol=2e-2, atol=2e-2)
+F32_LOOSE = dict(rtol=1.5e-1, atol=1.5e-1)
+F32_TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def run_case(seed, b, t, d, density, scale=1.0, pad_blocks=0, value_scale=1.0,
+             variant="splitc", precision="bf16"):
+    rng = np.random.default_rng(seed)
+    q, kh, vh, bm, _ = make_problem(
+        rng, b, t, d, density, value_scale=value_scale, pad_blocks=pad_blocks
+    )
+    out = np.asarray(
+        f3s.fused3s(q, kh, vh, bm, t=t, scale=scale, variant=variant,
+                    precision=precision)
+    )
+    oracle_f32 = np.asarray(ref.bsb_attention_ref(q, kh, vh, bm, scale=scale))
+    oracle_mixed = np.asarray(
+        ref.bsb_attention_ref_mixed(q, kh, vh, bm, scale=scale)
+    )
+    return out, oracle_mixed, oracle_f32
+
+
+@pytest.mark.parametrize("t", [1, 2, 4, 8, 16, 32])
+@pytest.mark.parametrize("d", [32, 64, 128])
+def test_shapes_sweep(t, d):
+    out, oracle, oracle_f32 = run_case(seed=t * 100 + d, b=2, t=t, d=d, density=0.3)
+    np.testing.assert_allclose(out, oracle, **MIXED_TOL)
+    np.testing.assert_allclose(out, oracle_f32, **F32_LOOSE)
+
+
+@pytest.mark.parametrize("density", [0.02, 0.1, 0.5, 0.95, 1.0])
+def test_density_sweep(density):
+    out, oracle, oracle_f32 = run_case(seed=17, b=3, t=8, d=64, density=density)
+    np.testing.assert_allclose(out, oracle, **MIXED_TOL)
+    np.testing.assert_allclose(out, oracle_f32, **F32_LOOSE)
+
+
+@pytest.mark.parametrize("scale", [1.0, 0.125, 0.0883883])
+def test_scale(scale):
+    out, oracle, oracle_f32 = run_case(seed=5, b=2, t=4, d=64, density=0.4, scale=scale)
+    np.testing.assert_allclose(out, oracle, **MIXED_TOL)
+    np.testing.assert_allclose(out, oracle_f32, **F32_LOOSE)
+
+
+@pytest.mark.parametrize("pad_blocks", [1, 3, 7])
+def test_bucket_padding_exact(pad_blocks):
+    """Padding TCBs with zero bitmaps must not perturb the result at all:
+    compare a padded problem against the same problem in a smaller bucket."""
+    rng = np.random.default_rng(23)
+    t_real = 8 - pad_blocks if pad_blocks < 8 else 1
+    t = 8
+    q, kh, vh, bm, mask = make_problem(rng, 2, t, 64, 0.4, pad_blocks=pad_blocks)
+    out_pad = np.asarray(f3s.fused3s(q, kh, vh, bm, t=t))
+    # Re-run in the tight bucket (strip padded blocks).
+    kh2 = kh[:, : (t - pad_blocks) * 8]
+    vh2 = vh[:, : (t - pad_blocks) * 8]
+    bm2 = bm[:, : t - pad_blocks]
+    out_tight = np.asarray(f3s.fused3s(q, kh2, vh2, bm2, t=t - pad_blocks))
+    # Padded lanes contribute exact zeros; only the XLA tree-reduction
+    # order differs with the wider strip, so the bound is ~1 ulp.
+    np.testing.assert_allclose(out_pad, out_tight, rtol=1e-6, atol=1e-6)
+
+
+def test_fully_masked_window_is_zero():
+    rng = np.random.default_rng(3)
+    q, kh, vh, _, _ = make_problem(rng, 1, 2, 32, 0.5)
+    bm = np.zeros((1, 2, 4), np.int32)
+    out = np.asarray(f3s.fused3s(q, kh, vh, bm, t=2))
+    assert not np.isnan(out).any()
+    np.testing.assert_array_equal(out, np.zeros_like(out))
+
+
+def test_single_nonzero_row_selects_value():
+    """A row attending to exactly one column must output exactly that V row."""
+    rng = np.random.default_rng(9)
+    q, kh, vh, _, _ = make_problem(rng, 1, 3, 32, 0.0)
+    mask = np.zeros((1, 3, 16, 8), bool)
+    mask[0, 1, 5, 3] = True  # row 5 attends only to TCB 1, col 3
+    bm = ref.pack_bitmap_np(mask)
+    out = np.asarray(f3s.fused3s(q, kh, vh, bm, t=3))
+    expected = vh[0, 1 * 8 + 3]
+    np.testing.assert_allclose(out[0, 5], expected, rtol=1e-2, atol=1e-2)
+    # all other rows empty -> 0
+    others = np.delete(out[0], 5, axis=0)
+    np.testing.assert_array_equal(others, np.zeros_like(others))
+
+
+def test_large_logits_stable():
+    """Online softmax must survive scores far beyond exp() range (§3.5)."""
+    out, oracle, oracle_f32 = run_case(seed=31, b=2, t=4, d=64, density=0.4,
+                           value_scale=12.0)  # scores ~ O(1000)
+    assert not np.isnan(out).any() and not np.isinf(out).any()
+    np.testing.assert_allclose(out, oracle, **MIXED_TOL)
+    np.testing.assert_allclose(out, oracle_f32, **F32_LOOSE)
+
+
+def test_online_softmax_order_invariance():
+    """Permuting TCB order within a window (with matching K̂/V̂ permutation)
+    must not change the output — the online rescaling is order-independent."""
+    rng = np.random.default_rng(41)
+    t = 6
+    q, kh, vh, bm, mask = make_problem(rng, 1, t, 32, 0.4)
+    out1 = np.asarray(f3s.fused3s(q, kh, vh, bm, t=t))
+    perm = rng.permutation(t)
+    kh_p = kh.reshape(1, t, 8, -1)[:, perm].reshape(kh.shape)
+    vh_p = vh.reshape(1, t, 8, -1)[:, perm].reshape(vh.shape)
+    bm_p = bm[:, perm]
+    out2 = np.asarray(f3s.fused3s(q, kh_p, vh_p, bm_p, t=t))
+    # Mathematically identical; numerically the running-max history changes
+    # the bf16 rounding points, so the bound is bf16-level, not bitwise.
+    np.testing.assert_allclose(out1, out2, rtol=1e-2, atol=1e-2)
+
+
+def test_f32_variant_tight_tolerance():
+    out, _, oracle_f32 = run_case(seed=13, b=2, t=8, d=64, density=0.3,
+                                  precision="f32")
+    np.testing.assert_allclose(out, oracle_f32, **F32_TOL)
+
+
+@pytest.mark.parametrize("t,d", [(4, 32), (8, 64)])
+def test_splitr_matches_splitc(t, d):
+    rng = np.random.default_rng(t + d)
+    q, kh, vh, bm, _ = make_problem(rng, 2, t, d, 0.3)
+    a = np.asarray(f3s.fused3s(q, kh, vh, bm, t=t, variant="splitc"))
+    b_ = np.asarray(f3s.fused3s(q, kh, vh, bm, t=t, variant="splitr"))
+    np.testing.assert_allclose(a, b_, rtol=2e-2, atol=2e-2)
+    oracle = np.asarray(ref.bsb_attention_ref_mixed(q, kh, vh, bm))
+    np.testing.assert_allclose(b_, oracle, **MIXED_TOL)
+
+
+def test_matches_mixed_precision_oracle_tightly():
+    """Against the mixed-precision oracle the kernel differs only by the
+    *online vs global* softmax accumulation order — tight f32-ish bound."""
+    rng = np.random.default_rng(77)
+    q, kh, vh, bm, _ = make_problem(rng, 3, 8, 64, 0.3)
+    out = np.asarray(f3s.fused3s(q, kh, vh, bm, t=8))
+    oracle = np.asarray(ref.bsb_attention_ref_mixed(q, kh, vh, bm))
+    np.testing.assert_allclose(out, oracle, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t=st.integers(1, 12),
+    d=st.sampled_from([32, 64]),
+    density=st.floats(0.01, 1.0),
+)
+def test_property_random_problems(seed, t, d, density):
+    """Hypothesis sweep: arbitrary (seed, t, d, density) agrees with oracle."""
+    out, oracle, oracle_f32 = run_case(seed=seed, b=2, t=t, d=d, density=density)
+    assert not np.isnan(out).any()
+    np.testing.assert_allclose(out, oracle, **MIXED_TOL)
+    np.testing.assert_allclose(out, oracle_f32, **F32_LOOSE)
+
+
+def test_dense_equivalence_full_bitmap():
+    """With an all-ones bitmap the BSB kernel must equal dense attention on
+    the gathered sub-matrix."""
+    rng = np.random.default_rng(55)
+    t, d = 4, 32
+    q, kh, vh, _, _ = make_problem(rng, 1, t, d, 1.0)
+    bm = ref.pack_bitmap_np(np.ones((1, t, 16, 8), bool))
+    out = np.asarray(f3s.fused3s(q, kh, vh, bm, t=t))
+    oracle = np.asarray(
+        ref.dense_attention_ref(
+            q[0], kh[0], vh[0], np.ones((16, t * 8), bool)
+        )
+    )
+    np.testing.assert_allclose(out[0], oracle, **F32_LOOSE)

@@ -1,0 +1,123 @@
+"""L2 tile ops and the GT block reference: shapes + numerics."""
+
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def test_qkv_proj_matches_numpy():
+    rng = np.random.default_rng(0)
+    # 1/sqrt(fan-in) weight scale (realistic init) keeps outputs O(1) so the
+    # bf16-GEMM tolerance is meaningful.
+    x, w, b = rand(rng, 64, 32), rand(rng, 32, 96) / np.sqrt(32), rand(rng, 96)
+    out = np.asarray(model.qkv_proj(x, w, b))
+    np.testing.assert_allclose(out, x @ w + b, rtol=3e-2, atol=3e-2)
+    assert out.shape == (64, 96)
+
+
+def test_linear_matches_numpy():
+    rng = np.random.default_rng(1)
+    x, w, b = rand(rng, 16, 64), rand(rng, 64, 64) / np.sqrt(64), rand(rng, 64)
+    out = np.asarray(model.linear(x, w, b))
+    np.testing.assert_allclose(out, x @ w + b, rtol=3e-2, atol=3e-2)
+
+
+def test_ffn_matches_numpy():
+    rng = np.random.default_rng(2)
+    d, h = 32, 64
+    x = rand(rng, 8, d)
+    w1, b1 = rand(rng, d, h) / np.sqrt(d), rand(rng, h)
+    w2, b2 = rand(rng, h, d) / np.sqrt(h), rand(rng, d)
+    out = np.asarray(model.ffn(x, w1, b1, w2, b2))
+    ref = np.maximum(x @ w1 + b1, 0) @ w2 + b2
+    np.testing.assert_allclose(out, ref, rtol=5e-2, atol=5e-2)
+
+
+def test_add_layernorm():
+    rng = np.random.default_rng(3)
+    x, y = rand(rng, 10, 64), rand(rng, 10, 64)
+    g, b = rand(rng, 64), rand(rng, 64)
+    out = np.asarray(model.add_layernorm(x, y, g, b))
+    z = x + y
+    mu = z.mean(-1, keepdims=True)
+    var = z.var(-1, keepdims=True)
+    ref = (z - mu) / np.sqrt(var + 1e-5) * g + b
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    # LN output is standardised before affine
+    raw = np.asarray(
+        model.add_layernorm(x, y, np.ones(64, np.float32), np.zeros(64, np.float32))
+    )
+    np.testing.assert_allclose(raw.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(raw.std(-1), 1.0, atol=1e-3)
+
+
+def test_row_normalize():
+    rng = np.random.default_rng(4)
+    x = rand(rng, 12, 32)
+    x[3] = 0.0  # zero row must stay zero, not NaN
+    out = np.asarray(model.row_normalize(x))
+    norms = np.linalg.norm(out, axis=-1)
+    np.testing.assert_allclose(norms[np.arange(12) != 3], 1.0, rtol=1e-5)
+    np.testing.assert_array_equal(out[3], np.zeros(32, np.float32))
+
+
+def make_gt_params(rng, d):
+    return {
+        "wqkv": rand(rng, d, 3 * d) / np.sqrt(d),
+        "bqkv": np.zeros(3 * d, np.float32),
+        "wo": rand(rng, d, d) / np.sqrt(d),
+        "bo": np.zeros(d, np.float32),
+        "w1": rand(rng, d, 2 * d) / np.sqrt(d),
+        "b1": np.zeros(2 * d, np.float32),
+        "w2": rand(rng, 2 * d, d) / np.sqrt(2 * d),
+        "b2": np.zeros(d, np.float32),
+        "g1": np.ones(d, np.float32),
+        "be1": np.zeros(d, np.float32),
+        "g2": np.ones(d, np.float32),
+        "be2": np.zeros(d, np.float32),
+    }
+
+
+@pytest.mark.parametrize("n_heads", [1, 2])
+def test_gt_block_ref_runs_and_is_finite(n_heads):
+    rng = np.random.default_rng(5)
+    n, d = 32, 64
+    h = rand(rng, n, d)
+    adj = rng.random((n, n)) < 0.2
+    np.fill_diagonal(adj, True)
+    params = make_gt_params(rng, d)
+    out = np.asarray(model.gt_block_ref(h, adj, params, n_heads=n_heads))
+    assert out.shape == (n, d)
+    assert np.isfinite(out).all()
+    # LayerNorm at the output: rows standardised (unit gamma, zero beta)
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-4)
+
+
+def test_gt_block_attention_masked():
+    """A node with only a self-loop must aggregate only itself."""
+    rng = np.random.default_rng(6)
+    n, d = 16, 64
+    h = rand(rng, n, d)
+    adj = np.zeros((n, n), bool)
+    np.fill_diagonal(adj, True)  # self-loops only -> attention is identity agg
+    params = make_gt_params(rng, d)
+    out = np.asarray(model.gt_block_ref(h, adj, params, n_heads=2))
+    # with self-loops only, softmax weight per row is exactly 1 on itself:
+    # attention output == V == h @ wv; verify via manual pipeline
+    d_ = d
+    qkv = h @ params["wqkv"]
+    v = qkv[:, 2 * d_ :]
+    att = v @ params["wo"]
+    z = h + att
+    mu, var = z.mean(-1, keepdims=True), z.var(-1, keepdims=True)
+    h1 = (z - mu) / np.sqrt(var + 1e-5)
+    f = np.maximum(h1 @ params["w1"], 0) @ params["w2"]
+    z2 = h1 + f
+    mu2, var2 = z2.mean(-1, keepdims=True), z2.var(-1, keepdims=True)
+    ref = (z2 - mu2) / np.sqrt(var2 + 1e-5)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)

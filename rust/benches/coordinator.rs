@@ -1,0 +1,72 @@
+//! `cargo bench coordinator` — serving-loop throughput/latency under a
+//! synthetic multi-graph request stream (the reproduction's L3 service
+//! path; not a paper figure, but the deployment story the stack exists
+//! for).  Also reports gather/scatter and bucket-planning microbenches.
+
+use fused3s::bsb;
+use fused3s::bsb::bucket;
+use fused3s::bsb::reorder::Order;
+use fused3s::coordinator::{AttnRequest, Coordinator, CoordinatorConfig};
+use fused3s::graph::{datasets, generators};
+use fused3s::kernels::Backend;
+use fused3s::util::prng::Rng;
+use fused3s::util::timing::{bench, BenchConfig};
+use std::sync::mpsc::channel;
+
+fn main() {
+    // Microbench: bucket planning.
+    let cfg = BenchConfig::quick();
+    println!("bucket planning (BSB -> dispatch plan):");
+    for name in ["pubmed-sim", "github-sim", "reddit-sim"] {
+        let d = datasets::by_name(name).expect("dataset");
+        let b = bsb::build(&d.graph);
+        let r = bench(name, &cfg, || {
+            let p = bucket::plan(&b, &[4, 8, 16, 32, 64, 128], 32, Order::ByTcbDesc, 128);
+            std::hint::black_box(p.stats.n_calls);
+        });
+        println!("  {:<14} {:>8.3} ms", name, r.median_ms());
+    }
+
+    // End-to-end serving throughput.
+    let coord = match Coordinator::start(CoordinatorConfig::default()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("serving bench requires artifacts: {e:#}");
+            return;
+        }
+    };
+    let n_req = if std::env::var("F3S_BENCH_FULL").is_ok() { 64 } else { 16 };
+    let d = 64;
+    let mut rng = Rng::new(0xBE9C);
+    let (tx, rx) = channel();
+    let t0 = std::time::Instant::now();
+    for i in 0..n_req {
+        let n = rng.range(128, 768);
+        let g = generators::erdos_renyi(n, 4.0, i as u64).with_self_loops();
+        let nd = g.n * d;
+        coord
+            .submit(AttnRequest {
+                id: i as u64,
+                graph: g,
+                d,
+                q: rng.normal_vec(nd, 1.0),
+                k: rng.normal_vec(nd, 1.0),
+                v: rng.normal_vec(nd, 1.0),
+                scale: 0.125,
+                backend: Backend::Fused3S,
+                reply: tx.clone(),
+            })
+            .expect("submit");
+    }
+    drop(tx);
+    let mut ok = 0;
+    while let Ok(r) = rx.recv() {
+        if r.result.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\nserving: {ok}/{n_req} ok in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
+    println!("{}", coord.metrics().report());
+    coord.shutdown();
+}

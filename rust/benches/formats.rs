@@ -1,0 +1,28 @@
+//! `cargo bench formats` — Table 3 (format footprints) + BSB construction
+//! throughput (the preprocessing cost the paper calls "negligible").
+
+use fused3s::bsb;
+use fused3s::experiments::{report, table3};
+use fused3s::graph::datasets;
+use fused3s::util::timing::{bench, BenchConfig};
+
+fn main() {
+    let j = table3::run(None).expect("table3");
+    report::write_json("bench_formats", &j).expect("write json");
+
+    println!("\nBSB construction throughput (preprocessing cost):");
+    let cfg = BenchConfig::quick();
+    for d in datasets::suite_single() {
+        let r = bench(d.name, &cfg, || {
+            let b = bsb::build(&d.graph);
+            std::hint::black_box(b.total_tcbs());
+        });
+        let meps = d.graph.nnz() as f64 / r.median_s / 1e6;
+        println!(
+            "  {:<22} {:>8.2} ms  ({:>7.1} M edges/s)",
+            d.name,
+            r.median_ms(),
+            meps
+        );
+    }
+}

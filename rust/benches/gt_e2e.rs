@@ -1,0 +1,35 @@
+//! `cargo bench gt_e2e` — Figure 8: end-to-end Graph Transformer inference
+//! with the 3S kernel swapped between backends, d ∈ {64, 128, 256}.
+//! F3S_BENCH_FULL=1 runs the paper's 10 blocks; default 3 blocks for CI.
+
+use fused3s::experiments::{fig8, report};
+use fused3s::graph::datasets;
+use fused3s::runtime::Runtime;
+use fused3s::util::timing::BenchConfig;
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let rt = match Runtime::from_default_artifacts() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("bench requires artifacts (`make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let names: &[&str] = if full {
+        &["cora-sim", "citeseer-sim", "pubmed-sim", "github-sim", "molhiv-sim"]
+    } else {
+        &["cora-sim", "molhiv-sim"]
+    };
+    let suite: Vec<_> = names
+        .iter()
+        .map(|n| datasets::by_name(n).expect("dataset"))
+        .collect();
+    let dims: Vec<usize> = if full { vec![64, 128, 256] } else { vec![64, 128] };
+    let blocks = if full { 10 } else { 3 };
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let j = fig8::run(&rt, &suite, &dims, &fig8::series(), blocks, &cfg)
+        .expect("fig8 bench");
+    let p = report::write_json("bench_gt_e2e", &j).expect("write json");
+    println!("wrote {}", p.display());
+}

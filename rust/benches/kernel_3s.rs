@@ -1,0 +1,43 @@
+//! `cargo bench kernel_3s` — Figure 5: 3S kernel comparison on the
+//! single-graph suite (set F3S_BENCH_FULL=1 for the full suite + full
+//! iteration counts; default is a representative subset sized for CI).
+
+use fused3s::experiments::{fig5, report};
+use fused3s::graph::datasets;
+use fused3s::kernels::Backend;
+use fused3s::runtime::Runtime;
+use fused3s::util::timing::BenchConfig;
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let rt = match Runtime::from_default_artifacts() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("kernel_3s bench requires artifacts (`make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let suite: Vec<_> = if full {
+        datasets::suite_single()
+    } else {
+        datasets::suite_single()
+            .into_iter()
+            .filter(|d| {
+                [
+                    "citeseer-sim",
+                    "cora-sim",
+                    "pubmed-sim",
+                    "github-sim",
+                    "blog-sim",
+                    "yelp-sim",
+                ]
+                .contains(&d.name)
+            })
+            .collect()
+    };
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let j = fig5::run(&rt, &suite, &Backend::kernel_series(), 64, &cfg, "fig5")
+        .expect("fig5 bench");
+    let p = report::write_json("bench_kernel_3s", &j).expect("write json");
+    println!("wrote {}", p.display());
+}

@@ -1,0 +1,32 @@
+//! `cargo bench kernel_batched` — Figure 6: 3S kernel comparison on the
+//! batched-graph suites (LRGB/OGB analogs, block-diagonal sparsity).
+
+use fused3s::experiments::{fig5, report};
+use fused3s::graph::datasets;
+use fused3s::kernels::Backend;
+use fused3s::runtime::Runtime;
+use fused3s::util::timing::BenchConfig;
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let rt = match Runtime::from_default_artifacts() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("bench requires artifacts (`make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let suite: Vec<_> = if full {
+        datasets::suite_batched()
+    } else {
+        datasets::suite_batched()
+            .into_iter()
+            .filter(|d| d.name == "molhiv-sim" || d.name == "peptides-func-sim")
+            .collect()
+    };
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let j = fig5::run(&rt, &suite, &Backend::kernel_series(), 64, &cfg, "fig6")
+        .expect("fig6 bench");
+    let p = report::write_json("bench_kernel_batched", &j).expect("write json");
+    println!("wrote {}", p.display());
+}

@@ -1,0 +1,115 @@
+//! 128-bit TCB bitmaps: the BSB innovation over ME-TCF/TCF index lists.
+//!
+//! Encoding contract (shared with `python/compile/kernels/ref.py` — tests on
+//! both sides pin it): bit `i = row * 8 + col` of the 16×8 block lives in
+//! u32 word `i / 32` at bit position `i % 32`, words little-endian.
+
+use crate::{BITMAP_WORDS, TCB_C, TCB_R};
+
+/// One TCB's sparsity pattern.
+pub type Bitmap = [u32; BITMAP_WORDS];
+
+/// All-zero bitmap (fully masked TCB — used for bucket padding).
+pub const EMPTY: Bitmap = [0; BITMAP_WORDS];
+
+/// Set the bit for (row, col) within the TCB.
+#[inline]
+pub fn set(bm: &mut Bitmap, row: usize, col: usize) {
+    debug_assert!(row < TCB_R && col < TCB_C);
+    let i = row * TCB_C + col;
+    bm[i / 32] |= 1 << (i % 32);
+}
+
+/// Test the bit for (row, col).
+#[inline]
+pub fn get(bm: &Bitmap, row: usize, col: usize) -> bool {
+    let i = row * TCB_C + col;
+    (bm[i / 32] >> (i % 32)) & 1 == 1
+}
+
+/// Number of nonzeros in the TCB.
+#[inline]
+pub fn popcount(bm: &Bitmap) -> u32 {
+    bm.iter().map(|w| w.count_ones()).sum()
+}
+
+/// Rows of the TCB that contain at least one nonzero (bitmask over 16 rows).
+pub fn row_occupancy(bm: &Bitmap) -> u16 {
+    let mut occ = 0u16;
+    for row in 0..TCB_R {
+        for col in 0..TCB_C {
+            if get(bm, row, col) {
+                occ |= 1 << row;
+                break;
+            }
+        }
+    }
+    occ
+}
+
+/// Reinterpret the bitmap words as i32 for the kernel's i32 input buffer
+/// (bit patterns are identical).
+#[inline]
+pub fn as_i32(bm: &Bitmap) -> [i32; BITMAP_WORDS] {
+    [bm[0] as i32, bm[1] as i32, bm[2] as i32, bm[3] as i32]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_all_positions() {
+        for row in 0..TCB_R {
+            for col in 0..TCB_C {
+                let mut bm = EMPTY;
+                set(&mut bm, row, col);
+                assert!(get(&bm, row, col));
+                assert_eq!(popcount(&bm), 1);
+                // exactly one bit anywhere
+                let total: u32 = bm.iter().map(|w| w.count_ones()).sum();
+                assert_eq!(total, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn word_layout_matches_python_contract() {
+        // bit i = row*8+col -> word i/32, bit i%32 (see test_bitmap.py)
+        let mut bm = EMPTY;
+        set(&mut bm, 0, 0); // i=0 -> word0 bit0
+        set(&mut bm, 3, 7); // i=31 -> word0 bit31
+        set(&mut bm, 4, 0); // i=32 -> word1 bit0
+        set(&mut bm, 15, 7); // i=127 -> word3 bit31
+        assert_eq!(bm[0], 1 | (1 << 31));
+        assert_eq!(bm[1], 1);
+        assert_eq!(bm[2], 0);
+        assert_eq!(bm[3], 1 << 31);
+    }
+
+    #[test]
+    fn popcount_counts() {
+        let mut bm = EMPTY;
+        for i in 0..10 {
+            set(&mut bm, i, i % 8);
+        }
+        assert_eq!(popcount(&bm), 10);
+    }
+
+    #[test]
+    fn row_occupancy_flags() {
+        let mut bm = EMPTY;
+        set(&mut bm, 2, 5);
+        set(&mut bm, 2, 6);
+        set(&mut bm, 9, 0);
+        assert_eq!(row_occupancy(&bm), (1 << 2) | (1 << 9));
+    }
+
+    #[test]
+    fn i32_view_preserves_bits() {
+        let mut bm = EMPTY;
+        set(&mut bm, 15, 7);
+        let i = as_i32(&bm);
+        assert_eq!(i[3] as u32, 1 << 31); // sign bit round-trips
+    }
+}

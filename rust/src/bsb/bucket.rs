@@ -1,0 +1,276 @@
+//! TCB-count bucketing: mapping variable-size row windows onto the fixed
+//! shapes of the AOT executable suite (DESIGN.md §1).
+//!
+//! Each compiled fused3s executable is specialised to a TCB capacity `t` and
+//! processes `batch` row windows per dispatch.  The planner:
+//!
+//! * skips empty row windows (their output rows are zero by convention);
+//! * routes each RW to the smallest bucket with capacity ≥ its TCB count,
+//!   padding the remainder with all-zero bitmaps (numerically exact);
+//! * RWs larger than the biggest bucket are *chunked*: split into ≤`chunk_t`
+//!   pieces whose partial softmax states (m, l) are merged on the host —
+//!   the online-softmax generalisation of the paper's "multiple thread
+//!   blocks per row window" future-work item.  This is how the reproduction
+//!   handles the Reddit-style mega-hubs that overflow any static bucket.
+//!
+//! The walk order of row windows follows the reordering schedule (§3.2), so
+//! heavyweight windows are dispatched first.
+
+use super::reorder::{self, Order};
+use super::Bsb;
+
+/// One dispatch of a bucket executable: `rws.len() <= batch` row windows,
+/// each padded to `t_bucket` TCBs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Call {
+    pub t_bucket: usize,
+    pub rws: Vec<u32>,
+}
+
+/// An oversize row window processed in `n_chunks` pieces of `chunk_t`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkedRw {
+    pub rw: u32,
+    pub n_chunks: usize,
+}
+
+/// Padding/coverage accounting for the plan.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlanStats {
+    /// TCBs actually present in dispatched row windows.
+    pub real_tcbs: usize,
+    /// Zero-bitmap TCB slots added by bucket + chunk padding.
+    pub padded_tcbs: usize,
+    /// Empty batch slots in final partial batches.
+    pub padded_slots: usize,
+    pub n_calls: usize,
+    pub n_chunked_rws: usize,
+    pub n_skipped_rws: usize,
+}
+
+impl PlanStats {
+    /// Fraction of dispatched TCB slots that are padding (lower is better;
+    /// the bucket-granularity ablation sweeps this).
+    pub fn padding_ratio(&self) -> f64 {
+        let total = self.real_tcbs + self.padded_tcbs;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_tcbs as f64 / total as f64
+        }
+    }
+}
+
+/// The full dispatch plan for one BSB matrix.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub batch: usize,
+    pub chunk_t: usize,
+    pub calls: Vec<Call>,
+    pub chunked: Vec<ChunkedRw>,
+    pub skipped: Vec<u32>,
+    pub stats: PlanStats,
+}
+
+/// Build the dispatch plan.
+///
+/// * `buckets` — available TCB capacities, ascending (from the manifest).
+/// * `batch` — row windows per dispatch (the manifest's `rw_batch`).
+/// * `order` — row-window schedule policy.
+/// * `chunk_t` — chunk capacity for oversize RWs (a bucket size with a
+///   "partial" executable available; usually the largest bucket).
+pub fn plan(
+    bsb: &Bsb,
+    buckets: &[usize],
+    batch: usize,
+    order: Order,
+    chunk_t: usize,
+) -> Plan {
+    assert!(!buckets.is_empty());
+    assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets ascending");
+    let max_bucket = *buckets.last().unwrap();
+    let sched = reorder::schedule(bsb, order);
+
+    let mut stats = PlanStats::default();
+    let mut skipped = Vec::new();
+    let mut chunked = Vec::new();
+    // Open batch per bucket, flushed when full.
+    let mut open: Vec<Vec<u32>> = vec![Vec::new(); buckets.len()];
+    let mut calls: Vec<Call> = Vec::new();
+
+    for &rw in &sched {
+        let t = bsb.rw_tcbs(rw as usize);
+        if t == 0 {
+            skipped.push(rw);
+            continue;
+        }
+        if t > max_bucket {
+            let n_chunks = t.div_ceil(chunk_t);
+            stats.real_tcbs += t;
+            stats.padded_tcbs += n_chunks * chunk_t - t;
+            chunked.push(ChunkedRw { rw, n_chunks });
+            continue;
+        }
+        let bi = buckets.iter().position(|&b| b >= t).unwrap();
+        stats.real_tcbs += t;
+        stats.padded_tcbs += buckets[bi] - t;
+        open[bi].push(rw);
+        if open[bi].len() == batch {
+            calls.push(Call {
+                t_bucket: buckets[bi],
+                rws: std::mem::take(&mut open[bi]),
+            });
+        }
+    }
+    for (bi, rws) in open.into_iter().enumerate() {
+        if !rws.is_empty() {
+            stats.padded_slots += batch - rws.len();
+            calls.push(Call { t_bucket: buckets[bi], rws });
+        }
+    }
+    stats.n_calls = calls.len();
+    stats.n_chunked_rws = chunked.len();
+    stats.n_skipped_rws = skipped.len();
+    Plan { batch, chunk_t, calls, chunked, skipped, stats }
+}
+
+/// Every row window must appear exactly once across calls/chunked/skipped.
+pub fn covers_all_rws(plan: &Plan, num_rw: usize) -> bool {
+    let mut seen = vec![false; num_rw];
+    let mut mark = |i: u32| {
+        let i = i as usize;
+        if i >= num_rw || seen[i] {
+            return false;
+        }
+        seen[i] = true;
+        true
+    };
+    for c in &plan.calls {
+        for &rw in &c.rws {
+            if !mark(rw) {
+                return false;
+            }
+        }
+    }
+    for c in &plan.chunked {
+        if !mark(c.rw) {
+            return false;
+        }
+    }
+    for &rw in &plan.skipped {
+        if !mark(rw) {
+            return false;
+        }
+    }
+    seen.iter().all(|&b| b)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bsb::build;
+    use crate::graph::generators;
+
+    use super::*;
+
+    const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+
+    #[test]
+    fn plan_covers_everything() {
+        for (n, deg, seed) in [(500, 3.0, 1u64), (2048, 12.0, 2), (100, 0.5, 3)] {
+            let g = generators::erdos_renyi(n, deg, seed);
+            let bsb = build(&g);
+            let p = plan(&bsb, BUCKETS, 8, Order::ByTcbDesc, 128);
+            assert!(covers_all_rws(&p, bsb.num_rw), "n={n} deg={deg}");
+        }
+    }
+
+    #[test]
+    fn batches_respect_capacity() {
+        let g = generators::erdos_renyi(4096, 8.0, 4);
+        let bsb = build(&g);
+        let p = plan(&bsb, BUCKETS, 16, Order::Natural, 128);
+        for c in &p.calls {
+            assert!(!c.rws.is_empty() && c.rws.len() <= 16);
+            assert!(BUCKETS.contains(&c.t_bucket));
+            for &rw in &c.rws {
+                assert!(bsb.rw_tcbs(rw as usize) <= c.t_bucket);
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_rws_are_chunked() {
+        // A star graph: hub row attends to all 5000 nodes -> RW 0 has
+        // ceil(5000/8) = 625 TCBs > 128.
+        let g = generators::star(5000);
+        let bsb = build(&g);
+        let p = plan(&bsb, BUCKETS, 8, Order::ByTcbDesc, 128);
+        assert_eq!(p.chunked.len(), 1);
+        let c = &p.chunked[0];
+        assert_eq!(c.rw, 0);
+        assert_eq!(c.n_chunks, bsb.rw_tcbs(0).div_ceil(128));
+        assert!(covers_all_rws(&p, bsb.num_rw));
+    }
+
+    #[test]
+    fn empty_windows_skipped() {
+        let g = crate::graph::CsrGraph::from_edges(64, &[(40, 1)]).unwrap();
+        let bsb = build(&g);
+        let p = plan(&bsb, BUCKETS, 4, Order::Natural, 128);
+        assert_eq!(p.skipped.len(), 3);
+        assert_eq!(p.calls.len(), 1);
+        assert!(covers_all_rws(&p, bsb.num_rw));
+    }
+
+    #[test]
+    fn reordering_front_loads_heavy_windows() {
+        let g = generators::barabasi_albert(4096, 6, 5);
+        let bsb = build(&g);
+        let p = plan(&bsb, BUCKETS, 8, Order::ByTcbDesc, 128);
+        // Among *full* batches, buckets are non-increasing (partial leftover
+        // batches are flushed at the end regardless of size).
+        let full: Vec<usize> = p
+            .calls
+            .iter()
+            .filter(|c| c.rws.len() == 8)
+            .map(|c| c.t_bucket)
+            .collect();
+        assert!(full.len() > 1);
+        assert!(
+            full.windows(2).all(|w| w[0] >= w[1]),
+            "full batches not front-loaded: {full:?}"
+        );
+    }
+
+    #[test]
+    fn finer_buckets_reduce_padding() {
+        let g = generators::erdos_renyi(4096, 10.0, 6);
+        let bsb = build(&g);
+        let coarse = plan(&bsb, &[128], 8, Order::Natural, 128);
+        let fine = plan(&bsb, BUCKETS, 8, Order::Natural, 128);
+        assert!(
+            fine.stats.padding_ratio() < coarse.stats.padding_ratio(),
+            "fine {} vs coarse {}",
+            fine.stats.padding_ratio(),
+            coarse.stats.padding_ratio()
+        );
+    }
+
+    #[test]
+    fn stats_account_tcbs() {
+        let g = generators::erdos_renyi(1024, 5.0, 7);
+        let bsb = build(&g);
+        let p = plan(&bsb, BUCKETS, 8, Order::Natural, 128);
+        let dispatched: usize = p
+            .calls
+            .iter()
+            .flat_map(|c| c.rws.iter().map(|&rw| bsb.rw_tcbs(rw as usize)))
+            .sum();
+        let chunked: usize = p
+            .chunked
+            .iter()
+            .map(|c| bsb.rw_tcbs(c.rw as usize))
+            .sum();
+        assert_eq!(p.stats.real_tcbs, dispatched + chunked);
+    }
+}

@@ -1,0 +1,203 @@
+//! Memory-footprint models for sparse formats — the paper's Table 3.
+//!
+//! Each function returns the storage in **bits** for an N×N binary matrix
+//! with z nonzeros under the respective format, using the paper's symbols:
+//! r = row-window height (16), b = number of blocks, bc = stored columns
+//! after compaction, rc = elements per block (16·8 = 128).  Sizes assume
+//! 32-bit indices/values exactly as in the table.
+//!
+//! The block-dependent quantities (b, bc, per-format) are measured from the
+//! actual BSB / BCSR-like builds, so `repro table3` reports real numbers for
+//! real graphs rather than plugging an assumed density into formulas.
+
+use crate::graph::CsrGraph;
+use crate::{TCB_C, TCB_R};
+
+use super::{build, build_bcsr_like, Bsb};
+
+/// Measured inputs to the footprint formulas for one graph.
+#[derive(Clone, Debug)]
+pub struct FootprintInputs {
+    pub n: usize,
+    /// nonzeros
+    pub z: usize,
+    /// row-window height
+    pub r: usize,
+    /// elements per block (r*c)
+    pub rc: usize,
+    /// blocks in the *compacted* (BSB/ME-TCF-style) build
+    pub b_compacted: usize,
+    /// stored columns after compaction = 8 * b_compacted (padded map)
+    pub bc_compacted: usize,
+    /// blocks in the non-compacted (BCSR-style) build
+    pub b_bcsr: usize,
+}
+
+pub fn measure(g: &CsrGraph) -> FootprintInputs {
+    let bsb: Bsb = build(g);
+    let bcsr = build_bcsr_like(g);
+    // bc = columns actually stored after compaction (without the 8-per-block
+    // padding of our in-memory sptd layout — the format itself stores exactly
+    // the distinct columns, as in the paper's Table 3).
+    let bc = bsb
+        .sptd
+        .iter()
+        .filter(|&&c| c != super::builder::PAD_COL)
+        .count();
+    FootprintInputs {
+        n: g.n,
+        z: g.nnz(),
+        r: TCB_R,
+        rc: TCB_R * TCB_C,
+        b_compacted: bsb.total_tcbs(),
+        bc_compacted: bc,
+        b_bcsr: bcsr.total_tcbs(),
+    }
+}
+
+/// One Table-3 row: (format name, bits).
+pub fn table3_rows(f: &FootprintInputs) -> Vec<(&'static str, u64)> {
+    vec![
+        ("CSR", csr_bits(f)),
+        ("SR-BCSR", sr_bcsr_bits(f)),
+        ("ME-BCRS", me_bcrs_bits(f)),
+        ("BCSR", bcsr_bits(f)),
+        ("TCF", tcf_bits(f)),
+        ("ME-TCF", me_tcf_bits(f)),
+        ("BitTCF", bittcf_bits(f)),
+        ("BSB", bsb_bits(f)),
+    ]
+}
+
+/// CSR: 32(N + 2z) — indptr + column index + fp32 value per nonzero.
+pub fn csr_bits(f: &FootprintInputs) -> u64 {
+    32 * (f.n as u64 + 2 * f.z as u64)
+}
+
+/// SR-BCSR (Magicube): 32(2N/r + bc + b·rc) with explicit fp32 block values.
+pub fn sr_bcsr_bits(f: &FootprintInputs) -> u64 {
+    32 * (2 * (f.n / f.r) as u64
+        + block_cols(f.b_bcsr) as u64
+        + (f.b_bcsr * f.rc) as u64)
+}
+
+/// ME-BCRS (FlashSparse): 32(N/r + bc + b·rc).
+pub fn me_bcrs_bits(f: &FootprintInputs) -> u64 {
+    32 * ((f.n / f.r) as u64
+        + block_cols(f.b_bcsr) as u64
+        + (f.b_bcsr * f.rc) as u64)
+}
+
+/// BCSR: 32(N/r + b + b·rc) — block pointer + block col id + dense values.
+pub fn bcsr_bits(f: &FootprintInputs) -> u64 {
+    32 * ((f.n / f.r) as u64 + f.b_bcsr as u64 + (f.b_bcsr * f.rc) as u64)
+}
+
+/// TCF (TC-GNN): 32(N/r + N + 3z) — binary values, integer indices.
+pub fn tcf_bits(f: &FootprintInputs) -> u64 {
+    32 * ((f.n / f.r) as u64 + f.n as u64 + 3 * f.z as u64)
+}
+
+/// ME-TCF (DTC-SpMM): 32(N/r + b + z) + 8z — 8-bit local nnz indices.
+pub fn me_tcf_bits(f: &FootprintInputs) -> u64 {
+    32 * ((f.n / f.r) as u64 + f.b_compacted as u64 + f.z as u64)
+        + 8 * f.z as u64
+}
+
+/// BitTCF (Acc-SpMM): 32(N/r + b + z) + z — 1 bit per nonzero on top.
+pub fn bittcf_bits(f: &FootprintInputs) -> u64 {
+    32 * ((f.n / f.r) as u64 + f.b_compacted as u64 + f.z as u64) + f.z as u64
+}
+
+/// BSB (ours): 32(N/r + bc) + b·rc — column map + one bit per block slot.
+pub fn bsb_bits(f: &FootprintInputs) -> u64 {
+    32 * ((f.n / f.r) as u64 + f.bc_compacted as u64)
+        + (f.b_compacted * f.rc) as u64
+}
+
+/// Stored columns for non-compacted block formats: 8 per block.
+fn block_cols(b: usize) -> usize {
+    b * TCB_C
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::generators;
+
+    use super::*;
+
+    fn inputs() -> FootprintInputs {
+        measure(&generators::erdos_renyi(4096, 8.0, 42).with_self_loops())
+    }
+
+    #[test]
+    fn bsb_beats_value_storing_block_formats() {
+        let f = inputs();
+        assert!(bsb_bits(&f) < bcsr_bits(&f));
+        assert!(bsb_bits(&f) < sr_bcsr_bits(&f));
+        assert!(bsb_bits(&f) < me_bcrs_bits(&f));
+    }
+
+    #[test]
+    fn bsb_beats_index_storing_tc_formats_when_dense() {
+        // The bitmap costs a fixed 128 bits per block while ME-TCF/BitTCF pay
+        // ~40/33 bits per nonzero, so BSB wins once blocks are dense enough
+        // (nnz/TCB above ~4; the paper's datasets sit at 7.5-16.5).  A
+        // clustered graph gives dense blocks.
+        let g = crate::graph::generators::sbm(32, 128, 0.25, 0.0001, 7)
+            .with_self_loops();
+        let f = measure(&g);
+        let density = f.z as f64 / f.b_compacted as f64;
+        assert!(density > 6.0, "test premise: dense blocks ({density:.1})");
+        assert!(bsb_bits(&f) < me_tcf_bits(&f));
+        assert!(bsb_bits(&f) < bittcf_bits(&f));
+        assert!(bsb_bits(&f) < tcf_bits(&f));
+    }
+
+    #[test]
+    fn me_tcf_crossover_on_hypersparse_blocks() {
+        // Document the crossover the formulas imply: with nearly-empty
+        // blocks the 128-bit bitmap is pure overhead and per-nonzero index
+        // formats can be smaller.  (The paper's datasets are all on the
+        // dense side of this line.)
+        // Block density floors at ~8 for any graph whose windows hold >=8
+        // distinct columns, so hypersparse blocks require near-empty windows.
+        let g = crate::graph::generators::erdos_renyi(8192, 0.15, 8);
+        let f = measure(&g);
+        let density = f.z as f64 / f.b_compacted as f64;
+        assert!(density < 4.0, "test premise: sparse blocks ({density:.1})");
+        assert!(bsb_bits(&f) < csr_bits(&f) * 2, "sanity: same order");
+    }
+
+    #[test]
+    fn table_has_all_eight_formats() {
+        let rows = table3_rows(&inputs());
+        assert_eq!(rows.len(), 8);
+        assert!(rows.iter().all(|&(_, bits)| bits > 0));
+    }
+
+    #[test]
+    fn footprints_grow_with_nnz() {
+        let small = measure(&generators::erdos_renyi(2048, 2.0, 1));
+        let large = measure(&generators::erdos_renyi(2048, 16.0, 1));
+        for ((_, a), (_, b)) in
+            table3_rows(&small).iter().zip(table3_rows(&large).iter())
+        {
+            assert!(b > a, "footprint must grow with density");
+        }
+    }
+
+    #[test]
+    fn csr_formula_exact() {
+        let f = FootprintInputs {
+            n: 100,
+            z: 500,
+            r: 16,
+            rc: 128,
+            b_compacted: 0,
+            bc_compacted: 0,
+            b_bcsr: 0,
+        };
+        assert_eq!(csr_bits(&f), 32 * (100 + 1000));
+    }
+}

@@ -1,0 +1,33 @@
+//! The Binary Sparse Block (BSB) format — paper §3.1.
+//!
+//! BSB maps a binary sparse matrix onto tensor-core operand shapes:
+//!
+//! 1. split rows into **row windows** (RW) of r = 16 rows;
+//! 2. within each RW, **compact away all-zero columns**;
+//! 3. partition the compacted RW into 16×8 **tensor-core blocks** (TCB);
+//! 4. store per-RW TCB counts (`tro`), the compacted→original column map
+//!    (`sptd`), and a 128-bit **bitmap** per TCB.
+//!
+//! Extensions built here on top of the paper's format, needed by the AOT
+//! static-shape contract (DESIGN.md §1):
+//!
+//! * [`reorder`] — row-window reordering by TCB count (paper §3.2's load
+//!   balancing optimisation);
+//! * [`bucket`] — grouping RWs into TCB-count buckets matching the compiled
+//!   executable suite, with exact zero-bitmap padding;
+//! * [`footprint`] — the Table-3 memory-footprint models for BSB and the
+//!   seven formats it is compared against;
+//! * [`stats`] — the Table-6/7 sparsity characterisation metrics.
+
+pub mod bitmap;
+pub mod bucket;
+pub mod builder;
+pub mod footprint;
+pub mod reorder;
+pub mod serialize;
+pub mod stats;
+
+pub use builder::{build, build_bcsr_like, Bsb};
+
+/// Row-window height r (rows per window = rows per TCB).
+pub const RW: usize = crate::TCB_R;

@@ -1,0 +1,176 @@
+//! Binary serialization of preprocessed BSB matrices.
+//!
+//! Preprocessing (compaction + bitmap construction) is cheap but not free on
+//! very large graphs; serving deployments preprocess once and cache.  The
+//! format is a flat little-endian layout with a magic/version header and a
+//! trailing checksum, so a truncated or corrupted cache is detected rather
+//! than silently producing a wrong sparsity pattern.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::BITMAP_WORDS;
+
+use super::builder::Bsb;
+
+const MAGIC: &[u8; 8] = b"F3SBSB01";
+
+/// FNV-1a over the payload (cheap integrity check; not cryptographic).
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Serialize to bytes.
+pub fn to_bytes(bsb: &Bsb) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        40 + 4 * (bsb.tro.len() + bsb.sptd.len())
+            + 16 * bsb.bitmaps.len(),
+    );
+    out.extend_from_slice(MAGIC);
+    for x in [
+        bsb.n as u64,
+        bsb.num_rw as u64,
+        bsb.nnz as u64,
+        bsb.tro.len() as u64,
+        bsb.sptd.len() as u64,
+        bsb.bitmaps.len() as u64,
+    ] {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for &x in &bsb.tro {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for &x in &bsb.sptd {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for bm in &bsb.bitmaps {
+        for &w in bm {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    let checksum = fnv1a(&out[8..]);
+    out.extend_from_slice(&checksum.to_le_bytes());
+    out
+}
+
+/// Deserialize from bytes (validates header, sizes, and checksum).
+pub fn from_bytes(buf: &[u8]) -> Result<Bsb> {
+    if buf.len() < 64 || &buf[..8] != MAGIC {
+        bail!("not a fused3s BSB cache file");
+    }
+    let payload = &buf[8..buf.len() - 8];
+    let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if fnv1a(&buf[8..buf.len() - 8]) != stored {
+        bail!("BSB cache checksum mismatch (corrupted file)");
+    }
+    let mut off = 0usize;
+    let mut read_u64 = || {
+        let v = u64::from_le_bytes(payload[off..off + 8].try_into().unwrap());
+        off += 8;
+        v as usize
+    };
+    let n = read_u64();
+    let num_rw = read_u64();
+    let nnz = read_u64();
+    let tro_len = read_u64();
+    let sptd_len = read_u64();
+    let bm_len = read_u64();
+    if tro_len != num_rw + 1 || sptd_len != bm_len * crate::TCB_C {
+        bail!("inconsistent BSB header");
+    }
+    let need = 48 + 4 * (tro_len + sptd_len) + 4 * BITMAP_WORDS * bm_len;
+    if payload.len() != need {
+        bail!("truncated BSB cache: {} != {}", payload.len(), need);
+    }
+    let mut read_u32s = |count: usize| -> Vec<u32> {
+        let mut v = Vec::with_capacity(count);
+        for _ in 0..count {
+            v.push(u32::from_le_bytes(payload[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        v
+    };
+    let tro = read_u32s(tro_len);
+    let sptd = read_u32s(sptd_len);
+    let flat = read_u32s(BITMAP_WORDS * bm_len);
+    let bitmaps: Vec<[u32; BITMAP_WORDS]> = flat
+        .chunks_exact(BITMAP_WORDS)
+        .map(|c| [c[0], c[1], c[2], c[3]])
+        .collect();
+    if tro[num_rw] as usize != bm_len {
+        bail!("inconsistent tro/bitmap count");
+    }
+    Ok(Bsb { n, num_rw, tro, sptd, bitmaps, nnz })
+}
+
+/// Write to a file.
+pub fn write(bsb: &Bsb, path: &Path) -> Result<()> {
+    std::fs::write(path, to_bytes(bsb))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Read from a file.
+pub fn read(path: &Path) -> Result<Bsb> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    from_bytes(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bsb::build;
+    use crate::graph::generators;
+    use crate::util::prng::Rng;
+
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Rng::new(3);
+        for _ in 0..8 {
+            let n = rng.range(1, 800);
+            let g = generators::erdos_renyi(n, 1.0 + rng.f64() * 6.0, rng.next_u64());
+            let b = build(&g);
+            let back = from_bytes(&to_bytes(&b)).unwrap();
+            assert_eq!(b, back);
+        }
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let g = generators::erdos_renyi(200, 4.0, 1);
+        let b = build(&g);
+        let mut bytes = to_bytes(&b);
+        // flip one bitmap bit in the middle
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        let err = from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn detects_truncation_and_garbage() {
+        let g = generators::ring(64);
+        let b = build(&g);
+        let bytes = to_bytes(&b);
+        assert!(from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        assert!(from_bytes(b"hello world, not a bsb").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let g = generators::barabasi_albert(300, 3, 7);
+        let b = build(&g);
+        let dir = std::env::temp_dir().join("f3s_bsb_cache");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.bsb");
+        write(&b, &p).unwrap();
+        assert_eq!(read(&p).unwrap(), b);
+    }
+}

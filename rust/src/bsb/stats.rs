@@ -1,0 +1,118 @@
+//! Sparsity characterisation after BSB compaction — the paper's Table 6
+//! (TCB/RW and nnz/TCB, average + CV) and Table 7 (decile ranges of the
+//! TCB/RW distribution).
+
+use crate::util::stats as ustats;
+
+use super::Bsb;
+
+/// The Table-6 row for one graph.
+#[derive(Clone, Debug)]
+pub struct CompactionStats {
+    pub nodes: usize,
+    pub edges: usize,
+    pub num_rw: usize,
+    pub total_tcbs: usize,
+    pub tcb_per_rw_avg: f64,
+    pub tcb_per_rw_cv: f64,
+    pub nnz_per_tcb_avg: f64,
+    pub nnz_per_tcb_cv: f64,
+}
+
+/// Compute Table-6 metrics.  Empty row windows are excluded from the TCB/RW
+/// distribution (they are never dispatched), matching the paper's
+/// post-compaction accounting.
+pub fn compaction_stats(bsb: &Bsb) -> CompactionStats {
+    let tcb_rw: Vec<f64> = bsb
+        .tcbs_per_rw()
+        .iter()
+        .filter(|&&t| t > 0)
+        .map(|&t| t as f64)
+        .collect();
+    let nnz_tcb: Vec<f64> =
+        bsb.nnz_per_tcb().iter().map(|&z| z as f64).collect();
+    CompactionStats {
+        nodes: bsb.n,
+        edges: bsb.nnz,
+        num_rw: bsb.num_rw,
+        total_tcbs: bsb.total_tcbs(),
+        tcb_per_rw_avg: ustats::mean(&tcb_rw),
+        tcb_per_rw_cv: ustats::cv(&tcb_rw),
+        nnz_per_tcb_avg: ustats::mean(&nnz_tcb),
+        nnz_per_tcb_cv: ustats::cv(&nnz_tcb),
+    }
+}
+
+/// The Table-7 row: (min, max) TCB count in each decile of row windows
+/// (sorted ascending by TCB count, like the paper).
+pub fn tcb_deciles(bsb: &Bsb) -> Vec<(usize, usize)> {
+    let tcb_rw: Vec<f64> = bsb
+        .tcbs_per_rw()
+        .iter()
+        .filter(|&&t| t > 0)
+        .map(|&t| t as f64)
+        .collect();
+    ustats::decile_ranges(&tcb_rw)
+        .into_iter()
+        .map(|(lo, hi)| (lo as usize, hi as usize))
+        .collect()
+}
+
+/// Decile group size (the paper's "decile size" column).
+pub fn decile_size(bsb: &Bsb) -> usize {
+    let nonempty = bsb.tcbs_per_rw().iter().filter(|&&t| t > 0).count();
+    nonempty / 10
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bsb::build;
+    use crate::graph::generators;
+
+    use super::*;
+
+    #[test]
+    fn uniform_graph_low_cv() {
+        let g = generators::ring(4096).with_self_loops();
+        let bsb = build(&g);
+        let s = compaction_stats(&bsb);
+        assert!(s.tcb_per_rw_cv < 0.2, "ring CV {}", s.tcb_per_rw_cv);
+        assert_eq!(s.edges, g.nnz());
+    }
+
+    #[test]
+    fn power_law_graph_high_cv() {
+        let g = generators::barabasi_albert(4096, 4, 3).with_self_loops();
+        let bsb = build(&g);
+        let s = compaction_stats(&bsb);
+        let ring = build(&generators::ring(4096).with_self_loops());
+        assert!(
+            s.tcb_per_rw_cv > 2.0 * compaction_stats(&ring).tcb_per_rw_cv,
+            "BA CV {}",
+            s.tcb_per_rw_cv
+        );
+    }
+
+    #[test]
+    fn deciles_are_monotone() {
+        let g = generators::barabasi_albert(8192, 5, 4);
+        let bsb = build(&g);
+        let d = tcb_deciles(&bsb);
+        assert_eq!(d.len(), 10);
+        for w in d.windows(2) {
+            assert!(w[0].1 <= w[1].1 + 1, "deciles roughly increasing");
+            assert!(w[0].0 <= w[1].0);
+        }
+        // long tail: last decile max far above first decile max
+        assert!(d[9].1 > 2 * d[0].1);
+    }
+
+    #[test]
+    fn nnz_per_tcb_bounded() {
+        let g = generators::erdos_renyi(2048, 6.0, 5);
+        let bsb = build(&g);
+        let s = compaction_stats(&bsb);
+        assert!(s.nnz_per_tcb_avg > 0.0);
+        assert!(s.nnz_per_tcb_avg <= 128.0); // 16*8 block capacity
+    }
+}

@@ -1,0 +1,144 @@
+//! Serving metrics: latency distribution + throughput + queue accounting.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Thread-safe latency recorder.
+#[derive(Default)]
+pub struct LatencyRecorder {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, seconds: f64) {
+        self.samples.lock().unwrap().push(seconds);
+    }
+
+    pub fn snapshot(&self) -> LatencySummary {
+        let mut v = self.samples.lock().unwrap().clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            count: v.len(),
+            p50_s: stats::percentile_sorted(&v, 50.0),
+            p95_s: stats::percentile_sorted(&v, 95.0),
+            p99_s: stats::percentile_sorted(&v, 99.0),
+            mean_s: stats::mean(&v),
+            max_s: v.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    pub max_s: f64,
+}
+
+/// Aggregate serving metrics over a run.
+pub struct Metrics {
+    pub latency: LatencyRecorder,
+    pub preprocess: LatencyRecorder,
+    pub execute: LatencyRecorder,
+    started: Instant,
+    completed: Mutex<u64>,
+    failed: Mutex<u64>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            latency: LatencyRecorder::new(),
+            preprocess: LatencyRecorder::new(),
+            execute: LatencyRecorder::new(),
+            started: Instant::now(),
+            completed: Mutex::new(0),
+            failed: Mutex::new(0),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn request_done(&self, ok: bool) {
+        if ok {
+            *self.completed.lock().unwrap() += 1;
+        } else {
+            *self.failed.lock().unwrap() += 1;
+        }
+    }
+
+    pub fn completed(&self) -> u64 {
+        *self.completed.lock().unwrap()
+    }
+
+    pub fn failed(&self) -> u64 {
+        *self.failed.lock().unwrap()
+    }
+
+    /// Completed requests per second since construction.
+    pub fn throughput_rps(&self) -> f64 {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        if elapsed == 0.0 {
+            0.0
+        } else {
+            self.completed() as f64 / elapsed
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let l = self.latency.snapshot();
+        format!(
+            "requests={} failed={} throughput={:.2} req/s  \
+             latency p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.completed(),
+            self.failed(),
+            self.throughput_rps(),
+            l.p50_s * 1e3,
+            l.p95_s * 1e3,
+            l.p99_s * 1e3,
+            l.max_s * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64 / 1000.0);
+        }
+        let s = r.snapshot();
+        assert_eq!(s.count, 100);
+        assert!((s.p50_s - 0.0505).abs() < 1e-3);
+        assert!(s.p99_s > 0.098 && s.p99_s <= 0.1);
+        assert_eq!(s.max_s, 0.1);
+    }
+
+    #[test]
+    fn counters() {
+        let m = Metrics::new();
+        m.request_done(true);
+        m.request_done(true);
+        m.request_done(false);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.failed(), 1);
+        assert!(m.report().contains("requests=2"));
+    }
+}

@@ -1,0 +1,27 @@
+//! The serving coordinator — Layer 3's request path.
+//!
+//! Architecture (std threads + mpsc; tokio is unavailable offline):
+//!
+//! ```text
+//!  clients ── submit ──► ingress queue
+//!                            │
+//!              preprocessing workers (BSB build + bucket plan, CPU-bound,
+//!              scales with cores; the paper's "preprocessing alongside
+//!              sparse matrix compaction")
+//!                            │
+//!                     executor thread (owns the PJRT Runtime; dispatches
+//!                     bucketed kernel calls in reordered schedule order)
+//!                            │
+//!  clients ◄── response channels ──┘
+//! ```
+//!
+//! Python never appears anywhere in this path; the executor replays AOT
+//! artifacts only.
+
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use metrics::{LatencyRecorder, Metrics};
+pub use request::{AttnRequest, AttnResponse};
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,79 @@
+//! Request/response types crossing the coordinator's queues.
+
+use std::sync::mpsc::Sender;
+
+use crate::graph::CsrGraph;
+use crate::kernels::Backend;
+
+/// A sparse-attention request: one graph + its Q/K/V features.
+pub struct AttnRequest {
+    pub id: u64,
+    pub graph: CsrGraph,
+    pub d: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub scale: f32,
+    /// Which execution strategy to use (defaults to Fused3S).
+    pub backend: Backend,
+    /// Where to deliver the result.
+    pub reply: Sender<AttnResponse>,
+}
+
+/// The computed output (or a structured failure).
+pub struct AttnResponse {
+    pub id: u64,
+    pub result: Result<Vec<f32>, String>,
+    /// End-to-end latency in seconds (enqueue → response).
+    pub latency_s: f64,
+    /// Time spent in preprocessing (BSB build + plan).
+    pub preprocess_s: f64,
+    /// Time spent executing kernels.
+    pub execute_s: f64,
+}
+
+impl AttnRequest {
+    /// Validate feature buffer sizes against the graph.
+    pub fn validate(&self) -> Result<(), String> {
+        let want = self.graph.n * self.d;
+        for (name, buf) in [("q", &self.q), ("k", &self.k), ("v", &self.v)] {
+            if buf.len() != want {
+                return Err(format!(
+                    "{name}: expected {} elements (n={} × d={}), got {}",
+                    want,
+                    self.graph.n,
+                    self.d,
+                    buf.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn validation() {
+        let (tx, _rx) = channel();
+        let g = generators::ring(32);
+        let good = AttnRequest {
+            id: 1,
+            d: 4,
+            q: vec![0.0; 128],
+            k: vec![0.0; 128],
+            v: vec![0.0; 128],
+            scale: 1.0,
+            backend: Backend::Fused3S,
+            reply: tx.clone(),
+            graph: g.clone(),
+        };
+        assert!(good.validate().is_ok());
+        let bad = AttnRequest { q: vec![0.0; 12], ..good };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! The coordinator server: preprocessing workers + a PJRT executor thread.
+//!
+//! Ownership model: `xla::PjRtClient` is not `Sync`, so exactly one executor
+//! thread owns the [`Runtime`]; preprocessing (BSB build + bucket planning,
+//! pure CPU) happens on a small worker pool in front of it.  This mirrors
+//! the paper's split between per-graph preprocessing ("negligible overhead,
+//! done once per input graph") and kernel execution.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::kernels::{AttentionProblem, Driver};
+use crate::runtime::{Manifest, Runtime};
+
+use super::metrics::Metrics;
+use super::request::{AttnRequest, AttnResponse};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    /// Preprocessing worker threads.
+    pub preprocess_workers: usize,
+    /// Bound on the ingress queue before `submit` blocks the caller
+    /// (backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts_dir: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            preprocess_workers: 2,
+            queue_capacity: 64,
+        }
+    }
+}
+
+/// A preprocessed request waiting for the executor.
+struct PreparedRequest {
+    req: AttnRequest,
+    driver: Result<Driver, String>,
+    enqueued: Instant,
+    preprocess_s: f64,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    ingress: Sender<AttnRequest>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<()>>,
+    executor: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the worker pool and executor.  The executor compiles
+    /// executables lazily; call [`Runtime::warmup`] patterns via a first
+    /// dummy request if cold-start latency matters.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        // Validate the manifest eagerly so startup fails fast.  The PJRT
+        // client itself is constructed *inside* the executor thread: the xla
+        // client is reference-counted and not Send.
+        let manifest = Arc::new(
+            Manifest::load(&cfg.artifacts_dir)
+                .context("coordinator startup: loading artifacts")?,
+        );
+
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (ingress_tx, ingress_rx) = channel::<AttnRequest>();
+        let (prep_tx, prep_rx) = channel::<PreparedRequest>();
+        let ingress_rx = Arc::new(std::sync::Mutex::new(ingress_rx));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.preprocess_workers.max(1) {
+            let rx = ingress_rx.clone();
+            let tx = prep_tx.clone();
+            let stop = shutdown.clone();
+            let man = manifest.clone();
+            workers.push(std::thread::spawn(move || {
+                preprocess_worker(rx, tx, stop, man)
+            }));
+        }
+        drop(prep_tx);
+
+        // Executor stage: constructs and owns the PJRT runtime on its own
+        // thread; startup errors are reported back before `start` returns.
+        let m2 = metrics.clone();
+        let dir = cfg.artifacts_dir.clone();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let executor = std::thread::spawn(move || {
+            let rt = match Runtime::new(&dir) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            executor_loop(rt, prep_rx, m2)
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("executor thread died at startup"))?
+            .map_err(|e| anyhow::anyhow!("executor startup: {e}"))?;
+
+        Ok(Coordinator {
+            ingress: ingress_tx,
+            metrics,
+            shutdown,
+            workers,
+            executor: Some(executor),
+        })
+    }
+
+    /// Submit a request (non-blocking; the reply arrives on `req.reply`).
+    pub fn submit(&self, req: AttnRequest) -> Result<()> {
+        self.ingress
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Drain queues and stop all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        drop(std::mem::replace(&mut self.ingress, channel().0));
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(e) = self.executor.take() {
+            let _ = e.join();
+        }
+    }
+}
+
+fn preprocess_worker(
+    rx: Arc<std::sync::Mutex<Receiver<AttnRequest>>>,
+    tx: Sender<PreparedRequest>,
+    stop: Arc<AtomicBool>,
+    man: Arc<Manifest>,
+) {
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            match guard.recv_timeout(std::time::Duration::from_millis(50)) {
+                Ok(r) => r,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        let enqueued = Instant::now();
+        let t0 = Instant::now();
+        let driver = match req.validate() {
+            Err(e) => Err(e),
+            Ok(()) => Driver::prepare_with(&man, &req.graph, req.backend)
+                .map_err(|e| format!("{e:#}")),
+        };
+        let prepared = PreparedRequest {
+            preprocess_s: t0.elapsed().as_secs_f64(),
+            req,
+            driver,
+            enqueued,
+        };
+        if tx.send(prepared).is_err() {
+            return;
+        }
+    }
+}
+
+fn executor_loop(
+    rt: Runtime,
+    rx: Receiver<PreparedRequest>,
+    metrics: Arc<Metrics>,
+) {
+    while let Ok(p) = rx.recv() {
+        let t0 = Instant::now();
+        let result = match p.driver {
+            Err(e) => Err(e),
+            Ok(driver) => {
+                let x = AttentionProblem::new(
+                    p.req.graph.n,
+                    p.req.d,
+                    &p.req.q,
+                    &p.req.k,
+                    &p.req.v,
+                    p.req.scale,
+                );
+                driver.run(&rt, &x).map_err(|e| format!("{e:#}"))
+            }
+        };
+        let execute_s = t0.elapsed().as_secs_f64();
+        let latency_s = p.enqueued.elapsed().as_secs_f64() + p.preprocess_s;
+        metrics.request_done(result.is_ok());
+        metrics.latency.record(latency_s);
+        metrics.preprocess.record(p.preprocess_s);
+        metrics.execute.record(execute_s);
+        let _ = p.req.reply.send(AttnResponse {
+            id: p.req.id,
+            result,
+            latency_s,
+            preprocess_s: p.preprocess_s,
+            execute_s,
+        });
+    }
+}

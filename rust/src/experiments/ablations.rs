@@ -1,0 +1,184 @@
+//! §4.3 ablations: each optimisation of the Fused3S design, toggled
+//! individually (the F3S_splitC → F3S_reorderRW → F3S_permuteQKV stack of
+//! the paper, mapped to this substrate's knobs), plus the bucket-granularity
+//! ablation that is specific to the AOT reproduction.
+
+use anyhow::Result;
+
+use crate::bsb;
+use crate::bsb::bucket;
+use crate::bsb::reorder::Order;
+use crate::graph::datasets;
+use crate::kernels::{AttentionProblem, Backend, Driver};
+use crate::runtime::Runtime;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::prng::Rng;
+use crate::util::timing::{bench, BenchConfig};
+
+use super::report::{self, Table};
+
+/// Warp-partitioning ablation (split-column vs split-row SDDMM).
+pub fn split(rt: &Runtime, names: &[String], d: usize, cfg: &BenchConfig) -> Result<Json> {
+    compare_backends(
+        rt,
+        names,
+        d,
+        cfg,
+        &[Backend::Fused3S, Backend::Fused3SSplitR],
+        "ablation: split-column vs split-row (paper §3.3 / F3S_splitR)",
+    )
+}
+
+/// Row-window reordering ablation (on the real dispatch path; the simulated
+/// SM view is `repro fig7`).
+pub fn reorder(rt: &Runtime, names: &[String], d: usize, cfg: &BenchConfig) -> Result<Json> {
+    compare_backends(
+        rt,
+        names,
+        d,
+        cfg,
+        &[Backend::Fused3S, Backend::Fused3SNoReorder],
+        "ablation: row-window reordering (paper §3.2 / F3S_reorderRW)",
+    )
+}
+
+/// Column-compaction ablation — isolates the BSB format's FLOP savings
+/// (paper §3.1; the layout half of F3S_permuteQKV's memory story).
+pub fn compaction(rt: &Runtime, names: &[String], d: usize, cfg: &BenchConfig) -> Result<Json> {
+    let mut out = Vec::new();
+    let mut table = Table::new(&[
+        "dataset", "TCBs (BSB)", "TCBs (BCSR-like)", "BSB ms", "BCSR ms",
+        "speedup",
+    ]);
+    for name in names {
+        let ds = datasets::by_name(name)?;
+        let compacted = bsb::build(&ds.graph);
+        let bcsr = bsb::build_bcsr_like(&ds.graph);
+        let n = ds.graph.n;
+        let mut rng = Rng::new(7);
+        let q = rng.normal_vec(n * d, 1.0);
+        let k = rng.normal_vec(n * d, 1.0);
+        let v = rng.normal_vec(n * d, 1.0);
+        let x = AttentionProblem::new(n, d, &q, &k, &v, 1.0 / (d as f32).sqrt());
+        let run_with = |compact: bool| -> Result<f64> {
+            use crate::kernels::fused::{FusedDriver, FusedOpts};
+            let driver = FusedDriver::new(
+                rt.manifest(),
+                &ds.graph,
+                FusedOpts { compact, ..FusedOpts::default() },
+            )?;
+            driver.run(rt, &x)?; // warmup
+            Ok(bench("", cfg, || {
+                driver.run(rt, &x).expect("run");
+            })
+            .median_ms())
+        };
+        let ms_bsb = run_with(true)?;
+        let ms_bcsr = run_with(false)?;
+        table.row(vec![
+            ds.name.to_string(),
+            compacted.total_tcbs().to_string(),
+            bcsr.total_tcbs().to_string(),
+            report::f(ms_bsb, 2),
+            report::f(ms_bcsr, 2),
+            format!("{:.2}x", ms_bcsr / ms_bsb),
+        ]);
+        out.push(obj(vec![
+            ("dataset", s(ds.name)),
+            ("tcbs_bsb", num(compacted.total_tcbs() as f64)),
+            ("tcbs_bcsr", num(bcsr.total_tcbs() as f64)),
+            ("ms_bsb", num(ms_bsb)),
+            ("ms_bcsr", num(ms_bcsr)),
+        ]));
+    }
+    println!("\nablation: column compaction (BSB vs BCSR-like blocks):");
+    table.print();
+    Ok(arr(out))
+}
+
+/// Bucket-granularity ablation: padding waste vs dispatch count as the
+/// bucket set coarsens (AOT-specific design choice, DESIGN.md §1).
+pub fn buckets(names: &[String]) -> Result<Json> {
+    let fine: Vec<usize> = vec![4, 8, 16, 32, 64, 128];
+    let medium: Vec<usize> = vec![8, 32, 128];
+    let coarse: Vec<usize> = vec![128];
+    let mut out = Vec::new();
+    let mut table = Table::new(&[
+        "dataset", "buckets", "calls", "padding%", "chunked RWs",
+    ]);
+    for name in names {
+        let ds = datasets::by_name(name)?;
+        let b = bsb::build(&ds.graph);
+        for (label, set) in
+            [("fine", &fine), ("medium", &medium), ("coarse", &coarse)]
+        {
+            let plan = bucket::plan(&b, set, 32, Order::ByTcbDesc, 128);
+            table.row(vec![
+                ds.name.to_string(),
+                label.to_string(),
+                plan.stats.n_calls.to_string(),
+                format!("{:.1}%", plan.stats.padding_ratio() * 100.0),
+                plan.stats.n_chunked_rws.to_string(),
+            ]);
+            out.push(obj(vec![
+                ("dataset", s(ds.name)),
+                ("buckets", s(label)),
+                ("calls", num(plan.stats.n_calls as f64)),
+                ("padding_ratio", num(plan.stats.padding_ratio())),
+            ]));
+        }
+    }
+    println!("\nablation: bucket granularity (padding vs dispatch count):");
+    table.print();
+    Ok(arr(out))
+}
+
+fn compare_backends(
+    rt: &Runtime,
+    names: &[String],
+    d: usize,
+    cfg: &BenchConfig,
+    backends: &[Backend],
+    title: &str,
+) -> Result<Json> {
+    let mut out = Vec::new();
+    let mut headers = vec!["dataset".to_string()];
+    headers.extend(backends.iter().map(|b| format!("{} (ms)", b.name())));
+    headers.push("speedup".into());
+    let mut table =
+        Table::new(&headers.iter().map(|h| h.as_str()).collect::<Vec<_>>());
+    for name in names {
+        let ds = datasets::by_name(name)?;
+        let n = ds.graph.n;
+        let mut rng = Rng::new(11);
+        let q = rng.normal_vec(n * d, 1.0);
+        let k = rng.normal_vec(n * d, 1.0);
+        let v = rng.normal_vec(n * d, 1.0);
+        let x = AttentionProblem::new(n, d, &q, &k, &v, 1.0 / (d as f32).sqrt());
+        let mut times = Vec::new();
+        for &b in backends {
+            let driver = Driver::prepare(rt, &ds.graph, b)?;
+            driver.run(rt, &x)?;
+            times.push(
+                bench(b.name(), cfg, || {
+                    driver.run(rt, &x).expect("run");
+                })
+                .median_ms(),
+            );
+        }
+        let mut row = vec![ds.name.to_string()];
+        row.extend(times.iter().map(|&t| report::f(t, 2)));
+        row.push(format!("{:.2}x", times[1] / times[0]));
+        table.row(row);
+        out.push(obj(vec![
+            ("dataset", s(ds.name)),
+            ("base", s(backends[0].name())),
+            ("base_ms", num(times[0])),
+            ("variant", s(backends[1].name())),
+            ("variant_ms", num(times[1])),
+        ]));
+    }
+    println!("\n{title}:");
+    table.print();
+    Ok(arr(out))
+}

@@ -1,0 +1,187 @@
+//! Figures 5 & 6: 3S kernel time across the dataset suites, one series per
+//! backend.  Fig. 5 = single graphs, Fig. 6 = batched graphs; both share
+//! this harness (they differ only in the dataset list).
+//!
+//! Reproduction semantics (DESIGN.md §1): absolute times are CPU-substrate
+//! times; the comparisons the paper makes — fused vs unfused, compacted vs
+//! not, kernel vs framework scalar, OOM-analog failures on oversize
+//! problems — are what must hold.
+
+use anyhow::Result;
+
+use crate::graph::datasets::Dataset;
+use crate::kernels::{AttentionProblem, Backend, Driver};
+use crate::runtime::Runtime;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::prng::Rng;
+use crate::util::stats;
+use crate::util::timing::{bench, BenchConfig};
+
+use super::report::{self, Table};
+
+/// One (dataset × backend) measurement.
+pub struct Cell {
+    pub dataset: String,
+    pub backend: Backend,
+    /// Median ms, or None with a failure reason (the paper's OOM bars).
+    pub median_ms: Option<f64>,
+    pub fail_reason: Option<String>,
+}
+
+/// Run the kernel comparison over `suite`.
+pub fn run(
+    rt: &Runtime,
+    suite: &[Dataset],
+    backends: &[Backend],
+    d: usize,
+    cfg: &BenchConfig,
+    label: &str,
+) -> Result<Json> {
+    let mut cells: Vec<Cell> = Vec::new();
+    for ds in suite {
+        let n = ds.graph.n;
+        let mut rng = Rng::new(0xF16 + n as u64);
+        let q = rng.normal_vec(n * d, 1.0);
+        let k = rng.normal_vec(n * d, 1.0);
+        let v = rng.normal_vec(n * d, 1.0);
+        // 1/sqrt(d) keeps the naive-softmax baseline in exp() range on most
+        // datasets, matching how frameworks actually run attention.
+        let x = AttentionProblem::new(n, d, &q, &k, &v, 1.0 / (d as f32).sqrt());
+        for &b in backends {
+            let cell = match Driver::prepare(rt, &ds.graph, b) {
+                Err(e) => Cell {
+                    dataset: ds.name.to_string(),
+                    backend: b,
+                    median_ms: None,
+                    fail_reason: Some(format!("{e:#}")),
+                },
+                Ok(driver) => {
+                    // One untimed run warms executable compilation.
+                    match driver.run(rt, &x) {
+                        Err(e) => Cell {
+                            dataset: ds.name.to_string(),
+                            backend: b,
+                            median_ms: None,
+                            fail_reason: Some(format!("{e:#}")),
+                        },
+                        Ok(_) => {
+                            let r = bench(b.name(), cfg, || {
+                                driver.run(rt, &x).expect("benched run");
+                            });
+                            Cell {
+                                dataset: ds.name.to_string(),
+                                backend: b,
+                                median_ms: Some(r.median_ms()),
+                                fail_reason: None,
+                            }
+                        }
+                    }
+                }
+            };
+            eprintln!(
+                "  [{label}] {} / {}: {}",
+                cell.dataset,
+                cell.backend.name(),
+                cell.median_ms
+                    .map(|m| format!("{m:.2} ms"))
+                    .unwrap_or_else(|| "FAIL".into())
+            );
+            cells.push(cell);
+        }
+    }
+    print_tables(&cells, backends, label);
+    Ok(to_json(&cells, label, d))
+}
+
+fn cell_ms(cells: &[Cell], ds: &str, b: Backend) -> Option<f64> {
+    cells
+        .iter()
+        .find(|c| c.dataset == ds && c.backend == b)
+        .and_then(|c| c.median_ms)
+}
+
+fn print_tables(cells: &[Cell], backends: &[Backend], label: &str) {
+    let datasets: Vec<String> = {
+        let mut v: Vec<String> = Vec::new();
+        for c in cells {
+            if !v.contains(&c.dataset) {
+                v.push(c.dataset.clone());
+            }
+        }
+        v
+    };
+    let mut headers = vec!["dataset"];
+    let names: Vec<String> =
+        backends.iter().map(|b| format!("{} (ms)", b.name())).collect();
+    headers.extend(names.iter().map(|s| s.as_str()));
+    let spd: Vec<String> = backends
+        .iter()
+        .filter(|&&b| b != Backend::Fused3S)
+        .map(|b| format!("vs {}", b.name()))
+        .collect();
+    headers.extend(spd.iter().map(|s| s.as_str()));
+    let mut table = Table::new(&headers);
+
+    let mut speedups: Vec<Vec<f64>> =
+        vec![Vec::new(); backends.len().saturating_sub(1)];
+    for ds in &datasets {
+        let fused = cell_ms(cells, ds, Backend::Fused3S);
+        let mut row = vec![ds.clone()];
+        for &b in backends {
+            row.push(
+                cell_ms(cells, ds, b)
+                    .map(|m| report::f(m, 2))
+                    .unwrap_or_else(|| "FAIL".into()),
+            );
+        }
+        let mut si = 0;
+        for &b in backends.iter().filter(|&&b| b != Backend::Fused3S) {
+            let base = cell_ms(cells, ds, b);
+            match (base, fused) {
+                (Some(base), Some(f)) => {
+                    row.push(format!("{:.2}x", base / f));
+                    speedups[si].push(base / f);
+                }
+                _ => row.push("-".into()),
+            }
+            si += 1;
+        }
+        table.row(row);
+    }
+    println!("\n{label} — 3S kernel comparison (median ms; lower is better):");
+    table.print();
+    print!("geomean speedup of fused3s:");
+    let mut si = 0;
+    for &b in backends.iter().filter(|&&b| b != Backend::Fused3S) {
+        if !speedups[si].is_empty() {
+            print!("  {:.2}x vs {}", stats::geomean(&speedups[si]), b.name());
+        }
+        si += 1;
+    }
+    println!();
+}
+
+fn to_json(cells: &[Cell], label: &str, d: usize) -> Json {
+    arr(cells
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("figure", s(label)),
+                ("dataset", s(&c.dataset)),
+                ("backend", s(c.backend.name())),
+                ("d", num(d as f64)),
+                (
+                    "median_ms",
+                    c.median_ms.map(num).unwrap_or(Json::Null),
+                ),
+                (
+                    "fail",
+                    c.fail_reason
+                        .as_deref()
+                        .map(s)
+                        .unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect())
+}

@@ -1,0 +1,77 @@
+//! Figure 7: per-SM active time with and without row-window reordering,
+//! via the scheduling simulator (DESIGN.md §1 substitution 4), plus the
+//! *measured* wall-clock effect of reordering on the real dispatch path.
+
+use anyhow::Result;
+
+use crate::bsb;
+use crate::bsb::reorder::Order;
+use crate::graph::datasets;
+use crate::simulator::{simulate, SimConfig};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::report::{self, Table};
+
+pub const DEFAULT_DATASETS: &[&str] = &["reddit-sim", "pubmed-sim"];
+
+pub fn run(names: &[String], num_sms: usize) -> Result<Json> {
+    let cfg = SimConfig { num_sms, ..SimConfig::default() };
+    let mut results = Vec::new();
+    for name in names {
+        let d = datasets::by_name(name)?;
+        let b = bsb::build(&d.graph);
+        let nat = simulate(&b, Order::Natural, &cfg);
+        let reo = simulate(&b, Order::ByTcbDesc, &cfg);
+
+        println!("\nFigure 7 — {name} on {num_sms} simulated SMs");
+        let mut t = Table::new(&[
+            "schedule", "makespan", "balance", "tail-overhead", "min SM",
+            "max SM",
+        ]);
+        for (label, r) in [("natural", &nat), ("reordered", &reo)] {
+            let min = r.active.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = r.active.iter().cloned().fold(0.0, f64::max);
+            t.row(vec![
+                label.to_string(),
+                report::f(r.makespan, 0),
+                report::f(r.balance(), 3),
+                report::f(r.tail_overhead(), 3),
+                report::f(min, 0),
+                report::f(max, 0),
+            ]);
+        }
+        t.print();
+        println!("speedup from reordering: {:.3}x", nat.makespan / reo.makespan);
+        render_histogram("natural  ", &nat.active, nat.makespan);
+        render_histogram("reordered", &reo.active, nat.makespan);
+
+        results.push(obj(vec![
+            ("dataset", s(&d.name.to_string())),
+            ("num_sms", num(num_sms as f64)),
+            ("makespan_natural", num(nat.makespan)),
+            ("makespan_reordered", num(reo.makespan)),
+            ("balance_natural", num(nat.balance())),
+            ("balance_reordered", num(reo.balance())),
+            (
+                "active_natural",
+                Json::Arr(nat.active.iter().map(|&a| num(a)).collect()),
+            ),
+            (
+                "active_reordered",
+                Json::Arr(reo.active.iter().map(|&a| num(a)).collect()),
+            ),
+        ]));
+    }
+    Ok(arr(results))
+}
+
+/// ASCII version of the paper's per-SM bar chart.
+fn render_histogram(label: &str, active: &[f64], scale_max: f64) {
+    const WIDTH: usize = 60;
+    println!("  {label} per-SM active time (each row = 8 SMs, ▏→ {scale_max:.0}):");
+    for chunk in active.chunks(8) {
+        let avg = chunk.iter().sum::<f64>() / chunk.len() as f64;
+        let w = ((avg / scale_max) * WIDTH as f64).round() as usize;
+        println!("    {}{}", "█".repeat(w.min(WIDTH)), " ".repeat(WIDTH - w.min(WIDTH)));
+    }
+}

@@ -1,0 +1,130 @@
+//! Figure 8: end-to-end Graph Transformer inference with the 3S kernel
+//! swapped between backends, sweeping the embedding dim d ∈ {64, 128, 256},
+//! plus the attention-time fraction (Fig. 8b/8d).
+
+use anyhow::Result;
+
+use crate::graph::datasets::Dataset;
+use crate::kernels::Backend;
+use crate::model::weights::random_features;
+use crate::model::{GraphTransformer, GtConfig};
+use crate::runtime::Runtime;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::stats;
+use crate::util::timing::BenchConfig;
+
+use super::report::{self, Table};
+
+/// The Fig. 8 backend series (DGL's role is taken by the scalar CSR path).
+pub fn series() -> Vec<Backend> {
+    vec![
+        Backend::Fused3S,
+        Backend::DfGnnLike,
+        Backend::UnfusedStable,
+        Backend::CpuCsr,
+    ]
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    rt: &Runtime,
+    suite: &[Dataset],
+    dims: &[usize],
+    backends: &[Backend],
+    n_blocks: usize,
+    cfg: &BenchConfig,
+) -> Result<Json> {
+    let mut results = Vec::new();
+    for d in dims {
+        println!("\nFigure 8 — GT inference, d={d}, {n_blocks} blocks:");
+        let mut headers: Vec<String> = vec!["dataset".into()];
+        headers.extend(backends.iter().map(|b| format!("{} (ms)", b.name())));
+        headers.extend(
+            backends
+                .iter()
+                .map(|b| format!("{} attn%", b.name())),
+        );
+        let mut table =
+            Table::new(&headers.iter().map(|h| h.as_str()).collect::<Vec<_>>());
+        let mut speedups: Vec<Vec<f64>> = vec![Vec::new(); backends.len()];
+        for ds in suite {
+            let h = random_features(0xF18, ds.graph.n, *d);
+            let mut times: Vec<Option<(f64, f64)>> = Vec::new();
+            for &b in backends {
+                let gt_cfg =
+                    GtConfig { d: *d, n_blocks, backend: b, seed: 0x5EED };
+                let r = (|| -> Result<(f64, f64)> {
+                    let model = GraphTransformer::prepare(rt, &ds.graph, gt_cfg)?;
+                    let (_, warm) = model.infer(rt, &h)?; // compile warmup
+                    let mut samples = Vec::new();
+                    let mut frac = warm.attention_fraction();
+                    for _ in 0..cfg.min_iters.max(2) {
+                        let (_, t) = model.infer(rt, &h)?;
+                        samples.push(t.total_s);
+                        frac = t.attention_fraction();
+                    }
+                    Ok((stats::median(&samples) * 1e3, frac))
+                })();
+                match &r {
+                    Ok((ms, frac)) => eprintln!(
+                        "  [fig8 d={d}] {} / {}: {ms:.1} ms (attn {:.0}%)",
+                        ds.name,
+                        b.name(),
+                        frac * 100.0
+                    ),
+                    Err(e) => eprintln!(
+                        "  [fig8 d={d}] {} / {}: FAIL ({e:#})",
+                        ds.name,
+                        b.name()
+                    ),
+                }
+                times.push(r.ok());
+            }
+            let fused_ms = times[0].map(|t| t.0);
+            let mut row = vec![ds.name.to_string()];
+            for t in &times {
+                row.push(
+                    t.map(|(ms, _)| report::f(ms, 1))
+                        .unwrap_or_else(|| "FAIL".into()),
+                );
+            }
+            for t in &times {
+                row.push(
+                    t.map(|(_, f)| format!("{:.0}%", f * 100.0))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            table.row(row);
+            for (i, t) in times.iter().enumerate() {
+                if let (Some((ms, _)), Some(f)) = (t, fused_ms) {
+                    speedups[i].push(ms / f);
+                }
+            }
+            for (bi, t) in times.iter().enumerate() {
+                results.push(obj(vec![
+                    ("figure", s("fig8")),
+                    ("dataset", s(ds.name)),
+                    ("d", num(*d as f64)),
+                    ("backend", s(backends[bi].name())),
+                    (
+                        "median_ms",
+                        t.map(|(ms, _)| num(ms)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "attention_fraction",
+                        t.map(|(_, f)| num(f)).unwrap_or(Json::Null),
+                    ),
+                ]));
+            }
+        }
+        table.print();
+        print!("geomean speedup of fused3s (d={d}):");
+        for (i, &b) in backends.iter().enumerate() {
+            if b != Backend::Fused3S && !speedups[i].is_empty() {
+                print!("  {:.2}x vs {}", stats::geomean(&speedups[i]), b.name());
+            }
+        }
+        println!();
+    }
+    Ok(arr(results))
+}

@@ -1,0 +1,25 @@
+//! Experiment harness: one regenerator per table/figure of the paper's
+//! evaluation (§4).  Each submodule prints the same rows/series the paper
+//! reports and returns structured results for the JSON reports.
+//!
+//! | paper artifact | module | `repro` subcommand |
+//! |---|---|---|
+//! | Table 3 (format footprints)        | [`table3`]    | `table3` |
+//! | Table 6 (dataset compaction stats) | [`table6`]    | `table6` |
+//! | Table 7 (TCB/RW deciles)           | [`table7`]    | `table7` |
+//! | Fig. 5 (3S kernel, single graphs)  | [`fig5`]      | `fig5` |
+//! | Fig. 6 (3S kernel, batched graphs) | [`fig5`]      | `fig6` |
+//! | Fig. 7 (SM active time ± reorder)  | [`fig7`]      | `fig7` |
+//! | Fig. 8 (end-to-end GT inference)   | [`fig8`]      | `fig8` |
+//! | §4.3 ablations                     | [`ablations`] | `ablate-*` |
+//! | §3.5 stability                     | [`stability`] | `stability` |
+
+pub mod ablations;
+pub mod fig5;
+pub mod fig7;
+pub mod fig8;
+pub mod report;
+pub mod stability;
+pub mod table3;
+pub mod table6;
+pub mod table7;

@@ -1,0 +1,171 @@
+//! Graph batching — the LRGB / OGB small-graph workload (paper §4.1, Fig. 6).
+//!
+//! Graph-property-prediction datasets contain thousands of small graphs
+//! (molecules, ASTs, peptides: ~20–500 nodes).  Frameworks batch them into
+//! one block-diagonal adjacency so a single kernel launch covers the whole
+//! batch; the resulting sparsity pattern — many disconnected components with
+//! tight locality — is what Fig. 6 measures.
+
+use crate::util::prng::Rng;
+
+use super::csr::CsrGraph;
+
+/// Block-diagonal concatenation of many graphs.  Returns the batched graph
+/// plus each component's node offset (the last entry is the total).
+pub fn batch_graphs(graphs: &[CsrGraph]) -> (CsrGraph, Vec<u32>) {
+    let total: usize = graphs.iter().map(|g| g.n).sum();
+    let mut offsets = Vec::with_capacity(graphs.len() + 1);
+    let mut edges = Vec::with_capacity(graphs.iter().map(|g| g.nnz()).sum());
+    let mut base = 0u32;
+    for g in graphs {
+        offsets.push(base);
+        for u in 0..g.n {
+            for &v in g.row(u) {
+                edges.push((base + u as u32, base + v));
+            }
+        }
+        base += g.n as u32;
+    }
+    offsets.push(base);
+    (
+        CsrGraph::from_edges(total, &edges).expect("offsets in range"),
+        offsets,
+    )
+}
+
+/// A random "molecule-like" graph: a spanning tree plus a few ring-closing
+/// edges, degree mostly 1–4 (the OGB molhiv regime).
+pub fn random_molecule(n: usize, rng: &mut Rng) -> CsrGraph {
+    assert!(n >= 2);
+    let mut edges = Vec::with_capacity(2 * (n + n / 6));
+    // Random tree: attach node i to a uniform previous node with locality
+    // bias (chains with branches, like molecular backbones).
+    for i in 1..n {
+        let lo = i.saturating_sub(6);
+        let p = rng.range(lo, i);
+        edges.push((i as u32, p as u32));
+        edges.push((p as u32, i as u32));
+    }
+    // Ring closures.
+    for _ in 0..n / 6 {
+        let a = rng.below(n);
+        let b = rng.below(n);
+        if a != b {
+            edges.push((a as u32, b as u32));
+            edges.push((b as u32, a as u32));
+        }
+    }
+    CsrGraph::from_edges(n, &edges).expect("in range")
+}
+
+/// A "peptide-like" graph (LRGB regime): a long backbone chain with short
+/// side branches — larger and more path-like than molecules.
+pub fn random_peptide(n: usize, rng: &mut Rng) -> CsrGraph {
+    assert!(n >= 4);
+    let backbone = (n * 3) / 4;
+    let mut edges = Vec::with_capacity(2 * n);
+    for i in 1..backbone {
+        edges.push((i as u32, (i - 1) as u32));
+        edges.push(((i - 1) as u32, i as u32));
+    }
+    for i in backbone..n {
+        let anchor = rng.below(backbone);
+        edges.push((i as u32, anchor as u32));
+        edges.push((anchor as u32, i as u32));
+    }
+    CsrGraph::from_edges(n, &edges).expect("in range")
+}
+
+/// Build a batched dataset of `count` small graphs with sizes uniform in
+/// `[min_n, max_n]`, using the given per-graph generator.
+pub fn batched_dataset(
+    count: usize,
+    min_n: usize,
+    max_n: usize,
+    seed: u64,
+    kind: BatchKind,
+) -> (CsrGraph, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let graphs: Vec<CsrGraph> = (0..count)
+        .map(|_| {
+            let n = rng.range(min_n, max_n + 1);
+            match kind {
+                BatchKind::Molecule => random_molecule(n, &mut rng),
+                BatchKind::Peptide => random_peptide(n, &mut rng),
+            }
+        })
+        .collect();
+    batch_graphs(&graphs)
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchKind {
+    Molecule,
+    Peptide,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_is_block_diagonal() {
+        let g1 = super::super::generators::ring(8);
+        let g2 = super::super::generators::star(5);
+        let (b, off) = batch_graphs(&[g1.clone(), g2.clone()]);
+        assert_eq!(b.n, 13);
+        assert_eq!(off, vec![0, 8, 13]);
+        assert_eq!(b.nnz(), g1.nnz() + g2.nnz());
+        // No cross-component edges.
+        for u in 0..8 {
+            for &v in b.row(u) {
+                assert!(v < 8);
+            }
+        }
+        for u in 8..13 {
+            for &v in b.row(u) {
+                assert!(v >= 8);
+            }
+        }
+        // Component structure preserved.
+        assert_eq!(b.degree(8), 4); // star hub
+    }
+
+    #[test]
+    fn molecule_connected_and_sparse() {
+        let mut rng = Rng::new(3);
+        let g = random_molecule(30, &mut rng);
+        assert_eq!(g.n, 30);
+        assert!(g.avg_degree() < 5.0);
+        assert!(g.is_symmetric());
+        // Tree edges guarantee connectivity: BFS reaches all nodes.
+        let mut seen = vec![false; g.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(u) = stack.pop() {
+            for &v in g.row(u) {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    stack.push(v as usize);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn peptide_is_path_like() {
+        let mut rng = Rng::new(4);
+        let g = random_peptide(100, &mut rng);
+        // Most nodes degree <= 3 (chain + occasional branch anchor).
+        let low = g.degrees().iter().filter(|&&d| d <= 3).count();
+        assert!(low as f64 > 0.85 * g.n as f64);
+    }
+
+    #[test]
+    fn batched_dataset_deterministic() {
+        let (a, _) = batched_dataset(32, 10, 40, 9, BatchKind::Molecule);
+        let (b, _) = batched_dataset(32, 10, 40, 9, BatchKind::Molecule);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,234 @@
+//! Compressed-sparse-row adjacency — the input format of the whole stack
+//! (matching what DGL/PyG hand to the paper's kernel).
+
+use anyhow::{bail, Result};
+
+/// A directed graph / sparse 0-1 matrix in CSR form.
+///
+/// `indptr.len() == n + 1`; row i's column indices are
+/// `indices[indptr[i]..indptr[i+1]]`, sorted ascending and deduplicated.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrGraph {
+    pub n: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Build from an edge list (duplicates and self-loops allowed; edges are
+    /// sorted and deduplicated).  Counting sort over rows: O(n + m).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Result<CsrGraph> {
+        for &(u, v) in edges {
+            if u as usize >= n || v as usize >= n {
+                bail!("edge ({u},{v}) out of range for n={n}");
+            }
+        }
+        let mut counts = vec![0u32; n + 1];
+        for &(u, _) in edges {
+            counts[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let mut indices = vec![0u32; edges.len()];
+        let mut cursor = counts.clone();
+        for &(u, v) in edges {
+            let c = &mut cursor[u as usize];
+            indices[*c as usize] = v;
+            *c += 1;
+        }
+        // Sort + dedup each row.
+        let mut indptr = vec![0u32; n + 1];
+        let mut w = 0usize;
+        let mut dedup = Vec::new();
+        for i in 0..n {
+            let (s, e) = (counts[i] as usize, counts[i + 1] as usize);
+            dedup.clear();
+            dedup.extend_from_slice(&indices[s..e]);
+            dedup.sort_unstable();
+            dedup.dedup();
+            // Write back compacted.
+            for (k, &v) in dedup.iter().enumerate() {
+                indices[w + k] = v;
+            }
+            w += dedup.len();
+            indptr[i + 1] = w as u32;
+        }
+        indices.truncate(w);
+        Ok(CsrGraph { n, indptr, indices })
+    }
+
+    /// Number of stored edges (nonzeros).
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Column indices of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.indices[self.indptr[i] as usize..self.indptr[i + 1] as usize]
+    }
+
+    /// Out-degree of row i.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        (self.indptr[i + 1] - self.indptr[i]) as usize
+    }
+
+    pub fn degrees(&self) -> Vec<usize> {
+        (0..self.n).map(|i| self.degree(i)).collect()
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n as f64
+        }
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    /// True if (u, v) is an edge (binary search within the row).
+    pub fn has_edge(&self, u: usize, v: u32) -> bool {
+        self.row(u).binary_search(&v).is_ok()
+    }
+
+    /// Add a self-loop on every node (the GNN convention; AGNN's Eq. 3
+    /// explicitly includes them).
+    pub fn with_self_loops(&self) -> CsrGraph {
+        let mut edges = Vec::with_capacity(self.nnz() + self.n);
+        for i in 0..self.n {
+            edges.push((i as u32, i as u32));
+            for &j in self.row(i) {
+                edges.push((i as u32, j));
+            }
+        }
+        CsrGraph::from_edges(self.n, &edges).expect("in-range edges")
+    }
+
+    /// Make the adjacency symmetric (A ∪ Aᵀ) — undirected-graph convention.
+    pub fn symmetrized(&self) -> CsrGraph {
+        let mut edges = Vec::with_capacity(2 * self.nnz());
+        for i in 0..self.n {
+            for &j in self.row(i) {
+                edges.push((i as u32, j));
+                edges.push((j, i as u32));
+            }
+        }
+        CsrGraph::from_edges(self.n, &edges).expect("in-range edges")
+    }
+
+    pub fn is_symmetric(&self) -> bool {
+        for i in 0..self.n {
+            for &j in self.row(i) {
+                if !self.has_edge(j as usize, i as u32) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Dense 0/1 mask (for oracle checks on small graphs only).
+    pub fn to_dense_mask(&self) -> Vec<i32> {
+        assert!(self.n <= 4096, "dense mask only for small graphs");
+        let mut m = vec![0i32; self.n * self.n];
+        for i in 0..self.n {
+            for &j in self.row(i) {
+                m[i * self.n + j as usize] = 1;
+            }
+        }
+        m
+    }
+
+    /// Relabel nodes: node i becomes perm[i].  `perm` must be a permutation.
+    pub fn permuted(&self, perm: &[u32]) -> CsrGraph {
+        assert_eq!(perm.len(), self.n);
+        let mut edges = Vec::with_capacity(self.nnz());
+        for i in 0..self.n {
+            for &j in self.row(i) {
+                edges.push((perm[i], perm[j as usize]));
+            }
+        }
+        CsrGraph::from_edges(self.n, &edges).expect("permutation in range")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CsrGraph {
+        // 0 -> 1,2 ; 1 -> 2 ; 2 -> 0 ; 3 isolated
+        CsrGraph::from_edges(4, &[(0, 1), (0, 2), (1, 2), (2, 0)]).unwrap()
+    }
+
+    #[test]
+    fn from_edges_basic() {
+        let g = tiny();
+        assert_eq!(g.n, 4);
+        assert_eq!(g.nnz(), 4);
+        assert_eq!(g.row(0), &[1, 2]);
+        assert_eq!(g.row(1), &[2]);
+        assert_eq!(g.row(3), &[] as &[u32]);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn dedup_and_sort() {
+        let g = CsrGraph::from_edges(3, &[(0, 2), (0, 1), (0, 2), (0, 1)]).unwrap();
+        assert_eq!(g.row(0), &[1, 2]);
+        assert_eq!(g.nnz(), 2);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        assert!(CsrGraph::from_edges(2, &[(0, 5)]).is_err());
+    }
+
+    #[test]
+    fn self_loops() {
+        let g = tiny().with_self_loops();
+        for i in 0..4 {
+            assert!(g.has_edge(i, i as u32));
+        }
+        assert_eq!(g.nnz(), 8);
+        // idempotent-ish: adding again doesn't duplicate
+        assert_eq!(g.with_self_loops().nnz(), 8);
+    }
+
+    #[test]
+    fn symmetrize() {
+        let g = tiny().symmetrized();
+        assert!(g.is_symmetric());
+        assert!(g.has_edge(1, 0));
+        assert!(g.has_edge(2, 1));
+    }
+
+    #[test]
+    fn dense_mask_roundtrip() {
+        let g = tiny();
+        let m = g.to_dense_mask();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(m[i * 4 + j] == 1, g.has_edge(i, j as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn permuted_preserves_structure() {
+        let g = tiny();
+        let perm = vec![2u32, 0, 3, 1];
+        let p = g.permuted(&perm);
+        assert_eq!(p.nnz(), g.nnz());
+        for i in 0..4 {
+            for &j in g.row(i) {
+                assert!(p.has_edge(perm[i] as usize, perm[j as usize]));
+            }
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Synthetic graph generators spanning the sparsity regimes of Table 6.
+//!
+//! * [`erdos_renyi`] — uniform degree, low CV (Pubmed/Cora-like).
+//! * [`barabasi_albert`] — power-law tail, high TCB/RW CV (Github/Blog-like).
+//! * [`rmat`] — skewed Kronecker-style communities (Reddit/Yelp-like).
+//! * [`grid2d`], [`star`], [`ring`] — structured corner cases for tests.
+//! * [`sbm`] — stochastic block model (clustered, batched-graph-like).
+//!
+//! All generators are deterministic in the seed and return graphs with
+//! sorted, deduplicated CSR rows.
+
+use crate::util::prng::Rng;
+
+use super::csr::CsrGraph;
+
+/// G(n, avg_deg): each node draws ~avg_deg uniform out-neighbours.
+pub fn erdos_renyi(n: usize, avg_deg: f64, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity((n as f64 * avg_deg) as usize);
+    for u in 0..n {
+        // Poisson-ish: deterministic floor + Bernoulli remainder.
+        let base = avg_deg.floor() as usize;
+        let extra = rng.coin(avg_deg - avg_deg.floor());
+        let deg = base + usize::from(extra);
+        for _ in 0..deg {
+            edges.push((u as u32, rng.below(n) as u32));
+        }
+    }
+    CsrGraph::from_edges(n, &edges).expect("generated edges in range")
+}
+
+/// Barabási–Albert preferential attachment: each new node attaches m edges
+/// to existing nodes with probability proportional to degree.  Produces the
+/// power-law degree distribution behind the paper's high-CV datasets.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> CsrGraph {
+    assert!(n > m && m >= 1);
+    let mut rng = Rng::new(seed);
+    // Repeated-nodes list trick: sampling uniformly from `targets` is
+    // degree-proportional sampling.
+    let mut targets: Vec<u32> = (0..m as u32).collect();
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(2 * n * m);
+    for u in m..n {
+        let mut chosen = Vec::with_capacity(m);
+        while chosen.len() < m {
+            let t = targets[rng.below(targets.len())];
+            if t != u as u32 && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            edges.push((u as u32, t));
+            edges.push((t, u as u32));
+            targets.push(t);
+            targets.push(u as u32);
+        }
+    }
+    CsrGraph::from_edges(n, &edges).expect("generated edges in range")
+}
+
+/// R-MAT recursive quadrant sampling (Graph500 style).  `scale` gives
+/// n = 2^scale nodes; `edge_factor` edges per node; (a, b, c) the quadrant
+/// probabilities (d = 1-a-b-c).  Defaults (0.57, 0.19, 0.19) give the
+/// classic skewed community structure.
+pub fn rmat(
+    scale: u32,
+    edge_factor: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+) -> CsrGraph {
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        edges.push((u as u32, v as u32));
+    }
+    CsrGraph::from_edges(n, &edges).expect("generated edges in range")
+}
+
+/// 2-D grid with 4-neighbour connectivity (rows*cols nodes).
+pub fn grid2d(rows: usize, cols: usize) -> CsrGraph {
+    let n = rows * cols;
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut edges = Vec::with_capacity(4 * n);
+    for r in 0..rows {
+        for c in 0..cols {
+            if r + 1 < rows {
+                edges.push((id(r, c), id(r + 1, c)));
+                edges.push((id(r + 1, c), id(r, c)));
+            }
+            if c + 1 < cols {
+                edges.push((id(r, c), id(r, c + 1)));
+                edges.push((id(r, c + 1), id(r, c)));
+            }
+        }
+    }
+    CsrGraph::from_edges(n, &edges).expect("generated edges in range")
+}
+
+/// Star graph: node 0 connected to all others (extreme imbalance case).
+pub fn star(n: usize) -> CsrGraph {
+    let mut edges = Vec::with_capacity(2 * (n - 1));
+    for v in 1..n as u32 {
+        edges.push((0, v));
+        edges.push((v, 0));
+    }
+    CsrGraph::from_edges(n, &edges).expect("generated edges in range")
+}
+
+/// Ring graph (every node degree 2) — perfectly uniform workload.
+pub fn ring(n: usize) -> CsrGraph {
+    let mut edges = Vec::with_capacity(2 * n);
+    for u in 0..n as u32 {
+        let v = (u + 1) % n as u32;
+        edges.push((u, v));
+        edges.push((v, u));
+    }
+    CsrGraph::from_edges(n, &edges).expect("generated edges in range")
+}
+
+/// Stochastic block model: `blocks` communities of `block_size` nodes;
+/// within-community edge prob `p_in`, across `p_out`.
+pub fn sbm(
+    blocks: usize,
+    block_size: usize,
+    p_in: f64,
+    p_out: f64,
+    seed: u64,
+) -> CsrGraph {
+    let n = blocks * block_size;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    // Expected-degree sampling to avoid O(n^2) for large sparse cases.
+    for u in 0..n {
+        let bu = u / block_size;
+        let deg_in = (p_in * block_size as f64).round() as usize;
+        let deg_out = (p_out * (n - block_size) as f64).round() as usize;
+        for _ in 0..deg_in {
+            let v = bu * block_size + rng.below(block_size);
+            edges.push((u as u32, v as u32));
+        }
+        for _ in 0..deg_out {
+            let mut v = rng.below(n);
+            if v / block_size == bu {
+                v = (v + block_size) % n;
+            }
+            edges.push((u as u32, v as u32));
+        }
+    }
+    CsrGraph::from_edges(n, &edges).expect("generated edges in range")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::stats;
+
+    use super::*;
+
+    #[test]
+    fn er_degree_close_to_target() {
+        let g = erdos_renyi(2000, 8.0, 1);
+        let avg = g.avg_degree();
+        assert!((7.0..9.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn er_deterministic() {
+        assert_eq!(erdos_renyi(500, 4.0, 7), erdos_renyi(500, 4.0, 7));
+        assert_ne!(erdos_renyi(500, 4.0, 7), erdos_renyi(500, 4.0, 8));
+    }
+
+    #[test]
+    fn ba_power_law_tail() {
+        let g = barabasi_albert(3000, 3, 2);
+        let degs: Vec<f64> = g.degrees().iter().map(|&d| d as f64).collect();
+        // Power-law: CV well above an ER graph of the same average degree.
+        let cv_ba = stats::cv(&degs);
+        let er = erdos_renyi(3000, g.avg_degree(), 2);
+        let cv_er =
+            stats::cv(&er.degrees().iter().map(|&d| d as f64).collect::<Vec<_>>());
+        assert!(
+            cv_ba > 2.0 * cv_er,
+            "BA CV {cv_ba:.2} should dwarf ER CV {cv_er:.2}"
+        );
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn rmat_skewed() {
+        let g = rmat(12, 8, 0.57, 0.19, 0.19, 3);
+        assert_eq!(g.n, 4096);
+        let max_d = g.max_degree() as f64;
+        assert!(
+            max_d > 8.0 * g.avg_degree(),
+            "rmat should have heavy hubs (max {max_d}, avg {})",
+            g.avg_degree()
+        );
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = grid2d(5, 7);
+        assert_eq!(g.n, 35);
+        // Interior nodes degree 4, corners 2.
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(3 * 7 + 3), 4);
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn star_and_ring() {
+        let s = star(100);
+        assert_eq!(s.degree(0), 99);
+        assert_eq!(s.degree(1), 1);
+        let r = ring(64);
+        assert!(r.degrees().iter().all(|&d| d == 2));
+    }
+
+    #[test]
+    fn sbm_clusters() {
+        let g = sbm(4, 64, 0.2, 0.001, 5);
+        assert_eq!(g.n, 256);
+        // Most edges within the block.
+        let mut within = 0usize;
+        for u in 0..g.n {
+            for &v in g.row(u) {
+                if u / 64 == v as usize / 64 {
+                    within += 1;
+                }
+            }
+        }
+        assert!(within as f64 > 0.7 * g.nnz() as f64);
+    }
+}

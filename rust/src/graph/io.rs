@@ -1,0 +1,171 @@
+//! Graph IO: whitespace edge-list text (SNAP convention) and a compact
+//! binary CSR format for caching preprocessed graphs.
+
+use std::fs;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::csr::CsrGraph;
+
+/// Read a SNAP-style edge list: one `u v` pair per line, `#` comments.
+/// Node ids may be sparse; they are compacted to 0..n preserving order.
+pub fn read_edge_list(path: &Path) -> Result<CsrGraph> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_edge_list(&text)
+}
+
+pub fn parse_edge_list(text: &str) -> Result<CsrGraph> {
+    let mut raw_edges: Vec<(u64, u64)> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => bail!("line {}: expected 'u v'", lineno + 1),
+        };
+        let u: u64 = u.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let v: u64 = v.parse().with_context(|| format!("line {}", lineno + 1))?;
+        raw_edges.push((u, v));
+    }
+    // Compact ids.
+    let mut ids: Vec<u64> = raw_edges
+        .iter()
+        .flat_map(|&(u, v)| [u, v])
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    let lookup = |x: u64| ids.binary_search(&x).unwrap() as u32;
+    let edges: Vec<(u32, u32)> =
+        raw_edges.iter().map(|&(u, v)| (lookup(u), lookup(v))).collect();
+    CsrGraph::from_edges(ids.len(), &edges)
+}
+
+/// Write an edge list.
+pub fn write_edge_list(g: &CsrGraph, path: &Path) -> Result<()> {
+    let f = fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# fused3s edge list: n={} nnz={}", g.n, g.nnz())?;
+    for u in 0..g.n {
+        for &v in g.row(u) {
+            writeln!(w, "{u} {v}")?;
+        }
+    }
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"F3SCSR01";
+
+/// Write the compact binary CSR (magic, n, nnz, indptr, indices; all LE u32/u64).
+pub fn write_binary(g: &CsrGraph, path: &Path) -> Result<()> {
+    let mut buf =
+        Vec::with_capacity(24 + 4 * (g.indptr.len() + g.indices.len()));
+    buf.extend_from_slice(BIN_MAGIC);
+    buf.extend_from_slice(&(g.n as u64).to_le_bytes());
+    buf.extend_from_slice(&(g.nnz() as u64).to_le_bytes());
+    for &x in &g.indptr {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    for &x in &g.indices {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fs::write(path, buf)?;
+    Ok(())
+}
+
+/// Read the compact binary CSR.
+pub fn read_binary(path: &Path) -> Result<CsrGraph> {
+    let buf = fs::read(path)?;
+    if buf.len() < 24 || &buf[..8] != BIN_MAGIC {
+        bail!("{}: not a fused3s binary graph", path.display());
+    }
+    let n = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    let nnz = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+    let need = 24 + 4 * (n + 1 + nnz);
+    if buf.len() != need {
+        bail!("truncated graph file: {} != {}", buf.len(), need);
+    }
+    let mut off = 24;
+    let mut read_u32s = |count: usize| {
+        let mut v = Vec::with_capacity(count);
+        for _ in 0..count {
+            v.push(u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        v
+    };
+    let indptr = read_u32s(n + 1);
+    let indices = read_u32s(nnz);
+    if indptr[n] as usize != nnz {
+        bail!("inconsistent indptr");
+    }
+    Ok(CsrGraph { n, indptr, indices })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let g = parse_edge_list("# comment\n0 1\n1 2\n2 0\n").unwrap();
+        assert_eq!(g.n, 3);
+        assert_eq!(g.nnz(), 3);
+        assert!(g.has_edge(1, 2));
+    }
+
+    #[test]
+    fn parse_compacts_sparse_ids() {
+        let g = parse_edge_list("100 5\n5 2000\n").unwrap();
+        assert_eq!(g.n, 3); // ids {5, 100, 2000} -> {0, 1, 2}
+        assert!(g.has_edge(1, 0)); // 100 -> 5
+        assert!(g.has_edge(0, 2)); // 5 -> 2000
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines() {
+        assert!(parse_edge_list("0\n").is_err());
+        assert!(parse_edge_list("a b\n").is_err());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let g = crate::graph::generators::erdos_renyi(64, 3.0, 5);
+        let dir = std::env::temp_dir().join("f3s_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p).unwrap();
+        // Ids compact identically when all nodes present; isolated nodes are
+        // dropped by the text format, so compare edges via containment.
+        for u in 0..g2.n {
+            assert!(g2.degree(u) > 0 || g.degree(u) > 0);
+        }
+        assert_eq!(g2.nnz(), g.nnz());
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let g = crate::graph::generators::barabasi_albert(200, 3, 6);
+        let dir = std::env::temp_dir().join("f3s_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let dir = std::env::temp_dir().join("f3s_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"not a graph").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Graph substrate: CSR storage, synthetic generators, batching, datasets.
+//!
+//! The paper evaluates on 15 real-world graphs (Table 6) plus batched
+//! small-graph benchmarks (LRGB / OGB).  Those datasets are not available
+//! offline, so [`datasets`] provides a *calibrated synthetic suite*: for each
+//! paper dataset we generate a graph whose post-compaction sparsity metrics
+//! (TCB/RW, nnz/TCB and their CVs) land in the same regime — uniform-degree
+//! graphs where the paper's are uniform, power-law where the paper's are
+//! power-law.  See DESIGN.md §1 substitution 2.
+
+pub mod batch;
+pub mod csr;
+pub mod datasets;
+pub mod generators;
+pub mod io;
+
+pub use csr::CsrGraph;

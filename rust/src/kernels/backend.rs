@@ -1,0 +1,152 @@
+//! Backend enumeration + unified driver facade — how the experiment harness
+//! instantiates the Figure-5/6/8 comparison series by name.
+
+use anyhow::Result;
+
+use crate::bsb::reorder::Order;
+use crate::graph::CsrGraph;
+use crate::runtime::{Manifest, Runtime};
+
+use super::cpu_csr;
+use super::dense::DenseDriver;
+use super::fused::{FusedDriver, FusedOpts};
+use super::unfused::UnfusedDriver;
+use super::AttentionProblem;
+
+/// The comparison series (paper Figures 5/6/8 legends → our analogs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Fused3S (ours): bf16, compacted, reordered.
+    Fused3S,
+    /// F3S_splitC without reordering (ablation stage 1).
+    Fused3SNoReorder,
+    /// Split-row warp partition (ablation).
+    Fused3SSplitR,
+    /// DF-GNN analog: fused but fp32 end-to-end (DF-GNN runs CUDA cores in
+    /// fp32; it processes each nonzero once, so it does NOT pay the
+    /// no-compaction block penalty — that lives in `ablate-compaction`).
+    DfGnnLike,
+    /// FlashSparse analog, naive softmax.
+    UnfusedNaive,
+    /// FlashSparse analog, stable softmax.
+    UnfusedStable,
+    /// Dense framework fallback (small graphs only).
+    Dense,
+    /// PyG/DGL analog: scalar CSR on CPU.
+    CpuCsr,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Fused3S => "fused3s",
+            Backend::Fused3SNoReorder => "fused3s_noreorder",
+            Backend::Fused3SSplitR => "fused3s_splitr",
+            Backend::DfGnnLike => "dfgnn_like",
+            Backend::UnfusedNaive => "unfused_naive",
+            Backend::UnfusedStable => "unfused_stable",
+            Backend::Dense => "dense",
+            Backend::CpuCsr => "cpu_csr",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "fused3s" => Backend::Fused3S,
+            "fused3s_noreorder" => Backend::Fused3SNoReorder,
+            "fused3s_splitr" => Backend::Fused3SSplitR,
+            "dfgnn_like" => Backend::DfGnnLike,
+            "unfused_naive" => Backend::UnfusedNaive,
+            "unfused_stable" => Backend::UnfusedStable,
+            "dense" => Backend::Dense,
+            "cpu_csr" => Backend::CpuCsr,
+            _ => anyhow::bail!("unknown backend '{s}'"),
+        })
+    }
+
+    /// The Figure-5/6 kernel comparison set.
+    pub fn kernel_series() -> Vec<Backend> {
+        vec![
+            Backend::Fused3S,
+            Backend::DfGnnLike,
+            Backend::UnfusedNaive,
+            Backend::UnfusedStable,
+            Backend::CpuCsr,
+        ]
+    }
+}
+
+/// A prepared (graph-specialised) driver for any backend.
+pub enum Driver {
+    Fused(FusedDriver),
+    Unfused(UnfusedDriver),
+    Dense(DenseDriver),
+    CpuCsr { graph: CsrGraph, threads: usize },
+}
+
+impl Driver {
+    /// Preprocess `g` for `backend` (the paper's per-graph preprocessing).
+    pub fn prepare(rt: &Runtime, g: &CsrGraph, backend: Backend) -> Result<Driver> {
+        Self::prepare_with(rt.manifest(), g, backend)
+    }
+
+    /// Preprocess without a live PJRT runtime (used by the coordinator's
+    /// worker pool, which only needs the manifest's bucket configuration).
+    pub fn prepare_with(
+        man: &Manifest,
+        g: &CsrGraph,
+        backend: Backend,
+    ) -> Result<Driver> {
+        Ok(match backend {
+            Backend::Fused3S => Driver::Fused(FusedDriver::new(
+                man,
+                g,
+                FusedOpts::default(),
+            )?),
+            Backend::Fused3SNoReorder => Driver::Fused(FusedDriver::new(
+                man,
+                g,
+                FusedOpts { order: Order::Natural, ..FusedOpts::default() },
+            )?),
+            Backend::Fused3SSplitR => Driver::Fused(FusedDriver::new(
+                man,
+                g,
+                FusedOpts { variant: "splitr", ..FusedOpts::default() },
+            )?),
+            Backend::DfGnnLike => Driver::Fused(FusedDriver::new(
+                man,
+                g,
+                FusedOpts { precision: "f32", ..FusedOpts::default() },
+            )?),
+            Backend::UnfusedNaive => {
+                Driver::Unfused(UnfusedDriver::new(man, g, false, Order::ByTcbDesc)?)
+            }
+            Backend::UnfusedStable => {
+                Driver::Unfused(UnfusedDriver::new(man, g, true, Order::ByTcbDesc)?)
+            }
+            Backend::Dense => Driver::Dense(DenseDriver::new(man, g)?),
+            Backend::CpuCsr => Driver::CpuCsr { graph: g.clone(), threads: 1 },
+        })
+    }
+
+    /// Execute the 3S computation.
+    pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
+        match self {
+            Driver::Fused(d) => d.run(rt, x),
+            Driver::Unfused(d) => d.run(rt, x),
+            Driver::Dense(d) => d.run(rt, x),
+            Driver::CpuCsr { graph, threads } => Ok(cpu_csr::run(graph, x, *threads)),
+        }
+    }
+
+    /// Names of executables this driver dispatches (for warmup outside the
+    /// timed region).
+    pub fn executables(&self, d: usize) -> Vec<String> {
+        match self {
+            Driver::Fused(dr) => dr.executables(d),
+            Driver::Unfused(dr) => dr.executables(d),
+            Driver::Dense(dr) => dr.executables(d),
+            Driver::CpuCsr { .. } => vec![],
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Backward-pass driver — the paper's §6 extension at the system level.
+//!
+//! Runs the fused backward kernel (`fused3s_bwd_*` artifacts: dV/dP/dS/dQ/dK̂
+//! in one program, E recomputed in-kernel) over the same BSB bucketing as
+//! the forward driver, then **scatter-adds** the per-gathered-row dK̂/dV̂
+//! gradients back to dK/dV: a column appears in every row window that
+//! attends to it, so the host reduction mirrors the forward gather — the
+//! reverse of the paper's "SpMM and SDDMM in reverse order" observation at
+//! the memory-movement level.
+
+use anyhow::{bail, Context, Result};
+
+use crate::bsb::bucket::{self, Plan};
+use crate::bsb::builder::PAD_COL;
+use crate::bsb::reorder::Order;
+use crate::bsb::{self, Bsb};
+use crate::graph::CsrGraph;
+use crate::runtime::buffers::Arg;
+use crate::runtime::{Manifest, Runtime};
+use crate::{BITMAP_WORDS, TCB_C, TCB_R};
+
+use super::gather::{self, CallBuffers};
+use super::AttentionProblem;
+
+/// Buckets with compiled backward artifacts (aot.py: t ∈ {8, 32}).
+const BWD_BUCKETS: &[usize] = &[8, 32];
+
+/// Gradients of the 3S attention w.r.t. its inputs.
+pub struct Gradients {
+    pub dq: Vec<f32>,
+    pub dk: Vec<f32>,
+    pub dv: Vec<f32>,
+}
+
+pub struct BackwardDriver {
+    bsb: Bsb,
+    plan: Plan,
+    batch: usize,
+}
+
+impl BackwardDriver {
+    pub fn new(man: &Manifest, g: &CsrGraph) -> Result<BackwardDriver> {
+        let bsb = bsb::build(g);
+        let plan = bucket::plan(
+            &bsb,
+            BWD_BUCKETS,
+            man.rw_batch,
+            Order::ByTcbDesc,
+            man.chunk_t,
+        );
+        if let Some(c) = plan.chunked.first() {
+            bail!(
+                "row window {} has {} TCBs > backward bucket max {}: \
+                 chunked backward is future work (needs dS cross-chunk \
+                 reduction state)",
+                c.rw,
+                bsb.rw_tcbs(c.rw as usize),
+                BWD_BUCKETS.last().unwrap()
+            );
+        }
+        Ok(BackwardDriver { bsb, plan, batch: man.rw_batch })
+    }
+
+    /// Compute (dQ, dK, dV) for upstream gradients `d_out` (n × d).
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        x: &AttentionProblem,
+        d_out: &[f32],
+    ) -> Result<Gradients> {
+        if x.d != x.dv {
+            bail!("backward driver requires d == dv");
+        }
+        if d_out.len() != x.n * x.dv {
+            bail!("d_out: expected {} elements", x.n * x.dv);
+        }
+        let d = x.d;
+        let mut dq = vec![0.0f32; x.n * d];
+        let mut dk = vec![0.0f32; x.n * d];
+        let mut dv = vec![0.0f32; x.n * d];
+        let mut bufs = CallBuffers::default();
+        let mut do_buf: Vec<f32> = Vec::new();
+
+        for call in &self.plan.calls {
+            let t = call.t_bucket;
+            let name = format!("fused3s_bwd_t{t}_d{d}");
+            let exe = rt
+                .executable(&name)
+                .with_context(|| format!("backward artifact {name}"))?;
+            gather::gather_call(&mut bufs, &call.rws, t, &self.bsb, x, self.batch);
+            // Gather dO row-window blocks (same layout as Q, unscaled).
+            do_buf.clear();
+            do_buf.resize(self.batch * TCB_R * d, 0.0);
+            let xo = AttentionProblem { scale: 1.0, q: d_out, ..*x };
+            for (slot, &rw) in call.rws.iter().enumerate() {
+                gather::gather_q(&mut do_buf, slot, rw as usize, &xo);
+            }
+            let sq = [self.batch, TCB_R, d];
+            let skv = [self.batch, t * TCB_C, d];
+            let sbm = [self.batch, t, BITMAP_WORDS];
+            let outs = rt.run_exe_raw(
+                &exe,
+                &[
+                    Arg::F32(&bufs.q, &sq),
+                    Arg::F32(&bufs.k, &skv),
+                    Arg::F32(&bufs.v, &skv),
+                    Arg::I32(&bufs.bm, &sbm),
+                    Arg::F32(&do_buf, &sq),
+                ],
+            )?;
+            let (gq, gk, gv) = (outs[0].as_f32()?, outs[1].as_f32()?, outs[2].as_f32()?);
+
+            // dQ: one owner per row — plain scatter (note: the artifact bakes
+            // scale=1; the forward pre-scales Q by `scale`, so by the chain
+            // rule dQ_original = scale * dQ_prescaled).
+            for (slot, &rw) in call.rws.iter().enumerate() {
+                let base = slot * TCB_R * d;
+                for r in 0..TCB_R {
+                    let row = rw as usize * TCB_R + r;
+                    if row >= x.n {
+                        break;
+                    }
+                    for c in 0..d {
+                        dq[row * d + c] += x.scale * gq[base + r * d + c];
+                    }
+                }
+            }
+            // dK̂/dV̂: scatter-ADD per gathered column (columns repeat across
+            // row windows).  No extra scale on dK: the kernel saw the
+            // pre-scaled Q, so its dK̂ = dSᵀ·(scale·Q) already carries it.
+            for (slot, &rw) in call.rws.iter().enumerate() {
+                let rw = rw as usize;
+                let t_rw = self.bsb.rw_tcbs(rw);
+                for j in 0..t_rw {
+                    let cols = self.bsb.tcb_cols(rw, j);
+                    for (ci, &col) in cols.iter().enumerate() {
+                        if col == PAD_COL {
+                            continue;
+                        }
+                        let col = col as usize;
+                        let src = (slot * t * TCB_C + j * TCB_C + ci) * d;
+                        for c in 0..d {
+                            dk[col * d + c] += gk[src + c];
+                            dv[col * d + c] += gv[src + c];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Gradients { dq, dk, dv })
+    }
+}
+
+/// Exact host reference for the gradients (dense, f64 accumulation):
+/// analytic backward of `O = softmax(scale·QKᵀ ⊙ A) V` row by row.
+pub fn backward_reference(
+    g: &CsrGraph,
+    x: &AttentionProblem,
+    d_out: &[f32],
+) -> Gradients {
+    let (n, d) = (x.n, x.d);
+    let mut dq = vec![0.0f32; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    let mut dv = vec![0.0f32; n * d];
+    for i in 0..n {
+        let nbrs = g.row(i);
+        if nbrs.is_empty() {
+            continue;
+        }
+        let qi = &x.q[i * d..(i + 1) * d];
+        let doi = &d_out[i * d..(i + 1) * d];
+        // forward softmax weights
+        let mut s: Vec<f64> = nbrs
+            .iter()
+            .map(|&j| {
+                let kj = &x.k[j as usize * d..(j as usize + 1) * d];
+                qi.iter()
+                    .zip(kj)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum::<f64>()
+                    * x.scale as f64
+            })
+            .collect();
+        let m = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut l = 0.0;
+        for v in s.iter_mut() {
+            *v = (*v - m).exp();
+            l += *v;
+        }
+        let e: Vec<f64> = s.iter().map(|v| v / l).collect();
+        // dP_j = dO · V_j ; row = Σ_j dP_j E_j ; dS_j = E_j (dP_j − row)
+        let dp: Vec<f64> = nbrs
+            .iter()
+            .map(|&j| {
+                let vj = &x.v[j as usize * d..(j as usize + 1) * d];
+                doi.iter()
+                    .zip(vj)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum::<f64>()
+            })
+            .collect();
+        let row: f64 = dp.iter().zip(&e).map(|(a, b)| a * b).sum();
+        for ((&j, &ej), &dpj) in nbrs.iter().zip(&e).zip(&dp) {
+            let ds = ej * (dpj - row) * x.scale as f64;
+            let kj = &x.k[j as usize * d..(j as usize + 1) * d];
+            for c in 0..d {
+                dq[i * d + c] += (ds * kj[c] as f64) as f32;
+                dk[j as usize * d + c] += (ds * qi[c] as f64) as f32;
+                dv[j as usize * d + c] += (ej * doi[c] as f64) as f32;
+            }
+        }
+    }
+    Gradients { dq, dk, dv }
+}

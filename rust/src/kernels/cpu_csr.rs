@@ -1,0 +1,156 @@
+//! Scalar CSR 3S on the CPU — the PyG/DGL framework-kernel analog: per-edge
+//! gather-scatter with no blocking, no tensor-core-shaped tiles, f32
+//! throughout.  Also doubles as an independent reference implementation for
+//! driver verification (it shares no code with the Pallas path).
+//!
+//! Multi-threaded variant splits rows across `std::thread::scope` workers
+//! (rayon is unavailable offline).
+
+use crate::graph::CsrGraph;
+
+use super::AttentionProblem;
+
+/// Run the full 3S over CSR.  `threads` = 1 gives the deterministic
+/// reference; more threads shard rows.
+pub fn run(g: &CsrGraph, x: &AttentionProblem, threads: usize) -> Vec<f32> {
+    assert_eq!(g.n, x.n);
+    let mut out = vec![0.0f32; x.n * x.dv];
+    if threads <= 1 {
+        run_rows(g, x, 0..x.n, &mut out);
+        return out;
+    }
+    let chunk = x.n.div_ceil(threads);
+    let mut slices: Vec<&mut [f32]> = out.chunks_mut(chunk * x.dv).collect();
+    std::thread::scope(|s| {
+        for (ti, slice) in slices.iter_mut().enumerate() {
+            let lo = ti * chunk;
+            let hi = ((ti + 1) * chunk).min(x.n);
+            let g = &g;
+            let x = &x;
+            s.spawn(move || {
+                let mut local = vec![0.0f32; slice.len()];
+                run_rows_offset(g, x, lo..hi, &mut local, lo);
+                slice.copy_from_slice(&local);
+            });
+        }
+    });
+    out
+}
+
+fn run_rows(
+    g: &CsrGraph,
+    x: &AttentionProblem,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    run_rows_offset(g, x, rows, out, 0)
+}
+
+/// Row loop with the output buffer starting at row `base`.
+fn run_rows_offset(
+    g: &CsrGraph,
+    x: &AttentionProblem,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+    base: usize,
+) {
+    let (d, dv) = (x.d, x.dv);
+    let mut scores: Vec<f32> = Vec::new();
+    for i in rows {
+        let nbrs = g.row(i);
+        if nbrs.is_empty() {
+            continue;
+        }
+        // SDDMM row: s_j = scale * q_i · k_j
+        scores.clear();
+        let qi = &x.q[i * d..(i + 1) * d];
+        let mut m = f32::NEG_INFINITY;
+        for &j in nbrs {
+            let kj = &x.k[j as usize * d..(j as usize + 1) * d];
+            let mut s = 0.0f32;
+            for c in 0..d {
+                s += qi[c] * kj[c];
+            }
+            s *= x.scale;
+            m = m.max(s);
+            scores.push(s);
+        }
+        // Stable softmax + SpMM accumulate.
+        let mut l = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        let orow = &mut out[(i - base) * dv..(i - base + 1) * dv];
+        for (e, &j) in scores.iter().zip(nbrs) {
+            let w = e / l;
+            let vj = &x.v[j as usize * dv..(j as usize + 1) * dv];
+            for c in 0..dv {
+                orow[c] += w * vj[c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::generators;
+    use crate::util::prng::Rng;
+
+    use super::super::reference;
+    use super::*;
+
+    fn mk_problem(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            rng.normal_vec(n * d, 1.0),
+            rng.normal_vec(n * d, 1.0),
+            rng.normal_vec(n * d, 1.0),
+        )
+    }
+
+    #[test]
+    fn matches_dense_reference() {
+        let g = generators::erdos_renyi(128, 5.0, 3).with_self_loops();
+        let (q, k, v) = mk_problem(128, 16, 4);
+        let x = AttentionProblem::new(128, 16, &q, &k, &v, 0.25);
+        let got = run(&g, &x, 1);
+        let want = reference::dense_attention_host(&g, &x);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn threads_match_single() {
+        let g = generators::barabasi_albert(500, 4, 5).with_self_loops();
+        let (q, k, v) = mk_problem(500, 8, 6);
+        let x = AttentionProblem::new(500, 8, &q, &k, &v, 1.0);
+        let a = run(&g, &x, 1);
+        let b = run(&g, &x, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn isolated_rows_zero() {
+        let g = CsrGraph::from_edges(32, &[(0, 1), (1, 0)]).unwrap();
+        let (q, k, v) = mk_problem(32, 4, 7);
+        let x = AttentionProblem::new(32, 4, &q, &k, &v, 1.0);
+        let out = run(&g, &x, 1);
+        assert!(out[2 * 4..].iter().all(|&z| z == 0.0));
+        assert!(out[..4].iter().any(|&z| z != 0.0));
+    }
+
+    #[test]
+    fn self_loop_only_copies_value() {
+        let g = CsrGraph::from_edges(16, &[(3, 3)]).unwrap();
+        let (q, k, v) = mk_problem(16, 4, 8);
+        let x = AttentionProblem::new(16, 4, &q, &k, &v, 1.0);
+        let out = run(&g, &x, 1);
+        for c in 0..4 {
+            assert!((out[3 * 4 + c] - v[3 * 4 + c]).abs() < 1e-6);
+        }
+    }
+
+    use crate::graph::CsrGraph;
+}

@@ -1,0 +1,106 @@
+//! Dense masked attention over the whole (padded) graph — the framework
+//! dense fallback of PyG-style implementations, and the executable-level
+//! oracle for small graphs.  O(N²d): only sensible for the smallest
+//! datasets, which is exactly the paper's observation about dense baselines.
+
+use anyhow::{bail, Result};
+
+use crate::graph::CsrGraph;
+use crate::runtime::{Manifest, Runtime, Tensor};
+
+use super::AttentionProblem;
+
+pub struct DenseDriver {
+    /// Padded size (a compiled dense_n bucket).
+    pub n_pad: usize,
+    mask: Vec<i32>,
+    n: usize,
+}
+
+/// Compiled dense sizes must match aot.py's DENSE_N.
+const DENSE_N: &[usize] = &[256, 1024];
+
+impl DenseDriver {
+    pub fn new(man: &Manifest, g: &CsrGraph) -> Result<DenseDriver> {
+        let Some(&n_pad) = DENSE_N.iter().find(|&&c| c >= g.n) else {
+            bail!(
+                "graph n={} exceeds the largest dense bucket ({}): dense \
+                 baseline infeasible (the paper's dense-fallback OOM case)",
+                g.n,
+                DENSE_N.last().unwrap()
+            );
+        };
+        // Touch the manifest so a missing artifact fails at prepare time.
+        let _ = man;
+        let mut mask = vec![0i32; n_pad * n_pad];
+        for u in 0..g.n {
+            for &v in g.row(u) {
+                mask[u * n_pad + v as usize] = 1;
+            }
+        }
+        Ok(DenseDriver { n_pad, mask, n: g.n })
+    }
+
+    pub fn executables(&self, d: usize) -> Vec<String> {
+        vec![Manifest::dense_name(self.n_pad, d)]
+    }
+
+    pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
+        if x.n != self.n {
+            bail!("problem n={} != prepared n={}", x.n, self.n);
+        }
+        let np = self.n_pad;
+        let pad = |src: &[f32], d: usize, scale: f32| {
+            let mut v = vec![0.0f32; np * d];
+            for row in 0..x.n {
+                let dst = &mut v[row * d..(row + 1) * d];
+                dst.copy_from_slice(&src[row * d..(row + 1) * d]);
+                if scale != 1.0 {
+                    for s in dst.iter_mut() {
+                        *s *= scale;
+                    }
+                }
+            }
+            v
+        };
+        let name = Manifest::dense_name(np, x.d);
+        let outs = rt.run(
+            &name,
+            &[
+                Tensor::f32(pad(x.q, x.d, x.scale), vec![np, x.d]),
+                Tensor::f32(pad(x.k, x.d, 1.0), vec![np, x.d]),
+                Tensor::f32(pad(x.v, x.dv, 1.0), vec![np, x.dv]),
+                Tensor::i32(self.mask.clone(), vec![np, np]),
+            ],
+        )?;
+        let o = outs[0].as_f32()?;
+        Ok(o[..x.n * x.dv].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use std::path::Path;
+
+    #[test]
+    fn oversized_graph_rejected() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(man) = Manifest::load(&dir) else { return };
+        let g = generators::erdos_renyi(5000, 2.0, 1);
+        assert!(DenseDriver::new(&man, &g).is_err());
+    }
+
+    #[test]
+    fn bucket_padding_choice() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(man) = Manifest::load(&dir) else { return };
+        let g = generators::erdos_renyi(100, 2.0, 1);
+        let d = DenseDriver::new(&man, &g).unwrap();
+        assert_eq!(d.n_pad, 256);
+        let g = generators::erdos_renyi(300, 2.0, 1);
+        let d = DenseDriver::new(&man, &g).unwrap();
+        assert_eq!(d.n_pad, 1024);
+    }
+}

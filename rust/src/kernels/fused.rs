@@ -1,0 +1,338 @@
+//! The Fused3S driver — the paper's system, end to end:
+//! BSB build → row-window reordering → bucketed batching → fused kernel
+//! dispatches → chunk merges → scatter.
+
+use anyhow::{bail, Context, Result};
+
+use crate::bsb::bucket::{self, Plan};
+use crate::bsb::reorder::Order;
+use crate::bsb::{self, Bsb};
+use crate::graph::CsrGraph;
+use crate::runtime::buffers::Arg;
+use crate::runtime::{Manifest, Runtime};
+use crate::{BITMAP_WORDS, TCB_C, TCB_R};
+
+use super::gather::{self, CallBuffers};
+use super::AttentionProblem;
+
+/// Driver configuration (the ablation axes of §4.3).
+#[derive(Clone, Copy, Debug)]
+pub struct FusedOpts {
+    /// "bf16" (the paper's mixed precision) or "f32" (DF-GNN analog).
+    pub precision: &'static str,
+    /// "splitc" (default) or "splitr" (warp-partition ablation).
+    pub variant: &'static str,
+    /// Column compaction on (BSB) or off (BCSR-like blocks).
+    pub compact: bool,
+    /// Row-window schedule.
+    pub order: Order,
+}
+
+impl Default for FusedOpts {
+    fn default() -> Self {
+        FusedOpts {
+            precision: "bf16",
+            variant: "splitc",
+            compact: true,
+            order: Order::ByTcbDesc,
+        }
+    }
+}
+
+/// Preprocessed state for one graph (the paper's "preprocessing, alongside
+/// sparse matrix compaction" — done once, reused across inference calls).
+pub struct FusedDriver {
+    pub bsb: Bsb,
+    pub plan: Plan,
+    pub opts: FusedOpts,
+    batch: usize,
+    chunk_t: usize,
+}
+
+impl FusedDriver {
+    pub fn new(man: &Manifest, g: &CsrGraph, opts: FusedOpts) -> Result<FusedDriver> {
+        let bsb = if opts.compact {
+            bsb::build(g)
+        } else {
+            bsb::build_bcsr_like(g)
+        };
+        let plan = bucket::plan(
+            &bsb,
+            &man.t_buckets,
+            man.rw_batch,
+            opts.order,
+            man.chunk_t,
+        );
+        Ok(FusedDriver {
+            bsb,
+            plan,
+            opts,
+            batch: man.rw_batch,
+            chunk_t: man.chunk_t,
+        })
+    }
+
+    /// Artifact names this driver will dispatch (for warmup).
+    pub fn executables(&self, d: usize) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .plan
+            .calls
+            .iter()
+            .map(|c| {
+                Manifest::fused3s_name(
+                    c.t_bucket,
+                    d,
+                    self.opts.precision,
+                    self.opts.variant,
+                )
+            })
+            .collect();
+        if !self.plan.chunked.is_empty() {
+            names.push(Manifest::partial_name(self.chunk_t, d));
+        }
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Run the fused 3S over the prepared graph.
+    pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
+        if x.d != x.dv {
+            bail!("fused driver requires d == dv (GAT path uses model::gat)");
+        }
+        let mut out = vec![0.0f32; x.n * x.dv];
+        let mut bufs = CallBuffers::default();
+
+        // Regular bucketed dispatches, in schedule order.
+        for call in &self.plan.calls {
+            let name = Manifest::fused3s_name(
+                call.t_bucket,
+                x.d,
+                self.opts.precision,
+                self.opts.variant,
+            );
+            let exe = rt.executable(&name).with_context(|| {
+                format!(
+                    "bucket t={} d={} ({}/{}): artifact missing",
+                    call.t_bucket, x.d, self.opts.precision, self.opts.variant
+                )
+            })?;
+            gather::gather_call(
+                &mut bufs, &call.rws, call.t_bucket, &self.bsb, x, self.batch,
+            );
+            let (sq, sk, sv, sbm) = shapes(self.batch, call.t_bucket, x.d, x.dv);
+            let outs = rt.run_exe_raw(
+                &exe,
+                &[
+                    Arg::F32(&bufs.q, &sq),
+                    Arg::F32(&bufs.k, &sk),
+                    Arg::F32(&bufs.v, &sv),
+                    Arg::I32(&bufs.bm, &sbm),
+                ],
+            )?;
+            let o = outs[0].as_f32()?;
+            gather::scatter_call(&mut out, o, &call.rws, x.n, x.dv);
+        }
+
+        // Oversize row windows: chunked through the partial executable.
+        if !self.plan.chunked.is_empty() {
+            self.run_chunked(rt, x, &mut out, &mut bufs)?;
+        }
+        Ok(out)
+    }
+
+    fn run_chunked(
+        &self,
+        rt: &Runtime,
+        x: &AttentionProblem,
+        out: &mut [f32],
+        bufs: &mut CallBuffers,
+    ) -> Result<()> {
+        let name = Manifest::partial_name(self.chunk_t, x.d);
+        let exe = rt
+            .executable(&name)
+            .with_context(|| format!("partial artifact {name} missing"))?;
+        // Work items: (rw, chunk index).
+        let items: Vec<(u32, usize)> = self
+            .plan
+            .chunked
+            .iter()
+            .flat_map(|c| (0..c.n_chunks).map(move |i| (c.rw, i)))
+            .collect();
+        // Per-RW merge state, keyed by rw id.
+        let mut merge: std::collections::HashMap<u32, MergeState> =
+            std::collections::HashMap::new();
+        for batch_items in items.chunks(self.batch) {
+            bufs.reset(self.batch, self.chunk_t, x.d, x.dv);
+            for (slot, &(rw, ci)) in batch_items.iter().enumerate() {
+                let rw_us = rw as usize;
+                gather::gather_q(&mut bufs.q, slot, rw_us, x);
+                let t = self.bsb.rw_tcbs(rw_us);
+                let t_lo = ci * self.chunk_t;
+                let t_hi = ((ci + 1) * self.chunk_t).min(t);
+                gather::gather_kv_range(
+                    bufs, slot, &self.bsb, rw_us, t_lo, t_hi, self.chunk_t, x,
+                );
+            }
+            let (sq, sk, sv, sbm) = shapes(self.batch, self.chunk_t, x.d, x.dv);
+            let outs = rt.run_exe_raw(
+                &exe,
+                &[
+                    Arg::F32(&bufs.q, &sq),
+                    Arg::F32(&bufs.k, &sk),
+                    Arg::F32(&bufs.v, &sv),
+                    Arg::I32(&bufs.bm, &sbm),
+                ],
+            )?;
+            let (o, m, l) = (outs[0].as_f32()?, outs[1].as_f32()?, outs[2].as_f32()?);
+            for (slot, &(rw, _)) in batch_items.iter().enumerate() {
+                let st = merge
+                    .entry(rw)
+                    .or_insert_with(|| MergeState::new(x.dv));
+                st.merge(
+                    &o[slot * TCB_R * x.dv..(slot + 1) * TCB_R * x.dv],
+                    &m[slot * TCB_R..(slot + 1) * TCB_R],
+                    &l[slot * TCB_R..(slot + 1) * TCB_R],
+                );
+            }
+        }
+        for (rw, st) in merge {
+            gather::scatter_slot(out, &st.o, 0, rw as usize, x.n, x.dv);
+        }
+        Ok(())
+    }
+}
+
+/// Input shapes of a fused3s-style call at (batch, t, d, dv).
+fn shapes(
+    b: usize,
+    t: usize,
+    d: usize,
+    dv: usize,
+) -> ([usize; 3], [usize; 3], [usize; 3], [usize; 3]) {
+    (
+        [b, TCB_R, d],
+        [b, t * TCB_C, d],
+        [b, t * TCB_C, dv],
+        [b, t, BITMAP_WORDS],
+    )
+}
+
+/// Online-softmax merge across row-window chunks (the host half of the
+/// flash-decoding-style combine; see `fused3s.merge_partials` in Python —
+/// `rust/tests/` pins the two against each other through the kernel).
+pub struct MergeState {
+    pub o: Vec<f32>,
+    pub m: [f32; TCB_R],
+    pub l: [f32; TCB_R],
+    dv: usize,
+}
+
+impl MergeState {
+    pub fn new(dv: usize) -> MergeState {
+        MergeState {
+            o: vec![0.0; TCB_R * dv],
+            m: [f32::NEG_INFINITY; TCB_R],
+            l: [0.0; TCB_R],
+            dv,
+        }
+    }
+
+    /// Fold one normalised chunk (o2, m2, l2) into the state.
+    pub fn merge(&mut self, o2: &[f32], m2: &[f32], l2: &[f32]) {
+        for r in 0..TCB_R {
+            let m_new = self.m[r].max(m2[r]);
+            if m_new == f32::NEG_INFINITY {
+                continue; // both sides empty
+            }
+            let w1 = self.l[r] * safe_exp(self.m[r] - m_new);
+            let w2 = l2[r] * safe_exp(m2[r] - m_new);
+            let denom = w1 + w2;
+            let row = &mut self.o[r * self.dv..(r + 1) * self.dv];
+            if denom > 0.0 {
+                let (a, b) = (w1 / denom, w2 / denom);
+                for (c, slot) in row.iter_mut().enumerate() {
+                    *slot = a * *slot + b * o2[r * self.dv + c];
+                }
+            }
+            self.m[r] = m_new;
+            self.l[r] = denom;
+        }
+    }
+}
+
+#[inline]
+fn safe_exp(x: f32) -> f32 {
+    // exp(-inf - -inf) would be NaN; callers guarantee x <= 0 or -inf.
+    if x == f32::NEG_INFINITY {
+        0.0
+    } else {
+        x.exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_two_chunks_matches_manual_softmax() {
+        // Row attends to 2 values in chunk A (logits 1, 2) and 1 value in
+        // chunk B (logit 3).  Chunk states mimic the kernel's outputs.
+        let dv = 1;
+        let mut st = MergeState::new(dv);
+        // Chunk A: m=2, l=e^{-1}+1, o = (e^{-1}*10 + 1*20)/(e^{-1}+1)
+        let la = (-1.0f32).exp() + 1.0;
+        let oa = ((-1.0f32).exp() * 10.0 + 20.0) / la;
+        st.merge(&[oa; 16], &[2.0; 16], &[la; 16]);
+        // Chunk B: m=3, l=1, o=30
+        st.merge(&[30.0; 16], &[3.0; 16], &[1.0; 16]);
+        // Exact softmax over logits (1,2,3) with values (10,20,30):
+        let z: f32 = (1f32).exp() + (2f32).exp() + (3f32).exp();
+        let expect =
+            ((1f32).exp() * 10.0 + (2f32).exp() * 20.0 + (3f32).exp() * 30.0) / z;
+        assert!((st.o[0] - expect).abs() < 1e-4, "{} vs {expect}", st.o[0]);
+    }
+
+    #[test]
+    fn merge_with_empty_side_is_identity() {
+        let dv = 2;
+        let mut st = MergeState::new(dv);
+        st.merge(
+            &[5.0; 32],
+            &[1.0; 16],
+            &[2.0; 16],
+        );
+        let before = st.o.clone();
+        // Empty chunk: m=-inf, l=0.
+        st.merge(&[0.0; 32], &[f32::NEG_INFINITY; 16], &[0.0; 16]);
+        assert_eq!(st.o, before);
+        // Merging into an empty state adopts the chunk.
+        let mut st2 = MergeState::new(dv);
+        st2.merge(&[0.0; 32], &[f32::NEG_INFINITY; 16], &[0.0; 16]);
+        assert!(st2.o.iter().all(|&v| v == 0.0));
+        st2.merge(&[7.0; 32], &[0.5; 16], &[1.5; 16]);
+        assert!((st2.o[0] - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_is_order_invariant() {
+        let dv = 1;
+        let chunks: Vec<([f32; 16], [f32; 16], [f32; 16])> = vec![
+            ([1.0; 16], [0.0; 16], [1.0; 16]),
+            ([2.0; 16], [5.0; 16], [0.5; 16]),
+            ([3.0; 16], [-2.0; 16], [2.0; 16]),
+        ];
+        let run = |order: &[usize]| {
+            let mut st = MergeState::new(dv);
+            for &i in order {
+                let (o, m, l) = &chunks[i];
+                st.merge(o, m, l);
+            }
+            st.o[0]
+        };
+        let a = run(&[0, 1, 2]);
+        let b = run(&[2, 0, 1]);
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}

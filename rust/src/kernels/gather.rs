@@ -1,0 +1,256 @@
+//! Gathering K̂/V̂ row stacks and scattering output blocks — the L3 "memory
+//! engine" of the reproduction (DESIGN.md §1: the paper's PTX-level
+//! HBM→register gather becomes an explicit host gather into contiguous
+//! per-call buffers that the kernel streams once).
+//!
+//! All functions write into caller-provided buffers so the hot path can
+//! reuse allocations across calls (see EXPERIMENTS.md §Perf).
+
+use crate::bsb::builder::{Bsb, PAD_COL};
+use crate::bsb::bitmap;
+use crate::{BITMAP_WORDS, TCB_C, TCB_R};
+
+use super::AttentionProblem;
+
+/// Reusable per-call staging buffers.
+#[derive(Default)]
+pub struct CallBuffers {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub bm: Vec<i32>,
+}
+
+impl CallBuffers {
+    /// Resize for a call of `batch` row windows at bucket `t`.
+    ///
+    /// Only the **bitmap** buffer is zeroed.  Stale f32 values left in
+    /// q/k/v slots from earlier calls are sound: every lane not covered by
+    /// a fresh gather has a zero bitmap bit, the kernel masks its score to
+    /// -inf before exp (p = 0 exactly), and `0 × finite = 0` in the SpMM —
+    /// so stale-but-finite values never reach the output.  (The gather only
+    /// ever writes finite feature data, preserving the invariant.)  Skipping
+    /// the q/k/v memset removes the dominant per-call host cost on large
+    /// buckets (up to ~16 MB/call at t=128; EXPERIMENTS.md §Perf).
+    pub fn reset(&mut self, batch: usize, t: usize, d: usize, dv: usize) {
+        resize_only(&mut self.q, batch * TCB_R * d);
+        resize_only(&mut self.k, batch * t * TCB_C * d);
+        resize_only(&mut self.v, batch * t * TCB_C * dv);
+        // Bitmaps must be exact: a stale 1-bit would unmask a stale lane.
+        self.bm.clear();
+        self.bm.resize(batch * t * BITMAP_WORDS, 0);
+    }
+}
+
+fn resize_only<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
+    if v.len() != len {
+        v.resize(len, T::default());
+    }
+}
+
+/// Fill one batch slot's Q block: rows `rw*16 .. rw*16+16` of `q`, scaled.
+/// Rows beyond n stay zero.
+pub fn gather_q(
+    buf: &mut [f32],
+    slot: usize,
+    rw: usize,
+    x: &AttentionProblem,
+) {
+    let d = x.d;
+    let base = slot * TCB_R * d;
+    for r in 0..TCB_R {
+        let row = rw * TCB_R + r;
+        if row >= x.n {
+            break;
+        }
+        let dst = &mut buf[base + r * d..base + (r + 1) * d];
+        let src = &x.q[row * d..(row + 1) * d];
+        if x.scale == 1.0 {
+            dst.copy_from_slice(src);
+        } else {
+            // Pre-scaling Q folds the score scale into the gather pass, so
+            // one artifact (scale=1) serves every head configuration.
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o = s * x.scale;
+            }
+        }
+    }
+}
+
+/// Fill one slot's K̂/V̂ stacks + bitmaps for TCBs `[t_lo, t_hi)` of `rw`,
+/// padded to `t_cap` TCBs.  `t_lo > 0` is the chunked-RW case.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_kv_range(
+    bufs: &mut CallBuffers,
+    slot: usize,
+    bsb: &Bsb,
+    rw: usize,
+    t_lo: usize,
+    t_hi: usize,
+    t_cap: usize,
+    x: &AttentionProblem,
+) {
+    let (d, dv) = (x.d, x.dv);
+    let k_base = slot * t_cap * TCB_C * d;
+    let v_base = slot * t_cap * TCB_C * dv;
+    let bm_base = slot * t_cap * BITMAP_WORDS;
+    for (jj, j) in (t_lo..t_hi).enumerate() {
+        let cols = bsb.tcb_cols(rw, j);
+        for (ci, &col) in cols.iter().enumerate() {
+            if col == PAD_COL {
+                continue;
+            }
+            let col = col as usize;
+            let krow = k_base + (jj * TCB_C + ci) * d;
+            bufs.k[krow..krow + d]
+                .copy_from_slice(&x.k[col * d..(col + 1) * d]);
+            let vrow = v_base + (jj * TCB_C + ci) * dv;
+            bufs.v[vrow..vrow + dv]
+                .copy_from_slice(&x.v[col * dv..(col + 1) * dv]);
+        }
+        let bm = bitmap::as_i32(bsb.tcb_bitmap(rw, j));
+        bufs.bm[bm_base + jj * BITMAP_WORDS..bm_base + (jj + 1) * BITMAP_WORDS]
+            .copy_from_slice(&bm);
+    }
+    // Slots jj in [t_hi-t_lo, t_cap) stay zero (zero bitmap = fully masked).
+}
+
+/// Gather a whole regular call (all slots).
+pub fn gather_call(
+    bufs: &mut CallBuffers,
+    rws: &[u32],
+    t_bucket: usize,
+    bsb: &Bsb,
+    x: &AttentionProblem,
+    batch: usize,
+) {
+    bufs.reset(batch, t_bucket, x.d, x.dv);
+    for (slot, &rw) in rws.iter().enumerate() {
+        let rw = rw as usize;
+        gather_q(&mut bufs.q, slot, rw, x);
+        let t = bsb.rw_tcbs(rw);
+        gather_kv_range(bufs, slot, bsb, rw, 0, t, t_bucket, x);
+    }
+}
+
+/// Scatter a call's output blocks back into the n×dv output matrix.
+pub fn scatter_call(out: &mut [f32], o: &[f32], rws: &[u32], n: usize, dv: usize) {
+    for (slot, &rw) in rws.iter().enumerate() {
+        scatter_slot(out, o, slot, rw as usize, n, dv);
+    }
+}
+
+/// Scatter one slot's 16×dv block to rows rw*16.. of `out`.
+pub fn scatter_slot(
+    out: &mut [f32],
+    o: &[f32],
+    slot: usize,
+    rw: usize,
+    n: usize,
+    dv: usize,
+) {
+    let base = slot * TCB_R * dv;
+    for r in 0..TCB_R {
+        let row = rw * TCB_R + r;
+        if row >= n {
+            break;
+        }
+        out[row * dv..(row + 1) * dv]
+            .copy_from_slice(&o[base + r * dv..base + (r + 1) * dv]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bsb::build;
+    use crate::graph::generators;
+
+    use super::*;
+
+    fn problem_data(n: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::prng::Rng::new(3);
+        (
+            rng.normal_vec(n * d, 1.0),
+            rng.normal_vec(n * d, 1.0),
+            rng.normal_vec(n * d, 1.0),
+        )
+    }
+
+    #[test]
+    fn gather_q_scales_and_pads() {
+        let n = 20; // last window ragged
+        let d = 4;
+        let (q, k, v) = problem_data(n, d);
+        let x = AttentionProblem { n, d, dv: d, q: &q, k: &k, v: &v, scale: 2.0 };
+        let mut buf = vec![0.0f32; 2 * TCB_R * d];
+        gather_q(&mut buf, 1, 1, &x); // rw 1 covers rows 16..20
+        for r in 0..4 {
+            for c in 0..d {
+                assert_eq!(
+                    buf[TCB_R * d + r * d + c],
+                    q[(16 + r) * d + c] * 2.0
+                );
+            }
+        }
+        // Rows 20.. padded with zeros.
+        assert!(buf[TCB_R * d + 4 * d..].iter().all(|&z| z == 0.0));
+        // Slot 0 untouched.
+        assert!(buf[..TCB_R * d].iter().all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn gather_kv_places_columns() {
+        let g = generators::erdos_renyi(64, 4.0, 9).with_self_loops();
+        let bsb = build(&g);
+        let d = 8;
+        let (q, k, v) = problem_data(64, d);
+        let x = AttentionProblem { n: 64, d, dv: d, q: &q, k: &k, v: &v, scale: 1.0 };
+        let t_cap = 8;
+        let mut bufs = CallBuffers::default();
+        bufs.reset(1, t_cap, d, d);
+        let t = bsb.rw_tcbs(0);
+        assert!(t > 0 && t <= t_cap);
+        gather_kv_range(&mut bufs, 0, &bsb, 0, 0, t, t_cap, &x);
+        // Verify each gathered K row matches its source column.
+        for j in 0..t {
+            let cols = bsb.tcb_cols(0, j);
+            for (ci, &col) in cols.iter().enumerate() {
+                let krow = &bufs.k[(j * TCB_C + ci) * d..(j * TCB_C + ci + 1) * d];
+                if col == PAD_COL {
+                    assert!(krow.iter().all(|&z| z == 0.0));
+                } else {
+                    assert_eq!(krow, &k[col as usize * d..(col as usize + 1) * d]);
+                }
+            }
+        }
+        // Padding TCBs beyond t: all zero including bitmaps.
+        assert!(bufs.bm[t * BITMAP_WORDS..].iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn scatter_respects_n_boundary() {
+        let n = 18;
+        let dv = 4;
+        let mut out = vec![0.0f32; n * dv];
+        let o: Vec<f32> = (0..TCB_R * dv).map(|i| i as f32).collect();
+        scatter_slot(&mut out, &o, 0, 1, n, dv); // rows 16, 17 only
+        assert_eq!(out[16 * dv], 0.0 * 1.0); // o[0]
+        assert_eq!(out[17 * dv + 3], o[dv + 3]);
+        // rows 0..16 untouched
+        assert!(out[..16 * dv].iter().all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_identity_window() {
+        // With one full window, gather_q + scatter of the same data is id.
+        let n = 16;
+        let d = 4;
+        let (q, k, v) = problem_data(n, d);
+        let x = AttentionProblem { n, d, dv: d, q: &q, k: &k, v: &v, scale: 1.0 };
+        let mut buf = vec![0.0f32; TCB_R * d];
+        gather_q(&mut buf, 0, 0, &x);
+        let mut out = vec![0.0f32; n * d];
+        scatter_slot(&mut out, &buf, 0, 0, n, d);
+        assert_eq!(out, q);
+    }
+}

@@ -1,0 +1,60 @@
+//! Host-side kernel drivers: each one runs the 3S pattern
+//! `O = softmax(QKᵀ·scale ⊙ A) V` end-to-end over a graph, through a
+//! different execution strategy.  These are the series of the paper's
+//! Figures 5/6:
+//!
+//! * [`fused::FusedDriver`] — **Fused3S** (the paper's system): BSB
+//!   compaction + bucketed batching + the fused Pallas kernel; bf16 mixed
+//!   precision; oversize row windows chunked and merged on host.
+//! * [`fused::FusedDriver`] with f32/no-compaction — the **DF-GNN** analog
+//!   (fused but fp32, generic block format).
+//! * [`unfused::UnfusedDriver`] — the **FlashSparse** analog: separate
+//!   SDDMM / softmax / SpMM executables with intermediates materialised in
+//!   host memory; naive- and stable-softmax variants.
+//! * [`dense::DenseDriver`] — whole-graph dense masked attention (the
+//!   framework dense fallback; also the graph-scale oracle).
+//! * [`cpu_csr`] — scalar CSR gather-scatter on the CPU (the PyG/DGL
+//!   framework-kernel analog), single- or multi-threaded.
+//! * [`reference`] — O(N²d) dense host reference used only for verification.
+
+pub mod backend;
+pub mod backward;
+pub mod cpu_csr;
+pub mod dense;
+pub mod fused;
+pub mod gather;
+pub mod reference;
+pub mod unfused;
+
+pub use backend::{Backend, Driver};
+
+/// A 3S attention problem over a graph's node features (row-major slices).
+#[derive(Clone, Copy, Debug)]
+pub struct AttentionProblem<'a> {
+    pub n: usize,
+    /// Q/K feature dim.
+    pub d: usize,
+    /// V / output feature dim (= d except for GAT-style rank-2 scores).
+    pub dv: usize,
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    /// Score scale (1/sqrt(d) for transformer heads, 1 for raw 3S).
+    pub scale: f32,
+}
+
+impl<'a> AttentionProblem<'a> {
+    pub fn new(
+        n: usize,
+        d: usize,
+        q: &'a [f32],
+        k: &'a [f32],
+        v: &'a [f32],
+        scale: f32,
+    ) -> Self {
+        assert_eq!(q.len(), n * d);
+        assert_eq!(k.len(), n * d);
+        assert_eq!(v.len(), n * d);
+        AttentionProblem { n, d, dv: d, q, k, v, scale }
+    }
+}

@@ -1,0 +1,100 @@
+//! Dense host reference for verification: the textbook
+//! `O = softmax(scale·QKᵀ ⊙ A) V` in plain f64-accumulated loops.
+//! O(N²·d) — tests only.
+
+use crate::graph::CsrGraph;
+
+use super::AttentionProblem;
+
+/// Compute the exact masked attention output (f32 output, f64 accumulate).
+pub fn dense_attention_host(g: &CsrGraph, x: &AttentionProblem) -> Vec<f32> {
+    let (n, d, dv) = (x.n, x.d, x.dv);
+    let mut out = vec![0.0f32; n * dv];
+    for i in 0..n {
+        let nbrs = g.row(i);
+        if nbrs.is_empty() {
+            continue;
+        }
+        let qi = &x.q[i * d..(i + 1) * d];
+        let mut s: Vec<f64> = nbrs
+            .iter()
+            .map(|&j| {
+                let kj = &x.k[j as usize * d..(j as usize + 1) * d];
+                qi.iter()
+                    .zip(kj)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum::<f64>()
+                    * x.scale as f64
+            })
+            .collect();
+        let m = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut l = 0.0f64;
+        for v in s.iter_mut() {
+            *v = (*v - m).exp();
+            l += *v;
+        }
+        for (e, &j) in s.iter().zip(nbrs) {
+            let w = (e / l) as f32;
+            let vj = &x.v[j as usize * dv..(j as usize + 1) * dv];
+            for c in 0..dv {
+                out[i * dv + c] += w * vj[c];
+            }
+        }
+    }
+    out
+}
+
+/// Max |a-b| between two equally-shaped outputs.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Relative L2 error ||a-b|| / ||b||.
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum::<f64>().sqrt();
+    if den == 0.0 {
+        num
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::generators;
+    use crate::util::prng::Rng;
+
+    use super::*;
+
+    #[test]
+    fn softmax_weights_sum_to_one_implicitly() {
+        // With V = all-ones, output rows with neighbours must be exactly 1.
+        let g = generators::erdos_renyi(64, 4.0, 1).with_self_loops();
+        let mut rng = Rng::new(2);
+        let d = 8;
+        let q = rng.normal_vec(64 * d, 1.0);
+        let k = rng.normal_vec(64 * d, 1.0);
+        let v = vec![1.0f32; 64 * d];
+        let x = AttentionProblem::new(64, d, &q, &k, &v, 1.0);
+        let out = dense_attention_host(&g, &x);
+        for i in 0..64 {
+            assert!((out[i * d] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn error_metrics() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert!(rel_l2(&[1.0, 0.0], &[1.0, 0.0]) == 0.0);
+        assert!(rel_l2(&[2.0], &[1.0]) == 1.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! The unfused 3S driver — the FlashSparse / framework execution model:
+//! three separate executables with S and E materialised in host memory
+//! between stages.  Same BSB layout and bucketing as the fused driver, so
+//! benchmarking fused-vs-unfused isolates *fusion* (the paper's headline
+//! comparison).
+//!
+//! Limitation reproduced on purpose: there is no partial/chunked path —
+//! materialising S for a mega-hub row window is exactly what OOMs
+//! FlashSparse/PyG on AmazonProducts in the paper (§4.2).  Oversize row
+//! windows therefore return [`UnfusedError::Oversize`], which the bench
+//! harness reports as the paper reports OOM (missing bars).
+
+use anyhow::{Context, Result};
+
+use crate::bsb::bucket::{self, Plan};
+use crate::bsb::reorder::Order;
+use crate::bsb::{self, Bsb};
+use crate::graph::CsrGraph;
+use crate::runtime::buffers::Arg;
+use crate::runtime::{Manifest, Runtime};
+use crate::{BITMAP_WORDS, TCB_C, TCB_R};
+
+use super::gather::{self, CallBuffers};
+use super::AttentionProblem;
+
+/// Why the unfused baseline refused to run (the "OOM analog").
+#[derive(Debug)]
+pub enum UnfusedError {
+    /// A row window's TCB count exceeds every compiled bucket: materialising
+    /// its score matrix is the FlashSparse OOM case.
+    Oversize { rw: u32, tcbs: usize },
+}
+
+impl std::fmt::Display for UnfusedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UnfusedError::Oversize { rw, tcbs } => write!(
+                f,
+                "row window {rw} has {tcbs} TCBs > max bucket: unfused \
+                 baseline would materialise an oversize S (paper: OOM)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for UnfusedError {}
+
+pub struct UnfusedDriver {
+    pub bsb: Bsb,
+    pub plan: Plan,
+    pub stable_softmax: bool,
+    batch: usize,
+}
+
+impl UnfusedDriver {
+    pub fn new(
+        man: &Manifest,
+        g: &CsrGraph,
+        stable_softmax: bool,
+        order: Order,
+    ) -> Result<UnfusedDriver> {
+        let bsb = bsb::build(g);
+        let plan =
+            bucket::plan(&bsb, &man.t_buckets, man.rw_batch, order, man.chunk_t);
+        if let Some(c) = plan.chunked.first() {
+            return Err(UnfusedError::Oversize {
+                rw: c.rw,
+                tcbs: bsb.rw_tcbs(c.rw as usize),
+            }
+            .into());
+        }
+        Ok(UnfusedDriver { bsb, plan, stable_softmax, batch: man.rw_batch })
+    }
+
+    pub fn executables(&self, d: usize) -> Vec<String> {
+        let mut names = Vec::new();
+        for c in &self.plan.calls {
+            names.push(Manifest::sddmm_name(c.t_bucket, d));
+            names.push(Manifest::softmax_name(c.t_bucket, self.stable_softmax));
+            names.push(Manifest::spmm_name(c.t_bucket, d));
+        }
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Run the three-stage pipeline.  Between stages the intermediates
+    /// S and E cross the host boundary — the data movement fusion removes.
+    pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; x.n * x.dv];
+        let mut bufs = CallBuffers::default();
+        for call in &self.plan.calls {
+            let t = call.t_bucket;
+            gather::gather_call(&mut bufs, &call.rws, t, &self.bsb, x, self.batch);
+
+            // Stage 1: SDDMM -> S materialised on host.
+            let sddmm = rt
+                .executable(&Manifest::sddmm_name(t, x.d))
+                .with_context(|| format!("sddmm t={t} d={}", x.d))?;
+            let sq = [self.batch, TCB_R, x.d];
+            let sk = [self.batch, t * TCB_C, x.d];
+            let sv = [self.batch, t * TCB_C, x.dv];
+            let sbm = [self.batch, t, BITMAP_WORDS];
+            let s = rt.run_exe_raw(
+                &sddmm,
+                &[
+                    Arg::F32(&bufs.q, &sq),
+                    Arg::F32(&bufs.k, &sk),
+                    Arg::I32(&bufs.bm, &sbm),
+                ],
+            )?;
+
+            // Stage 2: softmax -> E materialised on host.
+            let softmax = rt
+                .executable(&Manifest::softmax_name(t, self.stable_softmax))
+                .with_context(|| format!("softmax t={t}"))?;
+            let e = rt.run_exe(&softmax, &[s.into_iter().next().unwrap()])?;
+
+            // Stage 3: SpMM.
+            let spmm = rt
+                .executable(&Manifest::spmm_name(t, x.dv))
+                .with_context(|| format!("spmm t={t} d={}", x.dv))?;
+            let e0 = e.into_iter().next().unwrap();
+            let o = rt.run_exe_raw(
+                &spmm,
+                &[e0.as_arg(), Arg::F32(&bufs.v, &sv)],
+            )?;
+            gather::scatter_call(&mut out, o[0].as_f32()?, &call.rws, x.n, x.dv);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use std::path::Path;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn oversize_graph_rejected_like_oom() {
+        let Some(man) = manifest() else { return };
+        let g = generators::star(50_000); // hub RW: 6250 TCBs
+        let err = UnfusedDriver::new(&man, &g, true, Order::Natural)
+            .err()
+            .expect("must refuse");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("OOM"), "{msg}");
+    }
+
+    #[test]
+    fn normal_graph_accepted() {
+        let Some(man) = manifest() else { return };
+        let g = generators::erdos_renyi(256, 4.0, 1);
+        assert!(UnfusedDriver::new(&man, &g, true, Order::Natural).is_ok());
+    }
+}

@@ -1,0 +1,48 @@
+//! # Fused3S — fast sparse attention, reproduced as a three-layer stack
+//!
+//! This crate is the Layer-3 runtime of the reproduction of
+//! *Fused3S: Fast Sparse Attention on Tensor Cores* (Li &
+//! Chandramowlishwaran, ICS '25): everything that surrounds the fused
+//! SDDMM → online-softmax → SpMM kernel — the BSB sparse format, the
+//! bucketing/batching coordinator, the Graph-Transformer inference runtime,
+//! the baselines, the SM scheduling simulator, and the benchmark harness.
+//!
+//! The kernel itself is authored in Pallas (Python, `python/compile/`) and
+//! AOT-lowered to HLO-text artifacts at build time (`make artifacts`); this
+//! crate loads and executes those artifacts through the PJRT C API (the
+//! [`xla`] crate).  **Python never runs on the request path.**
+//!
+//! Module map (see DESIGN.md §2 for the full system inventory):
+//!
+//! * [`util`] — PRNG, JSON, timing/stats, CLI: the offline-environment
+//!   substitutes for rand/serde/criterion/clap.
+//! * [`graph`] — CSR graphs, synthetic generators, the dataset suite
+//!   calibrated to the paper's Table 6, and graph batching (LRGB/OGB analog).
+//! * [`bsb`] — the paper's Binary Sparse Block format (§3.1): row windows,
+//!   column compaction, 128-bit TCB bitmaps, row-window reordering,
+//!   TCB-count bucketing, and the Table-3 footprint models.
+//! * [`runtime`] — PJRT client + executable cache over the AOT manifest.
+//! * [`kernels`] — host-side drivers: fused (the paper's system), unfused
+//!   (FlashSparse analog), dense, and a scalar CSR CPU baseline (PyG analog).
+//! * [`coordinator`] — the serving layer: preprocessing pipeline, reordering
+//!   scheduler, batcher, request server, metrics.
+//! * [`model`] — Graph Transformer / GAT / AGNN inference runtimes.
+//! * [`simulator`] — the SM active-time scheduling simulator (Fig. 7).
+//! * [`experiments`] — regenerators for every table and figure in §4.
+
+pub mod bsb;
+pub mod coordinator;
+pub mod experiments;
+pub mod graph;
+pub mod kernels;
+pub mod model;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+
+/// TCB row count (the paper's r; fixed by the m16n8k16 MMA shape).
+pub const TCB_R: usize = 16;
+/// TCB column count (the paper's c).
+pub const TCB_C: usize = 8;
+/// u32 words per TCB bitmap (16*8 bits / 32).
+pub const BITMAP_WORDS: usize = (TCB_R * TCB_C) / 32;

@@ -1,0 +1,301 @@
+//! `repro` — the Fused3S reproduction CLI.
+//!
+//! One subcommand per paper table/figure plus serving/inference utilities:
+//!
+//! ```text
+//! repro table3 [--dataset NAME]
+//! repro table6 [--batched]
+//! repro table7 [--datasets a,b,c]
+//! repro fig5   [--datasets a,b,c] [--d 64] [--quick] [--backends x,y]
+//! repro fig6   [--datasets a,b,c] [--d 64] [--quick]
+//! repro fig7   [--datasets a,b]   [--sms 56]
+//! repro fig8   [--datasets a,b]   [--dims 64,128,256] [--blocks 10] [--quick]
+//! repro ablate-split|ablate-reorder|ablate-compaction|ablate-buckets
+//! repro stability
+//! repro datasets            # list the calibrated suite
+//! repro infer  --dataset X --d 64 --blocks 10 [--backend fused3s]
+//! repro serve  --requests 64 [--workers 2]   # serving-loop demo
+//! ```
+//!
+//! Results print as aligned tables and are mirrored to `results/*.json`.
+
+use anyhow::{bail, Result};
+
+use fused3s::experiments::{ablations, fig5, fig7, fig8, report, stability, table3, table6, table7};
+use fused3s::graph::datasets::{self, Dataset};
+use fused3s::kernels::Backend;
+use fused3s::runtime::Runtime;
+use fused3s::util::cli::Args;
+use fused3s::util::timing::BenchConfig;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_list(args: &Args, key: &str, default: &[&str]) -> Vec<String> {
+    args.get(key)
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_else(|| default.iter().map(|s| s.to_string()).collect())
+}
+
+fn bench_config(args: &Args) -> BenchConfig {
+    if args.bool("quick") {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    }
+}
+
+fn select_datasets(names: &[String], batched: bool) -> Result<Vec<Dataset>> {
+    if names.len() == 1 && names[0] == "all" {
+        Ok(if batched {
+            datasets::suite_batched()
+        } else {
+            datasets::suite_single()
+        })
+    } else {
+        names.iter().map(|n| datasets::by_name(n)).collect()
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        print_usage();
+        return Ok(());
+    };
+
+    match cmd {
+        "datasets" => {
+            println!("single-graph suite (Table 6 analogs):");
+            for d in datasets::suite_single() {
+                println!(
+                    "  {:<22} ~ {:<16} n={:<8} nnz={}",
+                    d.name,
+                    d.paper_name,
+                    d.graph.n,
+                    d.graph.nnz()
+                );
+            }
+            println!("batched suites (Fig. 6 analogs):");
+            for d in datasets::suite_batched() {
+                println!(
+                    "  {:<22} ~ {:<16} n={:<8} nnz={}",
+                    d.name,
+                    d.paper_name,
+                    d.graph.n,
+                    d.graph.nnz()
+                );
+            }
+        }
+        "table3" => {
+            let j = table3::run(args.get("dataset"))?;
+            let p = report::write_json("table3", &j)?;
+            println!("\nwrote {}", p.display());
+        }
+        "table6" => {
+            let j = table6::run(args.bool("batched"))?;
+            let p = report::write_json("table6", &j)?;
+            println!("\nwrote {}", p.display());
+        }
+        "table7" => {
+            let names = parse_list(&args, "datasets", table7::DEFAULT_DATASETS);
+            let j = table7::run(&names)?;
+            let p = report::write_json("table7", &j)?;
+            println!("\nwrote {}", p.display());
+        }
+        "fig5" | "fig6" => {
+            let batched = cmd == "fig6";
+            let names = parse_list(&args, "datasets", &["all"]);
+            let suite = select_datasets(&names, batched)?;
+            let d = args.usize_or("d", 64)?;
+            let backends = match args.get("backends") {
+                Some(list) => list
+                    .split(',')
+                    .map(Backend::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                None => Backend::kernel_series(),
+            };
+            let rt = Runtime::from_default_artifacts()?;
+            let j = fig5::run(&rt, &suite, &backends, d, &bench_config(&args), cmd)?;
+            let p = report::write_json(cmd, &j)?;
+            println!("\nwrote {}", p.display());
+        }
+        "fig7" => {
+            let names = parse_list(&args, "datasets", fig7::DEFAULT_DATASETS);
+            let sms = args.usize_or("sms", 56)?;
+            let j = fig7::run(&names, sms)?;
+            let p = report::write_json("fig7", &j)?;
+            println!("\nwrote {}", p.display());
+        }
+        "fig8" => {
+            let names = parse_list(
+                &args,
+                "datasets",
+                &["cora-sim", "pubmed-sim", "github-sim", "molhiv-sim"],
+            );
+            let suite: Vec<Dataset> =
+                names.iter().map(|n| datasets::by_name(n)).collect::<Result<_>>()?;
+            let dims: Vec<usize> = parse_list(&args, "dims", &["64", "128", "256"])
+                .iter()
+                .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad dim {s}")))
+                .collect::<Result<_>>()?;
+            let blocks = args.usize_or("blocks", 10)?;
+            let rt = Runtime::from_default_artifacts()?;
+            let j = fig8::run(
+                &rt,
+                &suite,
+                &dims,
+                &fig8::series(),
+                blocks,
+                &bench_config(&args),
+            )?;
+            let p = report::write_json("fig8", &j)?;
+            println!("\nwrote {}", p.display());
+        }
+        "ablate-split" => {
+            let names = parse_list(&args, "datasets", &["pubmed-sim", "github-sim"]);
+            let rt = Runtime::from_default_artifacts()?;
+            let j = ablations::split(&rt, &names, args.usize_or("d", 64)?, &bench_config(&args))?;
+            report::write_json("ablate_split", &j)?;
+        }
+        "ablate-reorder" => {
+            let names = parse_list(&args, "datasets", &["reddit-sim", "github-sim", "pubmed-sim"]);
+            let rt = Runtime::from_default_artifacts()?;
+            let j = ablations::reorder(&rt, &names, args.usize_or("d", 64)?, &bench_config(&args))?;
+            report::write_json("ablate_reorder", &j)?;
+        }
+        "ablate-compaction" => {
+            let names = parse_list(&args, "datasets", &["pubmed-sim", "github-sim"]);
+            let rt = Runtime::from_default_artifacts()?;
+            let j = ablations::compaction(&rt, &names, args.usize_or("d", 64)?, &bench_config(&args))?;
+            report::write_json("ablate_compaction", &j)?;
+        }
+        "ablate-buckets" => {
+            let names = parse_list(&args, "datasets", &["pubmed-sim", "github-sim", "reddit-sim"]);
+            let j = ablations::buckets(&names)?;
+            report::write_json("ablate_buckets", &j)?;
+        }
+        "stability" => {
+            let rt = Runtime::from_default_artifacts()?;
+            let j = stability::run(&rt)?;
+            report::write_json("stability", &j)?;
+        }
+        "infer" => {
+            infer(&args)?;
+        }
+        "serve" => {
+            serve(&args)?;
+        }
+        other => {
+            print_usage();
+            bail!("unknown subcommand '{other}'");
+        }
+    }
+    Ok(())
+}
+
+fn infer(args: &Args) -> Result<()> {
+    use fused3s::model::weights::random_features;
+    use fused3s::model::{GraphTransformer, GtConfig};
+    let name = args.get_or("dataset", "cora-sim");
+    let ds = datasets::by_name(&name)?;
+    let cfg = GtConfig {
+        d: args.usize_or("d", 64)?,
+        n_blocks: args.usize_or("blocks", 10)?,
+        backend: Backend::parse(&args.get_or("backend", "fused3s"))?,
+        seed: args.u64_or("seed", 0x5EED)?,
+    };
+    let rt = Runtime::from_default_artifacts()?;
+    println!(
+        "GT inference: {} (n={}, nnz={}), d={}, {} blocks, backend={}",
+        ds.name,
+        ds.graph.n,
+        ds.graph.nnz(),
+        cfg.d,
+        cfg.n_blocks,
+        cfg.backend.name()
+    );
+    let model = GraphTransformer::prepare(&rt, &ds.graph, cfg)?;
+    let h = random_features(1, ds.graph.n, cfg.d);
+    let (_, warm) = model.infer(&rt, &h)?;
+    println!("warmup (incl. executable compiles): {:.1} ms", warm.total_s * 1e3);
+    let (out, t) = model.infer(&rt, &h)?;
+    println!(
+        "inference: {:.1} ms total, {:.1} ms attention ({:.0}%), {:.1} ms dense",
+        t.total_s * 1e3,
+        t.attention_s * 1e3,
+        t.attention_fraction() * 100.0,
+        t.dense_s * 1e3
+    );
+    let norm: f32 = out.iter().map(|x| x * x).sum::<f32>().sqrt();
+    println!("output: {} values, L2 norm {norm:.2}", out.len());
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    use fused3s::coordinator::{AttnRequest, Coordinator, CoordinatorConfig};
+    use fused3s::util::prng::Rng;
+    use std::sync::mpsc::channel;
+
+    let requests = args.usize_or("requests", 32)?;
+    let workers = args.usize_or("workers", 2)?;
+    let d = args.usize_or("d", 64)?;
+    let coord = Coordinator::start(CoordinatorConfig {
+        preprocess_workers: workers,
+        ..CoordinatorConfig::default()
+    })?;
+    println!("coordinator up ({workers} preprocess workers); submitting {requests} requests");
+    let mut rng = Rng::new(0x5E12);
+    let (tx, rx) = channel();
+    for i in 0..requests {
+        let n = rng.range(64, 1024);
+        let deg = 2.0 + rng.f64() * 8.0;
+        let g = fused3s::graph::generators::erdos_renyi(n, deg, i as u64)
+            .with_self_loops();
+        let nd = g.n * d;
+        coord.submit(AttnRequest {
+            id: i as u64,
+            graph: g,
+            d,
+            q: rng.normal_vec(nd, 1.0),
+            k: rng.normal_vec(nd, 1.0),
+            v: rng.normal_vec(nd, 1.0),
+            scale: 1.0 / (d as f32).sqrt(),
+            backend: Backend::Fused3S,
+            reply: tx.clone(),
+        })?;
+    }
+    drop(tx);
+    let mut ok = 0;
+    while let Ok(resp) = rx.recv() {
+        if resp.result.is_ok() {
+            ok += 1;
+        }
+    }
+    println!("{ok}/{requests} succeeded");
+    println!("{}", coord.metrics().report());
+    let prep = coord.metrics().preprocess.snapshot();
+    let exec = coord.metrics().execute.snapshot();
+    println!(
+        "preprocess p50={:.2}ms  execute p50={:.2}ms",
+        prep.p50_s * 1e3,
+        exec.p50_s * 1e3
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "repro — Fused3S reproduction harness\n\
+         subcommands:\n  \
+         datasets | table3 | table6 | table7 | fig5 | fig6 | fig7 | fig8 |\n  \
+         ablate-split | ablate-reorder | ablate-compaction | ablate-buckets |\n  \
+         stability | infer | serve\n\
+         common flags: --datasets a,b,c  --d 64  --quick  --backends x,y"
+    );
+}

@@ -1,0 +1,217 @@
+//! Graph Attention Network attention (paper §2.1, Eq. 2) on the fused
+//! kernel.
+//!
+//! GAT's additive scores `e_ij = LeakyReLU(a_l·Wh_i + a_r·Wh_j)` are rank-2:
+//! with `Q_i = [a_l·Wh_i, 1]` and `K_j = [1, a_r·Wh_j]` (d = 2),
+//! `Q_i · K_j = a_l·Wh_i + a_r·Wh_j`.  The fused kernel applies LeakyReLU
+//! pre-softmax (baked into the `fused3s_gat_*` artifacts) and aggregates
+//! V = Wh at dv = 64 — so the *same* fused 3S machinery covers GAT, which is
+//! the paper's point about the 3S abstraction.
+
+use anyhow::{bail, Context, Result};
+
+use crate::bsb::bucket::{self, Plan};
+use crate::bsb::reorder::Order;
+use crate::bsb::{self, Bsb};
+use crate::graph::CsrGraph;
+use crate::kernels::gather::{self, CallBuffers};
+use crate::kernels::AttentionProblem;
+use crate::runtime::buffers::Arg;
+use crate::runtime::{Manifest, Runtime};
+use crate::{BITMAP_WORDS, TCB_C, TCB_R};
+
+/// GAT layer parameters.
+pub struct GatLayer {
+    /// Feature projection W: (d_in, d_out) with d_out = 64 (artifact dim).
+    pub w: Vec<f32>,
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Attention vectors a_l, a_r: (d_out,).
+    pub a_l: Vec<f32>,
+    pub a_r: Vec<f32>,
+}
+
+/// GAT buckets compiled by aot.py (GAT_T).
+const GAT_BUCKETS: &[usize] = &[4, 8, 16, 32];
+
+impl GatLayer {
+    pub fn generate(seed: u64, d_in: usize, d_out: usize) -> GatLayer {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let s = 1.0 / (d_in as f32).sqrt();
+        GatLayer {
+            w: rng.normal_vec(d_in * d_out, s),
+            d_in,
+            d_out,
+            a_l: rng.normal_vec(d_out, 1.0 / (d_out as f32).sqrt()),
+            a_r: rng.normal_vec(d_out, 1.0 / (d_out as f32).sqrt()),
+        }
+    }
+}
+
+/// Preprocessed GAT attention over one graph.
+pub struct GatAttention {
+    bsb: Bsb,
+    plan: Plan,
+    batch: usize,
+}
+
+impl GatAttention {
+    pub fn prepare(man: &Manifest, g: &CsrGraph) -> Result<GatAttention> {
+        let bsb = bsb::build(g);
+        let plan = bucket::plan(
+            &bsb,
+            GAT_BUCKETS,
+            man.rw_batch,
+            Order::ByTcbDesc,
+            man.chunk_t,
+        );
+        if let Some(c) = plan.chunked.first() {
+            bail!(
+                "row window {} has {} TCBs > GAT bucket max {}: graph too \
+                 dense for the compiled GAT suite",
+                c.rw,
+                bsb.rw_tcbs(c.rw as usize),
+                GAT_BUCKETS.last().unwrap()
+            );
+        }
+        Ok(GatAttention { bsb, plan, batch: man.rw_batch })
+    }
+
+    /// One GAT attention layer: h (n × d_in) → output (n × d_out).
+    pub fn forward(
+        &self,
+        rt: &Runtime,
+        layer: &GatLayer,
+        h: &[f32],
+        n: usize,
+    ) -> Result<Vec<f32>> {
+        if h.len() != n * layer.d_in {
+            bail!("h: expected {} elements", n * layer.d_in);
+        }
+        // Wh on the host (a single GEMV-ish pass; the GT path shows the
+        // tiled-executable variant — here we keep the focus on attention).
+        let (din, dout) = (layer.d_in, layer.d_out);
+        let mut wh = vec![0.0f32; n * dout];
+        for i in 0..n {
+            for c in 0..din {
+                let x = h[i * din + c];
+                if x != 0.0 {
+                    let wrow = &layer.w[c * dout..(c + 1) * dout];
+                    let orow = &mut wh[i * dout..(i + 1) * dout];
+                    for (o, w) in orow.iter_mut().zip(wrow) {
+                        *o += x * w;
+                    }
+                }
+            }
+        }
+        // Rank-2 score embedding.
+        let mut q2 = vec![0.0f32; n * 2];
+        let mut k2 = vec![0.0f32; n * 2];
+        for i in 0..n {
+            let whi = &wh[i * dout..(i + 1) * dout];
+            let sl: f32 = whi.iter().zip(&layer.a_l).map(|(a, b)| a * b).sum();
+            let sr: f32 = whi.iter().zip(&layer.a_r).map(|(a, b)| a * b).sum();
+            q2[i * 2] = sl;
+            q2[i * 2 + 1] = 1.0;
+            k2[i * 2] = 1.0;
+            k2[i * 2 + 1] = sr;
+        }
+        let x = AttentionProblem {
+            n,
+            d: 2,
+            dv: dout,
+            q: &q2,
+            k: &k2,
+            v: &wh,
+            scale: 1.0,
+        };
+        let mut out = vec![0.0f32; n * dout];
+        let mut bufs = CallBuffers::default();
+        for call in &self.plan.calls {
+            let name = Manifest::gat_name(call.t_bucket, dout);
+            let exe = rt
+                .executable(&name)
+                .with_context(|| format!("GAT artifact {name}"))?;
+            gather::gather_call(&mut bufs, &call.rws, call.t_bucket, &self.bsb, &x, self.batch);
+            let sq = [self.batch, TCB_R, 2];
+            let sk = [self.batch, call.t_bucket * TCB_C, 2];
+            let sv = [self.batch, call.t_bucket * TCB_C, dout];
+            let sbm = [self.batch, call.t_bucket, BITMAP_WORDS];
+            let outs = rt.run_exe_raw(
+                &exe,
+                &[
+                    Arg::F32(&bufs.q, &sq),
+                    Arg::F32(&bufs.k, &sk),
+                    Arg::F32(&bufs.v, &sv),
+                    Arg::I32(&bufs.bm, &sbm),
+                ],
+            )?;
+            gather::scatter_call(&mut out, outs[0].as_f32()?, &call.rws, n, dout);
+        }
+        Ok(out)
+    }
+}
+
+/// Host reference for tests: GAT attention with exact f64 softmax.
+pub fn gat_reference(
+    g: &CsrGraph,
+    layer: &GatLayer,
+    h: &[f32],
+    n: usize,
+) -> Vec<f32> {
+    let (din, dout) = (layer.d_in, layer.d_out);
+    let mut wh = vec![0.0f32; n * dout];
+    for i in 0..n {
+        for c in 0..din {
+            for j in 0..dout {
+                wh[i * dout + j] += h[i * din + c] * layer.w[c * dout + j];
+            }
+        }
+    }
+    let sl: Vec<f64> = (0..n)
+        .map(|i| {
+            wh[i * dout..(i + 1) * dout]
+                .iter()
+                .zip(&layer.a_l)
+                .map(|(a, b)| (a * b) as f64)
+                .sum()
+        })
+        .collect();
+    let sr: Vec<f64> = (0..n)
+        .map(|i| {
+            wh[i * dout..(i + 1) * dout]
+                .iter()
+                .zip(&layer.a_r)
+                .map(|(a, b)| (a * b) as f64)
+                .sum()
+        })
+        .collect();
+    let mut out = vec![0.0f32; n * dout];
+    for i in 0..n {
+        let nbrs = g.row(i);
+        if nbrs.is_empty() {
+            continue;
+        }
+        let scores: Vec<f64> = nbrs
+            .iter()
+            .map(|&j| {
+                let e = sl[i] + sr[j as usize];
+                if e >= 0.0 {
+                    e
+                } else {
+                    0.2 * e
+                }
+            })
+            .collect();
+        let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = scores.iter().map(|s| (s - m).exp()).collect();
+        let l: f64 = exps.iter().sum();
+        for (e, &j) in exps.iter().zip(nbrs) {
+            let w = (e / l) as f32;
+            for c in 0..dout {
+                out[i * dout + c] += w * wh[j as usize * dout + c];
+            }
+        }
+    }
+    out
+}

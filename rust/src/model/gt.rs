@@ -1,0 +1,271 @@
+//! Graph Transformer inference runtime (paper §4.4, Figure 8).
+//!
+//! The block structure follows Dwivedi & Bresson [5] as implemented in DGL:
+//!
+//! ```text
+//! h  → qkv_proj → split heads → 3S attention per head → concat → o_proj
+//!    → residual + LayerNorm → FFN (2d hidden, ReLU) → residual + LayerNorm
+//! ```
+//!
+//! Every dense op is a fixed-shape row-tile executable (m = 1024 rows),
+//! every attention is a pluggable [`Backend`] — swapping the backend is the
+//! Figure-8 experiment.  Heads are d_head = 32 wide, so d ∈ {64, 128, 256}
+//! gives 2/4/8 heads, and all heads of all layers share the per-graph BSB
+//! preprocessing (done once in [`GraphTransformer::prepare`]).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::graph::CsrGraph;
+use crate::kernels::{AttentionProblem, Backend, Driver};
+use crate::runtime::{Manifest, Runtime, Tensor};
+
+use super::weights::GtWeights;
+use super::D_HEAD;
+
+/// Model configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GtConfig {
+    pub d: usize,
+    pub n_blocks: usize,
+    pub backend: Backend,
+    pub seed: u64,
+}
+
+impl Default for GtConfig {
+    fn default() -> Self {
+        // The paper's evaluation model: 10 transformer blocks.
+        GtConfig { d: 64, n_blocks: 10, backend: Backend::Fused3S, seed: 0x617 }
+    }
+}
+
+/// Timing breakdown of one inference (Figure 8b/8d's attention fraction).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GtTimings {
+    pub total_s: f64,
+    pub attention_s: f64,
+    pub dense_s: f64,
+}
+
+impl GtTimings {
+    pub fn attention_fraction(&self) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            self.attention_s / self.total_s
+        }
+    }
+}
+
+/// A Graph Transformer prepared for one graph.
+pub struct GraphTransformer {
+    pub cfg: GtConfig,
+    pub weights: GtWeights,
+    driver: Driver,
+    n: usize,
+    m_tile: usize,
+}
+
+impl GraphTransformer {
+    /// Generate weights and preprocess the graph for the chosen backend.
+    pub fn prepare(rt: &Runtime, g: &CsrGraph, cfg: GtConfig) -> Result<GraphTransformer> {
+        if cfg.d % D_HEAD != 0 {
+            bail!("d={} must be a multiple of d_head={}", cfg.d, D_HEAD);
+        }
+        if !rt.manifest().d_model.contains(&cfg.d) {
+            bail!(
+                "no dense-op artifacts for d={} (available: {:?})",
+                cfg.d,
+                rt.manifest().d_model
+            );
+        }
+        let driver = Driver::prepare(rt, g, cfg.backend)?;
+        Ok(GraphTransformer {
+            weights: GtWeights::generate(cfg.seed, cfg.d, cfg.n_blocks),
+            cfg,
+            driver,
+            n: g.n,
+            m_tile: rt.manifest().m_tile,
+        })
+    }
+
+    /// Run inference over node features `h` (n × d), returning the output
+    /// features and the attention/dense timing split.
+    pub fn infer(&self, rt: &Runtime, h: &[f32]) -> Result<(Vec<f32>, GtTimings)> {
+        let (n, d) = (self.n, self.cfg.d);
+        if h.len() != n * d {
+            bail!("h: expected {} elements, got {}", n * d, h.len());
+        }
+        let mut t = GtTimings::default();
+        let t_all = Instant::now();
+        let mut h = h.to_vec();
+        for blk in &self.weights.blocks {
+            // --- attention sub-block -----------------------------------
+            let t0 = Instant::now();
+            let qkv = self.tiled_op3(
+                rt,
+                &Manifest::qkv_name(self.m_tile, d),
+                &h,
+                d,
+                &blk.wqkv,
+                &[d, 3 * d],
+                &blk.bqkv,
+                3 * d,
+            )?;
+            t.dense_s += t0.elapsed().as_secs_f64();
+
+            let t0 = Instant::now();
+            let n_heads = d / D_HEAD;
+            let mut att = vec![0.0f32; n * d];
+            let scale = 1.0 / (D_HEAD as f32).sqrt();
+            let mut qh = vec![0.0f32; n * D_HEAD];
+            let mut kh = vec![0.0f32; n * D_HEAD];
+            let mut vh = vec![0.0f32; n * D_HEAD];
+            for head in 0..n_heads {
+                // Slice head columns out of the fused QKV output
+                // (row layout: [q | k | v] each d wide).
+                for row in 0..n {
+                    let base = row * 3 * d + head * D_HEAD;
+                    qh[row * D_HEAD..(row + 1) * D_HEAD]
+                        .copy_from_slice(&qkv[base..base + D_HEAD]);
+                    kh[row * D_HEAD..(row + 1) * D_HEAD]
+                        .copy_from_slice(&qkv[base + d..base + d + D_HEAD]);
+                    vh[row * D_HEAD..(row + 1) * D_HEAD]
+                        .copy_from_slice(&qkv[base + 2 * d..base + 2 * d + D_HEAD]);
+                }
+                let x = AttentionProblem::new(n, D_HEAD, &qh, &kh, &vh, scale);
+                let oh = self.driver.run(rt, &x)?;
+                for row in 0..n {
+                    att[row * d + head * D_HEAD..row * d + (head + 1) * D_HEAD]
+                        .copy_from_slice(&oh[row * D_HEAD..(row + 1) * D_HEAD]);
+                }
+            }
+            t.attention_s += t0.elapsed().as_secs_f64();
+
+            // --- projections / norms / FFN ------------------------------
+            let t0 = Instant::now();
+            let proj = self.tiled_op3(
+                rt,
+                &Manifest::linear_name(self.m_tile, d),
+                &att,
+                d,
+                &blk.wo,
+                &[d, d],
+                &blk.bo,
+                d,
+            )?;
+            let h1 = self.tiled_add_ln(rt, &h, &proj, &blk.g1, &blk.be1, d)?;
+            let f = self.tiled_ffn(rt, &h1, blk, d)?;
+            let h2 = self.tiled_add_ln(rt, &h1, &f, &blk.g2, &blk.be2, d)?;
+            t.dense_s += t0.elapsed().as_secs_f64();
+            h = h2;
+        }
+        t.total_s = t_all.elapsed().as_secs_f64();
+        Ok((h, t))
+    }
+
+    /// Run a 3-input tile op (x, w, b) over all row tiles of x.
+    #[allow(clippy::too_many_arguments)]
+    fn tiled_op3(
+        &self,
+        rt: &Runtime,
+        name: &str,
+        x: &[f32],
+        d_in: usize,
+        w: &[f32],
+        w_shape: &[usize],
+        b: &[f32],
+        d_out: usize,
+    ) -> Result<Vec<f32>> {
+        let n = self.n;
+        let m = self.m_tile;
+        let mut out = vec![0.0f32; n * d_out];
+        let w_t = Tensor::f32(w.to_vec(), w_shape.to_vec());
+        let b_t = Tensor::f32(b.to_vec(), vec![d_out]);
+        for lo in (0..n).step_by(m) {
+            let hi = (lo + m).min(n);
+            let mut tile = vec![0.0f32; m * d_in];
+            tile[..(hi - lo) * d_in].copy_from_slice(&x[lo * d_in..hi * d_in]);
+            let outs = rt.run(
+                name,
+                &[Tensor::f32(tile, vec![m, d_in]), w_t.clone(), b_t.clone()],
+            )?;
+            let o = outs[0].as_f32()?;
+            out[lo * d_out..hi * d_out].copy_from_slice(&o[..(hi - lo) * d_out]);
+        }
+        Ok(out)
+    }
+
+    fn tiled_add_ln(
+        &self,
+        rt: &Runtime,
+        x: &[f32],
+        y: &[f32],
+        gamma: &[f32],
+        beta: &[f32],
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        let n = self.n;
+        let m = self.m_tile;
+        let mut out = vec![0.0f32; n * d];
+        let g_t = Tensor::f32(gamma.to_vec(), vec![d]);
+        let b_t = Tensor::f32(beta.to_vec(), vec![d]);
+        let name = Manifest::add_ln_name(m, d);
+        for lo in (0..n).step_by(m) {
+            let hi = (lo + m).min(n);
+            let mut tx = vec![0.0f32; m * d];
+            let mut ty = vec![0.0f32; m * d];
+            tx[..(hi - lo) * d].copy_from_slice(&x[lo * d..hi * d]);
+            ty[..(hi - lo) * d].copy_from_slice(&y[lo * d..hi * d]);
+            let outs = rt.run(
+                &name,
+                &[
+                    Tensor::f32(tx, vec![m, d]),
+                    Tensor::f32(ty, vec![m, d]),
+                    g_t.clone(),
+                    b_t.clone(),
+                ],
+            )?;
+            let o = outs[0].as_f32()?;
+            out[lo * d..hi * d].copy_from_slice(&o[..(hi - lo) * d]);
+        }
+        Ok(out)
+    }
+
+    fn tiled_ffn(
+        &self,
+        rt: &Runtime,
+        x: &[f32],
+        blk: &super::weights::GtBlockWeights,
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        let n = self.n;
+        let m = self.m_tile;
+        let h = 2 * d;
+        let mut out = vec![0.0f32; n * d];
+        let w1 = Tensor::f32(blk.w1.clone(), vec![d, h]);
+        let b1 = Tensor::f32(blk.b1.clone(), vec![h]);
+        let w2 = Tensor::f32(blk.w2.clone(), vec![h, d]);
+        let b2 = Tensor::f32(blk.b2.clone(), vec![d]);
+        let name = Manifest::ffn_name(m, d);
+        for lo in (0..n).step_by(m) {
+            let hi = (lo + m).min(n);
+            let mut tile = vec![0.0f32; m * d];
+            tile[..(hi - lo) * d].copy_from_slice(&x[lo * d..hi * d]);
+            let outs = rt.run(
+                &name,
+                &[
+                    Tensor::f32(tile, vec![m, d]),
+                    w1.clone(),
+                    b1.clone(),
+                    w2.clone(),
+                    b2.clone(),
+                ],
+            )?;
+            let o = outs[0].as_f32()?;
+            out[lo * d..hi * d].copy_from_slice(&o[..(hi - lo) * d]);
+        }
+        Ok(out)
+    }
+}

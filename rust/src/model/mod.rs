@@ -1,0 +1,23 @@
+//! Model inference runtimes built on the 3S kernel drivers — the paper's
+//! §2.1 model zoo and the §4.4 end-to-end experiment.
+//!
+//! * [`gt`] — the Graph Transformer of Dwivedi & Bresson [5]: 10 blocks of
+//!   multi-head sparse attention + FFN + LayerNorm, every dense op running
+//!   through AOT row-tile executables and every attention through a
+//!   pluggable 3S backend (the Figure-8 experiment).
+//! * [`gat`] — Graph Attention Network attention (Eq. 2): rank-2 additive
+//!   scores + LeakyReLU, expressed on the same fused kernel.
+//! * [`agnn`] — Attention-based GNN (Eq. 3): cosine-similarity attention.
+//! * [`weights`] — deterministic (seeded) weight generation; there is no
+//!   checkpoint ecosystem offline, so models are random-initialised exactly
+//!   like the paper's inference benchmarks.
+
+pub mod agnn;
+pub mod gat;
+pub mod gt;
+pub mod weights;
+
+pub use gt::{GraphTransformer, GtConfig, GtTimings};
+
+/// Head width shared with `python/compile/model.py` (D_HEAD).
+pub const D_HEAD: usize = 32;

@@ -1,0 +1,113 @@
+//! Deterministic weight generation (seeded Xavier-ish init).
+//!
+//! The paper benchmarks *inference time* on randomly initialised models
+//! (timings are weight-independent); we generate weights from a seed so
+//! every run and every backend sees identical parameters.
+
+use crate::util::prng::Rng;
+
+/// One Graph Transformer block's parameters (layout matches
+/// `python/compile/model.py::gt_block_ref`).
+#[derive(Clone)]
+pub struct GtBlockWeights {
+    pub wqkv: Vec<f32>, // (d, 3d)
+    pub bqkv: Vec<f32>, // (3d,)
+    pub wo: Vec<f32>,   // (d, d)
+    pub bo: Vec<f32>,   // (d,)
+    pub w1: Vec<f32>,   // (d, 2d)
+    pub b1: Vec<f32>,   // (2d,)
+    pub w2: Vec<f32>,   // (2d, d)
+    pub b2: Vec<f32>,   // (d,)
+    pub g1: Vec<f32>,   // (d,)
+    pub be1: Vec<f32>,  // (d,)
+    pub g2: Vec<f32>,   // (d,)
+    pub be2: Vec<f32>,  // (d,)
+}
+
+impl GtBlockWeights {
+    pub fn generate(rng: &mut Rng, d: usize) -> GtBlockWeights {
+        let h = 2 * d;
+        let s_d = 1.0 / (d as f32).sqrt();
+        let s_h = 1.0 / (h as f32).sqrt();
+        GtBlockWeights {
+            wqkv: rng.normal_vec(d * 3 * d, s_d),
+            bqkv: vec![0.0; 3 * d],
+            wo: rng.normal_vec(d * d, s_d),
+            bo: vec![0.0; d],
+            w1: rng.normal_vec(d * h, s_d),
+            b1: vec![0.0; h],
+            w2: rng.normal_vec(h * d, s_h),
+            b2: vec![0.0; d],
+            g1: vec![1.0; d],
+            be1: vec![0.0; d],
+            g2: vec![1.0; d],
+            be2: vec![0.0; d],
+        }
+    }
+}
+
+/// Full model weights.
+#[derive(Clone)]
+pub struct GtWeights {
+    pub d: usize,
+    pub blocks: Vec<GtBlockWeights>,
+}
+
+impl GtWeights {
+    pub fn generate(seed: u64, d: usize, n_blocks: usize) -> GtWeights {
+        let mut rng = Rng::new(seed);
+        GtWeights {
+            d,
+            blocks: (0..n_blocks)
+                .map(|i| GtBlockWeights::generate(&mut rng.fork(i as u64), d))
+                .collect(),
+        }
+    }
+}
+
+/// Random node features (the model input H).
+pub fn random_features(seed: u64, n: usize, d: usize) -> Vec<f32> {
+    Rng::new(seed).normal_vec(n * d, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = GtWeights::generate(7, 64, 3);
+        let b = GtWeights::generate(7, 64, 3);
+        assert_eq!(a.blocks[2].wqkv, b.blocks[2].wqkv);
+        let c = GtWeights::generate(8, 64, 3);
+        assert_ne!(a.blocks[0].wqkv, c.blocks[0].wqkv);
+    }
+
+    #[test]
+    fn blocks_differ() {
+        let w = GtWeights::generate(7, 64, 2);
+        assert_ne!(w.blocks[0].wqkv, w.blocks[1].wqkv);
+    }
+
+    #[test]
+    fn shapes() {
+        let w = GtWeights::generate(1, 128, 1);
+        let b = &w.blocks[0];
+        assert_eq!(b.wqkv.len(), 128 * 384);
+        assert_eq!(b.w1.len(), 128 * 256);
+        assert_eq!(b.w2.len(), 256 * 128);
+        assert_eq!(b.g1.len(), 128);
+    }
+
+    #[test]
+    fn init_scale_reasonable() {
+        let w = GtWeights::generate(2, 64, 1);
+        let std: f32 = {
+            let v = &w.blocks[0].wqkv;
+            let m = v.iter().sum::<f32>() / v.len() as f32;
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / v.len() as f32)
+                .sqrt()
+        };
+        assert!((std - 0.125).abs() < 0.01, "std {std}"); // 1/sqrt(64)
+    }
+}

@@ -1,0 +1,219 @@
+//! Host tensors crossing the Rust↔PJRT boundary.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A borrowed executable argument — the zero-copy hot-path type: the
+/// runtime uploads straight from the borrowed slice into a PJRT device
+/// buffer (one copy total, no intermediate Literal).
+#[derive(Clone, Copy, Debug)]
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> Arg<'a> {
+    pub fn shape(&self) -> &'a [usize] {
+        match self {
+            Arg::F32(_, s) | Arg::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Arg::F32(..) => DType::F32,
+            Arg::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Arg::F32(d, _) => d.len(),
+            Arg::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Validate against a manifest input spec.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("dtype mismatch: {:?} vs {:?}", self.dtype(), spec.dtype);
+        }
+        if self.shape() != spec.shape.as_slice() {
+            bail!("shape mismatch: {:?} vs {:?}", self.shape(), spec.shape);
+        }
+        if self.len() != self.numel() {
+            bail!("data length {} != shape numel {}", self.len(), self.numel());
+        }
+        Ok(())
+    }
+}
+
+/// A host-side tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32(data, shape)
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32(data, shape)
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32(vec![0.0; shape.iter().product()], shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(..) => DType::F32,
+            Tensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    /// Borrow as a zero-copy argument.
+    pub fn as_arg(&self) -> Arg<'_> {
+        match self {
+            Tensor::F32(d, s) => Arg::F32(d, s),
+            Tensor::I32(d, s) => Arg::I32(d, s),
+        }
+    }
+
+    /// Validate against a manifest input spec.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("dtype mismatch: {:?} vs {:?}", self.dtype(), spec.dtype);
+        }
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "shape mismatch: {:?} vs {:?}",
+                self.shape(),
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Build the PJRT literal (one copy across the C boundary).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match self {
+            Tensor::F32(d, _) => (xla::ElementType::F32, bytemuck_f32(d)),
+            Tensor::I32(d, _) => (xla::ElementType::S32, bytemuck_i32(d)),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty,
+            self.shape(),
+            bytes,
+        )?)
+    }
+
+    /// Read back from a PJRT literal (shape taken from the literal).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32(lit.to_vec::<f32>()?, dims)),
+            xla::ElementType::S32 => Ok(Tensor::I32(lit.to_vec::<i32>()?, dims)),
+            ty => bail!("unsupported output element type {ty:?}"),
+        }
+    }
+}
+
+fn bytemuck_f32(d: &[f32]) -> &[u8] {
+    // Safe: f32 has no invalid bit patterns and alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len() * 4) }
+}
+
+fn bytemuck_i32(d: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.numel(), 4);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn spec_check() {
+        let t = Tensor::i32(vec![0; 6], vec![2, 3]);
+        let good = TensorSpec { shape: vec![2, 3], dtype: DType::I32 };
+        let bad_shape = TensorSpec { shape: vec![3, 2], dtype: DType::I32 };
+        let bad_type = TensorSpec { shape: vec![2, 3], dtype: DType::F32 };
+        assert!(t.check(&good).is_ok());
+        assert!(t.check(&bad_shape).is_err());
+        assert!(t.check(&bad_type).is_err());
+    }
+
+    #[test]
+    fn zeros() {
+        let t = Tensor::zeros_f32(&[3, 5]);
+        assert_eq!(t.numel(), 15);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::f32(vec![1.5, -2.0, 0.0, 7.25, 3.0, -1.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+        let ti = Tensor::i32(vec![1, -2, i32::MAX, i32::MIN], vec![4]);
+        let back = Tensor::from_literal(&ti.to_literal().unwrap()).unwrap();
+        assert_eq!(ti, back);
+    }
+}

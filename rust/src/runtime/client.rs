@@ -1,0 +1,186 @@
+//! The PJRT runtime: lazy-compiling executable cache over the manifest.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::buffers::{Arg, Tensor};
+use super::manifest::{ExecutableSpec, Manifest};
+
+/// Execution statistics (dispatch counting for the metrics/bench layer).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub bytes_uploaded: u64,
+    pub bytes_downloaded: u64,
+}
+
+/// A compiled executable plus its manifest spec.
+pub struct Executable {
+    spec: ExecutableSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT client + manifest + executable cache.  Single-threaded by design:
+/// the serving loop owns one `Runtime` on a dedicated executor thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Default artifact location: `<crate root>/artifacts`.
+    pub fn from_default_artifacts() -> Result<Runtime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Runtime::new(&dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    /// Get (compiling and caching on first use) an executable by name.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.spec(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.stats.borrow_mut().compiles += 1;
+        let e = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Pre-compile a list of executables (hides compile latency at startup).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute by name with input validation; returns the output tensors.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.executable(name)?;
+        self.run_exe(&exe, inputs)
+    }
+
+    /// Execute a cached executable from owned tensors.
+    pub fn run_exe(
+        &self,
+        exe: &Executable,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let args: Vec<Arg> = inputs.iter().map(|t| t.as_arg()).collect();
+        self.run_exe_raw(exe, &args)
+    }
+
+    /// Hot-path execution from borrowed slices: each input is uploaded
+    /// directly into a PJRT device buffer (`buffer_from_host_buffer` +
+    /// `execute_b`).  NOTE: the Literal-based `execute` path of
+    /// xla_extension 0.5.1 leaks the device copies of its input literals
+    /// (~input size per call, measured in EXPERIMENTS.md §Perf); the
+    /// buffer path does not, and also saves the host-side literal copy.
+    pub fn run_exe_raw(
+        &self,
+        exe: &Executable,
+        inputs: &[Arg],
+    ) -> Result<Vec<Tensor>> {
+        let spec = &exe.spec;
+        if inputs.len() != spec.inputs.len() {
+            anyhow::bail!(
+                "{}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut uploaded = 0u64;
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (a, s) in inputs.iter().zip(&spec.inputs) {
+            a.check(s)
+                .with_context(|| format!("input to {}", spec.name))?;
+            uploaded += (a.numel() * 4) as u64;
+            let buf = match a {
+                Arg::F32(d, shape) => {
+                    self.client.buffer_from_host_buffer::<f32>(d, shape, None)?
+                }
+                Arg::I32(d, shape) => {
+                    self.client.buffer_from_host_buffer::<i32>(d, shape, None)?
+                }
+            };
+            bufs.push(buf);
+        }
+        let result = exe.exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
+        // Lowered with return_tuple=True: single tuple output on device 0.
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == spec.n_outputs,
+            "{}: expected {} outputs, got {}",
+            spec.name,
+            spec.n_outputs,
+            parts.len()
+        );
+        let mut outs = Vec::with_capacity(parts.len());
+        let mut downloaded = 0u64;
+        for p in &parts {
+            let t = Tensor::from_literal(p)?;
+            downloaded += (t.numel() * 4) as u64;
+            outs.push(t);
+        }
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.bytes_uploaded += uploaded;
+        st.bytes_downloaded += downloaded;
+        Ok(outs)
+    }
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ExecutableSpec {
+        &self.spec
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_integration.rs;
+// unit-level behaviour (manifest validation, tensor checks) is covered in
+// the sibling modules.

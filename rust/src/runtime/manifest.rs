@@ -1,0 +1,271 @@
+//! The AOT manifest: what executables exist, their shapes, and the global
+//! bucketing configuration the coordinator must follow.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an executable input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one executable input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One entry of `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+    /// kind-specific parameters (t, d, dv, b, precision, …) kept as JSON.
+    pub params: Json,
+}
+
+impl ExecutableSpec {
+    pub fn param_usize(&self, key: &str) -> Result<usize> {
+        self.params.req(key)?.as_usize()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub rw_batch: usize,
+    pub t_buckets: Vec<usize>,
+    pub d_kernel: Vec<usize>,
+    pub d_model: Vec<usize>,
+    pub m_tile: usize,
+    pub chunk_t: usize,
+    pub d_head: usize,
+    pub entries: BTreeMap<String, ExecutableSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let version = v.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut entries = BTreeMap::new();
+        for e in v.req("executables")?.as_arr()? {
+            let name = e.req("name")?.as_str()?.to_string();
+            let mut inputs = Vec::new();
+            for i in e.req("inputs")?.as_arr()? {
+                inputs.push(TensorSpec {
+                    shape: i.req("shape")?.usize_arr()?,
+                    dtype: DType::parse(i.req("dtype")?.as_str()?)?,
+                });
+            }
+            entries.insert(
+                name.clone(),
+                ExecutableSpec {
+                    file: e.req("file")?.as_str()?.to_string(),
+                    inputs,
+                    n_outputs: e.req("n_outputs")?.as_usize()?,
+                    params: e.req("params")?.clone(),
+                    name,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            rw_batch: v.req("rw_batch")?.as_usize()?,
+            t_buckets: v.req("t_buckets")?.usize_arr()?,
+            d_kernel: v.req("d_kernel")?.usize_arr()?,
+            d_model: v.req("d_model")?.usize_arr()?,
+            m_tile: v.req("m_tile")?.as_usize()?,
+            chunk_t: v.req("chunk_t")?.as_usize()?,
+            d_head: v.req("d_head")?.as_usize()?,
+            entries,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable '{name}' in manifest"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// Smallest bucket with capacity >= t (None if t exceeds all buckets).
+    pub fn bucket_for(&self, t: usize) -> Option<usize> {
+        self.t_buckets.iter().copied().find(|&b| b >= t)
+    }
+
+    // -- canonical artifact names (kept in sync with aot.py) ---------------
+
+    pub fn fused3s_name(t: usize, d: usize, precision: &str, variant: &str) -> String {
+        match (precision, variant) {
+            ("bf16", "splitc") => format!("fused3s_t{t}_d{d}"),
+            ("f32", "splitc") => format!("fused3s_f32nc_t{t}_d{d}"),
+            ("bf16", "splitr") => format!("fused3s_splitr_t{t}_d{d}"),
+            _ => format!("fused3s_{precision}_{variant}_t{t}_d{d}"),
+        }
+    }
+
+    pub fn partial_name(t: usize, d: usize) -> String {
+        format!("fused3s_partial_t{t}_d{d}")
+    }
+
+    pub fn gat_name(t: usize, dv: usize) -> String {
+        format!("fused3s_gat_t{t}_dv{dv}")
+    }
+
+    pub fn sddmm_name(t: usize, d: usize) -> String {
+        format!("sddmm_t{t}_d{d}")
+    }
+
+    pub fn softmax_name(t: usize, stable: bool) -> String {
+        if stable {
+            format!("softmax_stable_t{t}")
+        } else {
+            format!("softmax_naive_t{t}")
+        }
+    }
+
+    pub fn spmm_name(t: usize, d: usize) -> String {
+        format!("spmm_t{t}_d{d}")
+    }
+
+    pub fn dense_name(n: usize, d: usize) -> String {
+        format!("dense_n{n}_d{d}")
+    }
+
+    pub fn qkv_name(m: usize, d: usize) -> String {
+        format!("qkv_proj_m{m}_d{d}")
+    }
+
+    pub fn linear_name(m: usize, d: usize) -> String {
+        format!("linear_m{m}_d{d}")
+    }
+
+    pub fn ffn_name(m: usize, d: usize) -> String {
+        format!("ffn_m{m}_d{d}")
+    }
+
+    pub fn add_ln_name(m: usize, d: usize) -> String {
+        format!("add_ln_m{m}_d{d}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "version": 1, "rw_batch": 32, "t_buckets": [4, 8], "d_kernel": [32],
+ "d_model": [64], "m_tile": 1024, "chunk_t": 128, "d_head": 32,
+ "tcb_r": 16, "tcb_c": 8, "bitmap_words": 4,
+ "executables": [
+  {"name": "fused3s_t4_d32", "file": "fused3s_t4_d32.hlo.txt",
+   "params": {"kind": "fused3s", "t": 4, "d": 32, "b": 32},
+   "inputs": [
+    {"shape": [32, 16, 32], "dtype": "f32"},
+    {"shape": [32, 32, 32], "dtype": "f32"},
+    {"shape": [32, 32, 32], "dtype": "f32"},
+    {"shape": [32, 4, 4], "dtype": "i32"}],
+   "n_outputs": 1}
+ ]}"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.rw_batch, 32);
+        assert_eq!(m.t_buckets, vec![4, 8]);
+        let s = m.spec("fused3s_t4_d32").unwrap();
+        assert_eq!(s.inputs.len(), 4);
+        assert_eq!(s.inputs[3].dtype, DType::I32);
+        assert_eq!(s.param_usize("t").unwrap(), 4);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.bucket_for(1), Some(4));
+        assert_eq!(m.bucket_for(4), Some(4));
+        assert_eq!(m.bucket_for(5), Some(8));
+        assert_eq!(m.bucket_for(9), None);
+    }
+
+    #[test]
+    fn missing_executable_is_error() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(m.spec("nope").is_err());
+        assert!(!m.has("nope"));
+    }
+
+    #[test]
+    fn names_match_aot_convention() {
+        assert_eq!(
+            Manifest::fused3s_name(8, 64, "bf16", "splitc"),
+            "fused3s_t8_d64"
+        );
+        assert_eq!(
+            Manifest::fused3s_name(8, 64, "f32", "splitc"),
+            "fused3s_f32nc_t8_d64"
+        );
+        assert_eq!(Manifest::partial_name(128, 32), "fused3s_partial_t128_d32");
+        assert_eq!(Manifest::softmax_name(4, false), "softmax_naive_t4");
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When artifacts are built, validate the real file parses and has the
+        // kernel suite.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.has("fused3s_t4_d32"));
+            assert!(m.has(&Manifest::partial_name(m.chunk_t, 64)));
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! The wiring follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Executables compile lazily on first use
+//! and are cached for the life of the [`client::Runtime`].
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialises protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see `python/compile/aot.py`).
+
+pub mod buffers;
+pub mod client;
+pub mod manifest;
+
+pub use buffers::Tensor;
+pub use client::Runtime;
+pub use manifest::{DType, ExecutableSpec, Manifest, TensorSpec};

@@ -1,0 +1,6 @@
+//! SM scheduling simulator — reproduces Figure 7 (per-SM active time with
+//! and without row-window reordering).
+
+pub mod sm;
+
+pub use sm::{simulate, SimConfig, SimResult};

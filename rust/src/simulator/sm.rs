@@ -1,0 +1,186 @@
+//! Discrete-event simulation of row windows scheduled onto streaming
+//! multiprocessors — the substrate substitution for Figure 7's Nsight
+//! SM-active-time traces (DESIGN.md §1, substitution 4).
+//!
+//! Model: the GPU dispatches thread blocks (= row windows, node-parallel
+//! fusion) to SMs greedily — each SM picks the next RW from the work queue
+//! as soon as it finishes its current one.  An RW's execution cost is its
+//! TCB count (each TCB is one SDDMM-MMA + softmax step + SpMM-MMA of fixed
+//! shape) plus a fixed launch overhead.  This first-order model is exactly
+//! what the paper's reordering argument relies on: long-running RWs
+//! scheduled late leave SMs idle at the kernel tail.
+
+use crate::bsb::reorder::{schedule, Order};
+use crate::bsb::Bsb;
+use crate::util::stats;
+
+/// Simulation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Number of SMs (A30: 56, H100: 132).
+    pub num_sms: usize,
+    /// Cost per TCB (arbitrary time units).
+    pub cost_per_tcb: f64,
+    /// Fixed per-RW scheduling/launch overhead.
+    pub launch_overhead: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        // A30 of the paper's Figure 7.
+        SimConfig { num_sms: 56, cost_per_tcb: 1.0, launch_overhead: 2.0 }
+    }
+}
+
+/// Per-SM active times and derived balance metrics.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Active (busy) time of each SM.
+    pub active: Vec<f64>,
+    /// Total wall-clock (max over SMs of finish time).
+    pub makespan: f64,
+    /// Sum of all RW costs (the work-conserving lower bound is
+    /// `total_work / num_sms`).
+    pub total_work: f64,
+}
+
+impl SimResult {
+    /// Load balance in [0, 1]: mean(active) / max(active). 1.0 = perfect.
+    pub fn balance(&self) -> f64 {
+        let max = self.active.iter().cloned().fold(0.0, f64::max);
+        if max == 0.0 {
+            1.0
+        } else {
+            stats::mean(&self.active) / max
+        }
+    }
+
+    /// Tail latency: makespan minus the ideal work-conserving bound,
+    /// normalised by the bound (0 = perfect packing).
+    pub fn tail_overhead(&self) -> f64 {
+        let ideal = self.total_work / self.active.len() as f64;
+        if ideal == 0.0 {
+            0.0
+        } else {
+            (self.makespan - ideal) / ideal
+        }
+    }
+}
+
+/// Greedy list scheduling of the BSB's row windows in the given order.
+pub fn simulate(bsb: &Bsb, order: Order, cfg: &SimConfig) -> SimResult {
+    let sched = schedule(bsb, order);
+    let costs: Vec<f64> = sched
+        .iter()
+        .map(|&rw| {
+            let t = bsb.rw_tcbs(rw as usize);
+            if t == 0 {
+                0.0
+            } else {
+                cfg.launch_overhead + cfg.cost_per_tcb * t as f64
+            }
+        })
+        .filter(|&c| c > 0.0)
+        .collect();
+    simulate_costs(&costs, cfg.num_sms)
+}
+
+/// Core list scheduler over explicit per-RW costs (exposed for tests and
+/// for the coordinator's what-if planning).
+pub fn simulate_costs(costs: &[f64], num_sms: usize) -> SimResult {
+    assert!(num_sms > 0);
+    // Greedy: next work item goes to the SM that frees up first.  A binary
+    // heap keyed on finish time would be O(n log s); with s <= a few hundred
+    // a linear scan is fine and allocation-free.
+    let mut finish = vec![0.0f64; num_sms];
+    let mut active = vec![0.0f64; num_sms];
+    for &c in costs {
+        let (idx, _) = finish
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        finish[idx] += c;
+        active[idx] += c;
+    }
+    let makespan = finish.iter().cloned().fold(0.0, f64::max);
+    SimResult { active, makespan, total_work: costs.iter().sum() }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bsb::build;
+    use crate::graph::generators;
+
+    use super::*;
+
+    #[test]
+    fn uniform_work_is_balanced() {
+        let costs = vec![1.0; 560];
+        let r = simulate_costs(&costs, 56);
+        assert!((r.balance() - 1.0).abs() < 1e-9);
+        assert_eq!(r.makespan, 10.0);
+    }
+
+    #[test]
+    fn one_giant_task_dominates() {
+        let mut costs = vec![1.0; 55];
+        costs.push(100.0);
+        let r = simulate_costs(&costs, 56);
+        assert_eq!(r.makespan, 100.0);
+        assert!(r.balance() < 0.05);
+    }
+
+    #[test]
+    fn lpt_order_helps_skewed_work() {
+        // Longest-processing-time-first (the paper's reordering) beats
+        // natural order when a heavy task sits at the end of the queue.
+        let mut costs = vec![1.0f64; 300];
+        costs.extend([80.0, 70.0, 60.0]);
+        let natural = simulate_costs(&costs, 8);
+        let mut sorted = costs.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let lpt = simulate_costs(&sorted, 8);
+        assert!(
+            lpt.makespan < natural.makespan,
+            "lpt {} vs natural {}",
+            lpt.makespan,
+            natural.makespan
+        );
+    }
+
+    #[test]
+    fn reordering_improves_power_law_graph() {
+        // The Figure 7 experiment in miniature.
+        let g = generators::barabasi_albert(8192, 6, 11).with_self_loops();
+        let bsb = build(&g);
+        let cfg = SimConfig::default();
+        let nat = simulate(&bsb, Order::Natural, &cfg);
+        let reo = simulate(&bsb, Order::ByTcbDesc, &cfg);
+        assert!(reo.makespan <= nat.makespan);
+        assert!(reo.balance() >= nat.balance());
+        // Work conserved: reordering changes schedule, not total work.
+        assert!((reo.total_work - nat.total_work).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uniform_graph_insensitive_to_order() {
+        // Pubmed-like: reordering should barely matter (paper §4.3).
+        let g = generators::erdos_renyi(8192, 4.5, 12).with_self_loops();
+        let bsb = build(&g);
+        let cfg = SimConfig::default();
+        let nat = simulate(&bsb, Order::Natural, &cfg);
+        let reo = simulate(&bsb, Order::ByTcbDesc, &cfg);
+        let gain = nat.makespan / reo.makespan;
+        assert!(gain < 1.1, "uniform graph gained {gain}");
+    }
+
+    #[test]
+    fn empty_windows_cost_nothing() {
+        let g = crate::graph::CsrGraph::from_edges(160, &[(0, 1)]).unwrap();
+        let bsb = build(&g);
+        let r = simulate(&bsb, Order::Natural, &SimConfig::default());
+        // only one non-empty RW
+        assert_eq!(r.active.iter().filter(|&&a| a > 0.0).count(), 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small, dependency-free substrates: PRNG, JSON, stats, timing, CLI.
+//!
+//! The build environment vendors only the `xla` dependency closure, so the
+//! usual crates (rand, serde, criterion, clap) are unavailable; these modules
+//! are deliberately small, well-tested replacements covering exactly what the
+//! reproduction needs.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod timing;

@@ -1,0 +1,140 @@
+//! Descriptive statistics used across dataset characterisation (Table 6/7)
+//! and the bench harness (mean / CV / percentiles / geomean).
+
+/// Mean of a slice (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation σ/μ — the paper's irregularity metric (Table 6).
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 0.0;
+    }
+    std_dev(xs) / m
+}
+
+/// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// p-th percentile of an already-sorted slice.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Geometric mean (the paper's cross-dataset speedup summary).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Median.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Decile (min, max) ranges of a value distribution — the paper's Table 7.
+/// Sorts ascending, splits into 10 equal-size groups, reports each group's
+/// (min, max).  Returns fewer groups for n < 10.
+pub fn decile_ranges(xs: &[f64]) -> Vec<(f64, f64)> {
+    if xs.is_empty() {
+        return vec![];
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let groups = 10.min(v.len());
+    let mut out = Vec::with_capacity(groups);
+    for g in 0..groups {
+        let lo = g * v.len() / groups;
+        let hi = ((g + 1) * v.len() / groups).max(lo + 1);
+        out.push((v[lo], v[hi - 1]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_cv() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+        assert!((cv(&xs) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let xs = [2.0, 8.0];
+        assert!((geomean(&xs) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn deciles_cover_range() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let d = decile_ranges(&xs);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0], (1.0, 10.0));
+        assert_eq!(d[9], (91.0, 100.0));
+    }
+
+    #[test]
+    fn deciles_small_input() {
+        let d = decile_ranges(&[3.0, 1.0, 2.0]);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0], (1.0, 1.0));
+        assert_eq!(d[2], (3.0, 3.0));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+        assert_eq!(cv(&[]), 0.0);
+        assert!(decile_ranges(&[]).is_empty());
+    }
+}

@@ -1,0 +1,161 @@
+//! Bench harness: warmup + timed iterations + robust summary statistics.
+//!
+//! criterion is unavailable offline; this is the measurement core used by
+//! every `cargo bench` target and the experiment binaries.  Reported numbers
+//! are medians with p10/p90 spread over per-iteration wall-clock times.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Summary of one benchmarked operation.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_s * 1e6
+    }
+
+    /// One human-readable row, used by the bench binaries.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12.3} ms  (p10 {:>10.3}, p90 {:>10.3}, n={})",
+            self.name,
+            self.median_ms(),
+            self.p10_s * 1e3,
+            self.p90_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop adding iterations once this much total time is spent measuring.
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for CI / smoke runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            target_time: Duration::from_millis(300),
+        }
+    }
+}
+
+/// Time `f` under `cfg`, returning robust summary statistics.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.min_iters);
+    let start = Instant::now();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || start.elapsed() < cfg.target_time)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &samples)
+}
+
+/// Build a [`BenchResult`] from raw per-iteration samples.
+pub fn summarize(name: &str, samples: &[f64]) -> BenchResult {
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters: v.len(),
+        median_s: stats::percentile_sorted(&v, 50.0),
+        mean_s: stats::mean(&v),
+        p10_s: stats::percentile_sorted(&v, 10.0),
+        p90_s: stats::percentile_sorted(&v, 90.0),
+        min_s: v.first().copied().unwrap_or(0.0),
+    }
+}
+
+/// Simple scoped timer for coarse phase measurements.
+pub struct Timer {
+    t0: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { t0: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0usize;
+        let cfg = BenchConfig {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 5,
+            target_time: Duration::from_millis(1),
+        };
+        let r = bench("noop", &cfg, || n += 1);
+        assert_eq!(r.iters, 5);
+        assert_eq!(n, 7); // warmup + measured
+    }
+
+    #[test]
+    fn summarize_orders_samples() {
+        let r = summarize("x", &[3.0, 1.0, 2.0]);
+        assert_eq!(r.median_s, 2.0);
+        assert_eq!(r.min_s, 1.0);
+        assert_eq!(r.iters, 3);
+    }
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Coordinator serving loop: correctness under concurrency, error paths,
+//! metrics.  Requires `make artifacts`.
+
+use std::sync::mpsc::channel;
+
+use fused3s::coordinator::{AttnRequest, Coordinator, CoordinatorConfig};
+use fused3s::graph::generators;
+use fused3s::kernels::{reference, AttentionProblem, Backend};
+use fused3s::util::prng::Rng;
+
+fn coordinator() -> Option<Coordinator> {
+    match Coordinator::start(CoordinatorConfig::default()) {
+        Ok(c) => Some(c),
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn features(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+    )
+}
+
+#[test]
+fn serves_correct_results() {
+    let Some(coord) = coordinator() else { return };
+    let g = generators::erdos_renyi(200, 4.0, 1).with_self_loops();
+    let (q, k, v) = features(g.n, 64, 2);
+    let (tx, rx) = channel();
+    coord
+        .submit(AttnRequest {
+            id: 7,
+            graph: g.clone(),
+            d: 64,
+            q: q.clone(),
+            k: k.clone(),
+            v: v.clone(),
+            scale: 0.125,
+            backend: Backend::Fused3S,
+            reply: tx,
+        })
+        .unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+    assert_eq!(resp.id, 7);
+    let out = resp.result.expect("result");
+    let x = AttentionProblem::new(g.n, 64, &q, &k, &v, 0.125);
+    let want = reference::dense_attention_host(&g, &x);
+    assert!(reference::max_abs_diff(&out, &want) < 0.15);
+    assert!(resp.latency_s > 0.0);
+    assert!(resp.preprocess_s >= 0.0 && resp.execute_s > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn serves_many_requests_in_flight() {
+    let Some(coord) = coordinator() else { return };
+    let mut rxs = Vec::new();
+    let count = 12;
+    for i in 0..count {
+        let g = generators::erdos_renyi(100 + i * 10, 4.0, i as u64)
+            .with_self_loops();
+        let (q, k, v) = features(g.n, 32, 100 + i as u64);
+        let (tx, rx) = channel();
+        coord
+            .submit(AttnRequest {
+                id: i as u64,
+                graph: g,
+                d: 32,
+                q,
+                k,
+                v,
+                scale: 1.0,
+                backend: Backend::Fused3S,
+                reply: tx,
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(300))
+            .unwrap_or_else(|_| panic!("request {i} timed out"));
+        assert!(resp.result.is_ok(), "request {i}: {:?}", resp.result.err());
+    }
+    assert_eq!(coord.metrics().completed(), count as u64);
+    assert_eq!(coord.metrics().failed(), 0);
+    let snap = coord.metrics().latency.snapshot();
+    assert_eq!(snap.count, count);
+    assert!(snap.p50_s > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn invalid_request_fails_gracefully() {
+    let Some(coord) = coordinator() else { return };
+    let g = generators::ring(64).with_self_loops();
+    let (tx, rx) = channel();
+    coord
+        .submit(AttnRequest {
+            id: 1,
+            graph: g,
+            d: 32,
+            q: vec![0.0; 10], // wrong size
+            k: vec![0.0; 10],
+            v: vec![0.0; 10],
+            scale: 1.0,
+            backend: Backend::Fused3S,
+            reply: tx,
+        })
+        .unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+    assert!(resp.result.is_err());
+    assert_eq!(coord.metrics().failed(), 1);
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_backends_served() {
+    let Some(coord) = coordinator() else { return };
+    let g = generators::sbm(4, 32, 0.1, 0.005, 3).with_self_loops();
+    let (q, k, v) = features(g.n, 64, 4);
+    let mut outs = Vec::new();
+    for (i, b) in [Backend::Fused3S, Backend::UnfusedStable, Backend::CpuCsr]
+        .into_iter()
+        .enumerate()
+    {
+        let (tx, rx) = channel();
+        coord
+            .submit(AttnRequest {
+                id: i as u64,
+                graph: g.clone(),
+                d: 64,
+                q: q.clone(),
+                k: k.clone(),
+                v: v.clone(),
+                scale: 0.5,
+                backend: b,
+                reply: tx,
+            })
+            .unwrap();
+        outs.push(
+            rx.recv_timeout(std::time::Duration::from_secs(120))
+                .unwrap()
+                .result
+                .unwrap(),
+        );
+    }
+    for pair in outs.windows(2) {
+        assert!(reference::max_abs_diff(&pair[0], &pair[1]) < 0.15);
+    }
+    coord.shutdown();
+}

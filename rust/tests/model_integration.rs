@@ -1,0 +1,104 @@
+//! Model runtimes vs host references: GT block semantics, GAT, AGNN.
+//! Requires `make artifacts`.
+
+use fused3s::graph::generators;
+use fused3s::kernels::{reference, Backend};
+use fused3s::model::agnn::{agnn_reference, AgnnLayer};
+use fused3s::model::gat::{gat_reference, GatAttention, GatLayer};
+use fused3s::model::weights::random_features;
+use fused3s::model::{GraphTransformer, GtConfig};
+use fused3s::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::from_default_artifacts() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn gt_inference_runs_and_is_finite() {
+    let Some(rt) = runtime() else { return };
+    let g = generators::erdos_renyi(300, 5.0, 1).with_self_loops();
+    let cfg = GtConfig { d: 64, n_blocks: 2, backend: Backend::Fused3S, seed: 3 };
+    let model = GraphTransformer::prepare(&rt, &g, cfg).unwrap();
+    let h = random_features(4, g.n, 64);
+    let (out, t) = model.infer(&rt, &h).unwrap();
+    assert_eq!(out.len(), g.n * 64);
+    assert!(out.iter().all(|x| x.is_finite()));
+    assert!(t.total_s > 0.0);
+    assert!(t.attention_s > 0.0 && t.attention_s < t.total_s);
+    // LayerNorm at the block output: per-row mean ~ 0 (unit gamma, zero beta).
+    for i in 0..g.n {
+        let row = &out[i * 64..(i + 1) * 64];
+        let mean: f32 = row.iter().sum::<f32>() / 64.0;
+        assert!(mean.abs() < 1e-2, "row {i} mean {mean}");
+    }
+}
+
+#[test]
+fn gt_backends_agree() {
+    // Fig. 8's premise: all kernels compute the same model.
+    let Some(rt) = runtime() else { return };
+    let g = generators::sbm(6, 32, 0.12, 0.004, 2).with_self_loops();
+    let h = random_features(5, g.n, 64);
+    let mut outs = Vec::new();
+    for b in [Backend::Fused3S, Backend::UnfusedStable, Backend::DfGnnLike] {
+        let cfg = GtConfig { d: 64, n_blocks: 2, backend: b, seed: 3 };
+        let model = GraphTransformer::prepare(&rt, &g, cfg).unwrap();
+        outs.push(model.infer(&rt, &h).unwrap().0);
+    }
+    for pair in outs.windows(2) {
+        let err = reference::max_abs_diff(&pair[0], &pair[1]);
+        // LayerNorm renormalises per block, keeping bf16 drift bounded.
+        assert!(err < 0.35, "backends disagree: {err}");
+    }
+}
+
+#[test]
+fn gt_rejects_bad_config() {
+    let Some(rt) = runtime() else { return };
+    let g = generators::ring(64).with_self_loops();
+    // d not multiple of head width
+    assert!(GraphTransformer::prepare(
+        &rt,
+        &g,
+        GtConfig { d: 48, n_blocks: 1, backend: Backend::Fused3S, seed: 0 }
+    )
+    .is_err());
+    // d without dense-op artifacts
+    assert!(GraphTransformer::prepare(
+        &rt,
+        &g,
+        GtConfig { d: 32, n_blocks: 1, backend: Backend::Fused3S, seed: 0 }
+    )
+    .is_err());
+}
+
+#[test]
+fn gat_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let g = generators::erdos_renyi(400, 5.0, 7).with_self_loops();
+    let layer = GatLayer::generate(8, 16, 64);
+    let att = GatAttention::prepare(rt.manifest(), &g).unwrap();
+    let h = random_features(9, g.n, 16);
+    let got = att.forward(&rt, &layer, &h, g.n).unwrap();
+    let want = gat_reference(&g, &layer, &h, g.n);
+    let err = reference::max_abs_diff(&got, &want);
+    assert!(err < 0.15, "GAT max err {err}");
+}
+
+#[test]
+fn agnn_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let g = generators::barabasi_albert(500, 4, 10).with_self_loops();
+    let layer = AgnnLayer::prepare(&rt, &g, 1.8).unwrap();
+    let h = random_features(11, g.n, 64);
+    let got = layer.forward(&rt, &h, g.n, 64).unwrap();
+    let want = agnn_reference(&g, &h, g.n, 64, 1.8);
+    let err = reference::max_abs_diff(&got, &want);
+    assert!(err < 0.1, "AGNN max err {err}");
+}

@@ -1,0 +1,229 @@
+//! Property tests over the L3 coordinator invariants (hand-rolled
+//! deterministic case generation; proptest is unavailable offline).
+//!
+//! Each property runs over a few dozen randomly-generated graphs spanning
+//! the generator zoo.  These are the invariants the whole stack leans on:
+//! BSB round-trips exactly, plans cover every row window exactly once,
+//! padding/reordering are output-invariant, footprint models are monotone,
+//! and the scheduler conserves work.
+
+use fused3s::bsb::bucket::{covers_all_rws, plan};
+use fused3s::bsb::reorder::{is_permutation, schedule, Order};
+use fused3s::bsb::{self, bitmap, footprint, stats};
+use fused3s::graph::{batch, generators, CsrGraph};
+use fused3s::simulator::{simulate, SimConfig};
+use fused3s::util::prng::Rng;
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+
+/// A zoo of random graphs covering the regimes of Table 6.
+fn graph_zoo(cases: usize, seed: u64) -> Vec<CsrGraph> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for i in 0..cases {
+        let n = rng.range(1, 2000);
+        let g = match i % 6 {
+            0 => generators::erdos_renyi(n, rng.f64() * 8.0, rng.next_u64()),
+            1 => {
+                let m = rng.range(1, 6);
+                generators::barabasi_albert(n.max(m + 1), m, rng.next_u64())
+            }
+            2 => generators::rmat(
+                (7 + rng.below(4)) as u32,
+                1 + rng.below(12),
+                0.5,
+                0.2,
+                0.2,
+                rng.next_u64(),
+            ),
+            3 => generators::grid2d(rng.range(1, 40), rng.range(1, 40)),
+            4 => {
+                let (g, _) = batch::batched_dataset(
+                    rng.range(2, 30),
+                    4,
+                    40,
+                    rng.next_u64(),
+                    batch::BatchKind::Molecule,
+                );
+                g
+            }
+            _ => generators::star(n.max(2)),
+        };
+        out.push(if rng.coin(0.5) { g.with_self_loops() } else { g });
+    }
+    out
+}
+
+#[test]
+fn prop_bsb_roundtrip_exact() {
+    for (i, g) in graph_zoo(36, 100).iter().enumerate() {
+        for b in [bsb::build(g), bsb::build_bcsr_like(g)] {
+            let mut edges = b.reconstruct_edges();
+            edges.sort_unstable();
+            let mut expect: Vec<(u32, u32)> = (0..g.n)
+                .flat_map(|u| g.row(u).iter().map(move |&v| (u as u32, v)))
+                .collect();
+            expect.sort_unstable();
+            assert_eq!(edges, expect, "case {i}: BSB round-trip mismatch");
+        }
+    }
+}
+
+#[test]
+fn prop_bsb_nnz_conserved() {
+    for g in graph_zoo(36, 200) {
+        let b = bsb::build(&g);
+        let total: u32 = b.nnz_per_tcb().iter().sum();
+        assert_eq!(total as usize, g.nnz());
+        assert_eq!(b.nnz, g.nnz());
+    }
+}
+
+#[test]
+fn prop_compaction_never_increases_tcbs() {
+    for g in graph_zoo(24, 300) {
+        let c = bsb::build(&g).total_tcbs();
+        let nc = bsb::build_bcsr_like(&g).total_tcbs();
+        assert!(c <= nc, "compaction increased TCB count ({c} > {nc})");
+    }
+}
+
+#[test]
+fn prop_schedules_are_permutations() {
+    for g in graph_zoo(24, 400) {
+        let b = bsb::build(&g);
+        for order in [Order::Natural, Order::ByTcbDesc] {
+            let s = schedule(&b, order);
+            assert!(is_permutation(&s, b.num_rw));
+        }
+    }
+}
+
+#[test]
+fn prop_plan_partitions_row_windows() {
+    let mut rng = Rng::new(500);
+    for g in graph_zoo(36, 500) {
+        let b = bsb::build(&g);
+        let batch_size = rng.range(1, 64);
+        let order = if rng.coin(0.5) { Order::Natural } else { Order::ByTcbDesc };
+        let p = plan(&b, BUCKETS, batch_size, order, 128);
+        assert!(
+            covers_all_rws(&p, b.num_rw),
+            "plan must cover each RW exactly once (batch={batch_size})"
+        );
+        // Every dispatched RW fits its bucket.
+        for c in &p.calls {
+            for &rw in &c.rws {
+                assert!(b.rw_tcbs(rw as usize) <= c.t_bucket);
+                assert!(b.rw_tcbs(rw as usize) > 0);
+            }
+            assert!(c.rws.len() <= batch_size);
+        }
+        // Chunk counts are exact.
+        for c in &p.chunked {
+            let t = b.rw_tcbs(c.rw as usize);
+            assert_eq!(c.n_chunks, t.div_ceil(128));
+            assert!(t > *BUCKETS.last().unwrap());
+        }
+        // Skipped = empty.
+        for &rw in &p.skipped {
+            assert_eq!(b.rw_tcbs(rw as usize), 0);
+        }
+    }
+}
+
+#[test]
+fn prop_bitmap_pack_unpack_identity() {
+    let mut rng = Rng::new(600);
+    for _ in 0..200 {
+        let mut bm = bitmap::EMPTY;
+        let mut expect = [[false; 8]; 16];
+        for _ in 0..rng.below(40) {
+            let (r, c) = (rng.below(16), rng.below(8));
+            bitmap::set(&mut bm, r, c);
+            expect[r][c] = true;
+        }
+        for (r, row) in expect.iter().enumerate() {
+            for (c, &want) in row.iter().enumerate() {
+                assert_eq!(bitmap::get(&bm, r, c), want);
+            }
+        }
+        let nnz: u32 = expect.iter().flatten().map(|&b| b as u32).sum();
+        assert_eq!(bitmap::popcount(&bm), nnz);
+    }
+}
+
+#[test]
+fn prop_footprints_positive_and_ordered() {
+    for g in graph_zoo(18, 700) {
+        if g.nnz() == 0 {
+            continue;
+        }
+        let f = footprint::measure(&g);
+        let rows = footprint::table3_rows(&f);
+        for &(name, bits) in &rows {
+            assert!(bits > 0, "{name} footprint must be positive");
+        }
+        // Value-storing block formats always dominate BSB (they store
+        // b*rc fp32 values where BSB stores b*rc bits).
+        let get = |n: &str| rows.iter().find(|(x, _)| *x == n).unwrap().1;
+        assert!(get("BSB") < get("BCSR"));
+        assert!(get("BSB") < get("SR-BCSR"));
+        assert!(get("BSB") < get("ME-BCRS"));
+    }
+}
+
+#[test]
+fn prop_simulator_conserves_work() {
+    for g in graph_zoo(18, 800) {
+        let b = bsb::build(&g);
+        let cfg = SimConfig::default();
+        let nat = simulate(&b, Order::Natural, &cfg);
+        let reo = simulate(&b, Order::ByTcbDesc, &cfg);
+        assert!((nat.total_work - reo.total_work).abs() < 1e-9);
+        // Makespan bounds: ideal <= makespan <= total work.
+        for r in [&nat, &reo] {
+            let ideal = r.total_work / cfg.num_sms as f64;
+            assert!(r.makespan + 1e-9 >= ideal);
+            assert!(r.makespan <= r.total_work + 1e-9);
+            let sum_active: f64 = r.active.iter().sum();
+            assert!((sum_active - r.total_work).abs() < 1e-6);
+        }
+        // LPT is never worse on makespan in this greedy model.
+        assert!(reo.makespan <= nat.makespan + 1e-9);
+    }
+}
+
+#[test]
+fn prop_graph_generators_well_formed() {
+    for g in graph_zoo(36, 900) {
+        // CSR invariants.
+        assert_eq!(g.indptr.len(), g.n + 1);
+        assert_eq!(g.indptr[0], 0);
+        assert_eq!(g.indptr[g.n] as usize, g.nnz());
+        for i in 0..g.n {
+            let row = g.row(i);
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "rows sorted + deduped");
+            }
+            for &c in row {
+                assert!((c as usize) < g.n);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_stats_cv_nonnegative_and_scaleless() {
+    for g in graph_zoo(12, 1000) {
+        let b = bsb::build(&g);
+        if b.total_tcbs() == 0 {
+            continue;
+        }
+        let st = stats::compaction_stats(&b);
+        assert!(st.tcb_per_rw_cv >= 0.0);
+        assert!(st.nnz_per_tcb_cv >= 0.0);
+        assert!(st.tcb_per_rw_avg >= 1.0);
+        assert!(st.nnz_per_tcb_avg >= 1.0 && st.nnz_per_tcb_avg <= 128.0);
+    }
+}

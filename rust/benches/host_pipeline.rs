@@ -1,0 +1,99 @@
+//! `cargo bench host_pipeline` — the host execution engine sweep
+//! (EXPERIMENTS.md §Perf): end-to-end host path (parallel BSB build +
+//! bucket plan + slot-parallel gathers + pipelined dispatch/scatter through
+//! the offline host kernel) over `threads ∈ {1,2,4,8}` ×
+//! `pipeline_depth ∈ {1,2}` on the `erdos_renyi(65536, 8.0)` workload.
+//!
+//! Prints one JSON row per config (machine-readable for the BENCH_*
+//! trajectory) plus a human-readable table.  Every config's output is
+//! checked bit-identical against the serial policy before its row prints.
+//!
+//! Env knobs: `F3S_BENCH_FULL=1` for full iteration counts,
+//! `F3S_HOST_BENCH_N=<n>` to shrink the graph for smoke runs.
+
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy, HostExecutor};
+use fused3s::graph::generators;
+use fused3s::kernels::fused::{FusedDriver, FusedOpts};
+use fused3s::kernels::AttentionProblem;
+use fused3s::util::prng::Rng;
+use fused3s::util::timing::{bench, BenchConfig};
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let n: usize = std::env::var("F3S_HOST_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(65536);
+    let deg = 8.0;
+    let d = 64;
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+
+    println!("host_pipeline: erdos_renyi({n}, {deg}) d={d} (full={full})");
+    let g = generators::erdos_renyi(n, deg, 1).with_self_loops();
+    let mut rng = Rng::new(2);
+    let q = rng.normal_vec(n * d, 1.0);
+    let k = rng.normal_vec(n * d, 1.0);
+    let v = rng.normal_vec(n * d, 1.0);
+    let x = AttentionProblem::new(n, d, &q, &k, &v, 0.125);
+    let man = offline_manifest(32, BUCKETS, 128);
+    let opts = FusedOpts::default();
+
+    // Serial reference: the baseline row and the bit-exactness oracle.
+    let serial = Engine::serial();
+    let serial_driver =
+        FusedDriver::new(&man, &g, opts).expect("serial driver");
+    let want = serial_driver
+        .run_exec(&x, &serial, &mut HostExecutor::new(&serial.pool))
+        .expect("serial run");
+
+    let mut serial_e2e = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        for depth in [1usize, 2] {
+            let policy = ExecPolicy { threads, pipeline_depth: depth };
+            let engine = Engine::new(policy);
+            let driver = FusedDriver::new_with(&man, &g, opts, &engine)
+                .expect("driver");
+            assert_eq!(driver.bsb, serial_driver.bsb, "BSB build must match");
+            let got = driver
+                .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+                .expect("run");
+            let bit_identical = got == want;
+            assert!(bit_identical, "threads={threads} depth={depth} diverged");
+
+            let build = bench(
+                &format!("build t{threads}"),
+                &cfg,
+                || {
+                    let b = FusedDriver::new_with(&man, &g, opts, &engine)
+                        .expect("driver");
+                    assert!(b.plan.stats.real_tcbs > 0);
+                },
+            );
+            let run = bench(&format!("run t{threads} p{depth}"), &cfg, || {
+                let out = driver
+                    .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+                    .expect("run");
+                assert_eq!(out.len(), n * d);
+            });
+            let e2e_ms = build.median_ms() + run.median_ms();
+            if threads == 1 && depth == 1 {
+                serial_e2e = e2e_ms;
+            }
+            let speedup = if e2e_ms > 0.0 { serial_e2e / e2e_ms } else { 0.0 };
+            println!(
+                "{{\"bench\":\"host_pipeline\",\"n\":{n},\"deg\":{deg},\"d\":{d},\
+                 \"threads\":{threads},\"pipeline_depth\":{depth},\
+                 \"build_ms\":{:.3},\"run_ms\":{:.3},\"e2e_ms\":{:.3},\
+                 \"speedup_e2e\":{:.3},\"bit_identical\":{bit_identical}}}",
+                build.median_ms(),
+                run.median_ms(),
+                e2e_ms,
+                speedup,
+            );
+            println!("  {}", build.row());
+            println!("  {}", run.row());
+        }
+    }
+}

@@ -10,6 +10,7 @@
 //!   is strictly larger.  Used by the DF-GNN-analog baseline and the
 //!   compaction ablation.
 
+use crate::exec::WorkerPool;
 use crate::graph::CsrGraph;
 use crate::{TCB_C, TCB_R};
 
@@ -97,89 +98,210 @@ impl Bsb {
     }
 }
 
-/// Build BSB with column compaction (the paper's format).
+/// Build BSB with column compaction (the paper's format), serially.
 pub fn build(g: &CsrGraph) -> Bsb {
-    build_impl(g, true)
+    build_impl(g, true, &WorkerPool::new(1))
 }
 
 /// Build without compaction: TCBs on fixed 8-column boundaries (BCSR-like).
 pub fn build_bcsr_like(g: &CsrGraph) -> Bsb {
-    build_impl(g, false)
+    build_impl(g, false, &WorkerPool::new(1))
 }
 
-fn build_impl(g: &CsrGraph, compact: bool) -> Bsb {
+/// Build BSB with row windows sharded across the pool.  Row windows are
+/// independent; shards are contiguous RW ranges stitched back in order, so
+/// the result is **equal** (`==`) to the serial [`build`] for every pool
+/// width (pinned by `rust/tests/exec_parallel.rs`).
+pub fn build_with(g: &CsrGraph, pool: &WorkerPool) -> Bsb {
+    build_impl(g, true, pool)
+}
+
+/// Parallel variant of [`build_bcsr_like`].
+pub fn build_bcsr_like_with(g: &CsrGraph, pool: &WorkerPool) -> Bsb {
+    build_impl(g, false, pool)
+}
+
+/// One shard's contribution: per-RW TCB counts plus the shard's stretch of
+/// the `sptd` / `bitmaps` arrays.
+struct ShardBlocks {
+    tcb_counts: Vec<u32>,
+    sptd: Vec<u32>,
+    bitmaps: Vec<Bitmap>,
+}
+
+fn build_impl(g: &CsrGraph, compact: bool, pool: &WorkerPool) -> Bsb {
     let n = g.n;
     let num_rw = n.div_ceil(TCB_R);
+    // Below ~4 RWs per worker the scoped-spawn overhead beats the win.
+    let go_serial = pool.is_serial() || num_rw < 4 * pool.threads();
+    let shards: Vec<ShardBlocks> = if go_serial {
+        vec![build_rw_range(g, compact, 0..num_rw)]
+    } else {
+        pool.map_ranges(num_rw, |rws| build_rw_range(g, compact, rws))
+    };
+
+    // Stitch: shard results arrive in RW order, so concatenation plus a
+    // running prefix sum over TCB counts reproduces the serial layout.
+    let total_tcbs: usize = shards.iter().map(|s| s.bitmaps.len()).sum();
     let mut tro = Vec::with_capacity(num_rw + 1);
     tro.push(0u32);
-    let mut sptd: Vec<u32> = Vec::new();
-    let mut bitmaps: Vec<Bitmap> = Vec::new();
-    // Scratch: the union of column ids present in this row window.
-    let mut cols_scratch: Vec<u32> = Vec::new();
-
-    for rw in 0..num_rw {
-        let row_lo = rw * TCB_R;
-        let row_hi = (row_lo + TCB_R).min(n);
-
-        cols_scratch.clear();
-        for row in row_lo..row_hi {
-            cols_scratch.extend_from_slice(g.row(row));
+    let mut sptd: Vec<u32> = Vec::with_capacity(total_tcbs * TCB_C);
+    let mut bitmaps: Vec<Bitmap> = Vec::with_capacity(total_tcbs);
+    for shard in shards {
+        for count in shard.tcb_counts {
+            let next = *tro.last().unwrap() + count;
+            tro.push(next);
         }
-        cols_scratch.sort_unstable();
-        cols_scratch.dedup();
-
-        if cols_scratch.is_empty() {
-            tro.push(*tro.last().unwrap());
-            continue;
-        }
-
-        // The window's column list: compacted = the distinct nonzero columns;
-        // BCSR-like = every column of each occupied 8-aligned block.
-        let window_cols: Vec<u32> = if compact {
-            cols_scratch.clone()
-        } else {
-            let mut blocks: Vec<u32> =
-                cols_scratch.iter().map(|&c| c / TCB_C as u32).collect();
-            blocks.dedup();
-            blocks
-                .iter()
-                .flat_map(|&b| (0..TCB_C as u32).map(move |j| b * TCB_C as u32 + j))
-                .collect()
-        };
-
-        let num_tcb = window_cols.len().div_ceil(TCB_C);
-        let tcb_base = bitmaps.len();
-        for t in 0..num_tcb {
-            let lo = t * TCB_C;
-            let hi = (lo + TCB_C).min(window_cols.len());
-            for j in 0..TCB_C {
-                // BCSR-like 8-aligned blocks can nominally cover columns
-                // beyond n-1; those slots carry no nonzeros — store the
-                // sentinel so gathers never touch out-of-range rows.
-                let col = if lo + j < hi { window_cols[lo + j] } else { PAD_COL };
-                sptd.push(if col != PAD_COL && (col as usize) < n {
-                    col
-                } else {
-                    PAD_COL
-                });
-            }
-            bitmaps.push(bitmap::EMPTY);
-        }
-
-        // Fill bitmaps: binary-search each CSR entry's column in window_cols.
-        for row in row_lo..row_hi {
-            let r = row - row_lo;
-            for &c in g.row(row) {
-                let pos = window_cols.binary_search(&c).expect("col present");
-                let t = pos / TCB_C;
-                let j = pos % TCB_C;
-                bitmap::set(&mut bitmaps[tcb_base + t], r, j);
-            }
-        }
-        tro.push(bitmaps.len() as u32);
+        sptd.extend_from_slice(&shard.sptd);
+        bitmaps.extend_from_slice(&shard.bitmaps);
     }
 
     Bsb { n, num_rw, tro, sptd, bitmaps, nnz: g.nnz() }
+}
+
+fn build_rw_range(
+    g: &CsrGraph,
+    compact: bool,
+    rws: std::ops::Range<usize>,
+) -> ShardBlocks {
+    let mut out = ShardBlocks {
+        tcb_counts: Vec::with_capacity(rws.len()),
+        sptd: Vec::new(),
+        bitmaps: Vec::new(),
+    };
+    let mut scratch = WindowScratch::new(g.n);
+    for rw in rws {
+        let count =
+            build_window(g, rw, compact, &mut scratch, &mut out.sptd, &mut out.bitmaps);
+        out.tcb_counts.push(count);
+    }
+    out
+}
+
+/// Per-worker scratch reused across the shard's row windows.
+struct WindowScratch {
+    /// Distinct (sorted) column ids present in the current row window.
+    cols: Vec<u32>,
+    /// Expanded block-column list (BCSR-like mode only).
+    bcsr_cols: Vec<u32>,
+    pos: ColPosMap,
+}
+
+impl WindowScratch {
+    fn new(n: usize) -> WindowScratch {
+        WindowScratch {
+            cols: Vec::new(),
+            bcsr_cols: Vec::new(),
+            pos: ColPosMap::new(n + TCB_C),
+        }
+    }
+}
+
+/// Epoch-stamped column → compacted-position map: O(w) to rebuild per
+/// window, O(1) exact lookups per edge.  Replaces the former per-edge
+/// `binary_search` over the window column list, which was O(nnz·log w) on
+/// the preprocessing path the coordinator runs per request.
+struct ColPosMap {
+    pos: Vec<u32>,
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl ColPosMap {
+    fn new(n: usize) -> ColPosMap {
+        ColPosMap { pos: vec![0; n], stamp: vec![0; n], epoch: 0 }
+    }
+
+    /// Point the map at a new window's column list (stamps invalidate the
+    /// previous window's entries in O(1)).
+    fn rebuild(&mut self, cols: &[u32]) {
+        self.epoch += 1;
+        for (p, &c) in cols.iter().enumerate() {
+            self.pos[c as usize] = p as u32;
+            self.stamp[c as usize] = self.epoch;
+        }
+    }
+
+    fn get(&self, col: u32) -> u32 {
+        debug_assert_eq!(self.stamp[col as usize], self.epoch, "col present");
+        self.pos[col as usize]
+    }
+}
+
+/// Append one row window's TCBs to `sptd`/`bitmaps`; returns its TCB count.
+fn build_window(
+    g: &CsrGraph,
+    rw: usize,
+    compact: bool,
+    scratch: &mut WindowScratch,
+    sptd: &mut Vec<u32>,
+    bitmaps: &mut Vec<Bitmap>,
+) -> u32 {
+    let n = g.n;
+    let row_lo = rw * TCB_R;
+    let row_hi = (row_lo + TCB_R).min(n);
+
+    let cols = &mut scratch.cols;
+    cols.clear();
+    for row in row_lo..row_hi {
+        cols.extend_from_slice(g.row(row));
+    }
+    cols.sort_unstable();
+    cols.dedup();
+    if cols.is_empty() {
+        return 0;
+    }
+
+    // The window's column list: compacted = the distinct nonzero columns
+    // (used in place, no copy); BCSR-like = every column of each occupied
+    // 8-aligned block.
+    let window_cols: &[u32] = if compact {
+        cols
+    } else {
+        let bcsr = &mut scratch.bcsr_cols;
+        bcsr.clear();
+        let mut last_block = u32::MAX;
+        for &c in cols.iter() {
+            let block = c / TCB_C as u32;
+            if block != last_block {
+                last_block = block;
+                bcsr.extend((0..TCB_C as u32).map(|j| block * TCB_C as u32 + j));
+            }
+        }
+        bcsr
+    };
+
+    let num_tcb = window_cols.len().div_ceil(TCB_C);
+    let tcb_base = bitmaps.len();
+    for t in 0..num_tcb {
+        let lo = t * TCB_C;
+        let hi = (lo + TCB_C).min(window_cols.len());
+        for j in 0..TCB_C {
+            // BCSR-like 8-aligned blocks can nominally cover columns
+            // beyond n-1; those slots carry no nonzeros — store the
+            // sentinel so gathers never touch out-of-range rows.
+            let col = if lo + j < hi { window_cols[lo + j] } else { PAD_COL };
+            sptd.push(if col != PAD_COL && (col as usize) < n {
+                col
+            } else {
+                PAD_COL
+            });
+        }
+        bitmaps.push(bitmap::EMPTY);
+    }
+
+    // Fill bitmaps through the O(1) column→position map.
+    scratch.pos.rebuild(window_cols);
+    for row in row_lo..row_hi {
+        let r = row - row_lo;
+        for &c in g.row(row) {
+            let pos = scratch.pos.get(c) as usize;
+            let t = pos / TCB_C;
+            let j = pos % TCB_C;
+            bitmap::set(&mut bitmaps[tcb_base + t], r, j);
+        }
+    }
+    num_tcb as u32
 }
 
 #[cfg(test)]
@@ -284,6 +406,20 @@ mod tests {
         let bsb = build(&g);
         assert_eq!(bsb.rw_tcbs(0), 13);
         roundtrip_check(&g, &bsb);
+    }
+
+    #[test]
+    fn parallel_build_equals_serial() {
+        let pool = WorkerPool::new(4);
+        for (n, deg, seed) in [(1500, 6.0, 1u64), (4096, 3.0, 2), (257, 9.0, 3)] {
+            let g = generators::erdos_renyi(n, deg, seed);
+            assert_eq!(build(&g), build_with(&g, &pool), "n={n}");
+            assert_eq!(
+                build_bcsr_like(&g),
+                build_bcsr_like_with(&g, &pool),
+                "n={n} (bcsr)"
+            );
+        }
     }
 
     #[test]

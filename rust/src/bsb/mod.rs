@@ -27,7 +27,7 @@ pub mod reorder;
 pub mod serialize;
 pub mod stats;
 
-pub use builder::{build, build_bcsr_like, Bsb};
+pub use builder::{build, build_bcsr_like, build_bcsr_like_with, build_with, Bsb};
 
 /// Row-window height r (rows per window = rows per TCB).
 pub const RW: usize = crate::TCB_R;

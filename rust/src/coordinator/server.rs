@@ -5,6 +5,12 @@
 //! pure CPU) happens on a small worker pool in front of it.  This mirrors
 //! the paper's split between per-graph preprocessing ("negligible overhead,
 //! done once per input graph") and kernel execution.
+//!
+//! Host parallelism: one shared [`Engine`] (worker pool + call-buffer
+//! arena, EXPERIMENTS.md §Perf) is threaded through both stages — the
+//! preprocessing workers shard each request's BSB build across it, and the
+//! executor runs every driver through its gather/dispatch/scatter pipeline —
+//! instead of each stage spawning ad-hoc threads with private buffers.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -15,6 +21,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::exec::{Engine, ExecPolicy};
 use crate::kernels::{AttentionProblem, Driver};
 use crate::runtime::{Manifest, Runtime};
 
@@ -30,6 +37,8 @@ pub struct CoordinatorConfig {
     /// Bound on the ingress queue before `submit` blocks the caller
     /// (backpressure).
     pub queue_capacity: usize,
+    /// Host execution policy shared by preprocessing and the executor.
+    pub exec: ExecPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -38,6 +47,7 @@ impl Default for CoordinatorConfig {
             artifacts_dir: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
             preprocess_workers: 2,
             queue_capacity: 64,
+            exec: ExecPolicy::auto(),
         }
     }
 }
@@ -74,6 +84,10 @@ impl Coordinator {
 
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
+        // One engine for the whole coordinator: preprocessing shards BSB
+        // builds across its pool, the executor pipelines calls through it,
+        // and its buffer arena recycles staging memory across requests.
+        let engine = Arc::new(Engine::new(cfg.exec));
         let (ingress_tx, ingress_rx) = channel::<AttnRequest>();
         let (prep_tx, prep_rx) = channel::<PreparedRequest>();
         let ingress_rx = Arc::new(std::sync::Mutex::new(ingress_rx));
@@ -83,8 +97,9 @@ impl Coordinator {
             let tx = prep_tx.clone();
             let stop = shutdown.clone();
             let man = manifest.clone();
+            let eng = engine.clone();
             workers.push(std::thread::spawn(move || {
-                preprocess_worker(rx, tx, stop, man)
+                preprocess_worker(rx, tx, stop, man, eng)
             }));
         }
         drop(prep_tx);
@@ -93,6 +108,7 @@ impl Coordinator {
         // thread; startup errors are reported back before `start` returns.
         let m2 = metrics.clone();
         let dir = cfg.artifacts_dir.clone();
+        let eng = engine.clone();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let executor = std::thread::spawn(move || {
             let rt = match Runtime::new(&dir) {
@@ -105,7 +121,7 @@ impl Coordinator {
                     return;
                 }
             };
-            executor_loop(rt, prep_rx, m2)
+            executor_loop(rt, prep_rx, m2, eng)
         });
         ready_rx
             .recv()
@@ -150,6 +166,7 @@ fn preprocess_worker(
     tx: Sender<PreparedRequest>,
     stop: Arc<AtomicBool>,
     man: Arc<Manifest>,
+    engine: Arc<Engine>,
 ) {
     loop {
         let req = {
@@ -169,7 +186,7 @@ fn preprocess_worker(
         let t0 = Instant::now();
         let driver = match req.validate() {
             Err(e) => Err(e),
-            Ok(()) => Driver::prepare_with(&man, &req.graph, req.backend)
+            Ok(()) => Driver::prepare_on(&man, &req.graph, req.backend, &engine)
                 .map_err(|e| format!("{e:#}")),
         };
         let prepared = PreparedRequest {
@@ -188,6 +205,7 @@ fn executor_loop(
     rt: Runtime,
     rx: Receiver<PreparedRequest>,
     metrics: Arc<Metrics>,
+    engine: Arc<Engine>,
 ) {
     while let Ok(p) = rx.recv() {
         let t0 = Instant::now();
@@ -202,7 +220,7 @@ fn executor_loop(
                     &p.req.v,
                     p.req.scale,
                 );
-                driver.run(&rt, &x).map_err(|e| format!("{e:#}"))
+                driver.run_with(&rt, &x, &engine).map_err(|e| format!("{e:#}"))
             }
         };
         let execute_s = t0.elapsed().as_secs_f64();

@@ -1,0 +1,70 @@
+//! A recycling arena for [`CallBuffers`] — the per-call Q/K̂/V̂/bitmap
+//! staging allocations.
+//!
+//! Buffer-reuse invariant (EXPERIMENTS.md §Perf): a `CallBuffers` handed
+//! back by [`BufferPool::release`] keeps its heap capacity, and
+//! `CallBuffers::reset` only zeroes the bitmap words — stale f32 payload is
+//! masked by zero bitmap bits, so recycling buffers across calls *and across
+//! coordinator requests* is numerically exact while skipping the dominant
+//! per-call memset.  The pool is `Sync`; the engine and the coordinator
+//! share one instance so steady-state serving performs no staging
+//! allocations at all.
+
+use std::sync::Mutex;
+
+use crate::kernels::gather::CallBuffers;
+
+/// Thread-safe free list of recycled call buffers.
+#[derive(Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<CallBuffers>>,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// Take a recycled buffer, or a fresh empty one if the pool is dry.
+    /// Callers must `reset` it for their call shape before gathering.
+    pub fn acquire(&self) -> CallBuffers {
+        self.free.lock().expect("buffer pool poisoned").pop().unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn release(&self, bufs: CallBuffers) {
+        self.free.lock().expect("buffer pool poisoned").push(bufs);
+    }
+
+    /// Number of buffers currently pooled (tests/metrics).
+    pub fn available(&self) -> usize {
+        self.free.lock().expect("buffer pool poisoned").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_recycles_capacity() {
+        let pool = BufferPool::new();
+        assert_eq!(pool.available(), 0);
+        let mut b = pool.acquire();
+        b.reset(4, 8, 16, 16);
+        let cap = b.q.capacity();
+        assert!(cap >= 4 * 16 * 16);
+        pool.release(b);
+        assert_eq!(pool.available(), 1);
+        let b2 = pool.acquire();
+        assert_eq!(b2.q.capacity(), cap);
+        assert_eq!(pool.available(), 0);
+    }
+
+    #[test]
+    fn dry_pool_hands_out_fresh_buffers() {
+        let pool = BufferPool::new();
+        let b = pool.acquire();
+        assert!(b.q.is_empty() && b.bm.is_empty());
+    }
+}

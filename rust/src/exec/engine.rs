@@ -1,0 +1,348 @@
+//! The pipelined host execution engine.
+//!
+//! The fused/unfused drivers decompose each kernel call into three host
+//! stages:
+//!
+//! 1. **gather** — fill a [`CallBuffers`] with the call's Q block, K̂/V̂ row
+//!    stacks and TCB bitmaps (CPU + memory bound, embarrassingly parallel
+//!    per batch slot);
+//! 2. **dispatch** — hand the staged buffers to the executor (PJRT upload +
+//!    kernel execution, or the offline host emulation).  PJRT clients are
+//!    not `Send`, so dispatch always runs on the calling thread;
+//! 3. **scatter** — commit the call's output blocks into the result matrix
+//!    (or fold partial-softmax chunks into merge state).
+//!
+//! [`Engine::run_pipeline`] overlaps the three stages with a double-buffered
+//! software pipeline: while call *i* dispatches on the calling thread, a
+//! scoped gather worker stages call *i+1* into a second buffer, and a
+//! scoped scatter worker commits call *i−1*.  Buffers circulate through a
+//! free-list channel (capacity = `pipeline_depth`) backed by the shared
+//! [`BufferPool`], so steady state performs zero staging allocations.
+//!
+//! Determinism: gather order, dispatch order, and scatter order are all the
+//! schedule order — the pipeline only changes *when* stages run, never what
+//! they compute or in which sequence outputs are committed.  Together with
+//! the slot-sharded gathers writing disjoint slices, every `ExecPolicy`
+//! produces **bit-identical** output (pinned by `rust/tests/exec_parallel.rs`).
+
+use anyhow::{anyhow, Result};
+
+use crate::bsb::bucket::Call;
+use crate::bsb::Bsb;
+use crate::kernels::gather::{self, CallBuffers};
+use crate::kernels::AttentionProblem;
+
+use super::bufpool::BufferPool;
+use super::pool::WorkerPool;
+
+/// Host-execution knobs (the ablation axes of the host-pipeline bench).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecPolicy {
+    /// Fan-out width for parallel stages (BSB build shards, gather slots,
+    /// host-kernel slots).  1 = fully serial reference.
+    pub threads: usize,
+    /// Call buffers in flight.  1 = stages run back-to-back per call;
+    /// 2 = classic double buffering (gather of call *i+1* overlaps dispatch
+    /// of call *i*).  Values above the call count are clamped.
+    pub pipeline_depth: usize,
+}
+
+impl ExecPolicy {
+    /// The deterministic serial reference policy.
+    pub fn serial() -> ExecPolicy {
+        ExecPolicy { threads: 1, pipeline_depth: 1 }
+    }
+
+    /// Machine-sized policy: all available cores, double buffering.
+    pub fn auto() -> ExecPolicy {
+        ExecPolicy { threads: WorkerPool::auto().threads(), pipeline_depth: 2 }
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.threads <= 1 && self.pipeline_depth <= 1
+    }
+}
+
+impl Default for ExecPolicy {
+    fn default() -> Self {
+        ExecPolicy::auto()
+    }
+}
+
+/// Shared host-execution context: policy + worker pool + buffer arena.
+/// One `Engine` serves a whole process (the coordinator shares its engine
+/// between preprocessing workers and the executor thread).
+pub struct Engine {
+    pub policy: ExecPolicy,
+    pub pool: WorkerPool,
+    pub buffers: BufferPool,
+}
+
+impl Engine {
+    pub fn new(policy: ExecPolicy) -> Engine {
+        Engine {
+            policy,
+            pool: WorkerPool::new(policy.threads),
+            buffers: BufferPool::new(),
+        }
+    }
+
+    /// The serial reference engine (what `Driver::run` uses).
+    pub fn serial() -> Engine {
+        Engine::new(ExecPolicy::serial())
+    }
+
+    /// Machine-sized engine.
+    pub fn auto() -> Engine {
+        Engine::new(ExecPolicy::auto())
+    }
+
+    /// Run `n` calls through the gather → dispatch → scatter pipeline.
+    ///
+    /// * `gather` fills the call's buffers; it runs on a scoped worker and
+    ///   may itself fan out over `self.pool`.
+    /// * `dispatch` turns staged buffers into output tensors (flat f32
+    ///   vectors); it always runs on the calling thread, in call order.
+    /// * `scatter` commits outputs; it runs on a scoped worker, strictly in
+    ///   call order (required by the chunked-softmax merge).
+    ///
+    /// On dispatch error the pipeline drains and the error is returned;
+    /// scatter is never invoked for the failed or subsequent calls.
+    pub fn run_pipeline<G, D, S>(
+        &self,
+        n: usize,
+        gather: G,
+        mut dispatch: D,
+        mut scatter: S,
+    ) -> Result<()>
+    where
+        G: Fn(usize, &mut CallBuffers) + Sync,
+        D: FnMut(usize, &CallBuffers) -> Result<Vec<Vec<f32>>>,
+        S: FnMut(usize, Vec<Vec<f32>>) + Send,
+    {
+        if n == 0 {
+            return Ok(());
+        }
+        if self.policy.is_serial() {
+            let mut bufs = self.buffers.acquire();
+            for i in 0..n {
+                gather(i, &mut bufs);
+                let outs = dispatch(i, &bufs)?;
+                scatter(i, outs);
+            }
+            self.buffers.release(bufs);
+            return Ok(());
+        }
+
+        let depth = self.policy.pipeline_depth.clamp(1, n);
+        std::thread::scope(|s| -> Result<()> {
+            // Staged buffers travel gather → dispatch on `full`, and are
+            // recycled dispatch → gather on `free` (primed to `depth`).
+            let (full_tx, full_rx) = std::sync::mpsc::channel::<(usize, CallBuffers)>();
+            let (free_tx, free_rx) = std::sync::mpsc::channel::<CallBuffers>();
+            for _ in 0..depth {
+                free_tx.send(self.buffers.acquire()).expect("receiver alive");
+            }
+
+            let gather = &gather;
+            let gatherer = s.spawn(move || {
+                for i in 0..n {
+                    let Ok(mut bufs) = free_rx.recv() else { break };
+                    gather(i, &mut bufs);
+                    if full_tx.send((i, bufs)).is_err() {
+                        break;
+                    }
+                }
+                drop(full_tx);
+                // Collect leftover buffers once the driver drops `free_tx`.
+                free_rx.into_iter().collect::<Vec<_>>()
+            });
+
+            let (done_tx, done_rx) = std::sync::mpsc::channel::<(usize, Vec<Vec<f32>>)>();
+            let scatterer = s.spawn(move || {
+                while let Ok((i, outs)) = done_rx.recv() {
+                    scatter(i, outs);
+                }
+            });
+
+            let mut failure: Option<anyhow::Error> = None;
+            for _ in 0..n {
+                let Ok((i, bufs)) = full_rx.recv() else {
+                    failure = Some(anyhow!("gather stage exited early"));
+                    break;
+                };
+                match dispatch(i, &bufs) {
+                    Ok(outs) => {
+                        let _ = free_tx.send(bufs);
+                        if done_tx.send((i, outs)).is_err() {
+                            failure = Some(anyhow!("scatter stage exited early"));
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        self.buffers.release(bufs);
+                        failure = Some(e);
+                        break;
+                    }
+                }
+            }
+            drop(free_tx);
+            drop(full_rx);
+            drop(done_tx);
+            match gatherer.join() {
+                Ok(leftover) => {
+                    for bufs in leftover {
+                        self.buffers.release(bufs);
+                    }
+                }
+                Err(p) => std::panic::resume_unwind(p),
+            }
+            if let Err(p) = scatterer.join() {
+                std::panic::resume_unwind(p);
+            }
+            match failure {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })
+    }
+
+    /// Pipeline a plan's regular bucketed calls: slot-parallel gather,
+    /// caller-supplied dispatch, scatter into `out`.  Shared by the fused
+    /// and unfused drivers.
+    pub fn run_bucketed<F>(
+        &self,
+        calls: &[Call],
+        bsb: &Bsb,
+        x: &AttentionProblem,
+        batch: usize,
+        out: &mut [f32],
+        mut dispatch: F,
+    ) -> Result<()>
+    where
+        F: FnMut(&Call, &CallBuffers) -> Result<Vec<f32>>,
+    {
+        let (n_rows, dv) = (x.n, x.dv);
+        self.run_pipeline(
+            calls.len(),
+            |i, bufs| {
+                let call = &calls[i];
+                gather::gather_call_with(
+                    &self.pool, bufs, &call.rws, call.t_bucket, bsb, x, batch,
+                );
+            },
+            |i, bufs| dispatch(&calls[i], bufs).map(|o| vec![o]),
+            |i, outs| {
+                gather::scatter_call(out, &outs[0], &calls[i].rws, n_rows, dv);
+            },
+        )
+    }
+}
+
+/// Executes one staged kernel call — the seam between the host pipeline and
+/// whatever actually computes: the PJRT runtime online, or the
+/// [`host_kernel`](super::host_kernel) emulation offline (benches and the
+/// bit-exactness tests run the full driver path through it with no
+/// artifacts present).
+pub trait CallExecutor {
+    /// Regular bucketed call at TCB capacity `t_bucket`: return the output
+    /// blocks, `batch * 16 * dv` row-major.
+    fn bucket(
+        &mut self,
+        t_bucket: usize,
+        bufs: &CallBuffers,
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// Partial (chunked row-window) call at chunk capacity `chunk_t`:
+    /// return `(o, m, l)` — normalised chunk outputs (`batch * 16 * dv`)
+    /// plus the per-row softmax max/denominator (`batch * 16` each).
+    fn partial(
+        &mut self,
+        chunk_t: usize,
+        bufs: &CallBuffers,
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(threads: usize, depth: usize) -> ExecPolicy {
+        ExecPolicy { threads, pipeline_depth: depth }
+    }
+
+    /// A toy 3-stage workload: gather writes i into the buffer, dispatch
+    /// doubles it, scatter records it.  Checks ordering and completeness
+    /// across policies.
+    fn run_toy(engine: &Engine, n: usize) -> Vec<f32> {
+        let mut seen = Vec::new();
+        engine
+            .run_pipeline(
+                n,
+                |i, bufs| {
+                    bufs.q.clear();
+                    bufs.q.push(i as f32);
+                },
+                |_, bufs| Ok(vec![vec![bufs.q[0] * 2.0]]),
+                |i, outs| {
+                    assert_eq!(outs[0][0], (i * 2) as f32);
+                    seen.push(outs[0][0]);
+                },
+            )
+            .unwrap();
+        seen
+    }
+
+    #[test]
+    fn pipeline_commits_in_order_across_policies() {
+        let want: Vec<f32> = (0..17).map(|i| (i * 2) as f32).collect();
+        for (t, d) in [(1, 1), (1, 2), (4, 1), (4, 2), (4, 4)] {
+            let engine = Engine::new(policy(t, d));
+            assert_eq!(run_toy(&engine, 17), want, "threads={t} depth={d}");
+        }
+    }
+
+    #[test]
+    fn pipeline_zero_calls() {
+        let engine = Engine::auto();
+        assert!(run_toy(&engine, 0).is_empty());
+    }
+
+    #[test]
+    fn buffers_are_recycled_into_the_arena() {
+        let engine = Engine::new(policy(2, 2));
+        run_toy(&engine, 8);
+        assert_eq!(engine.buffers.available(), 2);
+        let serial = Engine::serial();
+        run_toy(&serial, 3);
+        assert_eq!(serial.buffers.available(), 1);
+    }
+
+    #[test]
+    fn dispatch_error_propagates_and_stops_scatter() {
+        let engine = Engine::new(policy(2, 2));
+        let mut committed = Vec::new();
+        let err = engine
+            .run_pipeline(
+                10,
+                |i, bufs| {
+                    bufs.q.clear();
+                    bufs.q.push(i as f32);
+                },
+                |i, _| {
+                    if i == 3 {
+                        anyhow::bail!("boom at {i}");
+                    }
+                    Ok(vec![vec![i as f32]])
+                },
+                |i, _| committed.push(i),
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("boom"));
+        assert_eq!(committed, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,275 @@
+//! Host (CPU) emulation of the fused 3S kernel call — the offline
+//! [`CallExecutor`].
+//!
+//! It consumes exactly what the PJRT kernel consumes — the *gathered*
+//! [`CallBuffers`] (Q blocks, K̂/V̂ row stacks, TCB bitmaps), not the graph —
+//! so running the full driver path through it exercises the BSB build, the
+//! bucket plan, the gathers, the pipeline and the scatters end to end with
+//! no artifacts present.  The benches use it as the dispatch stage of the
+//! host-pipeline sweep; the tests pin it against the dense host reference.
+//!
+//! Determinism contract: per-slot computation is pure and written to
+//! disjoint output slices in a fixed iteration order, so outputs are
+//! bit-identical for every `WorkerPool` width.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::kernels::gather::CallBuffers;
+use crate::kernels::AttentionProblem;
+use crate::runtime::Manifest;
+use crate::{BITMAP_WORDS, TCB_C, TCB_R};
+
+use super::engine::CallExecutor;
+use super::pool::WorkerPool;
+
+/// Offline stand-in for the PJRT-backed kernel dispatch.  Slot-parallel
+/// over the supplied pool (slots are independent row windows).
+pub struct HostExecutor<'p> {
+    pool: &'p WorkerPool,
+}
+
+impl<'p> HostExecutor<'p> {
+    pub fn new(pool: &'p WorkerPool) -> HostExecutor<'p> {
+        HostExecutor { pool }
+    }
+}
+
+impl CallExecutor for HostExecutor<'_> {
+    fn bucket(
+        &mut self,
+        t_bucket: usize,
+        bufs: &CallBuffers,
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let mut o = vec![0.0f32; batch * TCB_R * x.dv];
+        let slots: Vec<(usize, &mut [f32])> =
+            o.chunks_mut(TCB_R * x.dv).enumerate().collect();
+        self.pool.run_items(slots, |(slot, o_slot)| {
+            slot_attention(slot, t_bucket, bufs, x, o_slot, None);
+        });
+        Ok(o)
+    }
+
+    fn partial(
+        &mut self,
+        chunk_t: usize,
+        bufs: &CallBuffers,
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut o = vec![0.0f32; batch * TCB_R * x.dv];
+        let mut m = vec![f32::NEG_INFINITY; batch * TCB_R];
+        let mut l = vec![0.0f32; batch * TCB_R];
+        {
+            let slots: Vec<(usize, ((&mut [f32], &mut [f32]), &mut [f32]))> = o
+                .chunks_mut(TCB_R * x.dv)
+                .zip(m.chunks_mut(TCB_R))
+                .zip(l.chunks_mut(TCB_R))
+                .enumerate()
+                .collect();
+            self.pool.run_items(slots, |(slot, ((o_slot, m_slot), l_slot))| {
+                slot_attention(
+                    slot,
+                    chunk_t,
+                    bufs,
+                    x,
+                    o_slot,
+                    Some((m_slot, l_slot)),
+                );
+            });
+        }
+        Ok((o, m, l))
+    }
+}
+
+/// One slot's masked attention over its gathered lanes, matching the Pallas
+/// kernel's semantics: scores only where the bitmap bit is set, stable
+/// softmax per row, normalised output; fully-masked rows produce zeros
+/// (and `(m, l) = (-inf, 0)` in partial mode, the empty merge identity).
+fn slot_attention(
+    slot: usize,
+    t: usize,
+    bufs: &CallBuffers,
+    x: &AttentionProblem,
+    o_slot: &mut [f32],
+    ml: Option<(&mut [f32], &mut [f32])>,
+) {
+    let (d, dv) = (x.d, x.dv);
+    let lanes = t * TCB_C;
+    let q_base = slot * TCB_R * d;
+    let kv_base = slot * lanes;
+    let bm_base = slot * t * BITMAP_WORDS;
+    let mut scores: Vec<(usize, f32)> = Vec::with_capacity(lanes);
+    let mut ml = ml;
+    for r in 0..TCB_R {
+        scores.clear();
+        let q_row = &bufs.q[q_base + r * d..q_base + (r + 1) * d];
+        let mut m_row = f32::NEG_INFINITY;
+        for j in 0..t {
+            let bm = &bufs.bm[bm_base + j * BITMAP_WORDS..][..BITMAP_WORDS];
+            for c in 0..TCB_C {
+                let bit = r * TCB_C + c;
+                if (bm[bit / 32] >> (bit % 32)) & 1 == 0 {
+                    continue;
+                }
+                let lane = j * TCB_C + c;
+                let k_row = &bufs.k[(kv_base + lane) * d..][..d];
+                let mut s = 0.0f32;
+                for cc in 0..d {
+                    s += q_row[cc] * k_row[cc];
+                }
+                m_row = m_row.max(s);
+                scores.push((lane, s));
+            }
+        }
+        if let Some((m_slot, l_slot)) = ml.as_mut() {
+            m_slot[r] = m_row;
+            l_slot[r] = 0.0;
+        }
+        if scores.is_empty() {
+            continue; // fully masked row: o stays zero
+        }
+        let mut l_row = 0.0f32;
+        for (_, s) in scores.iter_mut() {
+            *s = (*s - m_row).exp();
+            l_row += *s;
+        }
+        let o_row = &mut o_slot[r * dv..(r + 1) * dv];
+        for &(lane, p) in &scores {
+            let w = p / l_row;
+            let v_row = &bufs.v[(kv_base + lane) * dv..][..dv];
+            for cc in 0..dv {
+                o_row[cc] += w * v_row[cc];
+            }
+        }
+        if let Some((_, l_slot)) = ml.as_mut() {
+            l_slot[r] = l_row;
+        }
+    }
+}
+
+/// A manifest carrying only the bucketing configuration — enough to build
+/// drivers and plans with **no artifacts on disk**, for the offline host
+/// path (benches, tests, cold CI).
+pub fn offline_manifest(
+    rw_batch: usize,
+    t_buckets: &[usize],
+    chunk_t: usize,
+) -> Manifest {
+    Manifest {
+        dir: PathBuf::from("."),
+        rw_batch,
+        t_buckets: t_buckets.to_vec(),
+        d_kernel: vec![32, 64, 128],
+        d_model: vec![64, 128, 256],
+        m_tile: 1024,
+        chunk_t,
+        d_head: 64,
+        entries: BTreeMap::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsb;
+    use crate::graph::generators;
+    use crate::kernels::gather;
+    use crate::kernels::reference;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn host_kernel_matches_dense_reference_on_one_call() {
+        let g = generators::erdos_renyi(64, 5.0, 3).with_self_loops();
+        let bsb = bsb::build(&g);
+        let d = 16;
+        let mut rng = Rng::new(11);
+        let (q, k, v) = (
+            rng.normal_vec(64 * d, 1.0),
+            rng.normal_vec(64 * d, 1.0),
+            rng.normal_vec(64 * d, 1.0),
+        );
+        let x = AttentionProblem::new(64, d, &q, &k, &v, 0.5);
+        let t_cap = (0..bsb.num_rw).map(|i| bsb.rw_tcbs(i)).max().unwrap();
+        let rws: Vec<u32> = (0..bsb.num_rw as u32).collect();
+        let mut bufs = CallBuffers::default();
+        let pool = WorkerPool::new(1);
+        gather::gather_call_with(&pool, &mut bufs, &rws, t_cap, &bsb, &x, rws.len());
+        let mut exec = HostExecutor::new(&pool);
+        let o = exec.bucket(t_cap, &bufs, &x, rws.len()).unwrap();
+        let mut out = vec![0.0f32; 64 * d];
+        gather::scatter_call(&mut out, &o, &rws, 64, d);
+        let want = reference::dense_attention_host(&g, &x);
+        let err = reference::max_abs_diff(&out, &want);
+        assert!(err < 1e-4, "max err {err}");
+    }
+
+    #[test]
+    fn partial_mode_reports_merge_state() {
+        // One row attending within a single TCB: l must equal the softmax
+        // denominator and o the normalised output.
+        let g = crate::graph::CsrGraph::from_edges(16, &[(0, 0), (0, 1)]).unwrap();
+        let bsb = bsb::build(&g);
+        let d = 4;
+        let mut rng = Rng::new(5);
+        let (q, k, v) = (
+            rng.normal_vec(16 * d, 1.0),
+            rng.normal_vec(16 * d, 1.0),
+            rng.normal_vec(16 * d, 1.0),
+        );
+        let x = AttentionProblem::new(16, d, &q, &k, &v, 1.0);
+        let pool = WorkerPool::new(1);
+        let mut bufs = CallBuffers::default();
+        gather::gather_call_with(&pool, &mut bufs, &[0], 1, &bsb, &x, 1);
+        let mut exec = HostExecutor::new(&pool);
+        let (o, m, l) = exec.partial(1, &bufs, &x, 1).unwrap();
+        // Row 0 has two logits; rows 1.. are fully masked.
+        assert!(l[0] > 0.0 && m[0].is_finite());
+        assert_eq!(l[1], 0.0);
+        assert_eq!(m[1], f32::NEG_INFINITY);
+        assert!(o[d..TCB_R * d].iter().all(|&z| z == 0.0));
+        // Merging the single chunk into an empty state reproduces o.
+        let mut st = crate::kernels::fused::MergeState::new(d);
+        st.merge(&o[..TCB_R * d], &m[..TCB_R], &l[..TCB_R]);
+        for c in 0..d {
+            assert!((st.o[c] - o[c]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn slot_parallelism_is_bit_exact() {
+        let g = generators::barabasi_albert(300, 5, 7).with_self_loops();
+        let bsb = bsb::build(&g);
+        let d = 8;
+        let mut rng = Rng::new(9);
+        let (q, k, v) = (
+            rng.normal_vec(300 * d, 1.0),
+            rng.normal_vec(300 * d, 1.0),
+            rng.normal_vec(300 * d, 1.0),
+        );
+        let x = AttentionProblem::new(300, d, &q, &k, &v, 1.0);
+        let t_cap = (0..bsb.num_rw).map(|i| bsb.rw_tcbs(i)).max().unwrap();
+        let rws: Vec<u32> = (0..bsb.num_rw as u32).collect();
+        let serial = WorkerPool::new(1);
+        let wide = WorkerPool::new(4);
+        let mut b1 = CallBuffers::default();
+        let mut b2 = CallBuffers::default();
+        gather::gather_call_with(&serial, &mut b1, &rws, t_cap, &bsb, &x, rws.len());
+        gather::gather_call_with(&wide, &mut b2, &rws, t_cap, &bsb, &x, rws.len());
+        assert_eq!(b1.q, b2.q);
+        assert_eq!(b1.k, b2.k);
+        assert_eq!(b1.v, b2.v);
+        assert_eq!(b1.bm, b2.bm);
+        let o1 = HostExecutor::new(&serial)
+            .bucket(t_cap, &b1, &x, rws.len())
+            .unwrap();
+        let o2 = HostExecutor::new(&wide)
+            .bucket(t_cap, &b2, &x, rws.len())
+            .unwrap();
+        assert_eq!(o1, o2);
+    }
+}

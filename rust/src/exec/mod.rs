@@ -1,0 +1,29 @@
+//! The parallel, pipelined host execution engine (EXPERIMENTS.md §Perf).
+//!
+//! The paper wins by minimising *device* data movement; on the host side of
+//! this reproduction the analogous cost is the memory engine — BSB build,
+//! per-call Q/K̂/V̂ gathers, dispatch, scatter — which the seed ran fully
+//! serially on one thread.  This module makes that path parallel and
+//! latency-hiding while keeping the serial policy as the bit-exact
+//! reference:
+//!
+//! * [`pool::WorkerPool`] — a reusable scoped-thread worker pool (rayon is
+//!   unavailable offline) shared by every fan-out site in the process;
+//! * [`bufpool::BufferPool`] — a recycling arena for `CallBuffers`, reused
+//!   across calls *and* across coordinator requests;
+//! * [`engine::Engine`] / [`engine::ExecPolicy`] — the double-buffered
+//!   gather → dispatch → scatter pipeline the drivers run through;
+//! * [`engine::CallExecutor`] — the dispatch seam (PJRT online,
+//!   [`host_kernel::HostExecutor`] offline);
+//! * [`host_kernel`] — CPU emulation of the fused 3S call, so benches and
+//!   tests drive the full host path with no artifacts.
+
+pub mod bufpool;
+pub mod engine;
+pub mod host_kernel;
+pub mod pool;
+
+pub use bufpool::BufferPool;
+pub use engine::{CallExecutor, Engine, ExecPolicy};
+pub use host_kernel::{offline_manifest, HostExecutor};
+pub use pool::WorkerPool;

@@ -1,0 +1,228 @@
+//! A reusable scoped-thread worker pool — the offline substitute for rayon.
+//!
+//! One [`WorkerPool`] value is threaded through every subsystem that fans
+//! work out (BSB construction, per-slot gathers, the host kernel emulation,
+//! coordinator preprocessing), so the whole process follows one parallelism
+//! configuration instead of each call site choosing its own width.  The
+//! width caps each parallel *region*, not the process: concurrent regions
+//! (e.g. several preprocessing workers building BSBs at once) can briefly
+//! oversubscribe — acceptable for scoped CPU-bound bursts, and bounded by
+//! `preprocess_workers × threads`.  Workers are `std::thread::scope`
+//! threads: they may borrow the
+//! caller's stack (mutable disjoint slices, shared graph/problem refs) with
+//! no `'static` bound and no unsafe, and they are guaranteed joined when the
+//! call returns — every `WorkerPool` method is a synchronous parallel
+//! region, which is exactly the shape the engine's determinism argument
+//! needs (see EXPERIMENTS.md §Perf).
+
+/// Shared fan-out configuration.  `threads == 1` degrades every method to a
+/// plain in-place loop (no threads are spawned), which is the deterministic
+/// reference the tests pin the parallel paths against.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool fanning out to `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// A pool sized to the machine's available parallelism.
+    pub fn auto() -> WorkerPool {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        WorkerPool::new(threads)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.threads <= 1
+    }
+
+    /// Consume `items`, applying `f` to each one, sharded contiguously
+    /// across workers.  Item order *within* a shard is preserved; shards run
+    /// concurrently, so `f`'s side effects must be disjoint per item (the
+    /// callers hand each item its own `&mut` slice).  Worker panics
+    /// propagate to the caller when the scope joins.
+    pub fn run_items<T, F>(&self, items: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(T) + Sync,
+    {
+        let shards = self.shard(items);
+        if shards.len() <= 1 {
+            for shard in shards {
+                for item in shard {
+                    f(item);
+                }
+            }
+            return;
+        }
+        std::thread::scope(|s| {
+            for shard in shards {
+                let f = &f;
+                s.spawn(move || {
+                    for item in shard {
+                        f(item);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Split `0..n` into at most `threads` balanced contiguous ranges, apply
+    /// `f` to each concurrently, and return the results **in range order**
+    /// (shard 0's result first).  This is the primitive the parallel BSB
+    /// build stitches shards with: contiguity + ordered results make the
+    /// assembled output identical to a serial run.
+    pub fn map_ranges<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(std::ops::Range<usize>) -> R + Sync,
+    {
+        let ranges = split_ranges(n, self.threads);
+        if ranges.len() <= 1 {
+            return ranges.into_iter().map(f).collect();
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .into_iter()
+                .map(|r| {
+                    let f = &f;
+                    s.spawn(move || f(r))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Contiguous, order-preserving split of `items` into at most `threads`
+    /// near-equal shards.
+    fn shard<T>(&self, mut items: Vec<T>) -> Vec<Vec<T>> {
+        let parts = self.threads.min(items.len());
+        if parts <= 1 {
+            return if items.is_empty() { Vec::new() } else { vec![items] };
+        }
+        let total = items.len();
+        let base = total / parts;
+        let extra = total % parts;
+        let mut shards = Vec::with_capacity(parts);
+        for i in 0..parts {
+            let take = base + usize::from(i < extra);
+            let rest = items.split_off(take);
+            shards.push(items);
+            items = rest;
+        }
+        debug_assert!(items.is_empty());
+        shards
+    }
+}
+
+/// Balanced contiguous split of `0..n` into at most `parts` ranges (always
+/// at least one range, possibly empty when `n == 0`).
+fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for i in 0..parts {
+        let hi = lo + base + usize::from(i < extra);
+        out.push(lo..hi);
+        lo = hi;
+    }
+    debug_assert_eq!(lo, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_items_visits_everything_once() {
+        for threads in [1, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let n = 103;
+            let mut hits = vec![0u8; n];
+            {
+                let items: Vec<(usize, &mut u8)> =
+                    hits.iter_mut().enumerate().collect();
+                pool.run_items(items, |(i, h)| {
+                    *h += 1;
+                    assert!(i < n);
+                });
+            }
+            assert!(hits.iter().all(|&h| h == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_items_empty_is_noop() {
+        let pool = WorkerPool::new(4);
+        let items: Vec<usize> = Vec::new();
+        pool.run_items(items, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn map_ranges_ordered_and_exhaustive() {
+        for threads in [1, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let got = pool.map_ranges(100, |r| r);
+            assert!(got.len() <= threads);
+            let mut lo = 0;
+            for r in &got {
+                assert_eq!(r.start, lo);
+                lo = r.end;
+            }
+            assert_eq!(lo, 100);
+        }
+    }
+
+    #[test]
+    fn map_ranges_more_threads_than_items() {
+        let pool = WorkerPool::new(16);
+        let sums = pool.map_ranges(3, |r| r.sum::<usize>());
+        assert_eq!(sums.iter().sum::<usize>(), 3);
+        assert_eq!(sums.len(), 3);
+    }
+
+    #[test]
+    fn map_ranges_zero_items() {
+        let pool = WorkerPool::new(4);
+        let got = pool.map_ranges(0, |r| r.len());
+        assert_eq!(got, vec![0]);
+    }
+
+    #[test]
+    fn shard_balance() {
+        let pool = WorkerPool::new(4);
+        let shards = pool.shard((0..10).collect::<Vec<_>>());
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        let flat: Vec<usize> = shards.into_iter().flatten().collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_items_sums_match_serial() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for threads in [1, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            let acc = AtomicUsize::new(0);
+            pool.run_items((0..100).collect(), |i: usize| {
+                acc.fetch_add(i, Ordering::Relaxed);
+            });
+            assert_eq!(acc.into_inner(), 4950, "threads={threads}");
+        }
+    }
+}

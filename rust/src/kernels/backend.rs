@@ -4,6 +4,7 @@
 use anyhow::Result;
 
 use crate::bsb::reorder::Order;
+use crate::exec::Engine;
 use crate::graph::CsrGraph;
 use crate::runtime::{Manifest, Runtime};
 
@@ -97,43 +98,81 @@ impl Driver {
         g: &CsrGraph,
         backend: Backend,
     ) -> Result<Driver> {
+        Self::prepare_on(man, g, backend, &Engine::serial())
+    }
+
+    /// Preprocess with BSB construction sharded across the engine's worker
+    /// pool (bit-identical to the serial build).  The CPU-CSR baseline
+    /// inherits the engine's thread count.
+    pub fn prepare_on(
+        man: &Manifest,
+        g: &CsrGraph,
+        backend: Backend,
+        engine: &Engine,
+    ) -> Result<Driver> {
         Ok(match backend {
-            Backend::Fused3S => Driver::Fused(FusedDriver::new(
+            Backend::Fused3S => Driver::Fused(FusedDriver::new_with(
                 man,
                 g,
                 FusedOpts::default(),
+                engine,
             )?),
-            Backend::Fused3SNoReorder => Driver::Fused(FusedDriver::new(
+            Backend::Fused3SNoReorder => Driver::Fused(FusedDriver::new_with(
                 man,
                 g,
                 FusedOpts { order: Order::Natural, ..FusedOpts::default() },
+                engine,
             )?),
-            Backend::Fused3SSplitR => Driver::Fused(FusedDriver::new(
+            Backend::Fused3SSplitR => Driver::Fused(FusedDriver::new_with(
                 man,
                 g,
                 FusedOpts { variant: "splitr", ..FusedOpts::default() },
+                engine,
             )?),
-            Backend::DfGnnLike => Driver::Fused(FusedDriver::new(
+            Backend::DfGnnLike => Driver::Fused(FusedDriver::new_with(
                 man,
                 g,
                 FusedOpts { precision: "f32", ..FusedOpts::default() },
+                engine,
             )?),
-            Backend::UnfusedNaive => {
-                Driver::Unfused(UnfusedDriver::new(man, g, false, Order::ByTcbDesc)?)
-            }
-            Backend::UnfusedStable => {
-                Driver::Unfused(UnfusedDriver::new(man, g, true, Order::ByTcbDesc)?)
-            }
+            Backend::UnfusedNaive => Driver::Unfused(UnfusedDriver::new_with(
+                man,
+                g,
+                false,
+                Order::ByTcbDesc,
+                engine,
+            )?),
+            Backend::UnfusedStable => Driver::Unfused(UnfusedDriver::new_with(
+                man,
+                g,
+                true,
+                Order::ByTcbDesc,
+                engine,
+            )?),
             Backend::Dense => Driver::Dense(DenseDriver::new(man, g)?),
-            Backend::CpuCsr => Driver::CpuCsr { graph: g.clone(), threads: 1 },
+            Backend::CpuCsr => Driver::CpuCsr {
+                graph: g.clone(),
+                threads: engine.policy.threads,
+            },
         })
     }
 
-    /// Execute the 3S computation.
+    /// Execute the 3S computation (serial reference policy).
     pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
+        self.run_with(rt, x, &Engine::serial())
+    }
+
+    /// Execute through the host execution engine (bit-identical to
+    /// [`Driver::run`] for every policy).
+    pub fn run_with(
+        &self,
+        rt: &Runtime,
+        x: &AttentionProblem,
+        engine: &Engine,
+    ) -> Result<Vec<f32>> {
         match self {
-            Driver::Fused(d) => d.run(rt, x),
-            Driver::Unfused(d) => d.run(rt, x),
+            Driver::Fused(d) => d.run_with(rt, x, engine),
+            Driver::Unfused(d) => d.run_with(rt, x, engine),
             Driver::Dense(d) => d.run(rt, x),
             Driver::CpuCsr { graph, threads } => Ok(cpu_csr::run(graph, x, *threads)),
         }

@@ -20,18 +20,13 @@ pub fn run(g: &CsrGraph, x: &AttentionProblem, threads: usize) -> Vec<f32> {
         return out;
     }
     let chunk = x.n.div_ceil(threads);
-    let mut slices: Vec<&mut [f32]> = out.chunks_mut(chunk * x.dv).collect();
     std::thread::scope(|s| {
-        for (ti, slice) in slices.iter_mut().enumerate() {
+        for (ti, slice) in out.chunks_mut(chunk * x.dv).enumerate() {
             let lo = ti * chunk;
             let hi = ((ti + 1) * chunk).min(x.n);
-            let g = &g;
-            let x = &x;
-            s.spawn(move || {
-                let mut local = vec![0.0f32; slice.len()];
-                run_rows_offset(g, x, lo..hi, &mut local, lo);
-                slice.copy_from_slice(&local);
-            });
+            // Each worker owns its pre-split output chunk and writes rows
+            // in place — no per-worker staging Vec, no final copy.
+            s.spawn(move || run_rows_offset(g, x, lo..hi, slice, lo));
         }
     });
     out

@@ -7,6 +7,7 @@ use anyhow::{bail, Context, Result};
 use crate::bsb::bucket::{self, Plan};
 use crate::bsb::reorder::Order;
 use crate::bsb::{self, Bsb};
+use crate::exec::{CallExecutor, Engine};
 use crate::graph::CsrGraph;
 use crate::runtime::buffers::Arg;
 use crate::runtime::{Manifest, Runtime};
@@ -51,10 +52,21 @@ pub struct FusedDriver {
 
 impl FusedDriver {
     pub fn new(man: &Manifest, g: &CsrGraph, opts: FusedOpts) -> Result<FusedDriver> {
+        FusedDriver::new_with(man, g, opts, &Engine::serial())
+    }
+
+    /// Preprocess with the BSB build sharded across the engine's pool
+    /// (bit-identical to the serial build; see `bsb::build_with`).
+    pub fn new_with(
+        man: &Manifest,
+        g: &CsrGraph,
+        opts: FusedOpts,
+        engine: &Engine,
+    ) -> Result<FusedDriver> {
         let bsb = if opts.compact {
-            bsb::build(g)
+            bsb::build_with(g, &engine.pool)
         } else {
-            bsb::build_bcsr_like(g)
+            bsb::build_bcsr_like_with(g, &engine.pool)
         };
         let plan = bucket::plan(
             &bsb,
@@ -95,111 +107,183 @@ impl FusedDriver {
         names
     }
 
-    /// Run the fused 3S over the prepared graph.
+    /// Run the fused 3S over the prepared graph (serial reference policy).
     pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
+        self.run_with(rt, x, &Engine::serial())
+    }
+
+    /// Run through the host execution engine: slot-parallel gathers, the
+    /// double-buffered pipeline, PJRT dispatch on the calling thread.
+    /// Bit-identical to [`FusedDriver::run`] for every policy.
+    pub fn run_with(
+        &self,
+        rt: &Runtime,
+        x: &AttentionProblem,
+        engine: &Engine,
+    ) -> Result<Vec<f32>> {
+        let mut exec = PjrtFused { rt, opts: self.opts };
+        self.run_exec(x, engine, &mut exec)
+    }
+
+    /// Engine-driven execution against any [`CallExecutor`] — the PJRT
+    /// runtime online, or `exec::HostExecutor` offline (benches/tests).
+    pub fn run_exec<E: CallExecutor>(
+        &self,
+        x: &AttentionProblem,
+        engine: &Engine,
+        exec: &mut E,
+    ) -> Result<Vec<f32>> {
         if x.d != x.dv {
             bail!("fused driver requires d == dv (GAT path uses model::gat)");
         }
         let mut out = vec![0.0f32; x.n * x.dv];
-        let mut bufs = CallBuffers::default();
 
-        // Regular bucketed dispatches, in schedule order.
-        for call in &self.plan.calls {
-            let name = Manifest::fused3s_name(
-                call.t_bucket,
-                x.d,
-                self.opts.precision,
-                self.opts.variant,
-            );
-            let exe = rt.executable(&name).with_context(|| {
-                format!(
-                    "bucket t={} d={} ({}/{}): artifact missing",
-                    call.t_bucket, x.d, self.opts.precision, self.opts.variant
-                )
-            })?;
-            gather::gather_call(
-                &mut bufs, &call.rws, call.t_bucket, &self.bsb, x, self.batch,
-            );
-            let (sq, sk, sv, sbm) = shapes(self.batch, call.t_bucket, x.d, x.dv);
-            let outs = rt.run_exe_raw(
-                &exe,
-                &[
-                    Arg::F32(&bufs.q, &sq),
-                    Arg::F32(&bufs.k, &sk),
-                    Arg::F32(&bufs.v, &sv),
-                    Arg::I32(&bufs.bm, &sbm),
-                ],
-            )?;
-            let o = outs[0].as_f32()?;
-            gather::scatter_call(&mut out, o, &call.rws, x.n, x.dv);
-        }
+        // Regular bucketed dispatches, pipelined in schedule order.
+        engine.run_bucketed(
+            &self.plan.calls,
+            &self.bsb,
+            x,
+            self.batch,
+            &mut out,
+            |call, bufs| exec.bucket(call.t_bucket, bufs, x, self.batch),
+        )?;
 
         // Oversize row windows: chunked through the partial executable.
         if !self.plan.chunked.is_empty() {
-            self.run_chunked(rt, x, &mut out, &mut bufs)?;
+            self.run_chunked_exec(x, engine, exec, &mut out)?;
         }
         Ok(out)
     }
 
-    fn run_chunked(
+    fn run_chunked_exec<E: CallExecutor>(
         &self,
-        rt: &Runtime,
         x: &AttentionProblem,
+        engine: &Engine,
+        exec: &mut E,
         out: &mut [f32],
-        bufs: &mut CallBuffers,
     ) -> Result<()> {
-        let name = Manifest::partial_name(self.chunk_t, x.d);
-        let exe = rt
-            .executable(&name)
-            .with_context(|| format!("partial artifact {name} missing"))?;
-        // Work items: (rw, chunk index).
+        // Work items: (rw, chunk index), batched to the call width.
         let items: Vec<(u32, usize)> = self
             .plan
             .chunked
             .iter()
             .flat_map(|c| (0..c.n_chunks).map(move |i| (c.rw, i)))
             .collect();
-        // Per-RW merge state, keyed by rw id.
+        let batches: Vec<&[(u32, usize)]> = items.chunks(self.batch).collect();
+        // Per-RW merge state, keyed by rw id.  The pipeline commits scatter
+        // in batch order, so the merge sequence (and hence the f32 result)
+        // is identical for every policy.
         let mut merge: std::collections::HashMap<u32, MergeState> =
             std::collections::HashMap::new();
-        for batch_items in items.chunks(self.batch) {
-            bufs.reset(self.batch, self.chunk_t, x.d, x.dv);
-            for (slot, &(rw, ci)) in batch_items.iter().enumerate() {
-                let rw_us = rw as usize;
-                gather::gather_q(&mut bufs.q, slot, rw_us, x);
-                let t = self.bsb.rw_tcbs(rw_us);
-                let t_lo = ci * self.chunk_t;
-                let t_hi = ((ci + 1) * self.chunk_t).min(t);
-                gather::gather_kv_range(
-                    bufs, slot, &self.bsb, rw_us, t_lo, t_hi, self.chunk_t, x,
+        engine.run_pipeline(
+            batches.len(),
+            |bi, bufs| {
+                gather::gather_partial_call_with(
+                    &engine.pool,
+                    bufs,
+                    batches[bi],
+                    self.chunk_t,
+                    &self.bsb,
+                    x,
+                    self.batch,
                 );
-            }
-            let (sq, sk, sv, sbm) = shapes(self.batch, self.chunk_t, x.d, x.dv);
-            let outs = rt.run_exe_raw(
-                &exe,
-                &[
-                    Arg::F32(&bufs.q, &sq),
-                    Arg::F32(&bufs.k, &sk),
-                    Arg::F32(&bufs.v, &sv),
-                    Arg::I32(&bufs.bm, &sbm),
-                ],
-            )?;
-            let (o, m, l) = (outs[0].as_f32()?, outs[1].as_f32()?, outs[2].as_f32()?);
-            for (slot, &(rw, _)) in batch_items.iter().enumerate() {
-                let st = merge
-                    .entry(rw)
-                    .or_insert_with(|| MergeState::new(x.dv));
-                st.merge(
-                    &o[slot * TCB_R * x.dv..(slot + 1) * TCB_R * x.dv],
-                    &m[slot * TCB_R..(slot + 1) * TCB_R],
-                    &l[slot * TCB_R..(slot + 1) * TCB_R],
-                );
-            }
-        }
+            },
+            |_, bufs| {
+                let (o, m, l) = exec.partial(self.chunk_t, bufs, x, self.batch)?;
+                Ok(vec![o, m, l])
+            },
+            |bi, outs| {
+                let (o, m, l) = (&outs[0], &outs[1], &outs[2]);
+                for (slot, &(rw, _)) in batches[bi].iter().enumerate() {
+                    let st = merge
+                        .entry(rw)
+                        .or_insert_with(|| MergeState::new(x.dv));
+                    st.merge(
+                        &o[slot * TCB_R * x.dv..(slot + 1) * TCB_R * x.dv],
+                        &m[slot * TCB_R..(slot + 1) * TCB_R],
+                        &l[slot * TCB_R..(slot + 1) * TCB_R],
+                    );
+                }
+            },
+        )?;
         for (rw, st) in merge {
             gather::scatter_slot(out, &st.o, 0, rw as usize, x.n, x.dv);
         }
         Ok(())
+    }
+}
+
+/// The production [`CallExecutor`]: dispatches staged buffers to the AOT
+/// fused3s executables through PJRT.
+struct PjrtFused<'a> {
+    rt: &'a Runtime,
+    opts: FusedOpts,
+}
+
+impl CallExecutor for PjrtFused<'_> {
+    fn bucket(
+        &mut self,
+        t_bucket: usize,
+        bufs: &CallBuffers,
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let name = Manifest::fused3s_name(
+            t_bucket,
+            x.d,
+            self.opts.precision,
+            self.opts.variant,
+        );
+        let exe = self.rt.executable(&name).with_context(|| {
+            format!(
+                "bucket t={} d={} ({}/{}): artifact missing",
+                t_bucket, x.d, self.opts.precision, self.opts.variant
+            )
+        })?;
+        let (sq, sk, sv, sbm) = shapes(batch, t_bucket, x.d, x.dv);
+        let outs = self.rt.run_exe_raw(
+            &exe,
+            &[
+                Arg::F32(&bufs.q, &sq),
+                Arg::F32(&bufs.k, &sk),
+                Arg::F32(&bufs.v, &sv),
+                Arg::I32(&bufs.bm, &sbm),
+            ],
+        )?;
+        outs.into_iter()
+            .next()
+            .expect("fused3s executable returns one output")
+            .into_f32()
+    }
+
+    fn partial(
+        &mut self,
+        chunk_t: usize,
+        bufs: &CallBuffers,
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let name = Manifest::partial_name(chunk_t, x.d);
+        let exe = self
+            .rt
+            .executable(&name)
+            .with_context(|| format!("partial artifact {name} missing"))?;
+        let (sq, sk, sv, sbm) = shapes(batch, chunk_t, x.d, x.dv);
+        let outs = self.rt.run_exe_raw(
+            &exe,
+            &[
+                Arg::F32(&bufs.q, &sq),
+                Arg::F32(&bufs.k, &sk),
+                Arg::F32(&bufs.v, &sv),
+                Arg::I32(&bufs.bm, &sbm),
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        let (Some(o), Some(m), Some(l)) = (it.next(), it.next(), it.next())
+        else {
+            bail!("partial executable must return (o, m, l)");
+        };
+        Ok((o.into_f32()?, m.into_f32()?, l.into_f32()?))
     }
 }
 

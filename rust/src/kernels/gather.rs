@@ -8,6 +8,7 @@
 
 use crate::bsb::builder::{Bsb, PAD_COL};
 use crate::bsb::bitmap;
+use crate::exec::WorkerPool;
 use crate::{BITMAP_WORDS, TCB_C, TCB_R};
 
 use super::AttentionProblem;
@@ -48,22 +49,16 @@ fn resize_only<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
     }
 }
 
-/// Fill one batch slot's Q block: rows `rw*16 .. rw*16+16` of `q`, scaled.
-/// Rows beyond n stay zero.
-pub fn gather_q(
-    buf: &mut [f32],
-    slot: usize,
-    rw: usize,
-    x: &AttentionProblem,
-) {
+/// Fill one slot-local Q block (`16 × d`): rows `rw*16 .. rw*16+16` of `q`,
+/// scaled.  Rows beyond n stay zero.
+pub fn gather_q_into(dst: &mut [f32], rw: usize, x: &AttentionProblem) {
     let d = x.d;
-    let base = slot * TCB_R * d;
     for r in 0..TCB_R {
         let row = rw * TCB_R + r;
         if row >= x.n {
             break;
         }
-        let dst = &mut buf[base + r * d..base + (r + 1) * d];
+        let dst = &mut dst[r * d..(r + 1) * d];
         let src = &x.q[row * d..(row + 1) * d];
         if x.scale == 1.0 {
             dst.copy_from_slice(src);
@@ -77,8 +72,46 @@ pub fn gather_q(
     }
 }
 
+/// Fill one batch slot's Q block inside a packed multi-slot buffer.
+pub fn gather_q(buf: &mut [f32], slot: usize, rw: usize, x: &AttentionProblem) {
+    let len = TCB_R * x.d;
+    gather_q_into(&mut buf[slot * len..(slot + 1) * len], rw, x);
+}
+
+/// Fill slot-local K̂/V̂ stacks + bitmaps for TCBs `[t_lo, t_hi)` of `rw`.
+/// The slices cover the slot's full capacity; lanes past `t_hi - t_lo` stay
+/// untouched (zero bitmap = fully masked).  `t_lo > 0` is the chunked case.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_kv_into(
+    k: &mut [f32],
+    v: &mut [f32],
+    bm: &mut [i32],
+    bsb: &Bsb,
+    rw: usize,
+    t_lo: usize,
+    t_hi: usize,
+    x: &AttentionProblem,
+) {
+    let (d, dv) = (x.d, x.dv);
+    for (jj, j) in (t_lo..t_hi).enumerate() {
+        let cols = bsb.tcb_cols(rw, j);
+        for (ci, &col) in cols.iter().enumerate() {
+            if col == PAD_COL {
+                continue;
+            }
+            let col = col as usize;
+            let krow = (jj * TCB_C + ci) * d;
+            k[krow..krow + d].copy_from_slice(&x.k[col * d..(col + 1) * d]);
+            let vrow = (jj * TCB_C + ci) * dv;
+            v[vrow..vrow + dv].copy_from_slice(&x.v[col * dv..(col + 1) * dv]);
+        }
+        let words = bitmap::as_i32(bsb.tcb_bitmap(rw, j));
+        bm[jj * BITMAP_WORDS..(jj + 1) * BITMAP_WORDS].copy_from_slice(&words);
+    }
+}
+
 /// Fill one slot's K̂/V̂ stacks + bitmaps for TCBs `[t_lo, t_hi)` of `rw`,
-/// padded to `t_cap` TCBs.  `t_lo > 0` is the chunked-RW case.
+/// padded to `t_cap` TCBs, inside packed multi-slot buffers.
 #[allow(clippy::too_many_arguments)]
 pub fn gather_kv_range(
     bufs: &mut CallBuffers,
@@ -91,31 +124,22 @@ pub fn gather_kv_range(
     x: &AttentionProblem,
 ) {
     let (d, dv) = (x.d, x.dv);
-    let k_base = slot * t_cap * TCB_C * d;
-    let v_base = slot * t_cap * TCB_C * dv;
-    let bm_base = slot * t_cap * BITMAP_WORDS;
-    for (jj, j) in (t_lo..t_hi).enumerate() {
-        let cols = bsb.tcb_cols(rw, j);
-        for (ci, &col) in cols.iter().enumerate() {
-            if col == PAD_COL {
-                continue;
-            }
-            let col = col as usize;
-            let krow = k_base + (jj * TCB_C + ci) * d;
-            bufs.k[krow..krow + d]
-                .copy_from_slice(&x.k[col * d..(col + 1) * d]);
-            let vrow = v_base + (jj * TCB_C + ci) * dv;
-            bufs.v[vrow..vrow + dv]
-                .copy_from_slice(&x.v[col * dv..(col + 1) * dv]);
-        }
-        let bm = bitmap::as_i32(bsb.tcb_bitmap(rw, j));
-        bufs.bm[bm_base + jj * BITMAP_WORDS..bm_base + (jj + 1) * BITMAP_WORDS]
-            .copy_from_slice(&bm);
-    }
-    // Slots jj in [t_hi-t_lo, t_cap) stay zero (zero bitmap = fully masked).
+    let k_len = t_cap * TCB_C * d;
+    let v_len = t_cap * TCB_C * dv;
+    let bm_len = t_cap * BITMAP_WORDS;
+    gather_kv_into(
+        &mut bufs.k[slot * k_len..(slot + 1) * k_len],
+        &mut bufs.v[slot * v_len..(slot + 1) * v_len],
+        &mut bufs.bm[slot * bm_len..(slot + 1) * bm_len],
+        bsb,
+        rw,
+        t_lo,
+        t_hi,
+        x,
+    );
 }
 
-/// Gather a whole regular call (all slots).
+/// Gather a whole regular call (all slots), serially.
 pub fn gather_call(
     bufs: &mut CallBuffers,
     rws: &[u32],
@@ -124,13 +148,79 @@ pub fn gather_call(
     x: &AttentionProblem,
     batch: usize,
 ) {
+    gather_call_with(&WorkerPool::new(1), bufs, rws, t_bucket, bsb, x, batch)
+}
+
+/// Gather a whole regular call, sharding slots across the pool.  Each slot
+/// owns disjoint sub-slices of the call buffers, so any pool width produces
+/// bit-identical buffers.
+pub fn gather_call_with(
+    pool: &WorkerPool,
+    bufs: &mut CallBuffers,
+    rws: &[u32],
+    t_bucket: usize,
+    bsb: &Bsb,
+    x: &AttentionProblem,
+    batch: usize,
+) {
     bufs.reset(batch, t_bucket, x.d, x.dv);
-    for (slot, &rw) in rws.iter().enumerate() {
+    let slots = split_slots(bufs, rws.len(), t_bucket, x);
+    pool.run_items(slots, |(slot, q, k, v, bm)| {
+        let rw = rws[slot] as usize;
+        gather_q_into(q, rw, x);
+        gather_kv_into(k, v, bm, bsb, rw, 0, bsb.rw_tcbs(rw), x);
+    });
+}
+
+/// Gather one batch of chunked-RW work items `(rw, chunk index)` at chunk
+/// capacity `chunk_t`, sharding slots across the pool.
+pub fn gather_partial_call_with(
+    pool: &WorkerPool,
+    bufs: &mut CallBuffers,
+    items: &[(u32, usize)],
+    chunk_t: usize,
+    bsb: &Bsb,
+    x: &AttentionProblem,
+    batch: usize,
+) {
+    bufs.reset(batch, chunk_t, x.d, x.dv);
+    let slots = split_slots(bufs, items.len(), chunk_t, x);
+    pool.run_items(slots, |(slot, q, k, v, bm)| {
+        let (rw, ci) = items[slot];
         let rw = rw as usize;
-        gather_q(&mut bufs.q, slot, rw, x);
+        gather_q_into(q, rw, x);
         let t = bsb.rw_tcbs(rw);
-        gather_kv_range(bufs, slot, bsb, rw, 0, t, t_bucket, x);
-    }
+        let t_lo = ci * chunk_t;
+        let t_hi = ((ci + 1) * chunk_t).min(t);
+        gather_kv_into(k, v, bm, bsb, rw, t_lo, t_hi, x);
+    });
+}
+
+/// Per-slot disjoint views over the call buffers for `n_slots` occupied
+/// slots at TCB capacity `t_cap`.
+type SlotViews<'b> =
+    Vec<(usize, &'b mut [f32], &'b mut [f32], &'b mut [f32], &'b mut [i32])>;
+
+fn split_slots<'b>(
+    bufs: &'b mut CallBuffers,
+    n_slots: usize,
+    t_cap: usize,
+    x: &AttentionProblem,
+) -> SlotViews<'b> {
+    let CallBuffers { q, k, v, bm } = bufs;
+    let views: SlotViews<'b> = q
+        .chunks_mut(TCB_R * x.d)
+        .zip(k.chunks_mut(t_cap * TCB_C * x.d))
+        .zip(v.chunks_mut(t_cap * TCB_C * x.dv))
+        .zip(bm.chunks_mut(t_cap * BITMAP_WORDS))
+        .take(n_slots)
+        .enumerate()
+        .map(|(slot, (((q, k), v), bm))| (slot, q, k, v, bm))
+        .collect();
+    // A call with more occupied slots than the buffers' batch capacity is a
+    // planner bug; fail loudly instead of silently dropping row windows.
+    assert_eq!(views.len(), n_slots, "call has more slots than batch capacity");
+    views
 }
 
 /// Scatter a call's output blocks back into the n×dv output matrix.

@@ -15,12 +15,13 @@ use anyhow::{Context, Result};
 use crate::bsb::bucket::{self, Plan};
 use crate::bsb::reorder::Order;
 use crate::bsb::{self, Bsb};
+use crate::exec::{CallExecutor, Engine};
 use crate::graph::CsrGraph;
 use crate::runtime::buffers::Arg;
 use crate::runtime::{Manifest, Runtime};
 use crate::{BITMAP_WORDS, TCB_C, TCB_R};
 
-use super::gather::{self, CallBuffers};
+use super::gather::CallBuffers;
 use super::AttentionProblem;
 
 /// Why the unfused baseline refused to run (the "OOM analog").
@@ -59,7 +60,18 @@ impl UnfusedDriver {
         stable_softmax: bool,
         order: Order,
     ) -> Result<UnfusedDriver> {
-        let bsb = bsb::build(g);
+        UnfusedDriver::new_with(man, g, stable_softmax, order, &Engine::serial())
+    }
+
+    /// Preprocess with the BSB build sharded across the engine's pool.
+    pub fn new_with(
+        man: &Manifest,
+        g: &CsrGraph,
+        stable_softmax: bool,
+        order: Order,
+        engine: &Engine,
+    ) -> Result<UnfusedDriver> {
+        let bsb = bsb::build_with(g, &engine.pool);
         let plan =
             bucket::plan(&bsb, &man.t_buckets, man.rw_batch, order, man.chunk_t);
         if let Some(c) = plan.chunked.first() {
@@ -84,50 +96,111 @@ impl UnfusedDriver {
         names
     }
 
-    /// Run the three-stage pipeline.  Between stages the intermediates
-    /// S and E cross the host boundary — the data movement fusion removes.
+    /// Run the three-stage pipeline (serial reference policy).
     pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
+        self.run_with(rt, x, &Engine::serial())
+    }
+
+    /// Run through the host execution engine: the three PJRT stages stay
+    /// back-to-back on the calling thread (the intermediates S and E still
+    /// cross the host boundary — the data movement fusion removes), while
+    /// gathers and scatters of neighbouring calls overlap them.
+    pub fn run_with(
+        &self,
+        rt: &Runtime,
+        x: &AttentionProblem,
+        engine: &Engine,
+    ) -> Result<Vec<f32>> {
+        let mut exec = PjrtUnfused { rt, stable_softmax: self.stable_softmax };
+        self.run_exec(x, engine, &mut exec)
+    }
+
+    /// Engine-driven execution against any [`CallExecutor`].
+    pub fn run_exec<E: CallExecutor>(
+        &self,
+        x: &AttentionProblem,
+        engine: &Engine,
+        exec: &mut E,
+    ) -> Result<Vec<f32>> {
         let mut out = vec![0.0f32; x.n * x.dv];
-        let mut bufs = CallBuffers::default();
-        for call in &self.plan.calls {
-            let t = call.t_bucket;
-            gather::gather_call(&mut bufs, &call.rws, t, &self.bsb, x, self.batch);
-
-            // Stage 1: SDDMM -> S materialised on host.
-            let sddmm = rt
-                .executable(&Manifest::sddmm_name(t, x.d))
-                .with_context(|| format!("sddmm t={t} d={}", x.d))?;
-            let sq = [self.batch, TCB_R, x.d];
-            let sk = [self.batch, t * TCB_C, x.d];
-            let sv = [self.batch, t * TCB_C, x.dv];
-            let sbm = [self.batch, t, BITMAP_WORDS];
-            let s = rt.run_exe_raw(
-                &sddmm,
-                &[
-                    Arg::F32(&bufs.q, &sq),
-                    Arg::F32(&bufs.k, &sk),
-                    Arg::I32(&bufs.bm, &sbm),
-                ],
-            )?;
-
-            // Stage 2: softmax -> E materialised on host.
-            let softmax = rt
-                .executable(&Manifest::softmax_name(t, self.stable_softmax))
-                .with_context(|| format!("softmax t={t}"))?;
-            let e = rt.run_exe(&softmax, &[s.into_iter().next().unwrap()])?;
-
-            // Stage 3: SpMM.
-            let spmm = rt
-                .executable(&Manifest::spmm_name(t, x.dv))
-                .with_context(|| format!("spmm t={t} d={}", x.dv))?;
-            let e0 = e.into_iter().next().unwrap();
-            let o = rt.run_exe_raw(
-                &spmm,
-                &[e0.as_arg(), Arg::F32(&bufs.v, &sv)],
-            )?;
-            gather::scatter_call(&mut out, o[0].as_f32()?, &call.rws, x.n, x.dv);
-        }
+        engine.run_bucketed(
+            &self.plan.calls,
+            &self.bsb,
+            x,
+            self.batch,
+            &mut out,
+            |call, bufs| exec.bucket(call.t_bucket, bufs, x, self.batch),
+        )?;
         Ok(out)
+    }
+}
+
+/// The production unfused [`CallExecutor`]: SDDMM → softmax → SpMM, each a
+/// separate PJRT dispatch with host-materialised intermediates.
+struct PjrtUnfused<'a> {
+    rt: &'a Runtime,
+    stable_softmax: bool,
+}
+
+impl CallExecutor for PjrtUnfused<'_> {
+    fn bucket(
+        &mut self,
+        t: usize,
+        bufs: &CallBuffers,
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        // Stage 1: SDDMM -> S materialised on host.
+        let sddmm = self
+            .rt
+            .executable(&Manifest::sddmm_name(t, x.d))
+            .with_context(|| format!("sddmm t={t} d={}", x.d))?;
+        let sq = [batch, TCB_R, x.d];
+        let sk = [batch, t * TCB_C, x.d];
+        let sv = [batch, t * TCB_C, x.dv];
+        let sbm = [batch, t, BITMAP_WORDS];
+        let s = self.rt.run_exe_raw(
+            &sddmm,
+            &[
+                Arg::F32(&bufs.q, &sq),
+                Arg::F32(&bufs.k, &sk),
+                Arg::I32(&bufs.bm, &sbm),
+            ],
+        )?;
+
+        // Stage 2: softmax -> E materialised on host.
+        let softmax = self
+            .rt
+            .executable(&Manifest::softmax_name(t, self.stable_softmax))
+            .with_context(|| format!("softmax t={t}"))?;
+        let e = self.rt.run_exe(&softmax, &[s.into_iter().next().unwrap()])?;
+
+        // Stage 3: SpMM.
+        let spmm = self
+            .rt
+            .executable(&Manifest::spmm_name(t, x.dv))
+            .with_context(|| format!("spmm t={t} d={}", x.dv))?;
+        let e0 = e.into_iter().next().unwrap();
+        let o = self
+            .rt
+            .run_exe_raw(&spmm, &[e0.as_arg(), Arg::F32(&bufs.v, &sv)])?;
+        o.into_iter()
+            .next()
+            .expect("spmm executable returns one output")
+            .into_f32()
+    }
+
+    fn partial(
+        &mut self,
+        _chunk_t: usize,
+        _bufs: &CallBuffers,
+        _x: &AttentionProblem,
+        _batch: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        // Unreachable by construction: `new` rejects plans with chunked RWs
+        // (the FlashSparse OOM analog), so the engine never dispatches a
+        // partial call for this driver.
+        Err(UnfusedError::Oversize { rw: 0, tcbs: 0 }.into())
     }
 }
 

@@ -22,6 +22,10 @@
 //!   column compaction, 128-bit TCB bitmaps, row-window reordering,
 //!   TCB-count bucketing, and the Table-3 footprint models.
 //! * [`runtime`] — PJRT client + executable cache over the AOT manifest.
+//! * [`exec`] — the parallel pipelined host execution engine: scoped-thread
+//!   worker pool, call-buffer arena, the double-buffered
+//!   gather→dispatch→scatter pipeline, and the offline host kernel
+//!   (EXPERIMENTS.md §Perf).
 //! * [`kernels`] — host-side drivers: fused (the paper's system), unfused
 //!   (FlashSparse analog), dense, and a scalar CSR CPU baseline (PyG analog).
 //! * [`coordinator`] — the serving layer: preprocessing pipeline, reordering
@@ -32,6 +36,7 @@
 
 pub mod bsb;
 pub mod coordinator;
+pub mod exec;
 pub mod experiments;
 pub mod graph;
 pub mod kernels;

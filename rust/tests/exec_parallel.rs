@@ -1,0 +1,183 @@
+//! Determinism contract of the host execution engine (EXPERIMENTS.md
+//! §Perf): every `ExecPolicy` — serial reference, threaded gathers,
+//! pipelined double buffering — must produce **bit-identical** driver
+//! output, and the sharded BSB build must produce a `Bsb` **equal** to the
+//! serial build.  Runs entirely offline through the host kernel; no
+//! artifacts needed.
+
+use fused3s::bsb;
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy, HostExecutor, WorkerPool};
+use fused3s::graph::{generators, CsrGraph};
+use fused3s::kernels::fused::{FusedDriver, FusedOpts};
+use fused3s::kernels::unfused::UnfusedDriver;
+use fused3s::kernels::{reference, AttentionProblem};
+use fused3s::runtime::Manifest;
+use fused3s::util::prng::Rng;
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+
+fn manifest() -> Manifest {
+    offline_manifest(8, BUCKETS, 128)
+}
+
+fn features(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+    )
+}
+
+/// The policy grid the bit-exactness assertions sweep.
+fn policies() -> Vec<ExecPolicy> {
+    vec![
+        ExecPolicy { threads: 1, pipeline_depth: 2 },
+        ExecPolicy { threads: 2, pipeline_depth: 1 },
+        ExecPolicy { threads: 4, pipeline_depth: 2 },
+        ExecPolicy { threads: 4, pipeline_depth: 4 },
+    ]
+}
+
+/// The graph set: regular, ragged-n (not a multiple of 16), power-law, and
+/// a mega-hub star that forces the chunked-RW path.
+fn graph_suite() -> Vec<(&'static str, CsrGraph)> {
+    vec![
+        ("er", generators::erdos_renyi(1000, 6.0, 1).with_self_loops()),
+        ("ragged", generators::erdos_renyi(277, 4.0, 2).with_self_loops()),
+        ("ba", generators::barabasi_albert(800, 5, 3).with_self_loops()),
+        ("star-chunked", generators::star(5000)),
+    ]
+}
+
+#[test]
+fn parallel_bsb_build_equals_serial_on_suite() {
+    for threads in [2, 3, 4, 8] {
+        let pool = WorkerPool::new(threads);
+        for (name, g) in graph_suite() {
+            assert_eq!(
+                bsb::build(&g),
+                bsb::build_with(&g, &pool),
+                "{name} threads={threads}"
+            );
+            assert_eq!(
+                bsb::build_bcsr_like(&g),
+                bsb::build_bcsr_like_with(&g, &pool),
+                "{name} threads={threads} (bcsr)"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_engine_is_bit_exact_across_policies() {
+    let man = manifest();
+    let d = 32;
+    for (name, g) in graph_suite() {
+        let (q, k, v) = features(g.n, d, 7);
+        let x = AttentionProblem::new(g.n, d, &q, &k, &v, 0.5);
+        let serial = Engine::serial();
+        let driver = FusedDriver::new(&man, &g, FusedOpts::default()).unwrap();
+        let want = driver
+            .run_exec(&x, &serial, &mut HostExecutor::new(&serial.pool))
+            .unwrap();
+        if name == "star-chunked" {
+            assert!(!driver.plan.chunked.is_empty(), "star must chunk");
+        }
+        // Numerical sanity against the independent dense reference.
+        let dense = reference::dense_attention_host(&g, &x);
+        let err = reference::max_abs_diff(&want, &dense);
+        assert!(err < 5e-3, "{name}: host kernel err {err}");
+        for policy in policies() {
+            let engine = Engine::new(policy);
+            let par_driver =
+                FusedDriver::new_with(&man, &g, FusedOpts::default(), &engine)
+                    .unwrap();
+            assert_eq!(par_driver.bsb, driver.bsb, "{name} {policy:?}");
+            let got = par_driver
+                .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+                .unwrap();
+            assert_eq!(got, want, "{name} {policy:?} not bit-identical");
+        }
+    }
+}
+
+#[test]
+fn unfused_engine_is_bit_exact_across_policies() {
+    let man = manifest();
+    let d = 16;
+    for (name, g) in [
+        ("er", generators::erdos_renyi(900, 5.0, 11).with_self_loops()),
+        ("ragged", generators::erdos_renyi(123, 3.0, 12).with_self_loops()),
+    ] {
+        let (q, k, v) = features(g.n, d, 13);
+        let x = AttentionProblem::new(g.n, d, &q, &k, &v, 1.0);
+        let serial = Engine::serial();
+        let driver = UnfusedDriver::new(
+            &man,
+            &g,
+            true,
+            fused3s::bsb::reorder::Order::ByTcbDesc,
+        )
+        .unwrap();
+        let want = driver
+            .run_exec(&x, &serial, &mut HostExecutor::new(&serial.pool))
+            .unwrap();
+        let dense = reference::dense_attention_host(&g, &x);
+        let err = reference::max_abs_diff(&want, &dense);
+        assert!(err < 1e-3, "{name}: host kernel err {err}");
+        for policy in policies() {
+            let engine = Engine::new(policy);
+            let got = driver
+                .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+                .unwrap();
+            assert_eq!(got, want, "{name} {policy:?} not bit-identical");
+        }
+    }
+}
+
+#[test]
+fn chunked_merge_matches_reference_closely() {
+    // The star hub row attends to 5000 columns across ~5 chunks; the
+    // host-side online-softmax merge must agree with the exact reference.
+    let man = manifest();
+    let g = generators::star(5000);
+    let d = 16;
+    let (q, k, v) = features(g.n, d, 21);
+    let x = AttentionProblem::new(g.n, d, &q, &k, &v, 1.0);
+    let engine = Engine::new(ExecPolicy { threads: 4, pipeline_depth: 2 });
+    let driver = FusedDriver::new_with(&man, &g, FusedOpts::default(), &engine)
+        .unwrap();
+    let got = driver
+        .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+        .unwrap();
+    let want = reference::dense_attention_host(&g, &x);
+    let err = reference::max_abs_diff(&got, &want);
+    assert!(err < 1e-2, "chunked merge err {err}");
+}
+
+#[test]
+fn buffer_arena_recycles_across_runs() {
+    let man = manifest();
+    let g = generators::erdos_renyi(512, 5.0, 31).with_self_loops();
+    let d = 16;
+    let (q, k, v) = features(g.n, d, 32);
+    let x = AttentionProblem::new(g.n, d, &q, &k, &v, 1.0);
+    let engine = Engine::new(ExecPolicy { threads: 2, pipeline_depth: 2 });
+    let driver = FusedDriver::new_with(&man, &g, FusedOpts::default(), &engine)
+        .unwrap();
+    let a = driver
+        .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+        .unwrap();
+    let pooled = engine.buffers.available();
+    assert!(pooled >= 1, "pipeline must return buffers to the arena");
+    let b = driver
+        .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+        .unwrap();
+    assert_eq!(a, b, "recycled buffers must not perturb results");
+    assert_eq!(
+        engine.buffers.available(),
+        pooled,
+        "steady state must not grow the arena"
+    );
+}

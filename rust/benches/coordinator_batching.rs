@@ -1,0 +1,125 @@
+//! `cargo bench coordinator_batching` — the dynamic-batching sweep
+//! (EXPERIMENTS.md §Batching): the full coordinator serving path in
+//! `HostEmulation` mode (no artifacts needed) under a molecule-vocabulary
+//! request stream, swept over `max_batch_delay` × `max_batch_nodes`, plus
+//! a no-batching baseline (`max_batch_requests = 1`).
+//!
+//! Prints one JSON row per config (machine-readable for the BENCH_*
+//! trajectory).  Env knobs: `F3S_BENCH_FULL=1` for the full request count.
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use fused3s::coordinator::{
+    AttnRequest, Coordinator, CoordinatorConfig, ExecutorKind,
+};
+use fused3s::exec::ExecPolicy;
+use fused3s::graph::batch::random_molecule;
+use fused3s::graph::CsrGraph;
+use fused3s::kernels::Backend;
+use fused3s::util::prng::Rng;
+
+const D: usize = 32;
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let requests = if full { 256 } else { 48 };
+
+    // A fixed vocabulary of molecule-like structures: the serving steady
+    // state repeats graphs, which is what the fingerprint cache exploits.
+    let mut rng = Rng::new(0xBA7C);
+    let vocab: Vec<CsrGraph> = (0..12)
+        .map(|_| {
+            let n = rng.range(20, 90);
+            random_molecule(n, &mut rng).with_self_loops()
+        })
+        .collect();
+
+    println!(
+        "coordinator_batching: {requests} requests, d={D}, vocab={} \
+         molecule graphs (full={full})",
+        vocab.len()
+    );
+
+    // Baseline: dynamic batching off.
+    run_config(&vocab, requests, 0, 16384, 1);
+    // The sweep: delay × node budget.
+    for &delay_us in &[0u64, 200, 1000] {
+        for &max_nodes in &[512usize, 2048, 8192] {
+            run_config(&vocab, requests, delay_us, max_nodes, 64);
+        }
+    }
+}
+
+fn run_config(
+    vocab: &[CsrGraph],
+    requests: usize,
+    delay_us: u64,
+    max_nodes: usize,
+    max_requests: usize,
+) {
+    let coord = Coordinator::start(CoordinatorConfig {
+        executor: ExecutorKind::HostEmulation,
+        preprocess_workers: 2,
+        queue_capacity: 64,
+        exec: ExecPolicy { threads: 4, pipeline_depth: 2 },
+        max_batch_requests: max_requests,
+        max_batch_nodes: max_nodes,
+        max_batch_delay: Duration::from_micros(delay_us),
+        cache_capacity: 64,
+        ..CoordinatorConfig::default()
+    })
+    .expect("host-emulation coordinator");
+
+    let mut rng = Rng::new(7);
+    let (tx, rx) = channel();
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let g = vocab[rng.below(vocab.len())].clone();
+        let nd = g.n * D;
+        coord
+            .submit(AttnRequest {
+                id: i as u64,
+                graph: g,
+                d: D,
+                q: rng.normal_vec(nd, 1.0),
+                k: rng.normal_vec(nd, 1.0),
+                v: rng.normal_vec(nd, 1.0),
+                scale: 0.125,
+                backend: Backend::Fused3S,
+                reply: tx.clone(),
+            })
+            .expect("submit");
+    }
+    drop(tx);
+    let mut ok = 0usize;
+    for _ in 0..requests {
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(resp) if resp.result.is_ok() => ok += 1,
+            Ok(resp) => panic!("request {} failed: {:?}", resp.id, resp.result.err()),
+            Err(e) => panic!("response timeout: {e}"),
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    let lat = m.latency.snapshot();
+    let b = &m.batching;
+    println!(
+        "{{\"bench\":\"coordinator_batching\",\"delay_us\":{delay_us},\
+         \"max_nodes\":{max_nodes},\"max_requests\":{max_requests},\
+         \"requests\":{requests},\"ok\":{ok},\"wall_ms\":{:.3},\
+         \"throughput_rps\":{:.2},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\
+         \"batches\":{},\"coalesced\":{},\"largest_batch\":{},\
+         \"cache_hits\":{},\"cache_misses\":{}}}",
+        wall_s * 1e3,
+        ok as f64 / wall_s,
+        lat.p50_s * 1e3,
+        lat.p99_s * 1e3,
+        b.batches(),
+        b.coalesced_requests(),
+        b.largest_batch(),
+        b.cache_hits(),
+        b.cache_misses(),
+    );
+    coord.shutdown();
+}

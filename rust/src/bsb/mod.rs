@@ -18,6 +18,16 @@
 //! * [`footprint`] — the Table-3 memory-footprint models for BSB and the
 //!   seven formats it is compared against;
 //! * [`stats`] — the Table-6/7 sparsity characterisation metrics.
+//!
+//! Build once, reuse everywhere: a built [`Bsb`] is plain owned data
+//! (`Send + Sync`).  The driver constructors split building from planning
+//! ([`FusedDriver::from_bsb`](crate::kernels::fused::FusedDriver::from_bsb),
+//! [`UnfusedDriver::from_bsb`](crate::kernels::unfused::UnfusedDriver::from_bsb)
+//! accept a pre-built BSB and only rebuild the cheap bucket plan), and the
+//! coordinator's fingerprint-keyed preprocessing cache
+//! ([`coordinator::DriverCache`](crate::coordinator::DriverCache)) shares
+//! whole prepared drivers behind `Arc`, so repeated graphs in the serving
+//! steady state skip steps 1–4 entirely.
 
 pub mod bitmap;
 pub mod bucket;

@@ -1,0 +1,274 @@
+//! Dynamic request coalescing — the admission queue in front of the
+//! preprocessing workers.
+//!
+//! The paper's batched-graph workload (§4.1, Fig. 6) wins precisely when
+//! thousands of small graphs are fused into one block-diagonal adjacency;
+//! serving one tiny molecule graph per kernel call pays full BSB-build and
+//! pipeline latency per request.  The [`Coalescer`] groups compatible
+//! pending requests — same feature dim, scale, and backend — and flushes a
+//! group as one unit of work when it reaches `max_batch_nodes` total nodes,
+//! `max_batch_requests` members, or its oldest member has waited
+//! `max_batch_delay`.
+//!
+//! The struct is pure (no threads, no clocks of its own — callers pass
+//! `Instant`s in), so the size/deadline policy is unit-tested directly;
+//! the server wraps it in a single batcher thread between the bounded
+//! ingress queue and the preprocessing pool.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::kernels::Backend;
+
+use super::request::AttnRequest;
+
+/// Coalescing knobs (mirrored as flat fields on `CoordinatorConfig`).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct BatchPolicy {
+    /// Max requests per batch; 1 disables coalescing entirely.
+    pub max_batch_requests: usize,
+    /// Flush a group once its total node count reaches this; requests at
+    /// least this large are never coalesced (they fill a batch alone).
+    pub max_batch_nodes: usize,
+    /// Max time the first request of a group waits for company.
+    pub max_batch_delay: Duration,
+}
+
+/// A request admitted into the coalescing queue, carrying its submit-time
+/// stamp so the reported latency includes both the time spent queued in
+/// the bounded ingress and the time spent waiting for batch company (the
+/// group's flush deadline also counts from this stamp).
+pub(crate) struct Admitted {
+    pub req: AttnRequest,
+    pub arrived: Instant,
+}
+
+/// One flushed unit of work: 1..N requests sharing (d, scale, backend).
+pub(crate) type Flush = Vec<Admitted>;
+
+/// Requests may only merge when the block-diagonal run is exactly the
+/// per-request computation: same feature dim and scale (one merged
+/// `AttentionProblem`) and same backend (one driver).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct GroupKey {
+    d: usize,
+    scale_bits: u32,
+    backend: Backend,
+}
+
+struct Group {
+    entries: Vec<Admitted>,
+    nodes: usize,
+    deadline: Instant,
+}
+
+pub(crate) struct Coalescer {
+    policy: BatchPolicy,
+    groups: HashMap<GroupKey, Group>,
+}
+
+impl Coalescer {
+    pub fn new(policy: BatchPolicy) -> Coalescer {
+        Coalescer { policy, groups: HashMap::new() }
+    }
+
+    /// Whether a request is a coalescing candidate at all.  The dense
+    /// fallback pads to fixed compiled sizes, so block-diagonal merging
+    /// changes its cost model — it always runs alone.
+    fn coalescible(&self, req: &AttnRequest) -> bool {
+        self.policy.max_batch_requests > 1
+            && req.backend != Backend::Dense
+            && req.graph.n < self.policy.max_batch_nodes
+    }
+
+    /// Admit one request.  Returns the batches this admission flushed:
+    /// a singleton passthrough for non-coalescible requests, a full group
+    /// when the size caps trip, or nothing (request parked until its
+    /// group's deadline or capacity flush).
+    pub fn admit(&mut self, req: AttnRequest, now: Instant) -> Vec<Flush> {
+        if !self.coalescible(&req) {
+            return vec![vec![Admitted { req, arrived: now }]];
+        }
+        let key = GroupKey {
+            d: req.d,
+            scale_bits: req.scale.to_bits(),
+            backend: req.backend,
+        };
+        let group = self.groups.entry(key).or_insert_with(|| Group {
+            entries: Vec::new(),
+            nodes: 0,
+            deadline: now + self.policy.max_batch_delay,
+        });
+        group.nodes += req.graph.n;
+        group.entries.push(Admitted { req, arrived: now });
+        if group.nodes >= self.policy.max_batch_nodes
+            || group.entries.len() >= self.policy.max_batch_requests
+        {
+            let group = self.groups.remove(&key).expect("group present");
+            return vec![group.entries];
+        }
+        Vec::new()
+    }
+
+    /// Earliest pending flush deadline (None when nothing is parked).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.groups.values().map(|g| g.deadline).min()
+    }
+
+    /// Flush every group whose delay budget has elapsed.
+    pub fn flush_due(&mut self, now: Instant) -> Vec<Flush> {
+        let due: Vec<GroupKey> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| g.deadline <= now)
+            .map(|(k, _)| *k)
+            .collect();
+        due.into_iter()
+            .map(|k| self.groups.remove(&k).expect("group present").entries)
+            .collect()
+    }
+
+    /// Drain everything unconditionally (the shutdown path: no request that
+    /// was admitted may be dropped).
+    pub fn flush_all(&mut self) -> Vec<Flush> {
+        self.groups.drain().map(|(_, g)| g.entries).collect()
+    }
+
+    /// Requests currently parked in the coalescing queue.
+    pub fn pending(&self) -> usize {
+        self.groups.values().map(|g| g.entries.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use std::sync::mpsc::channel;
+
+    fn policy(reqs: usize, nodes: usize, delay_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch_requests: reqs,
+            max_batch_nodes: nodes,
+            max_batch_delay: Duration::from_millis(delay_ms),
+        }
+    }
+
+    fn req(id: u64, n: usize, d: usize, scale: f32, backend: Backend) -> AttnRequest {
+        let (tx, _rx) = channel();
+        AttnRequest {
+            id,
+            graph: generators::ring(n),
+            d,
+            q: vec![0.0; n * d],
+            k: vec![0.0; n * d],
+            v: vec![0.0; n * d],
+            scale,
+            backend,
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn request_cap_flushes_full_group() {
+        let mut co = Coalescer::new(policy(3, 10_000, 100));
+        let now = Instant::now();
+        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), now).is_empty());
+        assert!(co.admit(req(1, 8, 4, 1.0, Backend::Fused3S), now).is_empty());
+        let flushed = co.admit(req(2, 8, 4, 1.0, Backend::Fused3S), now);
+        assert_eq!(flushed.len(), 1);
+        let ids: Vec<u64> = flushed[0].iter().map(|a| a.req.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(co.pending(), 0);
+    }
+
+    #[test]
+    fn node_cap_flushes_group() {
+        let mut co = Coalescer::new(policy(100, 20, 100));
+        let now = Instant::now();
+        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), now).is_empty());
+        let flushed = co.admit(req(1, 12, 4, 1.0, Backend::Fused3S), now);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].len(), 2);
+    }
+
+    #[test]
+    fn incompatible_requests_do_not_mix() {
+        let mut co = Coalescer::new(policy(2, 10_000, 100));
+        let now = Instant::now();
+        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), now).is_empty());
+        // Different d, different scale, different backend: three new groups.
+        assert!(co.admit(req(1, 8, 8, 1.0, Backend::Fused3S), now).is_empty());
+        assert!(co.admit(req(2, 8, 4, 0.5, Backend::Fused3S), now).is_empty());
+        assert!(co.admit(req(3, 8, 4, 1.0, Backend::CpuCsr), now).is_empty());
+        assert_eq!(co.pending(), 4);
+        // A matching partner flushes only its own group.
+        let flushed = co.admit(req(4, 8, 4, 1.0, Backend::Fused3S), now);
+        assert_eq!(flushed.len(), 1);
+        let ids: Vec<u64> = flushed[0].iter().map(|a| a.req.id).collect();
+        assert_eq!(ids, vec![0, 4]);
+        assert_eq!(co.pending(), 3);
+    }
+
+    #[test]
+    fn dense_and_oversize_pass_through() {
+        let mut co = Coalescer::new(policy(8, 32, 100));
+        let now = Instant::now();
+        let f = co.admit(req(0, 8, 4, 1.0, Backend::Dense), now);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].len(), 1);
+        // A request at/above max_batch_nodes runs alone.
+        let f = co.admit(req(1, 40, 4, 1.0, Backend::Fused3S), now);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].len(), 1);
+        assert_eq!(co.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_only_due_groups() {
+        let mut co = Coalescer::new(policy(10, 10_000, 5));
+        let t0 = Instant::now();
+        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), t0).is_empty());
+        let t1 = t0 + Duration::from_millis(3);
+        assert!(co.admit(req(1, 8, 8, 1.0, Backend::Fused3S), t1).is_empty());
+        assert_eq!(co.next_deadline(), Some(t0 + Duration::from_millis(5)));
+        // At t0+5ms only the first group is due.
+        let due = co.flush_due(t0 + Duration::from_millis(5));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0][0].req.id, 0);
+        assert_eq!(co.pending(), 1);
+        // Well past both deadlines, the second flushes too.
+        let due = co.flush_due(t1 + Duration::from_millis(5));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0][0].req.id, 1);
+        assert_eq!(co.next_deadline(), None);
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut co = Coalescer::new(policy(10, 10_000, 1000));
+        let now = Instant::now();
+        for i in 0..4 {
+            assert!(co
+                .admit(req(i, 8, 4 + (i as usize % 2) * 4, 1.0, Backend::Fused3S), now)
+                .is_empty());
+        }
+        assert_eq!(co.pending(), 4);
+        let all = co.flush_all();
+        let total: usize = all.iter().map(|f| f.len()).sum();
+        assert_eq!(total, 4);
+        assert_eq!(co.pending(), 0);
+    }
+
+    #[test]
+    fn coalescing_disabled_passes_everything_through() {
+        let mut co = Coalescer::new(policy(1, 10_000, 100));
+        let now = Instant::now();
+        for i in 0..3 {
+            let f = co.admit(req(i, 8, 4, 1.0, Backend::Fused3S), now);
+            assert_eq!(f.len(), 1);
+            assert_eq!(f[0].len(), 1);
+        }
+        assert_eq!(co.pending(), 0);
+    }
+}

@@ -1,0 +1,174 @@
+//! BSB preprocessing cache — repeated graphs skip the build entirely.
+//!
+//! The serving steady state replays the same structures over and over
+//! (fixed molecule vocabularies, recurring batch compositions), so the
+//! coordinator keys prepared drivers — BSB + bucket plan, the expensive
+//! per-graph preprocessing — by [`CsrGraph::fingerprint`] + backend and
+//! reuses them across requests.  Entries are `Arc`-shared: preprocessing
+//! workers insert, the executor runs them concurrently, eviction never
+//! invalidates an in-flight run.
+//!
+//! Collision safety: a 64-bit content fingerprint collides with ~2⁻⁶⁴
+//! probability, and a stored entry is additionally cross-checked against
+//! the request's node *and* edge counts, so a mismatched collision
+//! degrades to a spurious rebuild.  A colliding pair that also matches
+//! (n, nnz) would be served wrongly — at these odds the serving path
+//! deliberately skips a full structural compare.
+//!
+//! [`CsrGraph::fingerprint`]: crate::graph::CsrGraph::fingerprint
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::kernels::{Backend, Driver};
+
+struct Slot {
+    driver: Arc<Driver>,
+    last_used: u64,
+    /// Keyed graph's (node, edge) counts — the collision cross-check.
+    n: usize,
+    nnz: usize,
+}
+
+struct Inner {
+    map: HashMap<(u64, Backend), Slot>,
+    tick: u64,
+}
+
+/// LRU cache of prepared drivers, shared by the preprocessing workers.
+pub struct DriverCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl DriverCache {
+    /// `capacity == 0` disables caching (every lookup misses, inserts are
+    /// dropped).
+    pub fn new(capacity: usize) -> DriverCache {
+        DriverCache {
+            capacity,
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+        }
+    }
+
+    /// Look up a prepared driver; refreshes LRU recency on hit.  `n`/`nnz`
+    /// are the requesting graph's node/edge counts (collision cross-check).
+    pub fn get(
+        &self,
+        fp: u64,
+        backend: Backend,
+        n: usize,
+        nnz: usize,
+    ) -> Option<Arc<Driver>> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let slot = inner.map.get_mut(&(fp, backend))?;
+        if slot.n != n || slot.nnz != nnz {
+            return None; // fingerprint collision: treat as a miss
+        }
+        slot.last_used = tick;
+        Some(slot.driver.clone())
+    }
+
+    /// Insert a freshly prepared driver for a graph with `n` nodes and
+    /// `nnz` edges, evicting least-recently-used entries to stay within
+    /// capacity.  Returns how many were evicted.
+    pub fn insert(
+        &self,
+        fp: u64,
+        backend: Backend,
+        n: usize,
+        nnz: usize,
+        driver: Arc<Driver>,
+    ) -> u64 {
+        if self.capacity == 0 {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let mut evicted = 0u64;
+        while inner.map.len() >= self.capacity
+            && !inner.map.contains_key(&(fp, backend))
+        {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k)
+                .expect("non-empty map");
+            inner.map.remove(&oldest);
+            evicted += 1;
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner
+            .map
+            .insert((fp, backend), Slot { driver, last_used: tick, n, nnz });
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{offline_manifest, Engine};
+    use crate::graph::generators;
+
+    /// A ring(n) has n nodes and 2n edges.
+    fn driver_for(n: usize) -> Arc<Driver> {
+        let man = offline_manifest(8, &[4, 8, 16, 32, 64, 128], 128);
+        let g = generators::ring(n);
+        Arc::new(
+            Driver::prepare_on(&man, &g, Backend::Fused3S, &Engine::serial())
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn hit_after_insert_and_collision_guards() {
+        let cache = DriverCache::new(4);
+        assert!(cache.get(42, Backend::Fused3S, 32, 64).is_none());
+        cache.insert(42, Backend::Fused3S, 32, 64, driver_for(32));
+        assert!(cache.get(42, Backend::Fused3S, 32, 64).is_some());
+        // Same key, different backend: distinct entries.
+        assert!(cache.get(42, Backend::CpuCsr, 32, 64).is_none());
+        // Collision cross-checks: wrong n or wrong nnz is a miss, never a
+        // wrong-structure driver.
+        assert!(cache.get(42, Backend::Fused3S, 64, 64).is_none());
+        assert!(cache.get(42, Backend::Fused3S, 32, 48).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let cache = DriverCache::new(2);
+        cache.insert(1, Backend::Fused3S, 16, 32, driver_for(16));
+        cache.insert(2, Backend::Fused3S, 16, 32, driver_for(16));
+        // Touch 1 so 2 becomes the LRU entry.
+        assert!(cache.get(1, Backend::Fused3S, 16, 32).is_some());
+        let evicted = cache.insert(3, Backend::Fused3S, 16, 32, driver_for(16));
+        assert_eq!(evicted, 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(1, Backend::Fused3S, 16, 32).is_some());
+        assert!(cache.get(2, Backend::Fused3S, 16, 32).is_none());
+        assert!(cache.get(3, Backend::Fused3S, 16, 32).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let cache = DriverCache::new(0);
+        assert_eq!(cache.insert(7, Backend::Fused3S, 16, 32, driver_for(16)), 0);
+        assert!(cache.get(7, Backend::Fused3S, 16, 32).is_none());
+        assert!(cache.is_empty());
+    }
+}

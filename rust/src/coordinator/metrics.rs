@@ -1,5 +1,7 @@
-//! Serving metrics: latency distribution + throughput + queue accounting.
+//! Serving metrics: latency distribution + throughput + queue accounting +
+//! batching/cache counters for the coalescing path.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -44,11 +46,73 @@ pub struct LatencySummary {
     pub max_s: f64,
 }
 
+/// Counters for the dynamic-batching path: how well the coalescer packs
+/// requests, and how often the BSB preprocessing cache spares a build.
+#[derive(Default)]
+pub struct BatchingCounters {
+    batches: AtomicU64,
+    coalesced_requests: AtomicU64,
+    largest_batch: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+}
+
+impl BatchingCounters {
+    /// Record one executed batch of `size` requests (size 1 = singleton).
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        if size > 1 {
+            self.coalesced_requests.fetch_add(size as u64, Ordering::Relaxed);
+        }
+        self.largest_batch.fetch_max(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn cache_evicted(&self, n: u64) {
+        self.cache_evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Batches executed (each is one driver call; singletons count too).
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Requests served through a batch of ≥ 2 members.
+    pub fn coalesced_requests(&self) -> u64 {
+        self.coalesced_requests.load(Ordering::Relaxed)
+    }
+
+    pub fn largest_batch(&self) -> u64 {
+        self.largest_batch.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache_evictions.load(Ordering::Relaxed)
+    }
+}
+
 /// Aggregate serving metrics over a run.
 pub struct Metrics {
     pub latency: LatencyRecorder,
     pub preprocess: LatencyRecorder,
     pub execute: LatencyRecorder,
+    pub batching: BatchingCounters,
     started: Instant,
     completed: Mutex<u64>,
     failed: Mutex<u64>,
@@ -60,6 +124,7 @@ impl Default for Metrics {
             latency: LatencyRecorder::new(),
             preprocess: LatencyRecorder::new(),
             execute: LatencyRecorder::new(),
+            batching: BatchingCounters::default(),
             started: Instant::now(),
             completed: Mutex::new(0),
             failed: Mutex::new(0),
@@ -100,9 +165,12 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         let l = self.latency.snapshot();
+        let b = &self.batching;
         format!(
             "requests={} failed={} throughput={:.2} req/s  \
-             latency p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+             latency p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms  \
+             batches={} coalesced={} largest={}  \
+             bsb-cache hit/miss/evict={}/{}/{}",
             self.completed(),
             self.failed(),
             self.throughput_rps(),
@@ -110,6 +178,12 @@ impl Metrics {
             l.p95_s * 1e3,
             l.p99_s * 1e3,
             l.max_s * 1e3,
+            b.batches(),
+            b.coalesced_requests(),
+            b.largest_batch(),
+            b.cache_hits(),
+            b.cache_misses(),
+            b.cache_evictions(),
         )
     }
 }
@@ -140,5 +214,25 @@ mod tests {
         assert_eq!(m.completed(), 2);
         assert_eq!(m.failed(), 1);
         assert!(m.report().contains("requests=2"));
+    }
+
+    #[test]
+    fn batching_counters() {
+        let m = Metrics::new();
+        m.batching.record_batch(1);
+        m.batching.record_batch(5);
+        m.batching.record_batch(3);
+        assert_eq!(m.batching.batches(), 3);
+        assert_eq!(m.batching.coalesced_requests(), 8);
+        assert_eq!(m.batching.largest_batch(), 5);
+        m.batching.cache_hit();
+        m.batching.cache_miss();
+        m.batching.cache_miss();
+        m.batching.cache_evicted(2);
+        assert_eq!(m.batching.cache_hits(), 1);
+        assert_eq!(m.batching.cache_misses(), 2);
+        assert_eq!(m.batching.cache_evictions(), 2);
+        assert!(m.report().contains("largest=5"));
+        assert!(m.report().contains("hit/miss/evict=1/2/2"));
     }
 }

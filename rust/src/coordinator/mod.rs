@@ -3,25 +3,36 @@
 //! Architecture (std threads + mpsc; tokio is unavailable offline):
 //!
 //! ```text
-//!  clients ── submit ──► ingress queue
+//!  clients ── submit ──► bounded ingress queue (backpressure: blocks)
 //!                            │
-//!              preprocessing workers (BSB build + bucket plan, CPU-bound,
-//!              scales with cores; the paper's "preprocessing alongside
-//!              sparse matrix compaction")
+//!                     batcher thread (dynamic request coalescing: groups
+//!                     compatible small-graph requests into block-diagonal
+//!                     batches by size/deadline policy — paper §4.1's
+//!                     batched-graph workload, applied to serving)
 //!                            │
-//!                     executor thread (owns the PJRT Runtime; dispatches
-//!                     bucketed kernel calls in reordered schedule order)
+//!              preprocessing workers (merge components, fingerprint-keyed
+//!              BSB cache, BSB build + bucket plan on cache miss; the
+//!              paper's "preprocessing alongside sparse matrix compaction")
+//!                            │
+//!                     executor thread (owns the PJRT Runtime — or the
+//!                     offline host emulation — one fused driver call per
+//!                     batch, per-component scatter of the output rows)
 //!                            │
 //!  clients ◄── response channels ──┘
 //! ```
 //!
 //! Python never appears anywhere in this path; the executor replays AOT
-//! artifacts only.
+//! artifacts only (or, under `ExecutorKind::HostEmulation`, the CPU
+//! emulation of the fused call — which is how the differential batching
+//! tests and the stress suite run the full path with no artifacts).
 
+mod batcher;
+mod cache;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use metrics::{LatencyRecorder, Metrics};
+pub use cache::DriverCache;
+pub use metrics::{BatchingCounters, LatencyRecorder, Metrics};
 pub use request::{AttnRequest, AttnResponse};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, ExecutorKind};

@@ -24,12 +24,17 @@ pub struct AttnRequest {
 pub struct AttnResponse {
     pub id: u64,
     pub result: Result<Vec<f32>, String>,
-    /// End-to-end latency in seconds (enqueue → response).
+    /// End-to-end latency in seconds (admission → response, including any
+    /// time parked in the coalescing queue).
     pub latency_s: f64,
-    /// Time spent in preprocessing (BSB build + plan).
+    /// Time spent in preprocessing (BSB build + plan; shared by the whole
+    /// batch this request rode in).
     pub preprocess_s: f64,
-    /// Time spent executing kernels.
+    /// Time spent executing kernels (also batch-shared).
     pub execute_s: f64,
+    /// How many requests were coalesced into the block-diagonal batch that
+    /// served this one (1 = ran alone).
+    pub batch_size: usize,
 }
 
 impl AttnRequest {

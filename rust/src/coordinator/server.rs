@@ -1,4 +1,5 @@
-//! The coordinator server: preprocessing workers + a PJRT executor thread.
+//! The coordinator server: admission/coalescing queue + preprocessing
+//! workers + an executor thread.
 //!
 //! Ownership model: `xla::PjRtClient` is not `Sync`, so exactly one executor
 //! thread owns the [`Runtime`]; preprocessing (BSB build + bucket planning,
@@ -6,27 +7,65 @@
 //! the paper's split between per-graph preprocessing ("negligible overhead,
 //! done once per input graph") and kernel execution.
 //!
-//! Host parallelism: one shared [`Engine`] (worker pool + call-buffer
-//! arena, EXPERIMENTS.md §Perf) is threaded through both stages — the
-//! preprocessing workers shard each request's BSB build across it, and the
-//! executor runs every driver through its gather/dispatch/scatter pipeline —
-//! instead of each stage spawning ad-hoc threads with private buffers.
+//! Request path (all std threads + mpsc; tokio is unavailable offline):
+//!
+//! 1. **admission** — `submit` pushes onto a *bounded* ingress queue;
+//!    when the queue is full the caller blocks (backpressure, never
+//!    drops).  The batcher → worker and worker → executor queues are
+//!    bounded too (same `queue_capacity`), so overload propagates back to
+//!    `submit` instead of accumulating merged feature buffers in memory;
+//! 2. **coalescing** — a single batcher thread groups compatible pending
+//!    requests (same d/scale/backend) by the size/deadline policy
+//!    (`max_batch_nodes`, `max_batch_delay`) into block-diagonal batches —
+//!    the paper's §4.1 batched-graph workload, applied to serving;
+//! 3. **preprocessing** — workers merge each batch into one `CsrGraph`
+//!    (`graph::batch::batch_graph_refs`), consult the fingerprint-keyed
+//!    BSB cache, and build a shared driver on the process-wide [`Engine`];
+//! 4. **execution** — the executor runs one driver call per batch (PJRT
+//!    artifacts, or the offline host emulation under
+//!    [`ExecutorKind::HostEmulation`]) and scatters per-component output
+//!    rows back to each caller's reply channel.
+//!
+//! Because the block-diagonal adjacency keeps every row's neighbour lanes
+//! in the same ascending-column order as a per-graph run, the batched
+//! outputs are **bit-identical** to serial per-request execution (pinned by
+//! `rust/tests/batching_equivalence.rs`).
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::exec::{Engine, ExecPolicy};
-use crate::kernels::{AttentionProblem, Driver};
+use crate::exec::{offline_manifest, Engine, ExecPolicy};
+use crate::graph::batch::batch_graph_refs;
+use crate::graph::CsrGraph;
+use crate::kernels::{AttentionProblem, Backend, Driver};
 use crate::runtime::{Manifest, Runtime};
 
+use super::batcher::{Admitted, BatchPolicy, Coalescer, Flush};
+use super::cache::DriverCache;
 use super::metrics::Metrics;
 use super::request::{AttnRequest, AttnResponse};
+
+/// How the executor stage actually computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Dispatch AOT artifacts through PJRT (production; needs
+    /// `make artifacts` in `artifacts_dir`).
+    Pjrt,
+    /// Offline host-kernel emulation: the full coordinator path — batching,
+    /// cache, gathers, pipeline, scatters — with no artifacts and no PJRT
+    /// (tests, benches, cold CI).  The dense fallback backend is
+    /// unavailable in this mode.
+    HostEmulation,
+}
+
+/// Bucketing configuration used in `HostEmulation` mode (matches the
+/// offline test/bench manifests).
+const OFFLINE_BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -39,6 +78,18 @@ pub struct CoordinatorConfig {
     pub queue_capacity: usize,
     /// Host execution policy shared by preprocessing and the executor.
     pub exec: ExecPolicy,
+    /// Kernel dispatch mode (PJRT artifacts vs offline host emulation).
+    pub executor: ExecutorKind,
+    /// Max requests coalesced into one block-diagonal batch; 1 disables
+    /// dynamic batching.
+    pub max_batch_requests: usize,
+    /// Flush a forming batch once it reaches this many total nodes;
+    /// requests at least this large always run alone.
+    pub max_batch_nodes: usize,
+    /// Max time the first request of a batch waits for company.
+    pub max_batch_delay: Duration,
+    /// Prepared-driver (BSB) cache entries; 0 disables the cache.
+    pub cache_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -48,80 +99,142 @@ impl Default for CoordinatorConfig {
             preprocess_workers: 2,
             queue_capacity: 64,
             exec: ExecPolicy::auto(),
+            executor: ExecutorKind::Pjrt,
+            max_batch_requests: 64,
+            max_batch_nodes: 16384,
+            max_batch_delay: Duration::from_micros(500),
+            cache_capacity: 128,
         }
     }
 }
 
-/// A preprocessed request waiting for the executor.
-struct PreparedRequest {
-    req: AttnRequest,
-    driver: Result<Driver, String>,
-    enqueued: Instant,
+impl CoordinatorConfig {
+    fn batch_policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            max_batch_requests: self.max_batch_requests.max(1),
+            max_batch_nodes: self.max_batch_nodes.max(1),
+            max_batch_delay: self.max_batch_delay,
+        }
+    }
+}
+
+/// One coalesced unit of work travelling batcher → preprocessing.
+struct Job {
+    entries: Vec<Admitted>,
+}
+
+/// One response route of a prepared batch.
+struct Entry {
+    id: u64,
+    reply: Sender<AttnResponse>,
+    arrived: Instant,
+}
+
+/// A preprocessed batch waiting for the executor: the merged problem plus
+/// per-component scatter routes.
+struct PreparedBatch {
+    entries: Vec<Entry>,
+    /// Component row offsets into the merged problem (len = entries + 1).
+    offsets: Vec<u32>,
+    n_total: usize,
+    d: usize,
+    scale: f32,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    driver: std::result::Result<Arc<Driver>, String>,
     preprocess_s: f64,
 }
 
-/// Handle to a running coordinator.
+/// Handle to a running coordinator.  Each request travels with its
+/// submit-time stamp so reported latency includes time spent queued in
+/// (or blocked on) the bounded ingress — the overload regime is exactly
+/// when that time matters.
 pub struct Coordinator {
-    ingress: Sender<AttnRequest>,
+    ingress: SyncSender<(AttnRequest, Instant)>,
     metrics: Arc<Metrics>,
-    shutdown: Arc<AtomicBool>,
+    batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     executor: Option<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the worker pool and executor.  The executor compiles
+    /// Start the batcher, worker pool, and executor.  The executor compiles
     /// executables lazily; call [`Runtime::warmup`] patterns via a first
     /// dummy request if cold-start latency matters.
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
         // Validate the manifest eagerly so startup fails fast.  The PJRT
         // client itself is constructed *inside* the executor thread: the xla
         // client is reference-counted and not Send.
-        let manifest = Arc::new(
-            Manifest::load(&cfg.artifacts_dir)
+        let manifest = Arc::new(match cfg.executor {
+            ExecutorKind::Pjrt => Manifest::load(&cfg.artifacts_dir)
                 .context("coordinator startup: loading artifacts")?,
-        );
+            ExecutorKind::HostEmulation => offline_manifest(8, OFFLINE_BUCKETS, 128),
+        });
 
         let metrics = Arc::new(Metrics::new());
-        let shutdown = Arc::new(AtomicBool::new(false));
         // One engine for the whole coordinator: preprocessing shards BSB
         // builds across its pool, the executor pipelines calls through it,
         // and its buffer arena recycles staging memory across requests.
         let engine = Arc::new(Engine::new(cfg.exec));
-        let (ingress_tx, ingress_rx) = channel::<AttnRequest>();
-        let (prep_tx, prep_rx) = channel::<PreparedRequest>();
-        let ingress_rx = Arc::new(std::sync::Mutex::new(ingress_rx));
+        let cache = Arc::new(DriverCache::new(cfg.cache_capacity));
+
+        // Bounded queues end to end: submit blocks (never drops) once the
+        // ingress fills, and the batcher/worker stages block rather than
+        // buffer unbounded merged feature payloads, so sustained overload
+        // surfaces as submit-side backpressure instead of memory growth.
+        let bound = cfg.queue_capacity.max(1);
+        let (ingress_tx, ingress_rx) = sync_channel::<(AttnRequest, Instant)>(bound);
+        let (job_tx, job_rx) = sync_channel::<Job>(bound);
+        let (prep_tx, prep_rx) = sync_channel::<PreparedBatch>(bound);
+
+        // Stage 1: the single coalescing thread.
+        let policy = cfg.batch_policy();
+        let batcher =
+            std::thread::spawn(move || batcher_loop(ingress_rx, job_tx, policy));
+
+        // Stage 2: preprocessing workers share the job queue.
+        let job_rx = Arc::new(Mutex::new(job_rx));
         let mut workers = Vec::new();
         for _ in 0..cfg.preprocess_workers.max(1) {
-            let rx = ingress_rx.clone();
+            let rx = job_rx.clone();
             let tx = prep_tx.clone();
-            let stop = shutdown.clone();
             let man = manifest.clone();
             let eng = engine.clone();
+            let cac = cache.clone();
+            let met = metrics.clone();
             workers.push(std::thread::spawn(move || {
-                preprocess_worker(rx, tx, stop, man, eng)
+                preprocess_worker(rx, tx, man, eng, cac, met)
             }));
         }
         drop(prep_tx);
 
-        // Executor stage: constructs and owns the PJRT runtime on its own
-        // thread; startup errors are reported back before `start` returns.
+        // Stage 3: the executor.  In PJRT mode it constructs and owns the
+        // runtime on its own thread; startup errors are reported back
+        // before `start` returns.  Host emulation needs no runtime.
         let m2 = metrics.clone();
         let dir = cfg.artifacts_dir.clone();
         let eng = engine.clone();
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let kind = cfg.executor;
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
         let executor = std::thread::spawn(move || {
-            let rt = match Runtime::new(&dir) {
-                Ok(rt) => {
+            let backend = match kind {
+                ExecutorKind::Pjrt => match Runtime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        ExecBackend::Pjrt(rt)
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                },
+                ExecutorKind::HostEmulation => {
                     let _ = ready_tx.send(Ok(()));
-                    rt
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                    return;
+                    ExecBackend::Host
                 }
             };
-            executor_loop(rt, prep_rx, m2, eng)
+            executor_loop(backend, prep_rx, m2, eng)
         });
         ready_rx
             .recv()
@@ -131,16 +244,17 @@ impl Coordinator {
         Ok(Coordinator {
             ingress: ingress_tx,
             metrics,
-            shutdown,
+            batcher: Some(batcher),
             workers,
             executor: Some(executor),
         })
     }
 
-    /// Submit a request (non-blocking; the reply arrives on `req.reply`).
+    /// Submit a request.  Blocks while the ingress queue is at
+    /// `queue_capacity` (backpressure); the reply arrives on `req.reply`.
     pub fn submit(&self, req: AttnRequest) -> Result<()> {
         self.ingress
-            .send(req)
+            .send((req, Instant::now()))
             .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
     }
 
@@ -148,10 +262,14 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Drain queues and stop all threads.
+    /// Stop all stages, draining every queue — including requests still
+    /// parked in the coalescing queue — so each submitted request gets a
+    /// response before this returns.
     pub fn shutdown(mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        drop(std::mem::replace(&mut self.ingress, channel().0));
+        drop(std::mem::replace(&mut self.ingress, sync_channel(1).0));
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -161,80 +279,327 @@ impl Coordinator {
     }
 }
 
-fn preprocess_worker(
-    rx: Arc<std::sync::Mutex<Receiver<AttnRequest>>>,
-    tx: Sender<PreparedRequest>,
-    stop: Arc<AtomicBool>,
-    man: Arc<Manifest>,
-    engine: Arc<Engine>,
+fn batcher_loop(
+    rx: Receiver<(AttnRequest, Instant)>,
+    tx: SyncSender<Job>,
+    policy: BatchPolicy,
 ) {
+    let mut co = Coalescer::new(policy);
+    let send_all = |tx: &SyncSender<Job>, flushes: Vec<Flush>| -> bool {
+        for entries in flushes {
+            if !entries.is_empty() && tx.send(Job { entries }).is_err() {
+                return false;
+            }
+        }
+        true
+    };
     loop {
-        let req = {
-            let guard = rx.lock().unwrap();
-            match guard.recv_timeout(std::time::Duration::from_millis(50)) {
-                Ok(r) => r,
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                    if stop.load(Ordering::SeqCst) {
+        // Block outright while nothing is parked (a deadline can only be
+        // created by a new request); wake for the earliest deadline
+        // otherwise.  Deadlines count from *submit* time, so a request
+        // that aged in the ingress queue flushes promptly.
+        let msg = match co.next_deadline() {
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => None, // shutdown with an empty queue
+            },
+            Some(deadline) => {
+                let timeout = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(timeout) {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if !send_all(&tx, co.flush_due(Instant::now())) {
+                            return;
+                        }
+                        continue;
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        // Shutdown: drain the coalescing queue — every
+                        // admitted request must still be served.
+                        let _ = send_all(&tx, co.flush_all());
                         return;
                     }
-                    continue;
                 }
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
             }
         };
-        let enqueued = Instant::now();
-        let t0 = Instant::now();
-        let driver = match req.validate() {
-            Err(e) => Err(e),
-            Ok(()) => Driver::prepare_on(&man, &req.graph, req.backend, &engine)
-                .map_err(|e| format!("{e:#}")),
+        let Some((req, arrived)) = msg else {
+            return;
         };
-        let prepared = PreparedRequest {
-            preprocess_s: t0.elapsed().as_secs_f64(),
-            req,
-            driver,
-            enqueued,
-        };
-        if tx.send(prepared).is_err() {
+        if !send_all(&tx, co.admit(req, arrived)) {
+            return;
+        }
+        // Greedily admit everything already queued before honouring
+        // deadlines: a backlogged burst (requests that aged in the ingress
+        // while the stages downstream were busy) still coalesces by
+        // capacity instead of trickling out as overdue singletons.
+        loop {
+            match rx.try_recv() {
+                Ok((req, arrived)) => {
+                    if !send_all(&tx, co.admit(req, arrived)) {
+                        return;
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    let _ = send_all(&tx, co.flush_all());
+                    return;
+                }
+            }
+        }
+        if !send_all(&tx, co.flush_due(Instant::now())) {
             return;
         }
     }
 }
 
+fn preprocess_worker(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    tx: SyncSender<PreparedBatch>,
+    man: Arc<Manifest>,
+    engine: Arc<Engine>,
+    cache: Arc<DriverCache>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // batcher exited after draining
+            }
+        };
+        for prepared in prepare_job(job, &man, &engine, &cache, &metrics) {
+            if tx.send(prepared).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Validate, merge, and prepare one coalesced job.  Invalid members are
+/// answered immediately; the valid remainder becomes one block-diagonal
+/// problem with a shared (possibly cached) driver.  If *merged*
+/// preparation fails — e.g. the unfused baseline's oversize refusal on a
+/// boundary window that only exists in the merged graph — the members
+/// fall back to singleton preparation rather than failing as a unit.
+fn prepare_job(
+    job: Job,
+    man: &Manifest,
+    engine: &Engine,
+    cache: &DriverCache,
+    metrics: &Metrics,
+) -> Vec<PreparedBatch> {
+    let mut valid: Vec<Admitted> = Vec::with_capacity(job.entries.len());
+    for a in job.entries {
+        match a.req.validate() {
+            Ok(()) => valid.push(a),
+            Err(e) => {
+                let latency_s = a.arrived.elapsed().as_secs_f64();
+                metrics.request_done(false);
+                metrics.latency.record(latency_s);
+                let _ = a.req.reply.send(AttnResponse {
+                    id: a.req.id,
+                    result: Err(e),
+                    latency_s,
+                    preprocess_s: 0.0,
+                    execute_s: 0.0,
+                    batch_size: 1,
+                });
+            }
+        }
+    }
+    if valid.is_empty() {
+        return Vec::new();
+    }
+    if valid.len() == 1 {
+        let a = valid.pop().expect("one entry");
+        return vec![prepare_single(a, man, engine, cache, metrics)];
+    }
+
+    let t0 = Instant::now();
+    let d = valid[0].req.d;
+    let scale = valid[0].req.scale;
+    let backend = valid[0].req.backend;
+    let refs: Vec<&CsrGraph> = valid.iter().map(|a| &a.req.graph).collect();
+    let (merged, offsets) = batch_graph_refs(&refs);
+    match shared_driver(&merged, backend, man, engine, cache, metrics) {
+        Ok(driver) => {
+            let len = merged.n * d;
+            let mut q = Vec::with_capacity(len);
+            let mut k = Vec::with_capacity(len);
+            let mut v = Vec::with_capacity(len);
+            for a in &valid {
+                q.extend_from_slice(&a.req.q);
+                k.extend_from_slice(&a.req.k);
+                v.extend_from_slice(&a.req.v);
+            }
+            let entries: Vec<Entry> = valid
+                .into_iter()
+                .map(|a| Entry {
+                    id: a.req.id,
+                    reply: a.req.reply,
+                    arrived: a.arrived,
+                })
+                .collect();
+            metrics.batching.record_batch(entries.len());
+            vec![PreparedBatch {
+                entries,
+                offsets,
+                n_total: merged.n,
+                d,
+                scale,
+                q,
+                k,
+                v,
+                driver: Ok(driver),
+                preprocess_s: t0.elapsed().as_secs_f64(),
+            }]
+        }
+        // Merged preparation failed: requests that would succeed alone must
+        // not fail because of who they were batched with.
+        Err(_) => valid
+            .into_iter()
+            .map(|a| prepare_single(a, man, engine, cache, metrics))
+            .collect(),
+    }
+}
+
+/// Prepare one request as its own (singleton) batch, feature buffers moved
+/// rather than copied.
+fn prepare_single(
+    a: Admitted,
+    man: &Manifest,
+    engine: &Engine,
+    cache: &DriverCache,
+    metrics: &Metrics,
+) -> PreparedBatch {
+    let t0 = Instant::now();
+    let driver = shared_driver(&a.req.graph, a.req.backend, man, engine, cache, metrics);
+    metrics.batching.record_batch(1);
+    let n = a.req.graph.n;
+    let entry = Entry { id: a.req.id, reply: a.req.reply, arrived: a.arrived };
+    PreparedBatch {
+        entries: vec![entry],
+        offsets: vec![0, n as u32],
+        n_total: n,
+        d: a.req.d,
+        scale: a.req.scale,
+        q: a.req.q,
+        k: a.req.k,
+        v: a.req.v,
+        driver,
+        preprocess_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Resolve the prepared driver for a graph: fingerprint-keyed cache first,
+/// build (and insert) on miss.
+fn shared_driver(
+    graph: &CsrGraph,
+    backend: Backend,
+    man: &Manifest,
+    engine: &Engine,
+    cache: &DriverCache,
+    metrics: &Metrics,
+) -> std::result::Result<Arc<Driver>, String> {
+    let fp = graph.fingerprint();
+    if let Some(drv) = cache.get(fp, backend, graph.n, graph.nnz()) {
+        metrics.batching.cache_hit();
+        return Ok(drv);
+    }
+    metrics.batching.cache_miss();
+    match Driver::prepare_on(man, graph, backend, engine) {
+        Ok(drv) => {
+            let drv = Arc::new(drv);
+            let evicted =
+                cache.insert(fp, backend, graph.n, graph.nnz(), drv.clone());
+            metrics.batching.cache_evicted(evicted);
+            Ok(drv)
+        }
+        Err(e) => Err(format!("{e:#}")),
+    }
+}
+
+/// What the executor thread dispatches through.
+enum ExecBackend {
+    Pjrt(Runtime),
+    Host,
+}
+
 fn executor_loop(
-    rt: Runtime,
-    rx: Receiver<PreparedRequest>,
+    backend: ExecBackend,
+    rx: Receiver<PreparedBatch>,
     metrics: Arc<Metrics>,
     engine: Arc<Engine>,
 ) {
     while let Ok(p) = rx.recv() {
         let t0 = Instant::now();
-        let result = match p.driver {
-            Err(e) => Err(e),
+        let result: std::result::Result<Vec<f32>, String> = match &p.driver {
+            Err(e) => Err(e.clone()),
             Ok(driver) => {
-                let x = AttentionProblem::new(
-                    p.req.graph.n,
-                    p.req.d,
-                    &p.req.q,
-                    &p.req.k,
-                    &p.req.v,
-                    p.req.scale,
-                );
-                driver.run_with(&rt, &x, &engine).map_err(|e| format!("{e:#}"))
+                let x = AttentionProblem::new(p.n_total, p.d, &p.q, &p.k, &p.v, p.scale);
+                match &backend {
+                    ExecBackend::Pjrt(rt) => driver.run_with(rt, &x, &engine),
+                    ExecBackend::Host => driver.run_offline(&x, &engine),
+                }
+                .map_err(|e| format!("{e:#}"))
             }
         };
         let execute_s = t0.elapsed().as_secs_f64();
-        let latency_s = p.enqueued.elapsed().as_secs_f64() + p.preprocess_s;
-        metrics.request_done(result.is_ok());
-        metrics.latency.record(latency_s);
         metrics.preprocess.record(p.preprocess_s);
         metrics.execute.record(execute_s);
-        let _ = p.req.reply.send(AttnResponse {
-            id: p.req.id,
-            result,
-            latency_s,
-            preprocess_s: p.preprocess_s,
-            execute_s,
-        });
+        let batch_size = p.entries.len();
+        let offsets = p.offsets;
+        let d = p.d;
+        match result {
+            Ok(out) => {
+                for (i, entry) in p.entries.into_iter().enumerate() {
+                    // Scatter this component's rows out of the merged output.
+                    let lo = offsets[i] as usize * d;
+                    let hi = offsets[i + 1] as usize * d;
+                    respond(
+                        entry,
+                        Ok(out[lo..hi].to_vec()),
+                        &metrics,
+                        p.preprocess_s,
+                        execute_s,
+                        batch_size,
+                    );
+                }
+            }
+            Err(e) => {
+                for entry in p.entries {
+                    respond(
+                        entry,
+                        Err(e.clone()),
+                        &metrics,
+                        p.preprocess_s,
+                        execute_s,
+                        batch_size,
+                    );
+                }
+            }
+        }
     }
+}
+
+fn respond(
+    entry: Entry,
+    result: std::result::Result<Vec<f32>, String>,
+    metrics: &Metrics,
+    preprocess_s: f64,
+    execute_s: f64,
+    batch_size: usize,
+) {
+    let latency_s = entry.arrived.elapsed().as_secs_f64();
+    metrics.request_done(result.is_ok());
+    metrics.latency.record(latency_s);
+    let _ = entry.reply.send(AttnResponse {
+        id: entry.id,
+        result,
+        latency_s,
+        preprocess_s,
+        execute_s,
+        batch_size,
+    });
 }

@@ -17,6 +17,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
+use crate::kernels::backward::BackwardExecutor;
 use crate::kernels::gather::CallBuffers;
 use crate::kernels::AttentionProblem;
 use crate::runtime::Manifest;
@@ -83,6 +84,117 @@ impl CallExecutor for HostExecutor<'_> {
             });
         }
         Ok((o, m, l))
+    }
+}
+
+impl BackwardExecutor for HostExecutor<'_> {
+    fn backward(
+        &mut self,
+        t_bucket: usize,
+        bufs: &CallBuffers,
+        d_out: &[f32],
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let d = x.d;
+        let lanes = t_bucket * TCB_C;
+        let mut gq = vec![0.0f32; batch * TCB_R * d];
+        let mut gk = vec![0.0f32; batch * lanes * d];
+        let mut gv = vec![0.0f32; batch * lanes * d];
+        {
+            let slots: Vec<(usize, ((&mut [f32], &mut [f32]), &mut [f32]))> = gq
+                .chunks_mut(TCB_R * d)
+                .zip(gk.chunks_mut(lanes * d))
+                .zip(gv.chunks_mut(lanes * d))
+                .enumerate()
+                .collect();
+            self.pool.run_items(slots, |(slot, ((gq_s, gk_s), gv_s))| {
+                slot_backward(slot, t_bucket, bufs, d_out, x, gq_s, gk_s, gv_s);
+            });
+        }
+        Ok((gq, gk, gv))
+    }
+}
+
+/// One slot's backward pass over its gathered lanes, matching the
+/// `fused3s_bwd` kernel's semantics: E recomputed from the staged
+/// (pre-scaled) Q̂ and K̂, then per row
+/// `dP_j = dO·V_j`, `row = Σ_j E_j dP_j`, `dS_j = E_j (dP_j − row)`,
+/// `dQ̂ += Σ_j dS_j K_j`, `dK̂_j += dS_j Q̂`, `dV̂_j += E_j dO`.
+/// f32 accumulation throughout (what the artifact does on device).
+#[allow(clippy::too_many_arguments)]
+fn slot_backward(
+    slot: usize,
+    t: usize,
+    bufs: &CallBuffers,
+    d_out: &[f32],
+    x: &AttentionProblem,
+    gq_slot: &mut [f32],
+    gk_slot: &mut [f32],
+    gv_slot: &mut [f32],
+) {
+    let d = x.d;
+    let lanes = t * TCB_C;
+    let q_base = slot * TCB_R * d;
+    let kv_base = slot * lanes;
+    let bm_base = slot * t * BITMAP_WORDS;
+    let mut scores: Vec<(usize, f32)> = Vec::with_capacity(lanes);
+    for r in 0..TCB_R {
+        scores.clear();
+        let q_row = &bufs.q[q_base + r * d..q_base + (r + 1) * d];
+        let do_row = &d_out[q_base + r * d..q_base + (r + 1) * d];
+        let mut m_row = f32::NEG_INFINITY;
+        for j in 0..t {
+            let bm = &bufs.bm[bm_base + j * BITMAP_WORDS..][..BITMAP_WORDS];
+            for c in 0..TCB_C {
+                let bit = r * TCB_C + c;
+                if (bm[bit / 32] >> (bit % 32)) & 1 == 0 {
+                    continue;
+                }
+                let lane = j * TCB_C + c;
+                let k_row = &bufs.k[(kv_base + lane) * d..][..d];
+                let mut s = 0.0f32;
+                for cc in 0..d {
+                    s += q_row[cc] * k_row[cc];
+                }
+                m_row = m_row.max(s);
+                scores.push((lane, s));
+            }
+        }
+        if scores.is_empty() {
+            continue; // fully masked row: all gradients stay zero
+        }
+        let mut l_row = 0.0f32;
+        for (_, s) in scores.iter_mut() {
+            *s = (*s - m_row).exp();
+            l_row += *s;
+        }
+        // dP per lane, plus the softmax-Jacobian row term Σ E_j dP_j.
+        let mut row_sum = 0.0f32;
+        let mut dps: Vec<f32> = Vec::with_capacity(scores.len());
+        for &(lane, p) in &scores {
+            let e = p / l_row;
+            let v_row = &bufs.v[(kv_base + lane) * d..][..d];
+            let mut dp = 0.0f32;
+            for cc in 0..d {
+                dp += do_row[cc] * v_row[cc];
+            }
+            dps.push(dp);
+            row_sum += e * dp;
+        }
+        let gq_row = &mut gq_slot[r * d..(r + 1) * d];
+        for (&(lane, p), &dp) in scores.iter().zip(&dps) {
+            let e = p / l_row;
+            let ds = e * (dp - row_sum);
+            let k_row = &bufs.k[(kv_base + lane) * d..][..d];
+            let gk_row = &mut gk_slot[lane * d..(lane + 1) * d];
+            let gv_row = &mut gv_slot[lane * d..(lane + 1) * d];
+            for cc in 0..d {
+                gq_row[cc] += ds * k_row[cc];
+                gk_row[cc] += ds * q_row[cc];
+                gv_row[cc] += e * do_row[cc];
+            }
+        }
     }
 }
 

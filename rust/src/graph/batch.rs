@@ -13,9 +13,27 @@ use super::csr::CsrGraph;
 /// Block-diagonal concatenation of many graphs.  Returns the batched graph
 /// plus each component's node offset (the last entry is the total).
 pub fn batch_graphs(graphs: &[CsrGraph]) -> (CsrGraph, Vec<u32>) {
+    let refs: Vec<&CsrGraph> = graphs.iter().collect();
+    batch_graph_refs(&refs)
+}
+
+/// [`batch_graphs`] over borrowed components — the coordinator's coalescing
+/// path batches requests it does not own contiguously.
+///
+/// Zero graphs (and components with `n == 0`) are well-defined: the result
+/// is the empty graph with `offsets == [0, …]`, never a panic.
+pub fn batch_graph_refs(graphs: &[&CsrGraph]) -> (CsrGraph, Vec<u32>) {
     let total: usize = graphs.iter().map(|g| g.n).sum();
+    let total_nnz: usize = graphs.iter().map(|g| g.nnz()).sum();
     let mut offsets = Vec::with_capacity(graphs.len() + 1);
-    let mut edges = Vec::with_capacity(graphs.iter().map(|g| g.nnz()).sum());
+    if total == 0 {
+        // Guard the degenerate cases (no graphs, or all empty) explicitly
+        // so callers get a structurally valid empty batch.
+        offsets.resize(graphs.len() + 1, 0u32);
+        let empty = CsrGraph { n: 0, indptr: vec![0], indices: Vec::new() };
+        return (empty, offsets);
+    }
+    let mut edges = Vec::with_capacity(total_nnz);
     let mut base = 0u32;
     for g in graphs {
         offsets.push(base);
@@ -27,10 +45,13 @@ pub fn batch_graphs(graphs: &[CsrGraph]) -> (CsrGraph, Vec<u32>) {
         base += g.n as u32;
     }
     offsets.push(base);
-    (
-        CsrGraph::from_edges(total, &edges).expect("offsets in range"),
-        offsets,
-    )
+    // Component edges are disjoint and already deduplicated, so the batch
+    // must hold exactly the preallocated nnz sum — a mismatch means a
+    // component's CSR invariants are broken.
+    debug_assert_eq!(edges.len(), total_nnz, "batch edge count != Σ nnz");
+    let batched = CsrGraph::from_edges(total, &edges).expect("offsets in range");
+    debug_assert_eq!(batched.nnz(), total_nnz, "batching must not dedup edges");
+    (batched, offsets)
 }
 
 /// A random "molecule-like" graph: a spanning tree plus a few ring-closing
@@ -129,6 +150,35 @@ mod tests {
         }
         // Component structure preserved.
         assert_eq!(b.degree(8), 4); // star hub
+    }
+
+    #[test]
+    fn zero_and_empty_graphs_guarded() {
+        // No graphs at all.
+        let (b, off) = batch_graphs(&[]);
+        assert_eq!(b.n, 0);
+        assert_eq!(b.nnz(), 0);
+        assert_eq!(off, vec![0]);
+        // All-empty components.
+        let empty = CsrGraph { n: 0, indptr: vec![0], indices: Vec::new() };
+        let (b, off) = batch_graphs(&[empty.clone(), empty.clone()]);
+        assert_eq!(b.n, 0);
+        assert_eq!(off, vec![0, 0, 0]);
+        // An empty component sandwiched between real ones.
+        let ring = super::super::generators::ring(8);
+        let (b, off) = batch_graphs(&[ring.clone(), empty, ring.clone()]);
+        assert_eq!(b.n, 16);
+        assert_eq!(off, vec![0, 8, 8, 16]);
+        assert_eq!(b.nnz(), 2 * ring.nnz());
+    }
+
+    #[test]
+    fn refs_variant_matches_owned() {
+        let g1 = super::super::generators::ring(8);
+        let g2 = super::super::generators::star(5);
+        let owned = batch_graphs(&[g1.clone(), g2.clone()]);
+        let refs = batch_graph_refs(&[&g1, &g2]);
+        assert_eq!(owned, refs);
     }
 
     #[test]

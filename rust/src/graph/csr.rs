@@ -63,6 +63,23 @@ impl CsrGraph {
         self.indices.len()
     }
 
+    /// Content fingerprint (FNV-1a over n + indptr + indices).  Two graphs
+    /// with equal structure always collide; unequal graphs collide with
+    /// ~2⁻⁶⁴ probability — good enough to key the coordinator's BSB
+    /// preprocessing cache, which additionally cross-checks the graph's
+    /// node and edge counts on every hit so a mismatched collision only
+    /// costs a rebuild.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = fnv1a_mix(0xcbf2_9ce4_8422_2325, self.n as u64);
+        for &p in &self.indptr {
+            h = fnv1a_mix(h, p as u64);
+        }
+        for &c in &self.indices {
+            h = fnv1a_mix(h, c as u64);
+        }
+        h
+    }
+
     /// Column indices of row i.
     #[inline]
     pub fn row(&self, i: usize) -> &[u32] {
@@ -157,6 +174,14 @@ impl CsrGraph {
     }
 }
 
+/// FNV-1a over one u64 value, byte by byte.
+fn fnv1a_mix(mut h: u64, v: u64) -> u64 {
+    for byte in v.to_le_bytes() {
+        h = (h ^ byte as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +242,24 @@ mod tests {
                 assert_eq!(m[i * 4 + j] == 1, g.has_edge(i, j as u32));
             }
         }
+    }
+
+    #[test]
+    fn fingerprint_separates_structures() {
+        let g = tiny();
+        assert_eq!(g.fingerprint(), tiny().fingerprint());
+        assert_eq!(g.fingerprint(), g.clone().fingerprint());
+        // Any structural change moves the fingerprint.
+        let extra = CsrGraph::from_edges(4, &[(0, 1), (0, 2), (1, 2), (2, 0), (3, 0)])
+            .unwrap();
+        assert_ne!(g.fingerprint(), extra.fingerprint());
+        let bigger = CsrGraph::from_edges(5, &[(0, 1), (0, 2), (1, 2), (2, 0)])
+            .unwrap();
+        assert_ne!(g.fingerprint(), bigger.fingerprint());
+        // Same edge multiset, different row owner: indptr must disambiguate.
+        let a = CsrGraph::from_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        let b = CsrGraph::from_edges(3, &[(0, 1), (0, 2)]).unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

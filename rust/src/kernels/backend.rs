@@ -15,7 +15,9 @@ use super::unfused::UnfusedDriver;
 use super::AttentionProblem;
 
 /// The comparison series (paper Figures 5/6/8 legends → our analogs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `Hash` because the coordinator's preprocessing cache keys on
+/// (graph fingerprint, backend).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Backend {
     /// Fused3S (ours): bf16, compacted, reordered.
     Fused3S,
@@ -174,6 +176,30 @@ impl Driver {
             Driver::Fused(d) => d.run_with(rt, x, engine),
             Driver::Unfused(d) => d.run_with(rt, x, engine),
             Driver::Dense(d) => d.run(rt, x),
+            Driver::CpuCsr { graph, threads } => Ok(cpu_csr::run(graph, x, *threads)),
+        }
+    }
+
+    /// Execute with **no PJRT runtime**: fused/unfused dispatch through the
+    /// offline host-kernel emulation, CPU-CSR runs natively.  This is the
+    /// coordinator's `HostEmulation` executor (tests, benches, cold CI);
+    /// the dense fallback has no host emulation and reports so.
+    pub fn run_offline(
+        &self,
+        x: &AttentionProblem,
+        engine: &Engine,
+    ) -> Result<Vec<f32>> {
+        use crate::exec::HostExecutor;
+        match self {
+            Driver::Fused(d) => {
+                d.run_exec(x, engine, &mut HostExecutor::new(&engine.pool))
+            }
+            Driver::Unfused(d) => {
+                d.run_exec(x, engine, &mut HostExecutor::new(&engine.pool))
+            }
+            Driver::Dense(_) => anyhow::bail!(
+                "dense backend has no offline host emulation (needs artifacts)"
+            ),
             Driver::CpuCsr { graph, threads } => Ok(cpu_csr::run(graph, x, *threads)),
         }
     }

@@ -23,7 +23,28 @@ use super::gather::{self, CallBuffers};
 use super::AttentionProblem;
 
 /// Buckets with compiled backward artifacts (aot.py: t ∈ {8, 32}).
-const BWD_BUCKETS: &[usize] = &[8, 32];
+pub const BWD_BUCKETS: &[usize] = &[8, 32];
+
+/// Executes one staged backward kernel call — the dispatch seam mirroring
+/// [`CallExecutor`](crate::exec::CallExecutor): PJRT against the
+/// `fused3s_bwd_*` artifacts online, or the host emulation offline
+/// (`exec::HostExecutor` implements this trait too, which is what the
+/// finite-difference gradcheck in `rust/tests/backward_gradcheck.rs` runs).
+pub trait BackwardExecutor {
+    /// One bucketed backward call: staged Q̂ (pre-scaled) / K̂ / V̂ / bitmaps
+    /// plus the gathered upstream-gradient blocks `d_out` (same layout as
+    /// Q, unscaled).  Returns `(gq, gk, gv)`:
+    /// `gq` is `batch * 16 * d` (gradients w.r.t. the *pre-scaled* Q
+    /// blocks), `gk`/`gv` are `batch * t * TCB_C * d` per gathered lane.
+    fn backward(
+        &mut self,
+        t_bucket: usize,
+        bufs: &CallBuffers,
+        d_out: &[f32],
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+}
 
 /// Gradients of the 3S attention w.r.t. its inputs.
 pub struct Gradients {
@@ -61,12 +82,33 @@ impl BackwardDriver {
         Ok(BackwardDriver { bsb, plan, batch: man.rw_batch })
     }
 
-    /// Compute (dQ, dK, dV) for upstream gradients `d_out` (n × d).
+    /// Buckets the plan actually dispatches (sorted, deduplicated) — lets
+    /// tests assert a graph exercises the intended `BWD_BUCKETS` entries.
+    pub fn buckets_used(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.plan.calls.iter().map(|c| c.t_bucket).collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+
+    /// Compute (dQ, dK, dV) for upstream gradients `d_out` (n × d) through
+    /// the PJRT runtime (`fused3s_bwd_*` artifacts).
     pub fn run(
         &self,
         rt: &Runtime,
         x: &AttentionProblem,
         d_out: &[f32],
+    ) -> Result<Gradients> {
+        self.run_exec(x, d_out, &mut PjrtBackward { rt })
+    }
+
+    /// Compute (dQ, dK, dV) against any [`BackwardExecutor`] — the seam the
+    /// offline gradcheck drives with the host emulation.
+    pub fn run_exec<E: BackwardExecutor>(
+        &self,
+        x: &AttentionProblem,
+        d_out: &[f32],
+        exec: &mut E,
     ) -> Result<Gradients> {
         if x.d != x.dv {
             bail!("backward driver requires d == dv");
@@ -83,10 +125,6 @@ impl BackwardDriver {
 
         for call in &self.plan.calls {
             let t = call.t_bucket;
-            let name = format!("fused3s_bwd_t{t}_d{d}");
-            let exe = rt
-                .executable(&name)
-                .with_context(|| format!("backward artifact {name}"))?;
             gather::gather_call(&mut bufs, &call.rws, t, &self.bsb, x, self.batch);
             // Gather dO row-window blocks (same layout as Q, unscaled).
             do_buf.clear();
@@ -95,20 +133,7 @@ impl BackwardDriver {
             for (slot, &rw) in call.rws.iter().enumerate() {
                 gather::gather_q(&mut do_buf, slot, rw as usize, &xo);
             }
-            let sq = [self.batch, TCB_R, d];
-            let skv = [self.batch, t * TCB_C, d];
-            let sbm = [self.batch, t, BITMAP_WORDS];
-            let outs = rt.run_exe_raw(
-                &exe,
-                &[
-                    Arg::F32(&bufs.q, &sq),
-                    Arg::F32(&bufs.k, &skv),
-                    Arg::F32(&bufs.v, &skv),
-                    Arg::I32(&bufs.bm, &sbm),
-                    Arg::F32(&do_buf, &sq),
-                ],
-            )?;
-            let (gq, gk, gv) = (outs[0].as_f32()?, outs[1].as_f32()?, outs[2].as_f32()?);
+            let (gq, gk, gv) = exec.backward(t, &bufs, &do_buf, x, self.batch)?;
 
             // dQ: one owner per row — plain scatter (note: the artifact bakes
             // scale=1; the forward pre-scales Q by `scale`, so by the chain
@@ -148,6 +173,49 @@ impl BackwardDriver {
             }
         }
         Ok(Gradients { dq, dk, dv })
+    }
+}
+
+/// The production [`BackwardExecutor`]: dispatches staged buffers to the
+/// AOT `fused3s_bwd_*` executables through PJRT.
+struct PjrtBackward<'a> {
+    rt: &'a Runtime,
+}
+
+impl BackwardExecutor for PjrtBackward<'_> {
+    fn backward(
+        &mut self,
+        t: usize,
+        bufs: &CallBuffers,
+        d_out: &[f32],
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let d = x.d;
+        let name = format!("fused3s_bwd_t{t}_d{d}");
+        let exe = self
+            .rt
+            .executable(&name)
+            .with_context(|| format!("backward artifact {name}"))?;
+        let sq = [batch, TCB_R, d];
+        let skv = [batch, t * TCB_C, d];
+        let sbm = [batch, t, BITMAP_WORDS];
+        let outs = self.rt.run_exe_raw(
+            &exe,
+            &[
+                Arg::F32(&bufs.q, &sq),
+                Arg::F32(&bufs.k, &skv),
+                Arg::F32(&bufs.v, &skv),
+                Arg::I32(&bufs.bm, &sbm),
+                Arg::F32(d_out, &sq),
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        let (Some(gq), Some(gk), Some(gv)) = (it.next(), it.next(), it.next())
+        else {
+            bail!("{name} must return (dQ, dK̂, dV̂)");
+        };
+        Ok((gq.into_f32()?, gk.into_f32()?, gv.into_f32()?))
     }
 }
 

@@ -68,6 +68,14 @@ impl FusedDriver {
         } else {
             bsb::build_bcsr_like_with(g, &engine.pool)
         };
+        FusedDriver::from_bsb(man, bsb, opts)
+    }
+
+    /// Build a driver from an already-constructed BSB — the entry point for
+    /// callers that cache or share preprocessing (the coordinator's
+    /// fingerprint cache): only the cheap bucket plan is rebuilt.  The BSB
+    /// must have been built with the same `opts.compact` mode.
+    pub fn from_bsb(man: &Manifest, bsb: Bsb, opts: FusedOpts) -> Result<FusedDriver> {
         let plan = bucket::plan(
             &bsb,
             &man.t_buckets,

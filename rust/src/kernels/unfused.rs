@@ -72,6 +72,18 @@ impl UnfusedDriver {
         engine: &Engine,
     ) -> Result<UnfusedDriver> {
         let bsb = bsb::build_with(g, &engine.pool);
+        UnfusedDriver::from_bsb(man, bsb, stable_softmax, order)
+    }
+
+    /// Build a driver from an already-constructed (compacted) BSB — the
+    /// pre-built-preprocessing entry point mirroring
+    /// [`FusedDriver::from_bsb`](super::fused::FusedDriver::from_bsb).
+    pub fn from_bsb(
+        man: &Manifest,
+        bsb: Bsb,
+        stable_softmax: bool,
+        order: Order,
+    ) -> Result<UnfusedDriver> {
         let plan =
             bucket::plan(&bsb, &man.t_buckets, man.rw_batch, order, man.chunk_t);
         if let Some(c) = plan.chunked.first() {

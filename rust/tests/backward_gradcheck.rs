@@ -1,0 +1,185 @@
+//! Finite-difference gradient checks for `BackwardDriver` (ISSUE 2):
+//! analytic dQ/dK/dV from the bucketed backward path vs central differences
+//! of the forward computation, on small graphs covering **both**
+//! `BWD_BUCKETS` (t = 8 and t = 32).  Runs offline through the host
+//! backward emulation (`exec::HostExecutor` as `BackwardExecutor`).
+//!
+//! Tolerance rationale (documented per the ISSUE):
+//! * loss `L = Σ_ij W_ij · O_ij` with O(1) f32 inputs and a fixed random W;
+//! * central differences with `eps = 1e-2` have O(eps²) ≈ 1e-4 truncation
+//!   error plus ~1e-7/eps ≈ 1e-5 f32 forward-rounding noise;
+//! * the analytic path accumulates in f32 (what the device kernel does),
+//!   adding ~1e-5-scale rounding on graphs this size.
+//! The check therefore uses |analytic − fd| < 5e-3 + 1e-2·|fd| per
+//! parameter, with gradients empirically O(0.1..1) on these inputs.
+
+use fused3s::exec::{offline_manifest, HostExecutor, WorkerPool};
+use fused3s::graph::batch::random_molecule;
+use fused3s::graph::{generators, CsrGraph};
+use fused3s::kernels::backward::{
+    backward_reference, BackwardDriver, BWD_BUCKETS,
+};
+use fused3s::kernels::{reference, AttentionProblem};
+use fused3s::runtime::Manifest;
+use fused3s::util::prng::Rng;
+
+fn manifest() -> Manifest {
+    offline_manifest(8, &[4, 8, 16, 32, 64, 128], 128)
+}
+
+/// Scalar loss over the forward output: L = Σ_ij W_ij O_ij (f64 sum).
+fn loss(g: &CsrGraph, x: &AttentionProblem, w: &[f32]) -> f64 {
+    let out = reference::dense_attention_host(g, x);
+    out.iter().zip(w).map(|(&o, &wi)| o as f64 * wi as f64).sum()
+}
+
+fn assert_close(analytic: f32, fd: f64, what: &str, idx: usize) {
+    let tol = 5e-3 + 1e-2 * fd.abs();
+    assert!(
+        (analytic as f64 - fd).abs() < tol,
+        "{what}[{idx}]: analytic {analytic} vs central-diff {fd} (tol {tol})"
+    );
+}
+
+/// Full gradcheck of one graph: analytic gradients from the bucketed
+/// backward driver vs central differences, sampling every `stride`-th
+/// parameter of each of Q, K, V.
+fn gradcheck(g: &CsrGraph, d: usize, seed: u64, expect_bucket: usize, stride: usize) {
+    let man = manifest();
+    let driver = BackwardDriver::new(&man, g).expect("backward driver");
+    assert!(
+        driver.buckets_used().contains(&expect_bucket),
+        "graph (n={}) planned into {:?}, expected bucket {expect_bucket}",
+        g.n,
+        driver.buckets_used()
+    );
+    for b in driver.buckets_used() {
+        assert!(BWD_BUCKETS.contains(&b), "plan used non-backward bucket {b}");
+    }
+
+    let n = g.n;
+    let mut rng = Rng::new(seed);
+    let mut q = rng.normal_vec(n * d, 1.0);
+    let mut k = rng.normal_vec(n * d, 1.0);
+    let mut v = rng.normal_vec(n * d, 1.0);
+    let w = rng.normal_vec(n * d, 1.0);
+    let scale = 0.5; // != 1 so the dQ chain-rule rescaling is exercised
+
+    // Analytic gradients through the bucketed backward path (host emulation
+    // of the fused3s_bwd kernel), with d_out = ∂L/∂O = W.
+    let pool = WorkerPool::new(1);
+    let grads = {
+        let x = AttentionProblem::new(n, d, &q, &k, &v, scale);
+        driver
+            .run_exec(&x, &w, &mut HostExecutor::new(&pool))
+            .expect("backward run")
+    };
+
+    // Cross-check against the independent dense analytic reference first:
+    // same math, f64 accumulation, no bucketing/gather/scatter-add.
+    {
+        let x = AttentionProblem::new(n, d, &q, &k, &v, scale);
+        let refg = backward_reference(g, &x, &w);
+        for (name, got, want) in [
+            ("dq", &grads.dq, &refg.dq),
+            ("dk", &grads.dk, &refg.dk),
+            ("dv", &grads.dv, &refg.dv),
+        ] {
+            let err = reference::max_abs_diff(got, want);
+            assert!(err < 1e-3, "{name} vs analytic reference: max err {err}");
+        }
+    }
+
+    // Central differences.  The perturbation is applied in f32, so the
+    // effective step is the *representable* difference `hi - lo`, not
+    // 2·eps exactly.
+    let eps = 1e-2f32;
+    for (buf_sel, what) in [(0usize, "dq"), (1, "dk"), (2, "dv")] {
+        for idx in (0..n * d).step_by(stride) {
+            let old = match buf_sel {
+                0 => q[idx],
+                1 => k[idx],
+                _ => v[idx],
+            };
+            let hi = old + eps;
+            let lo = old - eps;
+            let l_hi = perturbed_loss(
+                g, &mut q, &mut k, &mut v, &w, d, scale, buf_sel, idx, hi,
+            );
+            let l_lo = perturbed_loss(
+                g, &mut q, &mut k, &mut v, &w, d, scale, buf_sel, idx, lo,
+            );
+            match buf_sel {
+                0 => q[idx] = old,
+                1 => k[idx] = old,
+                _ => v[idx] = old,
+            }
+            let fd = (l_hi - l_lo) / ((hi - lo) as f64);
+            let analytic = match buf_sel {
+                0 => grads.dq[idx],
+                1 => grads.dk[idx],
+                _ => grads.dv[idx],
+            };
+            assert_close(analytic, fd, what, idx);
+        }
+    }
+}
+
+/// Set one parameter of the selected buffer and evaluate the loss.
+#[allow(clippy::too_many_arguments)]
+fn perturbed_loss(
+    g: &CsrGraph,
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+    w: &[f32],
+    d: usize,
+    scale: f32,
+    buf_sel: usize,
+    idx: usize,
+    value: f32,
+) -> f64 {
+    {
+        let buf = match buf_sel {
+            0 => &mut *q,
+            1 => &mut *k,
+            _ => &mut *v,
+        };
+        buf[idx] = value;
+    }
+    let x = AttentionProblem::new(g.n, d, q, k, v, scale);
+    loss(g, &x, w)
+}
+
+#[test]
+fn gradcheck_small_molecule_bucket8() {
+    // Molecule-sized graph: every row window fits the t=8 backward bucket.
+    let mut rng = Rng::new(31);
+    let g = random_molecule(40, &mut rng).with_self_loops();
+    gradcheck(&g, 8, 77, 8, 1);
+}
+
+#[test]
+fn gradcheck_denser_graph_bucket32() {
+    // Denser windows (> 8 TCBs) exercise the t=32 backward bucket and the
+    // scatter-add of columns repeated across row windows.
+    let g = generators::erdos_renyi(150, 12.0, 9).with_self_loops();
+    gradcheck(&g, 8, 78, 32, 7);
+}
+
+#[test]
+fn gradcheck_ragged_star_bucket8() {
+    // Ragged n (not a multiple of 16) + hub/leaf imbalance.
+    let g = generators::star(45).with_self_loops();
+    gradcheck(&g, 4, 79, 8, 1);
+}
+
+#[test]
+fn oversize_row_window_rejected() {
+    // A hub row window beyond the largest backward bucket must refuse at
+    // prepare time (chunked backward is future work), not miscompute.
+    let man = manifest();
+    let g = generators::star(2000);
+    let err = BackwardDriver::new(&man, &g).err().expect("must refuse");
+    assert!(format!("{err:#}").contains("chunked backward"));
+}

@@ -1,0 +1,251 @@
+//! Differential harness for dynamic batching (ISSUE 2): block-diagonal
+//! batched 3S execution must be **bit-identical** to serial per-graph
+//! runs, at the driver level and through the whole coordinator path —
+//! including fingerprint-cache-hit replays.
+//!
+//! Why bit-equality is the right contract: the BSB builder sorts each row
+//! window's compacted columns ascending, and block-diagonal concatenation
+//! preserves each row's neighbour order (offsets are monotone), so every
+//! row's score/softmax/accumulate sequence is the *same f32 op sequence*
+//! in the batched and per-graph runs.  Runs entirely offline through the
+//! host kernel; no artifacts needed.
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use fused3s::coordinator::{
+    AttnRequest, Coordinator, CoordinatorConfig, ExecutorKind,
+};
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::graph::batch::{batch_graphs, random_molecule};
+use fused3s::graph::{generators, CsrGraph};
+use fused3s::kernels::{AttentionProblem, Backend, Driver};
+use fused3s::runtime::Manifest;
+use fused3s::util::prng::Rng;
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+
+fn manifest() -> Manifest {
+    // Matches the coordinator's HostEmulation bucketing configuration.
+    offline_manifest(8, BUCKETS, 128)
+}
+
+fn features(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+    )
+}
+
+/// The ISSUE's generator mix: erdos_renyi / random_molecule / sbm / star,
+/// all small (the coalescing regime).  One ER graph is left without
+/// self-loops so empty rows cross the batch path too.
+fn graph_mix(seed: u64, count: usize) -> Vec<CsrGraph> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| match i % 5 {
+            0 => generators::erdos_renyi(rng.range(20, 200), 4.0, rng.next_u64())
+                .with_self_loops(),
+            1 => random_molecule(rng.range(20, 120), &mut rng).with_self_loops(),
+            2 => generators::sbm(3, rng.range(8, 24), 0.2, 0.01, rng.next_u64())
+                .with_self_loops(),
+            3 => generators::star(rng.range(17, 80)),
+            _ => generators::erdos_renyi(rng.range(20, 90), 3.0, rng.next_u64()),
+        })
+        .collect()
+}
+
+/// Serial per-graph reference: prepare + run on the serial engine through
+/// the offline host kernel.
+fn serial_run(
+    man: &Manifest,
+    g: &CsrGraph,
+    backend: Backend,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    d: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let engine = Engine::serial();
+    let driver = Driver::prepare_on(man, g, backend, &engine).expect("prepare");
+    let x = AttentionProblem::new(g.n, d, q, k, v, scale);
+    driver.run_offline(&x, &engine).expect("serial run")
+}
+
+/// Driver-level differential check for one backend over one graph mix.
+fn check_batched_equals_serial(backend: Backend, seed: u64) {
+    let man = manifest();
+    let d = 16;
+    let scale = 0.25;
+    let graphs = graph_mix(seed, 10);
+    let per_graph: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = graphs
+        .iter()
+        .enumerate()
+        .map(|(i, g)| features(g.n, d, seed * 100 + i as u64))
+        .collect();
+
+    // Serial per-graph oracle runs.
+    let expect: Vec<Vec<f32>> = graphs
+        .iter()
+        .zip(&per_graph)
+        .map(|(g, (q, k, v))| serial_run(&man, g, backend, q, k, v, d, scale))
+        .collect();
+
+    // One block-diagonal batched run.
+    let (merged, offsets) = batch_graphs(&graphs);
+    let n_total = merged.n;
+    let mut q = Vec::with_capacity(n_total * d);
+    let mut k = Vec::with_capacity(n_total * d);
+    let mut v = Vec::with_capacity(n_total * d);
+    for (qq, kk, vv) in &per_graph {
+        q.extend_from_slice(qq);
+        k.extend_from_slice(kk);
+        v.extend_from_slice(vv);
+    }
+    let x = AttentionProblem::new(n_total, d, &q, &k, &v, scale);
+
+    // Both the serial engine and a parallel pipelined engine must agree.
+    for policy in [
+        ExecPolicy::serial(),
+        ExecPolicy { threads: 4, pipeline_depth: 2 },
+    ] {
+        let engine = Engine::new(policy);
+        let driver =
+            Driver::prepare_on(&man, &merged, backend, &engine).expect("prepare");
+        let out = driver.run_offline(&x, &engine).expect("batched run");
+        assert_eq!(out.len(), n_total * d);
+        for (i, want) in expect.iter().enumerate() {
+            let lo = offsets[i] as usize * d;
+            let hi = offsets[i + 1] as usize * d;
+            assert_eq!(
+                &out[lo..hi],
+                &want[..],
+                "{backend:?} seed={seed} component {i} (n={}) diverged \
+                 under {policy:?}",
+                graphs[i].n
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_batched_bit_matches_serial() {
+    for seed in [1, 2, 3] {
+        check_batched_equals_serial(Backend::Fused3S, seed);
+    }
+}
+
+#[test]
+fn dfgnn_like_batched_bit_matches_serial() {
+    check_batched_equals_serial(Backend::DfGnnLike, 4);
+}
+
+#[test]
+fn unfused_batched_bit_matches_serial() {
+    check_batched_equals_serial(Backend::UnfusedStable, 5);
+    check_batched_equals_serial(Backend::UnfusedNaive, 6);
+}
+
+#[test]
+fn cpu_csr_batched_bit_matches_serial() {
+    check_batched_equals_serial(Backend::CpuCsr, 7);
+}
+
+/// Coordinator-level differential check: the full admission → coalescing →
+/// cache → merged-driver → scatter path reproduces serial per-request
+/// outputs bit-for-bit, and a replay of the same workload hits the
+/// fingerprint cache without changing a single bit.
+#[test]
+fn coordinator_batch_bit_matches_serial_including_cache_replay() {
+    let man = manifest();
+    let d = 16;
+    let scale = 0.125;
+    let graphs = graph_mix(11, 8);
+    let per_graph: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = graphs
+        .iter()
+        .enumerate()
+        .map(|(i, g)| features(g.n, d, 1100 + i as u64))
+        .collect();
+    let expect: Vec<Vec<f32>> = graphs
+        .iter()
+        .zip(&per_graph)
+        .map(|(g, (q, k, v))| {
+            serial_run(&man, g, Backend::Fused3S, q, k, v, d, scale)
+        })
+        .collect();
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        executor: ExecutorKind::HostEmulation,
+        preprocess_workers: 2,
+        queue_capacity: 32,
+        // Generous delay + caps: each submitted burst coalesces into
+        // exactly one block-diagonal batch even on a loaded CI machine
+        // (submission takes microseconds; the window is half a second).
+        max_batch_delay: Duration::from_millis(500),
+        max_batch_requests: 64,
+        max_batch_nodes: 1 << 20,
+        cache_capacity: 16,
+        ..CoordinatorConfig::default()
+    })
+    .expect("host-emulation coordinator");
+
+    let submit_burst = |round: u64| -> HashMap<u64, Vec<f32>> {
+        let (tx, rx) = channel();
+        for (i, (g, (q, k, v))) in graphs.iter().zip(&per_graph).enumerate() {
+            coord
+                .submit(AttnRequest {
+                    id: round * 100 + i as u64,
+                    graph: g.clone(),
+                    d,
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                    scale,
+                    backend: Backend::Fused3S,
+                    reply: tx.clone(),
+                })
+                .expect("submit");
+        }
+        drop(tx);
+        let mut got = HashMap::new();
+        while let Ok(resp) = rx.recv_timeout(Duration::from_secs(120)) {
+            assert_eq!(
+                resp.batch_size,
+                graphs.len(),
+                "burst must coalesce into one batch"
+            );
+            got.insert(resp.id, resp.result.expect("result"));
+            if got.len() == graphs.len() {
+                break;
+            }
+        }
+        assert_eq!(got.len(), graphs.len(), "round {round}: missing responses");
+        got
+    };
+
+    // Round 1: cold — the merged BSB is built once.
+    let round1 = submit_burst(0);
+    for (i, want) in expect.iter().enumerate() {
+        assert_eq!(&round1[&(i as u64)], want, "round 1 component {i}");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.batching.largest_batch(), graphs.len() as u64);
+    assert_eq!(m.batching.cache_hits(), 0);
+    assert_eq!(m.batching.cache_misses(), 1);
+
+    // Round 2: identical workload — same merged fingerprint, so the build
+    // is skipped (cache hit) and the outputs are bit-identical.
+    let round2 = submit_burst(1);
+    for (i, want) in expect.iter().enumerate() {
+        assert_eq!(&round2[&(100 + i as u64)], want, "replay component {i}");
+    }
+    assert_eq!(m.batching.cache_hits(), 1, "replay must hit the BSB cache");
+    assert_eq!(m.batching.cache_misses(), 1);
+    assert_eq!(m.completed(), 2 * graphs.len() as u64);
+    assert_eq!(m.failed(), 0);
+    coord.shutdown();
+}

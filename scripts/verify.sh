@@ -29,6 +29,19 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
+# The ISSUE-2 differential harness, run explicitly so a filtered or
+# partially-cached test invocation can never silently skip it.
+echo "== cargo test -q --test batching_equivalence --test backward_gradcheck"
+cargo test -q --test batching_equivalence --test backward_gradcheck
+
+# Coordinator suite serialized: the stress tests spawn their own submitter
+# threads and assert timing-sensitive coalescing/backpressure behaviour, so
+# they must not interleave with each other.
+echo "== coordinator suite (--test-threads=1)"
+cargo test -q --test coordinator_stress --test coordinator_integration \
+    -- --test-threads=1
+
 echo "verify: OK"
-echo "(perf sweep: 'cargo bench --bench host_pipeline' prints one JSON row"
-echo " per threads × pipeline_depth config; see EXPERIMENTS.md §Perf)"
+echo "(perf sweeps: 'cargo bench --bench host_pipeline' for the host engine,"
+echo " 'cargo bench --bench coordinator_batching' for the dynamic-batching"
+echo " delay × nodes sweep; see EXPERIMENTS.md §Perf and §Batching)"

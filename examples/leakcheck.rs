@@ -2,8 +2,9 @@
 //! show flat RSS and stable latency (guards against the Literal-execute
 //! leak in xla_extension 0.5.1 regressing back in — see runtime/client.rs).
 
+use fused3s::exec::Engine;
 use fused3s::graph::datasets;
-use fused3s::kernels::{AttentionProblem, Backend, Driver};
+use fused3s::kernels::{AttentionBatch, AttentionProblem, Backend, ExecCtx, Plan};
 use fused3s::runtime::Runtime;
 use fused3s::util::prng::Rng;
 
@@ -23,11 +24,13 @@ fn main() {
     let k = rng.normal_vec(n * d, 1.0);
     let v = rng.normal_vec(n * d, 1.0);
     let x = AttentionProblem::new(n, d, &q, &k, &v, 0.125);
-    let driver = Driver::prepare(&rt, &ds.graph, Backend::Fused3S).unwrap();
+    let batch = AttentionBatch::single(&x);
+    let engine = Engine::serial();
+    let plan = Plan::new(rt.manifest(), &ds.graph, Backend::Fused3S, &engine).unwrap();
     let mut rss_after_warm = 0.0;
     for i in 0..12 {
         let t0 = std::time::Instant::now();
-        let _ = driver.run(&rt, &x).unwrap();
+        let _ = plan.execute(&mut ExecCtx::pjrt(&rt, &engine), &batch).unwrap();
         let rss = rss_mb();
         if i == 1 {
             rss_after_warm = rss;

@@ -1,10 +1,11 @@
 //! §Perf probe: wall-clock breakdown of one fused 3S run — gather vs PJRT
 //! execution vs scatter — per bucket, on a chosen dataset.
 
+use fused3s::exec::Engine;
 use fused3s::graph::datasets;
 use fused3s::kernels::gather::{self, CallBuffers};
-use fused3s::kernels::AttentionProblem;
 use fused3s::kernels::fused::{FusedDriver, FusedOpts};
+use fused3s::kernels::{AttentionBatch, AttentionProblem, ExecCtx, SparseAttentionOp};
 use fused3s::runtime::buffers::Arg;
 use fused3s::runtime::{Manifest, Runtime};
 use fused3s::util::cli::Args;
@@ -25,9 +26,10 @@ fn main() -> anyhow::Result<()> {
     let v = rng.normal_vec(n * d, 1.0);
     let x = AttentionProblem::new(n, d, &q, &k, &v, 0.125);
     let driver = FusedDriver::new(rt.manifest(), &ds.graph, FusedOpts::default())?;
-    driver.run(&rt, &x)?; // warm compiles
+    let engine = Engine::serial();
+    driver.execute(&mut ExecCtx::pjrt(&rt, &engine), &AttentionBatch::single(&x))?; // warm compiles
 
-    // Manual per-bucket breakdown (mirrors FusedDriver::run).
+    // Manual per-bucket breakdown (mirrors the driver's bucketed path).
     let batch = rt.manifest().rw_batch;
     let mut bufs = CallBuffers::default();
     let (mut t_gather, mut t_exec, mut t_scatter) = (0.0f64, 0.0, 0.0);

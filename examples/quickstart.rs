@@ -7,8 +7,11 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use fused3s::exec::Engine;
 use fused3s::graph::generators;
-use fused3s::kernels::{reference, AttentionProblem, Backend, Driver};
+use fused3s::kernels::{
+    reference, AttentionBatch, AttentionProblem, Backend, Driver, ExecCtx, Plan,
+};
 use fused3s::runtime::Runtime;
 use fused3s::util::prng::Rng;
 
@@ -21,9 +24,10 @@ fn main() -> anyhow::Result<()> {
     let g = generators::barabasi_albert(1000, 5, 42).with_self_loops();
     println!("graph: n={} nnz={}", g.n, g.nnz());
 
-    // 3. Preprocess once: BSB build + row-window reordering + bucket plan.
-    let driver = Driver::prepare(&rt, &g, Backend::Fused3S)?;
-    if let Driver::Fused(f) = &driver {
+    // 3. Plan once: BSB build + row-window reordering + bucket plan.
+    let engine = Engine::serial();
+    let plan = Plan::new(rt.manifest(), &g, Backend::Fused3S, &engine)?;
+    if let Driver::Fused(f) = plan.driver() {
         println!(
             "BSB: {} row windows, {} TCBs, {} kernel dispatches planned \
              (padding {:.1}%)",
@@ -41,11 +45,12 @@ fn main() -> anyhow::Result<()> {
     let k = rng.normal_vec(g.n * d, 1.0);
     let v = rng.normal_vec(g.n * d, 1.0);
     let x = AttentionProblem::new(g.n, d, &q, &k, &v, 1.0 / (d as f32).sqrt());
+    let batch = AttentionBatch::single(&x);
     let t0 = std::time::Instant::now();
-    let out = driver.run(&rt, &x)?;
+    let out = plan.execute(&mut ExecCtx::pjrt(&rt, &engine), &batch)?;
     println!("fused 3S: {:.2} ms (first call compiles executables)", t0.elapsed().as_secs_f64() * 1e3);
     let t0 = std::time::Instant::now();
-    let out2 = driver.run(&rt, &x)?;
+    let out2 = plan.execute(&mut ExecCtx::pjrt(&rt, &engine), &batch)?;
     println!("fused 3S: {:.2} ms (warm)", t0.elapsed().as_secs_f64() * 1e3);
     assert_eq!(out.len(), out2.len());
 

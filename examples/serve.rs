@@ -35,17 +35,17 @@ fn main() -> anyhow::Result<()> {
         let (g, _) = batched_dataset(batch_size, 10, 30, i as u64, BatchKind::Molecule);
         let g = g.with_self_loops();
         let nd = g.n * d;
-        coord.submit(AttnRequest {
-            id: i as u64,
-            graph: g,
+        coord.submit(AttnRequest::single_head(
+            i as u64,
+            g,
             d,
-            q: rng.normal_vec(nd, 1.0),
-            k: rng.normal_vec(nd, 1.0),
-            v: rng.normal_vec(nd, 1.0),
-            scale: 1.0 / (d as f32).sqrt(),
-            backend: Backend::Fused3S,
-            reply: tx.clone(),
-        })?;
+            rng.normal_vec(nd, 1.0),
+            rng.normal_vec(nd, 1.0),
+            rng.normal_vec(nd, 1.0),
+            1.0 / (d as f32).sqrt(),
+            Backend::Fused3S,
+            tx.clone(),
+        ))?;
     }
     drop(tx);
 

@@ -45,17 +45,17 @@ fn main() {
         let g = generators::erdos_renyi(n, 4.0, i as u64).with_self_loops();
         let nd = g.n * d;
         coord
-            .submit(AttnRequest {
-                id: i as u64,
-                graph: g,
+            .submit(AttnRequest::single_head(
+                i as u64,
+                g,
                 d,
-                q: rng.normal_vec(nd, 1.0),
-                k: rng.normal_vec(nd, 1.0),
-                v: rng.normal_vec(nd, 1.0),
-                scale: 0.125,
-                backend: Backend::Fused3S,
-                reply: tx.clone(),
-            })
+                rng.normal_vec(nd, 1.0),
+                rng.normal_vec(nd, 1.0),
+                rng.normal_vec(nd, 1.0),
+                0.125,
+                Backend::Fused3S,
+                tx.clone(),
+            ))
             .expect("submit");
     }
     drop(tx);

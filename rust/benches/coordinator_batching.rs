@@ -78,17 +78,17 @@ fn run_config(
         let g = vocab[rng.below(vocab.len())].clone();
         let nd = g.n * D;
         coord
-            .submit(AttnRequest {
-                id: i as u64,
-                graph: g,
-                d: D,
-                q: rng.normal_vec(nd, 1.0),
-                k: rng.normal_vec(nd, 1.0),
-                v: rng.normal_vec(nd, 1.0),
-                scale: 0.125,
-                backend: Backend::Fused3S,
-                reply: tx.clone(),
-            })
+            .submit(AttnRequest::single_head(
+                i as u64,
+                g,
+                D,
+                rng.normal_vec(nd, 1.0),
+                rng.normal_vec(nd, 1.0),
+                rng.normal_vec(nd, 1.0),
+                0.125,
+                Backend::Fused3S,
+                tx.clone(),
+            ))
             .expect("submit");
     }
     drop(tx);

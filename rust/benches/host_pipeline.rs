@@ -14,7 +14,7 @@
 use fused3s::exec::{offline_manifest, Engine, ExecPolicy, HostExecutor};
 use fused3s::graph::generators;
 use fused3s::kernels::fused::{FusedDriver, FusedOpts};
-use fused3s::kernels::AttentionProblem;
+use fused3s::kernels::{AttentionBatch, AttentionProblem};
 use fused3s::util::prng::Rng;
 use fused3s::util::timing::{bench, BenchConfig};
 
@@ -37,6 +37,7 @@ fn main() {
     let k = rng.normal_vec(n * d, 1.0);
     let v = rng.normal_vec(n * d, 1.0);
     let x = AttentionProblem::new(n, d, &q, &k, &v, 0.125);
+    let batch = AttentionBatch::single(&x);
     let man = offline_manifest(32, BUCKETS, 128);
     let opts = FusedOpts::default();
 
@@ -45,7 +46,7 @@ fn main() {
     let serial_driver =
         FusedDriver::new(&man, &g, opts).expect("serial driver");
     let want = serial_driver
-        .run_exec(&x, &serial, &mut HostExecutor::new(&serial.pool))
+        .execute_with(&batch, &serial, &mut HostExecutor::new(&serial.pool))
         .expect("serial run");
 
     let mut serial_e2e = 0.0f64;
@@ -57,7 +58,7 @@ fn main() {
                 .expect("driver");
             assert_eq!(driver.bsb, serial_driver.bsb, "BSB build must match");
             let got = driver
-                .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+                .execute_with(&batch, &engine, &mut HostExecutor::new(&engine.pool))
                 .expect("run");
             let bit_identical = got == want;
             assert!(bit_identical, "threads={threads} depth={depth} diverged");
@@ -73,7 +74,7 @@ fn main() {
             );
             let run = bench(&format!("run t{threads} p{depth}"), &cfg, || {
                 let out = driver
-                    .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+                    .execute_with(&batch, &engine, &mut HostExecutor::new(&engine.pool))
                     .expect("run");
                 assert_eq!(out.len(), n * d);
             });

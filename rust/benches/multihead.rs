@@ -1,0 +1,98 @@
+//! `cargo bench multihead` — the head-batching sweep (EXPERIMENTS.md
+//! §Multi-head): one multi-head `AttentionBatch` call vs the old per-head
+//! loop, over `heads ∈ {1, 2, 4, 8}` × `d ∈ {32, 64}` on GT-calibrated
+//! dataset generators, through the offline host pipeline (no artifacts).
+//!
+//! The batched call amortizes the per-call TCB-bitmap staging across heads
+//! and pipelines head *h+1*'s gather over head *h*'s dispatch, so it should
+//! win at heads ≥ 4 — every row is checked **bit-identical** to the
+//! per-head loop before it prints.
+//!
+//! Prints one JSON row per (dataset, d, heads) config.  Env knobs:
+//! `F3S_BENCH_FULL=1` for full iteration counts.
+
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::graph::datasets;
+use fused3s::kernels::{AttentionBatch, Backend, ExecCtx, Plan};
+use fused3s::runtime::Manifest;
+use fused3s::util::prng::Rng;
+use fused3s::util::timing::{bench, BenchConfig};
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+
+fn manifest() -> Manifest {
+    offline_manifest(32, BUCKETS, 128)
+}
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let names: &[&str] =
+        if full { &["cora-sim", "pubmed-sim", "github-sim"] } else { &["cora-sim"] };
+    let man = manifest();
+    let engine = Engine::new(ExecPolicy { threads: 4, pipeline_depth: 2 });
+
+    println!("multihead: batched AttentionBatch call vs per-head loop (full={full})");
+    for name in names {
+        let ds = datasets::by_name(name).expect("dataset");
+        let g = &ds.graph;
+        let plan = Plan::new(&man, g, Backend::Fused3S, &engine).expect("plan");
+        for &d in &[32usize, 64] {
+            for &heads in &[1usize, 2, 4, 8] {
+                let mut rng = Rng::new(0x4EAD + heads as u64);
+                let n = g.n;
+                let q = rng.normal_vec(heads * n * d, 1.0);
+                let k = rng.normal_vec(heads * n * d, 1.0);
+                let v = rng.normal_vec(heads * n * d, 1.0);
+                let scale = 1.0 / (d as f32).sqrt();
+                let x = AttentionBatch::new(n, d, d, heads, &q, &k, &v, scale);
+
+                // Correctness gate: batched must bit-match the loop.
+                let batched = plan
+                    .execute(&mut ExecCtx::host(&engine), &x)
+                    .expect("batched");
+                let mut looped = Vec::with_capacity(x.out_len());
+                for h in 0..heads {
+                    let xh = x.head(h);
+                    looped.extend_from_slice(
+                        &plan
+                            .execute(
+                                &mut ExecCtx::host(&engine),
+                                &AttentionBatch::single(&xh),
+                            )
+                            .expect("per-head"),
+                    );
+                }
+                let bit_identical = batched == looped;
+                assert!(bit_identical, "{name} d={d} heads={heads} diverged");
+
+                let r_loop = bench("per_head_loop", &cfg, || {
+                    for h in 0..heads {
+                        let xh = x.head(h);
+                        let o = plan
+                            .execute(
+                                &mut ExecCtx::host(&engine),
+                                &AttentionBatch::single(&xh),
+                            )
+                            .expect("per-head");
+                        assert_eq!(o.len(), n * d);
+                    }
+                });
+                let r_batch = bench("batched", &cfg, || {
+                    let o = plan
+                        .execute(&mut ExecCtx::host(&engine), &x)
+                        .expect("batched");
+                    assert_eq!(o.len(), heads * n * d);
+                });
+                let (loop_ms, batch_ms) = (r_loop.median_ms(), r_batch.median_ms());
+                let speedup = if batch_ms > 0.0 { loop_ms / batch_ms } else { 0.0 };
+                println!(
+                    "{{\"bench\":\"multihead\",\"dataset\":\"{name}\",\"n\":{n},\
+                     \"d\":{d},\"heads\":{heads},\"per_head_loop_ms\":{loop_ms:.3},\
+                     \"batched_ms\":{batch_ms:.3},\"speedup\":{speedup:.3},\
+                     \"bit_identical\":{bit_identical}}}"
+                );
+            }
+        }
+    }
+}

@@ -27,8 +27,9 @@ use super::request::AttnRequest;
 pub(crate) struct BatchPolicy {
     /// Max requests per batch; 1 disables coalescing entirely.
     pub max_batch_requests: usize,
-    /// Flush a group once its total node count reaches this; requests at
-    /// least this large are never coalesced (they fill a batch alone).
+    /// Flush a group once its total head-weighted node count (Σ n × heads)
+    /// reaches this; requests at least this large are never coalesced
+    /// (they fill a batch alone).
     pub max_batch_nodes: usize,
     /// Max time the first request of a group waits for company.
     pub max_batch_delay: Duration,
@@ -47,11 +48,13 @@ pub(crate) struct Admitted {
 pub(crate) type Flush = Vec<Admitted>;
 
 /// Requests may only merge when the block-diagonal run is exactly the
-/// per-request computation: same feature dim and scale (one merged
-/// `AttentionProblem`) and same backend (one driver).
+/// per-request computation: same feature dims, head count and scale (one
+/// merged `AttentionBatch`) and same backend (one plan).
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct GroupKey {
     d: usize,
+    dv: usize,
+    heads: usize,
     scale_bits: u32,
     backend: Backend,
 }
@@ -72,13 +75,20 @@ impl Coalescer {
         Coalescer { policy, groups: HashMap::new() }
     }
 
+    /// A request's contribution to the batch-size budget: graph nodes
+    /// weighted by heads, since the merged feature buffers, the engine's
+    /// work-item count and the execute time all scale with `n × heads`.
+    fn weight(req: &AttnRequest) -> usize {
+        req.graph.n * req.heads.max(1)
+    }
+
     /// Whether a request is a coalescing candidate at all.  The dense
     /// fallback pads to fixed compiled sizes, so block-diagonal merging
     /// changes its cost model — it always runs alone.
     fn coalescible(&self, req: &AttnRequest) -> bool {
         self.policy.max_batch_requests > 1
             && req.backend != Backend::Dense
-            && req.graph.n < self.policy.max_batch_nodes
+            && Self::weight(req) < self.policy.max_batch_nodes
     }
 
     /// Admit one request.  Returns the batches this admission flushed:
@@ -91,6 +101,8 @@ impl Coalescer {
         }
         let key = GroupKey {
             d: req.d,
+            dv: req.dv,
+            heads: req.heads,
             scale_bits: req.scale.to_bits(),
             backend: req.backend,
         };
@@ -99,7 +111,7 @@ impl Coalescer {
             nodes: 0,
             deadline: now + self.policy.max_batch_delay,
         });
-        group.nodes += req.graph.n;
+        group.nodes += Self::weight(&req);
         group.entries.push(Admitted { req, arrived: now });
         if group.nodes >= self.policy.max_batch_nodes
             || group.entries.len() >= self.policy.max_batch_requests
@@ -156,15 +168,32 @@ mod tests {
 
     fn req(id: u64, n: usize, d: usize, scale: f32, backend: Backend) -> AttnRequest {
         let (tx, _rx) = channel();
+        AttnRequest::single_head(
+            id,
+            generators::ring(n),
+            d,
+            vec![0.0; n * d],
+            vec![0.0; n * d],
+            vec![0.0; n * d],
+            scale,
+            backend,
+            tx,
+        )
+    }
+
+    fn req_heads(id: u64, n: usize, d: usize, heads: usize) -> AttnRequest {
+        let (tx, _rx) = channel();
         AttnRequest {
             id,
             graph: generators::ring(n),
             d,
-            q: vec![0.0; n * d],
-            k: vec![0.0; n * d],
-            v: vec![0.0; n * d],
-            scale,
-            backend,
+            dv: d,
+            heads,
+            q: vec![0.0; heads * n * d],
+            k: vec![0.0; heads * n * d],
+            v: vec![0.0; heads * n * d],
+            scale: 1.0,
+            backend: Backend::Fused3S,
             reply: tx,
         }
     }
@@ -208,6 +237,40 @@ mod tests {
         let ids: Vec<u64> = flushed[0].iter().map(|a| a.req.id).collect();
         assert_eq!(ids, vec![0, 4]);
         assert_eq!(co.pending(), 3);
+    }
+
+    #[test]
+    fn node_budget_is_head_weighted() {
+        // Budget 100: two 4-head ring(16) requests weigh 64 each, so the
+        // second admission trips the cap (128 ≥ 100) where two single-head
+        // requests of the same graphs (weight 16) would keep parking.
+        let mut co = Coalescer::new(policy(100, 100, 100));
+        let now = Instant::now();
+        assert!(co.admit(req_heads(0, 16, 4, 4), now).is_empty());
+        let flushed = co.admit(req_heads(1, 16, 4, 4), now);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].len(), 2);
+        // And a single request at weight ≥ budget runs alone outright.
+        let f = co.admit(req_heads(2, 32, 4, 4), now);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].len(), 1);
+        assert_eq!(co.pending(), 0);
+    }
+
+    #[test]
+    fn head_counts_do_not_mix() {
+        let mut co = Coalescer::new(policy(2, 10_000, 100));
+        let now = Instant::now();
+        assert!(co.admit(req_heads(0, 8, 4, 1), now).is_empty());
+        // Same d/scale/backend but different heads: a new group.
+        assert!(co.admit(req_heads(1, 8, 4, 4), now).is_empty());
+        assert_eq!(co.pending(), 2);
+        // A matching 4-head partner flushes only the 4-head group.
+        let flushed = co.admit(req_heads(2, 8, 4, 4), now);
+        assert_eq!(flushed.len(), 1);
+        let ids: Vec<u64> = flushed[0].iter().map(|a| a.req.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(co.pending(), 1);
     }
 
     #[test]

@@ -2,11 +2,12 @@
 //!
 //! The serving steady state replays the same structures over and over
 //! (fixed molecule vocabularies, recurring batch compositions), so the
-//! coordinator keys prepared drivers — BSB + bucket plan, the expensive
+//! coordinator keys prepared [`Plan`]s — BSB + bucket plan, the expensive
 //! per-graph preprocessing — by [`CsrGraph::fingerprint`] + backend and
-//! reuses them across requests.  Entries are `Arc`-shared: preprocessing
-//! workers insert, the executor runs them concurrently, eviction never
-//! invalidates an in-flight run.
+//! reuses them across requests (and, since plans execute head-batched
+//! problems, across every head of every request).  Entries are
+//! `Arc`-shared: preprocessing workers insert, the executor runs them
+//! concurrently, eviction never invalidates an in-flight run.
 //!
 //! Collision safety: a 64-bit content fingerprint collides with ~2⁻⁶⁴
 //! probability, and a stored entry is additionally cross-checked against
@@ -20,10 +21,10 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::kernels::{Backend, Driver};
+use crate::kernels::{Backend, Plan};
 
 struct Slot {
-    driver: Arc<Driver>,
+    plan: Arc<Plan>,
     last_used: u64,
     /// Keyed graph's (node, edge) counts — the collision cross-check.
     n: usize,
@@ -35,7 +36,7 @@ struct Inner {
     tick: u64,
 }
 
-/// LRU cache of prepared drivers, shared by the preprocessing workers.
+/// LRU cache of prepared plans, shared by the preprocessing workers.
 pub struct DriverCache {
     capacity: usize,
     inner: Mutex<Inner>,
@@ -51,7 +52,7 @@ impl DriverCache {
         }
     }
 
-    /// Look up a prepared driver; refreshes LRU recency on hit.  `n`/`nnz`
+    /// Look up a prepared plan; refreshes LRU recency on hit.  `n`/`nnz`
     /// are the requesting graph's node/edge counts (collision cross-check).
     pub fn get(
         &self,
@@ -59,7 +60,7 @@ impl DriverCache {
         backend: Backend,
         n: usize,
         nnz: usize,
-    ) -> Option<Arc<Driver>> {
+    ) -> Option<Arc<Plan>> {
         if self.capacity == 0 {
             return None;
         }
@@ -71,10 +72,10 @@ impl DriverCache {
             return None; // fingerprint collision: treat as a miss
         }
         slot.last_used = tick;
-        Some(slot.driver.clone())
+        Some(slot.plan.clone())
     }
 
-    /// Insert a freshly prepared driver for a graph with `n` nodes and
+    /// Insert a freshly prepared plan for a graph with `n` nodes and
     /// `nnz` edges, evicting least-recently-used entries to stay within
     /// capacity.  Returns how many were evicted.
     pub fn insert(
@@ -83,7 +84,7 @@ impl DriverCache {
         backend: Backend,
         n: usize,
         nnz: usize,
-        driver: Arc<Driver>,
+        plan: Arc<Plan>,
     ) -> u64 {
         if self.capacity == 0 {
             return 0;
@@ -106,7 +107,7 @@ impl DriverCache {
         let tick = inner.tick;
         inner
             .map
-            .insert((fp, backend), Slot { driver, last_used: tick, n, nnz });
+            .insert((fp, backend), Slot { plan, last_used: tick, n, nnz });
         evicted
     }
 
@@ -126,12 +127,11 @@ mod tests {
     use crate::graph::generators;
 
     /// A ring(n) has n nodes and 2n edges.
-    fn driver_for(n: usize) -> Arc<Driver> {
+    fn driver_for(n: usize) -> Arc<Plan> {
         let man = offline_manifest(8, &[4, 8, 16, 32, 64, 128], 128);
         let g = generators::ring(n);
         Arc::new(
-            Driver::prepare_on(&man, &g, Backend::Fused3S, &Engine::serial())
-                .unwrap(),
+            Plan::new(&man, &g, Backend::Fused3S, &Engine::serial()).unwrap(),
         )
     }
 

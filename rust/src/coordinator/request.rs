@@ -3,13 +3,21 @@
 use std::sync::mpsc::Sender;
 
 use crate::graph::CsrGraph;
-use crate::kernels::Backend;
+use crate::kernels::{AttentionBatch, AttnError, Backend};
 
-/// A sparse-attention request: one graph + its Q/K/V features.
+/// A sparse-attention request: one graph + head-major Q/K/V features for
+/// `heads` attention heads (head-major: head `h`'s rows at
+/// `q[h*n*d .. (h+1)*n*d]`, matching
+/// [`AttentionBatch`](crate::kernels::AttentionBatch)).
 pub struct AttnRequest {
     pub id: u64,
     pub graph: CsrGraph,
+    /// Q/K feature dim (per head).
     pub d: usize,
+    /// V / output feature dim (= d except for GAT-style rank-2 scores).
+    pub dv: usize,
+    /// Attention heads sharing this graph's preprocessing (≥ 1).
+    pub heads: usize,
     pub q: Vec<f32>,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
@@ -20,10 +28,12 @@ pub struct AttnRequest {
     pub reply: Sender<AttnResponse>,
 }
 
-/// The computed output (or a structured failure).
+/// The computed output (or a structured failure).  Successful payloads are
+/// head-major (`heads × n × dv`), which for the backward-compatible
+/// single-head request is exactly the old `n × d` shape.
 pub struct AttnResponse {
     pub id: u64,
-    pub result: Result<Vec<f32>, String>,
+    pub result: Result<Vec<f32>, AttnError>,
     /// End-to-end latency in seconds (admission → response, including any
     /// time parked in the coalescing queue).
     pub latency_s: f64,
@@ -38,21 +48,40 @@ pub struct AttnResponse {
 }
 
 impl AttnRequest {
-    /// Validate feature buffer sizes against the graph.
-    pub fn validate(&self) -> Result<(), String> {
-        let want = self.graph.n * self.d;
-        for (name, buf) in [("q", &self.q), ("k", &self.k), ("v", &self.v)] {
-            if buf.len() != want {
-                return Err(format!(
-                    "{name}: expected {} elements (n={} × d={}), got {}",
-                    want,
-                    self.graph.n,
-                    self.d,
-                    buf.len()
-                ));
-            }
+    /// Build a single-head request with `dv = d` — the pre-multi-head call
+    /// shape, kept as the backward-compatible default constructor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn single_head(
+        id: u64,
+        graph: CsrGraph,
+        d: usize,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        scale: f32,
+        backend: Backend,
+        reply: Sender<AttnResponse>,
+    ) -> AttnRequest {
+        AttnRequest { id, graph, d, dv: d, heads: 1, q, k, v, scale, backend, reply }
+    }
+
+    /// Validate feature buffer sizes against the graph by delegating to
+    /// [`AttentionBatch::validate`] over a zero-copy view: `q`/`k` against
+    /// `heads × n × d` and `v` against `heads × n × dv` (rank-2 GAT-style
+    /// scores carry `dv ≠ d`, so `v` must NOT be checked against `d`).
+    /// One shape rule, shared with the kernel layer.
+    pub fn validate(&self) -> Result<(), AttnError> {
+        AttentionBatch {
+            n: self.graph.n,
+            d: self.d,
+            dv: self.dv,
+            heads: self.heads,
+            q: &self.q,
+            k: &self.k,
+            v: &self.v,
+            scale: self.scale,
         }
-        Ok(())
+        .validate()
     }
 }
 
@@ -69,6 +98,8 @@ mod tests {
         let good = AttnRequest {
             id: 1,
             d: 4,
+            dv: 4,
+            heads: 1,
             q: vec![0.0; 128],
             k: vec![0.0; 128],
             v: vec![0.0; 128],
@@ -80,5 +111,72 @@ mod tests {
         assert!(good.validate().is_ok());
         let bad = AttnRequest { q: vec![0.0; 12], ..good };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn validate_checks_v_against_dv_not_d() {
+        // GAT-style rank-2 scores: d = 2, dv = 8.  The old validator
+        // compared v against n*d and would reject the correct buffer.
+        let (tx, _rx) = channel();
+        let g = generators::ring(16);
+        let req = AttnRequest {
+            id: 2,
+            d: 2,
+            dv: 8,
+            heads: 1,
+            q: vec![0.0; 32],
+            k: vec![0.0; 32],
+            v: vec![0.0; 128],
+            scale: 1.0,
+            backend: Backend::CpuCsr,
+            reply: tx.clone(),
+            graph: g.clone(),
+        };
+        assert!(req.validate().is_ok());
+        // v sized n*d (the shape the old bug accepted) must now fail.
+        let bad = AttnRequest { v: vec![0.0; 32], ..req };
+        assert!(matches!(bad.validate(), Err(AttnError::BadShape(_))));
+    }
+
+    #[test]
+    fn multi_head_sizes_and_zero_heads() {
+        let (tx, _rx) = channel();
+        let g = generators::ring(8);
+        let req = AttnRequest {
+            id: 3,
+            d: 4,
+            dv: 4,
+            heads: 3,
+            q: vec![0.0; 96],
+            k: vec![0.0; 96],
+            v: vec![0.0; 96],
+            scale: 1.0,
+            backend: Backend::Fused3S,
+            reply: tx.clone(),
+            graph: g.clone(),
+        };
+        assert!(req.validate().is_ok());
+        let bad = AttnRequest { heads: 0, ..req };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn single_head_helper_defaults() {
+        let (tx, _rx) = channel();
+        let g = generators::ring(8);
+        let req = AttnRequest::single_head(
+            4,
+            g,
+            4,
+            vec![0.0; 32],
+            vec![0.0; 32],
+            vec![0.0; 32],
+            0.5,
+            Backend::Fused3S,
+            tx,
+        );
+        assert_eq!(req.dv, 4);
+        assert_eq!(req.heads, 1);
+        assert!(req.validate().is_ok());
     }
 }

@@ -20,11 +20,13 @@
 //!    the paper's §4.1 batched-graph workload, applied to serving;
 //! 3. **preprocessing** — workers merge each batch into one `CsrGraph`
 //!    (`graph::batch::batch_graph_refs`), consult the fingerprint-keyed
-//!    BSB cache, and build a shared driver on the process-wide [`Engine`];
-//! 4. **execution** — the executor runs one driver call per batch (PJRT
+//!    BSB cache, and build a shared [`Plan`] on the process-wide
+//!    [`Engine`];
+//! 4. **execution** — the executor runs **one multi-head plan call per
+//!    batch** (one `AttentionBatch` over every request's heads; PJRT
 //!    artifacts, or the offline host emulation under
-//!    [`ExecutorKind::HostEmulation`]) and scatters per-component output
-//!    rows back to each caller's reply channel.
+//!    [`ExecutorKind::HostEmulation`]) and scatters per-component,
+//!    per-head output rows back to each caller's reply channel.
 //!
 //! Because the block-diagonal adjacency keeps every row's neighbour lanes
 //! in the same ascending-column order as a per-graph run, the batched
@@ -42,7 +44,7 @@ use anyhow::{Context, Result};
 use crate::exec::{offline_manifest, Engine, ExecPolicy};
 use crate::graph::batch::batch_graph_refs;
 use crate::graph::CsrGraph;
-use crate::kernels::{AttentionProblem, Backend, Driver};
+use crate::kernels::{AttentionBatch, AttnError, Backend, ExecCtx, Plan};
 use crate::runtime::{Manifest, Runtime};
 
 use super::batcher::{Admitted, BatchPolicy, Coalescer, Flush};
@@ -83,8 +85,8 @@ pub struct CoordinatorConfig {
     /// Max requests coalesced into one block-diagonal batch; 1 disables
     /// dynamic batching.
     pub max_batch_requests: usize,
-    /// Flush a forming batch once it reaches this many total nodes;
-    /// requests at least this large always run alone.
+    /// Flush a forming batch once it reaches this many total head-weighted
+    /// nodes (Σ n × heads); requests at least this large always run alone.
     pub max_batch_nodes: usize,
     /// Max time the first request of a batch waits for company.
     pub max_batch_delay: Duration,
@@ -130,19 +132,21 @@ struct Entry {
     arrived: Instant,
 }
 
-/// A preprocessed batch waiting for the executor: the merged problem plus
-/// per-component scatter routes.
+/// A preprocessed batch waiting for the executor: the merged head-major
+/// problem plus per-component scatter routes.
 struct PreparedBatch {
     entries: Vec<Entry>,
     /// Component row offsets into the merged problem (len = entries + 1).
     offsets: Vec<u32>,
     n_total: usize,
     d: usize,
+    dv: usize,
+    heads: usize,
     scale: f32,
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
-    driver: std::result::Result<Arc<Driver>, String>,
+    plan: std::result::Result<Arc<Plan>, AttnError>,
     preprocess_s: f64,
 }
 
@@ -252,10 +256,12 @@ impl Coordinator {
 
     /// Submit a request.  Blocks while the ingress queue is at
     /// `queue_capacity` (backpressure); the reply arrives on `req.reply`.
-    pub fn submit(&self, req: AttnRequest) -> Result<()> {
+    /// After [`Coordinator::shutdown`] the queue is gone and submission
+    /// fails with the structured [`AttnError::QueueClosed`].
+    pub fn submit(&self, req: AttnRequest) -> std::result::Result<(), AttnError> {
         self.ingress
             .send((req, Instant::now()))
-            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
+            .map_err(|_| AttnError::QueueClosed)
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -378,7 +384,7 @@ fn preprocess_worker(
 
 /// Validate, merge, and prepare one coalesced job.  Invalid members are
 /// answered immediately; the valid remainder becomes one block-diagonal
-/// problem with a shared (possibly cached) driver.  If *merged*
+/// head-major problem with a shared (possibly cached) plan.  If *merged*
 /// preparation fails — e.g. the unfused baseline's oversize refusal on a
 /// boundary window that only exists in the merged graph — the members
 /// fall back to singleton preparation rather than failing as a unit.
@@ -418,20 +424,31 @@ fn prepare_job(
 
     let t0 = Instant::now();
     let d = valid[0].req.d;
+    let dv = valid[0].req.dv;
+    let heads = valid[0].req.heads;
     let scale = valid[0].req.scale;
     let backend = valid[0].req.backend;
     let refs: Vec<&CsrGraph> = valid.iter().map(|a| &a.req.graph).collect();
     let (merged, offsets) = batch_graph_refs(&refs);
-    match shared_driver(&merged, backend, man, engine, cache, metrics) {
-        Ok(driver) => {
-            let len = merged.n * d;
-            let mut q = Vec::with_capacity(len);
-            let mut k = Vec::with_capacity(len);
-            let mut v = Vec::with_capacity(len);
-            for a in &valid {
-                q.extend_from_slice(&a.req.q);
-                k.extend_from_slice(&a.req.k);
-                v.extend_from_slice(&a.req.v);
+    match shared_plan(&merged, backend, man, engine, cache, metrics) {
+        Ok(plan) => {
+            // Merge per-request head-major features into one head-major
+            // problem over the block-diagonal graph: head h's block is the
+            // in-order concatenation of every component's head-h rows
+            // (components appear in `offsets` order), so the merge is
+            // append-only — heads outer, components inner, no zero fill.
+            // (For heads == 1 this degenerates to plain concatenation.)
+            let n_total = merged.n;
+            let mut q = Vec::with_capacity(heads * n_total * d);
+            let mut k = Vec::with_capacity(heads * n_total * d);
+            let mut v = Vec::with_capacity(heads * n_total * dv);
+            for h in 0..heads {
+                for a in &valid {
+                    let ni = a.req.graph.n;
+                    q.extend_from_slice(&a.req.q[h * ni * d..(h + 1) * ni * d]);
+                    k.extend_from_slice(&a.req.k[h * ni * d..(h + 1) * ni * d]);
+                    v.extend_from_slice(&a.req.v[h * ni * dv..(h + 1) * ni * dv]);
+                }
             }
             let entries: Vec<Entry> = valid
                 .into_iter()
@@ -445,13 +462,15 @@ fn prepare_job(
             vec![PreparedBatch {
                 entries,
                 offsets,
-                n_total: merged.n,
+                n_total,
                 d,
+                dv,
+                heads,
                 scale,
                 q,
                 k,
                 v,
-                driver: Ok(driver),
+                plan: Ok(plan),
                 preprocess_s: t0.elapsed().as_secs_f64(),
             }]
         }
@@ -474,7 +493,7 @@ fn prepare_single(
     metrics: &Metrics,
 ) -> PreparedBatch {
     let t0 = Instant::now();
-    let driver = shared_driver(&a.req.graph, a.req.backend, man, engine, cache, metrics);
+    let plan = shared_plan(&a.req.graph, a.req.backend, man, engine, cache, metrics);
     metrics.batching.record_batch(1);
     let n = a.req.graph.n;
     let entry = Entry { id: a.req.id, reply: a.req.reply, arrived: a.arrived };
@@ -483,40 +502,42 @@ fn prepare_single(
         offsets: vec![0, n as u32],
         n_total: n,
         d: a.req.d,
+        dv: a.req.dv,
+        heads: a.req.heads,
         scale: a.req.scale,
         q: a.req.q,
         k: a.req.k,
         v: a.req.v,
-        driver,
+        plan,
         preprocess_s: t0.elapsed().as_secs_f64(),
     }
 }
 
-/// Resolve the prepared driver for a graph: fingerprint-keyed cache first,
+/// Resolve the prepared plan for a graph: fingerprint-keyed cache first,
 /// build (and insert) on miss.
-fn shared_driver(
+fn shared_plan(
     graph: &CsrGraph,
     backend: Backend,
     man: &Manifest,
     engine: &Engine,
     cache: &DriverCache,
     metrics: &Metrics,
-) -> std::result::Result<Arc<Driver>, String> {
+) -> std::result::Result<Arc<Plan>, AttnError> {
     let fp = graph.fingerprint();
-    if let Some(drv) = cache.get(fp, backend, graph.n, graph.nnz()) {
+    if let Some(plan) = cache.get(fp, backend, graph.n, graph.nnz()) {
         metrics.batching.cache_hit();
-        return Ok(drv);
+        return Ok(plan);
     }
     metrics.batching.cache_miss();
-    match Driver::prepare_on(man, graph, backend, engine) {
-        Ok(drv) => {
-            let drv = Arc::new(drv);
+    match Plan::new(man, graph, backend, engine) {
+        Ok(plan) => {
+            let plan = Arc::new(plan);
             let evicted =
-                cache.insert(fp, backend, graph.n, graph.nnz(), drv.clone());
+                cache.insert(fp, backend, graph.n, graph.nnz(), plan.clone());
             metrics.batching.cache_evicted(evicted);
-            Ok(drv)
+            Ok(plan)
         }
-        Err(e) => Err(format!("{e:#}")),
+        Err(e) => Err(e),
     }
 }
 
@@ -534,15 +555,17 @@ fn executor_loop(
 ) {
     while let Ok(p) = rx.recv() {
         let t0 = Instant::now();
-        let result: std::result::Result<Vec<f32>, String> = match &p.driver {
+        let result: std::result::Result<Vec<f32>, AttnError> = match &p.plan {
             Err(e) => Err(e.clone()),
-            Ok(driver) => {
-                let x = AttentionProblem::new(p.n_total, p.d, &p.q, &p.k, &p.v, p.scale);
-                match &backend {
-                    ExecBackend::Pjrt(rt) => driver.run_with(rt, &x, &engine),
-                    ExecBackend::Host => driver.run_offline(&x, &engine),
-                }
-                .map_err(|e| format!("{e:#}"))
+            Ok(plan) => {
+                let x = AttentionBatch::new(
+                    p.n_total, p.d, p.dv, p.heads, &p.q, &p.k, &p.v, p.scale,
+                );
+                let mut ctx = match &backend {
+                    ExecBackend::Pjrt(rt) => ExecCtx::pjrt(rt, &engine),
+                    ExecBackend::Host => ExecCtx::host(&engine),
+                };
+                plan.execute(&mut ctx, &x)
             }
         };
         let execute_s = t0.elapsed().as_secs_f64();
@@ -550,16 +573,23 @@ fn executor_loop(
         metrics.execute.record(execute_s);
         let batch_size = p.entries.len();
         let offsets = p.offsets;
-        let d = p.d;
+        let (n_total, dv, heads) = (p.n_total, p.dv, p.heads);
         match result {
             Ok(out) => {
                 for (i, entry) in p.entries.into_iter().enumerate() {
-                    // Scatter this component's rows out of the merged output.
-                    let lo = offsets[i] as usize * d;
-                    let hi = offsets[i + 1] as usize * d;
+                    // Gather this component's rows out of every head block
+                    // of the merged head-major output.
+                    let lo = offsets[i] as usize;
+                    let hi = offsets[i + 1] as usize;
+                    let ni = hi - lo;
+                    let mut comp = Vec::with_capacity(heads * ni * dv);
+                    for h in 0..heads {
+                        let base = (h * n_total + lo) * dv;
+                        comp.extend_from_slice(&out[base..base + ni * dv]);
+                    }
                     respond(
                         entry,
-                        Ok(out[lo..hi].to_vec()),
+                        Ok(comp),
                         &metrics,
                         p.preprocess_s,
                         execute_s,
@@ -585,7 +615,7 @@ fn executor_loop(
 
 fn respond(
     entry: Entry,
-    result: std::result::Result<Vec<f32>, String>,
+    result: std::result::Result<Vec<f32>, AttnError>,
     metrics: &Metrics,
     preprocess_s: f64,
     execute_s: f64,

@@ -30,7 +30,7 @@ use anyhow::{anyhow, Result};
 use crate::bsb::bucket::Call;
 use crate::bsb::Bsb;
 use crate::kernels::gather::{self, CallBuffers};
-use crate::kernels::AttentionProblem;
+use crate::kernels::{AttentionBatch, AttentionProblem};
 
 use super::bufpool::BufferPool;
 use super::pool::WorkerPool;
@@ -87,7 +87,7 @@ impl Engine {
         }
     }
 
-    /// The serial reference engine (what `Driver::run` uses).
+    /// The serial reference engine (the bit-exactness oracle policy).
     pub fn serial() -> Engine {
         Engine::new(ExecPolicy::serial())
     }
@@ -207,33 +207,90 @@ impl Engine {
         })
     }
 
-    /// Pipeline a plan's regular bucketed calls: slot-parallel gather,
-    /// caller-supplied dispatch, scatter into `out`.  Shared by the fused
-    /// and unfused drivers.
+    /// Pipeline a plan's regular bucketed calls over **every head** of a
+    /// batch: slot-parallel gathers, caller-supplied dispatch, scatter into
+    /// the head-major `out` (`heads × n × dv`).  Shared by the fused and
+    /// unfused drivers.
+    ///
+    /// Work items are ordered call-major with heads inner (call 0 head 0,
+    /// call 0 head 1, …), so the pipeline overlaps head *h+1*'s gather with
+    /// head *h*'s dispatch — no idle gap at head boundaries — and each
+    /// call's head-invariant TCB bitmaps are staged **once per batch** up
+    /// front and memcpy'd into every head's buffers instead of re-walked
+    /// from the BSB per head.
+    ///
+    /// Determinism: for each head, the (gather, dispatch, scatter) sequence
+    /// is exactly the single-head schedule, and heads write disjoint output
+    /// blocks — so the multi-head result bit-matches a per-head loop under
+    /// every `ExecPolicy` (pinned by `rust/tests/multihead_equivalence.rs`).
+    ///
+    /// `dispatch` receives `(call, head, staged buffers)`.
     pub fn run_bucketed<F>(
         &self,
         calls: &[Call],
         bsb: &Bsb,
-        x: &AttentionProblem,
+        x: &AttentionBatch,
         batch: usize,
         out: &mut [f32],
         mut dispatch: F,
     ) -> Result<()>
     where
-        F: FnMut(&Call, &CallBuffers) -> Result<Vec<f32>>,
+        F: FnMut(&Call, usize, &CallBuffers) -> Result<Vec<f32>>,
     {
+        let heads = x.heads;
         let (n_rows, dv) = (x.n, x.dv);
+        let per_head = n_rows * dv;
+        debug_assert_eq!(out.len(), heads * per_head);
+        // Head-invariant structural gather, once per call per batch.  Only
+        // worth materialising when there is a second head to amortize it
+        // over: at heads == 1 the inline bitmap walk inside the pipelined
+        // gather stage is strictly cheaper than an up-front staging pass
+        // (and holds no per-call buffers alive), so that path is kept.
+        let bitmaps: Vec<Vec<i32>> = if heads > 1 {
+            calls
+                .iter()
+                .map(|c| gather::stage_call_bitmaps(bsb, &c.rws, c.t_bucket, batch))
+                .collect()
+        } else {
+            Vec::new()
+        };
         self.run_pipeline(
-            calls.len(),
+            calls.len() * heads,
             |i, bufs| {
-                let call = &calls[i];
-                gather::gather_call_with(
-                    &self.pool, bufs, &call.rws, call.t_bucket, bsb, x, batch,
-                );
+                let (ci, h) = (i / heads, i % heads);
+                let call = &calls[ci];
+                let xh = x.head(h);
+                if heads > 1 {
+                    gather::gather_call_staged(
+                        &self.pool,
+                        bufs,
+                        &call.rws,
+                        call.t_bucket,
+                        &bitmaps[ci],
+                        bsb,
+                        &xh,
+                        batch,
+                    );
+                } else {
+                    gather::gather_call_with(
+                        &self.pool,
+                        bufs,
+                        &call.rws,
+                        call.t_bucket,
+                        bsb,
+                        &xh,
+                        batch,
+                    );
+                }
             },
-            |i, bufs| dispatch(&calls[i], bufs).map(|o| vec![o]),
+            |i, bufs| {
+                let (ci, h) = (i / heads, i % heads);
+                dispatch(&calls[ci], h, bufs).map(|o| vec![o])
+            },
             |i, outs| {
-                gather::scatter_call(out, &outs[0], &calls[i].rws, n_rows, dv);
+                let (ci, h) = (i / heads, i % heads);
+                let out_h = &mut out[h * per_head..(h + 1) * per_head];
+                gather::scatter_call(out_h, &outs[0], &calls[ci].rws, n_rows, dv);
             },
         )
     }

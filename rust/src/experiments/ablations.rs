@@ -8,8 +8,11 @@ use anyhow::Result;
 use crate::bsb;
 use crate::bsb::bucket;
 use crate::bsb::reorder::Order;
+use crate::exec::Engine;
 use crate::graph::datasets;
-use crate::kernels::{AttentionProblem, Backend, Driver};
+use crate::kernels::{
+    AttentionBatch, AttentionProblem, Backend, ExecCtx, Plan, SparseAttentionOp,
+};
 use crate::runtime::Runtime;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::prng::Rng;
@@ -60,21 +63,25 @@ pub fn compaction(rt: &Runtime, names: &[String], d: usize, cfg: &BenchConfig) -
         let k = rng.normal_vec(n * d, 1.0);
         let v = rng.normal_vec(n * d, 1.0);
         let x = AttentionProblem::new(n, d, &q, &k, &v, 1.0 / (d as f32).sqrt());
-        let run_with = |compact: bool| -> Result<f64> {
+        let batch = AttentionBatch::single(&x);
+        let engine = Engine::serial();
+        let time_with = |compact: bool| -> Result<f64> {
             use crate::kernels::fused::{FusedDriver, FusedOpts};
             let driver = FusedDriver::new(
                 rt.manifest(),
                 &ds.graph,
                 FusedOpts { compact, ..FusedOpts::default() },
             )?;
-            driver.run(rt, &x)?; // warmup
+            driver.execute(&mut ExecCtx::pjrt(rt, &engine), &batch)?; // warmup
             Ok(bench("", cfg, || {
-                driver.run(rt, &x).expect("run");
+                driver
+                    .execute(&mut ExecCtx::pjrt(rt, &engine), &batch)
+                    .expect("run");
             })
             .median_ms())
         };
-        let ms_bsb = run_with(true)?;
-        let ms_bcsr = run_with(false)?;
+        let ms_bsb = time_with(true)?;
+        let ms_bcsr = time_with(false)?;
         table.row(vec![
             ds.name.to_string(),
             compacted.total_tcbs().to_string(),
@@ -155,13 +162,16 @@ fn compare_backends(
         let k = rng.normal_vec(n * d, 1.0);
         let v = rng.normal_vec(n * d, 1.0);
         let x = AttentionProblem::new(n, d, &q, &k, &v, 1.0 / (d as f32).sqrt());
+        let batch = AttentionBatch::single(&x);
+        let engine = Engine::serial();
         let mut times = Vec::new();
         for &b in backends {
-            let driver = Driver::prepare(rt, &ds.graph, b)?;
-            driver.run(rt, &x)?;
+            let plan = Plan::new(rt.manifest(), &ds.graph, b, &engine)?;
+            plan.execute(&mut ExecCtx::pjrt(rt, &engine), &batch)?;
             times.push(
                 bench(b.name(), cfg, || {
-                    driver.run(rt, &x).expect("run");
+                    plan.execute(&mut ExecCtx::pjrt(rt, &engine), &batch)
+                        .expect("run");
                 })
                 .median_ms(),
             );

@@ -9,8 +9,9 @@
 
 use anyhow::Result;
 
+use crate::exec::Engine;
 use crate::graph::datasets::Dataset;
-use crate::kernels::{AttentionProblem, Backend, Driver};
+use crate::kernels::{AttentionBatch, AttentionProblem, Backend, ExecCtx, Plan};
 use crate::runtime::Runtime;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::prng::Rng;
@@ -38,6 +39,7 @@ pub fn run(
     label: &str,
 ) -> Result<Json> {
     let mut cells: Vec<Cell> = Vec::new();
+    let engine = Engine::serial();
     for ds in suite {
         let n = ds.graph.n;
         let mut rng = Rng::new(0xF16 + n as u64);
@@ -47,26 +49,31 @@ pub fn run(
         // 1/sqrt(d) keeps the naive-softmax baseline in exp() range on most
         // datasets, matching how frameworks actually run attention.
         let x = AttentionProblem::new(n, d, &q, &k, &v, 1.0 / (d as f32).sqrt());
+        let batch = AttentionBatch::single(&x);
         for &b in backends {
-            let cell = match Driver::prepare(rt, &ds.graph, b) {
+            let cell = match Plan::new(rt.manifest(), &ds.graph, b, &engine) {
                 Err(e) => Cell {
                     dataset: ds.name.to_string(),
                     backend: b,
                     median_ms: None,
-                    fail_reason: Some(format!("{e:#}")),
+                    fail_reason: Some(format!("{e}")),
                 },
-                Ok(driver) => {
+                Ok(plan) => {
                     // One untimed run warms executable compilation.
-                    match driver.run(rt, &x) {
+                    match plan.execute(&mut ExecCtx::pjrt(rt, &engine), &batch) {
                         Err(e) => Cell {
                             dataset: ds.name.to_string(),
                             backend: b,
                             median_ms: None,
-                            fail_reason: Some(format!("{e:#}")),
+                            fail_reason: Some(format!("{e}")),
                         },
                         Ok(_) => {
                             let r = bench(b.name(), cfg, || {
-                                driver.run(rt, &x).expect("benched run");
+                                plan.execute(
+                                    &mut ExecCtx::pjrt(rt, &engine),
+                                    &batch,
+                                )
+                                .expect("benched run");
                             });
                             Cell {
                                 dataset: ds.name.to_string(),

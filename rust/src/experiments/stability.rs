@@ -5,8 +5,11 @@
 
 use anyhow::Result;
 
+use crate::exec::Engine;
 use crate::graph::generators;
-use crate::kernels::{reference, AttentionProblem, Backend, Driver};
+use crate::kernels::{
+    reference, AttentionBatch, AttentionProblem, Backend, ExecCtx, Plan,
+};
 use crate::runtime::Runtime;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::prng::Rng;
@@ -41,9 +44,11 @@ pub fn run(rt: &Runtime) -> Result<Json> {
             }
         }
         let want = reference::dense_attention_host(&g, &x);
+        let engine = Engine::serial();
         for b in [Backend::Fused3S, Backend::UnfusedStable, Backend::UnfusedNaive] {
-            let driver = Driver::prepare(rt, &g, b)?;
-            let got = driver.run(rt, &x)?;
+            let plan = Plan::new(rt.manifest(), &g, b, &engine)?;
+            let got = plan
+                .execute(&mut ExecCtx::pjrt(rt, &engine), &AttentionBatch::single(&x))?;
             let nan_rows = (0..n)
                 .filter(|&i| got[i * d..(i + 1) * d].iter().any(|v| v.is_nan()))
                 .count();

@@ -1,18 +1,24 @@
-//! Backend enumeration + unified driver facade — how the experiment harness
-//! instantiates the Figure-5/6/8 comparison series by name.
+//! Backend enumeration + prepared-driver storage — how the experiment
+//! harness instantiates the Figure-5/6/8 comparison series by name.
+//!
+//! Execution happens through the [`SparseAttentionOp`] trait (one
+//! multi-head [`AttentionBatch`](super::AttentionBatch) call through an
+//! [`ExecCtx`]); callers usually hold a [`Plan`](super::Plan) rather than
+//! a raw [`Driver`].
 
 use anyhow::Result;
 
 use crate::bsb::reorder::Order;
 use crate::exec::Engine;
 use crate::graph::CsrGraph;
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::Manifest;
 
-use super::cpu_csr;
+use super::cpu_csr::CpuCsrDriver;
 use super::dense::DenseDriver;
 use super::fused::{FusedDriver, FusedOpts};
+use super::op::{AttnError, ExecCtx, SparseAttentionOp};
 use super::unfused::UnfusedDriver;
-use super::AttentionProblem;
+use super::AttentionBatch;
 
 /// The comparison series (paper Figures 5/6/8 legends → our analogs).
 /// `Hash` because the coordinator's preprocessing cache keys on
@@ -77,141 +83,102 @@ impl Backend {
             Backend::CpuCsr,
         ]
     }
+
+    /// The fused-driver configuration for fused-family backends — the ONE
+    /// backend→options mapping, shared by graph planning (`prepare_on`)
+    /// and prebuilt-BSB planning (`Plan::from_bsb`).
+    pub(crate) fn fused_opts(self) -> Option<FusedOpts> {
+        Some(match self {
+            Backend::Fused3S => FusedOpts::default(),
+            Backend::Fused3SNoReorder => {
+                FusedOpts { order: Order::Natural, ..FusedOpts::default() }
+            }
+            Backend::Fused3SSplitR => {
+                FusedOpts { variant: "splitr", ..FusedOpts::default() }
+            }
+            Backend::DfGnnLike => {
+                FusedOpts { precision: "f32", ..FusedOpts::default() }
+            }
+            _ => return None,
+        })
+    }
+
+    /// The softmax variant for unfused-family backends.
+    pub(crate) fn unfused_stable(self) -> Option<bool> {
+        match self {
+            Backend::UnfusedNaive => Some(false),
+            Backend::UnfusedStable => Some(true),
+            _ => None,
+        }
+    }
 }
 
-/// A prepared (graph-specialised) driver for any backend.
+/// A prepared (graph-specialised) driver for any backend.  The variants
+/// are the [`SparseAttentionOp`] implementations; `Driver` itself
+/// implements the trait by dispatching to whichever it wraps.
 pub enum Driver {
     Fused(FusedDriver),
     Unfused(UnfusedDriver),
     Dense(DenseDriver),
-    CpuCsr { graph: CsrGraph, threads: usize },
+    CpuCsr(CpuCsrDriver),
 }
 
 impl Driver {
-    /// Preprocess `g` for `backend` (the paper's per-graph preprocessing).
-    pub fn prepare(rt: &Runtime, g: &CsrGraph, backend: Backend) -> Result<Driver> {
-        Self::prepare_with(rt.manifest(), g, backend)
-    }
-
-    /// Preprocess without a live PJRT runtime (used by the coordinator's
-    /// worker pool, which only needs the manifest's bucket configuration).
-    pub fn prepare_with(
-        man: &Manifest,
-        g: &CsrGraph,
-        backend: Backend,
-    ) -> Result<Driver> {
-        Self::prepare_on(man, g, backend, &Engine::serial())
-    }
-
-    /// Preprocess with BSB construction sharded across the engine's worker
-    /// pool (bit-identical to the serial build).  The CPU-CSR baseline
-    /// inherits the engine's thread count.
+    /// Preprocess `g` for `backend` (the paper's per-graph preprocessing),
+    /// sharding the BSB build across the engine's worker pool
+    /// (bit-identical to the serial build).  The CPU-CSR baseline inherits
+    /// the engine's thread count.  This is the single driver constructor —
+    /// callers go through [`Plan::new`](super::Plan::new), which wraps it.
     pub fn prepare_on(
         man: &Manifest,
         g: &CsrGraph,
         backend: Backend,
         engine: &Engine,
     ) -> Result<Driver> {
+        if let Some(opts) = backend.fused_opts() {
+            return Ok(Driver::Fused(FusedDriver::new_with(man, g, opts, engine)?));
+        }
+        if let Some(stable) = backend.unfused_stable() {
+            return Ok(Driver::Unfused(UnfusedDriver::new_with(
+                man,
+                g,
+                stable,
+                Order::ByTcbDesc,
+                engine,
+            )?));
+        }
         Ok(match backend {
-            Backend::Fused3S => Driver::Fused(FusedDriver::new_with(
-                man,
-                g,
-                FusedOpts::default(),
-                engine,
-            )?),
-            Backend::Fused3SNoReorder => Driver::Fused(FusedDriver::new_with(
-                man,
-                g,
-                FusedOpts { order: Order::Natural, ..FusedOpts::default() },
-                engine,
-            )?),
-            Backend::Fused3SSplitR => Driver::Fused(FusedDriver::new_with(
-                man,
-                g,
-                FusedOpts { variant: "splitr", ..FusedOpts::default() },
-                engine,
-            )?),
-            Backend::DfGnnLike => Driver::Fused(FusedDriver::new_with(
-                man,
-                g,
-                FusedOpts { precision: "f32", ..FusedOpts::default() },
-                engine,
-            )?),
-            Backend::UnfusedNaive => Driver::Unfused(UnfusedDriver::new_with(
-                man,
-                g,
-                false,
-                Order::ByTcbDesc,
-                engine,
-            )?),
-            Backend::UnfusedStable => Driver::Unfused(UnfusedDriver::new_with(
-                man,
-                g,
-                true,
-                Order::ByTcbDesc,
-                engine,
-            )?),
             Backend::Dense => Driver::Dense(DenseDriver::new(man, g)?),
-            Backend::CpuCsr => Driver::CpuCsr {
-                graph: g.clone(),
-                threads: engine.policy.threads,
-            },
+            Backend::CpuCsr => Driver::CpuCsr(CpuCsrDriver::new(
+                g.clone(),
+                engine.policy.threads,
+            )),
+            // Fused/unfused families are handled above.
+            _ => unreachable!("backend family not covered"),
         })
     }
+}
 
-    /// Execute the 3S computation (serial reference policy).
-    pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
-        self.run_with(rt, x, &Engine::serial())
-    }
-
-    /// Execute through the host execution engine (bit-identical to
-    /// [`Driver::run`] for every policy).
-    pub fn run_with(
+impl SparseAttentionOp for Driver {
+    fn execute(
         &self,
-        rt: &Runtime,
-        x: &AttentionProblem,
-        engine: &Engine,
-    ) -> Result<Vec<f32>> {
+        ctx: &mut ExecCtx<'_>,
+        x: &AttentionBatch<'_>,
+    ) -> Result<Vec<f32>, AttnError> {
         match self {
-            Driver::Fused(d) => d.run_with(rt, x, engine),
-            Driver::Unfused(d) => d.run_with(rt, x, engine),
-            Driver::Dense(d) => d.run(rt, x),
-            Driver::CpuCsr { graph, threads } => Ok(cpu_csr::run(graph, x, *threads)),
+            Driver::Fused(d) => d.execute(ctx, x),
+            Driver::Unfused(d) => d.execute(ctx, x),
+            Driver::Dense(d) => d.execute(ctx, x),
+            Driver::CpuCsr(d) => d.execute(ctx, x),
         }
     }
 
-    /// Execute with **no PJRT runtime**: fused/unfused dispatch through the
-    /// offline host-kernel emulation, CPU-CSR runs natively.  This is the
-    /// coordinator's `HostEmulation` executor (tests, benches, cold CI);
-    /// the dense fallback has no host emulation and reports so.
-    pub fn run_offline(
-        &self,
-        x: &AttentionProblem,
-        engine: &Engine,
-    ) -> Result<Vec<f32>> {
-        use crate::exec::HostExecutor;
+    fn executables(&self, d: usize) -> Vec<String> {
         match self {
-            Driver::Fused(d) => {
-                d.run_exec(x, engine, &mut HostExecutor::new(&engine.pool))
-            }
-            Driver::Unfused(d) => {
-                d.run_exec(x, engine, &mut HostExecutor::new(&engine.pool))
-            }
-            Driver::Dense(_) => anyhow::bail!(
-                "dense backend has no offline host emulation (needs artifacts)"
-            ),
-            Driver::CpuCsr { graph, threads } => Ok(cpu_csr::run(graph, x, *threads)),
-        }
-    }
-
-    /// Names of executables this driver dispatches (for warmup outside the
-    /// timed region).
-    pub fn executables(&self, d: usize) -> Vec<String> {
-        match self {
-            Driver::Fused(dr) => dr.executables(d),
-            Driver::Unfused(dr) => dr.executables(d),
-            Driver::Dense(dr) => dr.executables(d),
-            Driver::CpuCsr { .. } => vec![],
+            Driver::Fused(dr) => dr.artifact_names(d),
+            Driver::Unfused(dr) => dr.artifact_names(d),
+            Driver::Dense(dr) => dr.artifact_names(d),
+            Driver::CpuCsr(_) => vec![],
         }
     }
 }

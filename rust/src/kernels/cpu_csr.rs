@@ -8,7 +8,48 @@
 
 use crate::graph::CsrGraph;
 
-use super::AttentionProblem;
+use super::op::{AttnError, ExecCtx, SparseAttentionOp};
+use super::{AttentionBatch, AttentionProblem};
+
+/// The prepared CPU-CSR baseline: no format conversion at all — the plan
+/// is the graph itself plus a thread count (inherited from the planning
+/// engine's pool width).
+pub struct CpuCsrDriver {
+    pub graph: CsrGraph,
+    pub threads: usize,
+}
+
+impl CpuCsrDriver {
+    pub fn new(graph: CsrGraph, threads: usize) -> CpuCsrDriver {
+        CpuCsrDriver { graph, threads }
+    }
+}
+
+impl SparseAttentionOp for CpuCsrDriver {
+    fn execute(
+        &self,
+        _ctx: &mut ExecCtx<'_>,
+        x: &AttentionBatch<'_>,
+    ) -> Result<Vec<f32>, AttnError> {
+        x.validate()?;
+        if self.graph.n != x.n {
+            return Err(AttnError::BadShape(format!(
+                "problem n={} != prepared n={}",
+                x.n, self.graph.n
+            )));
+        }
+        // Heads run back to back (each head's row loop already shards
+        // across threads); per-head results are the single-head runs
+        // verbatim, so a multi-head call bit-matches a per-head loop.
+        let per_head = x.n * x.dv;
+        let mut out = vec![0.0f32; x.out_len()];
+        for h in 0..x.heads {
+            let oh = run(&self.graph, &x.head(h), self.threads);
+            out[h * per_head..(h + 1) * per_head].copy_from_slice(&oh);
+        }
+        Ok(out)
+    }
+}
 
 /// Run the full 3S over CSR.  `threads` = 1 gives the deterministic
 /// reference; more threads shard rows.

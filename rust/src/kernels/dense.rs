@@ -8,7 +8,8 @@ use anyhow::{bail, Result};
 use crate::graph::CsrGraph;
 use crate::runtime::{Manifest, Runtime, Tensor};
 
-use super::AttentionProblem;
+use super::op::{AttnError, ExecCtx, SparseAttentionOp};
+use super::{AttentionBatch, AttentionProblem};
 
 pub struct DenseDriver {
     /// Padded size (a compiled dense_n bucket).
@@ -41,10 +42,12 @@ impl DenseDriver {
         Ok(DenseDriver { n_pad, mask, n: g.n })
     }
 
-    pub fn executables(&self, d: usize) -> Vec<String> {
+    pub fn artifact_names(&self, d: usize) -> Vec<String> {
         vec![Manifest::dense_name(self.n_pad, d)]
     }
 
+    /// One whole-graph dense dispatch for a single head (the compiled
+    /// executable is per-head; [`SparseAttentionOp::execute`] loops heads).
     pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
         if x.n != self.n {
             bail!("problem n={} != prepared n={}", x.n, self.n);
@@ -75,6 +78,36 @@ impl DenseDriver {
         )?;
         let o = outs[0].as_f32()?;
         Ok(o[..x.n * x.dv].to_vec())
+    }
+}
+
+impl SparseAttentionOp for DenseDriver {
+    fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        x: &AttentionBatch<'_>,
+    ) -> Result<Vec<f32>, AttnError> {
+        x.validate()?;
+        let rt = match *ctx {
+            ExecCtx::Pjrt { rt, .. } => rt,
+            ExecCtx::Host { .. } => {
+                return Err(AttnError::Unsupported(
+                    "dense backend has no offline host emulation (needs artifacts)"
+                        .into(),
+                ));
+            }
+        };
+        let per_head = x.n * x.dv;
+        let mut out = vec![0.0f32; x.out_len()];
+        for h in 0..x.heads {
+            let oh = self.run(rt, &x.head(h)).map_err(AttnError::from)?;
+            out[h * per_head..(h + 1) * per_head].copy_from_slice(&oh);
+        }
+        Ok(out)
+    }
+
+    fn executables(&self, d: usize) -> Vec<String> {
+        self.artifact_names(d)
     }
 }
 

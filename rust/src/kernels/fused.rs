@@ -7,14 +7,15 @@ use anyhow::{bail, Context, Result};
 use crate::bsb::bucket::{self, Plan};
 use crate::bsb::reorder::Order;
 use crate::bsb::{self, Bsb};
-use crate::exec::{CallExecutor, Engine};
+use crate::exec::{CallExecutor, Engine, HostExecutor};
 use crate::graph::CsrGraph;
 use crate::runtime::buffers::Arg;
 use crate::runtime::{Manifest, Runtime};
 use crate::{BITMAP_WORDS, TCB_C, TCB_R};
 
 use super::gather::{self, CallBuffers};
-use super::AttentionProblem;
+use super::op::{AttnError, ExecCtx, SparseAttentionOp};
+use super::{AttentionBatch, AttentionProblem};
 
 /// Driver configuration (the ablation axes of §4.3).
 #[derive(Clone, Copy, Debug)]
@@ -93,7 +94,7 @@ impl FusedDriver {
     }
 
     /// Artifact names this driver will dispatch (for warmup).
-    pub fn executables(&self, d: usize) -> Vec<String> {
+    pub fn artifact_names(&self, d: usize) -> Vec<String> {
         let mut names: Vec<String> = self
             .plan
             .calls
@@ -115,45 +116,33 @@ impl FusedDriver {
         names
     }
 
-    /// Run the fused 3S over the prepared graph (serial reference policy).
-    pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
-        self.run_with(rt, x, &Engine::serial())
-    }
-
-    /// Run through the host execution engine: slot-parallel gathers, the
-    /// double-buffered pipeline, PJRT dispatch on the calling thread.
-    /// Bit-identical to [`FusedDriver::run`] for every policy.
-    pub fn run_with(
+    /// Engine-driven execution of every head against any [`CallExecutor`]
+    /// — the PJRT runtime online, or `exec::HostExecutor` offline
+    /// (benches/tests).  Head-major output; bit-identical across engine
+    /// policies, and bit-identical to a per-head loop.
+    pub fn execute_with<E: CallExecutor>(
         &self,
-        rt: &Runtime,
-        x: &AttentionProblem,
-        engine: &Engine,
-    ) -> Result<Vec<f32>> {
-        let mut exec = PjrtFused { rt, opts: self.opts };
-        self.run_exec(x, engine, &mut exec)
-    }
-
-    /// Engine-driven execution against any [`CallExecutor`] — the PJRT
-    /// runtime online, or `exec::HostExecutor` offline (benches/tests).
-    pub fn run_exec<E: CallExecutor>(
-        &self,
-        x: &AttentionProblem,
+        x: &AttentionBatch,
         engine: &Engine,
         exec: &mut E,
     ) -> Result<Vec<f32>> {
         if x.d != x.dv {
             bail!("fused driver requires d == dv (GAT path uses model::gat)");
         }
-        let mut out = vec![0.0f32; x.n * x.dv];
+        let mut out = vec![0.0f32; x.out_len()];
 
-        // Regular bucketed dispatches, pipelined in schedule order.
+        // Regular bucketed dispatches, pipelined in schedule order with
+        // heads inner (bitmaps staged once per call, not once per head).
         engine.run_bucketed(
             &self.plan.calls,
             &self.bsb,
             x,
             self.batch,
             &mut out,
-            |call, bufs| exec.bucket(call.t_bucket, bufs, x, self.batch),
+            |call, h, bufs| {
+                let xh = x.head(h);
+                exec.bucket(call.t_bucket, bufs, &xh, self.batch)
+            },
         )?;
 
         // Oversize row windows: chunked through the partial executable.
@@ -165,12 +154,13 @@ impl FusedDriver {
 
     fn run_chunked_exec<E: CallExecutor>(
         &self,
-        x: &AttentionProblem,
+        x: &AttentionBatch,
         engine: &Engine,
         exec: &mut E,
         out: &mut [f32],
     ) -> Result<()> {
-        // Work items: (rw, chunk index), batched to the call width.
+        // Work items: (rw, chunk index), batched to the call width, then
+        // swept per head (chunk-batch major, heads inner).
         let items: Vec<(u32, usize)> = self
             .plan
             .chunked
@@ -178,33 +168,40 @@ impl FusedDriver {
             .flat_map(|c| (0..c.n_chunks).map(move |i| (c.rw, i)))
             .collect();
         let batches: Vec<&[(u32, usize)]> = items.chunks(self.batch).collect();
-        // Per-RW merge state, keyed by rw id.  The pipeline commits scatter
-        // in batch order, so the merge sequence (and hence the f32 result)
-        // is identical for every policy.
-        let mut merge: std::collections::HashMap<u32, MergeState> =
+        let heads = x.heads;
+        // Per-(head, RW) merge state.  The pipeline commits scatter in item
+        // order, so each head's merge sequence — and hence its f32 result —
+        // is identical to a single-head run under every policy.
+        let mut merge: std::collections::HashMap<(usize, u32), MergeState> =
             std::collections::HashMap::new();
         engine.run_pipeline(
-            batches.len(),
-            |bi, bufs| {
+            batches.len() * heads,
+            |i, bufs| {
+                let (bi, h) = (i / heads, i % heads);
+                let xh = x.head(h);
                 gather::gather_partial_call_with(
                     &engine.pool,
                     bufs,
                     batches[bi],
                     self.chunk_t,
                     &self.bsb,
-                    x,
+                    &xh,
                     self.batch,
                 );
             },
-            |_, bufs| {
-                let (o, m, l) = exec.partial(self.chunk_t, bufs, x, self.batch)?;
+            |i, bufs| {
+                let h = i % heads;
+                let xh = x.head(h);
+                let (o, m, l) =
+                    exec.partial(self.chunk_t, bufs, &xh, self.batch)?;
                 Ok(vec![o, m, l])
             },
-            |bi, outs| {
+            |i, outs| {
+                let (bi, h) = (i / heads, i % heads);
                 let (o, m, l) = (&outs[0], &outs[1], &outs[2]);
                 for (slot, &(rw, _)) in batches[bi].iter().enumerate() {
                     let st = merge
-                        .entry(rw)
+                        .entry((h, rw))
                         .or_insert_with(|| MergeState::new(x.dv));
                     st.merge(
                         &o[slot * TCB_R * x.dv..(slot + 1) * TCB_R * x.dv],
@@ -214,10 +211,41 @@ impl FusedDriver {
                 }
             },
         )?;
-        for (rw, st) in merge {
-            gather::scatter_slot(out, &st.o, 0, rw as usize, x.n, x.dv);
+        let per_head = x.n * x.dv;
+        for ((h, rw), st) in merge {
+            let out_h = &mut out[h * per_head..(h + 1) * per_head];
+            gather::scatter_slot(out_h, &st.o, 0, rw as usize, x.n, x.dv);
         }
         Ok(())
+    }
+}
+
+impl SparseAttentionOp for FusedDriver {
+    fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        x: &AttentionBatch<'_>,
+    ) -> Result<Vec<f32>, AttnError> {
+        x.validate()?;
+        if x.d != x.dv {
+            return Err(AttnError::BadShape(
+                "fused driver requires d == dv (GAT path uses model::gat)".into(),
+            ));
+        }
+        match *ctx {
+            ExecCtx::Pjrt { rt, engine } => {
+                let mut exec = PjrtFused { rt, opts: self.opts };
+                self.execute_with(x, engine, &mut exec).map_err(AttnError::from)
+            }
+            ExecCtx::Host { engine } => {
+                let mut exec = HostExecutor::new(&engine.pool);
+                self.execute_with(x, engine, &mut exec).map_err(AttnError::from)
+            }
+        }
+    }
+
+    fn executables(&self, d: usize) -> Vec<String> {
+        self.artifact_names(d)
     }
 }
 

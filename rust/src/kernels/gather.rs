@@ -34,12 +34,20 @@ impl CallBuffers {
     /// the q/k/v memset removes the dominant per-call host cost on large
     /// buckets (up to ~16 MB/call at t=128; EXPERIMENTS.md §Perf).
     pub fn reset(&mut self, batch: usize, t: usize, d: usize, dv: usize) {
-        resize_only(&mut self.q, batch * TCB_R * d);
-        resize_only(&mut self.k, batch * t * TCB_C * d);
-        resize_only(&mut self.v, batch * t * TCB_C * dv);
+        self.reset_features(batch, t, d, dv);
         // Bitmaps must be exact: a stale 1-bit would unmask a stale lane.
         self.bm.clear();
         self.bm.resize(batch * t * BITMAP_WORDS, 0);
+    }
+
+    /// Resize only the q/k/v feature buffers (same stale-value soundness
+    /// argument as [`CallBuffers::reset`]); the caller supplies the exact
+    /// bitmap words separately — the multi-head path stages them once per
+    /// call per batch and memcpys them in per head.
+    pub fn reset_features(&mut self, batch: usize, t: usize, d: usize, dv: usize) {
+        resize_only(&mut self.q, batch * TCB_R * d);
+        resize_only(&mut self.k, batch * t * TCB_C * d);
+        resize_only(&mut self.v, batch * t * TCB_C * dv);
     }
 }
 
@@ -110,6 +118,34 @@ pub fn gather_kv_into(
     }
 }
 
+/// Fill slot-local K̂/V̂ feature stacks only (no bitmap writes) for TCBs
+/// `[t_lo, t_hi)` of `rw` — the per-head half of a gather whose
+/// head-invariant bitmaps were staged by [`stage_call_bitmaps`].
+pub fn gather_kv_features_into(
+    k: &mut [f32],
+    v: &mut [f32],
+    bsb: &Bsb,
+    rw: usize,
+    t_lo: usize,
+    t_hi: usize,
+    x: &AttentionProblem,
+) {
+    let (d, dv) = (x.d, x.dv);
+    for (jj, j) in (t_lo..t_hi).enumerate() {
+        let cols = bsb.tcb_cols(rw, j);
+        for (ci, &col) in cols.iter().enumerate() {
+            if col == PAD_COL {
+                continue;
+            }
+            let col = col as usize;
+            let krow = (jj * TCB_C + ci) * d;
+            k[krow..krow + d].copy_from_slice(&x.k[col * d..(col + 1) * d]);
+            let vrow = (jj * TCB_C + ci) * dv;
+            v[vrow..vrow + dv].copy_from_slice(&x.v[col * dv..(col + 1) * dv]);
+        }
+    }
+}
+
 /// Fill one slot's K̂/V̂ stacks + bitmaps for TCBs `[t_lo, t_hi)` of `rw`,
 /// padded to `t_cap` TCBs, inside packed multi-slot buffers.
 #[allow(clippy::too_many_arguments)]
@@ -172,6 +208,57 @@ pub fn gather_call_with(
     });
 }
 
+/// Stage a regular call's TCB bitmaps: a contiguous `batch * t_cap *
+/// BITMAP_WORDS` i32 buffer laid out exactly like `CallBuffers::bm`
+/// (unoccupied slots and padding TCBs zero).  The bitmaps depend only on
+/// the BSB structure — never on Q/K/V — so a multi-head batch computes
+/// this **once per call per batch** and memcpys it into each head's
+/// buffers instead of re-walking the BSB per head.
+pub fn stage_call_bitmaps(
+    bsb: &Bsb,
+    rws: &[u32],
+    t_cap: usize,
+    batch: usize,
+) -> Vec<i32> {
+    let mut bm = vec![0i32; batch * t_cap * BITMAP_WORDS];
+    for (slot, &rw) in rws.iter().enumerate() {
+        let rw = rw as usize;
+        for j in 0..bsb.rw_tcbs(rw) {
+            let words = bitmap::as_i32(bsb.tcb_bitmap(rw, j));
+            let base = (slot * t_cap + j) * BITMAP_WORDS;
+            bm[base..base + BITMAP_WORDS].copy_from_slice(&words);
+        }
+    }
+    bm
+}
+
+/// Gather a whole regular call for one head with pre-staged bitmaps:
+/// the head-invariant bitmap buffer is copied wholesale; the per-head
+/// Q/K̂/V̂ feature gathers shard across the pool.  Produces buffers
+/// bit-identical to [`gather_call_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn gather_call_staged(
+    pool: &WorkerPool,
+    bufs: &mut CallBuffers,
+    rws: &[u32],
+    t_bucket: usize,
+    staged_bm: &[i32],
+    bsb: &Bsb,
+    x: &AttentionProblem,
+    batch: usize,
+) {
+    bufs.reset_features(batch, t_bucket, x.d, x.dv);
+    debug_assert_eq!(staged_bm.len(), batch * t_bucket * BITMAP_WORDS);
+    bufs.bm.clear();
+    bufs.bm.extend_from_slice(staged_bm);
+    let slots = split_feature_slots(bufs, rws.len(), t_bucket, x);
+    pool.run_items(slots, |(slot, q, k, v)| {
+        let rw = rws[slot] as usize;
+        gather_q_into(q, rw, x);
+        gather_kv_features_into(k, v, bsb, rw, 0, bsb.rw_tcbs(rw), x);
+    });
+}
+
 /// Gather one batch of chunked-RW work items `(rw, chunk index)` at chunk
 /// capacity `chunk_t`, sharding slots across the pool.
 pub fn gather_partial_call_with(
@@ -200,6 +287,29 @@ pub fn gather_partial_call_with(
 /// slots at TCB capacity `t_cap`.
 type SlotViews<'b> =
     Vec<(usize, &'b mut [f32], &'b mut [f32], &'b mut [f32], &'b mut [i32])>;
+
+/// Per-slot disjoint q/k/v views (no bitmap) for staged-bitmap gathers.
+type FeatureSlotViews<'b> =
+    Vec<(usize, &'b mut [f32], &'b mut [f32], &'b mut [f32])>;
+
+fn split_feature_slots<'b>(
+    bufs: &'b mut CallBuffers,
+    n_slots: usize,
+    t_cap: usize,
+    x: &AttentionProblem,
+) -> FeatureSlotViews<'b> {
+    let CallBuffers { q, k, v, .. } = bufs;
+    let views: FeatureSlotViews<'b> = q
+        .chunks_mut(TCB_R * x.d)
+        .zip(k.chunks_mut(t_cap * TCB_C * x.d))
+        .zip(v.chunks_mut(t_cap * TCB_C * x.dv))
+        .take(n_slots)
+        .enumerate()
+        .map(|(slot, ((q, k), v))| (slot, q, k, v))
+        .collect();
+    assert_eq!(views.len(), n_slots, "call has more slots than batch capacity");
+    views
+}
 
 fn split_slots<'b>(
     bufs: &'b mut CallBuffers,
@@ -328,6 +438,30 @@ mod tests {
         assert_eq!(out[17 * dv + 3], o[dv + 3]);
         // rows 0..16 untouched
         assert!(out[..16 * dv].iter().all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn staged_gather_bit_matches_plain_gather() {
+        let g = generators::barabasi_albert(200, 4, 13).with_self_loops();
+        let bsb = build(&g);
+        let d = 8;
+        let (q, k, v) = problem_data(200, d);
+        let x = AttentionProblem { n: 200, d, dv: d, q: &q, k: &k, v: &v, scale: 0.5 };
+        let t_cap = (0..bsb.num_rw).map(|i| bsb.rw_tcbs(i)).max().unwrap();
+        let rws: Vec<u32> = (0..bsb.num_rw as u32).collect();
+        let pool = WorkerPool::new(2);
+        let mut plain = CallBuffers::default();
+        gather_call_with(&pool, &mut plain, &rws, t_cap, &bsb, &x, rws.len());
+        let staged_bm = stage_call_bitmaps(&bsb, &rws, t_cap, rws.len());
+        assert_eq!(staged_bm, plain.bm, "staged bitmaps must match gathered");
+        let mut staged = CallBuffers::default();
+        gather_call_staged(
+            &pool, &mut staged, &rws, t_cap, &staged_bm, &bsb, &x, rws.len(),
+        );
+        assert_eq!(staged.q, plain.q);
+        assert_eq!(staged.k, plain.k);
+        assert_eq!(staged.v, plain.v);
+        assert_eq!(staged.bm, plain.bm);
     }
 
     #[test]

@@ -1,7 +1,22 @@
-//! Host-side kernel drivers: each one runs the 3S pattern
-//! `O = softmax(QKᵀ·scale ⊙ A) V` end-to-end over a graph, through a
-//! different execution strategy.  These are the series of the paper's
-//! Figures 5/6:
+//! Host-side kernels: the plan/batch API over the 3S pattern
+//! `O = softmax(QKᵀ·scale ⊙ A) V`.
+//!
+//! The public surface has two halves:
+//!
+//! * **Problems** — [`AttentionBatch`]: `heads` independent Q/K/V problems
+//!   sharing one graph (head-major layout), the unit every kernel entry
+//!   point consumes.  [`AttentionProblem`] is the single-head view
+//!   ([`AttentionBatch::single`] adapts one into a one-head batch with zero
+//!   copies; [`AttentionBatch::head`] slices one head back out).
+//! * **Plans** — [`Plan`] is a graph-specialised, ready-to-execute op
+//!   produced by [`Backend::plan`] (or [`Plan::from_bsb`] when the BSB is
+//!   already built).  [`Plan::execute`] runs every head of a batch through
+//!   an [`ExecCtx`] — the PJRT runtime online or the host emulation
+//!   offline — amortizing the BSB structure across all heads.  The
+//!   [`SparseAttentionOp`] trait is the seam each driver implements.
+//!
+//! The drivers behind the trait are the series of the paper's Figures
+//! 5/6:
 //!
 //! * [`fused::FusedDriver`] — **Fused3S** (the paper's system): BSB
 //!   compaction + bucketed batching + the fused Pallas kernel; bf16 mixed
@@ -13,8 +28,8 @@
 //!   host memory; naive- and stable-softmax variants.
 //! * [`dense::DenseDriver`] — whole-graph dense masked attention (the
 //!   framework dense fallback; also the graph-scale oracle).
-//! * [`cpu_csr`] — scalar CSR gather-scatter on the CPU (the PyG/DGL
-//!   framework-kernel analog), single- or multi-threaded.
+//! * [`cpu_csr::CpuCsrDriver`] — scalar CSR gather-scatter on the CPU (the
+//!   PyG/DGL framework-kernel analog), single- or multi-threaded.
 //! * [`reference`] — O(N²d) dense host reference used only for verification.
 
 pub mod backend;
@@ -23,12 +38,19 @@ pub mod cpu_csr;
 pub mod dense;
 pub mod fused;
 pub mod gather;
+pub mod op;
 pub mod reference;
 pub mod unfused;
 
 pub use backend::{Backend, Driver};
+pub use cpu_csr::CpuCsrDriver;
+pub use op::{AttnError, ExecCtx, Plan, SparseAttentionOp};
 
 /// A 3S attention problem over a graph's node features (row-major slices).
+///
+/// This is the **single-head view**: the kernel entry points consume
+/// [`AttentionBatch`]; drivers slice per-head problems back out of a batch
+/// with [`AttentionBatch::head`] when staging each head's buffers.
 #[derive(Clone, Copy, Debug)]
 pub struct AttentionProblem<'a> {
     pub n: usize,
@@ -56,5 +78,163 @@ impl<'a> AttentionProblem<'a> {
         assert_eq!(k.len(), n * d);
         assert_eq!(v.len(), n * d);
         AttentionProblem { n, d, dv: d, q, k, v, scale }
+    }
+}
+
+/// A head-batched 3S attention problem: `heads` independent Q/K/V problems
+/// over the **same graph**, head-major layout (head `h`'s rows occupy
+/// `q[h*n*d .. (h+1)*n*d]`, and likewise for `k`/`v` at their dims).
+///
+/// This is the unit [`Plan::execute`] consumes.  Batching heads is the
+/// lever behind the paper's §4.5 end-to-end result: one BSB build, one
+/// bucket plan and one set of staged TCB bitmaps are amortized over every
+/// head, and the host pipeline overlaps head *h+1*'s gather with head
+/// *h*'s dispatch instead of idling between per-head calls.
+///
+/// Output layout is head-major to match: `heads × n × dv`, head `h`'s
+/// rows at `out[h*n*dv .. (h+1)*n*dv]`.
+#[derive(Clone, Copy, Debug)]
+pub struct AttentionBatch<'a> {
+    pub n: usize,
+    /// Q/K feature dim (per head).
+    pub d: usize,
+    /// V / output feature dim (= d except for GAT-style rank-2 scores).
+    pub dv: usize,
+    /// Number of heads sharing the graph (≥ 1).
+    pub heads: usize,
+    /// Head-major Q: `heads × n × d`.
+    pub q: &'a [f32],
+    /// Head-major K: `heads × n × d`.
+    pub k: &'a [f32],
+    /// Head-major V: `heads × n × dv`.
+    pub v: &'a [f32],
+    /// Score scale shared by every head (1/sqrt(d) for transformer heads).
+    pub scale: f32,
+}
+
+impl<'a> AttentionBatch<'a> {
+    /// Build a head-batched problem, asserting buffer sizes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n: usize,
+        d: usize,
+        dv: usize,
+        heads: usize,
+        q: &'a [f32],
+        k: &'a [f32],
+        v: &'a [f32],
+        scale: f32,
+    ) -> Self {
+        assert!(heads > 0, "a batch needs at least one head");
+        assert_eq!(q.len(), heads * n * d);
+        assert_eq!(k.len(), heads * n * d);
+        assert_eq!(v.len(), heads * n * dv);
+        AttentionBatch { n, d, dv, heads, q, k, v, scale }
+    }
+
+    /// Zero-copy adapter: a single-head problem *is* a one-head batch.
+    pub fn single(x: &AttentionProblem<'a>) -> AttentionBatch<'a> {
+        AttentionBatch {
+            n: x.n,
+            d: x.d,
+            dv: x.dv,
+            heads: 1,
+            q: x.q,
+            k: x.k,
+            v: x.v,
+            scale: x.scale,
+        }
+    }
+
+    /// Zero-copy view of head `h` as a single-head problem.
+    pub fn head(&self, h: usize) -> AttentionProblem<'a> {
+        debug_assert!(h < self.heads);
+        let qk = self.n * self.d;
+        let vl = self.n * self.dv;
+        AttentionProblem {
+            n: self.n,
+            d: self.d,
+            dv: self.dv,
+            q: &self.q[h * qk..(h + 1) * qk],
+            k: &self.k[h * qk..(h + 1) * qk],
+            v: &self.v[h * vl..(h + 1) * vl],
+            scale: self.scale,
+        }
+    }
+
+    /// Length of the head-major output this batch produces.
+    pub fn out_len(&self) -> usize {
+        self.heads * self.n * self.dv
+    }
+
+    /// Structured shape validation (the non-panicking sibling of
+    /// [`AttentionBatch::new`]'s asserts).
+    pub fn validate(&self) -> Result<(), AttnError> {
+        if self.heads == 0 {
+            return Err(AttnError::BadShape("heads must be ≥ 1".into()));
+        }
+        let want_qk = self.heads * self.n * self.d;
+        let want_v = self.heads * self.n * self.dv;
+        for (name, len, want) in [
+            ("q", self.q.len(), want_qk),
+            ("k", self.k.len(), want_qk),
+            ("v", self.v.len(), want_v),
+        ] {
+            if len != want {
+                return Err(AttnError::BadShape(format!(
+                    "{name}: expected {want} elements (heads={} × n={} × dim), got {len}",
+                    self.heads, self.n
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_is_one_head_zero_copy() {
+        let q = vec![1.0f32; 8];
+        let k = vec![2.0f32; 8];
+        let v = vec![3.0f32; 8];
+        let x = AttentionProblem::new(4, 2, &q, &k, &v, 0.5);
+        let b = AttentionBatch::single(&x);
+        assert_eq!(b.heads, 1);
+        assert_eq!(b.out_len(), 8);
+        assert!(std::ptr::eq(b.q, x.q));
+        let h0 = b.head(0);
+        assert!(std::ptr::eq(h0.q, x.q));
+        assert_eq!(h0.scale, 0.5);
+    }
+
+    #[test]
+    fn head_slices_are_disjoint_and_ordered() {
+        let n = 3;
+        let d = 2;
+        let dv = 4;
+        let heads = 2;
+        let q: Vec<f32> = (0..heads * n * d).map(|i| i as f32).collect();
+        let k = q.clone();
+        let v: Vec<f32> = (0..heads * n * dv).map(|i| i as f32).collect();
+        let b = AttentionBatch::new(n, d, dv, heads, &q, &k, &v, 1.0);
+        assert_eq!(b.head(0).q, &q[..n * d]);
+        assert_eq!(b.head(1).q, &q[n * d..]);
+        assert_eq!(b.head(1).v, &v[n * dv..]);
+        assert_eq!(b.head(1).dv, dv);
+    }
+
+    #[test]
+    fn validate_reports_bad_shapes() {
+        let q = vec![0.0f32; 8];
+        let k = vec![0.0f32; 8];
+        let v = vec![0.0f32; 7];
+        let b = AttentionBatch { n: 4, d: 2, dv: 2, heads: 1, q: &q, k: &k, v: &v, scale: 1.0 };
+        assert!(matches!(b.validate(), Err(AttnError::BadShape(_))));
+        let v = vec![0.0f32; 8];
+        let b = AttentionBatch { n: 4, d: 2, dv: 2, heads: 1, q: &q, k: &k, v: &v, scale: 1.0 };
+        assert!(b.validate().is_ok());
     }
 }

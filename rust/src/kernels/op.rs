@@ -1,0 +1,244 @@
+//! The unified plan-based op API: [`AttnError`], [`ExecCtx`],
+//! [`SparseAttentionOp`] and [`Plan`].
+//!
+//! Callers no longer pick among per-driver entry points: a [`Backend`]
+//! plans a graph into a [`Plan`] (the per-graph preprocessing — BSB build,
+//! reordering, bucket plan), and the plan executes head-batched
+//! [`AttentionBatch`] problems through an [`ExecCtx`] — one seam over the
+//! PJRT runtime, the offline host emulation and the pipelined
+//! [`Engine`].  The coordinator caches `Arc<Plan>`s by graph fingerprint;
+//! the models hold one plan per graph and issue one multi-head call per
+//! layer.
+
+use crate::bsb::reorder::Order;
+use crate::bsb::Bsb;
+use crate::exec::Engine;
+use crate::graph::CsrGraph;
+use crate::runtime::{Manifest, Runtime};
+
+use super::backend::{Backend, Driver};
+use super::fused::FusedDriver;
+use super::unfused::{UnfusedDriver, UnfusedError};
+use super::AttentionBatch;
+
+/// Structured failure of the attention op API — what
+/// [`AttnResponse.result`](crate::coordinator::AttnResponse) and
+/// [`Plan::execute`] carry instead of stringly-typed errors.
+///
+/// Display renders the carried message verbatim, so response/log lines are
+/// byte-identical to the previous `Result<_, String>` shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AttnError {
+    /// Input buffers inconsistent with the declared (n, d, dv, heads).
+    BadShape(String),
+    /// Per-graph preprocessing (plan construction) failed — e.g. the
+    /// unfused baseline's oversize-row-window refusal (the OOM analog).
+    Prepare(String),
+    /// Kernel execution failed (missing artifact, dispatch error, …).
+    Execute(String),
+    /// The op cannot run under the requested context (e.g. the dense
+    /// fallback has no offline host emulation).
+    Unsupported(String),
+    /// The serving queue shut down before the request could complete.
+    QueueClosed,
+}
+
+impl std::fmt::Display for AttnError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AttnError::BadShape(m)
+            | AttnError::Prepare(m)
+            | AttnError::Execute(m)
+            | AttnError::Unsupported(m) => f.write_str(m),
+            AttnError::QueueClosed => f.write_str("coordinator is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for AttnError {}
+
+impl From<UnfusedError> for AttnError {
+    fn from(e: UnfusedError) -> AttnError {
+        AttnError::Prepare(e.to_string())
+    }
+}
+
+// The vendored `anyhow::Error` deliberately does not implement
+// `std::error::Error`, so this conversion is coherent; driver internals stay
+// anyhow-based and surface here as execution failures with the full `{:#}`
+// context chain (the string the coordinator used to ship).
+impl From<anyhow::Error> for AttnError {
+    fn from(e: anyhow::Error) -> AttnError {
+        AttnError::Execute(format!("{e:#}"))
+    }
+}
+
+/// The execution context a [`Plan`] dispatches through — the single seam
+/// unifying the PJRT runtime, the offline host-kernel emulation, and the
+/// pipelined host [`Engine`] (which both modes run their gathers,
+/// double-buffering and scatters on).
+#[derive(Clone, Copy)]
+pub enum ExecCtx<'a> {
+    /// Dispatch AOT artifacts through a live PJRT runtime.
+    Pjrt { rt: &'a Runtime, engine: &'a Engine },
+    /// Offline host-kernel emulation (tests, benches, cold CI).
+    Host { engine: &'a Engine },
+}
+
+impl<'a> ExecCtx<'a> {
+    /// Production context: PJRT dispatch, host pipeline on `engine`.
+    pub fn pjrt(rt: &'a Runtime, engine: &'a Engine) -> ExecCtx<'a> {
+        ExecCtx::Pjrt { rt, engine }
+    }
+
+    /// Offline context: host-kernel emulation on `engine` (no artifacts).
+    pub fn host(engine: &'a Engine) -> ExecCtx<'a> {
+        ExecCtx::Host { engine }
+    }
+}
+
+/// A graph-specialised sparse-attention op: executes every head of an
+/// [`AttentionBatch`] through an [`ExecCtx`], returning head-major output
+/// (`heads × n × dv`).  Implemented by the fused, unfused, dense and
+/// CPU-CSR drivers (and by [`Driver`], dispatching to whichever it wraps).
+pub trait SparseAttentionOp {
+    /// Run the 3S computation over every head of `x`.
+    fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        x: &AttentionBatch<'_>,
+    ) -> Result<Vec<f32>, AttnError>;
+
+    /// Artifact names this op dispatches at feature dim `d` (for warmup
+    /// outside the timed region).  Ops with no artifacts return nothing.
+    fn executables(&self, _d: usize) -> Vec<String> {
+        Vec::new()
+    }
+}
+
+/// A prepared (graph-specialised) attention plan for any backend — the
+/// handle the serving layer caches and the models hold per graph.
+///
+/// Construction *is* the paper's per-graph preprocessing (BSB build +
+/// row-window reordering + bucket plan), done once and amortized over
+/// every subsequent [`Plan::execute`] call — and, via [`AttentionBatch`],
+/// over every head of every layer.
+pub struct Plan {
+    driver: Driver,
+    backend: Backend,
+}
+
+impl Plan {
+    /// Plan `g` for `backend`, sharding the BSB build across `engine`'s
+    /// worker pool (bit-identical to the serial build).
+    pub fn new(
+        man: &Manifest,
+        g: &CsrGraph,
+        backend: Backend,
+        engine: &Engine,
+    ) -> Result<Plan, AttnError> {
+        let driver = Driver::prepare_on(man, g, backend, engine)
+            .map_err(|e| AttnError::Prepare(format!("{e:#}")))?;
+        Ok(Plan { driver, backend })
+    }
+
+    /// Plan from an already-built (compacted) BSB — the entry point for
+    /// callers that cache or share preprocessing: only the cheap bucket
+    /// plan is rebuilt.  Backends that plan from the graph itself (dense,
+    /// CPU CSR) are unsupported here.
+    pub fn from_bsb(
+        man: &Manifest,
+        bsb: Bsb,
+        backend: Backend,
+    ) -> Result<Plan, AttnError> {
+        // One backend→options mapping, shared with `Driver::prepare_on`.
+        let driver = if let Some(opts) = backend.fused_opts() {
+            FusedDriver::from_bsb(man, bsb, opts).map(Driver::Fused)
+        } else if let Some(stable) = backend.unfused_stable() {
+            UnfusedDriver::from_bsb(man, bsb, stable, Order::ByTcbDesc)
+                .map(Driver::Unfused)
+        } else {
+            return Err(AttnError::Unsupported(format!(
+                "backend {} plans from the graph, not a BSB",
+                backend.name()
+            )));
+        };
+        let driver = driver.map_err(|e| AttnError::Prepare(format!("{e:#}")))?;
+        Ok(Plan { driver, backend })
+    }
+
+    /// The backend this plan was prepared for.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// The underlying prepared driver (for introspection: BSB stats,
+    /// bucket-plan stats, chunked row windows).
+    pub fn driver(&self) -> &Driver {
+        &self.driver
+    }
+
+    /// Execute every head of `x` through `ctx`; head-major output.
+    pub fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        x: &AttentionBatch<'_>,
+    ) -> Result<Vec<f32>, AttnError> {
+        self.driver.execute(ctx, x)
+    }
+
+    /// Artifact names this plan dispatches at feature dim `d` (warmup).
+    pub fn executables(&self, d: usize) -> Vec<String> {
+        self.driver.executables(d)
+    }
+}
+
+impl Backend {
+    /// Plan a graph for this backend — the unified preprocessing entry
+    /// point (`Backend::plan` + [`Plan::execute`] replace the old
+    /// `Driver::run/run_with/run_offline/run_exec` family).
+    pub fn plan(
+        self,
+        man: &Manifest,
+        g: &CsrGraph,
+        engine: &Engine,
+    ) -> Result<Plan, AttnError> {
+        Plan::new(man, g, self, engine)
+    }
+
+    /// Plan from a prebuilt BSB (see [`Plan::from_bsb`]).
+    pub fn plan_from_bsb(self, man: &Manifest, bsb: Bsb) -> Result<Plan, AttnError> {
+        Plan::from_bsb(man, bsb, self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attn_error_display_is_the_raw_message() {
+        let e = AttnError::BadShape("q: expected 12 elements".into());
+        assert_eq!(format!("{e}"), "q: expected 12 elements");
+        let e = AttnError::QueueClosed;
+        assert_eq!(format!("{e}"), "coordinator is shut down");
+    }
+
+    #[test]
+    fn anyhow_round_trip_keeps_context_chain() {
+        let inner: anyhow::Error = anyhow::anyhow!("root cause");
+        let chained = inner.context("outer");
+        let e = AttnError::from(chained);
+        assert_eq!(format!("{e}"), "outer: root cause");
+        // And back into anyhow (via the std::error::Error blanket).
+        let back: anyhow::Error = e.into();
+        assert_eq!(format!("{back}"), "outer: root cause");
+    }
+
+    #[test]
+    fn unfused_oversize_maps_to_prepare() {
+        let e = AttnError::from(UnfusedError::Oversize { rw: 3, tcbs: 999 });
+        assert!(matches!(e, AttnError::Prepare(_)));
+        assert!(format!("{e}").contains("OOM"));
+    }
+}

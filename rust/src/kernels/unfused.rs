@@ -15,14 +15,15 @@ use anyhow::{Context, Result};
 use crate::bsb::bucket::{self, Plan};
 use crate::bsb::reorder::Order;
 use crate::bsb::{self, Bsb};
-use crate::exec::{CallExecutor, Engine};
+use crate::exec::{CallExecutor, Engine, HostExecutor};
 use crate::graph::CsrGraph;
 use crate::runtime::buffers::Arg;
 use crate::runtime::{Manifest, Runtime};
 use crate::{BITMAP_WORDS, TCB_C, TCB_R};
 
 use super::gather::CallBuffers;
-use super::AttentionProblem;
+use super::op::{AttnError, ExecCtx, SparseAttentionOp};
+use super::{AttentionBatch, AttentionProblem};
 
 /// Why the unfused baseline refused to run (the "OOM analog").
 #[derive(Debug)]
@@ -96,7 +97,8 @@ impl UnfusedDriver {
         Ok(UnfusedDriver { bsb, plan, stable_softmax, batch: man.rw_batch })
     }
 
-    pub fn executables(&self, d: usize) -> Vec<String> {
+    /// Artifact names this driver will dispatch (for warmup).
+    pub fn artifact_names(&self, d: usize) -> Vec<String> {
         let mut names = Vec::new();
         for c in &self.plan.calls {
             names.push(Manifest::sddmm_name(c.t_bucket, d));
@@ -108,42 +110,55 @@ impl UnfusedDriver {
         names
     }
 
-    /// Run the three-stage pipeline (serial reference policy).
-    pub fn run(&self, rt: &Runtime, x: &AttentionProblem) -> Result<Vec<f32>> {
-        self.run_with(rt, x, &Engine::serial())
-    }
-
-    /// Run through the host execution engine: the three PJRT stages stay
-    /// back-to-back on the calling thread (the intermediates S and E still
-    /// cross the host boundary — the data movement fusion removes), while
-    /// gathers and scatters of neighbouring calls overlap them.
-    pub fn run_with(
+    /// Engine-driven execution of every head against any [`CallExecutor`]:
+    /// the three PJRT stages stay back-to-back on the calling thread (the
+    /// intermediates S and E still cross the host boundary — the data
+    /// movement fusion removes), while gathers and scatters of
+    /// neighbouring calls — and neighbouring *heads* — overlap them.
+    pub fn execute_with<E: CallExecutor>(
         &self,
-        rt: &Runtime,
-        x: &AttentionProblem,
-        engine: &Engine,
-    ) -> Result<Vec<f32>> {
-        let mut exec = PjrtUnfused { rt, stable_softmax: self.stable_softmax };
-        self.run_exec(x, engine, &mut exec)
-    }
-
-    /// Engine-driven execution against any [`CallExecutor`].
-    pub fn run_exec<E: CallExecutor>(
-        &self,
-        x: &AttentionProblem,
+        x: &AttentionBatch,
         engine: &Engine,
         exec: &mut E,
     ) -> Result<Vec<f32>> {
-        let mut out = vec![0.0f32; x.n * x.dv];
+        let mut out = vec![0.0f32; x.out_len()];
         engine.run_bucketed(
             &self.plan.calls,
             &self.bsb,
             x,
             self.batch,
             &mut out,
-            |call, bufs| exec.bucket(call.t_bucket, bufs, x, self.batch),
+            |call, h, bufs| {
+                let xh = x.head(h);
+                exec.bucket(call.t_bucket, bufs, &xh, self.batch)
+            },
         )?;
         Ok(out)
+    }
+}
+
+impl SparseAttentionOp for UnfusedDriver {
+    fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        x: &AttentionBatch<'_>,
+    ) -> Result<Vec<f32>, AttnError> {
+        x.validate()?;
+        match *ctx {
+            ExecCtx::Pjrt { rt, engine } => {
+                let mut exec =
+                    PjrtUnfused { rt, stable_softmax: self.stable_softmax };
+                self.execute_with(x, engine, &mut exec).map_err(AttnError::from)
+            }
+            ExecCtx::Host { engine } => {
+                let mut exec = HostExecutor::new(&engine.pool);
+                self.execute_with(x, engine, &mut exec).map_err(AttnError::from)
+            }
+        }
+    }
+
+    fn executables(&self, d: usize) -> Vec<String> {
+        self.artifact_names(d)
     }
 }
 

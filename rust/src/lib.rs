@@ -12,6 +12,23 @@
 //! crate loads and executes those artifacts through the PJRT C API (the
 //! [`xla`] crate).  **Python never runs on the request path.**
 //!
+//! ## The plan/batch API
+//!
+//! Every kernel entry point goes through two types in [`kernels`]:
+//!
+//! * [`kernels::AttentionBatch`] — `heads` Q/K/V problems sharing one
+//!   graph (head-major layout); a single-head problem adapts in with zero
+//!   copies via `AttentionBatch::single`.
+//! * [`kernels::Plan`] — the graph-specialised op: `Backend::plan(...)`
+//!   runs the per-graph preprocessing once (BSB build, reordering, bucket
+//!   plan), then `Plan::execute(&mut ExecCtx, &AttentionBatch)` runs every
+//!   head through one [`kernels::ExecCtx`] — PJRT artifacts online or the
+//!   host emulation offline — amortizing the BSB over all heads of all
+//!   layers (the paper's §4.5 lever) and pipelining head *h+1*'s gather
+//!   over head *h*'s dispatch.  Each driver implements the
+//!   [`kernels::SparseAttentionOp`] trait behind the plan; failures are
+//!   the structured [`kernels::AttnError`].
+//!
 //! Module map (see DESIGN.md §2 for the full system inventory):
 //!
 //! * [`util`] — PRNG, JSON, timing/stats, CLI: the offline-environment
@@ -24,13 +41,17 @@
 //! * [`runtime`] — PJRT client + executable cache over the AOT manifest.
 //! * [`exec`] — the parallel pipelined host execution engine: scoped-thread
 //!   worker pool, call-buffer arena, the double-buffered
-//!   gather→dispatch→scatter pipeline, and the offline host kernel
-//!   (EXPERIMENTS.md §Perf).
-//! * [`kernels`] — host-side drivers: fused (the paper's system), unfused
-//!   (FlashSparse analog), dense, and a scalar CSR CPU baseline (PyG analog).
-//! * [`coordinator`] — the serving layer: preprocessing pipeline, reordering
-//!   scheduler, batcher, request server, metrics.
-//! * [`model`] — Graph Transformer / GAT / AGNN inference runtimes.
+//!   gather→dispatch→scatter pipeline (now over calls × heads), and the
+//!   offline host kernel (EXPERIMENTS.md §Perf, §Multi-head).
+//! * [`kernels`] — the plan/batch API (`AttentionBatch`, `Plan`,
+//!   `SparseAttentionOp`, `ExecCtx`, `AttnError`) over the driver zoo:
+//!   fused (the paper's system), unfused (FlashSparse analog), dense, and
+//!   a scalar CSR CPU baseline (PyG analog).
+//! * [`coordinator`] — the serving layer: dynamic request coalescing on
+//!   (d, dv, heads, scale, backend), fingerprint-keyed plan cache, request
+//!   server, metrics.
+//! * [`model`] — Graph Transformer / GAT / AGNN inference runtimes; the GT
+//!   issues one multi-head `AttentionBatch` call per layer.
 //! * [`simulator`] — the SM active-time scheduling simulator (Fig. 7).
 //! * [`experiments`] — regenerators for every table and figure in §4.
 

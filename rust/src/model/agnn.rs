@@ -8,19 +8,23 @@
 
 use anyhow::Result;
 
+use crate::exec::Engine;
 use crate::graph::CsrGraph;
-use crate::kernels::{AttentionProblem, Backend, Driver};
+use crate::kernels::{AttentionBatch, AttentionProblem, Backend, ExecCtx, Plan};
 use crate::runtime::Runtime;
 
 /// One AGNN propagation layer prepared for a graph.
 pub struct AgnnLayer {
     pub beta: f32,
-    driver: Driver,
+    plan: Plan,
+    engine: Engine,
 }
 
 impl AgnnLayer {
     pub fn prepare(rt: &Runtime, g: &CsrGraph, beta: f32) -> Result<AgnnLayer> {
-        Ok(AgnnLayer { beta, driver: Driver::prepare(rt, g, Backend::Fused3S)? })
+        let engine = Engine::serial();
+        let plan = Plan::new(rt.manifest(), g, Backend::Fused3S, &engine)?;
+        Ok(AgnnLayer { beta, plan, engine })
     }
 
     /// H^{t+1} = softmax(β cos(H, Hᵀ) ⊙ A) H
@@ -35,7 +39,10 @@ impl AgnnLayer {
             v: h,
             scale: self.beta,
         };
-        self.driver.run(rt, &x)
+        let out = self
+            .plan
+            .execute(&mut ExecCtx::pjrt(rt, &self.engine), &AttentionBatch::single(&x))?;
+        Ok(out)
     }
 }
 

@@ -7,6 +7,11 @@
 //! pre-softmax (baked into the `fused3s_gat_*` artifacts) and aggregates
 //! V = Wh at dv = 64 — so the *same* fused 3S machinery covers GAT, which is
 //! the paper's point about the 3S abstraction.
+//!
+//! In plan/batch terms a GAT layer is a **one-head** `AttentionBatch` with
+//! `d = 2 ≠ dv`; the dedicated GAT artifacts (LeakyReLU score activation)
+//! keep it on its own dispatch loop rather than the generic
+//! [`SparseAttentionOp`](crate::kernels::SparseAttentionOp) plans.
 
 use anyhow::{bail, Context, Result};
 

@@ -10,15 +10,20 @@
 //! Every dense op is a fixed-shape row-tile executable (m = 1024 rows),
 //! every attention is a pluggable [`Backend`] — swapping the backend is the
 //! Figure-8 experiment.  Heads are d_head = 32 wide, so d ∈ {64, 128, 256}
-//! gives 2/4/8 heads, and all heads of all layers share the per-graph BSB
-//! preprocessing (done once in [`GraphTransformer::prepare`]).
+//! gives 2/4/8 heads.  All heads of all layers share the per-graph
+//! preprocessing (one [`Plan`], built once in
+//! [`GraphTransformer::prepare`]), and each layer issues **one**
+//! head-batched [`AttentionBatch`] call — the engine pipelines head h+1's
+//! gather over head h's dispatch instead of idling between per-head calls
+//! (the §4.5 amortization).
 
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::exec::Engine;
 use crate::graph::CsrGraph;
-use crate::kernels::{AttentionProblem, Backend, Driver};
+use crate::kernels::{AttentionBatch, Backend, ExecCtx, Plan};
 use crate::runtime::{Manifest, Runtime, Tensor};
 
 use super::weights::GtWeights;
@@ -62,7 +67,8 @@ impl GtTimings {
 pub struct GraphTransformer {
     pub cfg: GtConfig,
     pub weights: GtWeights,
-    driver: Driver,
+    plan: Plan,
+    engine: Engine,
     n: usize,
     m_tile: usize,
 }
@@ -80,11 +86,13 @@ impl GraphTransformer {
                 rt.manifest().d_model
             );
         }
-        let driver = Driver::prepare(rt, g, cfg.backend)?;
+        let engine = Engine::auto();
+        let plan = Plan::new(rt.manifest(), g, cfg.backend, &engine)?;
         Ok(GraphTransformer {
             weights: GtWeights::generate(cfg.seed, cfg.d, cfg.n_blocks),
             cfg,
-            driver,
+            plan,
+            engine,
             n: g.n,
             m_tile: rt.manifest().m_tile,
         })
@@ -117,28 +125,39 @@ impl GraphTransformer {
 
             let t0 = Instant::now();
             let n_heads = d / D_HEAD;
-            let mut att = vec![0.0f32; n * d];
             let scale = 1.0 / (D_HEAD as f32).sqrt();
-            let mut qh = vec![0.0f32; n * D_HEAD];
-            let mut kh = vec![0.0f32; n * D_HEAD];
-            let mut vh = vec![0.0f32; n * D_HEAD];
+            // Slice head columns out of the fused QKV output (row layout:
+            // [q | k | v] each d wide) into head-major buffers, then issue
+            // ONE multi-head attention call for the whole layer.
+            let mut qh = vec![0.0f32; n_heads * n * D_HEAD];
+            let mut kh = vec![0.0f32; n_heads * n * D_HEAD];
+            let mut vh = vec![0.0f32; n_heads * n * D_HEAD];
             for head in 0..n_heads {
-                // Slice head columns out of the fused QKV output
-                // (row layout: [q | k | v] each d wide).
+                let hb = head * n * D_HEAD;
                 for row in 0..n {
                     let base = row * 3 * d + head * D_HEAD;
-                    qh[row * D_HEAD..(row + 1) * D_HEAD]
+                    let dst = hb + row * D_HEAD;
+                    qh[dst..dst + D_HEAD]
                         .copy_from_slice(&qkv[base..base + D_HEAD]);
-                    kh[row * D_HEAD..(row + 1) * D_HEAD]
+                    kh[dst..dst + D_HEAD]
                         .copy_from_slice(&qkv[base + d..base + d + D_HEAD]);
-                    vh[row * D_HEAD..(row + 1) * D_HEAD]
+                    vh[dst..dst + D_HEAD]
                         .copy_from_slice(&qkv[base + 2 * d..base + 2 * d + D_HEAD]);
                 }
-                let x = AttentionProblem::new(n, D_HEAD, &qh, &kh, &vh, scale);
-                let oh = self.driver.run(rt, &x)?;
+            }
+            let x = AttentionBatch::new(
+                n, D_HEAD, D_HEAD, n_heads, &qh, &kh, &vh, scale,
+            );
+            let o = self
+                .plan
+                .execute(&mut ExecCtx::pjrt(rt, &self.engine), &x)?;
+            // Interleave the head-major output back into n × d.
+            let mut att = vec![0.0f32; n * d];
+            for head in 0..n_heads {
+                let hb = head * n * D_HEAD;
                 for row in 0..n {
                     att[row * d + head * D_HEAD..row * d + (head + 1) * D_HEAD]
-                        .copy_from_slice(&oh[row * D_HEAD..(row + 1) * D_HEAD]);
+                        .copy_from_slice(&o[hb + row * D_HEAD..hb + (row + 1) * D_HEAD]);
                 }
             }
             t.attention_s += t0.elapsed().as_secs_f64();

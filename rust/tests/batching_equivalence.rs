@@ -20,7 +20,7 @@ use fused3s::coordinator::{
 use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
 use fused3s::graph::batch::{batch_graphs, random_molecule};
 use fused3s::graph::{generators, CsrGraph};
-use fused3s::kernels::{AttentionProblem, Backend, Driver};
+use fused3s::kernels::{AttentionBatch, AttentionProblem, Backend, ExecCtx, Plan};
 use fused3s::runtime::Manifest;
 use fused3s::util::prng::Rng;
 
@@ -58,8 +58,9 @@ fn graph_mix(seed: u64, count: usize) -> Vec<CsrGraph> {
         .collect()
 }
 
-/// Serial per-graph reference: prepare + run on the serial engine through
+/// Serial per-graph reference: plan + execute on the serial engine through
 /// the offline host kernel.
+#[allow(clippy::too_many_arguments)]
 fn serial_run(
     man: &Manifest,
     g: &CsrGraph,
@@ -71,12 +72,13 @@ fn serial_run(
     scale: f32,
 ) -> Vec<f32> {
     let engine = Engine::serial();
-    let driver = Driver::prepare_on(man, g, backend, &engine).expect("prepare");
+    let plan = Plan::new(man, g, backend, &engine).expect("plan");
     let x = AttentionProblem::new(g.n, d, q, k, v, scale);
-    driver.run_offline(&x, &engine).expect("serial run")
+    plan.execute(&mut ExecCtx::host(&engine), &AttentionBatch::single(&x))
+        .expect("serial run")
 }
 
-/// Driver-level differential check for one backend over one graph mix.
+/// Plan-level differential check for one backend over one graph mix.
 fn check_batched_equals_serial(backend: Backend, seed: u64) {
     let man = manifest();
     let d = 16;
@@ -114,9 +116,10 @@ fn check_batched_equals_serial(backend: Backend, seed: u64) {
         ExecPolicy { threads: 4, pipeline_depth: 2 },
     ] {
         let engine = Engine::new(policy);
-        let driver =
-            Driver::prepare_on(&man, &merged, backend, &engine).expect("prepare");
-        let out = driver.run_offline(&x, &engine).expect("batched run");
+        let plan = Plan::new(&man, &merged, backend, &engine).expect("plan");
+        let out = plan
+            .execute(&mut ExecCtx::host(&engine), &AttentionBatch::single(&x))
+            .expect("batched run");
         assert_eq!(out.len(), n_total * d);
         for (i, want) in expect.iter().enumerate() {
             let lo = offsets[i] as usize * d;
@@ -197,17 +200,17 @@ fn coordinator_batch_bit_matches_serial_including_cache_replay() {
         let (tx, rx) = channel();
         for (i, (g, (q, k, v))) in graphs.iter().zip(&per_graph).enumerate() {
             coord
-                .submit(AttnRequest {
-                    id: round * 100 + i as u64,
-                    graph: g.clone(),
+                .submit(AttnRequest::single_head(
+                    round * 100 + i as u64,
+                    g.clone(),
                     d,
-                    q: q.clone(),
-                    k: k.clone(),
-                    v: v.clone(),
+                    q.clone(),
+                    k.clone(),
+                    v.clone(),
                     scale,
-                    backend: Backend::Fused3S,
-                    reply: tx.clone(),
-                })
+                    Backend::Fused3S,
+                    tx.clone(),
+                ))
                 .expect("submit");
         }
         drop(tx);

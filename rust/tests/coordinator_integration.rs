@@ -34,17 +34,17 @@ fn serves_correct_results() {
     let (q, k, v) = features(g.n, 64, 2);
     let (tx, rx) = channel();
     coord
-        .submit(AttnRequest {
-            id: 7,
-            graph: g.clone(),
-            d: 64,
-            q: q.clone(),
-            k: k.clone(),
-            v: v.clone(),
-            scale: 0.125,
-            backend: Backend::Fused3S,
-            reply: tx,
-        })
+        .submit(AttnRequest::single_head(
+            7,
+            g.clone(),
+            64,
+            q.clone(),
+            k.clone(),
+            v.clone(),
+            0.125,
+            Backend::Fused3S,
+            tx,
+        ))
         .unwrap();
     let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
     assert_eq!(resp.id, 7);
@@ -68,17 +68,17 @@ fn serves_many_requests_in_flight() {
         let (q, k, v) = features(g.n, 32, 100 + i as u64);
         let (tx, rx) = channel();
         coord
-            .submit(AttnRequest {
-                id: i as u64,
-                graph: g,
-                d: 32,
+            .submit(AttnRequest::single_head(
+                i as u64,
+                g,
+                32,
                 q,
                 k,
                 v,
-                scale: 1.0,
-                backend: Backend::Fused3S,
-                reply: tx,
-            })
+                1.0,
+                Backend::Fused3S,
+                tx,
+            ))
             .unwrap();
         rxs.push(rx);
     }
@@ -102,17 +102,17 @@ fn invalid_request_fails_gracefully() {
     let g = generators::ring(64).with_self_loops();
     let (tx, rx) = channel();
     coord
-        .submit(AttnRequest {
-            id: 1,
-            graph: g,
-            d: 32,
-            q: vec![0.0; 10], // wrong size
-            k: vec![0.0; 10],
-            v: vec![0.0; 10],
-            scale: 1.0,
-            backend: Backend::Fused3S,
-            reply: tx,
-        })
+        .submit(AttnRequest::single_head(
+            1,
+            g,
+            32,
+            vec![0.0; 10], // wrong size
+            vec![0.0; 10],
+            vec![0.0; 10],
+            1.0,
+            Backend::Fused3S,
+            tx,
+        ))
         .unwrap();
     let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
     assert!(resp.result.is_err());
@@ -132,17 +132,17 @@ fn mixed_backends_served() {
     {
         let (tx, rx) = channel();
         coord
-            .submit(AttnRequest {
-                id: i as u64,
-                graph: g.clone(),
-                d: 64,
-                q: q.clone(),
-                k: k.clone(),
-                v: v.clone(),
-                scale: 0.5,
-                backend: b,
-                reply: tx,
-            })
+            .submit(AttnRequest::single_head(
+                i as u64,
+                g.clone(),
+                64,
+                q.clone(),
+                k.clone(),
+                v.clone(),
+                0.5,
+                b,
+                tx,
+            ))
             .unwrap();
         outs.push(
             rx.recv_timeout(std::time::Duration::from_secs(120))

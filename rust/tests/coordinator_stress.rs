@@ -18,7 +18,7 @@ use fused3s::coordinator::{
 use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
 use fused3s::graph::batch::random_molecule;
 use fused3s::graph::{generators, CsrGraph};
-use fused3s::kernels::{AttentionProblem, Backend, Driver};
+use fused3s::kernels::{AttentionBatch, AttentionProblem, Backend, ExecCtx, Plan};
 use fused3s::runtime::Manifest;
 use fused3s::util::prng::Rng;
 
@@ -44,9 +44,10 @@ fn serial_expected(
 ) -> Vec<f32> {
     let engine = Engine::serial();
     let (q, k, v) = features(g.n, d, seed);
-    let driver = Driver::prepare_on(man, g, Backend::Fused3S, &engine).unwrap();
+    let plan = Plan::new(man, g, Backend::Fused3S, &engine).unwrap();
     let x = AttentionProblem::new(g.n, d, &q, &k, &v, scale);
-    driver.run_offline(&x, &engine).unwrap()
+    plan.execute(&mut ExecCtx::host(&engine), &AttentionBatch::single(&x))
+        .unwrap()
 }
 
 /// Mixed graph sizes/shapes shared by all submitters (repeats feed the
@@ -104,17 +105,17 @@ fn concurrent_submitters_backpressure_and_routing() {
                     // One malformed request per submitter: wrong buffer
                     // sizes must fail gracefully, not poison the batch.
                     coord
-                        .submit(AttnRequest {
+                        .submit(AttnRequest::single_head(
                             id,
-                            graph: g,
-                            d: D,
-                            q: vec![0.0; 3],
-                            k: vec![0.0; 3],
-                            v: vec![0.0; 3],
-                            scale: SCALE,
-                            backend: Backend::Fused3S,
-                            reply: tx.clone(),
-                        })
+                            g,
+                            D,
+                            vec![0.0; 3],
+                            vec![0.0; 3],
+                            vec![0.0; 3],
+                            SCALE,
+                            Backend::Fused3S,
+                            tx.clone(),
+                        ))
                         .expect("submit");
                     sent.insert(id, None);
                     continue;
@@ -122,17 +123,17 @@ fn concurrent_submitters_backpressure_and_routing() {
                 let seed = id * 7 + 13;
                 let (q, k, v) = features(g.n, D, seed);
                 coord
-                    .submit(AttnRequest {
+                    .submit(AttnRequest::single_head(
                         id,
-                        graph: g,
-                        d: D,
+                        g,
+                        D,
                         q,
                         k,
                         v,
-                        scale: SCALE,
-                        backend: Backend::Fused3S,
-                        reply: tx.clone(),
-                    })
+                        SCALE,
+                        Backend::Fused3S,
+                        tx.clone(),
+                    ))
                     .expect("submit");
                 sent.insert(id, Some((gi, seed)));
             }
@@ -219,17 +220,17 @@ fn repeated_graphs_hit_the_fingerprint_cache() {
     for i in 0..10u64 {
         let (tx, rx) = channel();
         coord
-            .submit(AttnRequest {
-                id: i,
-                graph: g.clone(),
-                d: D,
-                q: q.clone(),
-                k: k.clone(),
-                v: v.clone(),
-                scale: SCALE,
-                backend: Backend::Fused3S,
-                reply: tx,
-            })
+            .submit(AttnRequest::single_head(
+                i,
+                g.clone(),
+                D,
+                q.clone(),
+                k.clone(),
+                v.clone(),
+                SCALE,
+                Backend::Fused3S,
+                tx,
+            ))
             .expect("submit");
         let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
         assert_eq!(resp.id, i);
@@ -272,17 +273,17 @@ fn shutdown_drains_the_coalescing_queue() {
         let g = pool[i as usize % pool.len()].clone();
         let (q, k, v) = features(g.n, D, 500 + i);
         coord
-            .submit(AttnRequest {
-                id: i,
-                graph: g,
-                d: D,
+            .submit(AttnRequest::single_head(
+                i,
+                g,
+                D,
                 q,
                 k,
                 v,
-                scale: SCALE,
-                backend: Backend::Fused3S,
-                reply: tx.clone(),
-            })
+                SCALE,
+                Backend::Fused3S,
+                tx.clone(),
+            ))
             .expect("submit");
     }
     drop(tx);

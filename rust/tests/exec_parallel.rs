@@ -10,7 +10,7 @@ use fused3s::exec::{offline_manifest, Engine, ExecPolicy, HostExecutor, WorkerPo
 use fused3s::graph::{generators, CsrGraph};
 use fused3s::kernels::fused::{FusedDriver, FusedOpts};
 use fused3s::kernels::unfused::UnfusedDriver;
-use fused3s::kernels::{reference, AttentionProblem};
+use fused3s::kernels::{reference, AttentionBatch, AttentionProblem};
 use fused3s::runtime::Manifest;
 use fused3s::util::prng::Rng;
 
@@ -79,7 +79,7 @@ fn fused_engine_is_bit_exact_across_policies() {
         let serial = Engine::serial();
         let driver = FusedDriver::new(&man, &g, FusedOpts::default()).unwrap();
         let want = driver
-            .run_exec(&x, &serial, &mut HostExecutor::new(&serial.pool))
+            .execute_with(&AttentionBatch::single(&x), &serial, &mut HostExecutor::new(&serial.pool))
             .unwrap();
         if name == "star-chunked" {
             assert!(!driver.plan.chunked.is_empty(), "star must chunk");
@@ -95,7 +95,7 @@ fn fused_engine_is_bit_exact_across_policies() {
                     .unwrap();
             assert_eq!(par_driver.bsb, driver.bsb, "{name} {policy:?}");
             let got = par_driver
-                .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+                .execute_with(&AttentionBatch::single(&x), &engine, &mut HostExecutor::new(&engine.pool))
                 .unwrap();
             assert_eq!(got, want, "{name} {policy:?} not bit-identical");
         }
@@ -121,7 +121,7 @@ fn unfused_engine_is_bit_exact_across_policies() {
         )
         .unwrap();
         let want = driver
-            .run_exec(&x, &serial, &mut HostExecutor::new(&serial.pool))
+            .execute_with(&AttentionBatch::single(&x), &serial, &mut HostExecutor::new(&serial.pool))
             .unwrap();
         let dense = reference::dense_attention_host(&g, &x);
         let err = reference::max_abs_diff(&want, &dense);
@@ -129,7 +129,7 @@ fn unfused_engine_is_bit_exact_across_policies() {
         for policy in policies() {
             let engine = Engine::new(policy);
             let got = driver
-                .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+                .execute_with(&AttentionBatch::single(&x), &engine, &mut HostExecutor::new(&engine.pool))
                 .unwrap();
             assert_eq!(got, want, "{name} {policy:?} not bit-identical");
         }
@@ -149,7 +149,7 @@ fn chunked_merge_matches_reference_closely() {
     let driver = FusedDriver::new_with(&man, &g, FusedOpts::default(), &engine)
         .unwrap();
     let got = driver
-        .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+        .execute_with(&AttentionBatch::single(&x), &engine, &mut HostExecutor::new(&engine.pool))
         .unwrap();
     let want = reference::dense_attention_host(&g, &x);
     let err = reference::max_abs_diff(&got, &want);
@@ -167,12 +167,12 @@ fn buffer_arena_recycles_across_runs() {
     let driver = FusedDriver::new_with(&man, &g, FusedOpts::default(), &engine)
         .unwrap();
     let a = driver
-        .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+        .execute_with(&AttentionBatch::single(&x), &engine, &mut HostExecutor::new(&engine.pool))
         .unwrap();
     let pooled = engine.buffers.available();
     assert!(pooled >= 1, "pipeline must return buffers to the arena");
     let b = driver
-        .run_exec(&x, &engine, &mut HostExecutor::new(&engine.pool))
+        .execute_with(&AttentionBatch::single(&x), &engine, &mut HostExecutor::new(&engine.pool))
         .unwrap();
     assert_eq!(a, b, "recycled buffers must not perturb results");
     assert_eq!(

@@ -2,8 +2,11 @@
 //! reference.  These tests require `make artifacts` (they are skipped with a
 //! note when the manifest is missing so `cargo test` works pre-build).
 
+use fused3s::exec::Engine;
 use fused3s::graph::{generators, CsrGraph};
-use fused3s::kernels::{reference, AttentionProblem, Backend, Driver};
+use fused3s::kernels::{
+    reference, AttentionBatch, AttentionProblem, Backend, Driver, ExecCtx, Plan,
+};
 use fused3s::runtime::Runtime;
 use fused3s::util::prng::Rng;
 
@@ -30,12 +33,19 @@ fn problem_data(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>)
 /// inputs (see python/tests/test_kernel.py for the full error analysis).
 const BF16_TOL: f32 = 1.5e-1;
 
+/// Plan + execute one single-head problem through the PJRT context.
+fn plan_run(rt: &Runtime, g: &CsrGraph, backend: Backend, x: &AttentionProblem) -> Vec<f32> {
+    let engine = Engine::serial();
+    let plan = Plan::new(rt.manifest(), g, backend, &engine).expect("plan");
+    plan.execute(&mut ExecCtx::pjrt(rt, &engine), &AttentionBatch::single(x))
+        .expect("run")
+}
+
 fn check_backend_on(g: &CsrGraph, backend: Backend, d: usize, tol: f32) {
     let Some(rt) = runtime() else { return };
     let (q, k, v) = problem_data(g.n, d, 42);
     let x = AttentionProblem::new(g.n, d, &q, &k, &v, 1.0);
-    let driver = Driver::prepare(&rt, g, backend).expect("prepare");
-    let got = driver.run(&rt, &x).expect("run");
+    let got = plan_run(&rt, g, backend, &x);
     let want = reference::dense_attention_host(g, &x);
     let err = reference::max_abs_diff(&got, &want);
     assert!(
@@ -96,8 +106,7 @@ fn unfused_naive_matches_small_logits() {
     let g = generators::erdos_renyi(300, 5.0, 14).with_self_loops();
     let (q, k, v) = problem_data(g.n, 32, 15);
     let x = AttentionProblem::new(g.n, 32, &q, &k, &v, 0.05);
-    let driver = Driver::prepare(&rt, &g, Backend::UnfusedNaive).unwrap();
-    let got = driver.run(&rt, &x).unwrap();
+    let got = plan_run(&rt, &g, Backend::UnfusedNaive, &x);
     let want = reference::dense_attention_host(&g, &x);
     assert!(reference::max_abs_diff(&got, &want) < BF16_TOL);
 }
@@ -116,11 +125,14 @@ fn chunked_mega_hub_matches() {
     let Some(rt) = runtime() else { return };
     let (q, k, v) = problem_data(g.n, 64, 17);
     let x = AttentionProblem::new(g.n, 64, &q, &k, &v, 0.125);
-    let driver = Driver::prepare(&rt, &g, Backend::Fused3S).unwrap();
-    if let Driver::Fused(f) = &driver {
+    let engine = Engine::serial();
+    let plan = Plan::new(rt.manifest(), &g, Backend::Fused3S, &engine).unwrap();
+    if let Driver::Fused(f) = plan.driver() {
         assert!(!f.plan.chunked.is_empty(), "test premise: chunking required");
     }
-    let got = driver.run(&rt, &x).unwrap();
+    let got = plan
+        .execute(&mut ExecCtx::pjrt(&rt, &engine), &AttentionBatch::single(&x))
+        .unwrap();
     let want = reference::dense_attention_host(&g, &x);
     let err = reference::max_abs_diff(&got, &want);
     assert!(err < BF16_TOL, "chunked max err {err}");
@@ -135,8 +147,7 @@ fn empty_and_ragged_graph() {
     let g = CsrGraph::from_edges(43, &edges).unwrap();
     let (q, k, v) = problem_data(g.n, 32, 18);
     let x = AttentionProblem::new(g.n, 32, &q, &k, &v, 1.0);
-    let driver = Driver::prepare(&rt, &g, Backend::Fused3S).unwrap();
-    let got = driver.run(&rt, &x).unwrap();
+    let got = plan_run(&rt, &g, Backend::Fused3S, &x);
     let want = reference::dense_attention_host(&g, &x);
     assert!(reference::max_abs_diff(&got, &want) < BF16_TOL);
     // Isolated rows exactly zero.
@@ -159,8 +170,7 @@ fn backends_agree_pairwise() {
         Backend::Dense,
         Backend::CpuCsr,
     ] {
-        let driver = Driver::prepare(&rt, &g, b).expect("prepare");
-        results.push((b, driver.run(&rt, &x).expect("run")));
+        results.push((b, plan_run(&rt, &g, b, &x)));
     }
     for w in results.windows(2) {
         let (b1, r1) = &w[0];
@@ -176,15 +186,17 @@ fn runtime_stats_accumulate() {
     let g = generators::erdos_renyi(100, 4.0, 21).with_self_loops();
     let (q, k, v) = problem_data(g.n, 32, 22);
     let x = AttentionProblem::new(g.n, 32, &q, &k, &v, 1.0);
-    let driver = Driver::prepare(&rt, &g, Backend::Fused3S).unwrap();
+    let engine = Engine::serial();
+    let plan = Plan::new(rt.manifest(), &g, Backend::Fused3S, &engine).unwrap();
+    let batch = AttentionBatch::single(&x);
     rt.reset_stats();
-    driver.run(&rt, &x).unwrap();
+    plan.execute(&mut ExecCtx::pjrt(&rt, &engine), &batch).unwrap();
     let st = rt.stats();
     assert!(st.executions > 0);
     assert!(st.bytes_uploaded > 0);
     // Second run: no new compiles (cache hit).
     let compiles_before = st.compiles;
-    driver.run(&rt, &x).unwrap();
+    plan.execute(&mut ExecCtx::pjrt(&rt, &engine), &batch).unwrap();
     assert_eq!(rt.stats().compiles, compiles_before);
 }
 

@@ -29,10 +29,13 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
-# The ISSUE-2 differential harness, run explicitly so a filtered or
-# partially-cached test invocation can never silently skip it.
-echo "== cargo test -q --test batching_equivalence --test backward_gradcheck"
-cargo test -q --test batching_equivalence --test backward_gradcheck
+# The ISSUE-2/ISSUE-3 differential harnesses, run explicitly so a filtered
+# or partially-cached test invocation can never silently skip them.  The
+# multihead suite is the acceptance gate for the plan-based API: one
+# AttentionBatch call must bit-match the per-head loop on every backend.
+echo "== cargo test -q --test batching_equivalence --test backward_gradcheck --test multihead_equivalence"
+cargo test -q --test batching_equivalence --test backward_gradcheck \
+    --test multihead_equivalence
 
 # Coordinator suite serialized: the stress tests spawn their own submitter
 # threads and assert timing-sensitive coalescing/backpressure behaviour, so
@@ -41,7 +44,13 @@ echo "== coordinator suite (--test-threads=1)"
 cargo test -q --test coordinator_stress --test coordinator_integration \
     -- --test-threads=1
 
+# The redesigned public API must stay documented: rustdoc warnings
+# (broken intra-doc links, missing code-block languages, ...) are errors.
+echo "== cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "verify: OK"
 echo "(perf sweeps: 'cargo bench --bench host_pipeline' for the host engine,"
 echo " 'cargo bench --bench coordinator_batching' for the dynamic-batching"
-echo " delay × nodes sweep; see EXPERIMENTS.md §Perf and §Batching)"
+echo " delay × nodes sweep, 'cargo bench --bench multihead' for the"
+echo " head-batching sweep; see EXPERIMENTS.md §Perf/§Batching/§Multi-head)"

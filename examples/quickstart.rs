@@ -24,6 +24,15 @@ fn main() -> anyhow::Result<()> {
     let g = generators::barabasi_albert(1000, 5, 42).with_self_loops();
     println!("graph: n={} nnz={}", g.n, g.nnz());
 
+    // 2b. The adaptive planner's opinion (what `Backend::Auto` would do):
+    // profile the sparsity, price every backend, pick the cheapest.
+    let decision = fused3s::planner::resolve(&g);
+    println!(
+        "planner: Backend::Auto would route this graph to '{}'{}",
+        decision.backend.name(),
+        if decision.chunked { " (chunked hub path)" } else { "" }
+    );
+
     // 3. Plan once: BSB build + row-window reordering + bucket plan.
     let engine = Engine::serial();
     let plan = Plan::new(rt.manifest(), &g, Backend::Fused3S, &engine)?;

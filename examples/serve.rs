@@ -1,7 +1,9 @@
 //! Serving example: the coordinator under a batched multi-graph request
 //! stream (molecule-property-style workload), reporting throughput and
 //! latency percentiles — the deployment shape a 3S kernel library
-//! actually runs in.
+//! actually runs in.  Requests default to `Backend::Auto`, so the adaptive
+//! planner routes each one and refines its cost model from the measured
+//! latencies (`--backend fused3s` pins the old fixed routing).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve -- --requests 48
@@ -18,12 +20,17 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let requests = args.usize_or("requests", 48)?;
     let d = args.usize_or("d", 64)?;
+    let backend = Backend::parse(&args.get_or("backend", "auto"))?;
 
     let coord = Coordinator::start(CoordinatorConfig {
         preprocess_workers: args.usize_or("workers", 2)?,
         ..CoordinatorConfig::default()
     })?;
-    println!("coordinator up; streaming {requests} batched-graph requests");
+    println!(
+        "coordinator up; streaming {requests} batched-graph requests \
+         (backend={})",
+        backend.name()
+    );
 
     let mut rng = Rng::new(0xCAFE);
     let (tx, rx) = channel();
@@ -43,7 +50,7 @@ fn main() -> anyhow::Result<()> {
             rng.normal_vec(nd, 1.0),
             rng.normal_vec(nd, 1.0),
             1.0 / (d as f32).sqrt(),
-            Backend::Fused3S,
+            backend,
             tx.clone(),
         ))?;
     }

@@ -1,0 +1,200 @@
+//! `cargo bench planner` — the adaptive-planner sweep (EXPERIMENTS.md
+//! §Planner): `Backend::Auto` vs every fixed backend across four synthetic
+//! workload families (er / sbm / star / molecule-batch), through the
+//! offline host pipeline (no artifacts).
+//!
+//! The bench is the measuring half of the planner story: it times each
+//! *fixed* feasible backend, feeds those measurements into the planner's
+//! cost model (exactly the coordinator's online refinement loop), then
+//! lets the tuned planner resolve the workload and times the auto choice.
+//! Every auto run is checked **bit-identical** to the same workload forced
+//! to the resolved backend before its row prints.
+//!
+//! Prints one JSON row per (generator × backend), plus a summary row per
+//! generator.  Gates (asserted):
+//!
+//! * auto is never slower than the **worst** feasible fixed backend;
+//! * on the two synthetic extremes (`er`, the regular low-CV case, and
+//!   `star`, the mega-hub case) auto matches the **best** measured fixed
+//!   backend.
+//!
+//! The dense fallback has no offline host emulation, so it is not part of
+//! the fixed series here (the planner's dense decision is pinned by
+//! `rust/tests/planner_selection.rs` instead).  Env knobs:
+//! `F3S_BENCH_FULL=1` for full sizes/iterations.
+
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::graph::batch::{batched_dataset, BatchKind};
+use fused3s::graph::{generators, CsrGraph};
+use fused3s::kernels::{AttentionBatch, Backend, ExecCtx, Plan};
+use fused3s::planner::{CostModel, GraphProfile, Planner, DEFAULT_BUCKETS};
+use fused3s::util::prng::Rng;
+use fused3s::util::timing::{bench, BenchConfig};
+
+/// The fixed comparison series (host-executable backends).
+const FIXED: &[Backend] =
+    &[Backend::Fused3S, Backend::UnfusedStable, Backend::CpuCsr];
+
+/// The two workloads the acceptance gate calls "synthetic extremes".
+const EXTREMES: &[&str] = &["er", "star"];
+
+fn workloads(full: bool) -> Vec<(&'static str, CsrGraph)> {
+    let n = if full { 8192 } else { 2048 };
+    vec![
+        ("er", generators::erdos_renyi(n, 8.0, 41).with_self_loops()),
+        (
+            "sbm",
+            generators::sbm(n / 128, 128, 0.05, 0.0005, 42).with_self_loops(),
+        ),
+        ("star", generators::star(n).with_self_loops()),
+        (
+            "molecule",
+            batched_dataset(n / 16, 12, 28, 43, BatchKind::Molecule)
+                .0
+                .with_self_loops(),
+        ),
+    ]
+}
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let d = 32usize;
+    let man = offline_manifest(8, DEFAULT_BUCKETS, 128);
+    let engine = Engine::new(ExecPolicy { threads: 4, pipeline_depth: 2 });
+    // The planner under test: offline candidates (no dense), factory
+    // constants, refined below from this bench's own measurements.
+    let planner = Planner::offline(CostModel::default());
+
+    println!("planner: auto vs fixed backends, tuned-from-measurement (full={full})");
+    for (gen, g) in workloads(full) {
+        let n = g.n;
+        let profile = GraphProfile::from_csr(&g);
+        let mut rng = Rng::new(0x9A71);
+        let q = rng.normal_vec(n * d, 1.0);
+        let k = rng.normal_vec(n * d, 1.0);
+        let v = rng.normal_vec(n * d, 1.0);
+        let scale = 1.0 / (d as f32).sqrt();
+        let x = AttentionBatch::new(n, d, d, 1, &q, &k, &v, scale);
+
+        // 1. Measure every fixed backend; feed measurements to the model.
+        let mut measured: Vec<(Backend, Option<f64>, Vec<f32>)> = Vec::new();
+        for &b in FIXED {
+            match Plan::new(&man, &g, b, &engine) {
+                Err(e) => {
+                    println!(
+                        "{{\"bench\":\"planner\",\"generator\":\"{gen}\",\
+                         \"backend\":\"{}\",\"feasible\":false,\
+                         \"error\":\"{e}\"}}",
+                        b.name()
+                    );
+                    measured.push((b, None, Vec::new()));
+                }
+                Ok(plan) => {
+                    let out = plan
+                        .execute(&mut ExecCtx::host(&engine), &x)
+                        .expect("fixed backend executes");
+                    let r = bench(b.name(), &cfg, || {
+                        let o = plan
+                            .execute(&mut ExecCtx::host(&engine), &x)
+                            .expect("fixed backend executes");
+                        assert_eq!(o.len(), n * d);
+                    });
+                    let ms = r.median_ms();
+                    let cells = fused3s::planner::cells(b, &profile)
+                        .expect("feasible backend has cells");
+                    planner.observe(b, cells, ms / 1e3);
+                    let predicted_ms = planner
+                        .snapshot()
+                        .predict_s(b, &profile)
+                        .map(|sec| sec * 1e3)
+                        .unwrap_or(0.0);
+                    println!(
+                        "{{\"bench\":\"planner\",\"generator\":\"{gen}\",\
+                         \"backend\":\"{}\",\"feasible\":true,\"n\":{n},\
+                         \"ms\":{ms:.3},\"cells\":{cells:.0},\
+                         \"predicted_ms\":{predicted_ms:.3}}}",
+                        b.name()
+                    );
+                    measured.push((b, Some(ms), out));
+                }
+            }
+        }
+
+        // 2. The tuned planner resolves the workload; run the auto choice.
+        let decision = planner.resolve(&g);
+        let auto_plan =
+            Plan::new(&man, &g, decision.backend, &engine).expect("auto plan");
+        let auto_out = auto_plan
+            .execute(&mut ExecCtx::host(&engine), &x)
+            .expect("auto executes");
+        // Bit-exactness gate: auto must equal the forced-backend run.
+        let forced = measured
+            .iter()
+            .find(|(b, _, _)| *b == decision.backend)
+            .expect("auto resolved to a fixed-series backend");
+        assert_eq!(
+            auto_out, forced.2,
+            "{gen}: auto output diverged from forced {}",
+            decision.backend.name()
+        );
+        let r = bench("auto", &cfg, || {
+            let o = auto_plan
+                .execute(&mut ExecCtx::host(&engine), &x)
+                .expect("auto executes");
+            assert_eq!(o.len(), n * d);
+        });
+        let auto_ms = r.median_ms();
+
+        // 3. Gates + summary row.
+        let feasible: Vec<(Backend, f64)> = measured
+            .iter()
+            .filter_map(|(b, ms, _)| ms.map(|m| (*b, m)))
+            .collect();
+        let worst = feasible
+            .iter()
+            .cloned()
+            .fold((Backend::Fused3S, 0.0f64), |a, b| if b.1 > a.1 { b } else { a });
+        let best = feasible
+            .iter()
+            .cloned()
+            .fold((Backend::Fused3S, f64::INFINITY), |a, b| {
+                if b.1 < a.1 {
+                    b
+                } else {
+                    a
+                }
+            });
+        let never_slower_than_worst = auto_ms <= worst.1 * 1.10;
+        let matches_best = decision.backend == best.0;
+        println!(
+            "{{\"bench\":\"planner\",\"generator\":\"{gen}\",\
+             \"backend\":\"auto\",\"resolved\":\"{}\",\"chunked\":{},\
+             \"ms\":{auto_ms:.3},\"predicted_ms\":{:.3},\
+             \"best_fixed\":\"{}\",\"best_fixed_ms\":{:.3},\
+             \"worst_fixed\":\"{}\",\"worst_fixed_ms\":{:.3},\
+             \"never_slower_than_worst\":{never_slower_than_worst},\
+             \"matches_best\":{matches_best}}}",
+            decision.backend.name(),
+            decision.chunked,
+            decision.predicted_s * 1e3,
+            best.0.name(),
+            best.1,
+            worst.0.name(),
+            worst.1,
+        );
+        assert!(
+            never_slower_than_worst,
+            "{gen}: auto {auto_ms:.3} ms slower than worst fixed {:.3} ms",
+            worst.1
+        );
+        if EXTREMES.contains(&gen) {
+            assert!(
+                matches_best,
+                "{gen}: auto resolved {} but best fixed was {}",
+                decision.backend.name(),
+                best.0.name()
+            );
+        }
+    }
+}

@@ -18,6 +18,7 @@ use super::{build, build_bcsr_like, Bsb};
 /// Measured inputs to the footprint formulas for one graph.
 #[derive(Clone, Debug)]
 pub struct FootprintInputs {
+    /// Matrix dimension (graph nodes).
     pub n: usize,
     /// nonzeros
     pub z: usize,
@@ -33,6 +34,8 @@ pub struct FootprintInputs {
     pub b_bcsr: usize,
 }
 
+/// Measure the block-dependent formula inputs by running both the
+/// compacted (BSB) and non-compacted (BCSR-like) builds on `g`.
 pub fn measure(g: &CsrGraph) -> FootprintInputs {
     let bsb: Bsb = build(g);
     let bcsr = build_bcsr_like(g);

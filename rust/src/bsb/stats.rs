@@ -1,6 +1,8 @@
 //! Sparsity characterisation after BSB compaction — the paper's Table 6
-//! (TCB/RW and nnz/TCB, average + CV) and Table 7 (decile ranges of the
-//! TCB/RW distribution).
+//! (TCB/RW and nnz/TCB, average + CV), Table 7 (decile ranges of the
+//! TCB/RW distribution), and the per-row-window load view
+//! ([`nnz_per_rw`]) the adaptive planner's
+//! [`GraphProfile`](crate::planner::GraphProfile) is built from.
 
 use crate::util::stats as ustats;
 
@@ -64,6 +66,22 @@ pub fn decile_size(bsb: &Bsb) -> usize {
     nonempty / 10
 }
 
+/// Nonzeros per row window (the window *load*, as opposed to its TCB
+/// *shape*): one entry per RW, empty windows included as 0.  A planner
+/// input — nnz/RW variance separates "many medium rows" from "one hub
+/// row" even when the TCB counts agree.
+pub fn nnz_per_rw(bsb: &Bsb) -> Vec<u32> {
+    let per_tcb = bsb.nnz_per_tcb();
+    (0..bsb.num_rw)
+        .map(|i| {
+            per_tcb[bsb.tro[i] as usize..bsb.tro[i + 1] as usize]
+                .iter()
+                .sum()
+        })
+        .collect()
+}
+
+
 #[cfg(test)]
 mod tests {
     use crate::bsb::build;
@@ -105,6 +123,15 @@ mod tests {
         }
         // long tail: last decile max far above first decile max
         assert!(d[9].1 > 2 * d[0].1);
+    }
+
+    #[test]
+    fn nnz_per_rw_sums_to_graph_nnz() {
+        let g = generators::barabasi_albert(2048, 4, 9).with_self_loops();
+        let bsb = build(&g);
+        let per_rw = nnz_per_rw(&bsb);
+        assert_eq!(per_rw.len(), bsb.num_rw);
+        assert_eq!(per_rw.iter().map(|&z| z as usize).sum::<usize>(), g.nnz());
     }
 
     #[test]

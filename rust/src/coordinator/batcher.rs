@@ -42,6 +42,12 @@ pub(crate) struct BatchPolicy {
 pub(crate) struct Admitted {
     pub req: AttnRequest,
     pub arrived: Instant,
+    /// When `req.backend` was originally [`Backend::Auto`], the cost cells
+    /// the planner priced the resolved backend at (`Decision::cells`) —
+    /// carried along so a singleton batch needs no second profiling pass;
+    /// the executor feeds such batches' measured latencies back into the
+    /// cost model.  `None` for explicitly-routed requests.
+    pub auto_cells: Option<f64>,
 }
 
 /// One flushed unit of work: 1..N requests sharing (d, scale, backend).
@@ -95,9 +101,20 @@ impl Coalescer {
     /// a singleton passthrough for non-coalescible requests, a full group
     /// when the size caps trip, or nothing (request parked until its
     /// group's deadline or capacity flush).
-    pub fn admit(&mut self, req: AttnRequest, now: Instant) -> Vec<Flush> {
+    ///
+    /// `req.backend` must already be concrete: the batcher resolves
+    /// [`Backend::Auto`] *before* admission (passing the decision's cost
+    /// cells as `auto_cells`), so auto-routed requests group — and later
+    /// hit the plan cache — under the resolved backend key.
+    pub fn admit(
+        &mut self,
+        req: AttnRequest,
+        now: Instant,
+        auto_cells: Option<f64>,
+    ) -> Vec<Flush> {
+        debug_assert_ne!(req.backend, Backend::Auto, "resolve before admit");
         if !self.coalescible(&req) {
-            return vec![vec![Admitted { req, arrived: now }]];
+            return vec![vec![Admitted { req, arrived: now, auto_cells }]];
         }
         let key = GroupKey {
             d: req.d,
@@ -112,7 +129,7 @@ impl Coalescer {
             deadline: now + self.policy.max_batch_delay,
         });
         group.nodes += Self::weight(&req);
-        group.entries.push(Admitted { req, arrived: now });
+        group.entries.push(Admitted { req, arrived: now, auto_cells });
         if group.nodes >= self.policy.max_batch_nodes
             || group.entries.len() >= self.policy.max_batch_requests
         {
@@ -202,9 +219,9 @@ mod tests {
     fn request_cap_flushes_full_group() {
         let mut co = Coalescer::new(policy(3, 10_000, 100));
         let now = Instant::now();
-        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), now).is_empty());
-        assert!(co.admit(req(1, 8, 4, 1.0, Backend::Fused3S), now).is_empty());
-        let flushed = co.admit(req(2, 8, 4, 1.0, Backend::Fused3S), now);
+        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), now, None).is_empty());
+        assert!(co.admit(req(1, 8, 4, 1.0, Backend::Fused3S), now, None).is_empty());
+        let flushed = co.admit(req(2, 8, 4, 1.0, Backend::Fused3S), now, None);
         assert_eq!(flushed.len(), 1);
         let ids: Vec<u64> = flushed[0].iter().map(|a| a.req.id).collect();
         assert_eq!(ids, vec![0, 1, 2]);
@@ -215,8 +232,8 @@ mod tests {
     fn node_cap_flushes_group() {
         let mut co = Coalescer::new(policy(100, 20, 100));
         let now = Instant::now();
-        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), now).is_empty());
-        let flushed = co.admit(req(1, 12, 4, 1.0, Backend::Fused3S), now);
+        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), now, None).is_empty());
+        let flushed = co.admit(req(1, 12, 4, 1.0, Backend::Fused3S), now, None);
         assert_eq!(flushed.len(), 1);
         assert_eq!(flushed[0].len(), 2);
     }
@@ -225,14 +242,14 @@ mod tests {
     fn incompatible_requests_do_not_mix() {
         let mut co = Coalescer::new(policy(2, 10_000, 100));
         let now = Instant::now();
-        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), now).is_empty());
+        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), now, None).is_empty());
         // Different d, different scale, different backend: three new groups.
-        assert!(co.admit(req(1, 8, 8, 1.0, Backend::Fused3S), now).is_empty());
-        assert!(co.admit(req(2, 8, 4, 0.5, Backend::Fused3S), now).is_empty());
-        assert!(co.admit(req(3, 8, 4, 1.0, Backend::CpuCsr), now).is_empty());
+        assert!(co.admit(req(1, 8, 8, 1.0, Backend::Fused3S), now, None).is_empty());
+        assert!(co.admit(req(2, 8, 4, 0.5, Backend::Fused3S), now, None).is_empty());
+        assert!(co.admit(req(3, 8, 4, 1.0, Backend::CpuCsr), now, None).is_empty());
         assert_eq!(co.pending(), 4);
         // A matching partner flushes only its own group.
-        let flushed = co.admit(req(4, 8, 4, 1.0, Backend::Fused3S), now);
+        let flushed = co.admit(req(4, 8, 4, 1.0, Backend::Fused3S), now, None);
         assert_eq!(flushed.len(), 1);
         let ids: Vec<u64> = flushed[0].iter().map(|a| a.req.id).collect();
         assert_eq!(ids, vec![0, 4]);
@@ -246,12 +263,12 @@ mod tests {
         // requests of the same graphs (weight 16) would keep parking.
         let mut co = Coalescer::new(policy(100, 100, 100));
         let now = Instant::now();
-        assert!(co.admit(req_heads(0, 16, 4, 4), now).is_empty());
-        let flushed = co.admit(req_heads(1, 16, 4, 4), now);
+        assert!(co.admit(req_heads(0, 16, 4, 4), now, None).is_empty());
+        let flushed = co.admit(req_heads(1, 16, 4, 4), now, None);
         assert_eq!(flushed.len(), 1);
         assert_eq!(flushed[0].len(), 2);
         // And a single request at weight ≥ budget runs alone outright.
-        let f = co.admit(req_heads(2, 32, 4, 4), now);
+        let f = co.admit(req_heads(2, 32, 4, 4), now, None);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].len(), 1);
         assert_eq!(co.pending(), 0);
@@ -261,12 +278,12 @@ mod tests {
     fn head_counts_do_not_mix() {
         let mut co = Coalescer::new(policy(2, 10_000, 100));
         let now = Instant::now();
-        assert!(co.admit(req_heads(0, 8, 4, 1), now).is_empty());
+        assert!(co.admit(req_heads(0, 8, 4, 1), now, None).is_empty());
         // Same d/scale/backend but different heads: a new group.
-        assert!(co.admit(req_heads(1, 8, 4, 4), now).is_empty());
+        assert!(co.admit(req_heads(1, 8, 4, 4), now, None).is_empty());
         assert_eq!(co.pending(), 2);
         // A matching 4-head partner flushes only the 4-head group.
-        let flushed = co.admit(req_heads(2, 8, 4, 4), now);
+        let flushed = co.admit(req_heads(2, 8, 4, 4), now, None);
         assert_eq!(flushed.len(), 1);
         let ids: Vec<u64> = flushed[0].iter().map(|a| a.req.id).collect();
         assert_eq!(ids, vec![1, 2]);
@@ -277,11 +294,11 @@ mod tests {
     fn dense_and_oversize_pass_through() {
         let mut co = Coalescer::new(policy(8, 32, 100));
         let now = Instant::now();
-        let f = co.admit(req(0, 8, 4, 1.0, Backend::Dense), now);
+        let f = co.admit(req(0, 8, 4, 1.0, Backend::Dense), now, None);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].len(), 1);
         // A request at/above max_batch_nodes runs alone.
-        let f = co.admit(req(1, 40, 4, 1.0, Backend::Fused3S), now);
+        let f = co.admit(req(1, 40, 4, 1.0, Backend::Fused3S), now, None);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].len(), 1);
         assert_eq!(co.pending(), 0);
@@ -291,9 +308,9 @@ mod tests {
     fn deadline_flushes_only_due_groups() {
         let mut co = Coalescer::new(policy(10, 10_000, 5));
         let t0 = Instant::now();
-        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), t0).is_empty());
+        assert!(co.admit(req(0, 8, 4, 1.0, Backend::Fused3S), t0, None).is_empty());
         let t1 = t0 + Duration::from_millis(3);
-        assert!(co.admit(req(1, 8, 8, 1.0, Backend::Fused3S), t1).is_empty());
+        assert!(co.admit(req(1, 8, 8, 1.0, Backend::Fused3S), t1, None).is_empty());
         assert_eq!(co.next_deadline(), Some(t0 + Duration::from_millis(5)));
         // At t0+5ms only the first group is due.
         let due = co.flush_due(t0 + Duration::from_millis(5));
@@ -313,7 +330,7 @@ mod tests {
         let now = Instant::now();
         for i in 0..4 {
             assert!(co
-                .admit(req(i, 8, 4 + (i as usize % 2) * 4, 1.0, Backend::Fused3S), now)
+                .admit(req(i, 8, 4 + (i as usize % 2) * 4, 1.0, Backend::Fused3S), now, None)
                 .is_empty());
         }
         assert_eq!(co.pending(), 4);
@@ -328,7 +345,7 @@ mod tests {
         let mut co = Coalescer::new(policy(1, 10_000, 100));
         let now = Instant::now();
         for i in 0..3 {
-            let f = co.admit(req(i, 8, 4, 1.0, Backend::Fused3S), now);
+            let f = co.admit(req(i, 8, 4, 1.0, Backend::Fused3S), now, None);
             assert_eq!(f.len(), 1);
             assert_eq!(f[0].len(), 1);
         }

@@ -1,13 +1,17 @@
 //! Serving metrics: latency distribution + throughput + queue accounting +
-//! batching/cache counters for the coalescing path.
+//! batching/cache counters for the coalescing path + adaptive-planner
+//! counters for the [`Backend::Auto`](crate::kernels::Backend::Auto) path.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::kernels::Backend;
 use crate::util::stats;
 
-/// Thread-safe latency recorder.
+/// Thread-safe latency recorder: accumulates raw per-event samples and
+/// summarises them on demand.
 #[derive(Default)]
 pub struct LatencyRecorder {
     samples: Mutex<Vec<f64>>,
@@ -18,10 +22,12 @@ impl LatencyRecorder {
         Self::default()
     }
 
+    /// Record one latency sample, in seconds.
     pub fn record(&self, seconds: f64) {
         self.samples.lock().unwrap().push(seconds);
     }
 
+    /// Percentile summary over every sample recorded so far.
     pub fn snapshot(&self) -> LatencySummary {
         let mut v = self.samples.lock().unwrap().clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -36,13 +42,20 @@ impl LatencyRecorder {
     }
 }
 
+/// Point-in-time percentile view of a [`LatencyRecorder`] (seconds).
 #[derive(Clone, Debug, Default)]
 pub struct LatencySummary {
+    /// Samples recorded.
     pub count: usize,
+    /// Median latency.
     pub p50_s: f64,
+    /// 95th-percentile latency.
     pub p95_s: f64,
+    /// 99th-percentile latency.
     pub p99_s: f64,
+    /// Mean latency.
     pub mean_s: f64,
+    /// Worst observed latency.
     pub max_s: f64,
 }
 
@@ -107,12 +120,64 @@ impl BatchingCounters {
     }
 }
 
+/// Counters for the adaptive-planner path: how much traffic arrives as
+/// [`Backend::Auto`](crate::kernels::Backend::Auto), which backends the
+/// planner routes it to, and how many measured latencies have been fed
+/// back into the cost-model calibration (the online refinement loop).
+#[derive(Default)]
+pub struct PlannerCounters {
+    auto_requests: AtomicU64,
+    observations: AtomicU64,
+    resolved: Mutex<BTreeMap<&'static str, u64>>,
+}
+
+impl PlannerCounters {
+    /// Record one `Backend::Auto` request resolved to `backend`.
+    pub fn auto_resolved(&self, backend: Backend) {
+        self.auto_requests.fetch_add(1, Ordering::Relaxed);
+        *self.resolved.lock().unwrap().entry(backend.name()).or_insert(0) += 1;
+    }
+
+    /// Record one measured-latency observation folded into the cost model.
+    pub fn observation(&self) {
+        self.observations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests that arrived as `Backend::Auto`.
+    pub fn auto_requests(&self) -> u64 {
+        self.auto_requests.load(Ordering::Relaxed)
+    }
+
+    /// Calibration observations fed back so far.
+    pub fn observations(&self) -> u64 {
+        self.observations.load(Ordering::Relaxed)
+    }
+
+    /// Per-backend resolution counts, `(backend name, requests)`, sorted
+    /// by name.
+    pub fn resolved_counts(&self) -> Vec<(&'static str, u64)> {
+        self.resolved
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&k, &v)| (k, v))
+            .collect()
+    }
+}
+
 /// Aggregate serving metrics over a run.
 pub struct Metrics {
+    /// End-to-end request latency (admission → response, queueing
+    /// included).
     pub latency: LatencyRecorder,
+    /// Per-batch preprocessing time (merge + BSB build + bucket plan).
     pub preprocess: LatencyRecorder,
+    /// Per-batch kernel execution time.
     pub execute: LatencyRecorder,
+    /// Coalescing and plan-cache counters.
     pub batching: BatchingCounters,
+    /// `Backend::Auto` routing and refinement counters.
+    pub planner: PlannerCounters,
     started: Instant,
     completed: Mutex<u64>,
     failed: Mutex<u64>,
@@ -125,6 +190,7 @@ impl Default for Metrics {
             preprocess: LatencyRecorder::new(),
             execute: LatencyRecorder::new(),
             batching: BatchingCounters::default(),
+            planner: PlannerCounters::default(),
             started: Instant::now(),
             completed: Mutex::new(0),
             failed: Mutex::new(0),
@@ -137,6 +203,7 @@ impl Metrics {
         Self::default()
     }
 
+    /// Record one finished request (success or failure).
     pub fn request_done(&self, ok: bool) {
         if ok {
             *self.completed.lock().unwrap() += 1;
@@ -145,10 +212,12 @@ impl Metrics {
         }
     }
 
+    /// Requests completed successfully.
     pub fn completed(&self) -> u64 {
         *self.completed.lock().unwrap()
     }
 
+    /// Requests that finished with an error response.
     pub fn failed(&self) -> u64 {
         *self.failed.lock().unwrap()
     }
@@ -166,7 +235,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         let l = self.latency.snapshot();
         let b = &self.batching;
-        format!(
+        let mut line = format!(
             "requests={} failed={} throughput={:.2} req/s  \
              latency p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms  \
              batches={} coalesced={} largest={}  \
@@ -184,7 +253,24 @@ impl Metrics {
             b.cache_hits(),
             b.cache_misses(),
             b.cache_evictions(),
-        )
+        );
+        // The planner line only appears once auto traffic exists, keeping
+        // fixed-backend serving logs byte-identical to previous releases.
+        let p = &self.planner;
+        if p.auto_requests() > 0 {
+            let routed: Vec<String> = p
+                .resolved_counts()
+                .into_iter()
+                .map(|(name, count)| format!("{name}={count}"))
+                .collect();
+            line.push_str(&format!(
+                "  planner auto={} obs={} [{}]",
+                p.auto_requests(),
+                p.observations(),
+                routed.join(" "),
+            ));
+        }
+        line
     }
 }
 
@@ -234,5 +320,25 @@ mod tests {
         assert_eq!(m.batching.cache_evictions(), 2);
         assert!(m.report().contains("largest=5"));
         assert!(m.report().contains("hit/miss/evict=1/2/2"));
+    }
+
+    #[test]
+    fn planner_counters() {
+        let m = Metrics::new();
+        // No auto traffic: the report stays planner-free (old log shape).
+        assert!(!m.report().contains("planner"));
+        m.planner.auto_resolved(Backend::Fused3S);
+        m.planner.auto_resolved(Backend::Fused3S);
+        m.planner.auto_resolved(Backend::CpuCsr);
+        m.planner.observation();
+        assert_eq!(m.planner.auto_requests(), 3);
+        assert_eq!(m.planner.observations(), 1);
+        assert_eq!(
+            m.planner.resolved_counts(),
+            vec![("cpu_csr", 1), ("fused3s", 2)]
+        );
+        let r = m.report();
+        assert!(r.contains("planner auto=3 obs=1"), "{r}");
+        assert!(r.contains("fused3s=2"), "{r}");
     }
 }

@@ -5,10 +5,12 @@
 //! ```text
 //!  clients ── submit ──► bounded ingress queue (backpressure: blocks)
 //!                            │
-//!                     batcher thread (dynamic request coalescing: groups
-//!                     compatible small-graph requests into block-diagonal
-//!                     batches by size/deadline policy — paper §4.1's
-//!                     batched-graph workload, applied to serving)
+//!                     batcher thread (resolves Backend::Auto through the
+//!                     adaptive planner, then dynamic request coalescing:
+//!                     groups compatible small-graph requests into
+//!                     block-diagonal batches by size/deadline policy —
+//!                     paper §4.1's batched-graph workload, applied to
+//!                     serving)
 //!                            │
 //!              preprocessing workers (merge components, fingerprint-keyed
 //!              BSB cache, BSB build + bucket plan on cache miss; the
@@ -25,6 +27,13 @@
 //! artifacts only (or, under `ExecutorKind::HostEmulation`, the CPU
 //! emulation of the fused call — which is how the differential batching
 //! tests and the stress suite run the full path with no artifacts).
+//!
+//! The executor additionally closes the adaptive-planner loop: batches
+//! whose backend was chosen by the planner
+//! ([`Backend::Auto`](crate::kernels::Backend::Auto)) report their
+//! measured kernel latency back into the cost-model calibration, which
+//! can be persisted across restarts via
+//! [`CoordinatorConfig::calibration_path`].
 
 mod batcher;
 mod cache;
@@ -33,6 +42,6 @@ pub mod request;
 pub mod server;
 
 pub use cache::DriverCache;
-pub use metrics::{BatchingCounters, LatencyRecorder, Metrics};
+pub use metrics::{BatchingCounters, LatencyRecorder, Metrics, PlannerCounters};
 pub use request::{AttnRequest, AttnResponse};
 pub use server::{Coordinator, CoordinatorConfig, ExecutorKind};

@@ -22,7 +22,10 @@ pub struct AttnRequest {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
     pub scale: f32,
-    /// Which execution strategy to use (defaults to Fused3S).
+    /// Which execution strategy to use.  [`Backend::Auto`] delegates the
+    /// choice to the adaptive planner ([`crate::planner`]): the coordinator
+    /// resolves it at admission, so the request coalesces and caches under
+    /// whatever concrete backend the planner picked.
     pub backend: Backend,
     /// Where to deliver the result.
     pub reply: Sender<AttnResponse>,

@@ -14,10 +14,15 @@
 //!    drops).  The batcher → worker and worker → executor queues are
 //!    bounded too (same `queue_capacity`), so overload propagates back to
 //!    `submit` instead of accumulating merged feature buffers in memory;
-//! 2. **coalescing** — a single batcher thread groups compatible pending
-//!    requests (same d/scale/backend) by the size/deadline policy
+//! 2. **coalescing** — a single batcher thread first resolves
+//!    [`Backend::Auto`] through the adaptive planner
+//!    ([`crate::planner`]; profile → cost model → cheapest feasible
+//!    backend), then groups compatible pending requests (same
+//!    d/dv/heads/scale and *resolved* backend) by the size/deadline policy
 //!    (`max_batch_nodes`, `max_batch_delay`) into block-diagonal batches —
-//!    the paper's §4.1 batched-graph workload, applied to serving;
+//!    the paper's §4.1 batched-graph workload, applied to serving.
+//!    Resolving before grouping means auto traffic coalesces with, and
+//!    shares cached plans with, explicitly-routed traffic;
 //! 3. **preprocessing** — workers merge each batch into one `CsrGraph`
 //!    (`graph::batch::batch_graph_refs`), consult the fingerprint-keyed
 //!    BSB cache, and build a shared [`Plan`] on the process-wide
@@ -45,6 +50,7 @@ use crate::exec::{offline_manifest, Engine, ExecPolicy};
 use crate::graph::batch::batch_graph_refs;
 use crate::graph::CsrGraph;
 use crate::kernels::{AttentionBatch, AttnError, Backend, ExecCtx, Plan};
+use crate::planner::{self, CostModel, GraphProfile, Planner};
 use crate::runtime::{Manifest, Runtime};
 
 use super::batcher::{Admitted, BatchPolicy, Coalescer, Flush};
@@ -66,8 +72,8 @@ pub enum ExecutorKind {
 }
 
 /// Bucketing configuration used in `HostEmulation` mode (matches the
-/// offline test/bench manifests).
-const OFFLINE_BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+/// offline test/bench manifests and the planner's profiling ladder).
+const OFFLINE_BUCKETS: &[usize] = planner::DEFAULT_BUCKETS;
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -92,6 +98,10 @@ pub struct CoordinatorConfig {
     pub max_batch_delay: Duration,
     /// Prepared-driver (BSB) cache entries; 0 disables the cache.
     pub cache_capacity: usize,
+    /// Where the adaptive planner persists its cost-model calibration
+    /// (loaded at startup if present, saved at shutdown).  `None` keeps the
+    /// refinement in-memory only.
+    pub calibration_path: Option<PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -106,6 +116,7 @@ impl Default for CoordinatorConfig {
             max_batch_nodes: 16384,
             max_batch_delay: Duration::from_micros(500),
             cache_capacity: 128,
+            calibration_path: None,
         }
     }
 }
@@ -132,6 +143,14 @@ struct Entry {
     arrived: Instant,
 }
 
+/// Refinement payload for a batch whose backend the planner chose: the
+/// executor pairs these cost cells with the measured execute time and
+/// feeds the sample back into the cost model.
+struct TuneInfo {
+    backend: Backend,
+    cells: f64,
+}
+
 /// A preprocessed batch waiting for the executor: the merged head-major
 /// problem plus per-component scatter routes.
 struct PreparedBatch {
@@ -148,6 +167,9 @@ struct PreparedBatch {
     v: Vec<f32>,
     plan: std::result::Result<Arc<Plan>, AttnError>,
     preprocess_s: f64,
+    /// Present iff any member arrived as `Backend::Auto` (the refinement
+    /// loop only pays the profiling cost for planner-routed traffic).
+    tune: Option<TuneInfo>,
 }
 
 /// Handle to a running coordinator.  Each request travels with its
@@ -157,6 +179,8 @@ struct PreparedBatch {
 pub struct Coordinator {
     ingress: SyncSender<(AttnRequest, Instant)>,
     metrics: Arc<Metrics>,
+    planner: Arc<Planner>,
+    calibration_path: Option<PathBuf>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     executor: Option<JoinHandle<()>>,
@@ -183,6 +207,27 @@ impl Coordinator {
         let engine = Arc::new(Engine::new(cfg.exec));
         let cache = Arc::new(DriverCache::new(cfg.cache_capacity));
 
+        // The adaptive planner behind `Backend::Auto`.  A persisted
+        // calibration (if any) seeds the cost model; an unreadable or
+        // corrupt file degrades to factory constants rather than failing
+        // startup.  The dense fallback is only a candidate when the loaded
+        // manifest actually carries compiled dense executables (host
+        // emulation cannot run it, and fast-mode artifact builds may omit
+        // it) — the same gate `Backend::resolve_for` applies standalone.
+        let model = match &cfg.calibration_path {
+            Some(path) if path.exists() => CostModel::load(path)
+                .map_err(|e| eprintln!("planner: ignoring calibration: {e:#}"))
+                .unwrap_or_default(),
+            _ => CostModel::default(),
+        };
+        let dense_available = cfg.executor == ExecutorKind::Pjrt
+            && manifest.entries.keys().any(|k| k.starts_with("dense_n"));
+        let planner = Arc::new(if dense_available {
+            Planner::new(model)
+        } else {
+            Planner::offline(model)
+        });
+
         // Bounded queues end to end: submit blocks (never drops) once the
         // ingress fills, and the batcher/worker stages block rather than
         // buffer unbounded merged feature payloads, so sustained overload
@@ -192,10 +237,15 @@ impl Coordinator {
         let (job_tx, job_rx) = sync_channel::<Job>(bound);
         let (prep_tx, prep_rx) = sync_channel::<PreparedBatch>(bound);
 
-        // Stage 1: the single coalescing thread.
+        // Stage 1: the single coalescing thread — which also resolves
+        // `Backend::Auto` so coalescing groups and the plan cache both key
+        // on the *resolved* backend.
         let policy = cfg.batch_policy();
-        let batcher =
-            std::thread::spawn(move || batcher_loop(ingress_rx, job_tx, policy));
+        let pl = planner.clone();
+        let met = metrics.clone();
+        let batcher = std::thread::spawn(move || {
+            batcher_loop(ingress_rx, job_tx, policy, pl, met)
+        });
 
         // Stage 2: preprocessing workers share the job queue.
         let job_rx = Arc::new(Mutex::new(job_rx));
@@ -220,6 +270,7 @@ impl Coordinator {
         let dir = cfg.artifacts_dir.clone();
         let eng = engine.clone();
         let kind = cfg.executor;
+        let pl2 = planner.clone();
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
         let executor = std::thread::spawn(move || {
             let backend = match kind {
@@ -238,7 +289,7 @@ impl Coordinator {
                     ExecBackend::Host
                 }
             };
-            executor_loop(backend, prep_rx, m2, eng)
+            executor_loop(backend, prep_rx, m2, eng, pl2)
         });
         ready_rx
             .recv()
@@ -248,6 +299,8 @@ impl Coordinator {
         Ok(Coordinator {
             ingress: ingress_tx,
             metrics,
+            planner,
+            calibration_path: cfg.calibration_path.clone(),
             batcher: Some(batcher),
             workers,
             executor: Some(executor),
@@ -256,21 +309,34 @@ impl Coordinator {
 
     /// Submit a request.  Blocks while the ingress queue is at
     /// `queue_capacity` (backpressure); the reply arrives on `req.reply`.
-    /// After [`Coordinator::shutdown`] the queue is gone and submission
-    /// fails with the structured [`AttnError::QueueClosed`].
+    /// Requests may carry [`Backend::Auto`]: the batcher resolves them
+    /// through the adaptive planner before coalescing, and the measured
+    /// latency of every auto-routed batch refines the planner's cost
+    /// model.  After [`Coordinator::shutdown`] the queue is gone and
+    /// submission fails with the structured [`AttnError::QueueClosed`].
     pub fn submit(&self, req: AttnRequest) -> std::result::Result<(), AttnError> {
         self.ingress
             .send((req, Instant::now()))
             .map_err(|_| AttnError::QueueClosed)
     }
 
+    /// The serving metrics (latency, batching, cache and planner counters).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
+    /// The adaptive planner behind [`Backend::Auto`] routing — exposes the
+    /// current cost-model calibration
+    /// ([`Planner::snapshot`](crate::planner::Planner::snapshot)) and
+    /// accepts out-of-band observations.
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
     /// Stop all stages, draining every queue — including requests still
     /// parked in the coalescing queue — so each submitted request gets a
-    /// response before this returns.
+    /// response before this returns.  If a calibration path was
+    /// configured, the refined cost model is persisted here.
     pub fn shutdown(mut self) {
         drop(std::mem::replace(&mut self.ingress, sync_channel(1).0));
         if let Some(b) = self.batcher.take() {
@@ -282,6 +348,11 @@ impl Coordinator {
         if let Some(e) = self.executor.take() {
             let _ = e.join();
         }
+        if let Some(path) = &self.calibration_path {
+            if let Err(e) = self.planner.save(path) {
+                eprintln!("planner: failed to persist calibration: {e:#}");
+            }
+        }
     }
 }
 
@@ -289,6 +360,8 @@ fn batcher_loop(
     rx: Receiver<(AttnRequest, Instant)>,
     tx: SyncSender<Job>,
     policy: BatchPolicy,
+    planner: Arc<Planner>,
+    metrics: Arc<Metrics>,
 ) {
     let mut co = Coalescer::new(policy);
     let send_all = |tx: &SyncSender<Job>, flushes: Vec<Flush>| -> bool {
@@ -298,6 +371,41 @@ fn batcher_loop(
             }
         }
         true
+    };
+    // Rewrite `Backend::Auto` to the planner's choice *before* admission:
+    // the coalescer groups on the resolved backend, and downstream the
+    // plan cache keys on it too, so auto traffic shares batches and cache
+    // entries with explicitly-routed traffic.  The decision's cost cells
+    // travel with the request so singleton batches need no second
+    // profiling pass.
+    //
+    // Profiling runs on this single thread, so repeated structures (the
+    // serving steady state) memoise their decision by graph fingerprint;
+    // an entry is only valid while the calibration epoch (observation
+    // count) is unchanged, so online refinement still re-decides.
+    let mut decisions: std::collections::HashMap<u64, (u64, Backend, f64)> =
+        std::collections::HashMap::new();
+    const DECISION_MEMO_CAP: usize = 1024;
+    let mut resolve = |req: &mut AttnRequest| -> Option<f64> {
+        if req.backend != Backend::Auto {
+            return None;
+        }
+        let fp = req.graph.fingerprint();
+        let epoch = metrics.planner.observations();
+        let (backend, cells) = match decisions.get(&fp) {
+            Some(&(e, b, c)) if e == epoch => (b, c),
+            _ => {
+                let d = planner.resolve(&req.graph);
+                if decisions.len() >= DECISION_MEMO_CAP {
+                    decisions.clear();
+                }
+                decisions.insert(fp, (epoch, d.backend, d.cells));
+                (d.backend, d.cells)
+            }
+        };
+        metrics.planner.auto_resolved(backend);
+        req.backend = backend;
+        Some(cells)
     };
     loop {
         // Block outright while nothing is parked (a deadline can only be
@@ -328,10 +436,11 @@ fn batcher_loop(
                 }
             }
         };
-        let Some((req, arrived)) = msg else {
+        let Some((mut req, arrived)) = msg else {
             return;
         };
-        if !send_all(&tx, co.admit(req, arrived)) {
+        let auto = resolve(&mut req);
+        if !send_all(&tx, co.admit(req, arrived, auto)) {
             return;
         }
         // Greedily admit everything already queued before honouring
@@ -340,8 +449,9 @@ fn batcher_loop(
         // capacity instead of trickling out as overdue singletons.
         loop {
             match rx.try_recv() {
-                Ok((req, arrived)) => {
-                    if !send_all(&tx, co.admit(req, arrived)) {
+                Ok((mut req, arrived)) => {
+                    let auto = resolve(&mut req);
+                    if !send_all(&tx, co.admit(req, arrived, auto)) {
                         return;
                     }
                 }
@@ -428,10 +538,19 @@ fn prepare_job(
     let heads = valid[0].req.heads;
     let scale = valid[0].req.scale;
     let backend = valid[0].req.backend;
+    let wants_tune = valid.iter().any(|a| a.auto_cells.is_some());
     let refs: Vec<&CsrGraph> = valid.iter().map(|a| &a.req.graph).collect();
     let (merged, offsets) = batch_graph_refs(&refs);
     match shared_plan(&merged, backend, man, engine, cache, metrics) {
         Ok(plan) => {
+            // The merged block-diagonal structure differs from any member's,
+            // so a coalesced auto batch is profiled once here; singletons
+            // reuse the cells the batcher's resolution already computed.
+            let tune = if wants_tune {
+                tune_info(&merged, backend, heads, d)
+            } else {
+                None
+            };
             // Merge per-request head-major features into one head-major
             // problem over the block-diagonal graph: head h's block is the
             // in-order concatenation of every component's head-h rows
@@ -472,6 +591,7 @@ fn prepare_job(
                 v,
                 plan: Ok(plan),
                 preprocess_s: t0.elapsed().as_secs_f64(),
+                tune,
             }]
         }
         // Merged preparation failed: requests that would succeed alone must
@@ -495,6 +615,13 @@ fn prepare_single(
     let t0 = Instant::now();
     let plan = shared_plan(&a.req.graph, a.req.backend, man, engine, cache, metrics);
     metrics.batching.record_batch(1);
+    let tune = match (a.auto_cells, plan.is_ok()) {
+        (Some(cells), true) => Some(TuneInfo {
+            backend: a.req.backend,
+            cells: planner::effective_cells(cells, a.req.heads, a.req.d),
+        }),
+        _ => None,
+    };
     let n = a.req.graph.n;
     let entry = Entry { id: a.req.id, reply: a.req.reply, arrived: a.arrived };
     PreparedBatch {
@@ -510,7 +637,27 @@ fn prepare_single(
         v: a.req.v,
         plan,
         preprocess_s: t0.elapsed().as_secs_f64(),
+        tune,
     }
+}
+
+/// Refinement payload for a batch executed on `backend` over `graph`: the
+/// cost cells the model would have priced, scaled to the executed
+/// `heads`/`d` shape ([`planner::effective_cells`]) and paired later with
+/// the measured execute time.  `None` when the backend has no cost-cell
+/// mapping for the graph (never true for a backend the planner itself
+/// chose).
+fn tune_info(
+    graph: &CsrGraph,
+    backend: Backend,
+    heads: usize,
+    d: usize,
+) -> Option<TuneInfo> {
+    let profile = GraphProfile::from_csr(graph);
+    planner::cells(backend, &profile).map(|cells| TuneInfo {
+        backend,
+        cells: planner::effective_cells(cells, heads, d),
+    })
 }
 
 /// Resolve the prepared plan for a graph: fingerprint-keyed cache first,
@@ -552,6 +699,7 @@ fn executor_loop(
     rx: Receiver<PreparedBatch>,
     metrics: Arc<Metrics>,
     engine: Arc<Engine>,
+    planner: Arc<Planner>,
 ) {
     while let Ok(p) = rx.recv() {
         let t0 = Instant::now();
@@ -571,6 +719,12 @@ fn executor_loop(
         let execute_s = t0.elapsed().as_secs_f64();
         metrics.preprocess.record(p.preprocess_s);
         metrics.execute.record(execute_s);
+        // The online refinement loop: planner-routed batches feed their
+        // measured kernel latency back into the cost-model calibration.
+        if let (Some(t), Ok(_)) = (&p.tune, &result) {
+            planner.observe(t.backend, t.cells, execute_s);
+            metrics.planner.observation();
+        }
         let batch_size = p.entries.len();
         let offsets = p.offsets;
         let (n_total, dv, heads) = (p.n_total, p.dv, p.heads);

@@ -13,11 +13,15 @@
 //! | Fig. 8 (end-to-end GT inference)   | [`fig8`]      | `fig8` |
 //! | §4.3 ablations                     | [`ablations`] | `ablate-*` |
 //! | §3.5 stability                     | [`stability`] | `stability` |
+//!
+//! Beyond the paper, [`planner`] (`repro plan`) audits the adaptive
+//! backend planner's per-dataset decisions (EXPERIMENTS.md §Planner).
 
 pub mod ablations;
 pub mod fig5;
 pub mod fig7;
 pub mod fig8;
+pub mod planner;
 pub mod report;
 pub mod stability;
 pub mod table3;

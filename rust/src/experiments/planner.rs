@@ -1,0 +1,96 @@
+//! Planner decision audit — `repro plan`: what the adaptive backend
+//! planner would choose for each dataset, and why.
+//!
+//! Not a paper artifact: this is the introspection table for the
+//! [`crate::planner`] subsystem (EXPERIMENTS.md §Planner).  For each
+//! dataset it prints the extracted [`GraphProfile`] features next to every
+//! candidate backend's predicted latency under the factory cost model, and
+//! marks the winner.  `benches/planner.rs` is the measuring counterpart
+//! (predicted vs measured, auto vs fixed).
+
+use anyhow::Result;
+
+use crate::graph::datasets;
+use crate::planner::{CostModel, GraphProfile, Planner, COST_FAMILIES};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::report::{f, Table};
+
+/// Audit the factory planner's decision for each named dataset.
+pub fn run(names: &[String]) -> Result<Json> {
+    let planner = Planner::new(CostModel::default());
+    let mut table = Table::new(&[
+        "dataset", "n", "nnz", "tcb/rw cv", "hub skew", "oversize",
+        "fused3s ms", "unfused ms", "dense ms", "cpu ms", "choice",
+    ]);
+    let mut results = Vec::new();
+    for name in names {
+        let d = datasets::by_name(name)?;
+        let profile = GraphProfile::from_csr(&d.graph);
+        let decision = planner.decide(&profile);
+        let ms = |b| {
+            decision
+                .scores
+                .iter()
+                .find(|sc| sc.backend == b)
+                .and_then(|sc| sc.predicted_s)
+                .map(|sec| f(sec * 1e3, 3))
+                .unwrap_or_else(|| "infeasible".into())
+        };
+        let mut cells = vec![
+            d.name.to_string(),
+            profile.n.to_string(),
+            profile.nnz.to_string(),
+            f(profile.tcb_per_rw_cv, 2),
+            f(profile.hub_skew, 1),
+            profile.oversize_rws.to_string(),
+        ];
+        for b in COST_FAMILIES {
+            cells.push(ms(b));
+        }
+        let mut choice = decision.backend.name().to_string();
+        if decision.chunked {
+            choice.push_str(" (chunked)");
+        }
+        cells.push(choice);
+        table.row(cells);
+        results.push(obj(vec![
+            ("dataset", s(d.name)),
+            ("n", num(profile.n as f64)),
+            ("nnz", num(profile.nnz as f64)),
+            ("tcb_per_rw_cv", num(profile.tcb_per_rw_cv)),
+            ("hub_skew", num(profile.hub_skew)),
+            ("oversize_rws", num(profile.oversize_rws as f64)),
+            ("choice", s(decision.backend.name())),
+            ("chunked", Json::Bool(decision.chunked)),
+            ("predicted_ms", num(decision.predicted_s * 1e3)),
+            (
+                "scores",
+                Json::Arr(
+                    decision
+                        .scores
+                        .iter()
+                        .map(|sc| {
+                            obj(vec![
+                                ("backend", s(sc.backend.name())),
+                                (
+                                    "predicted_ms",
+                                    sc.predicted_s
+                                        .map(|sec| num(sec * 1e3))
+                                        .unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    println!(
+        "Planner audit — factory cost model, per-dataset decision\n\
+         (predictions are device-regime estimates; the serving loop\n\
+         refines the constants from measured latencies):"
+    );
+    table.print();
+    Ok(arr(results))
+}

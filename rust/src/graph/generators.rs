@@ -114,6 +114,18 @@ pub fn grid2d(rows: usize, cols: usize) -> CsrGraph {
     CsrGraph::from_edges(n, &edges).expect("generated edges in range")
 }
 
+/// Complete graph on n nodes (every ordered pair, self loops included) —
+/// the fully-dense extreme the dense-fallback backend targets.
+pub fn clique(n: usize) -> CsrGraph {
+    let mut edges = Vec::with_capacity(n * n);
+    for u in 0..n as u32 {
+        for v in 0..n as u32 {
+            edges.push((u, v));
+        }
+    }
+    CsrGraph::from_edges(n, &edges).expect("generated edges in range")
+}
+
 /// Star graph: node 0 connected to all others (extreme imbalance case).
 pub fn star(n: usize) -> CsrGraph {
     let mut edges = Vec::with_capacity(2 * (n - 1));
@@ -231,6 +243,14 @@ mod tests {
         assert_eq!(s.degree(1), 1);
         let r = ring(64);
         assert!(r.degrees().iter().all(|&d| d == 2));
+    }
+
+    #[test]
+    fn clique_is_complete() {
+        let g = clique(12);
+        assert_eq!(g.nnz(), 144);
+        assert!(g.degrees().iter().all(|&d| d == 12));
+        assert!(g.is_symmetric());
     }
 
     #[test]

@@ -43,6 +43,14 @@ pub enum Backend {
     Dense,
     /// PyG/DGL analog: scalar CSR on CPU.
     CpuCsr,
+    /// Let the adaptive planner choose (see [`crate::planner`]): the graph
+    /// is profiled and the cheapest feasible backend under the current
+    /// cost-model calibration is substituted.  `Auto` is resolved *before*
+    /// preparation — a built [`Plan`](super::Plan) always reports the
+    /// concrete backend, the coordinator resolves at admission so
+    /// auto-routed requests coalesce and cache under the resolved key, and
+    /// `Auto` itself never reaches a driver.
+    Auto,
 }
 
 impl Backend {
@@ -56,6 +64,7 @@ impl Backend {
             Backend::UnfusedStable => "unfused_stable",
             Backend::Dense => "dense",
             Backend::CpuCsr => "cpu_csr",
+            Backend::Auto => "auto",
         }
     }
 
@@ -69,6 +78,7 @@ impl Backend {
             "unfused_stable" => Backend::UnfusedStable,
             "dense" => Backend::Dense,
             "cpu_csr" => Backend::CpuCsr,
+            "auto" => Backend::Auto,
             _ => anyhow::bail!("unknown backend '{s}'"),
         })
     }
@@ -111,6 +121,35 @@ impl Backend {
             _ => None,
         }
     }
+
+    /// Resolve [`Backend::Auto`] to a concrete backend for `g` via the
+    /// factory-calibrated planner; any concrete backend resolves to
+    /// itself.  This is the resolution seam of [`Backend::plan`]: every
+    /// preparation path funnels through it, so `Auto` never reaches a
+    /// driver constructor.
+    ///
+    /// The candidate set honours what `man` can actually dispatch: the
+    /// dense fallback is only considered when the manifest carries
+    /// compiled dense executables — offline/host-emulation manifests
+    /// don't, so an auto plan built against one is always executable
+    /// through [`ExecCtx::host`](super::ExecCtx::host).  Serving callers
+    /// with a *tuned* planner (the coordinator) resolve earlier, at
+    /// admission, and hand a concrete backend down.
+    ///
+    /// [`Backend::plan`]: Backend::plan
+    pub fn resolve_for(self, g: &CsrGraph, man: &Manifest) -> Backend {
+        use crate::planner::{CostModel, Planner};
+        if self != Backend::Auto {
+            return self;
+        }
+        let model = CostModel::default();
+        let planner = if man.entries.keys().any(|k| k.starts_with("dense_n")) {
+            Planner::new(model)
+        } else {
+            Planner::offline(model)
+        };
+        planner.resolve(g).backend
+    }
 }
 
 /// A prepared (graph-specialised) driver for any backend.  The variants
@@ -135,6 +174,7 @@ impl Driver {
         backend: Backend,
         engine: &Engine,
     ) -> Result<Driver> {
+        let backend = backend.resolve_for(g, man);
         if let Some(opts) = backend.fused_opts() {
             return Ok(Driver::Fused(FusedDriver::new_with(man, g, opts, engine)?));
         }

@@ -18,8 +18,11 @@ pub struct DenseDriver {
     n: usize,
 }
 
-/// Compiled dense sizes must match aot.py's DENSE_N.
-const DENSE_N: &[usize] = &[256, 1024];
+/// The compiled dense problem sizes (must match aot.py's DENSE_N): a graph
+/// pads up to the smallest entry ≥ its n, and anything beyond the largest
+/// is infeasible for this backend.  Public because the adaptive planner's
+/// cost model gates the dense candidate on the same ladder.
+pub const DENSE_N: &[usize] = &[256, 1024];
 
 impl DenseDriver {
     pub fn new(man: &Manifest, g: &CsrGraph) -> Result<DenseDriver> {

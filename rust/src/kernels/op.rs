@@ -131,12 +131,17 @@ pub struct Plan {
 impl Plan {
     /// Plan `g` for `backend`, sharding the BSB build across `engine`'s
     /// worker pool (bit-identical to the serial build).
+    ///
+    /// [`Backend::Auto`] is resolved here (see [`Backend::resolve_for`]):
+    /// the stored plan always carries the concrete backend the planner
+    /// chose, so [`Plan::backend`] tells the caller what actually ran.
     pub fn new(
         man: &Manifest,
         g: &CsrGraph,
         backend: Backend,
         engine: &Engine,
     ) -> Result<Plan, AttnError> {
+        let backend = backend.resolve_for(g, man);
         let driver = Driver::prepare_on(man, g, backend, engine)
             .map_err(|e| AttnError::Prepare(format!("{e:#}")))?;
         Ok(Plan { driver, backend })
@@ -145,12 +150,25 @@ impl Plan {
     /// Plan from an already-built (compacted) BSB — the entry point for
     /// callers that cache or share preprocessing: only the cheap bucket
     /// plan is rebuilt.  Backends that plan from the graph itself (dense,
-    /// CPU CSR) are unsupported here.
+    /// CPU CSR) are unsupported here, so [`Backend::Auto`] resolves over
+    /// the BSB-plannable candidates only, profiled from the BSB itself
+    /// ([`GraphProfile::from_bsb`](crate::planner::GraphProfile::from_bsb)).
     pub fn from_bsb(
         man: &Manifest,
         bsb: Bsb,
         backend: Backend,
     ) -> Result<Plan, AttnError> {
+        let backend = if backend == Backend::Auto {
+            let profile = crate::planner::GraphProfile::from_bsb(&bsb);
+            crate::planner::Planner::with_candidates(
+                crate::planner::CostModel::default(),
+                vec![Backend::Fused3S, Backend::UnfusedStable],
+            )
+            .decide(&profile)
+            .backend
+        } else {
+            backend
+        };
         // One backend→options mapping, shared with `Driver::prepare_on`.
         let driver = if let Some(opts) = backend.fused_opts() {
             FusedDriver::from_bsb(man, bsb, opts).map(Driver::Fused)

@@ -47,9 +47,14 @@
 //!   `SparseAttentionOp`, `ExecCtx`, `AttnError`) over the driver zoo:
 //!   fused (the paper's system), unfused (FlashSparse analog), dense, and
 //!   a scalar CSR CPU baseline (PyG analog).
-//! * [`coordinator`] — the serving layer: dynamic request coalescing on
-//!   (d, dv, heads, scale, backend), fingerprint-keyed plan cache, request
-//!   server, metrics.
+//! * [`planner`] — the adaptive backend planner: [`planner::GraphProfile`]
+//!   sparsity features, the calibratable per-backend cost model, and the
+//!   online refinement loop behind [`kernels::Backend::Auto`]
+//!   (DESIGN.md §5, EXPERIMENTS.md §Planner).
+//! * [`coordinator`] — the serving layer: `Backend::Auto` resolution at
+//!   admission, dynamic request coalescing on
+//!   (d, dv, heads, scale, resolved backend), fingerprint-keyed plan
+//!   cache, request server, metrics.
 //! * [`model`] — Graph Transformer / GAT / AGNN inference runtimes; the GT
 //!   issues one multi-head `AttentionBatch` call per layer.
 //! * [`simulator`] — the SM active-time scheduling simulator (Fig. 7).
@@ -62,6 +67,7 @@ pub mod experiments;
 pub mod graph;
 pub mod kernels;
 pub mod model;
+pub mod planner;
 pub mod runtime;
 pub mod simulator;
 pub mod util;

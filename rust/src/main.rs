@@ -12,8 +12,9 @@
 //! repro fig8   [--datasets a,b]   [--dims 64,128,256] [--blocks 10] [--quick]
 //! repro ablate-split|ablate-reorder|ablate-compaction|ablate-buckets
 //! repro stability
+//! repro plan   [--datasets a,b,c]   # adaptive-planner decision audit
 //! repro datasets            # list the calibrated suite
-//! repro infer  --dataset X --d 64 --blocks 10 [--backend fused3s]
+//! repro infer  --dataset X --d 64 --blocks 10 [--backend fused3s|auto]
 //! repro serve  --requests 64 [--workers 2]   # serving-loop demo
 //! ```
 //!
@@ -21,7 +22,10 @@
 
 use anyhow::{bail, Result};
 
-use fused3s::experiments::{ablations, fig5, fig7, fig8, report, stability, table3, table6, table7};
+use fused3s::experiments::{
+    ablations, fig5, fig7, fig8, planner, report, stability, table3, table6,
+    table7,
+};
 use fused3s::graph::datasets::{self, Dataset};
 use fused3s::kernels::Backend;
 use fused3s::runtime::Runtime;
@@ -184,6 +188,16 @@ fn run() -> Result<()> {
             let j = stability::run(&rt)?;
             report::write_json("stability", &j)?;
         }
+        "plan" => {
+            let names = parse_list(
+                &args,
+                "datasets",
+                &["cora-sim", "pubmed-sim", "github-sim", "reddit-sim", "molhiv-sim"],
+            );
+            let j = planner::run(&names)?;
+            let p = report::write_json("plan", &j)?;
+            println!("\nwrote {}", p.display());
+        }
         "infer" => {
             infer(&args)?;
         }
@@ -295,7 +309,7 @@ fn print_usage() {
          subcommands:\n  \
          datasets | table3 | table6 | table7 | fig5 | fig6 | fig7 | fig8 |\n  \
          ablate-split | ablate-reorder | ablate-compaction | ablate-buckets |\n  \
-         stability | infer | serve\n\
+         stability | plan | infer | serve\n\
          common flags: --datasets a,b,c  --d 64  --quick  --backends x,y"
     );
 }

@@ -1,0 +1,378 @@
+//! The calibratable per-backend cost model.
+//!
+//! Each backend's predicted latency is a two-constant affine model over
+//! the graph's *cost cells* — the number of 16×8-block cell operations
+//! (or their scalar/dense equivalents) the backend would execute:
+//!
+//! ```text
+//! predicted_s(backend, profile) = fixed_s(backend)
+//!                               + sec_per_cell(backend) × cells(backend, profile)
+//! ```
+//!
+//! `cells` is pure structure (computed from a [`GraphProfile`], see
+//! [`cells`]); the two constants are **calibration state**: they default to
+//! the paper's device regime (tensor-core fused ≫ scalar CPU, Figure 5)
+//! and are refined online from measured latencies
+//! ([`CostModel::observe`] — the coordinator feeds each auto-planned
+//! batch's measured execute time back in) so the model converges to
+//! whatever substrate is actually running, e.g. the offline host
+//! emulation.  The tuned table round-trips through
+//! [`util::json`](crate::util::json) ([`CostModel::to_json`] /
+//! [`CostModel::from_json`]) so a serving process can persist and reload
+//! its calibration.
+//!
+//! Infeasibility is part of the model: the unfused baseline refuses
+//! oversize row windows (its OOM analog) and the dense fallback caps at
+//! the largest compiled dense bucket, so [`cells`] returns `None` for
+//! those combinations and the planner never selects them.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::kernels::dense::DENSE_N;
+use crate::kernels::Backend;
+use crate::util::json::{self, Json};
+use crate::{TCB_C, TCB_R};
+
+use super::profile::GraphProfile;
+
+/// The backends the cost model tracks — one calibration row each.  Every
+/// concrete [`Backend`] maps onto one of these via [`family`] (the fused
+/// ablation variants share the fused row, the two unfused softmaxes share
+/// the unfused row).
+pub const COST_FAMILIES: [Backend; 4] =
+    [Backend::Fused3S, Backend::UnfusedStable, Backend::Dense, Backend::CpuCsr];
+
+/// The reference feature dim the calibration constants are expressed at.
+/// [`cells`] is pure *structure* (single-head, d-free): per-graph ranking
+/// is unaffected by heads/d because every backend's work scales with them
+/// by (to first order) the same factor.  Measured latencies are NOT
+/// d-free, so observations must be normalised to the reference shape via
+/// [`effective_cells`] before they reach [`CostModel::observe`] — else a
+/// heads = 8, d = 128 batch would inflate its backend's learned rate
+/// ~32× relative to one at the reference shape and mixed-shape traffic
+/// would corrupt the table.
+pub const REF_D: usize = 32;
+
+/// Scale structure [`cells`] to an executed workload's shape: `heads`
+/// head passes, each with work ∝ `d / REF_D`.  Pair the result with the
+/// measured latency when calling [`CostModel::observe`].
+pub fn effective_cells(cells: f64, heads: usize, d: usize) -> f64 {
+    cells * heads.max(1) as f64 * d.max(1) as f64 / REF_D as f64
+}
+
+/// Map a concrete backend onto its cost family (see [`COST_FAMILIES`]).
+/// [`Backend::Auto`] has no family — it is what the model resolves.
+pub fn family(b: Backend) -> Backend {
+    match b {
+        Backend::Fused3S
+        | Backend::Fused3SNoReorder
+        | Backend::Fused3SSplitR
+        | Backend::DfGnnLike => Backend::Fused3S,
+        Backend::UnfusedNaive | Backend::UnfusedStable => Backend::UnfusedStable,
+        Backend::Dense => Backend::Dense,
+        Backend::CpuCsr => Backend::CpuCsr,
+        Backend::Auto => Backend::Auto,
+    }
+}
+
+/// Cost cells a backend executes for a graph, or `None` when the backend
+/// is structurally infeasible for it:
+///
+/// * fused — dispatched TCB slots (bucket + chunk padding included) × 128
+///   cells each, plus a per-chunk merge surcharge for the partial-softmax
+///   combine;
+/// * unfused — the same dispatched cells (the 3 passes live in its
+///   calibration constant); infeasible when any row window overflows the
+///   bucket ladder (the [`UnfusedError::Oversize`] OOM analog);
+/// * dense — `n_pad²` cells at the smallest compiled dense size ≥ n;
+///   infeasible above the largest;
+/// * cpu_csr — one cell per stored edge (scalar gather–scatter).
+///
+/// [`UnfusedError::Oversize`]: crate::kernels::unfused::UnfusedError
+pub fn cells(backend: Backend, p: &GraphProfile) -> Option<f64> {
+    const CELLS_PER_TCB: f64 = (TCB_R * TCB_C) as f64;
+    // Host-side merge cost of one oversize chunk, in cell equivalents
+    // (the m/l rescale + output fold over a 16-row window).
+    const CHUNK_MERGE_CELLS: f64 = 2.0 * CELLS_PER_TCB;
+    match family(backend) {
+        Backend::Fused3S => Some(
+            p.dispatched_tcb_slots as f64 * CELLS_PER_TCB
+                + p.oversize_chunks as f64 * CHUNK_MERGE_CELLS,
+        ),
+        Backend::UnfusedStable => (p.oversize_rws == 0)
+            .then(|| p.dispatched_tcb_slots as f64 * CELLS_PER_TCB),
+        Backend::Dense => DENSE_N
+            .iter()
+            .find(|&&c| c >= p.n)
+            .map(|&n_pad| (n_pad * n_pad) as f64),
+        Backend::CpuCsr => Some(p.nnz as f64),
+        Backend::Auto => None,
+    }
+}
+
+/// One backend's calibration row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Calibration {
+    /// Per-call overhead: dispatch setup, pipeline fill/drain, launch.
+    pub fixed_s: f64,
+    /// Marginal seconds per cost cell.
+    pub sec_per_cell: f64,
+    /// Observations folded in so far (0 = factory default).
+    pub samples: u64,
+}
+
+/// The per-backend calibration table + the EMA smoothing factor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    /// EMA weight of a new observation (0 < alpha ≤ 1).
+    pub alpha: f64,
+    rows: BTreeMap<&'static str, Calibration>,
+}
+
+impl Default for CostModel {
+    /// Factory defaults encode the paper's *device* regime (Fig. 5): the
+    /// fused tensor-core kernel is the cheapest per cell, the unfused
+    /// baseline pays ~3 passes and materialised intermediates, the dense
+    /// fallback is cheap per cell but executes n², and the scalar CPU
+    /// baseline is ~50× the fused per-cell cost.  Fixed costs make the
+    /// tiny-graph regime favour the launch-light scalar path.
+    fn default() -> CostModel {
+        let mut rows = BTreeMap::new();
+        let row = |f, s| Calibration { fixed_s: f, sec_per_cell: s, samples: 0 };
+        rows.insert(Backend::Fused3S.name(), row(30e-6, 1.0e-9));
+        rows.insert(Backend::UnfusedStable.name(), row(50e-6, 3.5e-9));
+        rows.insert(Backend::Dense.name(), row(20e-6, 0.7e-9));
+        rows.insert(Backend::CpuCsr.name(), row(2e-6, 50e-9));
+        CostModel { alpha: 0.25, rows }
+    }
+}
+
+impl CostModel {
+    /// The calibration row for a backend's cost family.
+    pub fn calibration(&self, backend: Backend) -> Calibration {
+        self.rows
+            .get(family(backend).name())
+            .copied()
+            .unwrap_or(Calibration { fixed_s: 0.0, sec_per_cell: 1e-9, samples: 0 })
+    }
+
+    /// Predicted latency of `backend` on a profiled graph (`None` when the
+    /// backend is infeasible for it).
+    pub fn predict_s(&self, backend: Backend, p: &GraphProfile) -> Option<f64> {
+        let c = cells(backend, p)?;
+        let cal = self.calibration(backend);
+        Some(cal.fixed_s + cal.sec_per_cell * c)
+    }
+
+    /// Fold one measured latency into the backend's calibration row: the
+    /// marginal rate moves by an exponential moving average towards
+    /// `(measured − fixed) / cells`.  Measurements below the fixed cost
+    /// clamp the implied rate at a small positive floor instead of going
+    /// negative.
+    pub fn observe(&mut self, backend: Backend, cells: f64, measured_s: f64) {
+        if !(cells > 0.0) || !measured_s.is_finite() || measured_s <= 0.0 {
+            return;
+        }
+        let key = family(backend).name();
+        let alpha = self.alpha;
+        let row = self.rows.entry(key).or_insert(Calibration {
+            fixed_s: 0.0,
+            sec_per_cell: measured_s / cells,
+            samples: 0,
+        });
+        let implied = ((measured_s - row.fixed_s) / cells).max(1e-12);
+        row.sec_per_cell = (1.0 - alpha) * row.sec_per_cell + alpha * implied;
+        row.samples += 1;
+    }
+
+    /// Serialise the calibration table (stable key order, versioned).
+    pub fn to_json(&self) -> Json {
+        let backends = Json::Obj(
+            self.rows
+                .iter()
+                .map(|(name, c)| {
+                    (
+                        name.to_string(),
+                        json::obj(vec![
+                            ("fixed_s", json::num(c.fixed_s)),
+                            ("sec_per_cell", json::num(c.sec_per_cell)),
+                            ("samples", json::num(c.samples as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("version", json::num(1.0)),
+            ("alpha", json::num(self.alpha)),
+            ("backends", backends),
+        ])
+    }
+
+    /// Rebuild a model from [`CostModel::to_json`] output.  Unknown backend
+    /// names are ignored (forward compatibility); missing ones keep their
+    /// factory defaults.  Non-finite or non-positive constants are
+    /// rejected outright — a corrupt calibration file must fail the load
+    /// (callers degrade to factory defaults), never poison the decision
+    /// path with NaN predictions.
+    pub fn from_json(v: &Json) -> Result<CostModel> {
+        let mut model = CostModel::default();
+        model.alpha = v.req("alpha")?.as_f64()?.clamp(0.0, 1.0);
+        let Json::Obj(backends) = v.req("backends")? else {
+            anyhow::bail!("'backends' must be an object");
+        };
+        for (name, row) in backends {
+            let Ok(backend) = Backend::parse(name) else {
+                continue; // calibration for a backend this build doesn't know
+            };
+            let fixed_s = row.req("fixed_s")?.as_f64()?;
+            let sec_per_cell = row.req("sec_per_cell")?.as_f64()?;
+            if !fixed_s.is_finite()
+                || !sec_per_cell.is_finite()
+                || fixed_s < 0.0
+                || sec_per_cell <= 0.0
+            {
+                anyhow::bail!(
+                    "calibration for '{name}' is not finite/positive \
+                     (fixed_s={fixed_s}, sec_per_cell={sec_per_cell})"
+                );
+            }
+            let cal = Calibration {
+                fixed_s,
+                sec_per_cell,
+                samples: row.req("samples")?.as_f64()? as u64,
+            };
+            model.rows.insert(family(backend).name(), cal);
+        }
+        Ok(model)
+    }
+
+    /// Persist the calibration table to `path` as JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, json::to_string(&self.to_json()))
+            .with_context(|| format!("writing calibration to {}", path.display()))
+    }
+
+    /// Load a calibration table persisted by [`CostModel::save`].
+    pub fn load(path: &Path) -> Result<CostModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration from {}", path.display()))?;
+        CostModel::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn profile(g: &crate::graph::CsrGraph) -> GraphProfile {
+        GraphProfile::from_csr(g)
+    }
+
+    #[test]
+    fn infeasibility_gates() {
+        // Hub graph: oversize RW -> unfused infeasible, fused fine.
+        let hub = profile(&generators::star(5000).with_self_loops());
+        assert!(cells(Backend::UnfusedStable, &hub).is_none());
+        assert!(cells(Backend::Fused3S, &hub).is_some());
+        // Large graph: dense infeasible above the biggest compiled size.
+        assert!(cells(Backend::Dense, &hub).is_none());
+        let small = profile(&generators::ring(200));
+        assert_eq!(cells(Backend::Dense, &small), Some(256.0 * 256.0));
+    }
+
+    #[test]
+    fn families_share_calibration() {
+        let m = CostModel::default();
+        assert_eq!(m.calibration(Backend::DfGnnLike), m.calibration(Backend::Fused3S));
+        assert_eq!(
+            m.calibration(Backend::UnfusedNaive),
+            m.calibration(Backend::UnfusedStable)
+        );
+        let p = profile(&generators::erdos_renyi(1024, 4.0, 1));
+        assert_eq!(cells(Backend::Fused3SSplitR, &p), cells(Backend::Fused3S, &p));
+    }
+
+    #[test]
+    fn observe_converges_to_measured_rate() {
+        let mut m = CostModel::default();
+        let p = profile(&generators::erdos_renyi(2048, 6.0, 2));
+        let c = cells(Backend::Fused3S, &p).unwrap();
+        let measured = 5e-3; // pretend the substrate is much slower
+        for _ in 0..50 {
+            m.observe(Backend::Fused3S, c, measured);
+        }
+        let predicted = m.predict_s(Backend::Fused3S, &p).unwrap();
+        assert!(
+            (predicted - measured).abs() / measured < 0.05,
+            "predicted {predicted} vs measured {measured}"
+        );
+        assert_eq!(m.calibration(Backend::Fused3S).samples, 50);
+    }
+
+    #[test]
+    fn effective_cells_scales_by_shape() {
+        // Identity at the reference shape; linear in heads and d.
+        assert_eq!(effective_cells(1000.0, 1, REF_D), 1000.0);
+        assert_eq!(effective_cells(1000.0, 4, REF_D), 4000.0);
+        assert_eq!(effective_cells(1000.0, 1, 2 * REF_D), 2000.0);
+        // Degenerate shapes clamp instead of zeroing the sample.
+        assert!(effective_cells(1000.0, 0, 0) > 0.0);
+    }
+
+    #[test]
+    fn observe_rejects_degenerate_samples() {
+        let mut m = CostModel::default();
+        let before = m.calibration(Backend::CpuCsr);
+        m.observe(Backend::CpuCsr, 0.0, 1.0);
+        m.observe(Backend::CpuCsr, 100.0, f64::NAN);
+        m.observe(Backend::CpuCsr, 100.0, -1.0);
+        assert_eq!(m.calibration(Backend::CpuCsr), before);
+        // A measurement under the fixed cost clamps, never goes negative.
+        m.observe(Backend::CpuCsr, 1e9, 1e-9);
+        assert!(m.calibration(Backend::CpuCsr).sec_per_cell > 0.0);
+    }
+
+    #[test]
+    fn from_json_rejects_degenerate_calibration() {
+        for bad in [
+            // negative rate
+            r#"{"alpha":0.25,"backends":{"fused3s":
+                {"fixed_s":0.0,"sec_per_cell":-1.0,"samples":1}}}"#,
+            // overflow to +inf
+            r#"{"alpha":0.25,"backends":{"fused3s":
+                {"fixed_s":1e999,"sec_per_cell":1e-9,"samples":1}}}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(CostModel::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut m = CostModel::default();
+        m.observe(Backend::Fused3S, 1e6, 3e-3);
+        m.observe(Backend::CpuCsr, 1e5, 9e-3);
+        let j = m.to_json();
+        let back = CostModel::from_json(&Json::parse(&json::to_string(&j)).unwrap())
+            .unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut m = CostModel::default();
+        m.observe(Backend::UnfusedStable, 2e5, 4e-3);
+        let dir = std::env::temp_dir().join("f3s_planner_cost_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("calibration.json");
+        m.save(&path).unwrap();
+        let back = CostModel::load(&path).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(&path).ok();
+    }
+}

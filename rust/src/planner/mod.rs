@@ -1,0 +1,270 @@
+//! The adaptive backend planner — structure-aware kernel selection.
+//!
+//! The paper's headline observation (and HC-SpMM's, see PAPERS.md) is that
+//! **the best 3S strategy varies per graph**: fused BSB wins on scale-free
+//! sparsity, denser regular inputs favour other layouts, tiny graphs are
+//! dominated by launch overhead, and mega-hub rows force the chunked
+//! partial-softmax path.  Until this subsystem existed the coordinator ran
+//! whatever [`Backend`] the client guessed; now a request may carry
+//! [`Backend::Auto`] and the stack chooses:
+//!
+//! 1. **Profile** — [`GraphProfile::from_csr`] condenses the graph into the
+//!    features the choice depends on (density, TCB/RW histogram + CV, hub
+//!    skew, oversize-chunk count) *without* building a BSB;
+//! 2. **Score** — [`CostModel::predict_s`] prices each candidate backend
+//!    with a two-constant affine model over structure-derived cost cells,
+//!    with structural infeasibility (unfused × oversize rows, dense × large
+//!    n) built in;
+//! 3. **Decide** — [`Planner::decide`] picks the cheapest feasible backend
+//!    (deterministic tie-break in [`COST_FAMILIES`] order) and reports the
+//!    full scoreboard in the returned [`Decision`];
+//! 4. **Refine** — the coordinator measures every auto-planned batch it
+//!    executes and feeds the latency back via [`Planner::observe`], so the
+//!    calibration converges from the factory (paper-device) constants to
+//!    the substrate actually running; the tuned table persists across
+//!    restarts via [`Planner::save`] / [`CostModel::load`].
+//!
+//! Resolution happens **before** coalescing and caching: the coordinator
+//! rewrites `Backend::Auto` to the decided backend at admission, so
+//! auto-resolved requests coalesce with explicitly-routed ones and share
+//! [`DriverCache`](crate::coordinator::DriverCache) entries under the
+//! *resolved* key.  Standalone callers get the same seam through
+//! [`Backend::plan`](crate::kernels::Backend::plan), which resolves `Auto`
+//! with the factory model over the candidates its manifest can actually
+//! dispatch (no dense fallback without compiled dense executables).  See
+//! DESIGN.md §5 for the decision flow with a worked example per backend.
+
+pub mod cost;
+pub mod profile;
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::graph::CsrGraph;
+use crate::kernels::Backend;
+
+pub use cost::{
+    cells, effective_cells, family, Calibration, CostModel, COST_FAMILIES,
+    REF_D,
+};
+pub use profile::{GraphProfile, DEFAULT_BUCKETS, DEFAULT_CHUNK_T};
+
+/// One candidate's line on the scoreboard of a [`Decision`].
+#[derive(Clone, Copy, Debug)]
+pub struct Score {
+    pub backend: Backend,
+    /// Cost cells the backend would execute; `None` = structurally
+    /// infeasible for this graph (never selected).
+    pub cells: Option<f64>,
+    /// Predicted latency (`None` iff infeasible).
+    pub predicted_s: Option<f64>,
+}
+
+/// The planner's verdict for one graph.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// The chosen concrete backend (never [`Backend::Auto`]).
+    pub backend: Backend,
+    /// Predicted latency of the chosen backend.
+    pub predicted_s: f64,
+    /// Cost cells of the chosen backend (what [`Planner::observe`] expects
+    /// back alongside the measured latency).
+    pub cells: f64,
+    /// Whether the chosen (fused) backend will route oversize row windows
+    /// through the chunked partial-softmax path — the "fused chunked"
+    /// execution shape for mega-hub graphs.
+    pub chunked: bool,
+    /// Every candidate's score, in candidate order (for logs/experiments).
+    pub scores: Vec<Score>,
+}
+
+/// Thread-safe wrapper holding the candidate set and the (mutable,
+/// online-refined) [`CostModel`].  The coordinator owns one behind an
+/// `Arc`; standalone resolution uses [`resolve`] / [`resolve_offline`].
+pub struct Planner {
+    candidates: Vec<Backend>,
+    model: Mutex<CostModel>,
+}
+
+impl Planner {
+    /// A planner over every cost family (PJRT-backed serving, where the
+    /// dense fallback's compiled executables are available).
+    pub fn new(model: CostModel) -> Planner {
+        Planner::with_candidates(model, COST_FAMILIES.to_vec())
+    }
+
+    /// A planner for artifact-free execution ([`ExecutorKind::HostEmulation`],
+    /// benches, tests): the dense fallback has no offline host emulation,
+    /// so it is not a candidate.
+    ///
+    /// [`ExecutorKind::HostEmulation`]: crate::coordinator::ExecutorKind
+    pub fn offline(model: CostModel) -> Planner {
+        Planner::with_candidates(
+            model,
+            vec![Backend::Fused3S, Backend::UnfusedStable, Backend::CpuCsr],
+        )
+    }
+
+    /// A planner restricted to an explicit candidate set (candidates are
+    /// scored in the given order; earlier wins ties).
+    pub fn with_candidates(model: CostModel, candidates: Vec<Backend>) -> Planner {
+        assert!(!candidates.is_empty(), "planner needs at least one candidate");
+        Planner { candidates, model: Mutex::new(model) }
+    }
+
+    /// Profile `g` and decide its backend.
+    pub fn resolve(&self, g: &CsrGraph) -> Decision {
+        self.decide(&GraphProfile::from_csr(g))
+    }
+
+    /// Decide the backend for an already-extracted profile.
+    ///
+    /// If every candidate is structurally infeasible (possible only with a
+    /// restricted [`Planner::with_candidates`] set — the default sets
+    /// always contain an always-feasible backend), the *first* candidate
+    /// is returned as a last resort and preparation surfaces the
+    /// structural error.
+    pub fn decide(&self, p: &GraphProfile) -> Decision {
+        let model = self.model.lock().unwrap();
+        let scores: Vec<Score> = self
+            .candidates
+            .iter()
+            .map(|&b| Score {
+                backend: b,
+                cells: cost::cells(b, p),
+                predicted_s: model.predict_s(b, p),
+            })
+            .collect();
+        drop(model);
+        let best = scores
+            .iter()
+            .filter(|s| s.predicted_s.is_some())
+            // `Ordering::Equal` on NaN keeps the decision total (and the
+            // batcher thread alive) even if a pathological calibration
+            // slipped through; ties favour earlier candidates.
+            .min_by(|a, b| {
+                a.predicted_s
+                    .partial_cmp(&b.predicted_s)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .copied()
+            .unwrap_or(Score {
+                backend: self.candidates[0],
+                cells: None,
+                predicted_s: None,
+            });
+        Decision {
+            backend: best.backend,
+            predicted_s: best.predicted_s.unwrap_or(0.0),
+            cells: best.cells.unwrap_or(0.0),
+            chunked: family(best.backend) == Backend::Fused3S && p.oversize_rws > 0,
+            scores,
+        }
+    }
+
+    /// Fold one measured latency for an executed plan back into the model
+    /// (the online refinement loop; see [`CostModel::observe`]).
+    pub fn observe(&self, backend: Backend, cells: f64, measured_s: f64) {
+        self.model.lock().unwrap().observe(backend, cells, measured_s);
+    }
+
+    /// A snapshot of the current calibration table.
+    pub fn snapshot(&self) -> CostModel {
+        self.model.lock().unwrap().clone()
+    }
+
+    /// Persist the current calibration table (see [`CostModel::save`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.model.lock().unwrap().save(path)
+    }
+}
+
+/// Resolve a graph with the factory model over every cost family
+/// (PJRT-backed callers; [`Backend::resolve_for`] narrows to
+/// [`resolve_offline`]'s candidate set when its manifest has no compiled
+/// dense executables).
+///
+/// [`Backend::resolve_for`]: crate::kernels::Backend::resolve_for
+pub fn resolve(g: &CsrGraph) -> Decision {
+    Planner::new(CostModel::default()).resolve(g)
+}
+
+/// Resolve with the factory model over the artifact-free candidate set
+/// (what the host-emulation coordinator and the offline benches use).
+pub fn resolve_offline(g: &CsrGraph) -> Decision {
+    Planner::offline(CostModel::default()).resolve(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{self, clique};
+
+    #[test]
+    fn dense_clique_resolves_to_dense() {
+        let d = resolve(&clique(200));
+        assert_eq!(d.backend, Backend::Dense, "scores: {:?}", d.scores);
+        assert!(!d.chunked);
+    }
+
+    #[test]
+    fn hub_graph_resolves_to_fused_chunked() {
+        let d = resolve(&generators::star(5000).with_self_loops());
+        assert_eq!(d.backend, Backend::Fused3S, "scores: {:?}", d.scores);
+        assert!(d.chunked, "mega-hub must take the chunked path");
+        // The unfused candidate must be scored infeasible, not just losing.
+        let unfused = d
+            .scores
+            .iter()
+            .find(|s| s.backend == Backend::UnfusedStable)
+            .unwrap();
+        assert!(unfused.predicted_s.is_none());
+    }
+
+    #[test]
+    fn tiny_graph_resolves_to_cpu() {
+        let d = resolve_offline(&generators::ring(32));
+        assert_eq!(d.backend, Backend::CpuCsr, "scores: {:?}", d.scores);
+    }
+
+    #[test]
+    fn offline_planner_never_picks_dense() {
+        let d = resolve_offline(&clique(200));
+        assert_ne!(d.backend, Backend::Dense);
+    }
+
+    #[test]
+    fn decision_never_returns_auto() {
+        for g in [
+            clique(64),
+            generators::erdos_renyi(2048, 6.0, 1),
+            generators::star(5000),
+            generators::ring(16),
+        ] {
+            assert_ne!(resolve(&g).backend, Backend::Auto);
+            assert_ne!(resolve_offline(&g).backend, Backend::Auto);
+        }
+    }
+
+    #[test]
+    fn refinement_flips_a_decision() {
+        // Start from factory constants, then observe that (on this
+        // hypothetical substrate) the scalar backend is essentially free:
+        // the planner must eventually re-route a fused-leaning graph.
+        let g = generators::erdos_renyi(2048, 6.0, 3).with_self_loops();
+        let planner = Planner::offline(CostModel::default());
+        let before = planner.resolve(&g);
+        assert_eq!(before.backend, Backend::Fused3S);
+        let p = GraphProfile::from_csr(&g);
+        let cpu_cells = cells(Backend::CpuCsr, &p).unwrap();
+        let fused_cells = cells(Backend::Fused3S, &p).unwrap();
+        for _ in 0..60 {
+            planner.observe(Backend::CpuCsr, cpu_cells, 1e-6);
+            planner.observe(Backend::Fused3S, fused_cells, 50e-3);
+        }
+        let after = planner.resolve(&g);
+        assert_eq!(after.backend, Backend::CpuCsr, "scores: {:?}", after.scores);
+    }
+}

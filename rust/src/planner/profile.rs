@@ -1,0 +1,297 @@
+//! Sparsity feature extraction — the planner's view of a graph.
+//!
+//! A [`GraphProfile`] condenses the structure the backends care about into
+//! a handful of numbers: density, the row-window TCB distribution (mean,
+//! CV, bucket histogram), hub skew, and how much of the dispatched work
+//! would be bucket/chunk padding.  It can be computed two ways:
+//!
+//! * [`GraphProfile::from_csr`] — directly from the CSR adjacency, **before
+//!   any BSB is built**.  This is the serving path: the coordinator must
+//!   resolve [`Backend::Auto`](crate::kernels::Backend::Auto) *before*
+//!   coalescing and before the preprocessing cache is consulted, so the
+//!   profile cannot depend on the (possibly skipped) BSB build.  Per row
+//!   window it counts the distinct columns across the window's 16 rows —
+//!   exactly the column set BSB compaction keeps — so the estimated TCB
+//!   counts **equal** the post-build `Bsb::tcbs_per_rw` values (pinned by a
+//!   test below).
+//! * [`GraphProfile::from_bsb`] — from an already-built [`Bsb`] via
+//!   [`bsb::stats`](crate::bsb::stats), for callers that plan from cached
+//!   preprocessing ([`Plan::from_bsb`](crate::kernels::Plan::from_bsb)).
+//!
+//! Extraction is O(nnz log deg) and allocation-light; on the serving path
+//! it costs far less than the BSB build it steers.
+
+use crate::bsb::stats::{compaction_stats, nnz_per_rw};
+use crate::bsb::{Bsb, RW};
+use crate::graph::CsrGraph;
+use crate::util::stats as ustats;
+use crate::TCB_C;
+
+/// The bucket ladder the profile (and the default cost model) assume —
+/// matches the offline manifest and the compiled AOT suite.
+pub const DEFAULT_BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+
+/// Chunk capacity assumed for oversize row windows (the largest bucket,
+/// which is the `chunk_t` every manifest in this repo uses).
+pub const DEFAULT_CHUNK_T: usize = 128;
+
+/// Structure features of one graph, as seen by the cost model.
+///
+/// "TCB" counts here are *post-compaction* tensor-core block counts: for a
+/// row window with `c` distinct neighbour columns, `ceil(c / 8)` blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphProfile {
+    /// Nodes (rows of the attention mask).
+    pub n: usize,
+    /// Stored edges (nonzeros).
+    pub nnz: usize,
+    /// nnz / n² — the dense-fallback viability axis.
+    pub density: f64,
+    /// Mean out-degree.
+    pub avg_degree: f64,
+    /// Maximum out-degree (the mega-hub detector).
+    pub max_degree: usize,
+    /// `max_degree / avg_degree` — hub skew (1 ≈ regular, ≫1 ≈ scale-free).
+    pub hub_skew: f64,
+    /// Total row windows (`ceil(n / 16)`), including empty ones.
+    pub num_rw: usize,
+    /// Row windows with at least one edge (the dispatched population).
+    pub nonempty_rw: usize,
+    /// Total post-compaction TCBs across all row windows.
+    pub total_tcbs: usize,
+    /// Mean TCBs per non-empty row window.
+    pub tcb_per_rw_mean: f64,
+    /// Coefficient of variation of TCBs/RW — the paper's Table-6
+    /// irregularity axis (low = ER-like, high = power-law).
+    pub tcb_per_rw_cv: f64,
+    /// Coefficient of variation of nnz/RW (row-window *load* variance,
+    /// which differs from the TCB variance when compaction density varies).
+    pub nnz_per_rw_cv: f64,
+    /// Row-window occupancy histogram: for each bucket capacity in
+    /// `buckets`, how many row windows route to it.
+    pub bucket_hist: Vec<(usize, usize)>,
+    /// Row windows whose TCB count exceeds the largest bucket (these run
+    /// through the chunked partial-softmax path under the fused backend and
+    /// make the unfused baseline infeasible — its OOM analog).
+    pub oversize_rws: usize,
+    /// Total chunk dispatches the oversize row windows need at
+    /// [`DEFAULT_CHUNK_T`].
+    pub oversize_chunks: usize,
+    /// Dispatched TCB *slots* for a fused-family run: every bucketed row
+    /// window padded up to its bucket capacity, plus every chunk padded to
+    /// the chunk capacity.  This — not `total_tcbs` — is what the fused
+    /// kernels actually execute.
+    pub dispatched_tcb_slots: usize,
+}
+
+impl GraphProfile {
+    /// Profile a CSR graph against [`DEFAULT_BUCKETS`] /
+    /// [`DEFAULT_CHUNK_T`].
+    pub fn from_csr(g: &CsrGraph) -> GraphProfile {
+        GraphProfile::from_csr_with(g, DEFAULT_BUCKETS, DEFAULT_CHUNK_T)
+    }
+
+    /// Profile a CSR graph against an explicit bucket ladder.
+    pub fn from_csr_with(
+        g: &CsrGraph,
+        buckets: &[usize],
+        chunk_t: usize,
+    ) -> GraphProfile {
+        let num_rw = g.n.div_ceil(RW);
+        let mut tcbs: Vec<usize> = Vec::with_capacity(num_rw);
+        let mut nnz_rw: Vec<f64> = Vec::with_capacity(num_rw);
+        let mut cols: Vec<u32> = Vec::new();
+        for w in 0..num_rw {
+            let lo = w * RW;
+            let hi = ((w + 1) * RW).min(g.n);
+            cols.clear();
+            let mut z = 0usize;
+            for r in lo..hi {
+                let row = g.row(r);
+                z += row.len();
+                cols.extend_from_slice(row);
+            }
+            cols.sort_unstable();
+            cols.dedup();
+            tcbs.push(cols.len().div_ceil(TCB_C));
+            if z > 0 {
+                nnz_rw.push(z as f64);
+            }
+        }
+        GraphProfile::from_parts(g.n, g.nnz(), &tcbs, &nnz_rw, buckets, chunk_t)
+            .with_degrees(g)
+    }
+
+    /// Profile from an already-built BSB (cached-preprocessing callers).
+    /// Identical to [`GraphProfile::from_csr`] on the same graph.
+    pub fn from_bsb(bsb: &Bsb) -> GraphProfile {
+        GraphProfile::from_bsb_with(bsb, DEFAULT_BUCKETS, DEFAULT_CHUNK_T)
+    }
+
+    /// [`GraphProfile::from_bsb`] with an explicit bucket ladder.
+    pub fn from_bsb_with(
+        bsb: &Bsb,
+        buckets: &[usize],
+        chunk_t: usize,
+    ) -> GraphProfile {
+        let s = compaction_stats(bsb);
+        let tcbs: Vec<usize> =
+            bsb.tcbs_per_rw().iter().map(|&t| t as usize).collect();
+        let nnz_rw: Vec<f64> = nnz_per_rw(bsb)
+            .into_iter()
+            .filter(|&z| z > 0)
+            .map(|z| z as f64)
+            .collect();
+        let mut p =
+            GraphProfile::from_parts(s.nodes, s.edges, &tcbs, &nnz_rw, buckets, chunk_t);
+        // Degree features are not recoverable from a BSB (compaction merged
+        // the per-row structure); approximate the hub detector with the
+        // widest row window.
+        let max_rw_nnz =
+            nnz_rw.iter().cloned().fold(0.0f64, f64::max) as usize;
+        p.max_degree = max_rw_nnz.div_ceil(RW.min(s.nodes.max(1)));
+        p.hub_skew = if p.avg_degree > 0.0 {
+            p.max_degree as f64 / p.avg_degree
+        } else {
+            1.0
+        };
+        p
+    }
+
+    fn from_parts(
+        n: usize,
+        nnz: usize,
+        tcbs_per_rw: &[usize],
+        nnz_rw: &[f64],
+        buckets: &[usize],
+        chunk_t: usize,
+    ) -> GraphProfile {
+        assert!(!buckets.is_empty(), "bucket ladder must be non-empty");
+        let max_bucket = *buckets.last().expect("non-empty ladder");
+        let mut hist = vec![0usize; buckets.len()];
+        let (mut oversize_rws, mut oversize_chunks) = (0usize, 0usize);
+        let mut slots = 0usize;
+        let mut nonempty = Vec::with_capacity(tcbs_per_rw.len());
+        for &t in tcbs_per_rw {
+            if t == 0 {
+                continue;
+            }
+            nonempty.push(t as f64);
+            if t > max_bucket {
+                oversize_rws += 1;
+                let chunks = t.div_ceil(chunk_t);
+                oversize_chunks += chunks;
+                slots += chunks * chunk_t;
+            } else {
+                let bi = buckets
+                    .iter()
+                    .position(|&b| b >= t)
+                    .expect("t <= max_bucket");
+                hist[bi] += 1;
+                slots += buckets[bi];
+            }
+        }
+        let total_tcbs: usize = tcbs_per_rw.iter().sum();
+        let avg_degree = if n == 0 { 0.0 } else { nnz as f64 / n as f64 };
+        // Degree features need the CSR view: from_csr fills them via
+        // with_degrees, from_bsb approximates from window loads.
+        GraphProfile {
+            n,
+            nnz,
+            density: if n == 0 { 0.0 } else { nnz as f64 / (n as f64 * n as f64) },
+            avg_degree,
+            max_degree: 0,
+            hub_skew: 1.0,
+            num_rw: tcbs_per_rw.len(),
+            nonempty_rw: nonempty.len(),
+            total_tcbs,
+            tcb_per_rw_mean: ustats::mean(&nonempty),
+            tcb_per_rw_cv: ustats::cv(&nonempty),
+            nnz_per_rw_cv: ustats::cv(nnz_rw),
+            bucket_hist: buckets.iter().copied().zip(hist).collect(),
+            oversize_rws,
+            oversize_chunks,
+            dispatched_tcb_slots: slots,
+        }
+    }
+}
+
+impl GraphProfile {
+    /// Fill the degree-derived features from the CSR view (called by
+    /// `from_csr*`; split out so `from_parts` stays format-agnostic).
+    fn with_degrees(mut self, g: &CsrGraph) -> GraphProfile {
+        self.max_degree = g.max_degree();
+        self.hub_skew = if self.avg_degree > 0.0 {
+            self.max_degree as f64 / self.avg_degree
+        } else {
+            1.0
+        };
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsb::build;
+    use crate::graph::generators;
+
+    fn profile(g: &CsrGraph) -> GraphProfile {
+        GraphProfile::from_csr(g)
+    }
+
+    #[test]
+    fn csr_estimate_equals_bsb_exact() {
+        // The from_csr distinct-column estimate must equal the post-build
+        // TCB counts: compaction keeps exactly the distinct columns.
+        for g in [
+            generators::erdos_renyi(2048, 6.0, 1).with_self_loops(),
+            generators::barabasi_albert(2048, 4, 2).with_self_loops(),
+            generators::star(3000).with_self_loops(),
+            generators::ring(64),
+        ] {
+            let p = profile(&g);
+            let bsb = build(&g);
+            assert_eq!(p.total_tcbs, bsb.total_tcbs(), "n={}", g.n);
+            let b = GraphProfile::from_bsb(&bsb);
+            assert_eq!(p.total_tcbs, b.total_tcbs);
+            assert_eq!(p.bucket_hist, b.bucket_hist);
+            assert_eq!(p.oversize_rws, b.oversize_rws);
+            assert_eq!(p.dispatched_tcb_slots, b.dispatched_tcb_slots);
+        }
+    }
+
+    #[test]
+    fn hub_graph_has_oversize_and_skew() {
+        let g = generators::star(5000).with_self_loops();
+        let p = profile(&g);
+        assert!(p.oversize_rws >= 1, "hub RW must overflow the ladder");
+        assert!(p.oversize_chunks >= 2);
+        assert!(p.hub_skew > 100.0, "skew {}", p.hub_skew);
+        let r = profile(&generators::ring(4096));
+        assert_eq!(r.oversize_rws, 0);
+        assert!(r.hub_skew < 1.5);
+        assert!(r.tcb_per_rw_cv < p.tcb_per_rw_cv);
+    }
+
+    #[test]
+    fn histogram_counts_every_nonempty_rw() {
+        let g = generators::erdos_renyi(4096, 8.0, 3).with_self_loops();
+        let p = profile(&g);
+        let in_buckets: usize = p.bucket_hist.iter().map(|&(_, c)| c).sum();
+        assert_eq!(in_buckets + p.oversize_rws, p.nonempty_rw);
+        assert!(p.dispatched_tcb_slots >= p.total_tcbs);
+    }
+
+    #[test]
+    fn empty_and_tiny_graphs() {
+        let g = CsrGraph::from_edges(0, &[]).unwrap();
+        let p = profile(&g);
+        assert_eq!(p.num_rw, 0);
+        assert_eq!(p.total_tcbs, 0);
+        let g = CsrGraph::from_edges(40, &[(3, 7)]).unwrap();
+        let p = profile(&g);
+        assert_eq!(p.nonempty_rw, 1);
+        assert_eq!(p.total_tcbs, 1);
+    }
+}

@@ -1,0 +1,305 @@
+//! Adaptive-planner acceptance suite (ISSUE 4): synthetic extremes pick
+//! the expected backend, `Backend::Auto` output bit-matches the same
+//! request forced to the resolved backend — standalone and through the
+//! coordinator — auto traffic coalesces and hits the plan cache under the
+//! *resolved* backend key, and the cost-model calibration persists.
+//!
+//! Everything runs offline (`ExecutorKind::HostEmulation` / `ExecCtx::host`,
+//! no artifacts).  `scripts/verify.sh` runs this file explicitly.
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use fused3s::bsb;
+use fused3s::coordinator::{
+    AttnRequest, Coordinator, CoordinatorConfig, ExecutorKind,
+};
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::graph::generators::{self, clique};
+use fused3s::kernels::{AttentionBatch, Backend, ExecCtx, Plan};
+use fused3s::planner::{resolve, resolve_offline, CostModel, DEFAULT_BUCKETS};
+use fused3s::runtime::Manifest;
+use fused3s::util::prng::Rng;
+
+fn manifest() -> Manifest {
+    offline_manifest(8, DEFAULT_BUCKETS, 128)
+}
+
+fn features(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+    )
+}
+
+fn host_coordinator(cfg_mut: impl FnOnce(&mut CoordinatorConfig)) -> Coordinator {
+    let mut cfg = CoordinatorConfig {
+        executor: ExecutorKind::HostEmulation,
+        preprocess_workers: 2,
+        queue_capacity: 16,
+        max_batch_requests: 1, // coalescing off unless a test opts in
+        max_batch_delay: Duration::from_millis(300),
+        cache_capacity: 16,
+        // Serial host execution: keeps tiny-graph execute times free of
+        // thread-spawn noise, so refinement observations stay sane.
+        exec: ExecPolicy::serial(),
+        ..CoordinatorConfig::default()
+    };
+    cfg_mut(&mut cfg);
+    Coordinator::start(cfg).expect("host-emulation coordinator")
+}
+
+#[test]
+fn dense_clique_picks_dense() {
+    // Small and saturated: the dense fallback's n² is the same work with
+    // none of the sparse-path overhead, exactly the paper's observation
+    // about dense baselines on tiny dense inputs.
+    let d = resolve(&clique(200));
+    assert_eq!(d.backend, Backend::Dense, "scores: {:?}", d.scores);
+}
+
+#[test]
+fn power_law_hub_picks_fused_chunked() {
+    // A mega-hub row overflows every bucket: the unfused baseline is
+    // infeasible (its OOM analog) and the fused backend must take the
+    // chunked partial-softmax path.
+    let g = generators::star(5000).with_self_loops();
+    let d = resolve(&g);
+    assert_eq!(d.backend, Backend::Fused3S, "scores: {:?}", d.scores);
+    assert!(d.chunked, "hub graph must route through chunked dispatch");
+    let unfused =
+        d.scores.iter().find(|s| s.backend == Backend::UnfusedStable).unwrap();
+    assert!(unfused.predicted_s.is_none(), "unfused must be infeasible");
+}
+
+#[test]
+fn auto_plan_bit_matches_forced_backend() {
+    let man = manifest();
+    let engine = Engine::new(ExecPolicy { threads: 4, pipeline_depth: 2 });
+    let d = 16;
+    for (seed, g) in [
+        (1u64, generators::erdos_renyi(1500, 6.0, 11).with_self_loops()),
+        (2, generators::star(3000).with_self_loops()), // chunked mega-hub
+        (3, generators::ring(32)),                     // tiny: cpu regime
+    ] {
+        let forced_backend = resolve_offline(&g).backend;
+        let (q, k, v) = features(g.n, d, 100 + seed);
+        let x = AttentionBatch::new(g.n, d, d, 1, &q, &k, &v, 0.25);
+        // `Plan::new` resolves Auto itself, over the candidates the
+        // manifest can dispatch — this offline manifest has no dense
+        // executables, so the resolution must match `resolve_offline` and
+        // the plan must always be host-executable.
+        let auto_plan = Plan::new(&man, &g, Backend::Auto, &engine).unwrap();
+        assert_eq!(
+            auto_plan.backend(),
+            forced_backend,
+            "auto must resolve over the manifest's candidate set"
+        );
+        let forced_plan = Plan::new(&man, &g, forced_backend, &engine).unwrap();
+        let a = auto_plan
+            .execute(&mut ExecCtx::host(&engine), &x)
+            .expect("auto executes");
+        let f = forced_plan
+            .execute(&mut ExecCtx::host(&engine), &x)
+            .expect("forced executes");
+        assert_eq!(a, f, "n={}: auto diverged from forced", g.n);
+    }
+}
+
+#[test]
+fn auto_from_bsb_resolves_over_bsb_candidates() {
+    let man = manifest();
+    let g = generators::erdos_renyi(800, 5.0, 21).with_self_loops();
+    let plan = Plan::from_bsb(&man, bsb::build(&g), Backend::Auto).unwrap();
+    assert!(
+        matches!(plan.backend(), Backend::Fused3S | Backend::UnfusedStable),
+        "from_bsb resolves over BSB-plannable backends, got {}",
+        plan.backend().name()
+    );
+    let d = 8;
+    let (q, k, v) = features(g.n, d, 31);
+    let x = AttentionBatch::new(g.n, d, d, 1, &q, &k, &v, 0.5);
+    let engine = Engine::serial();
+    let out = plan.execute(&mut ExecCtx::host(&engine), &x).unwrap();
+    assert_eq!(out.len(), g.n * d);
+}
+
+#[test]
+fn coordinator_auto_bit_matches_forced() {
+    let g = generators::erdos_renyi(400, 5.0, 41).with_self_loops();
+    let expected = resolve_offline(&g).backend;
+    let d = 16;
+    let (q, k, v) = features(g.n, d, 42);
+    let coord = host_coordinator(|_| {});
+
+    let run = |backend: Backend, id: u64| {
+        let (tx, rx) = channel();
+        coord
+            .submit(AttnRequest::single_head(
+                id,
+                g.clone(),
+                d,
+                q.clone(),
+                k.clone(),
+                v.clone(),
+                0.25,
+                backend,
+                tx,
+            ))
+            .expect("submit");
+        rx.recv_timeout(Duration::from_secs(120))
+            .expect("response")
+            .result
+            .expect("result")
+    };
+    // The first auto request resolves with zero observations, i.e. with
+    // the same factory model `resolve_offline` uses locally.
+    let auto_out = run(Backend::Auto, 1);
+    let forced_out = run(expected, 2);
+    assert_eq!(auto_out, forced_out, "auto diverged through the coordinator");
+
+    let m = coord.metrics();
+    assert_eq!(m.planner.auto_requests(), 1);
+    assert_eq!(m.planner.resolved_counts(), vec![(expected.name(), 1)]);
+    assert!(
+        m.planner.observations() >= 1,
+        "auto batch must refine the cost model"
+    );
+    // The refinement actually reached the model.
+    assert!(coord.planner().snapshot().calibration(expected).samples >= 1);
+    // The forced request hit the plan the auto request built: same
+    // fingerprint, same *resolved* backend key.
+    assert!(m.batching.cache_hits() >= 1, "resolved-key cache hit expected");
+    coord.shutdown();
+}
+
+#[test]
+fn auto_coalesces_with_fixed_traffic_under_resolved_key() {
+    // Tiny rings resolve to cpu_csr under factory *and* refined constants
+    // (scalar launch cost is negligible at this size), so the decision is
+    // stable across the whole test.
+    let g = generators::ring(48);
+    let expected = resolve_offline(&g).backend;
+    assert_eq!(expected, Backend::CpuCsr, "test premise: tiny ⇒ cpu_csr");
+    let d = 8;
+    let (q, k, v) = features(g.n, d, 51);
+    let coord = host_coordinator(|cfg| {
+        cfg.max_batch_requests = 2;
+        cfg.max_batch_nodes = 1 << 20;
+    });
+
+    // One auto + one explicitly-routed request, same (d, dv, heads, scale):
+    // after resolution they share a group key, so they must coalesce into
+    // one block-diagonal batch.
+    let (tx, rx) = channel();
+    for (id, backend) in [(1u64, Backend::Auto), (2, expected)] {
+        coord
+            .submit(AttnRequest::single_head(
+                id,
+                g.clone(),
+                d,
+                q.clone(),
+                k.clone(),
+                v.clone(),
+                1.0,
+                backend,
+                tx.clone(),
+            ))
+            .expect("submit");
+    }
+    drop(tx);
+    let mut outs = Vec::new();
+    while let Ok(resp) = rx.recv_timeout(Duration::from_secs(120)) {
+        assert_eq!(resp.batch_size, 2, "auto must coalesce with fixed traffic");
+        outs.push(resp.result.expect("result"));
+        if outs.len() == 2 {
+            break;
+        }
+    }
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0], outs[1], "identical components, identical rows");
+    assert_eq!(coord.metrics().planner.auto_requests(), 1);
+
+    // Replaying the same burst rebuilds the same merged structure, so the
+    // plan comes from the cache under (merged fingerprint, resolved
+    // backend) — no new misses.
+    let misses_before = coord.metrics().batching.cache_misses();
+    let (tx, rx) = channel();
+    for (id, backend) in [(3u64, Backend::Auto), (4, expected)] {
+        coord
+            .submit(AttnRequest::single_head(
+                id,
+                g.clone(),
+                d,
+                q.clone(),
+                k.clone(),
+                v.clone(),
+                1.0,
+                backend,
+                tx.clone(),
+            ))
+            .expect("submit");
+    }
+    drop(tx);
+    let mut replays = 0;
+    while let Ok(resp) = rx.recv_timeout(Duration::from_secs(120)) {
+        assert_eq!(resp.batch_size, 2);
+        resp.result.expect("result");
+        replays += 1;
+        if replays == 2 {
+            break;
+        }
+    }
+    assert_eq!(
+        coord.metrics().batching.cache_misses(),
+        misses_before,
+        "replayed burst must not rebuild the plan"
+    );
+    assert!(coord.metrics().batching.cache_hits() >= 1);
+    coord.shutdown();
+}
+
+#[test]
+fn calibration_persists_across_coordinator_restarts() {
+    let dir = std::env::temp_dir().join("f3s_planner_calibration_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("calibration.json");
+    std::fs::remove_file(&path).ok();
+
+    let g = generators::ring(48);
+    let d = 8;
+    let (q, k, v) = features(g.n, d, 61);
+    let coord = host_coordinator(|cfg| cfg.calibration_path = Some(path.clone()));
+    let (tx, rx) = channel();
+    coord
+        .submit(AttnRequest::single_head(
+            1,
+            g.clone(),
+            d,
+            q,
+            k,
+            v,
+            1.0,
+            Backend::Auto,
+            tx,
+        ))
+        .expect("submit");
+    rx.recv_timeout(Duration::from_secs(120))
+        .expect("response")
+        .result
+        .expect("result");
+    let tuned = coord.planner().snapshot();
+    coord.shutdown(); // persists the table
+
+    let reloaded = CostModel::load(&path).expect("calibration file written");
+    assert_eq!(reloaded, tuned, "shutdown must persist the live table");
+    assert!(reloaded.calibration(Backend::CpuCsr).samples >= 1);
+
+    // A fresh coordinator seeds its planner from the persisted table.
+    let coord2 = host_coordinator(|cfg| cfg.calibration_path = Some(path.clone()));
+    assert_eq!(coord2.planner().snapshot(), reloaded);
+    coord2.shutdown();
+    std::fs::remove_file(&path).ok();
+}

@@ -8,6 +8,34 @@
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
+REPO_ROOT="$(cd .. && pwd)"
+
+# Docs-link check: every markdown file referenced from another markdown
+# file or from source rustdoc must exist, so a dangling architecture doc
+# (the DESIGN.md that ISSUEs 0-3 cited without writing) can never ship
+# again.  References resolve relative to the repo root; paths under /opt
+# point at baked-in container material and are skipped.
+echo "== docs-link check"
+docs_missing=0
+refs=$(grep -rhoE '[A-Za-z0-9_][A-Za-z0-9_./-]*[.]md' \
+        --include='*.md' --include='*.rs' --include='*.sh' --include='*.py' \
+        "$REPO_ROOT" \
+        --exclude-dir=target --exclude-dir=vendor --exclude-dir=.git \
+        | sed 's#^\./##' | sort -u)
+for ref in $refs; do
+    case "$ref" in
+        opt/*) continue ;; # /opt/... container paths, not repo docs
+    esac
+    if [ ! -f "$REPO_ROOT/$ref" ]; then
+        echo "MISSING doc reference: $ref"
+        docs_missing=1
+    fi
+done
+if [ "$docs_missing" -ne 0 ]; then
+    echo "docs-link check FAILED"
+    exit 1
+fi
+echo "docs-link check OK"
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check"
@@ -37,6 +65,12 @@ echo "== cargo test -q --test batching_equivalence --test backward_gradcheck --t
 cargo test -q --test batching_equivalence --test backward_gradcheck \
     --test multihead_equivalence
 
+# The ISSUE-4 planner suite: synthetic extremes pick the expected backend,
+# Backend::Auto bit-matches the forced-backend run (standalone and through
+# the coordinator), and the cost-model calibration persists.
+echo "== cargo test -q --test planner_selection"
+cargo test -q --test planner_selection
+
 # Coordinator suite serialized: the stress tests spawn their own submitter
 # threads and assert timing-sensitive coalescing/backpressure behaviour, so
 # they must not interleave with each other.
@@ -53,4 +87,6 @@ echo "verify: OK"
 echo "(perf sweeps: 'cargo bench --bench host_pipeline' for the host engine,"
 echo " 'cargo bench --bench coordinator_batching' for the dynamic-batching"
 echo " delay × nodes sweep, 'cargo bench --bench multihead' for the"
-echo " head-batching sweep; see EXPERIMENTS.md §Perf/§Batching/§Multi-head)"
+echo " head-batching sweep, 'cargo bench --bench planner' for the"
+echo " auto-vs-fixed backend sweep; see EXPERIMENTS.md"
+echo " §Perf/§Batching/§Multi-head/§Planner)"

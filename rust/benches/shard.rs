@@ -1,0 +1,111 @@
+//! `cargo bench shard` — the partition-parallel sweep (EXPERIMENTS.md
+//! §Sharding): sharded vs unsharded execution across shard counts and
+//! workload families, through the offline host pipeline (no artifacts).
+//!
+//! For each (generator × shard count) the bench builds a TCB-balanced
+//! [`ShardedPlan`], checks its output **bit-identical** to the unsharded
+//! plan, then times both and reports the realised halo fraction
+//! (replicated K/V rows ÷ n) next to the latency — the replication-vs-
+//! working-set trade the planner's sharded cost candidate models.  One
+//! JSON row per combination.  Env knobs: `F3S_BENCH_FULL=1` for full
+//! sizes/iterations.
+
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::graph::{generators, CsrGraph};
+use fused3s::kernels::{AttentionBatch, Backend, ExecCtx, Plan};
+use fused3s::planner::DEFAULT_BUCKETS;
+use fused3s::shard::{ShardPolicy, ShardedPlan};
+use fused3s::util::prng::Rng;
+use fused3s::util::timing::{bench, BenchConfig};
+
+const SHARD_COUNTS: &[usize] = &[1, 2, 4, 8];
+
+fn workloads(full: bool) -> Vec<(&'static str, CsrGraph)> {
+    let n = if full { 16384 } else { 4096 };
+    vec![
+        ("er", generators::erdos_renyi(n, 8.0, 61).with_self_loops()),
+        (
+            "power_law",
+            generators::power_law(n, 8.0, 2.4, 62).with_self_loops(),
+        ),
+        ("star", generators::star(n).with_self_loops()),
+        (
+            "sbm",
+            generators::sbm(n / 128, 128, 0.05, 0.0005, 63).with_self_loops(),
+        ),
+    ]
+}
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let d = 32usize;
+    let man = offline_manifest(8, DEFAULT_BUCKETS, 128);
+    let engine = Engine::new(ExecPolicy { threads: 4, pipeline_depth: 2 });
+
+    println!("shard: sharded vs unsharded, TCB-balanced partitions (full={full})");
+    for (gen, g) in workloads(full) {
+        let n = g.n;
+        let mut rng = Rng::new(0x54A2);
+        let q = rng.normal_vec(n * d, 1.0);
+        let k = rng.normal_vec(n * d, 1.0);
+        let v = rng.normal_vec(n * d, 1.0);
+        let scale = 1.0 / (d as f32).sqrt();
+        let x = AttentionBatch::new(n, d, d, 1, &q, &k, &v, scale);
+
+        let plain =
+            Plan::new(&man, &g, Backend::Fused3S, &engine).expect("plan");
+        let want = plain
+            .execute(&mut ExecCtx::host(&engine), &x)
+            .expect("unsharded executes");
+        let r = bench("unsharded", &cfg, || {
+            let o = plain
+                .execute(&mut ExecCtx::host(&engine), &x)
+                .expect("unsharded executes");
+            assert_eq!(o.len(), n * d);
+        });
+        let base_ms = r.median_ms();
+        println!(
+            "{{\"bench\":\"shard\",\"generator\":\"{gen}\",\"n\":{n},\
+             \"shards\":1,\"mode\":\"unsharded\",\"ms\":{base_ms:.3}}}"
+        );
+
+        for &shards in SHARD_COUNTS {
+            let sp = ShardedPlan::new(
+                &man,
+                &g,
+                Backend::Fused3S,
+                &engine,
+                ShardPolicy::balanced(shards),
+            )
+            .expect("sharded plan");
+            let halo = sp.halo_fraction();
+            let got = sp
+                .execute(&mut ExecCtx::host(&engine), &x)
+                .expect("sharded executes");
+            // Bit-exactness gate before anything is timed.
+            assert_eq!(
+                got, want,
+                "{gen} shards={shards}: sharded output diverged"
+            );
+            let r = bench("sharded", &cfg, || {
+                let o = sp
+                    .execute(&mut ExecCtx::host(&engine), &x)
+                    .expect("sharded executes");
+                assert_eq!(o.len(), n * d);
+            });
+            let ms = r.median_ms();
+            let stats = sp.stats();
+            println!(
+                "{{\"bench\":\"shard\",\"generator\":\"{gen}\",\"n\":{n},\
+                 \"shards\":{},\"mode\":\"sharded\",\"ms\":{ms:.3},\
+                 \"halo_fraction\":{halo:.4},\"halo_rows\":{},\
+                 \"local_nodes\":{},\"vs_unsharded\":{:.3}}}",
+                stats.shards,
+                stats.halo_rows,
+                stats.local_nodes,
+                ms / base_ms.max(1e-9),
+            );
+        }
+    }
+}

@@ -1,9 +1,11 @@
 //! Sparsity characterisation after BSB compaction — the paper's Table 6
 //! (TCB/RW and nnz/TCB, average + CV), Table 7 (decile ranges of the
-//! TCB/RW distribution), and the per-row-window load view
-//! ([`nnz_per_rw`]) the adaptive planner's
-//! [`GraphProfile`](crate::planner::GraphProfile) is built from.
+//! TCB/RW distribution), the per-row-window load view ([`nnz_per_rw`])
+//! the adaptive planner's [`GraphProfile`](crate::planner::GraphProfile)
+//! is built from, and the sharding layer's halo-replication estimator
+//! ([`halo_fraction`]).
 
+use crate::graph::CsrGraph;
 use crate::util::stats as ustats;
 
 use super::Bsb;
@@ -81,6 +83,41 @@ pub fn nnz_per_rw(bsb: &Bsb) -> Vec<u32> {
         .collect()
 }
 
+/// Halo replication cost of a row partition: replicated K/V rows ÷ n.
+///
+/// `shards` are contiguous global **row** (node) ranges (what
+/// [`Partition::row_ranges`](crate::shard::Partition::row_ranges)
+/// produces).  For each shard this counts the *distinct* source rows its
+/// rows reference outside the shard's own range — exactly the K/V rows the
+/// sharded executor gathers (`rust/tests/shard_equivalence.rs` pins the
+/// two against each other) — and normalises by the node count, so 0 means
+/// a perfectly separable partition and S−1 is the worst case (every shard
+/// replicates everything).  The planner's sharded cost candidate and the
+/// shard bench both consume this estimate; it needs no BSB build.
+pub fn halo_fraction(g: &CsrGraph, shards: &[std::ops::Range<usize>]) -> f64 {
+    if g.n == 0 {
+        return 0.0;
+    }
+    // Epoch-stamped membership: O(n + nnz) over all shards, no per-shard
+    // hash set.  Stamp value = shard index + 1 (0 = never seen).
+    let mut stamp = vec![0u32; g.n];
+    let mut replicated = 0usize;
+    for (si, r) in shards.iter().enumerate() {
+        let mark = si as u32 + 1;
+        for u in r.clone() {
+            for &v in g.row(u) {
+                let v = v as usize;
+                let outside = v < r.start || v >= r.end;
+                if outside && stamp[v] != mark {
+                    stamp[v] = mark;
+                    replicated += 1;
+                }
+            }
+        }
+    }
+    replicated as f64 / g.n as f64
+}
+
 
 #[cfg(test)]
 mod tests {
@@ -132,6 +169,38 @@ mod tests {
         let per_rw = nnz_per_rw(&bsb);
         assert_eq!(per_rw.len(), bsb.num_rw);
         assert_eq!(per_rw.iter().map(|&z| z as usize).sum::<usize>(), g.nnz());
+    }
+
+    #[test]
+    fn halo_fraction_extremes() {
+        // One shard: no halo at all.
+        let g = generators::erdos_renyi(512, 6.0, 3).with_self_loops();
+        assert_eq!(halo_fraction(&g, &[0..512]), 0.0);
+        // A ring cut into two arcs: each arc references exactly its two
+        // boundary neighbours in the other arc -> 4 replicated rows.
+        let ring = generators::ring(512);
+        let f = halo_fraction(&ring, &[0..256, 256..512]);
+        assert!((f - 4.0 / 512.0).abs() < 1e-12, "{f}");
+        // Star: every shard not containing the hub replicates it, and the
+        // hub's shard replicates every leaf outside it.
+        let star = generators::star(512).with_self_loops();
+        let f = halo_fraction(&star, &[0..256, 256..512]);
+        // Shard 0 (hub): leaves 256..512 -> 256 rows; shard 1: hub -> 1.
+        assert!((f - 257.0 / 512.0).abs() < 1e-12, "{f}");
+    }
+
+    #[test]
+    fn halo_fraction_grows_with_shards() {
+        let g = generators::erdos_renyi(2048, 8.0, 9).with_self_loops();
+        let cut = |s: usize| {
+            let per = g.n / s;
+            let ranges: Vec<std::ops::Range<usize>> = (0..s)
+                .map(|i| i * per..if i == s - 1 { g.n } else { (i + 1) * per })
+                .collect();
+            halo_fraction(&g, &ranges)
+        };
+        assert!(cut(2) < cut(4));
+        assert!(cut(4) < cut(8));
     }
 
     #[test]

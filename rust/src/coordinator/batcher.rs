@@ -33,6 +33,11 @@ pub(crate) struct BatchPolicy {
     pub max_batch_nodes: usize,
     /// Max time the first request of a group waits for company.
     pub max_batch_delay: Duration,
+    /// Graphs above this node count take the partition-parallel (sharded)
+    /// path downstream; they always run alone — merging one into a
+    /// block-diagonal batch would drag its batchmates through the sharded
+    /// path's halo overhead.
+    pub max_plan_nodes: usize,
 }
 
 /// A request admitted into the coalescing queue, carrying its submit-time
@@ -90,11 +95,14 @@ impl Coalescer {
 
     /// Whether a request is a coalescing candidate at all.  The dense
     /// fallback pads to fixed compiled sizes, so block-diagonal merging
-    /// changes its cost model — it always runs alone.
+    /// changes its cost model — it always runs alone.  Likewise a graph
+    /// above `max_plan_nodes` is destined for the sharded path and never
+    /// merges.
     fn coalescible(&self, req: &AttnRequest) -> bool {
         self.policy.max_batch_requests > 1
             && req.backend != Backend::Dense
             && Self::weight(req) < self.policy.max_batch_nodes
+            && req.graph.n <= self.policy.max_plan_nodes
     }
 
     /// Admit one request.  Returns the batches this admission flushed:
@@ -123,6 +131,20 @@ impl Coalescer {
             scale_bits: req.scale.to_bits(),
             backend: req.backend,
         };
+        let mut flushed = Vec::new();
+        // A merged batch must stay a single-plan graph: if this admission
+        // would push the group past the sharding threshold, flush the
+        // group first, so a coalesced block-diagonal graph never routes
+        // through the sharded path its members individually avoid.
+        // (Weight over-counts nodes by the head factor — conservative.)
+        let would_cross = self.groups.get(&key).map_or(false, |g| {
+            g.nodes.saturating_add(Self::weight(&req))
+                > self.policy.max_plan_nodes
+        });
+        if would_cross {
+            let group = self.groups.remove(&key).expect("group present");
+            flushed.push(group.entries);
+        }
         let group = self.groups.entry(key).or_insert_with(|| Group {
             entries: Vec::new(),
             nodes: 0,
@@ -134,9 +156,9 @@ impl Coalescer {
             || group.entries.len() >= self.policy.max_batch_requests
         {
             let group = self.groups.remove(&key).expect("group present");
-            return vec![group.entries];
+            flushed.push(group.entries);
         }
-        Vec::new()
+        flushed
     }
 
     /// Earliest pending flush deadline (None when nothing is parked).
@@ -180,6 +202,7 @@ mod tests {
             max_batch_requests: reqs,
             max_batch_nodes: nodes,
             max_batch_delay: Duration::from_millis(delay_ms),
+            max_plan_nodes: usize::MAX,
         }
     }
 
@@ -302,6 +325,51 @@ mod tests {
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].len(), 1);
         assert_eq!(co.pending(), 0);
+    }
+
+    #[test]
+    fn sharded_size_requests_run_alone() {
+        // max_plan_nodes 32: a ring(64) request is sharding-bound and must
+        // pass straight through even though it fits the batch-node budget.
+        let mut co = Coalescer::new(BatchPolicy {
+            max_batch_requests: 8,
+            max_batch_nodes: 10_000,
+            max_batch_delay: Duration::from_millis(100),
+            max_plan_nodes: 32,
+        });
+        let now = Instant::now();
+        let f = co.admit(req(0, 64, 4, 1.0, Backend::Fused3S), now, None);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].len(), 1);
+        // Small requests still coalesce.
+        assert!(co.admit(req(1, 8, 4, 1.0, Backend::Fused3S), now, None).is_empty());
+        assert_eq!(co.pending(), 1);
+    }
+
+    #[test]
+    fn merged_batches_stay_under_the_sharding_threshold() {
+        // Each request (24 nodes) is below max_plan_nodes = 40, but two of
+        // them merged would cross it: the second admission must flush the
+        // first request alone instead of forming a 48-node merged graph
+        // that would route through the sharded path.
+        let mut co = Coalescer::new(BatchPolicy {
+            max_batch_requests: 8,
+            max_batch_nodes: 10_000,
+            max_batch_delay: Duration::from_millis(100),
+            max_plan_nodes: 40,
+        });
+        let now = Instant::now();
+        assert!(co.admit(req(0, 24, 4, 1.0, Backend::Fused3S), now, None).is_empty());
+        let f = co.admit(req(1, 24, 4, 1.0, Backend::Fused3S), now, None);
+        assert_eq!(f.len(), 1, "prior group flushed before admission");
+        let ids: Vec<u64> = f[0].iter().map(|a| a.req.id).collect();
+        assert_eq!(ids, vec![0]);
+        // The new request parked in a fresh group.
+        assert_eq!(co.pending(), 1);
+        // Well under the threshold, requests still merge as before.
+        let f = co.admit(req(2, 12, 4, 1.0, Backend::Fused3S), now, None);
+        assert!(f.is_empty());
+        assert_eq!(co.pending(), 2);
     }
 
     #[test]

@@ -165,6 +165,43 @@ impl PlannerCounters {
     }
 }
 
+/// Counters for the partition-parallel path: how many batches ran
+/// sharded (graphs above `max_plan_nodes`), how many shards they spanned,
+/// and how many replicated K/V rows their halo gathers staged.
+#[derive(Default)]
+pub struct ShardingCounters {
+    sharded_batches: AtomicU64,
+    shards: AtomicU64,
+    halo_rows: AtomicU64,
+}
+
+impl ShardingCounters {
+    /// Record one sharded batch spanning `shards` shards with `halo_rows`
+    /// replicated K/V rows gathered.
+    pub fn record_batch(&self, shards: usize, halo_rows: usize) {
+        self.sharded_batches.fetch_add(1, Ordering::Relaxed);
+        self.shards.fetch_add(shards as u64, Ordering::Relaxed);
+        self.halo_rows.fetch_add(halo_rows as u64, Ordering::Relaxed);
+    }
+
+    /// Batches that executed through a [`ShardedPlan`].
+    ///
+    /// [`ShardedPlan`]: crate::shard::ShardedPlan
+    pub fn sharded_batches(&self) -> u64 {
+        self.sharded_batches.load(Ordering::Relaxed)
+    }
+
+    /// Shards executed across all sharded batches.
+    pub fn shards_executed(&self) -> u64 {
+        self.shards.load(Ordering::Relaxed)
+    }
+
+    /// Replicated K/V rows gathered across all sharded batches.
+    pub fn halo_rows_gathered(&self) -> u64 {
+        self.halo_rows.load(Ordering::Relaxed)
+    }
+}
+
 /// Aggregate serving metrics over a run.
 pub struct Metrics {
     /// End-to-end request latency (admission → response, queueing
@@ -178,6 +215,8 @@ pub struct Metrics {
     pub batching: BatchingCounters,
     /// `Backend::Auto` routing and refinement counters.
     pub planner: PlannerCounters,
+    /// Partition-parallel (sharded) execution counters.
+    pub sharding: ShardingCounters,
     started: Instant,
     completed: Mutex<u64>,
     failed: Mutex<u64>,
@@ -191,6 +230,7 @@ impl Default for Metrics {
             execute: LatencyRecorder::new(),
             batching: BatchingCounters::default(),
             planner: PlannerCounters::default(),
+            sharding: ShardingCounters::default(),
             started: Instant::now(),
             completed: Mutex::new(0),
             failed: Mutex::new(0),
@@ -270,6 +310,17 @@ impl Metrics {
                 routed.join(" "),
             ));
         }
+        // Likewise the sharding line only appears once a graph actually
+        // routed through the partition-parallel path.
+        let sh = &self.sharding;
+        if sh.sharded_batches() > 0 {
+            line.push_str(&format!(
+                "  sharding batches={} shards={} halo_rows={}",
+                sh.sharded_batches(),
+                sh.shards_executed(),
+                sh.halo_rows_gathered(),
+            ));
+        }
         line
     }
 }
@@ -320,6 +371,20 @@ mod tests {
         assert_eq!(m.batching.cache_evictions(), 2);
         assert!(m.report().contains("largest=5"));
         assert!(m.report().contains("hit/miss/evict=1/2/2"));
+    }
+
+    #[test]
+    fn sharding_counters() {
+        let m = Metrics::new();
+        // No sharded traffic: the report keeps the old shape.
+        assert!(!m.report().contains("sharding"));
+        m.sharding.record_batch(4, 120);
+        m.sharding.record_batch(2, 30);
+        assert_eq!(m.sharding.sharded_batches(), 2);
+        assert_eq!(m.sharding.shards_executed(), 6);
+        assert_eq!(m.sharding.halo_rows_gathered(), 150);
+        let r = m.report();
+        assert!(r.contains("sharding batches=2 shards=6 halo_rows=150"), "{r}");
     }
 
     #[test]

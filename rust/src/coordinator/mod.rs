@@ -6,15 +6,18 @@
 //!  clients ── submit ──► bounded ingress queue (backpressure: blocks)
 //!                            │
 //!                     batcher thread (resolves Backend::Auto through the
-//!                     adaptive planner, then dynamic request coalescing:
-//!                     groups compatible small-graph requests into
-//!                     block-diagonal batches by size/deadline policy —
+//!                     adaptive planner — the sharded cost candidate for
+//!                     graphs above max_plan_nodes — then dynamic request
+//!                     coalescing: groups compatible small-graph requests
+//!                     into block-diagonal batches by size/deadline policy —
 //!                     paper §4.1's batched-graph workload, applied to
-//!                     serving)
+//!                     serving; sharding-bound graphs always run alone)
 //!                            │
 //!              preprocessing workers (merge components, fingerprint-keyed
-//!              BSB cache, BSB build + bucket plan on cache miss; the
-//!              paper's "preprocessing alongside sparse matrix compaction")
+//!              BSB cache, BSB build + bucket plan on cache miss; graphs
+//!              above max_plan_nodes become ShardedPlans whose per-shard
+//!              plans cache by shard-local fingerprint; the paper's
+//!              "preprocessing alongside sparse matrix compaction")
 //!                            │
 //!                     executor thread (owns the PJRT Runtime — or the
 //!                     offline host emulation — one fused driver call per
@@ -42,6 +45,9 @@ pub mod request;
 pub mod server;
 
 pub use cache::DriverCache;
-pub use metrics::{BatchingCounters, LatencyRecorder, Metrics, PlannerCounters};
+pub use metrics::{
+    BatchingCounters, LatencyRecorder, Metrics, PlannerCounters,
+    ShardingCounters,
+};
 pub use request::{AttnRequest, AttnResponse};
 pub use server::{Coordinator, CoordinatorConfig, ExecutorKind};

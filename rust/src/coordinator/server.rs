@@ -52,6 +52,7 @@ use crate::graph::CsrGraph;
 use crate::kernels::{AttentionBatch, AttnError, Backend, ExecCtx, Plan};
 use crate::planner::{self, CostModel, GraphProfile, Planner};
 use crate::runtime::{Manifest, Runtime};
+use crate::shard::{ShardPolicy, ShardedPlan};
 
 use super::batcher::{Admitted, BatchPolicy, Coalescer, Flush};
 use super::cache::DriverCache;
@@ -102,6 +103,22 @@ pub struct CoordinatorConfig {
     /// (loaded at startup if present, saved at shutdown).  `None` keeps the
     /// refinement in-memory only.
     pub calibration_path: Option<PathBuf>,
+    /// Node-count threshold past which a request's graph routes through
+    /// the partition-parallel sharded path ([`crate::shard`]) instead of
+    /// being planned whole — per-shard plans are cached by shard-local
+    /// fingerprint, outputs bit-match the unsharded plan, and coalescing
+    /// keeps merged batches under this threshold too.  The shard count is
+    /// `ceil(n / max_plan_nodes)` capped at `max_shards`, and the
+    /// TCB-balanced partitioner trades node balance for work balance, so
+    /// this is a *target* per-shard working set, not a hard per-shard
+    /// bound (the cap, plus halo replication, can leave individual shards
+    /// above it).  `usize::MAX` (the default) disables the routing.
+    pub max_plan_nodes: usize,
+    /// Shard-count ceiling for the sharded path; `0` or `1` disables
+    /// sharding entirely, so requests above `max_plan_nodes` are refused
+    /// with [`AttnError::Unsupported`] (the pre-sharding behaviour made
+    /// explicit).
+    pub max_shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -117,6 +134,8 @@ impl Default for CoordinatorConfig {
             max_batch_delay: Duration::from_micros(500),
             cache_capacity: 128,
             calibration_path: None,
+            max_plan_nodes: usize::MAX,
+            max_shards: 16,
         }
     }
 }
@@ -127,8 +146,23 @@ impl CoordinatorConfig {
             max_batch_requests: self.max_batch_requests.max(1),
             max_batch_nodes: self.max_batch_nodes.max(1),
             max_batch_delay: self.max_batch_delay,
+            max_plan_nodes: self.max_plan_nodes.max(1),
         }
     }
+
+    fn shard_route(&self) -> ShardRoute {
+        ShardRoute {
+            max_plan_nodes: self.max_plan_nodes.max(1),
+            max_shards: self.max_shards,
+        }
+    }
+}
+
+/// The preprocessing workers' view of the sharding knobs.
+#[derive(Clone, Copy)]
+struct ShardRoute {
+    max_plan_nodes: usize,
+    max_shards: usize,
 }
 
 /// One coalesced unit of work travelling batcher → preprocessing.
@@ -249,6 +283,7 @@ impl Coordinator {
 
         // Stage 2: preprocessing workers share the job queue.
         let job_rx = Arc::new(Mutex::new(job_rx));
+        let route = cfg.shard_route();
         let mut workers = Vec::new();
         for _ in 0..cfg.preprocess_workers.max(1) {
             let rx = job_rx.clone();
@@ -258,7 +293,7 @@ impl Coordinator {
             let cac = cache.clone();
             let met = metrics.clone();
             workers.push(std::thread::spawn(move || {
-                preprocess_worker(rx, tx, man, eng, cac, met)
+                preprocess_worker(rx, tx, man, eng, cac, met, route)
             }));
         }
         drop(prep_tx);
@@ -390,6 +425,17 @@ fn batcher_loop(
         if req.backend != Backend::Auto {
             return None;
         }
+        // Sharding-bound graphs score the *sharded* cost candidate (per-
+        // shard fixed overhead + halo-gather cells) over the shardable
+        // backends; their measured latency folds per-shard effects the
+        // unsharded cell model cannot attribute, so they skip the
+        // refinement loop (no tune cells) and the decision memo.
+        if req.graph.n > policy.max_plan_nodes {
+            let d = planner.resolve_sharded(&req.graph, policy.max_plan_nodes);
+            metrics.planner.auto_resolved(d.backend);
+            req.backend = d.backend;
+            return None;
+        }
         let fp = req.graph.fingerprint();
         let epoch = metrics.planner.observations();
         let (backend, cells) = match decisions.get(&fp) {
@@ -475,6 +521,7 @@ fn preprocess_worker(
     engine: Arc<Engine>,
     cache: Arc<DriverCache>,
     metrics: Arc<Metrics>,
+    route: ShardRoute,
 ) {
     loop {
         let job = {
@@ -484,7 +531,8 @@ fn preprocess_worker(
                 Err(_) => return, // batcher exited after draining
             }
         };
-        for prepared in prepare_job(job, &man, &engine, &cache, &metrics) {
+        for prepared in prepare_job(job, &man, &engine, &cache, &metrics, route)
+        {
             if tx.send(prepared).is_err() {
                 return;
             }
@@ -504,6 +552,7 @@ fn prepare_job(
     engine: &Engine,
     cache: &DriverCache,
     metrics: &Metrics,
+    route: ShardRoute,
 ) -> Vec<PreparedBatch> {
     let mut valid: Vec<Admitted> = Vec::with_capacity(job.entries.len());
     for a in job.entries {
@@ -529,7 +578,7 @@ fn prepare_job(
     }
     if valid.len() == 1 {
         let a = valid.pop().expect("one entry");
-        return vec![prepare_single(a, man, engine, cache, metrics)];
+        return vec![prepare_single(a, man, engine, cache, metrics, route)];
     }
 
     let t0 = Instant::now();
@@ -541,7 +590,7 @@ fn prepare_job(
     let wants_tune = valid.iter().any(|a| a.auto_cells.is_some());
     let refs: Vec<&CsrGraph> = valid.iter().map(|a| &a.req.graph).collect();
     let (merged, offsets) = batch_graph_refs(&refs);
-    match shared_plan(&merged, backend, man, engine, cache, metrics) {
+    match shared_plan(&merged, backend, man, engine, cache, metrics, route) {
         Ok(plan) => {
             // The merged block-diagonal structure differs from any member's,
             // so a coalesced auto batch is profiled once here; singletons
@@ -598,7 +647,7 @@ fn prepare_job(
         // not fail because of who they were batched with.
         Err(_) => valid
             .into_iter()
-            .map(|a| prepare_single(a, man, engine, cache, metrics))
+            .map(|a| prepare_single(a, man, engine, cache, metrics, route))
             .collect(),
     }
 }
@@ -611,9 +660,11 @@ fn prepare_single(
     engine: &Engine,
     cache: &DriverCache,
     metrics: &Metrics,
+    route: ShardRoute,
 ) -> PreparedBatch {
     let t0 = Instant::now();
-    let plan = shared_plan(&a.req.graph, a.req.backend, man, engine, cache, metrics);
+    let plan =
+        shared_plan(&a.req.graph, a.req.backend, man, engine, cache, metrics, route);
     metrics.batching.record_batch(1);
     let tune = match (a.auto_cells, plan.is_ok()) {
         (Some(cells), true) => Some(TuneInfo {
@@ -660,9 +711,62 @@ fn tune_info(
     })
 }
 
-/// Resolve the prepared plan for a graph: fingerprint-keyed cache first,
-/// build (and insert) on miss.
+/// Resolve the prepared plan for a graph: graphs above the node cap take
+/// the partition-parallel sharded path; everything else goes through the
+/// fingerprint-keyed cache (build and insert on miss).
 fn shared_plan(
+    graph: &CsrGraph,
+    backend: Backend,
+    man: &Manifest,
+    engine: &Engine,
+    cache: &DriverCache,
+    metrics: &Metrics,
+    route: ShardRoute,
+) -> std::result::Result<Arc<Plan>, AttnError> {
+    if graph.n > route.max_plan_nodes {
+        return sharded_plan(graph, backend, man, engine, cache, metrics, route);
+    }
+    cached_plan(graph, backend, man, engine, cache, metrics)
+}
+
+/// Build a [`ShardedPlan`] for a graph above the node cap, sourcing each
+/// shard's plan through the fingerprint cache — the shard-local graph's
+/// own fingerprint is the key, so a replayed mega-graph rebuilds only its
+/// halo maps while every shard's BSB + bucket plan comes from cache.
+fn sharded_plan(
+    graph: &CsrGraph,
+    backend: Backend,
+    man: &Manifest,
+    engine: &Engine,
+    cache: &DriverCache,
+    metrics: &Metrics,
+    route: ShardRoute,
+) -> std::result::Result<Arc<Plan>, AttnError> {
+    if route.max_shards <= 1 {
+        return Err(AttnError::Unsupported(format!(
+            "graph n={} exceeds max_plan_nodes={} and sharding is disabled \
+             (max_shards={})",
+            graph.n, route.max_plan_nodes, route.max_shards
+        )));
+    }
+    let shards = graph
+        .n
+        .div_ceil(route.max_plan_nodes)
+        .clamp(2, route.max_shards);
+    let sharded = ShardedPlan::build(
+        graph,
+        backend,
+        ShardPolicy::balanced(shards),
+        &mut |local, b| cached_plan(local, b, man, engine, cache, metrics),
+    )?;
+    let stats = sharded.stats();
+    metrics.sharding.record_batch(stats.shards, stats.halo_rows);
+    Ok(Arc::new(Plan::from_sharded(sharded)))
+}
+
+/// The single-plan cache path: fingerprint-keyed lookup, build (and
+/// insert) on miss.
+fn cached_plan(
     graph: &CsrGraph,
     backend: Backend,
     man: &Manifest,

@@ -15,7 +15,9 @@
 //! | §3.5 stability                     | [`stability`] | `stability` |
 //!
 //! Beyond the paper, [`planner`] (`repro plan`) audits the adaptive
-//! backend planner's per-dataset decisions (EXPERIMENTS.md §Planner).
+//! backend planner's per-dataset decisions (EXPERIMENTS.md §Planner), and
+//! [`shard`] (`repro shard`) audits the partition-parallel layer's cuts
+//! (EXPERIMENTS.md §Sharding).
 
 pub mod ablations;
 pub mod fig5;
@@ -23,6 +25,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod planner;
 pub mod report;
+pub mod shard;
 pub mod stability;
 pub mod table3;
 pub mod table6;

@@ -1,0 +1,91 @@
+//! Sharding audit — `repro shard`: how the partition-parallel layer would
+//! cut each dataset, and what the cut costs.
+//!
+//! Not a paper artifact: this is the introspection table for the
+//! [`crate::shard`] subsystem (EXPERIMENTS.md §Sharding).  For each
+//! dataset × shard count it prints, for both partition strategies, the
+//! TCB-work imbalance (max/mean shard work) and the halo fraction
+//! (replicated K/V rows ÷ n), plus the planner's sharded decision —
+//! which backend the shards would run and the predicted latency under the
+//! factory cost model.  `benches/shard.rs` is the measuring counterpart.
+
+use anyhow::Result;
+
+use crate::bsb::stats::halo_fraction;
+use crate::graph::datasets;
+use crate::planner::{CostModel, Planner};
+use crate::shard::partition::{self, Strategy};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::report::{f, Table};
+
+/// Audit the sharding layer's partitions for each named dataset.
+pub fn run(names: &[String], shard_counts: &[usize]) -> Result<Json> {
+    let planner = Planner::new(CostModel::default());
+    let mut table = Table::new(&[
+        "dataset", "n", "shards", "strategy", "halo frac", "work max/mean",
+        "backend", "predicted ms",
+    ]);
+    let mut results = Vec::new();
+    for name in names {
+        let d = datasets::by_name(name)?;
+        let weights = partition::rw_tcb_counts(&d.graph);
+        for &shards in shard_counts {
+            for strategy in [Strategy::BalancedTcb, Strategy::Contiguous] {
+                let part = partition::partition(&d.graph, shards, strategy);
+                let halo = halo_fraction(&d.graph, &part.row_ranges(d.graph.n));
+                let work = partition::shard_work(&weights, &part);
+                let max = work.iter().copied().max().unwrap_or(0) as f64;
+                let mean = work.iter().sum::<usize>() as f64
+                    / work.len().max(1) as f64;
+                let imbalance = if mean > 0.0 { max / mean } else { 1.0 };
+                // The per-shard node cap this shard count implies; the
+                // planner prices the balanced cut (its routing input).
+                let strat = match strategy {
+                    Strategy::BalancedTcb => "balanced",
+                    Strategy::Contiguous => "contiguous",
+                };
+                let (backend, predicted_ms) = if strategy
+                    == Strategy::BalancedTcb
+                {
+                    let cap = d.graph.n.div_ceil(part.shards().max(1)).max(1);
+                    let dec = planner.resolve_sharded(&d.graph, cap);
+                    (dec.backend.name(), dec.predicted_s * 1e3)
+                } else {
+                    ("-", 0.0)
+                };
+                table.row(vec![
+                    d.name.to_string(),
+                    d.graph.n.to_string(),
+                    part.shards().to_string(),
+                    strat.to_string(),
+                    f(halo, 3),
+                    f(imbalance, 2),
+                    backend.to_string(),
+                    if predicted_ms > 0.0 {
+                        f(predicted_ms, 3)
+                    } else {
+                        "-".into()
+                    },
+                ]);
+                results.push(obj(vec![
+                    ("dataset", s(d.name)),
+                    ("n", num(d.graph.n as f64)),
+                    ("shards", num(part.shards() as f64)),
+                    ("strategy", s(strat)),
+                    ("halo_fraction", num(halo)),
+                    ("work_imbalance", num(imbalance)),
+                    ("backend", s(backend)),
+                    ("predicted_ms", num(predicted_ms)),
+                ]));
+            }
+        }
+    }
+    println!(
+        "Sharding audit — TCB-balanced vs contiguous row-window cuts\n\
+         (halo frac = replicated K/V rows / n; work max/mean = shard TCB\n\
+         imbalance; the planner prices the balanced cut):"
+    );
+    table.print();
+    Ok(arr(results))
+}

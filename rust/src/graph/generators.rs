@@ -2,6 +2,8 @@
 //!
 //! * [`erdos_renyi`] — uniform degree, low CV (Pubmed/Cora-like).
 //! * [`barabasi_albert`] — power-law tail, high TCB/RW CV (Github/Blog-like).
+//! * [`power_law`] — Chung–Lu preferential weights with a *tunable*
+//!   exponent (the shard-imbalance workload: hubs at low node ids).
 //! * [`rmat`] — skewed Kronecker-style communities (Reddit/Yelp-like).
 //! * [`grid2d`], [`star`], [`ring`] — structured corner cases for tests.
 //! * [`sbm`] — stochastic block model (clustered, batched-graph-like).
@@ -52,6 +54,48 @@ pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> CsrGraph {
             edges.push((t, u as u32));
             targets.push(t);
             targets.push(u as u32);
+        }
+    }
+    CsrGraph::from_edges(n, &edges).expect("generated edges in range")
+}
+
+/// Chung–Lu-style power-law graph with a **tunable degree exponent**:
+/// node i carries weight `(i+1)^(-1/(alpha-1))` and each of the
+/// `n·avg_deg/2` undirected edges picks both endpoints
+/// weight-proportionally, so expected degrees follow `p(deg) ~ deg^-alpha`.
+/// Smaller `alpha` (→ 2) concentrates edges onto ever-heavier hubs.
+///
+/// This is the shard-imbalance workload: unlike [`star`] (one hub, every
+/// other row trivial) or [`barabasi_albert`] (exponent pinned at ~3 by the
+/// attachment process), the exponent knob dials the hub skew — and hence
+/// the TCB-work imbalance a row-window partitioner must absorb —
+/// continuously.  Low-id nodes are the hubs, so contiguous row partitions
+/// are maximally skewed (the adversarial case for `Strategy::Contiguous`).
+pub fn power_law(n: usize, avg_deg: f64, alpha: f64, seed: u64) -> CsrGraph {
+    assert!(n >= 2, "need at least two nodes");
+    assert!(alpha > 2.0, "degree exponent must exceed 2 (finite mean)");
+    let gamma = 1.0 / (alpha - 1.0);
+    // Cumulative weights for inverse-transform endpoint sampling.
+    let mut cum: Vec<f64> = Vec::with_capacity(n);
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        acc += ((i + 1) as f64).powf(-gamma);
+        cum.push(acc);
+    }
+    let total = acc;
+    let mut rng = Rng::new(seed);
+    let m = (n as f64 * avg_deg / 2.0).round() as usize;
+    let mut edges = Vec::with_capacity(2 * m);
+    let mut pick = |rng: &mut Rng| -> u32 {
+        let r = rng.f64() * total;
+        cum.partition_point(|&c| c < r).min(n - 1) as u32
+    };
+    for _ in 0..m {
+        let u = pick(&mut rng);
+        let v = pick(&mut rng);
+        if u != v {
+            edges.push((u, v));
+            edges.push((v, u));
         }
     }
     CsrGraph::from_edges(n, &edges).expect("generated edges in range")
@@ -212,6 +256,32 @@ mod tests {
             "BA CV {cv_ba:.2} should dwarf ER CV {cv_er:.2}"
         );
         assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn power_law_skew_tracks_the_exponent() {
+        let heavy = power_law(3000, 8.0, 2.3, 7);
+        let light = power_law(3000, 8.0, 3.5, 7);
+        assert!(heavy.is_symmetric());
+        let cv = |g: &CsrGraph| {
+            stats::cv(&g.degrees().iter().map(|&d| d as f64).collect::<Vec<_>>())
+        };
+        // Lower exponent -> heavier tail -> higher degree CV; both beat ER.
+        let er = erdos_renyi(3000, heavy.avg_degree(), 7);
+        assert!(
+            cv(&heavy) > 1.5 * cv(&light),
+            "alpha=2.3 CV {:.2} must dwarf alpha=3.5 CV {:.2}",
+            cv(&heavy),
+            cv(&light)
+        );
+        assert!(cv(&light) > 1.5 * cv(&er), "{} vs {}", cv(&light), cv(&er));
+        // Hubs live at low node ids (the contiguous-partition adversary).
+        let head: usize = (0..30).map(|i| heavy.degree(i)).sum();
+        let tail: usize = (2970..3000).map(|i| heavy.degree(i)).sum();
+        assert!(head > 10 * tail.max(1), "head {head} vs tail {tail}");
+        // Deterministic in the seed.
+        assert_eq!(power_law(500, 6.0, 2.5, 1), power_law(500, 6.0, 2.5, 1));
+        assert_ne!(power_law(500, 6.0, 2.5, 1), power_law(500, 6.0, 2.5, 2));
     }
 
     #[test]

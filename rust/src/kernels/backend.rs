@@ -160,6 +160,10 @@ pub enum Driver {
     Unfused(UnfusedDriver),
     Dense(DenseDriver),
     CpuCsr(CpuCsrDriver),
+    /// Partition-parallel execution over row-window shards, one inner plan
+    /// per shard (built by [`Plan::new_sharded`](super::Plan::new_sharded),
+    /// never by backend name).
+    Sharded(crate::shard::ShardedPlan),
 }
 
 impl Driver {
@@ -210,6 +214,7 @@ impl SparseAttentionOp for Driver {
             Driver::Unfused(d) => d.execute(ctx, x),
             Driver::Dense(d) => d.execute(ctx, x),
             Driver::CpuCsr(d) => d.execute(ctx, x),
+            Driver::Sharded(d) => d.execute(ctx, x),
         }
     }
 
@@ -219,6 +224,7 @@ impl SparseAttentionOp for Driver {
             Driver::Unfused(dr) => dr.artifact_names(d),
             Driver::Dense(dr) => dr.artifact_names(d),
             Driver::CpuCsr(_) => vec![],
+            Driver::Sharded(dr) => dr.executables(d),
         }
     }
 }

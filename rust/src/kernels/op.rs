@@ -185,6 +185,43 @@ impl Plan {
         Ok(Plan { driver, backend })
     }
 
+    /// Plan `g` as a partition-parallel [`ShardedPlan`] wrapped in the
+    /// ordinary [`Plan`] handle: row-window shards under `policy`, one
+    /// inner plan per shard, halo K/V gathers at execute time (see
+    /// [`crate::shard`]).  The result is cache- and executor-compatible
+    /// with single-shard plans; [`Plan::shard_stats`] reports the shape.
+    ///
+    /// [`ShardedPlan`]: crate::shard::ShardedPlan
+    pub fn new_sharded(
+        man: &Manifest,
+        g: &CsrGraph,
+        backend: Backend,
+        engine: &Engine,
+        policy: crate::shard::ShardPolicy,
+    ) -> Result<Plan, AttnError> {
+        let sharded =
+            crate::shard::ShardedPlan::new(man, g, backend, engine, policy)?;
+        Ok(Plan::from_sharded(sharded))
+    }
+
+    /// Wrap an externally built [`ShardedPlan`] (e.g. one whose per-shard
+    /// plans came from the coordinator's cache via
+    /// [`ShardedPlan::build`](crate::shard::ShardedPlan::build)).
+    ///
+    /// [`ShardedPlan`]: crate::shard::ShardedPlan
+    pub fn from_sharded(sharded: crate::shard::ShardedPlan) -> Plan {
+        Plan { backend: sharded.backend(), driver: Driver::Sharded(sharded) }
+    }
+
+    /// Partition shape when this plan is sharded (`None` for single-shard
+    /// plans) — what the coordinator's sharding metrics record.
+    pub fn shard_stats(&self) -> Option<crate::shard::ShardStats> {
+        match &self.driver {
+            Driver::Sharded(s) => Some(s.stats()),
+            _ => None,
+        }
+    }
+
     /// The backend this plan was prepared for.
     pub fn backend(&self) -> Backend {
         self.backend

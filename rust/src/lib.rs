@@ -51,10 +51,16 @@
 //!   sparsity features, the calibratable per-backend cost model, and the
 //!   online refinement loop behind [`kernels::Backend::Auto`]
 //!   (DESIGN.md §5, EXPERIMENTS.md §Planner).
+//! * [`shard`] — partition-parallel execution: row-window partitioners
+//!   (contiguous / TCB-work-balanced), per-shard halo K/V gathers with the
+//!   bit-exact global→local remap, and [`shard::ShardedPlan`] — one plan
+//!   per shard behind the same [`kernels::SparseAttentionOp`] seam
+//!   (DESIGN.md §10, EXPERIMENTS.md §Sharding).
 //! * [`coordinator`] — the serving layer: `Backend::Auto` resolution at
 //!   admission, dynamic request coalescing on
 //!   (d, dv, heads, scale, resolved backend), fingerprint-keyed plan
-//!   cache, request server, metrics.
+//!   cache, sharded routing of graphs above `max_plan_nodes`, request
+//!   server, metrics.
 //! * [`model`] — Graph Transformer / GAT / AGNN inference runtimes; the GT
 //!   issues one multi-head `AttentionBatch` call per layer.
 //! * [`simulator`] — the SM active-time scheduling simulator (Fig. 7).
@@ -69,6 +75,7 @@ pub mod kernels;
 pub mod model;
 pub mod planner;
 pub mod runtime;
+pub mod shard;
 pub mod simulator;
 pub mod util;
 

@@ -13,6 +13,7 @@
 //! repro ablate-split|ablate-reorder|ablate-compaction|ablate-buckets
 //! repro stability
 //! repro plan   [--datasets a,b,c]   # adaptive-planner decision audit
+//! repro shard  [--datasets a,b,c] [--shards 2,4,8]  # sharding audit
 //! repro datasets            # list the calibrated suite
 //! repro infer  --dataset X --d 64 --blocks 10 [--backend fused3s|auto]
 //! repro serve  --requests 64 [--workers 2]   # serving-loop demo
@@ -23,8 +24,8 @@
 use anyhow::{bail, Result};
 
 use fused3s::experiments::{
-    ablations, fig5, fig7, fig8, planner, report, stability, table3, table6,
-    table7,
+    ablations, fig5, fig7, fig8, planner, report, shard, stability, table3,
+    table6, table7,
 };
 use fused3s::graph::datasets::{self, Dataset};
 use fused3s::kernels::Backend;
@@ -198,6 +199,20 @@ fn run() -> Result<()> {
             let p = report::write_json("plan", &j)?;
             println!("\nwrote {}", p.display());
         }
+        "shard" => {
+            let names = parse_list(
+                &args,
+                "datasets",
+                &["pubmed-sim", "github-sim", "reddit-sim"],
+            );
+            let counts: Vec<usize> = parse_list(&args, "shards", &["2", "4", "8"])
+                .iter()
+                .map(|c| c.parse().map_err(|_| anyhow::anyhow!("bad shard count {c}")))
+                .collect::<Result<_>>()?;
+            let j = shard::run(&names, &counts)?;
+            let p = report::write_json("shard", &j)?;
+            println!("\nwrote {}", p.display());
+        }
         "infer" => {
             infer(&args)?;
         }
@@ -309,7 +324,7 @@ fn print_usage() {
          subcommands:\n  \
          datasets | table3 | table6 | table7 | fig5 | fig6 | fig7 | fig8 |\n  \
          ablate-split | ablate-reorder | ablate-compaction | ablate-buckets |\n  \
-         stability | plan | infer | serve\n\
+         stability | plan | shard | infer | serve\n\
          common flags: --datasets a,b,c  --d 64  --quick  --backends x,y"
     );
 }

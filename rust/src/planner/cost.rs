@@ -113,6 +113,32 @@ pub fn cells(backend: Backend, p: &GraphProfile) -> Option<f64> {
     }
 }
 
+/// Cell-equivalent cost of gathering one replicated halo K/V row at the
+/// reference feature dim (a row copy of q/k/v ≈ a fraction of one 128-cell
+/// TCB's tensor-core work; the constant is deliberately coarse — the
+/// calibrated `sec_per_cell` absorbs the substrate).
+pub const HALO_CELLS_PER_ROW: f64 = TCB_C as f64;
+
+/// Cost cells of a **sharded** run of `backend` over a profiled graph
+/// whose partition replicates `halo_fraction` (replicated K/V rows ÷ n,
+/// see [`bsb::stats::halo_fraction`](crate::bsb::stats::halo_fraction)):
+/// the unsharded compute cells — row partitioning never changes the
+/// dispatched TCB population, only who dispatches it — plus the halo
+/// gather surcharge.  `None` when the backend is structurally infeasible
+/// ([`cells`]) or cannot shard at all (the dense fallback's padded softmax
+/// is whole-graph by construction).
+pub fn sharded_cells(
+    backend: Backend,
+    p: &GraphProfile,
+    halo_fraction: f64,
+) -> Option<f64> {
+    if family(backend) == Backend::Dense {
+        return None;
+    }
+    let base = cells(backend, p)?;
+    Some(base + halo_fraction * p.n as f64 * HALO_CELLS_PER_ROW)
+}
+
 /// One backend's calibration row.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Calibration {
@@ -165,6 +191,26 @@ impl CostModel {
         let c = cells(backend, p)?;
         let cal = self.calibration(backend);
         Some(cal.fixed_s + cal.sec_per_cell * c)
+    }
+
+    /// Predicted latency of a sharded run: every shard pays the backend's
+    /// fixed (dispatch/pipeline-fill) cost, and the marginal rate covers
+    /// the compute cells plus the halo-gather surcharge
+    /// ([`sharded_cells`]).  `None` when the backend is infeasible or
+    /// unshardable.  The per-shard fixed term is what makes one-shard
+    /// execution win whenever the graph fits a single plan's working set —
+    /// the sharded candidate only prices ahead when it must (or when halo
+    /// replication is cheap relative to the imbalance it removes).
+    pub fn predict_sharded_s(
+        &self,
+        backend: Backend,
+        p: &GraphProfile,
+        shards: usize,
+        halo_fraction: f64,
+    ) -> Option<f64> {
+        let c = sharded_cells(backend, p, halo_fraction)?;
+        let cal = self.calibration(backend);
+        Some(cal.fixed_s * shards.max(1) as f64 + cal.sec_per_cell * c)
     }
 
     /// Fold one measured latency into the backend's calibration row: the
@@ -295,6 +341,24 @@ mod tests {
         );
         let p = profile(&generators::erdos_renyi(1024, 4.0, 1));
         assert_eq!(cells(Backend::Fused3SSplitR, &p), cells(Backend::Fused3S, &p));
+    }
+
+    #[test]
+    fn sharded_candidate_prices_overhead_and_halo() {
+        let m = CostModel::default();
+        let p = profile(&generators::erdos_renyi(4096, 6.0, 4).with_self_loops());
+        let one = m.predict_sharded_s(Backend::Fused3S, &p, 1, 0.0).unwrap();
+        let plain = m.predict_s(Backend::Fused3S, &p).unwrap();
+        assert!((one - plain).abs() < 1e-12, "1 shard, no halo == unsharded");
+        // More shards -> more fixed cost; more halo -> more cells.
+        let four = m.predict_sharded_s(Backend::Fused3S, &p, 4, 0.0).unwrap();
+        assert!(four > one);
+        let halo = m.predict_sharded_s(Backend::Fused3S, &p, 4, 0.5).unwrap();
+        assert!(halo > four);
+        // Dense cannot shard; infeasible backends stay infeasible.
+        assert!(m.predict_sharded_s(Backend::Dense, &p, 2, 0.1).is_none());
+        let hub = profile(&generators::star(5000).with_self_loops());
+        assert!(m.predict_sharded_s(Backend::UnfusedStable, &hub, 2, 0.1).is_none());
     }
 
     #[test]

@@ -46,8 +46,8 @@ use crate::graph::CsrGraph;
 use crate::kernels::Backend;
 
 pub use cost::{
-    cells, effective_cells, family, Calibration, CostModel, COST_FAMILIES,
-    REF_D,
+    cells, effective_cells, family, sharded_cells, Calibration, CostModel,
+    COST_FAMILIES, HALO_CELLS_PER_ROW, REF_D,
 };
 pub use profile::{GraphProfile, DEFAULT_BUCKETS, DEFAULT_CHUNK_T};
 
@@ -78,6 +78,21 @@ pub struct Decision {
     pub chunked: bool,
     /// Every candidate's score, in candidate order (for logs/experiments).
     pub scores: Vec<Score>,
+}
+
+/// The planner's verdict for a graph that must run sharded (see
+/// [`Planner::resolve_sharded`]): which backend every shard runs, how many
+/// shards, and the halo replication the TCB-balanced partition costs.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardDecision {
+    /// Concrete per-shard backend (never [`Backend::Auto`] or dense).
+    pub backend: Backend,
+    /// Shard count (≥ the minimum forced by the node cap, ≤ the RW count).
+    pub shards: usize,
+    /// Predicted sharded latency ([`CostModel::predict_sharded_s`]).
+    pub predicted_s: f64,
+    /// Replicated K/V rows ÷ n of the scored partition.
+    pub halo_fraction: f64,
 }
 
 /// Thread-safe wrapper holding the candidate set and the (mutable,
@@ -164,6 +179,65 @@ impl Planner {
         }
     }
 
+    /// Decide which backend a graph that must be **sharded** should run:
+    /// score every candidate's sharded prediction
+    /// ([`CostModel::predict_sharded_s`] — per-shard fixed overhead +
+    /// compute + halo-gather cells over the TCB-balanced partition's
+    /// measured [`halo_fraction`](crate::bsb::stats::halo_fraction)) at
+    /// exactly the shard count the node cap forces (`ceil(n / cap)`,
+    /// clamped to the row-window count) — the count the executor will
+    /// actually run, so the backend comparison is priced on the partition
+    /// that executes, never on a hypothetical one.  The dense fallback
+    /// never shards; if every candidate is infeasible the first shardable
+    /// candidate is returned as the last resort, exactly like
+    /// [`Planner::decide`].
+    ///
+    /// The graph scans (profile, partition, halo count) all run *before*
+    /// the cost-model lock is taken: oversize graphs are the largest ones
+    /// served, and the executor's [`Planner::observe`] must not block on
+    /// a mega-graph scan.
+    pub fn resolve_sharded(
+        &self,
+        g: &CsrGraph,
+        max_plan_nodes: usize,
+    ) -> ShardDecision {
+        use crate::shard::partition::{balanced_by_work, rw_tcb_counts};
+        let p = GraphProfile::from_csr(g);
+        let num_rw = g.n.div_ceil(crate::bsb::RW).max(1);
+        let forced = g.n.div_ceil(max_plan_nodes.max(1)).clamp(1, num_rw);
+        // One per-RW TCB scan feeds the partitioner directly (the same
+        // counts a `partition()` call would recompute).
+        let part = balanced_by_work(&rw_tcb_counts(g), forced);
+        let halo = crate::bsb::stats::halo_fraction(g, &part.row_ranges(g.n));
+        let model = self.model.lock().unwrap();
+        let mut best: Option<ShardDecision> = None;
+        for &b in &self.candidates {
+            let Some(sec) = model.predict_sharded_s(b, &p, part.shards(), halo)
+            else {
+                continue;
+            };
+            if best.as_ref().map_or(true, |d| sec < d.predicted_s) {
+                best = Some(ShardDecision {
+                    backend: b,
+                    shards: part.shards(),
+                    predicted_s: sec,
+                    halo_fraction: halo,
+                });
+            }
+        }
+        drop(model);
+        best.unwrap_or(ShardDecision {
+            backend: *self
+                .candidates
+                .iter()
+                .find(|&&b| family(b) != Backend::Dense)
+                .unwrap_or(&self.candidates[0]),
+            shards: part.shards(),
+            predicted_s: 0.0,
+            halo_fraction: halo,
+        })
+    }
+
     /// Fold one measured latency for an executed plan back into the model
     /// (the online refinement loop; see [`CostModel::observe`]).
     pub fn observe(&self, backend: Backend, cells: f64, measured_s: f64) {
@@ -246,6 +320,22 @@ mod tests {
             assert_ne!(resolve(&g).backend, Backend::Auto);
             assert_ne!(resolve_offline(&g).backend, Backend::Auto);
         }
+    }
+
+    #[test]
+    fn resolve_sharded_respects_the_node_cap() {
+        let g = generators::erdos_renyi(4096, 6.0, 11).with_self_loops();
+        let planner = Planner::offline(CostModel::default());
+        let d = planner.resolve_sharded(&g, 1024);
+        assert!(d.shards >= 4, "cap 1024 over n=4096 forces >= 4 shards");
+        assert_ne!(d.backend, Backend::Auto);
+        assert_ne!(d.backend, Backend::Dense);
+        assert!(d.predicted_s > 0.0);
+        assert!(d.halo_fraction >= 0.0);
+        // A mega-hub graph must never pick the (infeasible) unfused family.
+        let hub = generators::star(5000).with_self_loops();
+        let d = planner.resolve_sharded(&hub, 1000);
+        assert_ne!(d.backend, Backend::UnfusedStable, "oversize RW");
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Sharded execution: a [`ShardedPlan`] is a [`SparseAttentionOp`] over a
+//! partition of the graph, so it composes with [`AttentionBatch`], the
+//! models and the coordinator exactly like a single-shard [`Plan`].
+//!
+//! Execution runs through the existing [`Engine`] pipeline seam — shards
+//! are the work items: while shard *i* dispatches (its own plan's bucketed
+//! pipeline, PJRT or host emulation), a scoped worker stages shard
+//! *i+1*'s halo-gathered Q/K/V buffers and another commits shard *i−1*'s
+//! own-row outputs into the global `heads × n × dv` buffer.  Dispatch
+//! stays on the calling thread (the PJRT client is not `Sync`), and the
+//! gather/dispatch/scatter sequence is the shard order under every
+//! `ExecPolicy` — so sharded output is **bit-identical** across policies
+//! and, by the halo layout contract ([`super::halo`]), bit-identical to
+//! the unsharded plan.
+
+use std::sync::Arc;
+
+use crate::exec::Engine;
+use crate::graph::CsrGraph;
+use crate::kernels::op::{AttnError, ExecCtx, Plan, SparseAttentionOp};
+use crate::kernels::{AttentionBatch, Backend};
+use crate::runtime::Manifest;
+
+use super::halo::{self, Halo};
+use super::partition::{self, Strategy};
+
+/// How to shard a plan: shard count (clamped to the row-window count) and
+/// partition strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPolicy {
+    pub shards: usize,
+    pub strategy: Strategy,
+}
+
+impl ShardPolicy {
+    /// `shards` TCB-work-balanced shards (the hub-robust default).
+    pub fn balanced(shards: usize) -> ShardPolicy {
+        ShardPolicy { shards, strategy: Strategy::BalancedTcb }
+    }
+
+    /// `shards` equal-row-window shards.
+    pub fn contiguous(shards: usize) -> ShardPolicy {
+        ShardPolicy { shards, strategy: Strategy::Contiguous }
+    }
+}
+
+/// Aggregate shape of a sharded plan (for metrics and audits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Shards in the partition.
+    pub shards: usize,
+    /// Total replicated K/V rows gathered across shards (Σ per-shard halo).
+    pub halo_rows: usize,
+    /// Total local nodes across shard-local graphs (own + halo + padding).
+    pub local_nodes: usize,
+}
+
+/// One shard: its prepared (possibly cache-shared) plan plus the halo
+/// gather/scatter map.
+struct ShardExec {
+    plan: Arc<Plan>,
+    halo: Halo,
+}
+
+/// A partition-parallel sparse-attention plan: one BSB + plan per
+/// row-window shard, halo K/V gathers in, own-row scatters out.
+pub struct ShardedPlan {
+    n: usize,
+    backend: Backend,
+    shards: Vec<ShardExec>,
+}
+
+/// The backend families a shard can run: dense is whole-graph by
+/// construction (its padded-softmax column order changes under halo
+/// remapping), everything else is row-window-local.
+fn shardable(backend: Backend) -> bool {
+    !matches!(backend, Backend::Dense | Backend::Auto)
+}
+
+impl ShardedPlan {
+    /// Partition `g` under `policy` and prepare one plan per shard on
+    /// `engine`.  [`Backend::Auto`] resolves over the shardable candidates
+    /// (fused / unfused / CPU-CSR — never dense); an explicit
+    /// [`Backend::Dense`] is refused as [`AttnError::Unsupported`].
+    pub fn new(
+        man: &Manifest,
+        g: &CsrGraph,
+        backend: Backend,
+        engine: &Engine,
+        policy: ShardPolicy,
+    ) -> Result<ShardedPlan, AttnError> {
+        ShardedPlan::build(g, backend, policy, &mut |lg, b| {
+            Plan::new(man, lg, b, engine).map(Arc::new)
+        })
+    }
+
+    /// [`ShardedPlan::new`] with an external per-shard plan source — the
+    /// coordinator passes a closure that consults its fingerprint-keyed
+    /// [`DriverCache`](crate::coordinator::DriverCache) so repeated shard
+    /// structures skip their BSB builds entirely.
+    pub fn build(
+        g: &CsrGraph,
+        backend: Backend,
+        policy: ShardPolicy,
+        plan_source: &mut dyn FnMut(
+            &CsrGraph,
+            Backend,
+        ) -> Result<Arc<Plan>, AttnError>,
+    ) -> Result<ShardedPlan, AttnError> {
+        let backend = if backend == Backend::Auto {
+            crate::planner::Planner::with_candidates(
+                crate::planner::CostModel::default(),
+                vec![Backend::Fused3S, Backend::UnfusedStable, Backend::CpuCsr],
+            )
+            .resolve(g)
+            .backend
+        } else {
+            backend
+        };
+        if !shardable(backend) {
+            return Err(AttnError::Unsupported(format!(
+                "backend {} cannot run sharded (whole-graph execution only)",
+                backend.name()
+            )));
+        }
+        let part = partition::partition(g, policy.shards, policy.strategy);
+        let mut shards = Vec::with_capacity(part.shards());
+        for range in &part.ranges {
+            let (local, h) = halo::build_shard(g, range.clone());
+            let plan = plan_source(&local, backend)?;
+            shards.push(ShardExec { plan, halo: h });
+        }
+        Ok(ShardedPlan { n: g.n, backend, shards })
+    }
+
+    /// The concrete backend every shard plan runs.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Aggregate partition shape.
+    pub fn stats(&self) -> ShardStats {
+        ShardStats {
+            shards: self.shards.len(),
+            halo_rows: self.shards.iter().map(|s| s.halo.halo_rows).sum(),
+            local_nodes: self.shards.iter().map(|s| s.halo.local_n()).sum(),
+        }
+    }
+
+    /// Replicated K/V rows ÷ n — the realised halo fraction (matches
+    /// [`bsb::stats::halo_fraction`](crate::bsb::stats::halo_fraction) on
+    /// the same partition).
+    pub fn halo_fraction(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.stats().halo_rows as f64 / self.n as f64
+        }
+    }
+}
+
+impl SparseAttentionOp for ShardedPlan {
+    fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        x: &AttentionBatch<'_>,
+    ) -> Result<Vec<f32>, AttnError> {
+        x.validate()?;
+        if x.n != self.n {
+            return Err(AttnError::BadShape(format!(
+                "problem n={} != sharded plan n={}",
+                x.n, self.n
+            )));
+        }
+        let engine: &Engine = match *ctx {
+            ExecCtx::Pjrt { engine, .. } => engine,
+            ExecCtx::Host { engine } => engine,
+        };
+        let (heads, d, dv) = (x.heads, x.d, x.dv);
+        let mut out = vec![0.0f32; x.out_len()];
+        // Dispatch errors cross the pipeline as anyhow; keep the structured
+        // AttnError of the failing shard so callers see the same class a
+        // single-shard run would produce.
+        let mut inner_err: Option<AttnError> = None;
+        let mut shard_ctx = *ctx;
+        let result = engine.run_pipeline(
+            self.shards.len(),
+            |i, bufs| {
+                // Stage shard i's head-major local Q/K/V: own + halo rows
+                // gathered from the global buffers, padding zero-filled.
+                let h = &self.shards[i].halo;
+                let n_loc = h.local_n();
+                bufs.q.resize(heads * n_loc * d, 0.0);
+                bufs.k.resize(heads * n_loc * d, 0.0);
+                bufs.v.resize(heads * n_loc * dv, 0.0);
+                for hh in 0..heads {
+                    h.gather_rows(
+                        &mut bufs.q[hh * n_loc * d..(hh + 1) * n_loc * d],
+                        &x.q[hh * x.n * d..(hh + 1) * x.n * d],
+                        d,
+                    );
+                    h.gather_rows(
+                        &mut bufs.k[hh * n_loc * d..(hh + 1) * n_loc * d],
+                        &x.k[hh * x.n * d..(hh + 1) * x.n * d],
+                        d,
+                    );
+                    h.gather_rows(
+                        &mut bufs.v[hh * n_loc * dv..(hh + 1) * n_loc * dv],
+                        &x.v[hh * x.n * dv..(hh + 1) * x.n * dv],
+                        dv,
+                    );
+                }
+            },
+            |i, bufs| {
+                let sh = &self.shards[i];
+                let n_loc = sh.halo.local_n();
+                let lx = AttentionBatch {
+                    n: n_loc,
+                    d,
+                    dv,
+                    heads,
+                    q: &bufs.q[..heads * n_loc * d],
+                    k: &bufs.k[..heads * n_loc * d],
+                    v: &bufs.v[..heads * n_loc * dv],
+                    scale: x.scale,
+                };
+                match sh.plan.execute(&mut shard_ctx, &lx) {
+                    Ok(o) => Ok(vec![o]),
+                    Err(e) => {
+                        inner_err = Some(e.clone());
+                        Err(e.into())
+                    }
+                }
+            },
+            |i, outs| {
+                let sh = &self.shards[i];
+                let n_loc = sh.halo.local_n();
+                let o = &outs[0];
+                for hh in 0..heads {
+                    sh.halo.scatter_own(
+                        &mut out[hh * x.n * dv..(hh + 1) * x.n * dv],
+                        &o[hh * n_loc * dv..(hh + 1) * n_loc * dv],
+                        dv,
+                    );
+                }
+            },
+        );
+        match result {
+            Ok(()) => Ok(out),
+            Err(e) => Err(inner_err
+                .take()
+                .unwrap_or_else(|| AttnError::Execute(format!("{e:#}")))),
+        }
+    }
+
+    fn executables(&self, d: usize) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.plan.executables(d))
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exec::offline_manifest;
+    use crate::graph::generators;
+    use crate::planner::DEFAULT_BUCKETS;
+    use crate::util::prng::Rng;
+
+    use super::*;
+
+    fn manifest() -> Manifest {
+        offline_manifest(8, DEFAULT_BUCKETS, 128)
+    }
+
+    #[test]
+    fn single_shard_matches_plain_plan() {
+        let man = manifest();
+        let engine = Engine::serial();
+        let g = generators::erdos_renyi(300, 5.0, 1).with_self_loops();
+        let d = 8;
+        let mut rng = Rng::new(2);
+        let q = rng.normal_vec(g.n * d, 1.0);
+        let k = rng.normal_vec(g.n * d, 1.0);
+        let v = rng.normal_vec(g.n * d, 1.0);
+        let x = AttentionBatch::new(g.n, d, d, 1, &q, &k, &v, 0.5);
+        let plain = Plan::new(&man, &g, Backend::Fused3S, &engine).unwrap();
+        let want = plain.execute(&mut ExecCtx::host(&engine), &x).unwrap();
+        let sharded = ShardedPlan::new(
+            &man,
+            &g,
+            Backend::Fused3S,
+            &engine,
+            ShardPolicy::balanced(1),
+        )
+        .unwrap();
+        assert_eq!(sharded.stats().shards, 1);
+        assert_eq!(sharded.stats().halo_rows, 0);
+        let got = sharded.execute(&mut ExecCtx::host(&engine), &x).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dense_and_auto_handling() {
+        let man = manifest();
+        let engine = Engine::serial();
+        let g = generators::ring(64);
+        let err = ShardedPlan::new(
+            &man,
+            &g,
+            Backend::Dense,
+            &engine,
+            ShardPolicy::balanced(2),
+        )
+        .err()
+        .expect("dense must refuse to shard");
+        assert!(matches!(err, AttnError::Unsupported(_)));
+        let auto = ShardedPlan::new(
+            &man,
+            &g,
+            Backend::Auto,
+            &engine,
+            ShardPolicy::balanced(2),
+        )
+        .unwrap();
+        assert!(shardable(auto.backend()));
+    }
+
+    #[test]
+    fn shape_mismatch_is_bad_shape() {
+        let man = manifest();
+        let engine = Engine::serial();
+        let g = generators::ring(64);
+        let sp = ShardedPlan::new(
+            &man,
+            &g,
+            Backend::CpuCsr,
+            &engine,
+            ShardPolicy::balanced(2),
+        )
+        .unwrap();
+        let q = vec![0.0f32; 32 * 4];
+        let x = AttentionBatch::new(32, 4, 4, 1, &q, &q, &q, 1.0);
+        assert!(matches!(
+            sp.execute(&mut ExecCtx::host(&engine), &x),
+            Err(AttnError::BadShape(_))
+        ));
+    }
+}

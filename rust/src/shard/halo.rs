@@ -1,0 +1,272 @@
+//! Halo computation — the K/V rows a shard must gather, and the
+//! global→local remap that keeps sharded execution **bit-exact**.
+//!
+//! A shard owns a contiguous RW range (global rows `rows_lo..rows_hi`).
+//! Its rows' compacted columns reference source rows inside the range
+//! (intra-shard) and outside it — the **halo**.  The shard executes over a
+//! *local* graph whose node space is laid out as:
+//!
+//! ```text
+//! [ halo-below (global id < rows_lo, ascending) ]
+//! [ alignment padding (isolated, never referenced) ]
+//! [ own rows rows_lo..rows_hi ]
+//! [ halo-above (global id >= rows_hi, ascending) ]
+//! ```
+//!
+//! Two properties of this layout carry the bit-exactness proof:
+//!
+//! 1. **Monotone remap** — every *referenced* local id orders exactly as
+//!    its global id (padding slots are never referenced), so each row
+//!    window's compacted column list sorts into the same sequence as the
+//!    unsharded build.  TCB packing, bitmaps, bucket choice and chunk
+//!    boundaries are therefore structurally identical, and every per-row
+//!    float reduction (score max, softmax denominator, SpMM accumulate,
+//!    chunk merges) runs in the identical order.
+//! 2. **Window alignment** — the padding block sizes halo-below to a
+//!    multiple of 16, so local row window `own_start/16 + w` contains
+//!    exactly the 16 rows of global window `rw_lo + w`.  Shards are
+//!    RW-aligned and (except the global tail) own a multiple of 16 rows,
+//!    so halo-above also starts on a window boundary; halo rows have no
+//!    out-edges, their windows build zero TCBs and are never dispatched.
+//!
+//! Together: each shard's rows produce bitwise the same output values as
+//! the unsharded plan (pinned by `rust/tests/shard_equivalence.rs`).
+
+use std::collections::HashMap;
+
+use crate::bsb::RW;
+use crate::graph::CsrGraph;
+
+/// Sentinel in [`Halo::gather`] for alignment padding slots: gather zeros,
+/// never referenced by any edge.
+pub const PAD_ROW: u32 = u32::MAX;
+
+/// One shard's gather set and layout (see the module docs for the local
+/// node-space contract).
+#[derive(Clone, Debug)]
+pub struct Halo {
+    /// Global source row of every local slot, in local order ([`PAD_ROW`]
+    /// for alignment padding).  `gather.len()` is the local node count.
+    pub gather: Vec<u32>,
+    /// Local index of the first own row (a multiple of 16).
+    pub own_start: usize,
+    /// Own rows (= `rows_hi - rows_lo`).
+    pub own_rows: usize,
+    /// First owned global row.
+    pub own_global_start: usize,
+    /// Replicated K/V rows gathered from outside the own range
+    /// (halo-below + halo-above; padding not counted).
+    pub halo_rows: usize,
+}
+
+impl Halo {
+    /// Local node count (rows of the shard-local graph).
+    pub fn local_n(&self) -> usize {
+        self.gather.len()
+    }
+
+    /// Gather one head's features into `dst` (local row-major, `width`
+    /// floats per row) from the global `src`: own + halo rows copy their
+    /// global rows, padding slots zero-fill.  `dst` must hold
+    /// `local_n() * width` floats.
+    pub fn gather_rows(&self, dst: &mut [f32], src: &[f32], width: usize) {
+        debug_assert_eq!(dst.len(), self.local_n() * width);
+        for (i, &g) in self.gather.iter().enumerate() {
+            let row = &mut dst[i * width..(i + 1) * width];
+            if g == PAD_ROW {
+                row.fill(0.0);
+            } else {
+                let s = g as usize * width;
+                row.copy_from_slice(&src[s..s + width]);
+            }
+        }
+    }
+
+    /// Scatter one head's own-row outputs from the shard-local `src` back
+    /// into the global `dst` (`width` floats per row).
+    pub fn scatter_own(&self, dst: &mut [f32], src: &[f32], width: usize) {
+        let lo = self.own_start * width;
+        let glo = self.own_global_start * width;
+        let len = self.own_rows * width;
+        dst[glo..glo + len].copy_from_slice(&src[lo..lo + len]);
+    }
+}
+
+/// Build one shard's halo and local graph for the RW range
+/// `rw_range` of `g`.  Returns `(local graph, halo)`; the local graph
+/// carries only the own rows' edges, remapped into the local node space.
+pub fn build_shard(
+    g: &CsrGraph,
+    rw_range: std::ops::Range<usize>,
+) -> (CsrGraph, Halo) {
+    let rows_lo = (rw_range.start * RW).min(g.n);
+    let rows_hi = (rw_range.end * RW).min(g.n);
+    let own_rows = rows_hi - rows_lo;
+
+    // Distinct referenced columns, split at the own-range boundaries.
+    let mut cols: Vec<u32> = Vec::new();
+    for r in rows_lo..rows_hi {
+        cols.extend_from_slice(g.row(r));
+    }
+    cols.sort_unstable();
+    cols.dedup();
+    let below: Vec<u32> =
+        cols.iter().copied().filter(|&c| (c as usize) < rows_lo).collect();
+    let above: Vec<u32> =
+        cols.iter().copied().filter(|&c| (c as usize) >= rows_hi).collect();
+    let halo_rows = below.len() + above.len();
+
+    // Local layout: below ++ pad-to-16 ++ own ++ above.
+    let pad = (RW - below.len() % RW) % RW;
+    let own_start = below.len() + pad;
+    let mut gather = Vec::with_capacity(own_start + own_rows + above.len());
+    gather.extend_from_slice(&below);
+    gather.extend(std::iter::repeat(PAD_ROW).take(pad));
+    gather.extend((rows_lo as u32)..(rows_hi as u32));
+    gather.extend_from_slice(&above);
+
+    // Global → local id map over every gatherable (non-pad) slot.
+    let mut remap: HashMap<u32, u32> = HashMap::with_capacity(gather.len());
+    for (i, &src) in gather.iter().enumerate() {
+        if src != PAD_ROW {
+            remap.insert(src, i as u32);
+        }
+    }
+
+    // The shard-local graph: own rows' edges only.
+    let local_n = gather.len();
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for r in rows_lo..rows_hi {
+        let lr = (own_start + (r - rows_lo)) as u32;
+        for &c in g.row(r) {
+            edges.push((lr, remap[&c]));
+        }
+    }
+    let local =
+        CsrGraph::from_edges(local_n, &edges).expect("remapped ids in range");
+
+    let halo = Halo {
+        gather,
+        own_start,
+        own_rows,
+        own_global_start: rows_lo,
+        halo_rows,
+    };
+    (local, halo)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::generators;
+    use crate::shard::partition::{partition, Strategy};
+    use crate::util::prng::Rng;
+
+    use super::*;
+
+    #[test]
+    fn full_range_shard_reproduces_the_graph() {
+        let g = generators::erdos_renyi(300, 5.0, 1).with_self_loops();
+        let num_rw = g.n.div_ceil(RW);
+        let (local, halo) = build_shard(&g, 0..num_rw);
+        assert_eq!(halo.halo_rows, 0);
+        assert_eq!(halo.own_start, 0);
+        assert_eq!(halo.own_rows, g.n);
+        assert_eq!(local, g);
+    }
+
+    #[test]
+    fn layout_is_window_aligned_and_monotone() {
+        let g = generators::barabasi_albert(777, 4, 3).with_self_loops();
+        let p = partition(&g, 3, Strategy::BalancedTcb);
+        for r in &p.ranges {
+            let (local, halo) = build_shard(&g, r.clone());
+            assert_eq!(halo.own_start % RW, 0, "own rows window-aligned");
+            assert_eq!(local.n, halo.gather.len());
+            // Referenced slots are globally monotone in local order.
+            let refd: Vec<u32> = halo
+                .gather
+                .iter()
+                .copied()
+                .filter(|&s| s != PAD_ROW)
+                .collect();
+            assert!(refd.windows(2).all(|w| w[0] < w[1]));
+            // Own rows sit at their claimed offsets.
+            for i in 0..halo.own_rows {
+                assert_eq!(
+                    halo.gather[halo.own_start + i],
+                    (halo.own_global_start + i) as u32
+                );
+            }
+            // Halo rows carry no out-edges in the local graph.
+            for i in 0..local.n {
+                let own =
+                    i >= halo.own_start && i < halo.own_start + halo.own_rows;
+                if !own {
+                    assert_eq!(local.degree(i), 0, "local row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_edges_mirror_global_edges() {
+        let g = generators::erdos_renyi(500, 6.0, 7).with_self_loops();
+        let p = partition(&g, 4, Strategy::Contiguous);
+        let mut covered = 0usize;
+        for r in &p.ranges {
+            let (local, halo) = build_shard(&g, r.clone());
+            covered += halo.own_rows;
+            for i in 0..halo.own_rows {
+                let grow = halo.own_global_start + i;
+                let lrow = halo.own_start + i;
+                let want: Vec<u32> = g.row(grow).to_vec();
+                let got: Vec<u32> = local
+                    .row(lrow)
+                    .iter()
+                    .map(|&lc| halo.gather[lc as usize])
+                    .collect();
+                assert_eq!(got, want, "global row {grow}");
+            }
+        }
+        assert_eq!(covered, g.n);
+    }
+
+    #[test]
+    fn gather_scatter_round_trip() {
+        let g = generators::star(200).with_self_loops();
+        let (local, halo) = build_shard(&g, 1..3); // rows 16..48, halo hub 0
+        assert!(halo.halo_rows >= 1);
+        let d = 4;
+        let mut rng = Rng::new(9);
+        let src = rng.normal_vec(g.n * d, 1.0);
+        let mut localbuf = vec![f32::NAN; local.n * d];
+        halo.gather_rows(&mut localbuf, &src, d);
+        for (i, &s) in halo.gather.iter().enumerate() {
+            let row = &localbuf[i * d..(i + 1) * d];
+            if s == PAD_ROW {
+                assert!(row.iter().all(|&v| v == 0.0));
+            } else {
+                assert_eq!(row, &src[s as usize * d..(s as usize + 1) * d]);
+            }
+        }
+        // Scatter own rows into a fresh global buffer.
+        let mut out = vec![0.0f32; g.n * d];
+        halo.scatter_own(&mut out, &localbuf, d);
+        for r in 16..48 {
+            assert_eq!(
+                &out[r * d..(r + 1) * d],
+                &src[r * d..(r + 1) * d]
+            );
+        }
+        assert!(out[..16 * d].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn ragged_tail_shard() {
+        let g = generators::erdos_renyi(37, 3.0, 5).with_self_loops();
+        let (_, halo) = build_shard(&g, 2..3); // rows 32..37
+        assert_eq!(halo.own_rows, 5);
+        assert_eq!(halo.own_global_start, 32);
+        assert_eq!(halo.own_start % RW, 0);
+    }
+}

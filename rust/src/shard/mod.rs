@@ -1,0 +1,44 @@
+//! Partition-parallel 3S execution — the sharding layer between the plan
+//! API and the engine (DESIGN.md §10).
+//!
+//! The paper's decomposition is row-window-local: softmax normalises per
+//! row, so a **row partition** of the BSB needs no cross-shard reduction —
+//! only a gather of the K/V source rows each shard's compacted columns
+//! reference (the *halo*).  This module exploits that to serve graphs
+//! larger than one plan's working set and to stop a single mega-graph from
+//! monopolising the engine:
+//!
+//! * [`partition`] — contiguous and TCB-work-balanced row-window
+//!   partitioners (balance by per-RW TCB counts, not row counts, so
+//!   hub-heavy graphs don't skew one shard — the Gale-et-al. 1D-tiling
+//!   load-balance argument);
+//! * [`halo`] — per-shard gather sets with the monotone, window-aligned
+//!   global→local remap that makes sharded execution **bit-exact** against
+//!   the unsharded plan;
+//! * [`exec`] — [`ShardedPlan`]: one BSB + [`Plan`](crate::kernels::Plan)
+//!   per shard, executed through the engine pipeline (shard *i+1*'s halo
+//!   gather overlaps shard *i*'s dispatch) with own-row scatters into the
+//!   global head-major output.  It implements
+//!   [`SparseAttentionOp`](crate::kernels::SparseAttentionOp), so the
+//!   models, `AttentionBatch` and the coordinator compose with it
+//!   unchanged; the coordinator routes graphs above
+//!   `CoordinatorConfig::max_plan_nodes` here instead of refusing them,
+//!   caching per-shard plans by shard-local fingerprint.
+//!
+//! The planner prices a sharded candidate (per-shard fixed overhead +
+//! halo-gather cells; [`CostModel::predict_sharded_s`]) and
+//! [`bsb::stats::halo_fraction`] estimates the replication cost of a
+//! partition without building it.  Equivalence is pinned by
+//! `rust/tests/shard_equivalence.rs`; `benches/shard.rs` and
+//! `repro shard` measure and audit (EXPERIMENTS.md §Sharding).
+//!
+//! [`CostModel::predict_sharded_s`]: crate::planner::CostModel::predict_sharded_s
+//! [`bsb::stats::halo_fraction`]: crate::bsb::stats::halo_fraction
+
+pub mod exec;
+pub mod halo;
+pub mod partition;
+
+pub use exec::{ShardPolicy, ShardStats, ShardedPlan};
+pub use halo::{build_shard, Halo, PAD_ROW};
+pub use partition::{rw_tcb_counts, Partition, Strategy};

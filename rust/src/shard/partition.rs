@@ -1,0 +1,266 @@
+//! Row-window partitioning — how a graph is cut into shards.
+//!
+//! The 3S decomposition is row-window-local (softmax normalises per row),
+//! so any partition of the row windows is computationally valid; the only
+//! cross-shard traffic is the K/V halo gather ([`super::halo`]).  What the
+//! partition *does* control is balance: equal-RW-count shards are badly
+//! skewed on hub-heavy graphs (one shard inherits the mega-hub window and
+//! its hundreds of TCBs), which is exactly the 1D-tiling load-balance
+//! argument of *Sparse GPU Kernels for Deep Learning* (Gale et al.).  The
+//! [`Strategy::BalancedTcb`] partitioner therefore balances by per-RW
+//! **TCB work** — the same post-compaction distinct-column counts the
+//! planner's [`GraphProfile`](crate::planner::GraphProfile) extracts — so
+//! every shard carries ~1/S of the dispatched tensor-core blocks.
+//!
+//! Shards are always **contiguous RW ranges**: contiguity keeps each
+//! shard's own rows a single global row interval, which the halo layout
+//! relies on for its bit-exactness argument (see [`super::halo`]).
+
+use crate::bsb::RW;
+use crate::graph::CsrGraph;
+use crate::TCB_C;
+
+/// How to cut the row-window axis into shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Equal row-window counts per shard (ignores per-window work).
+    Contiguous,
+    /// Equal post-compaction TCB work per shard (hub-robust; default).
+    BalancedTcb,
+}
+
+/// A partition of a graph's row windows into contiguous shard ranges.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// Contiguous, non-overlapping RW ranges covering `0..num_rw` in
+    /// order.  Every range is non-empty (shard counts are clamped to the
+    /// row-window count).
+    pub ranges: Vec<std::ops::Range<usize>>,
+    /// Total row windows partitioned (= `ceil(n / 16)`).
+    pub num_rw: usize,
+}
+
+impl Partition {
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The global **row** (node) ranges the RW ranges correspond to, the
+    /// last one clamped to `n` for ragged graphs.
+    pub fn row_ranges(&self, n: usize) -> Vec<std::ops::Range<usize>> {
+        self.ranges
+            .iter()
+            .map(|r| (r.start * RW).min(n)..(r.end * RW).min(n))
+            .collect()
+    }
+
+    /// Debug-check the partition invariants (contiguous cover, in order).
+    pub fn validate(&self) -> bool {
+        let mut lo = 0usize;
+        for r in &self.ranges {
+            if r.start != lo || r.end <= r.start {
+                return false;
+            }
+            lo = r.end;
+        }
+        lo == self.num_rw
+    }
+}
+
+/// Post-compaction TCB count of every row window, straight from the CSR
+/// adjacency (no BSB build): the distinct neighbour columns across the
+/// window's 16 rows are exactly what compaction keeps, so
+/// `ceil(distinct / 8)` equals the post-build `Bsb::tcbs_per_rw` value
+/// (the same pinned estimate [`GraphProfile::from_csr`] uses).
+///
+/// [`GraphProfile::from_csr`]: crate::planner::GraphProfile::from_csr
+pub fn rw_tcb_counts(g: &CsrGraph) -> Vec<usize> {
+    let num_rw = g.n.div_ceil(RW);
+    let mut counts = Vec::with_capacity(num_rw);
+    let mut cols: Vec<u32> = Vec::new();
+    for w in 0..num_rw {
+        let lo = w * RW;
+        let hi = ((w + 1) * RW).min(g.n);
+        cols.clear();
+        for r in lo..hi {
+            cols.extend_from_slice(g.row(r));
+        }
+        cols.sort_unstable();
+        cols.dedup();
+        counts.push(cols.len().div_ceil(TCB_C));
+    }
+    counts
+}
+
+/// Partition `g` into (at most) `shards` contiguous RW ranges under
+/// `strategy`.  The shard count is clamped to `[1, num_rw]`; a graph with
+/// no row windows yields a single empty-range partition.
+pub fn partition(g: &CsrGraph, shards: usize, strategy: Strategy) -> Partition {
+    let num_rw = g.n.div_ceil(RW);
+    match strategy {
+        Strategy::Contiguous => contiguous(num_rw, shards),
+        Strategy::BalancedTcb => balanced_by_work(&rw_tcb_counts(g), shards),
+    }
+}
+
+/// Equal-RW-count contiguous partition of `num_rw` row windows.
+pub fn contiguous(num_rw: usize, shards: usize) -> Partition {
+    if num_rw == 0 {
+        return Partition { ranges: vec![0..0], num_rw };
+    }
+    let shards = shards.clamp(1, num_rw);
+    let base = num_rw / shards;
+    let extra = num_rw % shards;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut lo = 0usize;
+    for i in 0..shards {
+        let hi = lo + base + usize::from(i < extra);
+        ranges.push(lo..hi);
+        lo = hi;
+    }
+    Partition { ranges, num_rw }
+}
+
+/// Work-balanced contiguous partition: greedy prefix sweep closing a shard
+/// boundary once the cumulative weight reaches the next 1/S mark, while
+/// guaranteeing every remaining shard at least one row window.  With
+/// `weights = rw_tcb_counts(g)` this balances dispatched TCB work; an
+/// all-zero weight vector degrades to the equal-count split.
+pub fn balanced_by_work(weights: &[usize], shards: usize) -> Partition {
+    let num_rw = weights.len();
+    if num_rw == 0 {
+        return Partition { ranges: vec![0..0], num_rw };
+    }
+    let shards = shards.clamp(1, num_rw);
+    let total: usize = weights.iter().sum();
+    if total == 0 {
+        return contiguous(num_rw, shards);
+    }
+    let total = total as f64;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut lo = 0usize;
+    let mut acc = 0.0f64;
+    for s in 0..shards {
+        let remaining = shards - s - 1;
+        // Leave at least one RW for every shard after this one.
+        let hi_max = num_rw - remaining;
+        let target = total * (s + 1) as f64 / shards as f64;
+        let mut hi = lo;
+        while hi < hi_max && (hi == lo || acc < target) {
+            acc += weights[hi] as f64;
+            hi += 1;
+        }
+        // Last shard swallows whatever the sweep left behind.
+        if remaining == 0 {
+            while hi < num_rw {
+                acc += weights[hi] as f64;
+                hi += 1;
+            }
+        }
+        ranges.push(lo..hi);
+        lo = hi;
+    }
+    let p = Partition { ranges, num_rw };
+    debug_assert!(p.validate(), "balanced partition must cover 0..num_rw");
+    p
+}
+
+/// Per-shard total weight (for balance metrics: max/mean work ratio).
+pub fn shard_work(weights: &[usize], p: &Partition) -> Vec<usize> {
+    p.ranges
+        .iter()
+        .map(|r| weights[r.clone()].iter().sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bsb::build;
+    use crate::graph::generators;
+
+    use super::*;
+
+    #[test]
+    fn rw_tcb_counts_match_built_bsb() {
+        for g in [
+            generators::erdos_renyi(1500, 6.0, 1).with_self_loops(),
+            generators::star(2000).with_self_loops(),
+            generators::ring(277),
+        ] {
+            let counts = rw_tcb_counts(&g);
+            let bsb = build(&g);
+            let built: Vec<usize> =
+                bsb.tcbs_per_rw().iter().map(|&t| t as usize).collect();
+            assert_eq!(counts, built, "n={}", g.n);
+        }
+    }
+
+    #[test]
+    fn contiguous_covers_and_balances_counts() {
+        let p = contiguous(10, 4);
+        assert!(p.validate());
+        let sizes: Vec<usize> = p.ranges.iter().map(|r| r.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        // Clamped above num_rw.
+        let p = contiguous(3, 16);
+        assert_eq!(p.shards(), 3);
+        assert!(p.validate());
+        // Zero windows: one empty range.
+        let p = contiguous(0, 4);
+        assert_eq!(p.ranges, vec![0..0]);
+    }
+
+    #[test]
+    fn balanced_isolates_the_hub_window() {
+        // star(4096): the hub lives in RW 0 with ~512 TCBs of work while
+        // every other window has 1; a 4-way balanced cut must give RW 0 a
+        // (nearly) private shard where the contiguous cut spreads 1024
+        // windows per shard regardless.
+        let g = generators::star(4096).with_self_loops();
+        let w = rw_tcb_counts(&g);
+        let bal = balanced_by_work(&w, 4);
+        assert!(bal.validate());
+        assert_eq!(bal.shards(), 4);
+        let work = shard_work(&w, &bal);
+        let contig = contiguous(w.len(), 4);
+        let cwork = shard_work(&w, &contig);
+        let imbalance = |v: &[usize]| {
+            let max = *v.iter().max().unwrap() as f64;
+            let mean = v.iter().sum::<usize>() as f64 / v.len() as f64;
+            max / mean
+        };
+        assert!(
+            imbalance(&work) < imbalance(&cwork),
+            "balanced {work:?} must beat contiguous {cwork:?}"
+        );
+        // The hub shard is small in window count.
+        assert!(bal.ranges[0].len() < contig.ranges[0].len());
+    }
+
+    #[test]
+    fn balanced_every_shard_nonempty() {
+        for shards in [1, 2, 3, 7, 16] {
+            let g = generators::barabasi_albert(1000, 4, 5).with_self_loops();
+            let w = rw_tcb_counts(&g);
+            let p = balanced_by_work(&w, shards);
+            assert!(p.validate(), "shards={shards}");
+            assert!(p.ranges.iter().all(|r| !r.is_empty()));
+            assert_eq!(p.shards(), shards.min(w.len()));
+        }
+    }
+
+    #[test]
+    fn all_zero_weights_fall_back_to_contiguous() {
+        let p = balanced_by_work(&[0, 0, 0, 0, 0, 0], 3);
+        assert_eq!(p, contiguous(6, 3));
+    }
+
+    #[test]
+    fn row_ranges_clamp_ragged_tail() {
+        // n = 37 -> 3 RWs; rows 32..37 in the last window.
+        let p = contiguous(3, 2);
+        let rows = p.row_ranges(37);
+        assert_eq!(rows, vec![0..32, 32..37]);
+    }
+}

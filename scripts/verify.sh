@@ -71,6 +71,13 @@ cargo test -q --test batching_equivalence --test backward_gradcheck \
 echo "== cargo test -q --test planner_selection"
 cargo test -q --test planner_selection
 
+# The ISSUE-5 sharding suite: partition-parallel execution must bit-match
+# the unsharded plan (every shardable backend, shard counts, strategies,
+# heads, mega-hub chunked RWs) and the coordinator must serve graphs past
+# max_plan_nodes through the sharded path.
+echo "== cargo test -q --test shard_equivalence"
+cargo test -q --test shard_equivalence
+
 # Coordinator suite serialized: the stress tests spawn their own submitter
 # threads and assert timing-sensitive coalescing/backpressure behaviour, so
 # they must not interleave with each other.
@@ -88,5 +95,6 @@ echo "(perf sweeps: 'cargo bench --bench host_pipeline' for the host engine,"
 echo " 'cargo bench --bench coordinator_batching' for the dynamic-batching"
 echo " delay × nodes sweep, 'cargo bench --bench multihead' for the"
 echo " head-batching sweep, 'cargo bench --bench planner' for the"
-echo " auto-vs-fixed backend sweep; see EXPERIMENTS.md"
-echo " §Perf/§Batching/§Multi-head/§Planner)"
+echo " auto-vs-fixed backend sweep, 'cargo bench --bench shard' for the"
+echo " sharded-vs-unsharded sweep; see EXPERIMENTS.md"
+echo " §Perf/§Batching/§Multi-head/§Planner/§Sharding)"

@@ -1,0 +1,93 @@
+//! `cargo bench fault_overhead` — cost of the fault-injection seams on the
+//! **disabled** hot path (EXPERIMENTS.md §Faults).
+//!
+//! The seams compile to one relaxed atomic load when no `FaultPlan` is
+//! armed, and to nothing at all under `--no-default-features` (the
+//! `fault-injection` feature is off).  This bench measures the fused host
+//! path in three states inside one binary — disarmed and armed-zero-rate —
+//! and prints whether the seams were compiled in, so a second run with
+//! `--no-default-features` gives the compiled-out baseline for the same
+//! workload.  Bit-exactness between all states is asserted before any row
+//! prints: the instrumentation must not perturb the arithmetic.
+//!
+//! Env knobs: `F3S_BENCH_FULL=1` for full iteration counts,
+//! `F3S_FAULT_BENCH_N=<n>` to shrink the graph for smoke runs.
+
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::fault::{self, FaultPlan};
+use fused3s::graph::generators;
+use fused3s::kernels::{AttentionBatch, AttentionProblem, Backend, ExecCtx, Plan};
+use fused3s::util::prng::Rng;
+use fused3s::util::timing::{bench, BenchConfig};
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let n: usize = std::env::var("F3S_FAULT_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2048);
+    let deg = 8.0;
+    let d = 32;
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let compiled = cfg!(feature = "fault-injection");
+
+    println!(
+        "fault_overhead: erdos_renyi({n}, {deg}) d={d} \
+         (full={full}, seams_compiled={compiled})"
+    );
+    let g = generators::erdos_renyi(n, deg, 1).with_self_loops();
+    let mut rng = Rng::new(2);
+    let q = rng.normal_vec(n * d, 1.0);
+    let k = rng.normal_vec(n * d, 1.0);
+    let v = rng.normal_vec(n * d, 1.0);
+    let x = AttentionProblem::new(n, d, &q, &k, &v, 0.125);
+    let batch = AttentionBatch::single(&x);
+    let man = offline_manifest(32, BUCKETS, 128);
+    let engine = Engine::new(ExecPolicy { threads: 4, pipeline_depth: 2 });
+    let plan = Plan::new(&man, &g, Backend::Fused3S, &engine).expect("plan");
+
+    let run = || {
+        plan.execute(&mut ExecCtx::host(&engine), &batch)
+            .expect("run")
+    };
+
+    // Bit-exactness gate first: neither the disarmed seams nor an armed
+    // zero-rate plan may change a single bit of the output.
+    let want = run();
+    {
+        let _guard = fault::install(FaultPlan::uniform(7, 0.0));
+        assert_eq!(run(), want, "armed zero-rate run diverged");
+    }
+    assert_eq!(run(), want, "disarmed run diverged");
+
+    let disarmed = bench("disarmed", &cfg, || {
+        assert_eq!(run().len(), n * d);
+    });
+    let armed = {
+        let _guard = fault::install(FaultPlan::uniform(7, 0.0));
+        bench("armed zero-rate", &cfg, || {
+            assert_eq!(run().len(), n * d);
+        })
+    };
+    let ratio = if disarmed.median_ms() > 0.0 {
+        armed.median_ms() / disarmed.median_ms()
+    } else {
+        1.0
+    };
+    println!(
+        "{{\"bench\":\"fault_overhead\",\"n\":{n},\"deg\":{deg},\"d\":{d},\
+         \"seams_compiled\":{compiled},\
+         \"disarmed_ms\":{:.3},\"armed_zero_rate_ms\":{:.3},\
+         \"armed_over_disarmed\":{ratio:.4},\"bit_identical\":true}}",
+        disarmed.median_ms(),
+        armed.median_ms(),
+    );
+    println!("  {}", disarmed.row());
+    println!("  {}", armed.row());
+    println!(
+        "  armed/disarmed median ratio: {ratio:.4} \
+         (re-run with --no-default-features for the compiled-out baseline)"
+    );
+}

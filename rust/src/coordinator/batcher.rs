@@ -47,12 +47,29 @@ pub(crate) struct BatchPolicy {
 pub(crate) struct Admitted {
     pub req: AttnRequest,
     pub arrived: Instant,
+    /// Absolute shed point: `arrived + req.deadline`.  A parked request
+    /// past this instant is dropped from its group and answered with
+    /// [`AttnError::DeadlineExceeded`](crate::kernels::AttnError) instead
+    /// of riding a flush.  `None` = no deadline, never sheds.
+    pub expires: Option<Instant>,
     /// When `req.backend` was originally [`Backend::Auto`], the cost cells
     /// the planner priced the resolved backend at (`Decision::cells`) —
     /// carried along so a singleton batch needs no second profiling pass;
     /// the executor feeds such batches' measured latencies back into the
     /// cost model.  `None` for explicitly-routed requests.
     pub auto_cells: Option<f64>,
+}
+
+impl Admitted {
+    fn new(req: AttnRequest, arrived: Instant, auto_cells: Option<f64>) -> Admitted {
+        let expires = req.deadline.map(|d| arrived + d);
+        Admitted { req, arrived, expires, auto_cells }
+    }
+
+    /// Whether this request's deadline has passed as of `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.expires.map_or(false, |e| e <= now)
+    }
 }
 
 /// One flushed unit of work: 1..N requests sharing (d, scale, backend).
@@ -122,7 +139,7 @@ impl Coalescer {
     ) -> Vec<Flush> {
         debug_assert_ne!(req.backend, Backend::Auto, "resolve before admit");
         if !self.coalescible(&req) {
-            return vec![vec![Admitted { req, arrived: now, auto_cells }]];
+            return vec![vec![Admitted::new(req, now, auto_cells)]];
         }
         let key = GroupKey {
             d: req.d,
@@ -142,6 +159,7 @@ impl Coalescer {
                 > self.policy.max_plan_nodes
         });
         if would_cross {
+            // invariant: would_cross is only true when get(&key) was Some.
             let group = self.groups.remove(&key).expect("group present");
             flushed.push(group.entries);
         }
@@ -151,19 +169,51 @@ impl Coalescer {
             deadline: now + self.policy.max_batch_delay,
         });
         group.nodes += Self::weight(&req);
-        group.entries.push(Admitted { req, arrived: now, auto_cells });
+        group.entries.push(Admitted::new(req, now, auto_cells));
         if group.nodes >= self.policy.max_batch_nodes
             || group.entries.len() >= self.policy.max_batch_requests
         {
+            // invariant: entry() above guarantees the key is present.
             let group = self.groups.remove(&key).expect("group present");
             flushed.push(group.entries);
         }
         flushed
     }
 
-    /// Earliest pending flush deadline (None when nothing is parked).
+    /// Earliest instant at which the batcher must wake: the soonest group
+    /// flush deadline or the soonest parked request expiry, whichever
+    /// comes first (None when nothing is parked).
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.groups.values().map(|g| g.deadline).min()
+        self.groups
+            .values()
+            .flat_map(|g| {
+                std::iter::once(g.deadline)
+                    .chain(g.entries.iter().filter_map(|a| a.expires))
+            })
+            .min()
+    }
+
+    /// Remove every parked request whose deadline has passed and return
+    /// them so the caller can answer each with `DeadlineExceeded`.  Group
+    /// node budgets are re-credited and emptied groups dropped, so a
+    /// group kept alive only by expired members stops holding a flush
+    /// deadline open.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<Admitted> {
+        let mut shed = Vec::new();
+        self.groups.retain(|_, g| {
+            let mut kept = Vec::with_capacity(g.entries.len());
+            for a in g.entries.drain(..) {
+                if a.expired(now) {
+                    g.nodes -= Self::weight(&a.req);
+                    shed.push(a);
+                } else {
+                    kept.push(a);
+                }
+            }
+            g.entries = kept;
+            !g.entries.is_empty()
+        });
+        shed
     }
 
     /// Flush every group whose delay budget has elapsed.
@@ -175,6 +225,8 @@ impl Coalescer {
             .map(|(k, _)| *k)
             .collect();
         due.into_iter()
+            // invariant: keys were just collected from the live map and the
+            // map is not touched in between.
             .map(|k| self.groups.remove(&k).expect("group present").entries)
             .collect()
     }
@@ -234,8 +286,13 @@ mod tests {
             v: vec![0.0; heads * n * d],
             scale: 1.0,
             backend: Backend::Fused3S,
+            deadline: None,
             reply: tx,
         }
+    }
+
+    fn req_deadline(id: u64, n: usize, deadline: Duration) -> AttnRequest {
+        AttnRequest { deadline: Some(deadline), ..req(id, n, 4, 1.0, Backend::Fused3S) }
     }
 
     #[test]
@@ -390,6 +447,54 @@ mod tests {
         assert_eq!(due.len(), 1);
         assert_eq!(due[0][0].req.id, 1);
         assert_eq!(co.next_deadline(), None);
+    }
+
+    #[test]
+    fn shed_expired_drops_only_expired_members() {
+        let mut co = Coalescer::new(policy(10, 10_000, 1000));
+        let t0 = Instant::now();
+        assert!(co.admit(req_deadline(0, 8, Duration::from_millis(5)), t0, None).is_empty());
+        assert!(co.admit(req(1, 8, 4, 1.0, Backend::Fused3S), t0, None).is_empty());
+        assert_eq!(co.pending(), 2);
+        // Before the deadline nothing sheds.
+        assert!(co.shed_expired(t0).is_empty());
+        // Past it, only the deadlined member is shed; its batchmate stays.
+        let shed = co.shed_expired(t0 + Duration::from_millis(5));
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].req.id, 0);
+        assert_eq!(co.pending(), 1);
+        // The survivor still flushes normally.
+        let all = co.flush_all();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0][0].req.id, 1);
+    }
+
+    #[test]
+    fn shed_expired_drops_emptied_groups_and_recredits_budget() {
+        // Node budget 20: after shedding the expired 12-node member, an
+        // 8-node + 8-node pair must still park (16 < 20) — proof the
+        // expired member's weight was re-credited rather than leaked.
+        let mut co = Coalescer::new(policy(10, 20, 1000));
+        let t0 = Instant::now();
+        assert!(co.admit(req_deadline(0, 12, Duration::from_millis(1)), t0, None).is_empty());
+        let t1 = t0 + Duration::from_millis(2);
+        let shed = co.shed_expired(t1);
+        assert_eq!(shed.len(), 1);
+        assert_eq!(co.pending(), 0);
+        assert_eq!(co.next_deadline(), None, "emptied group dropped");
+        assert!(co.admit(req(1, 8, 4, 1.0, Backend::Fused3S), t1, None).is_empty());
+        assert!(co.admit(req(2, 8, 4, 1.0, Backend::Fused3S), t1, None).is_empty());
+        assert_eq!(co.pending(), 2);
+    }
+
+    #[test]
+    fn next_deadline_includes_member_expiries() {
+        // Group flush deadline is t0+1000ms but the member expires at
+        // t0+10ms: the batcher must wake for the expiry, not the flush.
+        let mut co = Coalescer::new(policy(10, 10_000, 1000));
+        let t0 = Instant::now();
+        assert!(co.admit(req_deadline(0, 8, Duration::from_millis(10)), t0, None).is_empty());
+        assert_eq!(co.next_deadline(), Some(t0 + Duration::from_millis(10)));
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::kernels::{Backend, Plan};
+use crate::util::sync::lock_unpoisoned;
 
 struct Slot {
     plan: Arc<Plan>,
@@ -64,7 +65,7 @@ impl DriverCache {
         if self.capacity == 0 {
             return None;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         let slot = inner.map.get_mut(&(fp, backend))?;
@@ -89,7 +90,7 @@ impl DriverCache {
         if self.capacity == 0 {
             return 0;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         let mut evicted = 0u64;
         while inner.map.len() >= self.capacity
             && !inner.map.contains_key(&(fp, backend))
@@ -99,6 +100,8 @@ impl DriverCache {
                 .iter()
                 .min_by_key(|(_, s)| s.last_used)
                 .map(|(k, _)| *k)
+                // invariant: the loop condition guarantees len >= capacity
+                // >= 1, so the map cannot be empty here.
                 .expect("non-empty map");
             inner.map.remove(&oldest);
             evicted += 1;
@@ -111,8 +114,19 @@ impl DriverCache {
         evicted
     }
 
+    /// Drop the entry for `(fp, backend)` if present — the degradation
+    /// ladder's poisoned-plan eviction: a cached plan whose execution
+    /// failed (or panicked) must not be served to the next request with
+    /// the same structure.  Returns whether an entry was removed.
+    pub fn evict(&self, fp: u64, backend: Backend) -> bool {
+        if self.capacity == 0 {
+            return false;
+        }
+        lock_unpoisoned(&self.inner).map.remove(&(fp, backend)).is_some()
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        lock_unpoisoned(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -162,6 +176,18 @@ mod tests {
         assert!(cache.get(1, Backend::Fused3S, 16, 32).is_some());
         assert!(cache.get(2, Backend::Fused3S, 16, 32).is_none());
         assert!(cache.get(3, Backend::Fused3S, 16, 32).is_some());
+    }
+
+    #[test]
+    fn evict_removes_only_the_named_entry() {
+        let cache = DriverCache::new(4);
+        cache.insert(1, Backend::Fused3S, 16, 32, driver_for(16));
+        cache.insert(1, Backend::CpuCsr, 16, 32, driver_for(16));
+        assert!(cache.evict(1, Backend::Fused3S));
+        assert!(!cache.evict(1, Backend::Fused3S), "already gone");
+        assert!(cache.get(1, Backend::Fused3S, 16, 32).is_none());
+        assert!(cache.get(1, Backend::CpuCsr, 16, 32).is_some());
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::time::Instant;
 
 use crate::kernels::Backend;
 use crate::util::stats;
+use crate::util::sync::lock_unpoisoned;
 
 /// Thread-safe latency recorder: accumulates raw per-event samples and
 /// summarises them on demand.
@@ -24,13 +25,15 @@ impl LatencyRecorder {
 
     /// Record one latency sample, in seconds.
     pub fn record(&self, seconds: f64) {
-        self.samples.lock().unwrap().push(seconds);
+        lock_unpoisoned(&self.samples).push(seconds);
     }
 
     /// Percentile summary over every sample recorded so far.
     pub fn snapshot(&self) -> LatencySummary {
-        let mut v = self.samples.lock().unwrap().clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut v = lock_unpoisoned(&self.samples).clone();
+        // total_cmp: a NaN sample (a bug upstream) must not panic the
+        // metrics reader.
+        v.sort_by(f64::total_cmp);
         LatencySummary {
             count: v.len(),
             p50_s: stats::percentile_sorted(&v, 50.0),
@@ -135,7 +138,8 @@ impl PlannerCounters {
     /// Record one `Backend::Auto` request resolved to `backend`.
     pub fn auto_resolved(&self, backend: Backend) {
         self.auto_requests.fetch_add(1, Ordering::Relaxed);
-        *self.resolved.lock().unwrap().entry(backend.name()).or_insert(0) += 1;
+        *lock_unpoisoned(&self.resolved).entry(backend.name()).or_insert(0) +=
+            1;
     }
 
     /// Record one measured-latency observation folded into the cost model.
@@ -156,12 +160,80 @@ impl PlannerCounters {
     /// Per-backend resolution counts, `(backend name, requests)`, sorted
     /// by name.
     pub fn resolved_counts(&self) -> Vec<(&'static str, u64)> {
-        self.resolved
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(&k, &v)| (k, v))
-            .collect()
+        lock_unpoisoned(&self.resolved).iter().map(|(&k, &v)| (k, v)).collect()
+    }
+}
+
+/// Counters for the failure-recovery machinery (DESIGN.md §11): how often
+/// the coordinator caught a panic, retried, walked the degradation ladder,
+/// shed on deadline, or quarantined a `(fingerprint, backend)` pair.  The
+/// chaos suite reconciles these against the installed
+/// [`FaultPlan`](crate::fault::FaultPlan)'s injection log.
+#[derive(Default)]
+pub struct FaultCounters {
+    panics_caught: AtomicU64,
+    retries: AtomicU64,
+    fallbacks: AtomicU64,
+    deadline_sheds: AtomicU64,
+    quarantines: AtomicU64,
+}
+
+impl FaultCounters {
+    /// A worker/executor panic converted to a structured `AttnError`.
+    pub fn panic_caught(&self) {
+        self.panics_caught.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A failed prepare/execute attempted a second time.
+    pub fn retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request degraded: re-routed to another backend, or a merged batch
+    /// split into singleton execution after a batch-level failure.
+    pub fn fallback(&self) {
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request shed with `DeadlineExceeded` before execution.
+    pub fn deadline_shed(&self) {
+        self.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A `(fingerprint, backend)` pair quarantined after retry exhaustion.
+    pub fn quarantine(&self) {
+        self.quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn panics_caught_count(&self) -> u64 {
+        self.panics_caught.load(Ordering::Relaxed)
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_sheds(&self) -> u64 {
+        self.deadline_sheds.load(Ordering::Relaxed)
+    }
+
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    /// Whether any recovery event has been recorded (gates the report
+    /// line, keeping fault-free serving logs byte-identical to previous
+    /// releases).
+    pub fn any(&self) -> bool {
+        self.panics_caught_count() > 0
+            || self.retries() > 0
+            || self.fallbacks() > 0
+            || self.deadline_sheds() > 0
+            || self.quarantines() > 0
     }
 }
 
@@ -217,6 +289,9 @@ pub struct Metrics {
     pub planner: PlannerCounters,
     /// Partition-parallel (sharded) execution counters.
     pub sharding: ShardingCounters,
+    /// Failure-recovery counters (panic isolation, retry/fallback ladder,
+    /// deadline shedding, quarantine).
+    pub faults: FaultCounters,
     started: Instant,
     completed: Mutex<u64>,
     failed: Mutex<u64>,
@@ -231,6 +306,7 @@ impl Default for Metrics {
             batching: BatchingCounters::default(),
             planner: PlannerCounters::default(),
             sharding: ShardingCounters::default(),
+            faults: FaultCounters::default(),
             started: Instant::now(),
             completed: Mutex::new(0),
             failed: Mutex::new(0),
@@ -246,20 +322,20 @@ impl Metrics {
     /// Record one finished request (success or failure).
     pub fn request_done(&self, ok: bool) {
         if ok {
-            *self.completed.lock().unwrap() += 1;
+            *lock_unpoisoned(&self.completed) += 1;
         } else {
-            *self.failed.lock().unwrap() += 1;
+            *lock_unpoisoned(&self.failed) += 1;
         }
     }
 
     /// Requests completed successfully.
     pub fn completed(&self) -> u64 {
-        *self.completed.lock().unwrap()
+        *lock_unpoisoned(&self.completed)
     }
 
     /// Requests that finished with an error response.
     pub fn failed(&self) -> u64 {
-        *self.failed.lock().unwrap()
+        *lock_unpoisoned(&self.failed)
     }
 
     /// Completed requests per second since construction.
@@ -319,6 +395,20 @@ impl Metrics {
                 sh.sharded_batches(),
                 sh.shards_executed(),
                 sh.halo_rows_gathered(),
+            ));
+        }
+        // And the faults line only appears once recovery machinery has
+        // actually engaged.
+        let f = &self.faults;
+        if f.any() {
+            line.push_str(&format!(
+                "  faults panics={} retries={} fallbacks={} sheds={} \
+                 quarantines={}",
+                f.panics_caught_count(),
+                f.retries(),
+                f.fallbacks(),
+                f.deadline_sheds(),
+                f.quarantines(),
             ));
         }
         line
@@ -385,6 +475,42 @@ mod tests {
         assert_eq!(m.sharding.halo_rows_gathered(), 150);
         let r = m.report();
         assert!(r.contains("sharding batches=2 shards=6 halo_rows=150"), "{r}");
+    }
+
+    #[test]
+    fn fault_counters() {
+        let m = Metrics::new();
+        // No recovery events: the report keeps the old shape.
+        assert!(!m.report().contains("faults"));
+        assert!(!m.faults.any());
+        m.faults.panic_caught();
+        m.faults.retry();
+        m.faults.retry();
+        m.faults.fallback();
+        m.faults.deadline_shed();
+        m.faults.quarantine();
+        assert_eq!(m.faults.panics_caught_count(), 1);
+        assert_eq!(m.faults.retries(), 2);
+        assert_eq!(m.faults.fallbacks(), 1);
+        assert_eq!(m.faults.deadline_sheds(), 1);
+        assert_eq!(m.faults.quarantines(), 1);
+        let r = m.report();
+        assert!(
+            r.contains(
+                "faults panics=1 retries=2 fallbacks=1 sheds=1 quarantines=1"
+            ),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn nan_latency_sample_does_not_panic_snapshot() {
+        let r = LatencyRecorder::new();
+        r.record(0.5);
+        r.record(f64::NAN);
+        r.record(0.25);
+        let s = r.snapshot();
+        assert_eq!(s.count, 3);
     }
 
     #[test]

@@ -37,17 +37,27 @@
 //! measured kernel latency back into the cost-model calibration, which
 //! can be persisted across restarts via
 //! [`CoordinatorConfig::calibration_path`].
+//!
+//! Every stage is fault-isolated (DESIGN.md §11): panics in admission,
+//! preparation, or execution are caught and answered as structured
+//! [`AttnError`](crate::kernels::AttnError)s; prepare/execute failures
+//! walk a retry → quarantine ([`Quarantine`]) → re-resolve → singleton-
+//! split degradation ladder; deadlined requests are shed at every
+//! queueing point; and the fault counters surface in
+//! [`Metrics::report`](metrics::Metrics::report).
 
 mod batcher;
 mod cache;
 pub mod metrics;
+pub mod recover;
 pub mod request;
 pub mod server;
 
 pub use cache::DriverCache;
 pub use metrics::{
-    BatchingCounters, LatencyRecorder, Metrics, PlannerCounters,
-    ShardingCounters,
+    BatchingCounters, FaultCounters, LatencyRecorder, Metrics,
+    PlannerCounters, ShardingCounters,
 };
+pub use recover::Quarantine;
 pub use request::{AttnRequest, AttnResponse};
 pub use server::{Coordinator, CoordinatorConfig, ExecutorKind};

@@ -1,0 +1,126 @@
+//! Quarantine registry — the memory of the backend degradation ladder.
+//!
+//! When a `(graph fingerprint, backend)` pair fails prepare or execute
+//! twice in a row (first failure is retried once), the ladder quarantines
+//! the pair here before re-resolving onto a different backend.  While a
+//! pair is quarantined, new requests for that structure skip the backend
+//! at plan time instead of rediscovering the failure — a panic in a
+//! driver or a poisoned device context otherwise turns into one
+//! retry-storm per request.
+//!
+//! Entries expire after a TTL ([`CoordinatorConfig::quarantine_ttl`]):
+//! most failures the ladder sees are transient (an evicted device buffer,
+//! a raced context teardown), so a quarantined backend is re-admitted
+//! automatically and re-proven by the next request after expiry.  A
+//! deterministic failure simply re-quarantines on its next attempt —
+//! bounded re-probing, not a permanent blacklist.
+//!
+//! [`CoordinatorConfig::quarantine_ttl`]: super::CoordinatorConfig::quarantine_ttl
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::kernels::Backend;
+use crate::util::sync::lock_unpoisoned;
+
+/// TTL-expiring set of `(fingerprint, backend)` pairs the degradation
+/// ladder has taken out of service.
+pub struct Quarantine {
+    ttl: Duration,
+    entries: Mutex<HashMap<(u64, Backend), Instant>>,
+}
+
+impl Quarantine {
+    pub fn new(ttl: Duration) -> Quarantine {
+        Quarantine { ttl, entries: Mutex::new(HashMap::new()) }
+    }
+
+    /// Quarantine `(fp, backend)` for the configured TTL (refreshes the
+    /// clock if already present).
+    pub fn insert(&self, fp: u64, backend: Backend) {
+        lock_unpoisoned(&self.entries).insert((fp, backend), Instant::now());
+    }
+
+    /// Is `(fp, backend)` currently quarantined?  Expired entries are
+    /// evicted on the way through, so the registry stays bounded by the
+    /// live failure set.
+    pub fn contains(&self, fp: u64, backend: Backend) -> bool {
+        let mut entries = lock_unpoisoned(&self.entries);
+        match entries.get(&(fp, backend)) {
+            Some(since) if since.elapsed() < self.ttl => true,
+            Some(_) => {
+                entries.remove(&(fp, backend));
+                false
+            }
+            None => false,
+        }
+    }
+
+    /// Every backend currently quarantined for `fp` — the exclusion set
+    /// handed to [`Planner::resolve_excluding`].  Sweeps expired entries.
+    ///
+    /// [`Planner::resolve_excluding`]: crate::planner::Planner::resolve_excluding
+    pub fn quarantined_for(&self, fp: u64) -> Vec<Backend> {
+        let mut entries = lock_unpoisoned(&self.entries);
+        entries.retain(|_, since| since.elapsed() < self.ttl);
+        entries
+            .keys()
+            .filter(|(f, _)| *f == fp)
+            .map(|(_, b)| *b)
+            .collect()
+    }
+
+    /// Number of live (non-expired) entries.
+    pub fn len(&self) -> usize {
+        let mut entries = lock_unpoisoned(&self.entries);
+        entries.retain(|_, since| since.elapsed() < self.ttl);
+        entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_and_scoping() {
+        let q = Quarantine::new(Duration::from_secs(60));
+        assert!(!q.contains(7, Backend::Fused3S));
+        q.insert(7, Backend::Fused3S);
+        assert!(q.contains(7, Backend::Fused3S));
+        // Scoped per (fp, backend): neither neighbour is affected.
+        assert!(!q.contains(7, Backend::CpuCsr));
+        assert!(!q.contains(8, Backend::Fused3S));
+        assert_eq!(q.quarantined_for(7), vec![Backend::Fused3S]);
+        assert!(q.quarantined_for(8).is_empty());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn entries_expire_after_ttl() {
+        let q = Quarantine::new(Duration::from_millis(30));
+        q.insert(1, Backend::Fused3S);
+        q.insert(1, Backend::UnfusedStable);
+        assert_eq!(q.quarantined_for(1).len(), 2);
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(!q.contains(1, Backend::Fused3S), "re-admitted after TTL");
+        assert!(q.quarantined_for(1).is_empty());
+        assert!(q.is_empty(), "expired entries are swept, not retained");
+    }
+
+    #[test]
+    fn reinsert_refreshes_the_clock() {
+        let q = Quarantine::new(Duration::from_millis(80));
+        q.insert(3, Backend::CpuCsr);
+        std::thread::sleep(Duration::from_millis(50));
+        q.insert(3, Backend::CpuCsr);
+        std::thread::sleep(Duration::from_millis(50));
+        // 100ms after first insert but only 50ms after the refresh.
+        assert!(q.contains(3, Backend::CpuCsr));
+    }
+}

@@ -1,6 +1,7 @@
 //! Request/response types crossing the coordinator's queues.
 
 use std::sync::mpsc::Sender;
+use std::time::Duration;
 
 use crate::graph::CsrGraph;
 use crate::kernels::{AttentionBatch, AttnError, Backend};
@@ -27,6 +28,14 @@ pub struct AttnRequest {
     /// resolves it at admission, so the request coalesces and caches under
     /// whatever concrete backend the planner picked.
     pub backend: Backend,
+    /// Optional per-request deadline, measured from submission.  A request
+    /// still queued (parked in the coalescer or waiting on a preprocessing
+    /// worker) past its deadline is shed with
+    /// [`AttnError::DeadlineExceeded`] instead of executing — the caller
+    /// has already given up, so computing the answer only steals capacity
+    /// from live requests.  `None` (the default) never sheds.  A request
+    /// whose execution has already started is allowed to finish.
+    pub deadline: Option<Duration>,
     /// Where to deliver the result.
     pub reply: Sender<AttnResponse>,
 }
@@ -48,6 +57,14 @@ pub struct AttnResponse {
     /// How many requests were coalesced into the block-diagonal batch that
     /// served this one (1 = ran alone).
     pub batch_size: usize,
+    /// The concrete backend that produced a successful result.  Usually
+    /// the resolved request backend, but the degradation ladder may have
+    /// served this request on a fallback after the primary failed —
+    /// callers comparing against golden outputs should gate bit-exactness
+    /// on this matching what they asked for.  `None` when the request
+    /// failed before any backend executed (validation, shedding, queue
+    /// teardown).
+    pub backend: Option<Backend>,
 }
 
 impl AttnRequest {
@@ -65,7 +82,20 @@ impl AttnRequest {
         backend: Backend,
         reply: Sender<AttnResponse>,
     ) -> AttnRequest {
-        AttnRequest { id, graph, d, dv: d, heads: 1, q, k, v, scale, backend, reply }
+        AttnRequest {
+            id,
+            graph,
+            d,
+            dv: d,
+            heads: 1,
+            q,
+            k,
+            v,
+            scale,
+            backend,
+            deadline: None,
+            reply,
+        }
     }
 
     /// Validate feature buffer sizes against the graph by delegating to
@@ -108,6 +138,7 @@ mod tests {
             v: vec![0.0; 128],
             scale: 1.0,
             backend: Backend::Fused3S,
+            deadline: None,
             reply: tx.clone(),
             graph: g.clone(),
         };
@@ -132,6 +163,7 @@ mod tests {
             v: vec![0.0; 128],
             scale: 1.0,
             backend: Backend::CpuCsr,
+            deadline: None,
             reply: tx.clone(),
             graph: g.clone(),
         };
@@ -155,6 +187,7 @@ mod tests {
             v: vec![0.0; 96],
             scale: 1.0,
             backend: Backend::Fused3S,
+            deadline: None,
             reply: tx.clone(),
             graph: g.clone(),
         };

@@ -37,7 +37,23 @@
 //! in the same ascending-column order as a per-graph run, the batched
 //! outputs are **bit-identical** to serial per-request execution (pinned by
 //! `rust/tests/batching_equivalence.rs`).
+//!
+//! **Failure model** (DESIGN.md §11): every stage is a panic boundary —
+//! a panic in planner resolution, plan preparation, or kernel execution is
+//! caught, converted to a structured [`AttnError`], and answered on the
+//! request's reply channel; no stage thread dies, no responder is dropped.
+//! Prepare/execute failures walk a degradation ladder: retry once,
+//! quarantine the failing `(fingerprint, backend)` pair
+//! ([`super::recover::Quarantine`]), evict the possibly-poisoned
+//! [`DriverCache`] entry, re-resolve over the remaining feasible backends,
+//! and — for merged batches — split into singleton execution so one bad
+//! request cannot fail its batch-mates.  Requests carrying a
+//! [`AttnRequest::deadline`] are shed with
+//! [`AttnError::DeadlineExceeded`] at every queueing point once the
+//! deadline passes.  The chaos suite (`rust/tests/chaos.rs`) locks all of
+//! this under seeded fault injection ([`crate::fault`]).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -47,16 +63,19 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::exec::{offline_manifest, Engine, ExecPolicy};
+use crate::fault::{self, FaultSite};
 use crate::graph::batch::batch_graph_refs;
 use crate::graph::CsrGraph;
 use crate::kernels::{AttentionBatch, AttnError, Backend, ExecCtx, Plan};
 use crate::planner::{self, CostModel, GraphProfile, Planner};
 use crate::runtime::{Manifest, Runtime};
 use crate::shard::{ShardPolicy, ShardedPlan};
+use crate::util::sync::lock_unpoisoned;
 
 use super::batcher::{Admitted, BatchPolicy, Coalescer, Flush};
 use super::cache::DriverCache;
 use super::metrics::Metrics;
+use super::recover::Quarantine;
 use super::request::{AttnRequest, AttnResponse};
 
 /// How the executor stage actually computes.
@@ -119,6 +138,11 @@ pub struct CoordinatorConfig {
     /// with [`AttnError::Unsupported`] (the pre-sharding behaviour made
     /// explicit).
     pub max_shards: usize,
+    /// How long the degradation ladder keeps a failing
+    /// `(fingerprint, backend)` pair out of service before re-probing it
+    /// ([`super::recover::Quarantine`]).  Most failures are transient, so
+    /// quarantined backends are re-admitted automatically after this TTL.
+    pub quarantine_ttl: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -136,6 +160,7 @@ impl Default for CoordinatorConfig {
             calibration_path: None,
             max_plan_nodes: usize::MAX,
             max_shards: 16,
+            quarantine_ttl: Duration::from_secs(30),
         }
     }
 }
@@ -165,16 +190,40 @@ struct ShardRoute {
     max_shards: usize,
 }
 
+/// Shared services the preprocessing and executor stages consult: plan
+/// building inputs, the BSB cache, the quarantine registry, the planner
+/// (for ladder re-resolution) and metrics.  One `Arc` instead of six.
+struct Services {
+    man: Arc<Manifest>,
+    engine: Arc<Engine>,
+    cache: Arc<DriverCache>,
+    metrics: Arc<Metrics>,
+    planner: Arc<Planner>,
+    quarantine: Arc<Quarantine>,
+    route: ShardRoute,
+}
+
 /// One coalesced unit of work travelling batcher → preprocessing.
 struct Job {
     entries: Vec<Admitted>,
 }
 
-/// One response route of a prepared batch.
+/// One response route of a prepared batch.  Carries the request's graph so
+/// the executor-side degradation ladder can re-plan this member alone if
+/// the merged batch fails.
 struct Entry {
     id: u64,
     reply: Sender<AttnResponse>,
     arrived: Instant,
+    /// Absolute deadline (submit time + `AttnRequest::deadline`).
+    expires: Option<Instant>,
+    graph: CsrGraph,
+}
+
+impl Entry {
+    fn expired(&self, now: Instant) -> bool {
+        self.expires.map_or(false, |t| t <= now)
+    }
 }
 
 /// Refinement payload for a batch whose backend the planner chose: the
@@ -200,9 +249,16 @@ struct PreparedBatch {
     k: Vec<f32>,
     v: Vec<f32>,
     plan: std::result::Result<Arc<Plan>, AttnError>,
+    /// The backend the plan was actually prepared on — the requested
+    /// backend unless the prepare-time ladder degraded it.  Execute-time
+    /// quarantine and the response's `backend` field key on this.
+    backend: Backend,
+    /// Fingerprint of the (merged) graph the plan was built for.
+    fp: u64,
     preprocess_s: f64,
-    /// Present iff any member arrived as `Backend::Auto` (the refinement
-    /// loop only pays the profiling cost for planner-routed traffic).
+    /// Present iff any member arrived as `Backend::Auto` *and* the plan
+    /// was prepared on the backend the cells were priced for (a degraded
+    /// batch must not feed a mismatched sample into the cost model).
     tune: Option<TuneInfo>,
 }
 
@@ -210,11 +266,23 @@ struct PreparedBatch {
 /// submit-time stamp so reported latency includes time spent queued in
 /// (or blocked on) the bounded ingress — the overload regime is exactly
 /// when that time matters.
+///
+/// The handle is `Sync`: clients on many threads may `submit` through one
+/// shared (`Arc`ed) coordinator while another thread calls `shutdown` —
+/// a submit racing the teardown either lands before the ingress closes
+/// (and is answered: shutdown drains every accepted request) or observes
+/// [`AttnError::QueueClosed`]; its responder is never silently dropped.
 pub struct Coordinator {
-    ingress: SyncSender<(AttnRequest, Instant)>,
+    /// `None` once `shutdown` has closed admission.
+    ingress: Mutex<Option<SyncSender<(AttnRequest, Instant)>>>,
     metrics: Arc<Metrics>,
     planner: Arc<Planner>,
     calibration_path: Option<PathBuf>,
+    stages: Mutex<Stages>,
+}
+
+/// The coordinator's stage threads, joined (once) at shutdown.
+struct Stages {
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     executor: Option<JoinHandle<()>>,
@@ -262,6 +330,16 @@ impl Coordinator {
             Planner::offline(model)
         });
 
+        let services = Arc::new(Services {
+            man: manifest,
+            engine,
+            cache,
+            metrics: metrics.clone(),
+            planner: planner.clone(),
+            quarantine: Arc::new(Quarantine::new(cfg.quarantine_ttl)),
+            route: cfg.shard_route(),
+        });
+
         // Bounded queues end to end: submit blocks (never drops) once the
         // ingress fills, and the batcher/worker stages block rather than
         // buffer unbounded merged feature payloads, so sustained overload
@@ -283,17 +361,13 @@ impl Coordinator {
 
         // Stage 2: preprocessing workers share the job queue.
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let route = cfg.shard_route();
         let mut workers = Vec::new();
         for _ in 0..cfg.preprocess_workers.max(1) {
             let rx = job_rx.clone();
             let tx = prep_tx.clone();
-            let man = manifest.clone();
-            let eng = engine.clone();
-            let cac = cache.clone();
-            let met = metrics.clone();
+            let svc = services.clone();
             workers.push(std::thread::spawn(move || {
-                preprocess_worker(rx, tx, man, eng, cac, met, route)
+                preprocess_worker(rx, tx, svc)
             }));
         }
         drop(prep_tx);
@@ -301,11 +375,9 @@ impl Coordinator {
         // Stage 3: the executor.  In PJRT mode it constructs and owns the
         // runtime on its own thread; startup errors are reported back
         // before `start` returns.  Host emulation needs no runtime.
-        let m2 = metrics.clone();
         let dir = cfg.artifacts_dir.clone();
-        let eng = engine.clone();
         let kind = cfg.executor;
-        let pl2 = planner.clone();
+        let svc = services.clone();
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
         let executor = std::thread::spawn(move || {
             let backend = match kind {
@@ -324,7 +396,7 @@ impl Coordinator {
                     ExecBackend::Host
                 }
             };
-            executor_loop(backend, prep_rx, m2, eng, pl2)
+            executor_loop(backend, prep_rx, svc)
         });
         ready_rx
             .recv()
@@ -332,13 +404,15 @@ impl Coordinator {
             .map_err(|e| anyhow::anyhow!("executor startup: {e}"))?;
 
         Ok(Coordinator {
-            ingress: ingress_tx,
+            ingress: Mutex::new(Some(ingress_tx)),
             metrics,
             planner,
             calibration_path: cfg.calibration_path.clone(),
-            batcher: Some(batcher),
-            workers,
-            executor: Some(executor),
+            stages: Mutex::new(Stages {
+                batcher: Some(batcher),
+                workers,
+                executor: Some(executor),
+            }),
         })
     }
 
@@ -350,7 +424,19 @@ impl Coordinator {
     /// model.  After [`Coordinator::shutdown`] the queue is gone and
     /// submission fails with the structured [`AttnError::QueueClosed`].
     pub fn submit(&self, req: AttnRequest) -> std::result::Result<(), AttnError> {
-        self.ingress
+        // Clone the sender out of the slot, then send *outside* the lock:
+        // a send blocked on backpressure must not hold up other submitters
+        // or the shutdown path.  A clone taken before shutdown closes the
+        // slot keeps the batcher's receiver alive until the send lands, so
+        // an accepted request is always drained and answered.
+        let sender = {
+            let slot = lock_unpoisoned(&self.ingress);
+            match slot.as_ref() {
+                Some(s) => s.clone(),
+                None => return Err(AttnError::QueueClosed),
+            }
+        };
+        sender
             .send((req, Instant::now()))
             .map_err(|_| AttnError::QueueClosed)
     }
@@ -369,26 +455,66 @@ impl Coordinator {
     }
 
     /// Stop all stages, draining every queue — including requests still
-    /// parked in the coalescing queue — so each submitted request gets a
-    /// response before this returns.  If a calibration path was
-    /// configured, the refined cost model is persisted here.
-    pub fn shutdown(mut self) {
-        drop(std::mem::replace(&mut self.ingress, sync_channel(1).0));
-        if let Some(b) = self.batcher.take() {
+    /// parked in the coalescing queue — so each accepted request gets a
+    /// response before this returns.  Takes `&self` so a shared
+    /// (`Arc`ed) coordinator can be shut down while other threads are
+    /// still submitting: their in-flight submissions either drain
+    /// normally or fail with [`AttnError::QueueClosed`].  Idempotent —
+    /// later calls (and later `submit`s) see a closed queue.  If a
+    /// calibration path was configured, the refined cost model is
+    /// persisted here.
+    pub fn shutdown(&self) {
+        drop(lock_unpoisoned(&self.ingress).take());
+        let mut stages = lock_unpoisoned(&self.stages);
+        if let Some(b) = stages.batcher.take() {
             let _ = b.join();
         }
-        for w in self.workers.drain(..) {
+        for w in stages.workers.drain(..) {
             let _ = w.join();
         }
-        if let Some(e) = self.executor.take() {
+        if let Some(e) = stages.executor.take() {
             let _ = e.join();
         }
+        drop(stages);
         if let Some(path) = &self.calibration_path {
             if let Err(e) = self.planner.save(path) {
                 eprintln!("planner: failed to persist calibration: {e:#}");
             }
         }
     }
+}
+
+/// Answer a request that never reached execution — validation failure,
+/// deadline shed, or an admission-stage fault.  `backend` is `None`: no
+/// kernel ran.
+fn answer_unserved(
+    req: AttnRequest,
+    arrived: Instant,
+    err: AttnError,
+    metrics: &Metrics,
+) {
+    let latency_s = arrived.elapsed().as_secs_f64();
+    metrics.request_done(false);
+    metrics.latency.record(latency_s);
+    let _ = req.reply.send(AttnResponse {
+        id: req.id,
+        result: Err(err),
+        latency_s,
+        preprocess_s: 0.0,
+        execute_s: 0.0,
+        batch_size: 1,
+        backend: None,
+    });
+}
+
+/// Which failures the recovery ladder treats as potentially transient and
+/// worth a retry (and, on repeat, a backend switch): prepare and execute
+/// faults, including panics converted to structured errors.  `BadShape`
+/// is a property of the request and `Unsupported` a deterministic
+/// property of the (graph, backend) pair — retrying either is wasted
+/// work, so they are answered honestly on the first failure.
+fn retryable(e: &AttnError) -> bool {
+    matches!(e, AttnError::Prepare(_) | AttnError::Execute(_))
 }
 
 fn batcher_loop(
@@ -453,11 +579,47 @@ fn batcher_loop(
         req.backend = backend;
         Some(cells)
     };
+    // Admit one request: shed it if it aged out in the ingress queue,
+    // resolve its backend behind a panic boundary (planner resolution runs
+    // cost-model code; a panic here must not kill the batcher and strand
+    // every queue), then hand it to the coalescer.  Returns false only
+    // when downstream has shut down.
+    let mut process = |co: &mut Coalescer, mut req: AttnRequest, arrived: Instant| -> bool {
+        if req.deadline.map_or(false, |d| arrived.elapsed() >= d) {
+            metrics.faults.deadline_shed();
+            answer_unserved(req, arrived, AttnError::DeadlineExceeded, &metrics);
+            return true;
+        }
+        let rolled = catch_unwind(AssertUnwindSafe(
+            || -> std::result::Result<Option<f64>, AttnError> {
+                fault::fire(FaultSite::Batch)?;
+                Ok(resolve(&mut req))
+            },
+        ));
+        let auto = match rolled {
+            Ok(Ok(cells)) => cells,
+            Ok(Err(e)) => {
+                answer_unserved(req, arrived, e, &metrics);
+                return true;
+            }
+            Err(payload) => {
+                metrics.faults.panic_caught();
+                let e = AttnError::Execute(format!(
+                    "panic during admission: {}",
+                    fault::panic_message(payload.as_ref())
+                ));
+                answer_unserved(req, arrived, e, &metrics);
+                return true;
+            }
+        };
+        send_all(&tx, co.admit(req, arrived, auto))
+    };
     loop {
         // Block outright while nothing is parked (a deadline can only be
-        // created by a new request); wake for the earliest deadline
-        // otherwise.  Deadlines count from *submit* time, so a request
-        // that aged in the ingress queue flushes promptly.
+        // created by a new request); wake for the earliest deadline —
+        // group flush or member expiry — otherwise.  Deadlines count from
+        // *submit* time, so a request that aged in the ingress queue
+        // flushes (or sheds) promptly.
         let msg = match co.next_deadline() {
             None => match rx.recv() {
                 Ok(m) => Some(m),
@@ -468,7 +630,17 @@ fn batcher_loop(
                 match rx.recv_timeout(timeout) {
                     Ok(m) => Some(m),
                     Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                        if !send_all(&tx, co.flush_due(Instant::now())) {
+                        let now = Instant::now();
+                        for a in co.shed_expired(now) {
+                            metrics.faults.deadline_shed();
+                            answer_unserved(
+                                a.req,
+                                a.arrived,
+                                AttnError::DeadlineExceeded,
+                                &metrics,
+                            );
+                        }
+                        if !send_all(&tx, co.flush_due(now)) {
                             return;
                         }
                         continue;
@@ -482,11 +654,10 @@ fn batcher_loop(
                 }
             }
         };
-        let Some((mut req, arrived)) = msg else {
+        let Some((req, arrived)) = msg else {
             return;
         };
-        let auto = resolve(&mut req);
-        if !send_all(&tx, co.admit(req, arrived, auto)) {
+        if !process(&mut co, req, arrived) {
             return;
         }
         // Greedily admit everything already queued before honouring
@@ -495,9 +666,8 @@ fn batcher_loop(
         // capacity instead of trickling out as overdue singletons.
         loop {
             match rx.try_recv() {
-                Ok((mut req, arrived)) => {
-                    let auto = resolve(&mut req);
-                    if !send_all(&tx, co.admit(req, arrived, auto)) {
+                Ok((req, arrived)) => {
+                    if !process(&mut co, req, arrived) {
                         return;
                     }
                 }
@@ -508,7 +678,12 @@ fn batcher_loop(
                 }
             }
         }
-        if !send_all(&tx, co.flush_due(Instant::now())) {
+        let now = Instant::now();
+        for a in co.shed_expired(now) {
+            metrics.faults.deadline_shed();
+            answer_unserved(a.req, a.arrived, AttnError::DeadlineExceeded, &metrics);
+        }
+        if !send_all(&tx, co.flush_due(now)) {
             return;
         }
     }
@@ -517,22 +692,17 @@ fn batcher_loop(
 fn preprocess_worker(
     rx: Arc<Mutex<Receiver<Job>>>,
     tx: SyncSender<PreparedBatch>,
-    man: Arc<Manifest>,
-    engine: Arc<Engine>,
-    cache: Arc<DriverCache>,
-    metrics: Arc<Metrics>,
-    route: ShardRoute,
+    svc: Arc<Services>,
 ) {
     loop {
         let job = {
-            let guard = rx.lock().unwrap();
+            let guard = lock_unpoisoned(&rx);
             match guard.recv() {
                 Ok(j) => j,
                 Err(_) => return, // batcher exited after draining
             }
         };
-        for prepared in prepare_job(job, &man, &engine, &cache, &metrics, route)
-        {
+        for prepared in prepare_job(job, &svc) {
             if tx.send(prepared).is_err() {
                 return;
             }
@@ -540,45 +710,36 @@ fn preprocess_worker(
     }
 }
 
-/// Validate, merge, and prepare one coalesced job.  Invalid members are
-/// answered immediately; the valid remainder becomes one block-diagonal
-/// head-major problem with a shared (possibly cached) plan.  If *merged*
-/// preparation fails — e.g. the unfused baseline's oversize refusal on a
-/// boundary window that only exists in the merged graph — the members
-/// fall back to singleton preparation rather than failing as a unit.
-fn prepare_job(
-    job: Job,
-    man: &Manifest,
-    engine: &Engine,
-    cache: &DriverCache,
-    metrics: &Metrics,
-    route: ShardRoute,
-) -> Vec<PreparedBatch> {
+/// Validate, merge, and prepare one coalesced job.  Expired members are
+/// shed and invalid members answered immediately; the valid remainder
+/// becomes one block-diagonal head-major problem with a shared (possibly
+/// cached) plan.  If *merged* preparation fails — e.g. the unfused
+/// baseline's oversize refusal on a boundary window that only exists in
+/// the merged graph, or an injected/real prepare fault the ladder could
+/// not recover — the members fall back to singleton preparation rather
+/// than failing as a unit.
+fn prepare_job(job: Job, svc: &Services) -> Vec<PreparedBatch> {
+    let metrics = &svc.metrics;
+    let now = Instant::now();
     let mut valid: Vec<Admitted> = Vec::with_capacity(job.entries.len());
     for a in job.entries {
+        if a.expired(now) {
+            metrics.faults.deadline_shed();
+            answer_unserved(a.req, a.arrived, AttnError::DeadlineExceeded, metrics);
+            continue;
+        }
         match a.req.validate() {
             Ok(()) => valid.push(a),
-            Err(e) => {
-                let latency_s = a.arrived.elapsed().as_secs_f64();
-                metrics.request_done(false);
-                metrics.latency.record(latency_s);
-                let _ = a.req.reply.send(AttnResponse {
-                    id: a.req.id,
-                    result: Err(e),
-                    latency_s,
-                    preprocess_s: 0.0,
-                    execute_s: 0.0,
-                    batch_size: 1,
-                });
-            }
+            Err(e) => answer_unserved(a.req, a.arrived, e, metrics),
         }
     }
     if valid.is_empty() {
         return Vec::new();
     }
     if valid.len() == 1 {
+        // invariant: len() == 1 was just checked.
         let a = valid.pop().expect("one entry");
-        return vec![prepare_single(a, man, engine, cache, metrics, route)];
+        return vec![prepare_single(a, svc)];
     }
 
     let t0 = Instant::now();
@@ -590,13 +751,16 @@ fn prepare_job(
     let wants_tune = valid.iter().any(|a| a.auto_cells.is_some());
     let refs: Vec<&CsrGraph> = valid.iter().map(|a| &a.req.graph).collect();
     let (merged, offsets) = batch_graph_refs(&refs);
-    match shared_plan(&merged, backend, man, engine, cache, metrics, route) {
+    let (plan, used) = plan_with_recovery(&merged, backend, svc);
+    match plan {
         Ok(plan) => {
             // The merged block-diagonal structure differs from any member's,
             // so a coalesced auto batch is profiled once here; singletons
             // reuse the cells the batcher's resolution already computed.
-            let tune = if wants_tune {
-                tune_info(&merged, backend, heads, d)
+            // A ladder-degraded batch skips tuning: its cells were priced
+            // for a backend that is not the one about to be measured.
+            let tune = if wants_tune && used == backend {
+                tune_info(&merged, used, heads, d)
             } else {
                 None
             };
@@ -607,6 +771,7 @@ fn prepare_job(
             // append-only — heads outer, components inner, no zero fill.
             // (For heads == 1 this degenerates to plain concatenation.)
             let n_total = merged.n;
+            let fp = merged.fingerprint();
             let mut q = Vec::with_capacity(heads * n_total * d);
             let mut k = Vec::with_capacity(heads * n_total * d);
             let mut v = Vec::with_capacity(heads * n_total * dv);
@@ -624,6 +789,8 @@ fn prepare_job(
                     id: a.req.id,
                     reply: a.req.reply,
                     arrived: a.arrived,
+                    expires: a.expires,
+                    graph: a.req.graph,
                 })
                 .collect();
             metrics.batching.record_batch(entries.len());
@@ -639,34 +806,29 @@ fn prepare_job(
                 k,
                 v,
                 plan: Ok(plan),
+                backend: used,
+                fp,
                 preprocess_s: t0.elapsed().as_secs_f64(),
                 tune,
             }]
         }
-        // Merged preparation failed: requests that would succeed alone must
-        // not fail because of who they were batched with.
+        // Merged preparation failed even after the ladder: requests that
+        // would succeed alone must not fail because of who they were
+        // batched with.
         Err(_) => valid
             .into_iter()
-            .map(|a| prepare_single(a, man, engine, cache, metrics, route))
+            .map(|a| prepare_single(a, svc))
             .collect(),
     }
 }
 
 /// Prepare one request as its own (singleton) batch, feature buffers moved
 /// rather than copied.
-fn prepare_single(
-    a: Admitted,
-    man: &Manifest,
-    engine: &Engine,
-    cache: &DriverCache,
-    metrics: &Metrics,
-    route: ShardRoute,
-) -> PreparedBatch {
+fn prepare_single(a: Admitted, svc: &Services) -> PreparedBatch {
     let t0 = Instant::now();
-    let plan =
-        shared_plan(&a.req.graph, a.req.backend, man, engine, cache, metrics, route);
-    metrics.batching.record_batch(1);
-    let tune = match (a.auto_cells, plan.is_ok()) {
+    let (plan, used) = plan_with_recovery(&a.req.graph, a.req.backend, svc);
+    svc.metrics.batching.record_batch(1);
+    let tune = match (a.auto_cells, plan.is_ok() && used == a.req.backend) {
         (Some(cells), true) => Some(TuneInfo {
             backend: a.req.backend,
             cells: planner::effective_cells(cells, a.req.heads, a.req.d),
@@ -674,7 +836,14 @@ fn prepare_single(
         _ => None,
     };
     let n = a.req.graph.n;
-    let entry = Entry { id: a.req.id, reply: a.req.reply, arrived: a.arrived };
+    let fp = a.req.graph.fingerprint();
+    let entry = Entry {
+        id: a.req.id,
+        reply: a.req.reply,
+        arrived: a.arrived,
+        expires: a.expires,
+        graph: a.req.graph,
+    };
     PreparedBatch {
         entries: vec![entry],
         offsets: vec![0, n as u32],
@@ -687,6 +856,8 @@ fn prepare_single(
         k: a.req.k,
         v: a.req.v,
         plan,
+        backend: used,
+        fp,
         preprocess_s: t0.elapsed().as_secs_f64(),
         tune,
     }
@@ -711,81 +882,154 @@ fn tune_info(
     })
 }
 
+/// The prepare-time arm of the degradation ladder.  Attempts to plan
+/// `graph` on the requested backend — steered away up front if that pair
+/// is already quarantined — retrying a retryable failure once; a second
+/// failure quarantines the `(fingerprint, backend)` pair, evicts the
+/// possibly-poisoned cache entry, and re-resolves through the planner
+/// over the backends not yet tried or quarantined.  Returns the plan
+/// result and the backend it was (last) attempted on.
+///
+/// Availability first: if the requested backend is quarantined but no
+/// alternative is feasible, the quarantined backend is re-probed anyway —
+/// refusing the request outright would turn one transient fault into an
+/// outage for that structure.
+fn plan_with_recovery(
+    graph: &CsrGraph,
+    requested: Backend,
+    svc: &Services,
+) -> (std::result::Result<Arc<Plan>, AttnError>, Backend) {
+    let fp = graph.fingerprint();
+    let mut backend = requested;
+    if svc.quarantine.contains(fp, requested) {
+        let exclude = svc.quarantine.quarantined_for(fp);
+        if let Some(d) = svc.planner.resolve_excluding(graph, &exclude) {
+            svc.metrics.faults.fallback();
+            backend = d.backend;
+        }
+    }
+    let mut tried: Vec<Backend> = Vec::new();
+    loop {
+        let result = match try_prepare(graph, backend, svc) {
+            Err(e) if retryable(&e) => {
+                svc.metrics.faults.retry();
+                try_prepare(graph, backend, svc)
+            }
+            other => other,
+        };
+        match result {
+            Ok(plan) => return (Ok(plan), backend),
+            Err(e) if retryable(&e) => {
+                svc.quarantine.insert(fp, backend);
+                svc.metrics.faults.quarantine();
+                svc.cache.evict(fp, backend);
+                tried.push(backend);
+                let mut exclude = svc.quarantine.quarantined_for(fp);
+                exclude.extend(tried.iter().copied());
+                match svc.planner.resolve_excluding(graph, &exclude) {
+                    Some(d) => {
+                        svc.metrics.faults.fallback();
+                        backend = d.backend;
+                    }
+                    None => return (Err(e), backend),
+                }
+            }
+            Err(e) => return (Err(e), backend),
+        }
+    }
+}
+
+/// One guarded plan-preparation attempt: a panic anywhere under the BSB
+/// build or bucket planning is caught and converted to a structured
+/// [`AttnError::Prepare`] so the worker thread survives and the ladder
+/// can react.
+fn try_prepare(
+    graph: &CsrGraph,
+    backend: Backend,
+    svc: &Services,
+) -> std::result::Result<Arc<Plan>, AttnError> {
+    match catch_unwind(AssertUnwindSafe(|| shared_plan(graph, backend, svc))) {
+        Ok(r) => r,
+        Err(payload) => {
+            svc.metrics.faults.panic_caught();
+            Err(AttnError::Prepare(format!(
+                "panic during prepare on {backend:?}: {}",
+                fault::panic_message(payload.as_ref())
+            )))
+        }
+    }
+}
+
 /// Resolve the prepared plan for a graph: graphs above the node cap take
 /// the partition-parallel sharded path; everything else goes through the
 /// fingerprint-keyed cache (build and insert on miss).
 fn shared_plan(
     graph: &CsrGraph,
     backend: Backend,
-    man: &Manifest,
-    engine: &Engine,
-    cache: &DriverCache,
-    metrics: &Metrics,
-    route: ShardRoute,
+    svc: &Services,
 ) -> std::result::Result<Arc<Plan>, AttnError> {
-    if graph.n > route.max_plan_nodes {
-        return sharded_plan(graph, backend, man, engine, cache, metrics, route);
+    if graph.n > svc.route.max_plan_nodes {
+        return sharded_plan(graph, backend, svc);
     }
-    cached_plan(graph, backend, man, engine, cache, metrics)
+    cached_plan(graph, backend, svc)
 }
 
 /// Build a [`ShardedPlan`] for a graph above the node cap, sourcing each
 /// shard's plan through the fingerprint cache — the shard-local graph's
 /// own fingerprint is the key, so a replayed mega-graph rebuilds only its
 /// halo maps while every shard's BSB + bucket plan comes from cache.
+/// A failure (or caught panic) inside one shard's preparation surfaces as
+/// a structured `AttnError::Prepare` naming the shard, failing only this
+/// request ([`ShardedPlan::build`] isolates per-shard panics).
 fn sharded_plan(
     graph: &CsrGraph,
     backend: Backend,
-    man: &Manifest,
-    engine: &Engine,
-    cache: &DriverCache,
-    metrics: &Metrics,
-    route: ShardRoute,
+    svc: &Services,
 ) -> std::result::Result<Arc<Plan>, AttnError> {
-    if route.max_shards <= 1 {
+    if svc.route.max_shards <= 1 {
         return Err(AttnError::Unsupported(format!(
             "graph n={} exceeds max_plan_nodes={} and sharding is disabled \
              (max_shards={})",
-            graph.n, route.max_plan_nodes, route.max_shards
+            graph.n, svc.route.max_plan_nodes, svc.route.max_shards
         )));
     }
     let shards = graph
         .n
-        .div_ceil(route.max_plan_nodes)
-        .clamp(2, route.max_shards);
+        .div_ceil(svc.route.max_plan_nodes)
+        .clamp(2, svc.route.max_shards);
     let sharded = ShardedPlan::build(
         graph,
         backend,
         ShardPolicy::balanced(shards),
-        &mut |local, b| cached_plan(local, b, man, engine, cache, metrics),
+        &mut |local, b| cached_plan(local, b, svc),
     )?;
     let stats = sharded.stats();
-    metrics.sharding.record_batch(stats.shards, stats.halo_rows);
+    svc.metrics.sharding.record_batch(stats.shards, stats.halo_rows);
     Ok(Arc::new(Plan::from_sharded(sharded)))
 }
 
 /// The single-plan cache path: fingerprint-keyed lookup, build (and
-/// insert) on miss.
+/// insert) on miss.  This is the leaf every prepare route funnels through
+/// (whole graphs and individual shards alike), so the prepare-seam fault
+/// hook lives here.
 fn cached_plan(
     graph: &CsrGraph,
     backend: Backend,
-    man: &Manifest,
-    engine: &Engine,
-    cache: &DriverCache,
-    metrics: &Metrics,
+    svc: &Services,
 ) -> std::result::Result<Arc<Plan>, AttnError> {
+    fault::fire(FaultSite::Prepare)?;
     let fp = graph.fingerprint();
-    if let Some(plan) = cache.get(fp, backend, graph.n, graph.nnz()) {
-        metrics.batching.cache_hit();
+    if let Some(plan) = svc.cache.get(fp, backend, graph.n, graph.nnz()) {
+        svc.metrics.batching.cache_hit();
         return Ok(plan);
     }
-    metrics.batching.cache_miss();
-    match Plan::new(man, graph, backend, engine) {
+    svc.metrics.batching.cache_miss();
+    match Plan::new(&svc.man, graph, backend, &svc.engine) {
         Ok(plan) => {
             let plan = Arc::new(plan);
             let evicted =
-                cache.insert(fp, backend, graph.n, graph.nnz(), plan.clone());
-            metrics.batching.cache_evicted(evicted);
+                svc.cache.insert(fp, backend, graph.n, graph.nnz(), plan.clone());
+            svc.metrics.batching.cache_evicted(evicted);
             Ok(plan)
         }
         Err(e) => Err(e),
@@ -798,72 +1042,311 @@ enum ExecBackend {
     Host,
 }
 
-fn executor_loop(
-    backend: ExecBackend,
-    rx: Receiver<PreparedBatch>,
-    metrics: Arc<Metrics>,
-    engine: Arc<Engine>,
-    planner: Arc<Planner>,
-) {
-    while let Ok(p) = rx.recv() {
-        let t0 = Instant::now();
-        let result: std::result::Result<Vec<f32>, AttnError> = match &p.plan {
-            Err(e) => Err(e.clone()),
-            Ok(plan) => {
-                let x = AttentionBatch::new(
-                    p.n_total, p.d, p.dv, p.heads, &p.q, &p.k, &p.v, p.scale,
+/// One guarded execution of a prepared plan: a panic anywhere under the
+/// kernels (including panics propagated out of the engine's scoped
+/// gather/scatter threads) is caught and converted to a structured
+/// [`AttnError::Execute`].
+fn exec_guarded(
+    plan: &Plan,
+    x: &AttentionBatch,
+    svc: &Services,
+    exec: &ExecBackend,
+) -> std::result::Result<Vec<f32>, AttnError> {
+    let run = || {
+        let mut ctx = match exec {
+            ExecBackend::Pjrt(rt) => ExecCtx::pjrt(rt, &svc.engine),
+            ExecBackend::Host => ExecCtx::host(&svc.engine),
+        };
+        plan.execute(&mut ctx, x)
+    };
+    match catch_unwind(AssertUnwindSafe(run)) {
+        Ok(r) => r,
+        Err(payload) => {
+            svc.metrics.faults.panic_caught();
+            Err(AttnError::Execute(format!(
+                "panic during execute: {}",
+                fault::panic_message(payload.as_ref())
+            )))
+        }
+    }
+}
+
+/// One full ladder rung for a backend: guarded prepare + guarded execute,
+/// with a single retry of the whole attempt on a retryable failure.
+fn attempt_backend(
+    graph: &CsrGraph,
+    x: &AttentionBatch,
+    backend: Backend,
+    svc: &Services,
+    exec: &ExecBackend,
+) -> std::result::Result<Vec<f32>, AttnError> {
+    let once = || -> std::result::Result<Vec<f32>, AttnError> {
+        let plan = try_prepare(graph, backend, svc)?;
+        exec_guarded(&plan, x, svc, exec)
+    };
+    match once() {
+        Err(e) if retryable(&e) => {
+            svc.metrics.faults.retry();
+            once()
+        }
+        other => other,
+    }
+}
+
+/// A failed batch member being re-served alone: its slice of the merged
+/// head-major problem, re-gathered from the batch buffers.
+struct SingletonWork {
+    entry: Entry,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    d: usize,
+    dv: usize,
+    heads: usize,
+    scale: f32,
+    /// First rung of the ladder: the backend the failed batch ran on.
+    start: Backend,
+    preprocess_s: f64,
+    batch_size: usize,
+}
+
+/// Serve one request alone through the degradation ladder, starting on
+/// the batch's original backend: an innocent member of a failed merged
+/// batch most likely succeeds immediately — on the backend, and therefore
+/// with the bits, it was originally routed to.  Members that keep failing
+/// walk backend fallbacks until the candidate set is exhausted.
+fn serve_singleton(w: SingletonWork, svc: &Services, exec: &ExecBackend) {
+    let SingletonWork {
+        entry,
+        q,
+        k,
+        v,
+        d,
+        dv,
+        heads,
+        scale,
+        start,
+        preprocess_s,
+        batch_size,
+    } = w;
+    let fp = entry.graph.fingerprint();
+    let x = AttentionBatch::new(entry.graph.n, d, dv, heads, &q, &k, &v, scale);
+    let t0 = Instant::now();
+    let mut backend = start;
+    // The merged batch quarantined its *own* fingerprint; this entry's
+    // (fp, start) pair may be untainted, so only steer away if it too is
+    // quarantined.
+    if svc.quarantine.contains(fp, backend) {
+        let exclude = svc.quarantine.quarantined_for(fp);
+        if let Some(dec) = svc.planner.resolve_excluding(&entry.graph, &exclude) {
+            svc.metrics.faults.fallback();
+            backend = dec.backend;
+        }
+    }
+    let mut tried: Vec<Backend> = Vec::new();
+    loop {
+        match attempt_backend(&entry.graph, &x, backend, svc, exec) {
+            Ok(out) => {
+                let execute_s = t0.elapsed().as_secs_f64();
+                svc.metrics.execute.record(execute_s);
+                respond(
+                    entry,
+                    Ok(out),
+                    &svc.metrics,
+                    preprocess_s,
+                    execute_s,
+                    batch_size,
+                    Some(backend),
                 );
-                let mut ctx = match &backend {
-                    ExecBackend::Pjrt(rt) => ExecCtx::pjrt(rt, &engine),
-                    ExecBackend::Host => ExecCtx::host(&engine),
-                };
-                plan.execute(&mut ctx, &x)
+                return;
+            }
+            Err(e) if retryable(&e) => {
+                svc.quarantine.insert(fp, backend);
+                svc.metrics.faults.quarantine();
+                svc.cache.evict(fp, backend);
+                tried.push(backend);
+                let mut exclude = svc.quarantine.quarantined_for(fp);
+                exclude.extend(tried.iter().copied());
+                match svc.planner.resolve_excluding(&entry.graph, &exclude) {
+                    Some(dec) => {
+                        svc.metrics.faults.fallback();
+                        backend = dec.backend;
+                    }
+                    None => {
+                        let execute_s = t0.elapsed().as_secs_f64();
+                        respond(
+                            entry,
+                            Err(e),
+                            &svc.metrics,
+                            preprocess_s,
+                            execute_s,
+                            batch_size,
+                            None,
+                        );
+                        return;
+                    }
+                }
+            }
+            Err(e) => {
+                let execute_s = t0.elapsed().as_secs_f64();
+                respond(
+                    entry,
+                    Err(e),
+                    &svc.metrics,
+                    preprocess_s,
+                    execute_s,
+                    batch_size,
+                    None,
+                );
+                return;
+            }
+        }
+    }
+}
+
+fn executor_loop(exec: ExecBackend, rx: Receiver<PreparedBatch>, svc: Arc<Services>) {
+    while let Ok(p) = rx.recv() {
+        let batch_size = p.entries.len();
+        svc.metrics.preprocess.record(p.preprocess_s);
+        // Shed members whose deadline passed while the batch sat in the
+        // worker → executor queue; execution is the last point where
+        // shedding still saves the kernel time.  Original indices are
+        // kept so survivors still scatter by `offsets`.
+        let now = Instant::now();
+        let mut live: Vec<(usize, Entry)> = Vec::with_capacity(batch_size);
+        for (i, entry) in p.entries.into_iter().enumerate() {
+            if entry.expired(now) {
+                svc.metrics.faults.deadline_shed();
+                respond(
+                    entry,
+                    Err(AttnError::DeadlineExceeded),
+                    &svc.metrics,
+                    p.preprocess_s,
+                    0.0,
+                    batch_size,
+                    None,
+                );
+            } else {
+                live.push((i, entry));
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let plan = match p.plan {
+            Ok(plan) => plan,
+            Err(e) => {
+                // Preparation already walked the ladder and still failed;
+                // the error is structural (or the candidate set ran dry).
+                svc.metrics.execute.record(0.0);
+                for (_, entry) in live {
+                    respond(
+                        entry,
+                        Err(e.clone()),
+                        &svc.metrics,
+                        p.preprocess_s,
+                        0.0,
+                        batch_size,
+                        None,
+                    );
+                }
+                continue;
             }
         };
+        let t0 = Instant::now();
+        let x = AttentionBatch::new(
+            p.n_total, p.d, p.dv, p.heads, &p.q, &p.k, &p.v, p.scale,
+        );
+        let mut result = exec_guarded(&plan, &x, &svc, &exec);
+        if let Err(e) = &result {
+            if retryable(e) {
+                svc.metrics.faults.retry();
+                result = exec_guarded(&plan, &x, &svc, &exec);
+            }
+        }
         let execute_s = t0.elapsed().as_secs_f64();
-        metrics.preprocess.record(p.preprocess_s);
-        metrics.execute.record(execute_s);
+        svc.metrics.execute.record(execute_s);
         // The online refinement loop: planner-routed batches feed their
         // measured kernel latency back into the cost-model calibration.
         if let (Some(t), Ok(_)) = (&p.tune, &result) {
-            planner.observe(t.backend, t.cells, execute_s);
-            metrics.planner.observation();
+            svc.planner.observe(t.backend, t.cells, execute_s);
+            svc.metrics.planner.observation();
         }
-        let batch_size = p.entries.len();
-        let offsets = p.offsets;
-        let (n_total, dv, heads) = (p.n_total, p.dv, p.heads);
         match result {
             Ok(out) => {
-                for (i, entry) in p.entries.into_iter().enumerate() {
+                for (i, entry) in live {
                     // Gather this component's rows out of every head block
                     // of the merged head-major output.
-                    let lo = offsets[i] as usize;
-                    let hi = offsets[i + 1] as usize;
+                    let lo = p.offsets[i] as usize;
+                    let hi = p.offsets[i + 1] as usize;
                     let ni = hi - lo;
-                    let mut comp = Vec::with_capacity(heads * ni * dv);
-                    for h in 0..heads {
-                        let base = (h * n_total + lo) * dv;
-                        comp.extend_from_slice(&out[base..base + ni * dv]);
+                    let mut comp = Vec::with_capacity(p.heads * ni * p.dv);
+                    for h in 0..p.heads {
+                        let base = (h * p.n_total + lo) * p.dv;
+                        comp.extend_from_slice(&out[base..base + ni * p.dv]);
                     }
                     respond(
                         entry,
                         Ok(comp),
-                        &metrics,
+                        &svc.metrics,
                         p.preprocess_s,
                         execute_s,
                         batch_size,
+                        Some(p.backend),
+                    );
+                }
+            }
+            Err(e) if retryable(&e) => {
+                // Second execute failure on this prepared plan: quarantine
+                // the pair, evict the possibly-poisoned cache entry, and
+                // re-serve each surviving member alone so one bad request
+                // cannot fail its batch-mates.
+                svc.quarantine.insert(p.fp, p.backend);
+                svc.metrics.faults.quarantine();
+                svc.cache.evict(p.fp, p.backend);
+                for (i, entry) in live {
+                    let lo = p.offsets[i] as usize;
+                    let hi = p.offsets[i + 1] as usize;
+                    let ni = hi - lo;
+                    let mut q = Vec::with_capacity(p.heads * ni * p.d);
+                    let mut k = Vec::with_capacity(p.heads * ni * p.d);
+                    let mut v = Vec::with_capacity(p.heads * ni * p.dv);
+                    for h in 0..p.heads {
+                        let qk = (h * p.n_total + lo) * p.d;
+                        q.extend_from_slice(&p.q[qk..qk + ni * p.d]);
+                        k.extend_from_slice(&p.k[qk..qk + ni * p.d]);
+                        let vb = (h * p.n_total + lo) * p.dv;
+                        v.extend_from_slice(&p.v[vb..vb + ni * p.dv]);
+                    }
+                    serve_singleton(
+                        SingletonWork {
+                            entry,
+                            q,
+                            k,
+                            v,
+                            d: p.d,
+                            dv: p.dv,
+                            heads: p.heads,
+                            scale: p.scale,
+                            start: p.backend,
+                            preprocess_s: p.preprocess_s,
+                            batch_size,
+                        },
+                        &svc,
+                        &exec,
                     );
                 }
             }
             Err(e) => {
-                for entry in p.entries {
+                for (_, entry) in live {
                     respond(
                         entry,
                         Err(e.clone()),
-                        &metrics,
+                        &svc.metrics,
                         p.preprocess_s,
                         execute_s,
                         batch_size,
+                        None,
                     );
                 }
             }
@@ -878,6 +1361,7 @@ fn respond(
     preprocess_s: f64,
     execute_s: f64,
     batch_size: usize,
+    backend: Option<Backend>,
 ) {
     let latency_s = entry.arrived.elapsed().as_secs_f64();
     metrics.request_done(result.is_ok());
@@ -889,5 +1373,6 @@ fn respond(
         preprocess_s,
         execute_s,
         batch_size,
+        backend,
     });
 }

@@ -13,6 +13,7 @@
 use std::sync::Mutex;
 
 use crate::kernels::gather::CallBuffers;
+use crate::util::sync::lock_unpoisoned;
 
 /// Thread-safe free list of recycled call buffers.
 #[derive(Default)]
@@ -27,18 +28,23 @@ impl BufferPool {
 
     /// Take a recycled buffer, or a fresh empty one if the pool is dry.
     /// Callers must `reset` it for their call shape before gathering.
+    ///
+    /// The free list is a plain `Vec` whose push/pop leave it valid at
+    /// every point, so a worker that panicked while holding the lock (a
+    /// caught gather/scatter panic) must not wedge the arena: the lock is
+    /// recovered, at worst losing the buffer the panicking thread held.
     pub fn acquire(&self) -> CallBuffers {
-        self.free.lock().expect("buffer pool poisoned").pop().unwrap_or_default()
+        lock_unpoisoned(&self.free).pop().unwrap_or_default()
     }
 
     /// Return a buffer to the pool for reuse.
     pub fn release(&self, bufs: CallBuffers) {
-        self.free.lock().expect("buffer pool poisoned").push(bufs);
+        lock_unpoisoned(&self.free).push(bufs);
     }
 
     /// Number of buffers currently pooled (tests/metrics).
     pub fn available(&self) -> usize {
-        self.free.lock().expect("buffer pool poisoned").len()
+        lock_unpoisoned(&self.free).len()
     }
 }
 

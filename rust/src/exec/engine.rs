@@ -29,6 +29,7 @@ use anyhow::{anyhow, Result};
 
 use crate::bsb::bucket::Call;
 use crate::bsb::Bsb;
+use crate::fault::{self, FaultSite};
 use crate::kernels::gather::{self, CallBuffers};
 use crate::kernels::{AttentionBatch, AttentionProblem};
 
@@ -125,13 +126,21 @@ impl Engine {
         }
         if self.policy.is_serial() {
             let mut bufs = self.buffers.acquire();
-            for i in 0..n {
-                gather(i, &mut bufs);
-                let outs = dispatch(i, &bufs)?;
-                scatter(i, outs);
-            }
+            let result = (|| -> Result<()> {
+                for i in 0..n {
+                    fault::fire_unit(FaultSite::Gather);
+                    gather(i, &mut bufs);
+                    fault::fire(FaultSite::Dispatch)
+                        .map_err(anyhow::Error::from)?;
+                    let outs = dispatch(i, &bufs)?;
+                    fault::fire_unit(FaultSite::Scatter);
+                    scatter(i, outs);
+                }
+                Ok(())
+            })();
+            // Recycle the staging buffer on success *and* error.
             self.buffers.release(bufs);
-            return Ok(());
+            return result;
         }
 
         let depth = self.policy.pipeline_depth.clamp(1, n);
@@ -141,6 +150,8 @@ impl Engine {
             let (full_tx, full_rx) = std::sync::mpsc::channel::<(usize, CallBuffers)>();
             let (free_tx, free_rx) = std::sync::mpsc::channel::<CallBuffers>();
             for _ in 0..depth {
+                // invariant: free_rx is alive — it is moved into the
+                // gatherer spawned below, in this same scope.
                 free_tx.send(self.buffers.acquire()).expect("receiver alive");
             }
 
@@ -148,6 +159,7 @@ impl Engine {
             let gatherer = s.spawn(move || {
                 for i in 0..n {
                     let Ok(mut bufs) = free_rx.recv() else { break };
+                    fault::fire_unit(FaultSite::Gather);
                     gather(i, &mut bufs);
                     if full_tx.send((i, bufs)).is_err() {
                         break;
@@ -161,6 +173,7 @@ impl Engine {
             let (done_tx, done_rx) = std::sync::mpsc::channel::<(usize, Vec<Vec<f32>>)>();
             let scatterer = s.spawn(move || {
                 while let Ok((i, outs)) = done_rx.recv() {
+                    fault::fire_unit(FaultSite::Scatter);
                     scatter(i, outs);
                 }
             });
@@ -171,6 +184,11 @@ impl Engine {
                     failure = Some(anyhow!("gather stage exited early"));
                     break;
                 };
+                if let Err(e) = fault::fire(FaultSite::Dispatch) {
+                    self.buffers.release(bufs);
+                    failure = Some(anyhow::Error::from(e));
+                    break;
+                }
                 match dispatch(i, &bufs) {
                     Ok(outs) => {
                         let _ = free_tx.send(bufs);

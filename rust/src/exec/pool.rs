@@ -100,7 +100,13 @@ impl WorkerPool {
                 .collect();
             handles
                 .into_iter()
-                .map(|h| h.join().expect("pool worker panicked"))
+                // Re-raise a worker panic with its original payload so an
+                // upstream `catch_unwind` (the coordinator's panic
+                // isolation) sees the real message, not a generic join
+                // error.
+                .map(|h| {
+                    h.join().unwrap_or_else(|p| std::panic::resume_unwind(p))
+                })
                 .collect()
         })
     }

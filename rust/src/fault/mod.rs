@@ -1,0 +1,462 @@
+//! Seeded, deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] describes *where* (the [`FaultSite`] seams: plan
+//! preparation, the engine's gather/dispatch/scatter stages, batcher
+//! admission), *what* (panic, structured [`AttnError`], delay) and *how
+//! often* (per-site rates) faults fire.  Installing a plan arms a
+//! process-global hook; the instrumented seams call [`fire`] /
+//! [`fire_unit`], which roll a deterministic PRNG keyed by
+//! `(seed, site, per-site visit counter)` — so a given plan injects the
+//! same fault *count* per site across runs regardless of thread
+//! interleaving, and every injected fault is appended to the plan's log
+//! for post-hoc reconciliation against `Metrics.faults`.
+//!
+//! Cost when disarmed: one relaxed atomic load per seam.  With the
+//! `fault-injection` cargo feature disabled (`--no-default-features`) the
+//! hooks compile to nothing at all — `benches/fault_overhead.rs` pins the
+//! armed-but-zero-rate and disarmed costs.
+//!
+//! The global hook is for *test processes* (the chaos suite installs it
+//! around a coordinator run); library unit tests exercise
+//! [`FaultPlan::roll`] purely, without installing.  See DESIGN.md §11 for
+//! the failure model this layer exercises.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::kernels::AttnError;
+use crate::util::sync::lock_unpoisoned;
+
+/// The instrumented seams a fault can fire at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Plan construction (`cached_plan`, and through it every per-shard
+    /// plan built by `ShardedPlan::build`).
+    Prepare,
+    /// The engine pipeline's gather stage (runs on a scoped worker).
+    Gather,
+    /// The engine pipeline's dispatch stage (runs on the calling thread).
+    Dispatch,
+    /// The engine pipeline's scatter stage (runs on a scoped worker).
+    Scatter,
+    /// Batcher admission (the coordinator's single coalescing thread).
+    Batch,
+}
+
+pub const FAULT_SITES: [FaultSite; 5] = [
+    FaultSite::Prepare,
+    FaultSite::Gather,
+    FaultSite::Dispatch,
+    FaultSite::Scatter,
+    FaultSite::Batch,
+];
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Prepare => 0,
+            FaultSite::Gather => 1,
+            FaultSite::Dispatch => 2,
+            FaultSite::Scatter => 3,
+            FaultSite::Batch => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Prepare => "prepare",
+            FaultSite::Gather => "gather",
+            FaultSite::Dispatch => "dispatch",
+            FaultSite::Scatter => "scatter",
+            FaultSite::Batch => "batch",
+        }
+    }
+}
+
+/// What an injected fault does at its seam.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// `panic!` — exercises `catch_unwind` isolation and lock-poison
+    /// recovery.
+    Panic,
+    /// Return a structured [`AttnError`] — exercises the retry/fallback
+    /// ladder.  Only injectable at seams whose signature carries a
+    /// `Result` ([`fire`]); unit seams ([`fire_unit`]) never roll it.
+    Error,
+    /// Sleep for the plan's delay — exercises deadline shedding and the
+    /// pipeline's drain paths without failing anything.
+    Delay,
+}
+
+/// One (site, kind, rate) injection rule.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    pub site: FaultSite,
+    pub kind: FaultKind,
+    /// Probability in `[0, 1]` that a visit to `site` fires this kind.
+    /// Rules for the same site stack; their rates must sum to ≤ 1.
+    pub rate: f64,
+}
+
+/// One fault that actually fired (the reconciliation log entry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub site: FaultSite,
+    pub kind: FaultKind,
+    /// The site's visit counter at injection time.
+    pub seq: u64,
+}
+
+/// A deterministic injection schedule: build with [`FaultPlan::new`] +
+/// [`FaultPlan::with`] (or [`FaultPlan::uniform`]), arm with [`install`].
+pub struct FaultPlan {
+    seed: u64,
+    specs: Vec<FaultSpec>,
+    delay: Duration,
+    /// Remaining injection budget; `i64::MAX` = unbounded.  A bounded
+    /// budget makes single-shot failure scenarios exactly reproducible
+    /// ("fail the first two prepares, then heal").
+    budget: AtomicI64,
+    /// Per-site visit counters — the deterministic roll input.
+    seq: [AtomicU64; 5],
+    log: Mutex<Vec<InjectedFault>>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no rules — nothing ever fires).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            specs: Vec::new(),
+            delay: Duration::from_millis(1),
+            budget: AtomicI64::new(i64::MAX),
+            seq: Default::default(),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Add one injection rule.
+    pub fn with(mut self, site: FaultSite, kind: FaultKind, rate: f64) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&rate), "rate must be in [0, 1]");
+        self.specs.push(FaultSpec { site, kind, rate });
+        self
+    }
+
+    /// How long a [`FaultKind::Delay`] injection sleeps (default 1 ms).
+    pub fn with_delay(mut self, delay: Duration) -> FaultPlan {
+        self.delay = delay;
+        self
+    }
+
+    /// Cap the total number of injections across all sites (the
+    /// "fail exactly N times, then heal" schedule).
+    pub fn with_budget(mut self, budget: u64) -> FaultPlan {
+        self.budget = AtomicI64::new(budget.min(i64::MAX as u64) as i64);
+        self
+    }
+
+    /// The chaos-grid plan: every site faults with total probability
+    /// `rate` per visit, split evenly over the kinds that site supports
+    /// (unit seams — gather/scatter — cannot inject `Error`).
+    pub fn uniform(seed: u64, rate: f64) -> FaultPlan {
+        let mut plan = FaultPlan::new(seed);
+        for site in FAULT_SITES {
+            let kinds: &[FaultKind] = match site {
+                FaultSite::Gather | FaultSite::Scatter => {
+                    &[FaultKind::Panic, FaultKind::Delay]
+                }
+                _ => &[FaultKind::Panic, FaultKind::Error, FaultKind::Delay],
+            };
+            for &kind in kinds {
+                plan = plan.with(site, kind, rate / kinds.len() as f64);
+            }
+        }
+        plan
+    }
+
+    /// Deterministically decide whether this visit to `site` faults.
+    /// Advances the site's visit counter; `allow_error` excludes
+    /// [`FaultKind::Error`] rules (unit seams).  A hit is logged and
+    /// consumes budget.
+    pub fn roll(&self, site: FaultSite, allow_error: bool) -> Option<FaultKind> {
+        let idx = site.index();
+        let seq = self.seq[idx].fetch_add(1, Ordering::Relaxed);
+        let x = splitmix64(self.seed ^ ((idx as u64 + 1) << 56) ^ seq);
+        let u = (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let mut cum = 0.0;
+        for s in &self.specs {
+            if s.site != site
+                || (s.kind == FaultKind::Error && !allow_error)
+            {
+                continue;
+            }
+            cum += s.rate;
+            if u < cum {
+                if !self.consume_budget() {
+                    return None;
+                }
+                lock_unpoisoned(&self.log).push(InjectedFault {
+                    site,
+                    kind: s.kind,
+                    seq,
+                });
+                return Some(s.kind);
+            }
+        }
+        None
+    }
+
+    fn consume_budget(&self) -> bool {
+        let prev = self.budget.fetch_sub(1, Ordering::Relaxed);
+        if prev <= 0 {
+            self.budget.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// The delay a [`FaultKind::Delay`] injection sleeps.
+    pub fn delay(&self) -> Duration {
+        self.delay
+    }
+
+    /// Every fault injected so far (reconciliation input).
+    pub fn log(&self) -> Vec<InjectedFault> {
+        lock_unpoisoned(&self.log).clone()
+    }
+
+    /// Injected faults of `kind` (any site).
+    pub fn injected_of_kind(&self, kind: FaultKind) -> usize {
+        lock_unpoisoned(&self.log).iter().filter(|f| f.kind == kind).count()
+    }
+
+    /// Injected faults at `site` (any kind).
+    pub fn injected_at(&self, site: FaultSite) -> usize {
+        lock_unpoisoned(&self.log).iter().filter(|f| f.site == site).count()
+    }
+}
+
+/// Convert a `catch_unwind` payload into a readable message (panics carry
+/// `&str` or `String`; anything else gets a placeholder).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+/// RAII handle for an installed [`FaultPlan`]: dropping it disarms the
+/// global hook (if this plan is still the installed one) while keeping the
+/// plan — and its injection log — readable through [`FaultGuard::plan`].
+pub struct FaultGuard {
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultGuard {
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+}
+
+impl std::ops::Deref for FaultGuard {
+    type Target = FaultPlan;
+    fn deref(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        let mut slot = lock_unpoisoned(&PLAN);
+        if slot.as_ref().is_some_and(|p| Arc::ptr_eq(p, &self.plan)) {
+            ACTIVE.store(false, Ordering::SeqCst);
+            *slot = None;
+        }
+    }
+}
+
+/// Arm `plan` process-wide.  Replaces any previously installed plan (whose
+/// guard then becomes inert).  Intended for dedicated test processes (the
+/// chaos suite); never called on production paths.
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    let plan = Arc::new(plan);
+    let mut slot = lock_unpoisoned(&PLAN);
+    *slot = Some(plan.clone());
+    ACTIVE.store(true, Ordering::SeqCst);
+    drop(slot);
+    FaultGuard { plan }
+}
+
+#[cfg(feature = "fault-injection")]
+fn active_plan() -> Option<Arc<FaultPlan>> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    lock_unpoisoned(&PLAN).clone()
+}
+
+/// Injection hook for seams returning `Result<_, AttnError>`: may panic,
+/// sleep, or return a site-appropriate structured error.  A no-op (one
+/// relaxed atomic load) when no plan is armed; compiled out entirely
+/// without the `fault-injection` feature.
+#[inline]
+pub fn fire(site: FaultSite) -> Result<(), AttnError> {
+    #[cfg(feature = "fault-injection")]
+    {
+        if let Some(plan) = active_plan() {
+            match plan.roll(site, true) {
+                Some(FaultKind::Panic) => {
+                    panic!("fault-injection: seeded panic at {}", site.name())
+                }
+                Some(FaultKind::Delay) => std::thread::sleep(plan.delay()),
+                Some(FaultKind::Error) => {
+                    let msg = format!(
+                        "fault-injection: seeded {} failure",
+                        site.name()
+                    );
+                    return Err(match site {
+                        FaultSite::Prepare => AttnError::Prepare(msg),
+                        _ => AttnError::Execute(msg),
+                    });
+                }
+                None => {}
+            }
+        }
+    }
+    let _ = site;
+    Ok(())
+}
+
+/// Injection hook for unit-returning seams (the engine's gather/scatter
+/// closures): may panic or sleep, never errors.
+#[inline]
+pub fn fire_unit(site: FaultSite) {
+    #[cfg(feature = "fault-injection")]
+    {
+        if let Some(plan) = active_plan() {
+            match plan.roll(site, false) {
+                Some(FaultKind::Panic) => {
+                    panic!("fault-injection: seeded panic at {}", site.name())
+                }
+                Some(FaultKind::Delay) => std::thread::sleep(plan.delay()),
+                _ => {}
+            }
+        }
+    }
+    let _ = site;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests exercise `FaultPlan` values directly — nothing installs
+    // the global hook, so they are safe under the parallel test harness.
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let plan = FaultPlan::new(1);
+        for _ in 0..1000 {
+            assert_eq!(plan.roll(FaultSite::Dispatch, true), None);
+        }
+        assert!(plan.log().is_empty());
+    }
+
+    #[test]
+    fn rolls_are_deterministic_per_seed() {
+        let outcomes = |seed: u64| -> Vec<Option<FaultKind>> {
+            let plan = FaultPlan::uniform(seed, 0.25);
+            (0..200).map(|_| plan.roll(FaultSite::Prepare, true)).collect()
+        };
+        assert_eq!(outcomes(42), outcomes(42));
+        assert_ne!(outcomes(42), outcomes(43), "seeds must differ");
+    }
+
+    #[test]
+    fn rate_is_roughly_honoured_and_logged() {
+        let plan = FaultPlan::uniform(7, 0.25);
+        let n = 4000;
+        let mut hits = 0;
+        for _ in 0..n {
+            if plan.roll(FaultSite::Dispatch, true).is_some() {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((0.18..0.32).contains(&rate), "rate {rate}");
+        assert_eq!(plan.log().len(), hits);
+        assert_eq!(plan.injected_at(FaultSite::Dispatch), hits);
+    }
+
+    #[test]
+    fn unit_seams_never_roll_error() {
+        let plan = FaultPlan::new(3).with(
+            FaultSite::Gather,
+            FaultKind::Error,
+            1.0,
+        );
+        for _ in 0..100 {
+            assert_eq!(plan.roll(FaultSite::Gather, false), None);
+        }
+        // The same rule *is* reachable when errors are allowed.
+        let plan = FaultPlan::new(3).with(
+            FaultSite::Gather,
+            FaultKind::Error,
+            1.0,
+        );
+        assert_eq!(plan.roll(FaultSite::Gather, true), Some(FaultKind::Error));
+    }
+
+    #[test]
+    fn budget_caps_total_injections() {
+        let plan = FaultPlan::new(9)
+            .with(FaultSite::Prepare, FaultKind::Error, 1.0)
+            .with_budget(2);
+        let hits: usize = (0..50)
+            .filter(|_| plan.roll(FaultSite::Prepare, true).is_some())
+            .count();
+        assert_eq!(hits, 2);
+        assert_eq!(plan.log().len(), 2);
+    }
+
+    #[test]
+    fn guard_install_and_disarm() {
+        // Serialized with nothing: this is the only lib test touching the
+        // global hook, and it never leaves it armed.
+        let guard = install(
+            FaultPlan::new(5).with(FaultSite::Batch, FaultKind::Error, 1.0),
+        );
+        let plan = guard.plan().clone();
+        assert!(fire(FaultSite::Batch).is_err());
+        drop(guard);
+        assert!(fire(FaultSite::Batch).is_ok(), "disarmed after drop");
+        assert_eq!(plan.injected_of_kind(FaultKind::Error), 1);
+    }
+
+    #[test]
+    fn panic_message_extracts_strs_and_strings() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("static msg");
+        assert_eq!(panic_message(p.as_ref()), "static msg");
+        let p: Box<dyn std::any::Any + Send> = Box::new(String::from("owned"));
+        assert_eq!(panic_message(p.as_ref()), "owned");
+        let p: Box<dyn std::any::Any + Send> = Box::new(17u32);
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
+    }
+}
+
+/// SplitMix64 — the same mixer `util::prng` seeds with; replicated here so
+/// the roll path has no state beyond the per-site counters.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}

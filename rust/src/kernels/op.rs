@@ -41,6 +41,10 @@ pub enum AttnError {
     Unsupported(String),
     /// The serving queue shut down before the request could complete.
     QueueClosed,
+    /// The request's deadline elapsed before execution started, so the
+    /// coordinator shed it instead of spending kernel time on an answer
+    /// the caller has already given up on (DESIGN.md §11).
+    DeadlineExceeded,
 }
 
 impl std::fmt::Display for AttnError {
@@ -51,6 +55,9 @@ impl std::fmt::Display for AttnError {
             | AttnError::Execute(m)
             | AttnError::Unsupported(m) => f.write_str(m),
             AttnError::QueueClosed => f.write_str("coordinator is shut down"),
+            AttnError::DeadlineExceeded => {
+                f.write_str("deadline exceeded before execution")
+            }
         }
     }
 }

@@ -39,6 +39,11 @@
 //!   column compaction, 128-bit TCB bitmaps, row-window reordering,
 //!   TCB-count bucketing, and the Table-3 footprint models.
 //! * [`runtime`] — PJRT client + executable cache over the AOT manifest.
+//! * [`fault`] — seeded deterministic fault injection (panic / error /
+//!   delay at the prepare/gather/dispatch/scatter/admission seams) behind
+//!   the default-on `fault-injection` feature; the chaos suite
+//!   (`rust/tests/chaos.rs`) arms it around full coordinator runs
+//!   (DESIGN.md §11, EXPERIMENTS.md §Faults).
 //! * [`exec`] — the parallel pipelined host execution engine: scoped-thread
 //!   worker pool, call-buffer arena, the double-buffered
 //!   gather→dispatch→scatter pipeline (now over calls × heads), and the
@@ -70,6 +75,7 @@ pub mod bsb;
 pub mod coordinator;
 pub mod exec;
 pub mod experiments;
+pub mod fault;
 pub mod graph;
 pub mod kernels;
 pub mod model;

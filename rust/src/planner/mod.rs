@@ -44,6 +44,7 @@ use anyhow::Result;
 
 use crate::graph::CsrGraph;
 use crate::kernels::Backend;
+use crate::util::sync::lock_unpoisoned;
 
 pub use cost::{
     cells, effective_cells, family, sharded_cells, Calibration, CostModel,
@@ -134,6 +135,30 @@ impl Planner {
         self.decide(&GraphProfile::from_csr(g))
     }
 
+    /// [`Planner::resolve`] over the candidates *not* in `exclude` — the
+    /// degradation ladder's re-resolution step: after a backend is
+    /// quarantined for a graph, the coordinator re-plans over what
+    /// remains (DESIGN.md §11).  `None` when exclusion empties the
+    /// candidate set (the ladder then surfaces its last structured
+    /// error, or falls back to the originally requested backend for
+    /// fresh requests).
+    pub fn resolve_excluding(
+        &self,
+        g: &CsrGraph,
+        exclude: &[Backend],
+    ) -> Option<Decision> {
+        let remaining: Vec<Backend> = self
+            .candidates
+            .iter()
+            .copied()
+            .filter(|b| !exclude.contains(b))
+            .collect();
+        if remaining.is_empty() {
+            return None;
+        }
+        Some(Planner::with_candidates(self.snapshot(), remaining).resolve(g))
+    }
+
     /// Decide the backend for an already-extracted profile.
     ///
     /// If every candidate is structurally infeasible (possible only with a
@@ -142,7 +167,7 @@ impl Planner {
     /// is returned as a last resort and preparation surfaces the
     /// structural error.
     pub fn decide(&self, p: &GraphProfile) -> Decision {
-        let model = self.model.lock().unwrap();
+        let model = lock_unpoisoned(&self.model);
         let scores: Vec<Score> = self
             .candidates
             .iter()
@@ -209,7 +234,7 @@ impl Planner {
         // counts a `partition()` call would recompute).
         let part = balanced_by_work(&rw_tcb_counts(g), forced);
         let halo = crate::bsb::stats::halo_fraction(g, &part.row_ranges(g.n));
-        let model = self.model.lock().unwrap();
+        let model = lock_unpoisoned(&self.model);
         let mut best: Option<ShardDecision> = None;
         for &b in &self.candidates {
             let Some(sec) = model.predict_sharded_s(b, &p, part.shards(), halo)
@@ -241,17 +266,17 @@ impl Planner {
     /// Fold one measured latency for an executed plan back into the model
     /// (the online refinement loop; see [`CostModel::observe`]).
     pub fn observe(&self, backend: Backend, cells: f64, measured_s: f64) {
-        self.model.lock().unwrap().observe(backend, cells, measured_s);
+        lock_unpoisoned(&self.model).observe(backend, cells, measured_s);
     }
 
     /// A snapshot of the current calibration table.
     pub fn snapshot(&self) -> CostModel {
-        self.model.lock().unwrap().clone()
+        lock_unpoisoned(&self.model).clone()
     }
 
     /// Persist the current calibration table (see [`CostModel::save`]).
     pub fn save(&self, path: &Path) -> Result<()> {
-        self.model.lock().unwrap().save(path)
+        lock_unpoisoned(&self.model).save(path)
     }
 }
 

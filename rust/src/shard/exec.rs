@@ -124,10 +124,31 @@ impl ShardedPlan {
             )));
         }
         let part = partition::partition(g, policy.shards, policy.strategy);
-        let mut shards = Vec::with_capacity(part.shards());
-        for range in &part.ranges {
+        let total = part.shards();
+        let mut shards = Vec::with_capacity(total);
+        for (i, range) in part.ranges.iter().enumerate() {
             let (local, h) = halo::build_shard(g, range.clone());
-            let plan = plan_source(&local, backend)?;
+            // A failing (or panicking) shard build must surface as a
+            // structured error naming the shard, so the coordinator's
+            // ladder can fail or re-route *this* request alone instead of
+            // the failure tearing through a preprocessing worker.
+            let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || plan_source(&local, backend),
+            ));
+            let plan = match built {
+                Ok(Ok(p)) => p,
+                Ok(Err(e)) => {
+                    return Err(AttnError::Prepare(format!(
+                        "shard {i}/{total}: {e}"
+                    )))
+                }
+                Err(payload) => {
+                    return Err(AttnError::Prepare(format!(
+                        "shard {i}/{total}: panic during shard prepare: {}",
+                        crate::fault::panic_message(payload.as_ref())
+                    )))
+                }
+            };
             shards.push(ShardExec { plan, halo: h });
         }
         Ok(ShardedPlan { n: g.n, backend, shards })

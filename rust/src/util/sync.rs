@@ -1,0 +1,40 @@
+//! Poison-tolerant synchronisation helpers.
+//!
+//! Every shared structure in the serving path (buffer arena, plan cache,
+//! metrics, cost model) holds plain data whose invariants are restored by
+//! the next writer, so a mutex poisoned by a panicking worker must not
+//! cascade: [`lock_unpoisoned`] recovers the guard and lets serving
+//! continue.  Structures whose partial updates *would* be unsound must not
+//! use this helper — none exist in this crate today (see DESIGN.md §11).
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.  The
+/// protected value is whatever the panicking thread left behind; callers
+/// must only protect state that every operation leaves structurally valid
+/// (counters, free lists, maps with atomic insert/remove).
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn recovers_after_a_panicking_holder() {
+        let m = Mutex::new(7u32);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+}

@@ -213,6 +213,7 @@ fn coordinator_multihead_host_emulation_bit_matches() {
                 v: v.clone(),
                 scale,
                 backend: Backend::Fused3S,
+                deadline: None,
                 reply: tx.clone(),
             })
             .expect("submit");

@@ -37,6 +37,33 @@ if [ "$docs_missing" -ne 0 ]; then
 fi
 echo "docs-link check OK"
 
+# ISSUE-6 hygiene gate: the coordinator and executor hot paths must not
+# grow new bare `unwrap()`/`expect()` calls — lock poisoning and fallible
+# seams go through util::sync::lock_unpoisoned or structured AttnError.
+# A site that is genuinely unreachable stays allowed when the line (or
+# the comment block directly above it) says why with the word "invariant".
+# Test modules (everything after `#[cfg(test)]`) are exempt.
+echo "== unwrap/expect lint (src/coordinator, src/exec)"
+awk '
+    FNR == 1 { intest = 0; inv = 0 }
+    /#\[cfg\(test\)\]/ { intest = 1 }
+    {
+        if ($0 ~ /^[[:space:]]*\/\//) {
+            if ($0 ~ /invariant/) inv = 1
+            next
+        }
+        if (!intest && $0 ~ /\.(unwrap|expect)\(/ \
+            && $0 !~ /unwrap_or/ && $0 !~ /invariant/ && !inv) {
+            printf "%s:%d: bare unwrap/expect outside tests: %s\n", \
+                FILENAME, FNR, $0
+            bad = 1
+        }
+        inv = 0
+    }
+    END { exit bad }
+' src/coordinator/*.rs src/exec/*.rs
+echo "unwrap/expect lint OK"
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check"
     cargo fmt --check || echo "WARN: rustfmt drift (non-fatal)"
@@ -85,6 +112,14 @@ echo "== coordinator suite (--test-threads=1)"
 cargo test -q --test coordinator_stress --test coordinator_integration \
     -- --test-threads=1
 
+# The ISSUE-6 chaos suite: seeded deterministic fault injection (seeds
+# {1,2,3} × rates {0%,5%,25%} pinned in the test) against the fault-free
+# differential baseline — exactly one response per request, bit-match on
+# the requested backend, structured errors, clean shutdown, reconciled
+# fault counters.  Serialized: the fault hook is process-global.
+echo "== chaos suite (--test-threads=1)"
+cargo test -q --test chaos -- --test-threads=1
+
 # The redesigned public API must stay documented: rustdoc warnings
 # (broken intra-doc links, missing code-block languages, ...) are errors.
 echo "== cargo doc --no-deps (warnings denied)"
@@ -96,5 +131,6 @@ echo " 'cargo bench --bench coordinator_batching' for the dynamic-batching"
 echo " delay × nodes sweep, 'cargo bench --bench multihead' for the"
 echo " head-batching sweep, 'cargo bench --bench planner' for the"
 echo " auto-vs-fixed backend sweep, 'cargo bench --bench shard' for the"
-echo " sharded-vs-unsharded sweep; see EXPERIMENTS.md"
-echo " §Perf/§Batching/§Multi-head/§Planner/§Sharding)"
+echo " sharded-vs-unsharded sweep, 'cargo bench --bench fault_overhead'"
+echo " for the disabled-injection hot-path cost; see EXPERIMENTS.md"
+echo " §Perf/§Batching/§Multi-head/§Planner/§Sharding/§Faults)"

@@ -1,0 +1,185 @@
+//! `cargo bench packing` — the padded-slot packing sweep (EXPERIMENTS.md
+//! §Packing): hybrid geometry routing vs the 16-row all-wide reference
+//! across four generator families, measured in **dispatched cells**, not
+//! wall-clock.
+//!
+//! Everything here is integer plan arithmetic over deterministic graphs,
+//! so the numbers are exactly reproducible and machine-independent —
+//! `scripts/packing_model.py` replicates them in plain Python and must
+//! agree.  Ratios are hybrid / wide-reference, i.e. normalized against the
+//! serial reference plan shape rather than a timed run (ROADMAP item 4:
+//! baselines must survive container changes).
+//!
+//! Prints one JSON row per graph and rewrites `BENCH_packing.json` at the
+//! repo root.  Gates (asserted):
+//!
+//! * on the hub-skewed generators (star, power_law) the hybrid plan cuts
+//!   padded cells by ≥ 30% vs the wide reference (the ISSUE 7 acceptance
+//!   bar);
+//! * on every graph the hybrid plan never dispatches more cells than the
+//!   wide reference (the router only switches a window when strictly
+//!   cheaper).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use fused3s::bsb::geometry::{self, RouteParams};
+use fused3s::bsb::reorder::Order;
+use fused3s::bsb::{self, Bsb};
+use fused3s::graph::{generators, CsrGraph};
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+const BATCH: usize = 8;
+const CHUNK_T: usize = 128;
+
+/// The bench graphs — kept in lockstep with
+/// `scripts/packing_model.py::bench_graphs()`.
+fn bench_graphs() -> Vec<(&'static str, CsrGraph)> {
+    vec![
+        ("star_5000", generators::star(5000)),
+        ("power_law_4096", generators::power_law(4096, 4.0, 2.5, 11)),
+        ("er_2048", generators::erdos_renyi(2048, 6.0, 7).with_self_loops()),
+        ("sbm_20x30", generators::sbm(20, 30, 0.4, 0.02, 4).with_self_loops()),
+    ]
+}
+
+struct Row {
+    name: &'static str,
+    wide_dispatched: usize,
+    wide_padded: usize,
+    hybrid_dispatched: usize,
+    hybrid_padded: usize,
+    narrow_rws: usize,
+    dense_rws: usize,
+}
+
+impl Row {
+    fn padded_ratio(&self) -> f64 {
+        if self.wide_padded == 0 {
+            0.0
+        } else {
+            self.hybrid_padded as f64 / self.wide_padded as f64
+        }
+    }
+
+    fn dispatched_ratio(&self) -> f64 {
+        if self.wide_dispatched == 0 {
+            0.0
+        } else {
+            self.hybrid_dispatched as f64 / self.wide_dispatched as f64
+        }
+    }
+}
+
+fn measure(name: &'static str, bsb: &Bsb) -> Row {
+    // The 16-row reference: every window forced wide — the exact
+    // pre-geometry plan shape, through the same planner code.
+    let all_wide = RouteParams { narrow: false, dense: false, ..Default::default() };
+    let wide = geometry::plan_hybrid_with(
+        bsb,
+        BUCKETS,
+        BATCH,
+        Order::ByTcbDesc,
+        CHUNK_T,
+        &all_wide,
+    );
+    let hybrid = geometry::plan_hybrid(bsb, BUCKETS, BATCH, Order::ByTcbDesc, CHUNK_T);
+    Row {
+        name,
+        wide_dispatched: wide.stats.dispatched_cells(),
+        wide_padded: wide.stats.padded_cells(),
+        hybrid_dispatched: hybrid.stats.dispatched_cells(),
+        hybrid_padded: hybrid.stats.padded_cells(),
+        narrow_rws: hybrid.stats.narrow_windows,
+        dense_rws: hybrid.stats.dense_windows,
+    }
+}
+
+fn main() {
+    println!("packing: hybrid geometry vs 16-row wide reference (structure-only)");
+    let mut rows = Vec::new();
+    for (name, g) in bench_graphs() {
+        let bsb = bsb::build(&g);
+        let row = measure(name, &bsb);
+        println!(
+            "{{\"bench\":\"packing\",\"graph\":\"{name}\",\
+             \"wide_padded_cells\":{},\"hybrid_padded_cells\":{},\
+             \"padded_cell_ratio\":{:.6},\
+             \"wide_dispatched_cells\":{},\"hybrid_dispatched_cells\":{},\
+             \"dispatched_cell_ratio\":{:.6},\
+             \"narrow_rws\":{},\"dense_rws\":{}}}",
+            row.wide_padded,
+            row.hybrid_padded,
+            row.padded_ratio(),
+            row.wide_dispatched,
+            row.hybrid_dispatched,
+            row.dispatched_ratio(),
+            row.narrow_rws,
+            row.dense_rws,
+        );
+        assert!(
+            row.hybrid_dispatched <= row.wide_dispatched,
+            "{name}: hybrid dispatches MORE cells than the wide reference \
+             ({} > {})",
+            row.hybrid_dispatched,
+            row.wide_dispatched
+        );
+        rows.push(row);
+    }
+
+    // Acceptance gate (ISSUE 7): ≥ 30% padded-cell reduction on the
+    // hub-skewed generators.
+    for name in ["star_5000", "power_law_4096"] {
+        let row = rows.iter().find(|r| r.name == name).unwrap();
+        let ratio = row.padded_ratio();
+        assert!(
+            ratio <= 0.70,
+            "{name}: padded-cell ratio {ratio:.4} misses the ≥30% reduction \
+             bar (padded {} vs wide {})",
+            row.hybrid_padded,
+            row.wide_padded
+        );
+    }
+
+    // Snapshot the baseline at the repo root (same schema as
+    // scripts/packing_model.py --write).
+    let mut graphs = String::new();
+    let mut sorted: Vec<&Row> = rows.iter().collect();
+    sorted.sort_by_key(|r| r.name);
+    for (i, row) in sorted.iter().enumerate() {
+        if i > 0 {
+            graphs.push(',');
+        }
+        write!(
+            graphs,
+            "\n  \"{}\": {{\n   \"dense_rws\": {},\n   \
+             \"dispatched_cell_ratio\": {:.6},\n   \
+             \"hybrid_dispatched_cells\": {},\n   \
+             \"hybrid_padded_cells\": {},\n   \"narrow_rws\": {},\n   \
+             \"padded_cell_ratio\": {:.6},\n   \
+             \"wide_dispatched_cells\": {},\n   \"wide_padded_cells\": {}\n  }}",
+            row.name,
+            row.dense_rws,
+            row.dispatched_ratio(),
+            row.hybrid_dispatched,
+            row.hybrid_padded,
+            row.narrow_rws,
+            row.padded_ratio(),
+            row.wide_dispatched,
+            row.wide_padded,
+        )
+        .unwrap();
+    }
+    let payload = format!(
+        "{{\n \"bench\": \"packing\",\n \"config\": {{\n  \"batch\": {BATCH},\n  \
+         \"buckets\": {BUCKETS:?},\n  \"chunk_t\": {CHUNK_T}\n }},\n \
+         \"graphs\": {{{graphs}\n }},\n \"unit\": \"dispatched cells (ratios \
+         are hybrid / wide-reference; structure-only, no wall clock)\"\n}}\n",
+    );
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root");
+    let path = root.join("BENCH_packing.json");
+    std::fs::write(&path, payload).expect("write BENCH_packing.json");
+    println!("wrote {}", path.display());
+}

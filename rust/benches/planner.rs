@@ -22,6 +22,15 @@
 //! the fixed series here (the planner's dense decision is pinned by
 //! `rust/tests/planner_selection.rs` instead).  Env knobs:
 //! `F3S_BENCH_FULL=1` for full sizes/iterations.
+//!
+//! Besides the per-row JSON stream, the bench snapshots
+//! `BENCH_planner.json` at the repo root: per generator, every backend's
+//! time **normalized by the serial-policy fused reference run** on the
+//! same workload (ROADMAP item 4 — ratios survive container changes where
+//! wall-clock baselines don't).
+
+use std::fmt::Write as _;
+use std::path::Path;
 
 use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
 use fused3s::graph::batch::{batched_dataset, BatchKind};
@@ -31,9 +40,15 @@ use fused3s::planner::{CostModel, GraphProfile, Planner, DEFAULT_BUCKETS};
 use fused3s::util::prng::Rng;
 use fused3s::util::timing::{bench, BenchConfig};
 
-/// The fixed comparison series (host-executable backends).
-const FIXED: &[Backend] =
-    &[Backend::Fused3S, Backend::UnfusedStable, Backend::CpuCsr];
+/// The fixed comparison series (host-executable backends).  Hybrid is in
+/// the offline candidate set, so it must be measured here too — otherwise
+/// an auto resolution to it could not be checked against a forced run.
+const FIXED: &[Backend] = &[
+    Backend::Fused3S,
+    Backend::Hybrid,
+    Backend::UnfusedStable,
+    Backend::CpuCsr,
+];
 
 /// The two workloads the acceptance gate calls "synthetic extremes".
 const EXTREMES: &[&str] = &["er", "star"];
@@ -67,6 +82,7 @@ fn main() {
     let planner = Planner::offline(CostModel::default());
 
     println!("planner: auto vs fixed backends, tuned-from-measurement (full={full})");
+    let mut snapshot_rows: Vec<(String, String, Vec<(String, f64)>)> = Vec::new();
     for (gen, g) in workloads(full) {
         let n = g.n;
         let profile = GraphProfile::from_csr(&g);
@@ -76,6 +92,20 @@ fn main() {
         let v = rng.normal_vec(n * d, 1.0);
         let scale = 1.0 / (d as f32).sqrt();
         let x = AttentionBatch::new(n, d, d, 1, &q, &k, &v, scale);
+
+        // The normalization anchor: the fused backend on the *serial*
+        // reference policy.  Every snapshot entry is ms / ref_ms, so the
+        // baseline survives machine and container changes.
+        let serial = Engine::serial();
+        let ref_plan = Plan::new(&man, &g, Backend::Fused3S, &serial)
+            .expect("serial fused reference");
+        let ref_ms = bench("serial_ref", &cfg, || {
+            let o = ref_plan
+                .execute(&mut ExecCtx::host(&serial), &x)
+                .expect("serial reference executes");
+            assert_eq!(o.len(), n * d);
+        })
+        .median_ms();
 
         // 1. Measure every fixed backend; feed measurements to the model.
         let mut measured: Vec<(Backend, Option<f64>, Vec<f32>)> = Vec::new();
@@ -146,6 +176,19 @@ fn main() {
         });
         let auto_ms = r.median_ms();
 
+        let mut ratios: Vec<(String, f64)> = measured
+            .iter()
+            .filter_map(|(b, ms, _)| {
+                ms.map(|m| (b.name().to_string(), m / ref_ms))
+            })
+            .collect();
+        ratios.push(("auto".to_string(), auto_ms / ref_ms));
+        snapshot_rows.push((
+            gen.to_string(),
+            decision.backend.name().to_string(),
+            ratios,
+        ));
+
         // 3. Gates + summary row.
         let feasible: Vec<(Backend, f64)> = measured
             .iter()
@@ -197,4 +240,35 @@ fn main() {
             );
         }
     }
+
+    // Snapshot the normalized baseline at the repo root.
+    let mut body = String::new();
+    for (i, (gen, resolved, ratios)) in snapshot_rows.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        let mut entries = String::new();
+        for (j, (name, ratio)) in ratios.iter().enumerate() {
+            if j > 0 {
+                entries.push(',');
+            }
+            write!(entries, "\n   \"{name}\": {ratio:.4}").unwrap();
+        }
+        write!(
+            body,
+            "\n  \"{gen}\": {{\n   \"resolved\": \"{resolved}\",{entries}\n  }}"
+        )
+        .unwrap();
+    }
+    let payload = format!(
+        "{{\n \"bench\": \"planner\",\n \"generators\": {{{body}\n }},\n \
+         \"unit\": \"time ratio vs the serial-policy fused reference run on \
+         the same workload (machine-scaled, not wall-clock)\"\n}}\n",
+    );
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root");
+    let path = root.join("BENCH_planner.json");
+    std::fs::write(&path, payload).expect("write BENCH_planner.json");
+    println!("wrote {}", path.display());
 }

@@ -54,6 +54,30 @@ pub fn as_i32(bm: &Bitmap) -> [i32; BITMAP_WORDS] {
     [bm[0] as i32, bm[1] as i32, bm[2] as i32, bm[3] as i32]
 }
 
+/// Row mask of one TCB column (bit `r` set iff `(r, col)` is a nonzero).
+/// This is the 16×1 *column lane* view the dense dispatch path uses.
+#[inline]
+pub fn col_mask(bm: &Bitmap, col: usize) -> u16 {
+    debug_assert!(col < TCB_C);
+    let mut m = 0u16;
+    for row in 0..TCB_R {
+        if get(bm, row, col) {
+            m |= 1 << row;
+        }
+    }
+    m
+}
+
+/// Row masks of one TCB column split at the half-window boundary: `(lo, hi)`
+/// where `lo` bit `r` covers block row `r` (0..8) and `hi` bit `r` covers
+/// block row `8 + r`.  These are the two 8×1 narrow tiles the FlashSparse
+/// geometry carves out of a wide TCB column.
+#[inline]
+pub fn col_half_masks(bm: &Bitmap, col: usize) -> (u8, u8) {
+    let m = col_mask(bm, col);
+    ((m & 0xff) as u8, (m >> 8) as u8)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +127,23 @@ mod tests {
         set(&mut bm, 2, 6);
         set(&mut bm, 9, 0);
         assert_eq!(row_occupancy(&bm), (1 << 2) | (1 << 9));
+    }
+
+    #[test]
+    fn col_masks_match_get() {
+        let mut bm = EMPTY;
+        set(&mut bm, 0, 3);
+        set(&mut bm, 7, 3);
+        set(&mut bm, 8, 3);
+        set(&mut bm, 15, 3);
+        set(&mut bm, 5, 0);
+        assert_eq!(col_mask(&bm, 3), 1 | (1 << 7) | (1 << 8) | (1 << 15));
+        let (lo, hi) = col_half_masks(&bm, 3);
+        assert_eq!(lo, 1 | (1 << 7));
+        assert_eq!(hi, 1 | (1 << 7));
+        let (lo, hi) = col_half_masks(&bm, 0);
+        assert_eq!((lo, hi), (1 << 5, 0));
+        assert_eq!(col_half_masks(&bm, 6), (0, 0));
     }
 
     #[test]

@@ -34,29 +34,94 @@ pub struct ChunkedRw {
     pub n_chunks: usize,
 }
 
-/// Padding/coverage accounting for the plan.
+/// Cells (scalar score-matrix entries) per wide 16×8 TCB slot.
+pub const WIDE_TCB_CELLS: usize = crate::TCB_R * crate::TCB_C;
+/// Cells per narrow 8×1 tile (one column lane of a half-height window).
+pub const NARROW_TILE_CELLS: usize = crate::TCB_R / 2;
+/// Cells per dense 16×1 column lane (full-height window, one column).
+pub const DENSE_LANE_CELLS: usize = crate::TCB_R;
+
+/// Padding/coverage accounting for the plan, denominated in *cells* so the
+/// three dispatch geometries (wide 16×8 TCBs, narrow 8×1 tiles, dense 16×1
+/// lanes) are comparable.  Every dispatched unit is either real (covers at
+/// least one structural nonzero octet/lane), structural padding (bucket or
+/// chunk round-up inside a row window), or batch-slot padding (empty slots
+/// in a final partial batch, dispatched because executables have static
+/// shapes).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct PlanStats {
     /// TCBs actually present in dispatched row windows.
     pub real_tcbs: usize,
     /// Zero-bitmap TCB slots added by bucket + chunk padding.
     pub padded_tcbs: usize,
-    /// Empty batch slots in final partial batches.
+    /// Empty batch slots in final partial batches (wide + chunked calls).
     pub padded_slots: usize,
+    /// TCB-denominated cost of `padded_slots`: each empty slot in a flushed
+    /// partial batch still dispatches `t_bucket` (or `chunk_t`) zero TCBs.
+    pub padded_slot_tcbs: usize,
     pub n_calls: usize,
     pub n_chunked_rws: usize,
     pub n_skipped_rws: usize,
+    /// Half-height (8-row) windows routed to the narrow geometry.
+    pub narrow_windows: usize,
+    /// Narrow 8×1 tiles carrying at least one structural nonzero.
+    pub real_narrow_tiles: usize,
+    /// Zero narrow tiles from rounding a window up to its tile bucket.
+    pub padded_narrow_tiles: usize,
+    /// Zero narrow tiles from empty batch slots in partial narrow calls.
+    pub padded_narrow_slot_tiles: usize,
+    pub n_narrow_calls: usize,
+    /// Full-height windows routed to the dense (per-column-lane) path.
+    pub dense_windows: usize,
+    /// Real 16×1 column lanes dispatched for dense windows.
+    pub dense_cols: usize,
+    /// Zero lanes from rounding a dense window's width up to a multiple of 8.
+    pub padded_dense_cols: usize,
+    /// Zero lanes from empty batch slots in partial dense calls.
+    pub padded_dense_slot_cols: usize,
+    pub n_dense_calls: usize,
 }
 
 impl PlanStats {
-    /// Fraction of dispatched TCB slots that are padding (lower is better;
-    /// the bucket-granularity ablation sweeps this).
+    /// Total cells dispatched to executables, including every kind of
+    /// padding.  This is the quantity the cost model's per-cell term prices.
+    pub fn dispatched_cells(&self) -> usize {
+        (self.real_tcbs + self.padded_tcbs + self.padded_slot_tcbs) * WIDE_TCB_CELLS
+            + (self.real_narrow_tiles
+                + self.padded_narrow_tiles
+                + self.padded_narrow_slot_tiles)
+                * NARROW_TILE_CELLS
+            + (self.dense_cols + self.padded_dense_cols + self.padded_dense_slot_cols)
+                * DENSE_LANE_CELLS
+    }
+
+    /// Cells dispatched with all-zero content: structural round-up padding
+    /// *plus* batch-slot padding (empty slots in final partial batches cost
+    /// exactly as much as occupied ones on static-shape executables).
+    pub fn padded_cells(&self) -> usize {
+        (self.padded_tcbs + self.padded_slot_tcbs) * WIDE_TCB_CELLS
+            + (self.padded_narrow_tiles + self.padded_narrow_slot_tiles) * NARROW_TILE_CELLS
+            + (self.padded_dense_cols + self.padded_dense_slot_cols) * DENSE_LANE_CELLS
+    }
+
+    /// Dispatched cells excluding batch-slot padding.  Batch-free, so a
+    /// CSR-side estimate (`GraphProfile`) can pin it exactly without knowing
+    /// the dispatch batch size.
+    pub fn structural_cells(&self) -> usize {
+        (self.real_tcbs + self.padded_tcbs) * WIDE_TCB_CELLS
+            + (self.real_narrow_tiles + self.padded_narrow_tiles) * NARROW_TILE_CELLS
+            + (self.dense_cols + self.padded_dense_cols) * DENSE_LANE_CELLS
+    }
+
+    /// Fraction of dispatched cells that are padding (lower is better; the
+    /// bucket-granularity ablation sweeps this).  Includes batch-slot
+    /// padding: a flushed partial batch dispatches its empty slots too.
     pub fn padding_ratio(&self) -> f64 {
-        let total = self.real_tcbs + self.padded_tcbs;
+        let total = self.dispatched_cells();
         if total == 0 {
             0.0
         } else {
-            self.padded_tcbs as f64 / total as f64
+            self.padded_cells() as f64 / total as f64
         }
     }
 }
@@ -86,6 +151,20 @@ pub fn plan(
     order: Order,
     chunk_t: usize,
 ) -> Plan {
+    plan_filtered(bsb, buckets, batch, order, chunk_t, |_| true)
+}
+
+/// [`plan`] restricted to the row windows accepted by `keep`; rejected RWs
+/// are excluded from the plan entirely (they belong to another geometry's
+/// plan — the hybrid dispatcher is responsible for overall coverage).
+pub fn plan_filtered(
+    bsb: &Bsb,
+    buckets: &[usize],
+    batch: usize,
+    order: Order,
+    chunk_t: usize,
+    keep: impl Fn(u32) -> bool,
+) -> Plan {
     assert!(!buckets.is_empty());
     assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets ascending");
     let max_bucket = *buckets.last().unwrap();
@@ -99,6 +178,9 @@ pub fn plan(
     let mut calls: Vec<Call> = Vec::new();
 
     for &rw in &sched {
+        if !keep(rw) {
+            continue;
+        }
         let t = bsb.rw_tcbs(rw as usize);
         if t == 0 {
             skipped.push(rw);
@@ -125,8 +207,18 @@ pub fn plan(
     for (bi, rws) in open.into_iter().enumerate() {
         if !rws.is_empty() {
             stats.padded_slots += batch - rws.len();
+            stats.padded_slot_tcbs += (batch - rws.len()) * buckets[bi];
             calls.push(Call { t_bucket: buckets[bi], rws });
         }
+    }
+    // Chunked RWs dispatch their chunks through the `chunk_t` partial
+    // executable in batches of `batch`; the final partial chunk batch pads
+    // with empty slots exactly like a flushed bucket batch does.
+    let total_chunks: usize = chunked.iter().map(|c| c.n_chunks).sum();
+    let chunk_rem = total_chunks % batch;
+    if chunk_rem != 0 {
+        stats.padded_slots += batch - chunk_rem;
+        stats.padded_slot_tcbs += (batch - chunk_rem) * chunk_t;
     }
     stats.n_calls = calls.len();
     stats.n_chunked_rws = chunked.len();
@@ -254,6 +346,66 @@ mod tests {
             fine.stats.padding_ratio(),
             coarse.stats.padding_ratio()
         );
+    }
+
+    /// Satellite fix pin: a hand-built plan whose every stat is known in
+    /// closed form.  buckets=[4], batch=4, chunk_t=4, Order::Natural over a
+    /// 5-RW graph:
+    ///
+    /// * RW0: row 0 → cols 0..40 → 5 TCBs > 4 ⇒ chunked (2 chunks, 3 pad)
+    /// * RW1: row 16 → 1 col → 1 TCB (3 pad), RW2: row 32 → 2 cols → 1 TCB
+    /// * RW3: empty ⇒ skipped, RW4: row 64 → 1 col → 1 TCB
+    ///
+    /// Bucket flush [RW1,RW2,RW4] leaves 1 empty slot × 4 TCBs; the chunk
+    /// stream (2 chunks) leaves 2 empty slots × chunk_t=4 TCBs — the two
+    /// contributions the pre-fix accounting dropped.
+    #[test]
+    fn hand_built_plan_pins_slot_padding() {
+        let mut edges: Vec<(u32, u32)> = (0..40).map(|c| (0, c)).collect();
+        edges.extend([(16, 1), (32, 2), (32, 9), (64, 3)]);
+        let g = crate::graph::CsrGraph::from_edges(80, &edges).unwrap();
+        let bsb = build(&g);
+        assert_eq!(bsb.num_rw, 5);
+        assert_eq!(bsb.rw_tcbs(0), 5);
+        let p = plan(&bsb, &[4], 4, Order::Natural, 4);
+
+        assert_eq!(p.chunked, vec![ChunkedRw { rw: 0, n_chunks: 2 }]);
+        assert_eq!(p.skipped, vec![3]);
+        assert_eq!(p.calls.len(), 1);
+        assert_eq!(p.calls[0].rws, vec![1, 2, 4]);
+
+        assert_eq!(p.stats.real_tcbs, 8); // 5 + 1 + 1 + 1
+        assert_eq!(p.stats.padded_tcbs, 12); // 3 (chunk) + 3×3 (bucket)
+        // 1 empty bucket slot + 2 empty chunk-batch slots.
+        assert_eq!(p.stats.padded_slots, 3);
+        // ... costed in TCBs: 1×4 (bucket) + 2×4 (chunk_t).
+        assert_eq!(p.stats.padded_slot_tcbs, 12);
+        let cells = |t: usize| t * WIDE_TCB_CELLS;
+        assert_eq!(p.stats.dispatched_cells(), cells(8 + 12 + 12));
+        assert_eq!(p.stats.padded_cells(), cells(12 + 12));
+        assert_eq!(p.stats.structural_cells(), cells(8 + 12));
+        assert!((p.stats.padding_ratio() - 24.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn filtered_plan_keeps_only_requested_rws() {
+        let g = generators::erdos_renyi(1024, 5.0, 11);
+        let bsb = build(&g);
+        let keep = |rw: u32| rw % 2 == 0;
+        let p = plan_filtered(&bsb, BUCKETS, 8, Order::ByTcbDesc, 128, keep);
+        for c in &p.calls {
+            assert!(c.rws.iter().all(|&rw| keep(rw)));
+        }
+        assert!(p.chunked.iter().all(|c| keep(c.rw)));
+        assert!(p.skipped.iter().all(|&rw| keep(rw)));
+        let full = plan(&bsb, BUCKETS, 8, Order::ByTcbDesc, 128);
+        let covered: usize =
+            p.calls.iter().map(|c| c.rws.len()).sum::<usize>() + p.chunked.len() + p.skipped.len();
+        let full_covered: usize = full.calls.iter().map(|c| c.rws.len()).sum::<usize>()
+            + full.chunked.len()
+            + full.skipped.len();
+        assert_eq!(full_covered, bsb.num_rw);
+        assert_eq!(covered, (0..bsb.num_rw as u32).filter(|&rw| keep(rw)).count());
     }
 
     #[test]

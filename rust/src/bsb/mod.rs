@@ -15,6 +15,8 @@
 //!   balancing optimisation);
 //! * [`bucket`] — grouping RWs into TCB-count buckets matching the compiled
 //!   executable suite, with exact zero-bitmap padding;
+//! * [`geometry`] — the second TCB geometry (narrow 8×1 tiles) and the
+//!   per-RW hybrid dense/sparse router (DESIGN.md §12);
 //! * [`footprint`] — the Table-3 memory-footprint models for BSB and the
 //!   seven formats it is compared against;
 //! * [`stats`] — the Table-6/7 sparsity characterisation metrics.
@@ -33,6 +35,7 @@ pub mod bitmap;
 pub mod bucket;
 pub mod builder;
 pub mod footprint;
+pub mod geometry;
 pub mod reorder;
 pub mod serialize;
 pub mod stats;

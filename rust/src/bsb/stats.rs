@@ -189,6 +189,21 @@ mod tests {
         assert!((f - 257.0 / 512.0).abs() < 1e-12, "{f}");
     }
 
+    /// Regression: an empty graph must yield 0.0, not 0/0 = NaN — a NaN
+    /// here silently poisons every planner cost comparison it reaches
+    /// (NaN never compares less-than, so the sharded candidate would win
+    /// or lose arbitrarily).
+    #[test]
+    fn halo_fraction_empty_graph_is_zero_not_nan() {
+        let g = crate::graph::CsrGraph::from_edges(0, &[]).unwrap();
+        let f = halo_fraction(&g, &[]);
+        assert_eq!(f, 0.0);
+        assert!(!f.is_nan());
+        // Degenerate shard lists on an empty graph are equally safe.
+        let f = halo_fraction(&g, &[0..0]);
+        assert_eq!(f, 0.0);
+    }
+
     #[test]
     fn halo_fraction_grows_with_shards() {
         let g = generators::erdos_renyi(2048, 8.0, 9).with_self_loops();

@@ -28,6 +28,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::bsb::bucket::Call;
+use crate::bsb::geometry::{LaneCall, LaneSet};
 use crate::bsb::Bsb;
 use crate::fault::{self, FaultSite};
 use crate::kernels::gather::{self, CallBuffers};
@@ -312,6 +313,92 @@ impl Engine {
             },
         )
     }
+
+    /// Pipeline a hybrid plan's *lane* calls (narrow 8-row or dense 16-row
+    /// geometry; see [`crate::bsb::geometry`]) over every head of a batch —
+    /// the lane-geometry analogue of [`Engine::run_bucketed`], with the
+    /// same item order (calls major, heads inner), the same once-per-batch
+    /// staging of head-invariant structure (lane masks instead of TCB
+    /// bitmaps), and the same determinism argument: per head the schedule
+    /// equals the single-head sequence and lane windows scatter to rows
+    /// disjoint from every other call's, so any `ExecPolicy` bit-matches
+    /// the serial reference.
+    ///
+    /// `dispatch` receives `(call, head, staged buffers)`.
+    pub fn run_lane_calls<F>(
+        &self,
+        set: &LaneSet,
+        calls: &[LaneCall],
+        x: &AttentionBatch,
+        batch: usize,
+        out: &mut [f32],
+        mut dispatch: F,
+    ) -> Result<()>
+    where
+        F: FnMut(&LaneCall, usize, &CallBuffers) -> Result<Vec<f32>>,
+    {
+        let heads = x.heads;
+        let (n_rows, dv) = (x.n, x.dv);
+        let per_head = n_rows * dv;
+        debug_assert_eq!(out.len(), heads * per_head);
+        // Head-invariant lane masks, staged once per call per batch when a
+        // second head exists to amortize them over (same trade-off as the
+        // bucketed path's bitmap staging).
+        let masks: Vec<Vec<i32>> = if heads > 1 {
+            calls
+                .iter()
+                .map(|c| gather::stage_lane_masks(set, &c.windows, c.t_lanes, batch))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        self.run_pipeline(
+            calls.len() * heads,
+            |i, bufs| {
+                let (ci, h) = (i / heads, i % heads);
+                let call = &calls[ci];
+                let xh = x.head(h);
+                if heads > 1 {
+                    gather::gather_lane_call_staged(
+                        &self.pool,
+                        bufs,
+                        set,
+                        &call.windows,
+                        call.t_lanes,
+                        &masks[ci],
+                        &xh,
+                        batch,
+                    );
+                } else {
+                    gather::gather_lane_call_with(
+                        &self.pool,
+                        bufs,
+                        set,
+                        &call.windows,
+                        call.t_lanes,
+                        &xh,
+                        batch,
+                    );
+                }
+            },
+            |i, bufs| {
+                let (ci, h) = (i / heads, i % heads);
+                dispatch(&calls[ci], h, bufs).map(|o| vec![o])
+            },
+            |i, outs| {
+                let (ci, h) = (i / heads, i % heads);
+                let out_h = &mut out[h * per_head..(h + 1) * per_head];
+                gather::scatter_lane_call(
+                    out_h,
+                    &outs[0],
+                    set.rows,
+                    &calls[ci].windows,
+                    n_rows,
+                    dv,
+                );
+            },
+        )
+    }
 }
 
 /// Executes one staged kernel call — the seam between the host pipeline and
@@ -340,6 +427,25 @@ pub trait CallExecutor {
         x: &AttentionProblem,
         batch: usize,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    /// Lane-geometry call (narrow 8-row or dense 16-row windows; see
+    /// [`crate::bsb::geometry`]): `batch` windows of `rows` rows ×
+    /// `t_lanes` column lanes staged via `CallBuffers::reset_lanes`;
+    /// return the output blocks, `batch * rows * dv` row-major.
+    ///
+    /// Default: unsupported.  Only executors with lane kernels override
+    /// this (the offline host emulation today — no PJRT lane artifacts
+    /// exist yet, so the hybrid backend is host-only).
+    fn lanes(
+        &mut self,
+        _rows: usize,
+        _t_lanes: usize,
+        _bufs: &CallBuffers,
+        _x: &AttentionProblem,
+        _batch: usize,
+    ) -> Result<Vec<f32>> {
+        Err(anyhow!("lane-geometry calls unsupported by this executor"))
+    }
 }
 
 #[cfg(test)]

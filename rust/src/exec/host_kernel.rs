@@ -85,6 +85,23 @@ impl CallExecutor for HostExecutor<'_> {
         }
         Ok((o, m, l))
     }
+
+    fn lanes(
+        &mut self,
+        rows: usize,
+        t_lanes: usize,
+        bufs: &CallBuffers,
+        x: &AttentionProblem,
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let mut o = vec![0.0f32; batch * rows * x.dv];
+        let slots: Vec<(usize, &mut [f32])> =
+            o.chunks_mut(rows * x.dv).enumerate().collect();
+        self.pool.run_items(slots, |(slot, o_slot)| {
+            lane_attention(slot, rows, t_lanes, bufs, x, o_slot);
+        });
+        Ok(o)
+    }
 }
 
 impl BackwardExecutor for HostExecutor<'_> {
@@ -260,6 +277,62 @@ fn slot_attention(
         }
         if let Some((_, l_slot)) = ml.as_mut() {
             l_slot[r] = l_row;
+        }
+    }
+}
+
+/// One slot's masked attention over its gathered *lanes* (the narrow/dense
+/// geometry; see `crate::bsb::geometry`).  Per row, the op sequence is
+/// **identical** to [`slot_attention`]'s for that row — the lanes hold the
+/// row's nonzero columns in the same ascending original-column order the
+/// wide TCB walk visits, scores fold into the max in that order, and the
+/// exp/sum and weighted-V accumulation run in that same order — so a row
+/// computed on the lane path is bit-identical to the wide path (pinned by
+/// `rust/tests/packing_equivalence.rs`).
+fn lane_attention(
+    slot: usize,
+    rows: usize,
+    t_lanes: usize,
+    bufs: &CallBuffers,
+    x: &AttentionProblem,
+    o_slot: &mut [f32],
+) {
+    let (d, dv) = (x.d, x.dv);
+    let q_base = slot * rows * d;
+    let kv_base = slot * t_lanes;
+    let bm_base = slot * t_lanes;
+    let mut scores: Vec<(usize, f32)> = Vec::with_capacity(t_lanes);
+    for r in 0..rows {
+        scores.clear();
+        let q_row = &bufs.q[q_base + r * d..q_base + (r + 1) * d];
+        let mut m_row = f32::NEG_INFINITY;
+        for li in 0..t_lanes {
+            if (bufs.bm[bm_base + li] >> r) & 1 == 0 {
+                continue;
+            }
+            let k_row = &bufs.k[(kv_base + li) * d..][..d];
+            let mut s = 0.0f32;
+            for cc in 0..d {
+                s += q_row[cc] * k_row[cc];
+            }
+            m_row = m_row.max(s);
+            scores.push((li, s));
+        }
+        if scores.is_empty() {
+            continue; // fully masked row (or zero-mask padding lane): o stays zero
+        }
+        let mut l_row = 0.0f32;
+        for (_, s) in scores.iter_mut() {
+            *s = (*s - m_row).exp();
+            l_row += *s;
+        }
+        let o_row = &mut o_slot[r * dv..(r + 1) * dv];
+        for &(li, p) in &scores {
+            let w = p / l_row;
+            let v_row = &bufs.v[(kv_base + li) * dv..][..dv];
+            for cc in 0..dv {
+                o_row[cc] += w * v_row[cc];
+            }
         }
     }
 }

@@ -16,6 +16,7 @@ use crate::runtime::Manifest;
 use super::cpu_csr::CpuCsrDriver;
 use super::dense::DenseDriver;
 use super::fused::{FusedDriver, FusedOpts};
+use super::hybrid::HybridDriver;
 use super::op::{AttnError, ExecCtx, SparseAttentionOp};
 use super::unfused::UnfusedDriver;
 use super::AttentionBatch;
@@ -27,6 +28,11 @@ use super::AttentionBatch;
 pub enum Backend {
     /// Fused3S (ours): bf16, compacted, reordered.
     Fused3S,
+    /// Fused3S with per-row-window geometry routing (DESIGN.md §12): wide
+    /// 16×8 TCBs, narrow 8×1 tiles and dense 16×1 lanes mixed in one plan.
+    /// Bit-identical output to `Fused3S`; host-execution only (no PJRT
+    /// lane artifacts yet), so the PJRT planner never selects it.
+    Hybrid,
     /// F3S_splitC without reordering (ablation stage 1).
     Fused3SNoReorder,
     /// Split-row warp partition (ablation).
@@ -57,6 +63,7 @@ impl Backend {
     pub fn name(self) -> &'static str {
         match self {
             Backend::Fused3S => "fused3s",
+            Backend::Hybrid => "hybrid",
             Backend::Fused3SNoReorder => "fused3s_noreorder",
             Backend::Fused3SSplitR => "fused3s_splitr",
             Backend::DfGnnLike => "dfgnn_like",
@@ -71,6 +78,7 @@ impl Backend {
     pub fn parse(s: &str) -> Result<Backend> {
         Ok(match s {
             "fused3s" => Backend::Fused3S,
+            "hybrid" => Backend::Hybrid,
             "fused3s_noreorder" => Backend::Fused3SNoReorder,
             "fused3s_splitr" => Backend::Fused3SSplitR,
             "dfgnn_like" => Backend::DfGnnLike,
@@ -157,6 +165,7 @@ impl Backend {
 /// implements the trait by dispatching to whichever it wraps.
 pub enum Driver {
     Fused(FusedDriver),
+    Hybrid(HybridDriver),
     Unfused(UnfusedDriver),
     Dense(DenseDriver),
     CpuCsr(CpuCsrDriver),
@@ -179,6 +188,9 @@ impl Driver {
         engine: &Engine,
     ) -> Result<Driver> {
         let backend = backend.resolve_for(g, man);
+        if backend == Backend::Hybrid {
+            return Ok(Driver::Hybrid(HybridDriver::new_with(man, g, engine)?));
+        }
         if let Some(opts) = backend.fused_opts() {
             return Ok(Driver::Fused(FusedDriver::new_with(man, g, opts, engine)?));
         }
@@ -211,6 +223,7 @@ impl SparseAttentionOp for Driver {
     ) -> Result<Vec<f32>, AttnError> {
         match self {
             Driver::Fused(d) => d.execute(ctx, x),
+            Driver::Hybrid(d) => d.execute(ctx, x),
             Driver::Unfused(d) => d.execute(ctx, x),
             Driver::Dense(d) => d.execute(ctx, x),
             Driver::CpuCsr(d) => d.execute(ctx, x),
@@ -221,6 +234,7 @@ impl SparseAttentionOp for Driver {
     fn executables(&self, d: usize) -> Vec<String> {
         match self {
             Driver::Fused(dr) => dr.artifact_names(d),
+            Driver::Hybrid(dr) => dr.executables(d),
             Driver::Unfused(dr) => dr.artifact_names(d),
             Driver::Dense(dr) => dr.artifact_names(d),
             Driver::CpuCsr(_) => vec![],

@@ -147,77 +147,93 @@ impl FusedDriver {
 
         // Oversize row windows: chunked through the partial executable.
         if !self.plan.chunked.is_empty() {
-            self.run_chunked_exec(x, engine, exec, &mut out)?;
+            run_chunked(
+                &self.bsb,
+                &self.plan.chunked,
+                self.chunk_t,
+                self.batch,
+                x,
+                engine,
+                exec,
+                &mut out,
+            )?;
         }
         Ok(out)
     }
+}
 
-    fn run_chunked_exec<E: CallExecutor>(
-        &self,
-        x: &AttentionBatch,
-        engine: &Engine,
-        exec: &mut E,
-        out: &mut [f32],
-    ) -> Result<()> {
-        // Work items: (rw, chunk index), batched to the call width, then
-        // swept per head (chunk-batch major, heads inner).
-        let items: Vec<(u32, usize)> = self
-            .plan
-            .chunked
-            .iter()
-            .flat_map(|c| (0..c.n_chunks).map(move |i| (c.rw, i)))
-            .collect();
-        let batches: Vec<&[(u32, usize)]> = items.chunks(self.batch).collect();
-        let heads = x.heads;
-        // Per-(head, RW) merge state.  The pipeline commits scatter in item
-        // order, so each head's merge sequence — and hence its f32 result —
-        // is identical to a single-head run under every policy.
-        let mut merge: std::collections::HashMap<(usize, u32), MergeState> =
-            std::collections::HashMap::new();
-        engine.run_pipeline(
-            batches.len() * heads,
-            |i, bufs| {
-                let (bi, h) = (i / heads, i % heads);
-                let xh = x.head(h);
-                gather::gather_partial_call_with(
-                    &engine.pool,
-                    bufs,
-                    batches[bi],
-                    self.chunk_t,
-                    &self.bsb,
-                    &xh,
-                    self.batch,
+/// Execute oversize (chunked) row windows through the partial executable and
+/// fold the per-chunk softmax states on the host.  Shared by the fused
+/// driver and the hybrid driver's wide path — chunked RWs always run this
+/// wide-geometry code regardless of how the rest of the plan is routed, so
+/// chunk boundaries and merge order (and hence f32 results) are identical
+/// across backends.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_chunked<E: CallExecutor>(
+    bsb: &Bsb,
+    chunked: &[bucket::ChunkedRw],
+    chunk_t: usize,
+    batch: usize,
+    x: &AttentionBatch,
+    engine: &Engine,
+    exec: &mut E,
+    out: &mut [f32],
+) -> Result<()> {
+    // Work items: (rw, chunk index), batched to the call width, then
+    // swept per head (chunk-batch major, heads inner).
+    let items: Vec<(u32, usize)> = chunked
+        .iter()
+        .flat_map(|c| (0..c.n_chunks).map(move |i| (c.rw, i)))
+        .collect();
+    let batches: Vec<&[(u32, usize)]> = items.chunks(batch).collect();
+    let heads = x.heads;
+    // Per-(head, RW) merge state.  The pipeline commits scatter in item
+    // order, so each head's merge sequence — and hence its f32 result —
+    // is identical to a single-head run under every policy.
+    let mut merge: std::collections::HashMap<(usize, u32), MergeState> =
+        std::collections::HashMap::new();
+    engine.run_pipeline(
+        batches.len() * heads,
+        |i, bufs| {
+            let (bi, h) = (i / heads, i % heads);
+            let xh = x.head(h);
+            gather::gather_partial_call_with(
+                &engine.pool,
+                bufs,
+                batches[bi],
+                chunk_t,
+                bsb,
+                &xh,
+                batch,
+            );
+        },
+        |i, bufs| {
+            let h = i % heads;
+            let xh = x.head(h);
+            let (o, m, l) = exec.partial(chunk_t, bufs, &xh, batch)?;
+            Ok(vec![o, m, l])
+        },
+        |i, outs| {
+            let (bi, h) = (i / heads, i % heads);
+            let (o, m, l) = (&outs[0], &outs[1], &outs[2]);
+            for (slot, &(rw, _)) in batches[bi].iter().enumerate() {
+                let st = merge
+                    .entry((h, rw))
+                    .or_insert_with(|| MergeState::new(x.dv));
+                st.merge(
+                    &o[slot * TCB_R * x.dv..(slot + 1) * TCB_R * x.dv],
+                    &m[slot * TCB_R..(slot + 1) * TCB_R],
+                    &l[slot * TCB_R..(slot + 1) * TCB_R],
                 );
-            },
-            |i, bufs| {
-                let h = i % heads;
-                let xh = x.head(h);
-                let (o, m, l) =
-                    exec.partial(self.chunk_t, bufs, &xh, self.batch)?;
-                Ok(vec![o, m, l])
-            },
-            |i, outs| {
-                let (bi, h) = (i / heads, i % heads);
-                let (o, m, l) = (&outs[0], &outs[1], &outs[2]);
-                for (slot, &(rw, _)) in batches[bi].iter().enumerate() {
-                    let st = merge
-                        .entry((h, rw))
-                        .or_insert_with(|| MergeState::new(x.dv));
-                    st.merge(
-                        &o[slot * TCB_R * x.dv..(slot + 1) * TCB_R * x.dv],
-                        &m[slot * TCB_R..(slot + 1) * TCB_R],
-                        &l[slot * TCB_R..(slot + 1) * TCB_R],
-                    );
-                }
-            },
-        )?;
-        let per_head = x.n * x.dv;
-        for ((h, rw), st) in merge {
-            let out_h = &mut out[h * per_head..(h + 1) * per_head];
-            gather::scatter_slot(out_h, &st.o, 0, rw as usize, x.n, x.dv);
-        }
-        Ok(())
+            }
+        },
+    )?;
+    let per_head = x.n * x.dv;
+    for ((h, rw), st) in merge {
+        let out_h = &mut out[h * per_head..(h + 1) * per_head];
+        gather::scatter_slot(out_h, &st.o, 0, rw as usize, x.n, x.dv);
     }
+    Ok(())
 }
 
 impl SparseAttentionOp for FusedDriver {

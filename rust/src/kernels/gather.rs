@@ -8,6 +8,7 @@
 
 use crate::bsb::builder::{Bsb, PAD_COL};
 use crate::bsb::bitmap;
+use crate::bsb::geometry::LaneSet;
 use crate::exec::WorkerPool;
 use crate::{BITMAP_WORDS, TCB_C, TCB_R};
 
@@ -49,6 +50,39 @@ impl CallBuffers {
         resize_only(&mut self.k, batch * t * TCB_C * d);
         resize_only(&mut self.v, batch * t * TCB_C * dv);
     }
+
+    /// Resize for a *lane* call (narrow/dense geometry): `batch` windows of
+    /// `rows` rows and `t_lanes` column lanes each.  `bm` holds one i32 row
+    /// mask per lane (low `rows` bits).  Only the masks are zeroed — the
+    /// stale-f32 soundness argument of [`CallBuffers::reset`] applies
+    /// unchanged (a zero mask fully masks its lane).
+    pub fn reset_lanes(
+        &mut self,
+        batch: usize,
+        rows: usize,
+        t_lanes: usize,
+        d: usize,
+        dv: usize,
+    ) {
+        self.reset_lane_features(batch, rows, t_lanes, d, dv);
+        self.bm.clear();
+        self.bm.resize(batch * t_lanes, 0);
+    }
+
+    /// Lane-call analogue of [`CallBuffers::reset_features`]: resize q/k/v
+    /// only; the caller installs pre-staged lane masks.
+    pub fn reset_lane_features(
+        &mut self,
+        batch: usize,
+        rows: usize,
+        t_lanes: usize,
+        d: usize,
+        dv: usize,
+    ) {
+        resize_only(&mut self.q, batch * rows * d);
+        resize_only(&mut self.k, batch * t_lanes * d);
+        resize_only(&mut self.v, batch * t_lanes * dv);
+    }
 }
 
 fn resize_only<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
@@ -60,9 +94,21 @@ fn resize_only<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
 /// Fill one slot-local Q block (`16 × d`): rows `rw*16 .. rw*16+16` of `q`,
 /// scaled.  Rows beyond n stay zero.
 pub fn gather_q_into(dst: &mut [f32], rw: usize, x: &AttentionProblem) {
+    gather_rows_q_into(dst, rw * TCB_R, TCB_R, x)
+}
+
+/// Fill a slot-local Q block of `rows` rows starting at `base_row`, scaled.
+/// Rows beyond n stay zero.  The wide path uses 16-row windows
+/// ([`gather_q_into`]); the narrow lane path uses 8-row half-windows.
+pub fn gather_rows_q_into(
+    dst: &mut [f32],
+    base_row: usize,
+    rows: usize,
+    x: &AttentionProblem,
+) {
     let d = x.d;
-    for r in 0..TCB_R {
-        let row = rw * TCB_R + r;
+    for r in 0..rows {
+        let row = base_row + r;
         if row >= x.n {
             break;
         }
@@ -281,6 +327,182 @@ pub fn gather_partial_call_with(
         let t_hi = ((ci + 1) * chunk_t).min(t);
         gather_kv_into(k, v, bm, bsb, rw, t_lo, t_hi, x);
     });
+}
+
+/// Fill one lane slot: Q rows of window `wid`, plus K̂/V̂ rows and the i32
+/// row mask for each of the window's lanes.  Lanes past the window's count
+/// stay untouched (zero mask = fully masked).
+fn gather_lane_slot_into(
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+    bm: &mut [i32],
+    set: &LaneSet,
+    wid: usize,
+    x: &AttentionProblem,
+) {
+    let (d, dv) = (x.d, x.dv);
+    gather_rows_q_into(q, wid * set.rows, set.rows, x);
+    for (li, lane) in set.lanes(wid).enumerate() {
+        let col = set.cols[lane] as usize;
+        k[li * d..(li + 1) * d].copy_from_slice(&x.k[col * d..(col + 1) * d]);
+        v[li * dv..(li + 1) * dv].copy_from_slice(&x.v[col * dv..(col + 1) * dv]);
+        bm[li] = set.masks[lane] as i32;
+    }
+}
+
+/// Per-head half of [`gather_lane_slot_into`] when masks were pre-staged.
+fn gather_lane_features_into(
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+    set: &LaneSet,
+    wid: usize,
+    x: &AttentionProblem,
+) {
+    let (d, dv) = (x.d, x.dv);
+    gather_rows_q_into(q, wid * set.rows, set.rows, x);
+    for (li, lane) in set.lanes(wid).enumerate() {
+        let col = set.cols[lane] as usize;
+        k[li * d..(li + 1) * d].copy_from_slice(&x.k[col * d..(col + 1) * d]);
+        v[li * dv..(li + 1) * dv].copy_from_slice(&x.v[col * dv..(col + 1) * dv]);
+    }
+}
+
+/// Stage a lane call's row masks: a `batch * t_lanes` i32 buffer laid out
+/// like `CallBuffers::bm` under [`CallBuffers::reset_lanes`].  Masks depend
+/// only on structure, so the multi-head path stages them once per call.
+pub fn stage_lane_masks(
+    set: &LaneSet,
+    windows: &[u32],
+    t_lanes: usize,
+    batch: usize,
+) -> Vec<i32> {
+    let mut bm = vec![0i32; batch * t_lanes];
+    for (slot, &wid) in windows.iter().enumerate() {
+        for (li, lane) in set.lanes(wid as usize).enumerate() {
+            bm[slot * t_lanes + li] = set.masks[lane] as i32;
+        }
+    }
+    bm
+}
+
+/// Gather a whole lane call (narrow or dense geometry), sharding slots
+/// across the pool.  Bit-identical for any pool width (disjoint slots).
+pub fn gather_lane_call_with(
+    pool: &WorkerPool,
+    bufs: &mut CallBuffers,
+    set: &LaneSet,
+    windows: &[u32],
+    t_lanes: usize,
+    x: &AttentionProblem,
+    batch: usize,
+) {
+    bufs.reset_lanes(batch, set.rows, t_lanes, x.d, x.dv);
+    let slots = split_lane_slots(bufs, windows.len(), set.rows, t_lanes, x);
+    pool.run_items(slots, |(slot, q, k, v, bm)| {
+        gather_lane_slot_into(q, k, v, bm, set, windows[slot] as usize, x);
+    });
+}
+
+/// Gather a lane call for one head with pre-staged masks (multi-head path).
+/// Produces buffers bit-identical to [`gather_lane_call_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn gather_lane_call_staged(
+    pool: &WorkerPool,
+    bufs: &mut CallBuffers,
+    set: &LaneSet,
+    windows: &[u32],
+    t_lanes: usize,
+    staged_bm: &[i32],
+    x: &AttentionProblem,
+    batch: usize,
+) {
+    bufs.reset_lane_features(batch, set.rows, t_lanes, x.d, x.dv);
+    debug_assert_eq!(staged_bm.len(), batch * t_lanes);
+    bufs.bm.clear();
+    bufs.bm.extend_from_slice(staged_bm);
+    let slots = split_lane_feature_slots(bufs, windows.len(), set.rows, t_lanes, x);
+    pool.run_items(slots, |(slot, q, k, v)| {
+        gather_lane_features_into(q, k, v, set, windows[slot] as usize, x);
+    });
+}
+
+fn split_lane_slots<'b>(
+    bufs: &'b mut CallBuffers,
+    n_slots: usize,
+    rows: usize,
+    t_lanes: usize,
+    x: &AttentionProblem,
+) -> SlotViews<'b> {
+    let CallBuffers { q, k, v, bm } = bufs;
+    let views: SlotViews<'b> = q
+        .chunks_mut(rows * x.d)
+        .zip(k.chunks_mut(t_lanes * x.d))
+        .zip(v.chunks_mut(t_lanes * x.dv))
+        .zip(bm.chunks_mut(t_lanes))
+        .take(n_slots)
+        .enumerate()
+        .map(|(slot, (((q, k), v), bm))| (slot, q, k, v, bm))
+        .collect();
+    assert_eq!(views.len(), n_slots, "call has more slots than batch capacity");
+    views
+}
+
+fn split_lane_feature_slots<'b>(
+    bufs: &'b mut CallBuffers,
+    n_slots: usize,
+    rows: usize,
+    t_lanes: usize,
+    x: &AttentionProblem,
+) -> FeatureSlotViews<'b> {
+    let CallBuffers { q, k, v, .. } = bufs;
+    let views: FeatureSlotViews<'b> = q
+        .chunks_mut(rows * x.d)
+        .zip(k.chunks_mut(t_lanes * x.d))
+        .zip(v.chunks_mut(t_lanes * x.dv))
+        .take(n_slots)
+        .enumerate()
+        .map(|(slot, ((q, k), v))| (slot, q, k, v))
+        .collect();
+    assert_eq!(views.len(), n_slots, "call has more slots than batch capacity");
+    views
+}
+
+/// Scatter a lane call's output blocks (`rows × dv` per slot) back into the
+/// n×dv output matrix.
+pub fn scatter_lane_call(
+    out: &mut [f32],
+    o: &[f32],
+    rows: usize,
+    windows: &[u32],
+    n: usize,
+    dv: usize,
+) {
+    for (slot, &wid) in windows.iter().enumerate() {
+        scatter_rows_slot(out, o, slot, wid as usize * rows, rows, n, dv);
+    }
+}
+
+/// Scatter one slot's `rows × dv` block to rows `base_row..` of `out`.
+pub fn scatter_rows_slot(
+    out: &mut [f32],
+    o: &[f32],
+    slot: usize,
+    base_row: usize,
+    rows: usize,
+    n: usize,
+    dv: usize,
+) {
+    let base = slot * rows * dv;
+    for r in 0..rows {
+        let row = base_row + r;
+        if row >= n {
+            break;
+        }
+        out[row * dv..(row + 1) * dv]
+            .copy_from_slice(&o[base + r * dv..base + (r + 1) * dv]);
+    }
 }
 
 /// Per-slot disjoint views over the call buffers for `n_slots` occupied

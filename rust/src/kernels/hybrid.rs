@@ -1,0 +1,190 @@
+//! The hybrid dense/sparse driver — per-row-window geometry dispatch
+//! (DESIGN.md §12): wide 16×8 TCB calls for the windows that fill them,
+//! narrow 8×1 tiles for scattered windows, dense 16×1 lanes for near-dense
+//! ones, all inside one plan with one output buffer.
+//!
+//! The three paths partition the row windows
+//! ([`geometry::hybrid_covers`]), so their scatters touch disjoint output
+//! rows and no cross-path merge exists — the only merge seam is the wide
+//! path's existing oversize-chunk fold ([`fused::run_chunked`]), shared
+//! verbatim with the fused driver.  Outputs are bit-identical to the fused
+//! driver (and to the all-wide hybrid reference) because every path visits
+//! a row's nonzero columns in ascending original-column order with the same
+//! scalar op sequence; `rust/tests/packing_equivalence.rs` pins this.
+//!
+//! No PJRT lane artifacts exist yet, so the hybrid backend executes only
+//! under [`ExecCtx::Host`]; the planner's cost model knows it as a
+//! host-feasible family and the PJRT candidate set excludes it.
+
+use anyhow::Result;
+
+use crate::bsb::geometry::{self, HybridPlan};
+use crate::bsb::{self, Bsb};
+use crate::exec::{CallExecutor, Engine, HostExecutor};
+use crate::graph::CsrGraph;
+use crate::runtime::Manifest;
+
+use super::fused;
+use super::op::{AttnError, ExecCtx, SparseAttentionOp};
+use super::AttentionBatch;
+
+/// Preprocessed state for one graph: the shared BSB plus the routed
+/// mixed-geometry plan.  Unlike the fused driver, the hybrid driver
+/// accepts `d != dv` — its kernels are the general host lane/slot kernels,
+/// not the square AOT artifacts.
+pub struct HybridDriver {
+    pub bsb: Bsb,
+    pub hplan: HybridPlan,
+    batch: usize,
+    chunk_t: usize,
+}
+
+impl HybridDriver {
+    /// Preprocess `g`: BSB build sharded across the engine's pool
+    /// (bit-identical to the serial build), then the hybrid routing plan.
+    pub fn new_with(
+        man: &Manifest,
+        g: &CsrGraph,
+        engine: &Engine,
+    ) -> Result<HybridDriver> {
+        let bsb = bsb::build_with(g, &engine.pool);
+        HybridDriver::from_bsb(man, bsb)
+    }
+
+    /// Build from an already-constructed (compacted) BSB — the cache entry
+    /// point; only the routing + lane extraction is rebuilt.
+    pub fn from_bsb(man: &Manifest, bsb: Bsb) -> Result<HybridDriver> {
+        HybridDriver::from_bsb_with(man, bsb, &geometry::RouteParams::default())
+    }
+
+    /// [`HybridDriver::from_bsb`] with explicit router knobs.  The
+    /// differential suite forces every window wide
+    /// (`RouteParams { narrow: false, dense: false, .. }`) to obtain the
+    /// 16-row all-wide reference that the routed plan must bit-match.
+    pub fn from_bsb_with(
+        man: &Manifest,
+        bsb: Bsb,
+        params: &geometry::RouteParams,
+    ) -> Result<HybridDriver> {
+        let hplan = geometry::plan_hybrid_with(
+            &bsb,
+            &man.t_buckets,
+            man.rw_batch,
+            crate::bsb::reorder::Order::ByTcbDesc,
+            man.chunk_t,
+            params,
+        );
+        Ok(HybridDriver {
+            bsb,
+            hplan,
+            batch: man.rw_batch,
+            chunk_t: man.chunk_t,
+        })
+    }
+
+    /// Engine-driven execution of every head against any [`CallExecutor`]
+    /// with lane support.  Head-major output; bit-identical across engine
+    /// policies and to the fused driver on the same problem.
+    pub fn execute_with<E: CallExecutor>(
+        &self,
+        x: &AttentionBatch,
+        engine: &Engine,
+        exec: &mut E,
+    ) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; x.out_len()];
+
+        // Wide-routed windows: the unchanged bucketed path.
+        engine.run_bucketed(
+            &self.hplan.wide.calls,
+            &self.bsb,
+            x,
+            self.batch,
+            &mut out,
+            |call, h, bufs| {
+                let xh = x.head(h);
+                exec.bucket(call.t_bucket, bufs, &xh, self.batch)
+            },
+        )?;
+
+        // Oversize row windows: always wide, chunked through the shared
+        // partial path so chunk boundaries and merge order match the fused
+        // driver exactly.
+        if !self.hplan.wide.chunked.is_empty() {
+            fused::run_chunked(
+                &self.bsb,
+                &self.hplan.wide.chunked,
+                self.chunk_t,
+                self.batch,
+                x,
+                engine,
+                exec,
+                &mut out,
+            )?;
+        }
+
+        // Narrow-routed windows: 8-row × 1-col tiles.
+        engine.run_lane_calls(
+            &self.hplan.narrow,
+            &self.hplan.narrow_calls,
+            x,
+            self.batch,
+            &mut out,
+            |call, h, bufs| {
+                let xh = x.head(h);
+                exec.lanes(
+                    self.hplan.narrow.rows,
+                    call.t_lanes,
+                    bufs,
+                    &xh,
+                    self.batch,
+                )
+            },
+        )?;
+
+        // Dense-routed windows: 16-row × 1-col lanes.
+        engine.run_lane_calls(
+            &self.hplan.dense,
+            &self.hplan.dense_calls,
+            x,
+            self.batch,
+            &mut out,
+            |call, h, bufs| {
+                let xh = x.head(h);
+                exec.lanes(
+                    self.hplan.dense.rows,
+                    call.t_lanes,
+                    bufs,
+                    &xh,
+                    self.batch,
+                )
+            },
+        )?;
+
+        Ok(out)
+    }
+}
+
+impl SparseAttentionOp for HybridDriver {
+    fn execute(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        x: &AttentionBatch<'_>,
+    ) -> Result<Vec<f32>, AttnError> {
+        x.validate()?;
+        match *ctx {
+            ExecCtx::Pjrt { .. } => Err(AttnError::Unsupported(
+                "hybrid backend has no PJRT lane artifacts; it executes \
+                 under the host context only"
+                    .into(),
+            )),
+            ExecCtx::Host { engine } => {
+                let mut exec = HostExecutor::new(&engine.pool);
+                self.execute_with(x, engine, &mut exec).map_err(AttnError::from)
+            }
+        }
+    }
+
+    fn executables(&self, _d: usize) -> Vec<String> {
+        Vec::new()
+    }
+}

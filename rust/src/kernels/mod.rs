@@ -23,6 +23,9 @@
 //!   precision; oversize row windows chunked and merged on host.
 //! * [`fused::FusedDriver`] with f32/no-compaction — the **DF-GNN** analog
 //!   (fused but fp32, generic block format).
+//! * [`hybrid::HybridDriver`] — **Fused3S + per-window geometry routing**
+//!   (DESIGN.md §12): wide 16×8 TCBs, narrow 8×1 tiles and dense 16×1
+//!   lanes mixed per row window; bit-identical to Fused3S, host-only.
 //! * [`unfused::UnfusedDriver`] — the **FlashSparse** analog: separate
 //!   SDDMM / softmax / SpMM executables with intermediates materialised in
 //!   host memory; naive- and stable-softmax variants.
@@ -38,6 +41,7 @@ pub mod cpu_csr;
 pub mod dense;
 pub mod fused;
 pub mod gather;
+pub mod hybrid;
 pub mod op;
 pub mod reference;
 pub mod unfused;

@@ -169,7 +169,7 @@ impl Plan {
             let profile = crate::planner::GraphProfile::from_bsb(&bsb);
             crate::planner::Planner::with_candidates(
                 crate::planner::CostModel::default(),
-                vec![Backend::Fused3S, Backend::UnfusedStable],
+                vec![Backend::Fused3S, Backend::Hybrid, Backend::UnfusedStable],
             )
             .decide(&profile)
             .backend
@@ -177,7 +177,9 @@ impl Plan {
             backend
         };
         // One backend→options mapping, shared with `Driver::prepare_on`.
-        let driver = if let Some(opts) = backend.fused_opts() {
+        let driver = if backend == Backend::Hybrid {
+            super::hybrid::HybridDriver::from_bsb(man, bsb).map(Driver::Hybrid)
+        } else if let Some(opts) = backend.fused_opts() {
             FusedDriver::from_bsb(man, bsb, opts).map(Driver::Fused)
         } else if let Some(stable) = backend.unfused_stable() {
             UnfusedDriver::from_bsb(man, bsb, stable, Order::ByTcbDesc)

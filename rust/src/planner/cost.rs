@@ -38,10 +38,14 @@ use crate::{TCB_C, TCB_R};
 
 use super::profile::GraphProfile;
 
-/// The backends the cost model tracks — one calibration row each.  Every
-/// concrete [`Backend`] maps onto one of these via [`family`] (the fused
-/// ablation variants share the fused row, the two unfused softmaxes share
-/// the unfused row).
+/// The backends the cost model tracks in the PJRT serving path — one
+/// calibration row each.  Every concrete [`Backend`] maps onto a family
+/// via [`family`] (the fused ablation variants share the fused row, the
+/// two unfused softmaxes share the unfused row).  [`Backend::Hybrid`] is
+/// its own family with its own calibration row but is deliberately NOT in
+/// this array: it has no PJRT artifacts, so only host-capable candidate
+/// sets ([`Planner::offline`](super::Planner::offline),
+/// [`Plan::from_bsb`](crate::kernels::Plan::from_bsb)) consider it.
 pub const COST_FAMILIES: [Backend; 4] =
     [Backend::Fused3S, Backend::UnfusedStable, Backend::Dense, Backend::CpuCsr];
 
@@ -72,6 +76,7 @@ pub fn family(b: Backend) -> Backend {
         | Backend::Fused3SSplitR
         | Backend::DfGnnLike => Backend::Fused3S,
         Backend::UnfusedNaive | Backend::UnfusedStable => Backend::UnfusedStable,
+        Backend::Hybrid => Backend::Hybrid,
         Backend::Dense => Backend::Dense,
         Backend::CpuCsr => Backend::CpuCsr,
         Backend::Auto => Backend::Auto,
@@ -104,6 +109,15 @@ pub fn cells(backend: Backend, p: &GraphProfile) -> Option<f64> {
         ),
         Backend::UnfusedStable => (p.oversize_rws == 0)
             .then(|| p.dispatched_tcb_slots as f64 * CELLS_PER_TCB),
+        // Hybrid: the router's structural cell count (wide TCBs at 128
+        // cells, narrow tiles at 8, dense lanes at 16 — batch-slot padding
+        // lives in the calibration constant like the other families'),
+        // plus the same oversize-chunk merge surcharge as fused — chunked
+        // row windows always stay on the wide path.
+        Backend::Hybrid => Some(
+            p.hybrid_dispatched_cells as f64
+                + p.oversize_chunks as f64 * CHUNK_MERGE_CELLS,
+        ),
         Backend::Dense => DENSE_N
             .iter()
             .find(|&&c| c >= p.n)
@@ -132,7 +146,10 @@ pub fn sharded_cells(
     p: &GraphProfile,
     halo_fraction: f64,
 ) -> Option<f64> {
-    if family(backend) == Backend::Dense {
+    // Dense's padded softmax is whole-graph by construction; the hybrid
+    // plan's lane sets index global row windows and are not
+    // shard-decomposable either (see `shard::exec::shardable`).
+    if matches!(family(backend), Backend::Dense | Backend::Hybrid) {
         return None;
     }
     let base = cells(backend, p)?;
@@ -169,6 +186,12 @@ impl Default for CostModel {
         let mut rows = BTreeMap::new();
         let row = |f, s| Calibration { fixed_s: f, sec_per_cell: s, samples: 0 };
         rows.insert(Backend::Fused3S.name(), row(30e-6, 1.0e-9));
+        // Hybrid shares fused's per-cell rate (same tensor-core substrate)
+        // but pays extra fixed cost: routing, two extra call families and
+        // their pipeline fills.  It therefore wins only when the router
+        // removes enough padded cells to cover the 15 µs premium — i.e.
+        // exactly when the packing improvement is real.
+        rows.insert(Backend::Hybrid.name(), row(45e-6, 1.0e-9));
         rows.insert(Backend::UnfusedStable.name(), row(50e-6, 3.5e-9));
         rows.insert(Backend::Dense.name(), row(20e-6, 0.7e-9));
         rows.insert(Backend::CpuCsr.name(), row(2e-6, 50e-9));
@@ -329,6 +352,34 @@ mod tests {
         assert!(cells(Backend::Dense, &hub).is_none());
         let small = profile(&generators::ring(200));
         assert_eq!(cells(Backend::Dense, &small), Some(256.0 * 256.0));
+    }
+
+    #[test]
+    fn hybrid_prices_packing_savings_not_hype() {
+        let m = CostModel::default();
+        // Hub-dominated star: the router cuts dispatched cells roughly in
+        // half (scripts/packing_model.py), far more than the 15 µs fixed
+        // premium — hybrid must price ahead of fused.
+        let hub = profile(&generators::star(5000));
+        let (ch, cf) = (
+            cells(Backend::Hybrid, &hub).unwrap(),
+            cells(Backend::Fused3S, &hub).unwrap(),
+        );
+        assert!(ch < cf, "hybrid cells {ch} !< fused {cf}");
+        assert!(
+            m.predict_s(Backend::Hybrid, &hub).unwrap()
+                < m.predict_s(Backend::Fused3S, &hub).unwrap()
+        );
+        // Tiny regular ring: the cell savings are worth well under the
+        // fixed-cost premium, so fused stays cheaper — the planner only
+        // picks hybrid when the packing win is real.
+        let ring = profile(&generators::ring(64));
+        assert!(
+            m.predict_s(Backend::Hybrid, &ring).unwrap()
+                > m.predict_s(Backend::Fused3S, &ring).unwrap()
+        );
+        // Hybrid is never a sharding candidate.
+        assert!(m.predict_sharded_s(Backend::Hybrid, &hub, 2, 0.1).is_none());
     }
 
     #[test]

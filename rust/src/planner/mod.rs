@@ -113,13 +113,20 @@ impl Planner {
 
     /// A planner for artifact-free execution ([`ExecutorKind::HostEmulation`],
     /// benches, tests): the dense fallback has no offline host emulation,
-    /// so it is not a candidate.
+    /// so it is not a candidate.  The hybrid-geometry backend IS one here —
+    /// it executes through the host lane kernels — whereas the PJRT set
+    /// ([`Planner::new`]) excludes it until lane artifacts exist.
     ///
     /// [`ExecutorKind::HostEmulation`]: crate::coordinator::ExecutorKind
     pub fn offline(model: CostModel) -> Planner {
         Planner::with_candidates(
             model,
-            vec![Backend::Fused3S, Backend::UnfusedStable, Backend::CpuCsr],
+            vec![
+                Backend::Fused3S,
+                Backend::Hybrid,
+                Backend::UnfusedStable,
+                Backend::CpuCsr,
+            ],
         )
     }
 
@@ -199,7 +206,10 @@ impl Planner {
             backend: best.backend,
             predicted_s: best.predicted_s.unwrap_or(0.0),
             cells: best.cells.unwrap_or(0.0),
-            chunked: family(best.backend) == Backend::Fused3S && p.oversize_rws > 0,
+            chunked: matches!(
+                family(best.backend),
+                Backend::Fused3S | Backend::Hybrid
+            ) && p.oversize_rws > 0,
             scores,
         }
     }
@@ -367,19 +377,38 @@ mod tests {
     fn refinement_flips_a_decision() {
         // Start from factory constants, then observe that (on this
         // hypothetical substrate) the scalar backend is essentially free:
-        // the planner must eventually re-route a fused-leaning graph.
+        // the planner must eventually re-route a tensor-core-leaning graph,
+        // whichever tensor-core family the factory model picked.
         let g = generators::erdos_renyi(2048, 6.0, 3).with_self_loops();
         let planner = Planner::offline(CostModel::default());
         let before = planner.resolve(&g);
-        assert_eq!(before.backend, Backend::Fused3S);
+        assert_ne!(before.backend, Backend::CpuCsr, "scores: {:?}", before.scores);
         let p = GraphProfile::from_csr(&g);
         let cpu_cells = cells(Backend::CpuCsr, &p).unwrap();
-        let fused_cells = cells(Backend::Fused3S, &p).unwrap();
+        let chosen_cells = cells(before.backend, &p).unwrap();
         for _ in 0..60 {
             planner.observe(Backend::CpuCsr, cpu_cells, 1e-6);
-            planner.observe(Backend::Fused3S, fused_cells, 50e-3);
+            planner.observe(before.backend, chosen_cells, 50e-3);
         }
         let after = planner.resolve(&g);
         assert_eq!(after.backend, Backend::CpuCsr, "scores: {:?}", after.scores);
+    }
+
+    #[test]
+    fn hybrid_wins_offline_only_when_packing_pays() {
+        // Scattered ER windows: the narrow router halves dispatched cells
+        // (scripts/packing_model.py: ~131k vs ~262k cells), far beyond the
+        // hybrid row's 15 µs fixed premium — offline auto routes hybrid.
+        let d =
+            resolve_offline(&generators::erdos_renyi(2048, 6.0, 7).with_self_loops());
+        assert_eq!(d.backend, Backend::Hybrid, "scores: {:?}", d.scores);
+        // Tiny regular ring: the savings are microscopic next to the fixed
+        // premium, so hybrid must lose (to cpu_csr here).
+        let d = resolve_offline(&generators::ring(64));
+        assert_ne!(d.backend, Backend::Hybrid, "scores: {:?}", d.scores);
+        // The PJRT candidate set must not offer hybrid at all (no lane
+        // artifacts exist).
+        let d = resolve(&generators::erdos_renyi(2048, 6.0, 7).with_self_loops());
+        assert!(d.scores.iter().all(|s| s.backend != Backend::Hybrid));
     }
 }

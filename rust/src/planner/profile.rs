@@ -21,6 +21,7 @@
 //! Extraction is O(nnz log deg) and allocation-light; on the serving path
 //! it costs far less than the BSB build it steers.
 
+use crate::bsb::geometry::{self, RouteParams, WindowShape};
 use crate::bsb::stats::{compaction_stats, nnz_per_rw};
 use crate::bsb::{Bsb, RW};
 use crate::graph::CsrGraph;
@@ -82,6 +83,18 @@ pub struct GraphProfile {
     /// the chunk capacity.  This — not `total_tcbs` — is what the fused
     /// kernels actually execute.
     pub dispatched_tcb_slots: usize,
+    /// Dispatched *cells* (scalar MMA slots) for a hybrid-geometry run
+    /// under the default router: wide TCBs at 128 cells, narrow tiles at
+    /// 8, dense lanes at 16 (see [`crate::bsb::geometry`]).  Batch-free
+    /// (structural only), so the CSR-side estimate equals the built plan's
+    /// `PlanStats::structural_cells()` exactly.
+    pub hybrid_dispatched_cells: usize,
+    /// Structural padding cells within `hybrid_dispatched_cells`.
+    pub hybrid_padded_cells: usize,
+    /// Row windows the hybrid router sends to the narrow 8×1-tile path.
+    pub narrow_rws: usize,
+    /// Row windows the hybrid router sends to the dense 16×1-lane path.
+    pub dense_rws: usize,
 }
 
 impl GraphProfile {
@@ -118,7 +131,9 @@ impl GraphProfile {
                 nnz_rw.push(z as f64);
             }
         }
+        let shapes = geometry::window_shapes_from_csr(g);
         GraphProfile::from_parts(g.n, g.nnz(), &tcbs, &nnz_rw, buckets, chunk_t)
+            .with_hybrid(&shapes, buckets, chunk_t)
             .with_degrees(g)
     }
 
@@ -142,8 +157,10 @@ impl GraphProfile {
             .filter(|&z| z > 0)
             .map(|z| z as f64)
             .collect();
+        let shapes = geometry::window_shapes_from_bsb(bsb);
         let mut p =
-            GraphProfile::from_parts(s.nodes, s.edges, &tcbs, &nnz_rw, buckets, chunk_t);
+            GraphProfile::from_parts(s.nodes, s.edges, &tcbs, &nnz_rw, buckets, chunk_t)
+                .with_hybrid(&shapes, buckets, chunk_t);
         // Degree features are not recoverable from a BSB (compaction merged
         // the per-row structure); approximate the hub detector with the
         // widest row window.
@@ -212,7 +229,33 @@ impl GraphProfile {
             oversize_rws,
             oversize_chunks,
             dispatched_tcb_slots: slots,
+            hybrid_dispatched_cells: 0,
+            hybrid_padded_cells: 0,
+            narrow_rws: 0,
+            dense_rws: 0,
         }
+    }
+
+    /// Fill the hybrid-geometry cell estimate from window shapes (CSR- or
+    /// BSB-derived — identical either way; see
+    /// [`geometry::hybrid_cells`]).
+    fn with_hybrid(
+        mut self,
+        shapes: &[WindowShape],
+        buckets: &[usize],
+        chunk_t: usize,
+    ) -> GraphProfile {
+        let hc = geometry::hybrid_cells(
+            shapes,
+            buckets,
+            chunk_t,
+            &RouteParams::default(),
+        );
+        self.hybrid_dispatched_cells = hc.structural_cells;
+        self.hybrid_padded_cells = hc.padded_cells;
+        self.narrow_rws = hc.narrow_rws;
+        self.dense_rws = hc.dense_rws;
+        self
     }
 }
 
@@ -258,6 +301,37 @@ mod tests {
             assert_eq!(p.bucket_hist, b.bucket_hist);
             assert_eq!(p.oversize_rws, b.oversize_rws);
             assert_eq!(p.dispatched_tcb_slots, b.dispatched_tcb_slots);
+            assert_eq!(p.hybrid_dispatched_cells, b.hybrid_dispatched_cells);
+            assert_eq!(p.hybrid_padded_cells, b.hybrid_padded_cells);
+            assert_eq!(p.narrow_rws, b.narrow_rws);
+            assert_eq!(p.dense_rws, b.dense_rws);
+        }
+    }
+
+    #[test]
+    fn hybrid_estimate_equals_built_plan() {
+        // The profile's hybrid cell estimate must equal what plan_hybrid
+        // actually accounts — the profile↔plan half of the DESIGN.md §12
+        // pinning contract (the geometry module pins the shape half).
+        use crate::bsb::geometry::plan_hybrid;
+        use crate::bsb::reorder::Order;
+        for g in [
+            generators::erdos_renyi(1024, 6.0, 4).with_self_loops(),
+            generators::star(4000).with_self_loops(),
+            generators::power_law(1500, 7.0, 2.4, 8),
+        ] {
+            let p = profile(&g);
+            let bsb = build(&g);
+            let plan = plan_hybrid(
+                &bsb,
+                DEFAULT_BUCKETS,
+                8,
+                Order::ByTcbDesc,
+                DEFAULT_CHUNK_T,
+            );
+            assert_eq!(p.hybrid_dispatched_cells, plan.stats.structural_cells());
+            assert_eq!(p.narrow_rws, plan.stats.narrow_windows);
+            assert_eq!(p.dense_rws, plan.stats.dense_windows);
         }
     }
 

@@ -72,9 +72,13 @@ pub struct ShardedPlan {
 
 /// The backend families a shard can run: dense is whole-graph by
 /// construction (its padded-softmax column order changes under halo
-/// remapping), everything else is row-window-local.
+/// remapping), and hybrid is whole-graph too — its per-window routing is
+/// priced against the whole graph's packing profile, and the cost model
+/// deliberately reports no sharded estimate for it
+/// ([`sharded_cells`](crate::planner::sharded_cells) returns `None`).
+/// Everything else is row-window-local.
 fn shardable(backend: Backend) -> bool {
-    !matches!(backend, Backend::Dense | Backend::Auto)
+    !matches!(backend, Backend::Dense | Backend::Hybrid | Backend::Auto)
 }
 
 impl ShardedPlan {

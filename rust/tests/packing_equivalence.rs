@@ -1,0 +1,297 @@
+//! Differential harness for the hybrid geometry router (DESIGN.md §12):
+//! mixed wide/narrow/dense dispatch must be **bit-identical** to the
+//! 16-row all-wide reference — and to the fused driver where it applies —
+//! across the ISSUE's generator mix, `heads ∈ {1, 4}`, `d ≠ dv`, serial
+//! and parallel pipelined engines, and the whole coordinator path under
+//! `ExecutorKind::HostEmulation`.
+//!
+//! Why bit-equality is the right contract: the three paths partition the
+//! row windows, so their scatters touch disjoint output rows, and every
+//! path visits a row's nonzero columns in ascending original-column order
+//! with the same scalar op sequence — routing changes *which call* covers
+//! a window, never the arithmetic inside it.  The only merge seam is the
+//! wide path's oversize-chunk fold, shared verbatim with the fused
+//! driver.  Runs entirely offline through the host kernel; no artifacts
+//! needed.
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use fused3s::bsb::geometry::{self, RouteParams, RwPath};
+use fused3s::bsb::reorder::Order;
+use fused3s::bsb::{self, Bsb};
+use fused3s::coordinator::{
+    AttnRequest, Coordinator, CoordinatorConfig, ExecutorKind,
+};
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::graph::{generators, CsrGraph};
+use fused3s::kernels::hybrid::HybridDriver;
+use fused3s::kernels::{
+    AttentionBatch, Backend, ExecCtx, Plan, SparseAttentionOp,
+};
+use fused3s::runtime::Manifest;
+use fused3s::util::prng::Rng;
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+const HEAD_COUNTS: &[usize] = &[1, 4];
+
+fn manifest() -> Manifest {
+    // Matches the coordinator's HostEmulation bucketing configuration.
+    offline_manifest(8, BUCKETS, 128)
+}
+
+/// Head-major feature buffers for `heads` heads over n nodes.
+fn head_features(
+    n: usize,
+    d: usize,
+    dv: usize,
+    heads: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(heads * n * d, 1.0),
+        rng.normal_vec(heads * n * d, 1.0),
+        rng.normal_vec(heads * n * dv, 1.0),
+    )
+}
+
+/// The ISSUE's generator mix, chosen so the router exercises every path:
+/// ER and power-law windows scatter (narrow), star leaves are
+/// single-column (dense) while the hub is oversize (wide + chunked), and
+/// the SBM blocks sit in between.
+fn graph_suite() -> Vec<(&'static str, CsrGraph)> {
+    vec![
+        ("er", generators::erdos_renyi(400, 5.0, 3).with_self_loops()),
+        ("sbm", generators::sbm(6, 24, 0.3, 0.02, 5).with_self_loops()),
+        ("star", generators::star(1500)),
+        ("power_law", generators::power_law(512, 6.0, 2.3, 9).with_self_loops()),
+    ]
+}
+
+/// The 16-row reference: every window forced onto the wide path — the
+/// exact pre-geometry plan shape — executed through the same driver code.
+fn all_wide_reference(man: &Manifest, bsb: Bsb) -> HybridDriver {
+    let params = RouteParams { narrow: false, dense: false, ..Default::default() };
+    HybridDriver::from_bsb_with(man, bsb, &params).expect("all-wide reference")
+}
+
+/// Routed-hybrid vs all-wide-reference (and vs fused where `d == dv`)
+/// differential for one graph across the head sweep and both engine
+/// policies.
+fn check_graph(name: &str, g: &CsrGraph, d: usize, dv: usize, seed: u64) {
+    let man = manifest();
+    let serial = Engine::serial();
+    let bsb = bsb::build(g);
+    let wide_ref = all_wide_reference(&man, bsb.clone());
+    let fused = (d == dv)
+        .then(|| Plan::new(&man, g, Backend::Fused3S, &serial).expect("fused"));
+    for &heads in HEAD_COUNTS {
+        let (q, k, v) = head_features(g.n, d, dv, heads, seed + heads as u64);
+        let x = AttentionBatch::new(g.n, d, dv, heads, &q, &k, &v, 0.25);
+        let want = wide_ref
+            .execute(&mut ExecCtx::host(&serial), &x)
+            .expect("all-wide reference run");
+        assert_eq!(want.len(), x.out_len());
+        if let Some(fused) = &fused {
+            let fw = fused
+                .execute(&mut ExecCtx::host(&serial), &x)
+                .expect("fused run");
+            assert_eq!(
+                fw, want,
+                "{name} heads={heads}: all-wide hybrid reference diverged \
+                 from the fused driver"
+            );
+        }
+        for policy in [
+            ExecPolicy::serial(),
+            ExecPolicy { threads: 4, pipeline_depth: 2 },
+        ] {
+            let engine = Engine::new(policy);
+            let plan = Plan::new(&man, g, Backend::Hybrid, &engine)
+                .expect("hybrid plan");
+            assert_eq!(plan.backend(), Backend::Hybrid);
+            let got = plan
+                .execute(&mut ExecCtx::host(&engine), &x)
+                .expect("hybrid run");
+            assert_eq!(
+                got, want,
+                "{name} heads={heads} d={d} dv={dv} {policy:?}: routed \
+                 hybrid diverged from the 16-row all-wide reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn hybrid_bit_matches_all_wide_reference_and_fused() {
+    for (i, (name, g)) in graph_suite().iter().enumerate() {
+        check_graph(name, g, 16, 16, 100 * (i as u64 + 1));
+    }
+}
+
+#[test]
+fn hybrid_supports_d_ne_dv() {
+    // GAT-shaped problems (rank-2 scores, wide values): the fused driver
+    // rejects these, but the hybrid driver's host kernels are general —
+    // the all-wide forced routing is the reference.
+    for (i, (name, g)) in graph_suite().iter().enumerate() {
+        check_graph(name, g, 4, 12, 1000 * (i as u64 + 1));
+    }
+}
+
+#[test]
+fn router_covers_all_three_paths_across_the_suite() {
+    let man = manifest();
+    let mut wide = 0usize;
+    let mut narrow = 0usize;
+    let mut dense = 0usize;
+    for (name, g) in graph_suite() {
+        let bsb = bsb::build(&g);
+        let hplan = geometry::plan_hybrid(
+            &bsb,
+            &man.t_buckets,
+            man.rw_batch,
+            Order::ByTcbDesc,
+            man.chunk_t,
+        );
+        assert_eq!(hplan.routes.len(), bsb.num_rw, "{name}: route per window");
+        let n_narrow =
+            hplan.routes.iter().filter(|r| **r == RwPath::Narrow).count();
+        let n_dense =
+            hplan.routes.iter().filter(|r| **r == RwPath::Dense).count();
+        // The stats the planner prices from must agree with the routes the
+        // driver dispatches.
+        assert_eq!(hplan.stats.narrow_windows, n_narrow, "{name}");
+        assert_eq!(hplan.stats.dense_windows, n_dense, "{name}");
+        wide += hplan.routes.len() - n_narrow - n_dense;
+        narrow += n_narrow;
+        dense += n_dense;
+        if name == "star" {
+            assert!(
+                !hplan.wide.chunked.is_empty(),
+                "the star hub must stay on the chunked wide path"
+            );
+            assert!(n_dense > 0, "star leaf windows must route dense");
+        }
+    }
+    assert!(wide > 0, "suite never exercised the wide path");
+    assert!(narrow > 0, "suite never exercised the narrow path");
+    assert!(dense > 0, "suite never exercised the dense path");
+}
+
+#[test]
+fn auto_from_bsb_picks_hybrid_only_when_cheaper() {
+    let man = manifest();
+    let serial = Engine::serial();
+
+    // Scattered ER windows: the router roughly halves dispatched cells
+    // (scripts/packing_model.py), far beyond the hybrid cost row's fixed
+    // premium — auto must route hybrid, and the hybrid plan must still
+    // bit-match the fused driver.
+    let g = generators::erdos_renyi(2048, 6.0, 7).with_self_loops();
+    let auto =
+        Plan::from_bsb(&man, bsb::build(&g), Backend::Auto).expect("auto plan");
+    assert_eq!(auto.backend(), Backend::Hybrid, "packing win must route hybrid");
+    let (q, k, v) = head_features(g.n, 16, 16, 1, 42);
+    let x = AttentionBatch::new(g.n, 16, 16, 1, &q, &k, &v, 0.25);
+    let got = auto.execute(&mut ExecCtx::host(&serial), &x).expect("auto run");
+    let fused = Plan::new(&man, &g, Backend::Fused3S, &serial).expect("fused");
+    let want =
+        fused.execute(&mut ExecCtx::host(&serial), &x).expect("fused run");
+    assert_eq!(got, want, "auto-routed hybrid diverged from fused");
+
+    // A tiny regular ring saves almost nothing: the fixed premium wins and
+    // auto must NOT pick hybrid.
+    let g = generators::ring(64);
+    let auto =
+        Plan::from_bsb(&man, bsb::build(&g), Backend::Auto).expect("auto plan");
+    assert_ne!(
+        auto.backend(),
+        Backend::Hybrid,
+        "hybrid must only be selected when the cost model prices it cheaper"
+    );
+}
+
+/// The full coordinator path with hybrid requests: admission → coalescing
+/// → cache → merged hybrid driver → scatter must reproduce per-request
+/// serial hybrid runs bit-for-bit under `ExecutorKind::HostEmulation`.
+#[test]
+fn coordinator_hybrid_host_emulation_bit_matches() {
+    let man = manifest();
+    let d = 8;
+    let heads = 4;
+    let scale = 0.25;
+    let graphs: Vec<CsrGraph> = vec![
+        generators::erdos_renyi(90, 4.0, 11).with_self_loops(),
+        generators::star(70),
+        generators::sbm(3, 16, 0.2, 0.02, 12).with_self_loops(),
+    ];
+    let feats: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = graphs
+        .iter()
+        .enumerate()
+        .map(|(i, g)| head_features(g.n, d, d, heads, 3000 + i as u64))
+        .collect();
+    // Per-request serial hybrid oracle.
+    let serial = Engine::serial();
+    let expect: Vec<Vec<f32>> = graphs
+        .iter()
+        .zip(&feats)
+        .map(|(g, (q, k, v))| {
+            let plan = Plan::new(&man, g, Backend::Hybrid, &serial).unwrap();
+            let x = AttentionBatch::new(g.n, d, d, heads, q, k, v, scale);
+            plan.execute(&mut ExecCtx::host(&serial), &x).expect("oracle")
+        })
+        .collect();
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        executor: ExecutorKind::HostEmulation,
+        preprocess_workers: 2,
+        queue_capacity: 16,
+        max_batch_delay: Duration::from_millis(500),
+        max_batch_requests: 16,
+        max_batch_nodes: 1 << 20,
+        cache_capacity: 8,
+        ..CoordinatorConfig::default()
+    })
+    .expect("host-emulation coordinator");
+
+    let (tx, rx) = channel();
+    for (i, (g, (q, k, v))) in graphs.iter().zip(&feats).enumerate() {
+        coord
+            .submit(AttnRequest {
+                id: i as u64,
+                graph: g.clone(),
+                d,
+                dv: d,
+                heads,
+                q: q.clone(),
+                k: k.clone(),
+                v: v.clone(),
+                scale,
+                backend: Backend::Hybrid,
+                deadline: None,
+                reply: tx.clone(),
+            })
+            .expect("submit");
+    }
+    drop(tx);
+    let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+    while let Ok(resp) = rx.recv_timeout(Duration::from_secs(120)) {
+        assert!(resp.batch_size >= 1);
+        got.insert(resp.id, resp.result.expect("result"));
+        if got.len() == graphs.len() {
+            break;
+        }
+    }
+    assert_eq!(got.len(), graphs.len(), "missing responses");
+    for (i, want) in expect.iter().enumerate() {
+        assert_eq!(
+            &got[&(i as u64)], want,
+            "component {i}: coordinator hybrid output diverged from the \
+             serial per-request oracle"
+        );
+    }
+    coord.shutdown();
+}

@@ -114,7 +114,10 @@ fn auto_from_bsb_resolves_over_bsb_candidates() {
     let g = generators::erdos_renyi(800, 5.0, 21).with_self_loops();
     let plan = Plan::from_bsb(&man, bsb::build(&g), Backend::Auto).unwrap();
     assert!(
-        matches!(plan.backend(), Backend::Fused3S | Backend::UnfusedStable),
+        matches!(
+            plan.backend(),
+            Backend::Fused3S | Backend::Hybrid | Backend::UnfusedStable
+        ),
         "from_bsb resolves over BSB-plannable backends, got {}",
         plan.backend().name()
     );

@@ -1,0 +1,382 @@
+#!/usr/bin/env python3
+"""Reference model of the hybrid-geometry packing arithmetic.
+
+Replicates, in plain Python, the deterministic pieces the packing bench
+(`rust/benches/packing.rs`) exercises:
+
+* the repo PRNG (`util::prng::Rng` — splitmix64-seeded xoshiro256**),
+* the graph generators it feeds (star / power_law / erdos_renyi / sbm),
+* per-row-window shape extraction (`bsb::geometry::WindowShape`),
+* the router (`bsb::geometry::route`) and the PlanStats cell accounting of
+  both the 16-row wide reference plan (`bsb::bucket::plan`) and the hybrid
+  plan (`bsb::geometry::plan_hybrid`).
+
+Everything here is integer plan arithmetic over deterministic graphs — no
+timing — so the numbers are exactly reproducible and machine-independent.
+`python3 scripts/packing_model.py` prints the per-graph table and rewrites
+`BENCH_packing.json` at the repo root when run with `--write`; the Rust
+bench computes the same quantities natively and must agree (EXPERIMENTS.md
+§Packing documents the contract).
+"""
+
+import json
+import math
+import os
+import sys
+
+MASK = (1 << 64) - 1
+
+# --- util::prng::Rng ------------------------------------------------------
+
+
+class Rng:
+    """xoshiro256** with splitmix64 seeding (bit-exact vs util/prng.rs)."""
+
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & MASK
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            self.s.append(z ^ (z >> 31))
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        # Lemire's unbiased bounded sampling, as in Rng::below.
+        x = self.next_u64()
+        m = x * n
+        low = m & MASK
+        if low < n:
+            t = ((1 << 64) - n) % n
+            while low < t:
+                x = self.next_u64()
+                m = x * n
+                low = m & MASK
+        return m >> 64
+
+    def coin(self, p):
+        return self.f64() < p
+
+
+# --- graph::generators (the subset the packing bench uses) ----------------
+
+
+def from_edges(n, edges):
+    adj = [[] for _ in range(n)]
+    for u, v in edges:
+        adj[u].append(v)
+    return [sorted(set(row)) for row in adj]
+
+
+def with_self_loops(adj):
+    return [sorted(set(row) | {i}) for i, row in enumerate(adj)]
+
+
+def star(n):
+    edges = []
+    for v in range(1, n):
+        edges.append((0, v))
+        edges.append((v, 0))
+    return from_edges(n, edges)
+
+
+def erdos_renyi(n, avg_deg, seed):
+    rng = Rng(seed)
+    edges = []
+    base = int(math.floor(avg_deg))
+    frac = avg_deg - math.floor(avg_deg)
+    for u in range(n):
+        deg = base + (1 if rng.coin(frac) else 0)
+        for _ in range(deg):
+            edges.append((u, rng.below(n)))
+    return from_edges(n, edges)
+
+
+def power_law(n, avg_deg, alpha, seed):
+    gamma = 1.0 / (alpha - 1.0)
+    cum = []
+    acc = 0.0
+    for i in range(n):
+        acc += (i + 1) ** (-gamma)
+        cum.append(acc)
+    total = acc
+    rng = Rng(seed)
+    m = round(n * avg_deg / 2.0)
+
+    def pick():
+        r = rng.f64() * total
+        # partition_point(|&c| c < r)
+        lo, hi = 0, n
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if cum[mid] < r:
+                lo = mid + 1
+            else:
+                hi = mid
+        return min(lo, n - 1)
+
+    edges = []
+    for _ in range(m):
+        u = pick()
+        v = pick()
+        if u != v:
+            edges.append((u, v))
+            edges.append((v, u))
+    return from_edges(n, edges)
+
+
+def sbm(blocks, block_size, p_in, p_out, seed):
+    n = blocks * block_size
+    rng = Rng(seed)
+    edges = []
+    deg_in = round(p_in * block_size)
+    deg_out = round(p_out * (n - block_size))
+    for u in range(n):
+        bu = u // block_size
+        for _ in range(deg_in):
+            edges.append((u, bu * block_size + rng.below(block_size)))
+        for _ in range(deg_out):
+            v = rng.below(n)
+            if v // block_size == bu:
+                v = (v + block_size) % n
+            edges.append((u, v))
+    return from_edges(n, edges)
+
+
+# --- bsb::geometry shapes + router ----------------------------------------
+
+TCB_R = 16
+TCB_C = 8
+WIDE_TCB_CELLS = TCB_R * TCB_C
+NARROW_TILE_CELLS = TCB_R // 2
+DENSE_LANE_CELLS = TCB_R
+NARROW_ROWS = TCB_R // 2
+NARROW_BUCKETS = [8, 16, 32, 64, 128, 256, 512, 1024]
+DENSE_OCCUPANCY = 0.5
+
+BUCKETS = [4, 8, 16, 32, 64, 128]
+BATCH = 8
+CHUNK_T = 128
+
+
+def window_shapes(adj):
+    n = len(adj)
+    shapes = []
+    for base in range(0, n, TCB_R):
+        rows = min(TCB_R, n - base)
+        cols = set()
+        half0 = set()
+        half1 = set()
+        z = 0
+        for r in range(base, base + rows):
+            row = adj[r]
+            z += len(row)
+            cols.update(row)
+            if r - base < NARROW_ROWS:
+                half0.update(row)
+            else:
+                half1.update(row)
+        shapes.append(
+            {"rows": rows, "w": len(cols), "w0": len(half0), "w1": len(half1), "z": z}
+        )
+    return shapes
+
+
+def bucket_ceil(buckets, t):
+    for b in buckets:
+        if b >= t:
+            return b
+    return None
+
+
+def narrow_half_tiles(w_half):
+    if w_half == 0:
+        return 0
+    return bucket_ceil(NARROW_BUCKETS, w_half)
+
+
+def dense_width(w):
+    return -(-w // TCB_C) * TCB_C
+
+
+def route(s, narrow=True, dense=True):
+    if s["z"] == 0:
+        return "wide"
+    t = -(-s["w"] // TCB_C)
+    b = bucket_ceil(BUCKETS, t)
+    if b is None:
+        return "wide"  # oversize -> chunked, always wide
+    wide_cells = b * WIDE_TCB_CELLS
+    best = (wide_cells, "wide")
+    if dense:
+        occ = s["z"] / (s["rows"] * s["w"])
+        if occ >= DENSE_OCCUPANCY:
+            c = dense_width(s["w"]) * DENSE_LANE_CELLS
+            if c < best[0]:
+                best = (c, "dense")
+    if narrow:
+        t0 = narrow_half_tiles(s["w0"])
+        t1 = narrow_half_tiles(s["w1"])
+        if t0 is not None and t1 is not None:
+            c = (t0 + t1) * NARROW_TILE_CELLS
+            if c < best[0]:
+                best = (c, "narrow")
+    return best[1]
+
+
+# --- PlanStats cell accounting (bucket::plan / geometry::plan_hybrid) -----
+
+
+def wide_plan_cells(shapes, keep=None):
+    """(dispatched_cells, padded_cells) of bucket::plan over `keep` RWs."""
+    real = padded = slot_tcbs = 0
+    per_bucket = {}
+    total_chunks = 0
+    for i, s in enumerate(shapes):
+        if keep is not None and not keep[i]:
+            continue
+        if s["z"] == 0:
+            continue
+        t = -(-s["w"] // TCB_C)
+        b = bucket_ceil(BUCKETS, t)
+        real += t
+        if b is None:
+            chunks = -(-t // CHUNK_T)
+            total_chunks += chunks
+            padded += chunks * CHUNK_T - t
+        else:
+            padded += b - t
+            per_bucket[b] = per_bucket.get(b, 0) + 1
+    for b, count in per_bucket.items():
+        rem = count % BATCH
+        if rem:
+            slot_tcbs += (BATCH - rem) * b
+    rem = total_chunks % BATCH
+    if rem:
+        slot_tcbs += (BATCH - rem) * CHUNK_T
+    dispatched = (real + padded + slot_tcbs) * WIDE_TCB_CELLS
+    padded_cells = (padded + slot_tcbs) * WIDE_TCB_CELLS
+    return dispatched, padded_cells
+
+
+def hybrid_plan_cells(shapes):
+    """(dispatched_cells, padded_cells, routes) of geometry::plan_hybrid."""
+    routes = [route(s) for s in shapes]
+    keep = [r == "wide" for r in routes]
+    disp, pad = wide_plan_cells(shapes, keep)
+
+    # Narrow path: per half-window tile-bucket batching.
+    real_tiles = pad_tiles = slot_tiles = 0
+    per_bucket = {}
+    for s, r in zip(shapes, routes):
+        if r != "narrow":
+            continue
+        for w_half in (s["w0"], s["w1"]):
+            if w_half == 0:
+                continue
+            b = narrow_half_tiles(w_half)
+            real_tiles += w_half
+            pad_tiles += b - w_half
+            per_bucket[b] = per_bucket.get(b, 0) + 1
+    for b, count in per_bucket.items():
+        rem = count % BATCH
+        if rem:
+            slot_tiles += (BATCH - rem) * b
+    disp += (real_tiles + pad_tiles + slot_tiles) * NARROW_TILE_CELLS
+    pad += (pad_tiles + slot_tiles) * NARROW_TILE_CELLS
+
+    # Dense path: per padded-width batching.
+    cols = pad_cols = slot_cols = 0
+    per_width = {}
+    for s, r in zip(shapes, routes):
+        if r != "dense":
+            continue
+        w = s["w"]
+        width = dense_width(w)
+        cols += w
+        pad_cols += width - w
+        per_width[width] = per_width.get(width, 0) + 1
+    for width, count in per_width.items():
+        rem = count % BATCH
+        if rem:
+            slot_cols += (BATCH - rem) * width
+    disp += (cols + pad_cols + slot_cols) * DENSE_LANE_CELLS
+    pad += (pad_cols + slot_cols) * DENSE_LANE_CELLS
+    return disp, pad, routes
+
+
+# --- the bench graphs ------------------------------------------------------
+
+
+def bench_graphs():
+    return [
+        ("star_5000", star(5000)),
+        ("power_law_4096", power_law(4096, 4.0, 2.5, 11)),
+        ("er_2048", with_self_loops(erdos_renyi(2048, 6.0, 7))),
+        ("sbm_20x30", with_self_loops(sbm(20, 30, 0.4, 0.02, 4))),
+    ]
+
+
+def main():
+    write = "--write" in sys.argv
+    results = {}
+    print(f"{'graph':<16} {'wide_pad':>10} {'hyb_pad':>10} {'pad_ratio':>9} "
+          f"{'wide_disp':>11} {'hyb_disp':>11} {'disp_ratio':>10} {'nar':>5} {'den':>5}")
+    for name, adj in bench_graphs():
+        shapes = window_shapes(adj)
+        wd, wp = wide_plan_cells(shapes)
+        hd, hp, routes = hybrid_plan_cells(shapes)
+        pad_ratio = hp / wp if wp else 0.0
+        disp_ratio = hd / wd if wd else 0.0
+        nar = sum(1 for r in routes if r == "narrow")
+        den = sum(1 for r in routes if r == "dense")
+        print(f"{name:<16} {wp:>10} {hp:>10} {pad_ratio:>9.4f} "
+              f"{wd:>11} {hd:>11} {disp_ratio:>10.4f} {nar:>5} {den:>5}")
+        results[name] = {
+            "wide_padded_cells": wp,
+            "hybrid_padded_cells": hp,
+            "padded_cell_ratio": round(pad_ratio, 6),
+            "wide_dispatched_cells": wd,
+            "hybrid_dispatched_cells": hd,
+            "dispatched_cell_ratio": round(disp_ratio, 6),
+            "narrow_rws": nar,
+            "dense_rws": den,
+        }
+    if write:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = os.path.join(root, "BENCH_packing.json")
+        payload = {
+            "bench": "packing",
+            "unit": "dispatched cells (ratios are hybrid / wide-reference; "
+                    "structure-only, no wall clock)",
+            "config": {"buckets": BUCKETS, "batch": BATCH, "chunk_t": CHUNK_T},
+            "graphs": results,
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

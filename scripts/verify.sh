@@ -37,13 +37,31 @@ if [ "$docs_missing" -ne 0 ]; then
 fi
 echo "docs-link check OK"
 
+# ISSUE-4 perf-memory gate: the bench suite snapshots normalized ratio
+# baselines at the repo root (BENCH_*.json — structure-only cell ratios
+# for packing, serial-reference time ratios for planner).  A missing
+# committed baseline means regressions ship invisibly, so its absence is
+# fatal.  BENCH_planner.json is written by `cargo bench --bench planner`
+# and only checked when present (timing benches don't run under tier-1).
+echo "== bench baseline presence (BENCH_*.json)"
+if [ ! -f "$REPO_ROOT/BENCH_packing.json" ]; then
+    echo "MISSING baseline: BENCH_packing.json (run 'cargo bench --bench" \
+         "packing' or 'python3 scripts/packing_model.py --write')"
+    exit 1
+fi
+grep -q '"padded_cell_ratio"' "$REPO_ROOT/BENCH_packing.json" || {
+    echo "BENCH_packing.json lacks padded_cell_ratio entries"; exit 1; }
+echo "bench baseline presence OK"
+
 # ISSUE-6 hygiene gate: the coordinator and executor hot paths must not
 # grow new bare `unwrap()`/`expect()` calls — lock poisoning and fallible
 # seams go through util::sync::lock_unpoisoned or structured AttnError.
 # A site that is genuinely unreachable stays allowed when the line (or
 # the comment block directly above it) says why with the word "invariant".
-# Test modules (everything after `#[cfg(test)]`) are exempt.
-echo "== unwrap/expect lint (src/coordinator, src/exec)"
+# Test modules (everything after `#[cfg(test)]`) are exempt.  ISSUE 7
+# extends the file set with the geometry router and the hybrid driver —
+# new dispatch-path modules inherit the same hygiene bar.
+echo "== unwrap/expect lint (src/coordinator, src/exec, src/bsb/geometry.rs, src/kernels/hybrid.rs)"
 awk '
     FNR == 1 { intest = 0; inv = 0 }
     /#\[cfg\(test\)\]/ { intest = 1 }
@@ -61,7 +79,7 @@ awk '
         inv = 0
     }
     END { exit bad }
-' src/coordinator/*.rs src/exec/*.rs
+' src/coordinator/*.rs src/exec/*.rs src/bsb/geometry.rs src/kernels/hybrid.rs
 echo "unwrap/expect lint OK"
 
 if cargo fmt --version >/dev/null 2>&1; then
@@ -98,6 +116,14 @@ cargo test -q --test batching_equivalence --test backward_gradcheck \
 echo "== cargo test -q --test planner_selection"
 cargo test -q --test planner_selection
 
+# The ISSUE-7 packing suite: hybrid geometry routing (wide/narrow/dense
+# per row window) must bit-match the 16-row all-wide reference and the
+# fused driver — across generators, heads {1,4}, d != dv, serial and
+# parallel engines, and the HostEmulation coordinator — and Backend::Auto
+# must pick hybrid only when the cost model prices it cheaper.
+echo "== cargo test -q --test packing_equivalence"
+cargo test -q --test packing_equivalence
+
 # The ISSUE-5 sharding suite: partition-parallel execution must bit-match
 # the unsharded plan (every shardable backend, shard counts, strategies,
 # heads, mega-hub chunked RWs) and the coordinator must serve graphs past
@@ -130,7 +156,8 @@ echo "(perf sweeps: 'cargo bench --bench host_pipeline' for the host engine,"
 echo " 'cargo bench --bench coordinator_batching' for the dynamic-batching"
 echo " delay × nodes sweep, 'cargo bench --bench multihead' for the"
 echo " head-batching sweep, 'cargo bench --bench planner' for the"
-echo " auto-vs-fixed backend sweep, 'cargo bench --bench shard' for the"
-echo " sharded-vs-unsharded sweep, 'cargo bench --bench fault_overhead'"
+echo " auto-vs-fixed backend sweep, 'cargo bench --bench packing' for the"
+echo " hybrid-geometry padded-cell sweep, 'cargo bench --bench shard' for"
+echo " the sharded-vs-unsharded sweep, 'cargo bench --bench fault_overhead'"
 echo " for the disabled-injection hot-path cost; see EXPERIMENTS.md"
-echo " §Perf/§Batching/§Multi-head/§Planner/§Sharding/§Faults)"
+echo " §Perf/§Batching/§Multi-head/§Planner/§Sharding/§Faults/§Packing)"

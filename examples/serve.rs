@@ -1,75 +1,150 @@
-//! Serving example: the coordinator under a batched multi-graph request
-//! stream (molecule-property-style workload), reporting throughput and
-//! latency percentiles — the deployment shape a 3S kernel library
-//! actually runs in.  Requests default to `Backend::Auto`, so the adaptive
-//! planner routes each one and refines its cost model from the measured
-//! latencies (`--backend fused3s` pins the old fixed routing).
+//! Serving example: the coordinator behind the TCP wire protocol
+//! (DESIGN.md §13) under a batched multi-graph request stream
+//! (molecule-property-style workload) — the deployment shape a 3S kernel
+//! library actually runs in.
+//!
+//! A loopback [`NetServer`] fronts the coordinator; `--clients` threads
+//! each open a real TCP connection and stream requests over a shared set
+//! of repeat batched graphs, so the fingerprint handshake kicks in: each
+//! graph's CSR is uploaded once per client and every later submit rides a
+//! 16-byte fingerprint reference straight into the server's DriverCache.
+//! Requests default to `Backend::Auto`, so the adaptive planner routes
+//! each one and refines its cost model from the measured latencies
+//! (`--backend fused3s` pins the old fixed routing).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve -- --requests 48
+//! make artifacts && cargo run --release --example serve -- --requests 12
+//! cargo run --release --example serve -- --host   # offline host emulation
 //! ```
 
-use fused3s::coordinator::{AttnRequest, Coordinator, CoordinatorConfig};
+use fused3s::coordinator::{Coordinator, CoordinatorConfig, ExecutorKind};
 use fused3s::graph::batch::{batched_dataset, BatchKind};
+use fused3s::graph::CsrGraph;
 use fused3s::kernels::Backend;
+use fused3s::net::{NetClient, NetConfig, NetServer, WireRequest};
 use fused3s::util::cli::Args;
 use fused3s::util::prng::Rng;
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
-    let requests = args.usize_or("requests", 48)?;
+    let clients = args.usize_or("clients", 3)?;
+    let requests = args.usize_or("requests", 12)?; // per client
+    let n_graphs = args.usize_or("graphs", 4)?;
     let d = args.usize_or("d", 64)?;
     let backend = Backend::parse(&args.get_or("backend", "auto"))?;
 
-    let coord = Coordinator::start(CoordinatorConfig {
+    let mut cfg = CoordinatorConfig {
         preprocess_workers: args.usize_or("workers", 2)?,
         ..CoordinatorConfig::default()
-    })?;
+    };
+    if args.bool("host") {
+        cfg.executor = ExecutorKind::HostEmulation;
+    }
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    let server = NetServer::serve(coord.clone(), NetConfig::default())?;
+    let addr = server.local_addr();
     println!(
-        "coordinator up; streaming {requests} batched-graph requests \
-         (backend={})",
+        "listening on {addr}; {clients} clients x {requests} requests over \
+         {n_graphs} repeat graphs (backend={})",
         backend.name()
     );
 
-    let mut rng = Rng::new(0xCAFE);
-    let (tx, rx) = channel();
+    // The shared workload: batches of small molecule-like graphs (the OGB
+    // graph-property-prediction serving shape), reused across requests so
+    // the wire handshake and the server-side plan cache both engage.
+    let graphs: Arc<Vec<CsrGraph>> = Arc::new(
+        (0..n_graphs)
+            .map(|i| {
+                let (g, _) =
+                    batched_dataset(24, 10, 30, i as u64, BatchKind::Molecule);
+                g.with_self_loops()
+            })
+            .collect(),
+    );
+
     let t0 = std::time::Instant::now();
-    for i in 0..requests {
-        // Each request: a batch of small molecule-like graphs (the OGB
-        // graph-property-prediction serving shape).
-        let batch_size = rng.range(16, 64);
-        let (g, _) = batched_dataset(batch_size, 10, 30, i as u64, BatchKind::Molecule);
-        let g = g.with_self_loops();
-        let nd = g.n * d;
-        coord.submit(AttnRequest::single_head(
-            i as u64,
-            g,
-            d,
-            rng.normal_vec(nd, 1.0),
-            rng.normal_vec(nd, 1.0),
-            rng.normal_vec(nd, 1.0),
-            1.0 / (d as f32).sqrt(),
-            backend,
-            tx.clone(),
-        ))?;
+    let (tx, rx) = channel();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let graphs = graphs.clone();
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xCAFE ^ c as u64);
+            let mut ok = 0usize;
+            let mut first_err: Option<String> = None;
+            let mut client = match NetClient::connect(addr, "") {
+                Ok(cl) => cl,
+                Err(e) => {
+                    let _ = tx.send((0, 0, 0, 0, Some(e.to_string())));
+                    return;
+                }
+            };
+            for r in 0..requests {
+                let g = &graphs[(c + r) % graphs.len()];
+                let nd = g.n * d;
+                let q = rng.normal_vec(nd, 1.0);
+                let k = rng.normal_vec(nd, 1.0);
+                let v = rng.normal_vec(nd, 1.0);
+                let req = WireRequest::single_head(
+                    (c * requests + r) as u64,
+                    g,
+                    d,
+                    &q,
+                    &k,
+                    &v,
+                    1.0 / (d as f32).sqrt(),
+                    backend,
+                );
+                match client.submit(&req) {
+                    Ok(resp) if resp.result.is_ok() => ok += 1,
+                    Ok(resp) => {
+                        if let Err(e) = resp.result {
+                            first_err.get_or_insert(e.to_string());
+                        }
+                    }
+                    Err(e) => {
+                        first_err.get_or_insert(e.to_string());
+                    }
+                }
+            }
+            let s = client.stats();
+            client.close();
+            let _ = tx.send((
+                ok,
+                s.graph_uploads,
+                s.upload_skips,
+                s.graph_bytes_naive - s.graph_bytes_uploaded,
+                first_err,
+            ));
+        }));
     }
     drop(tx);
 
-    let mut ok = 0usize;
+    let (mut ok, mut uploads, mut skips, mut saved) = (0usize, 0u64, 0u64, 0u64);
     let mut first_err = None;
-    while let Ok(resp) = rx.recv() {
-        match resp.result {
-            Ok(_) => ok += 1,
-            Err(e) => {
-                first_err.get_or_insert(e);
-            }
+    while let Ok((o, u, sk, sv, e)) = rx.recv() {
+        ok += o;
+        uploads += u;
+        skips += sk;
+        saved += sv;
+        if let Some(e) = e {
+            first_err.get_or_insert(e);
         }
     }
+    for h in handles {
+        let _ = h.join();
+    }
+    let total = clients * requests;
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {ok}/{requests} in {wall:.2}s = {:.1} req/s",
+        "served {ok}/{total} over TCP in {wall:.2}s = {:.1} req/s",
         ok as f64 / wall
+    );
+    println!(
+        "fingerprint handshake: {uploads} CSR uploads, {skips} reference \
+         submits, {saved} topology bytes saved"
     );
     if let Some(e) = first_err {
         println!("first failure: {e}");
@@ -82,6 +157,7 @@ fn main() -> anyhow::Result<()> {
         prep.p50_s * 1e3,
         exec.p50_s * 1e3
     );
+    server.shutdown();
     coord.shutdown();
     Ok(())
 }

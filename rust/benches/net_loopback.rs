@@ -1,0 +1,152 @@
+//! `cargo bench net_loopback` — wire-serving round-trip cost over a real
+//! loopback TCP connection (DESIGN.md §13), offline under host emulation
+//! so it runs without artifacts.
+//!
+//! Two series:
+//!   * `inline`      — every submit carries the full CSR (handshake off:
+//!                     a fresh connection per batch, so nothing is known);
+//!   * `fingerprint` — steady state: the graph is uploaded once, every
+//!                     later submit is a 16-byte reference.
+//! The gap isolates what the fingerprint handshake saves per request at
+//! each graph size — serialization + copy + validation of the topology.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fused3s::coordinator::{Coordinator, CoordinatorConfig, ExecutorKind};
+use fused3s::exec::ExecPolicy;
+use fused3s::kernels::Backend;
+use fused3s::graph::generators;
+use fused3s::net::proto::csr_wire_bytes;
+use fused3s::net::{NetClient, NetConfig, NetServer, WireRequest};
+use fused3s::util::prng::Rng;
+
+fn main() {
+    let cfg = CoordinatorConfig {
+        executor: ExecutorKind::HostEmulation,
+        preprocess_workers: 2,
+        queue_capacity: 64,
+        max_batch_requests: 1,
+        max_batch_delay: Duration::from_millis(100),
+        cache_capacity: 32,
+        exec: ExecPolicy::serial(),
+        ..CoordinatorConfig::default()
+    };
+    let coord = match Coordinator::start(cfg) {
+        Ok(c) => Arc::new(c),
+        Err(e) => {
+            eprintln!("net bench could not start a host coordinator: {e:#}");
+            return;
+        }
+    };
+    let server = match NetServer::serve(coord.clone(), NetConfig::default()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("net bench could not bind loopback: {e:#}");
+            coord.shutdown();
+            return;
+        }
+    };
+    let addr = server.local_addr();
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let reps = if full { 64 } else { 16 };
+    let d = 32;
+
+    println!(
+        "loopback round-trip, host emulation, d={d}, {reps} reps \
+         (median µs/req):"
+    );
+    println!(
+        "  {:<14} {:>12} {:>14} {:>10}",
+        "graph", "inline", "fingerprint", "csr bytes"
+    );
+    for &n in &[256usize, 1024, 4096] {
+        let g = generators::erdos_renyi(n, 8.0, n as u64).with_self_loops();
+        let mut rng = Rng::new(0x5EED ^ n as u64);
+        let nd = g.n * d;
+        let q = rng.normal_vec(nd, 1.0);
+        let k = rng.normal_vec(nd, 1.0);
+        let v = rng.normal_vec(nd, 1.0);
+
+        // Inline series: a fresh connection per rep, so the client's
+        // known-set is empty and the CSR travels every time.
+        let mut inline_us = Vec::with_capacity(reps);
+        for r in 0..reps {
+            let mut client = match NetClient::connect(addr, "") {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("connect failed: {e}");
+                    server.shutdown();
+                    coord.shutdown();
+                    return;
+                }
+            };
+            let req = WireRequest::single_head(
+                r as u64,
+                &g,
+                d,
+                &q,
+                &k,
+                &v,
+                0.125,
+                Backend::CpuCsr,
+            );
+            let t0 = Instant::now();
+            let ok = client.submit(&req).map(|r| r.result.is_ok());
+            inline_us.push(t0.elapsed().as_secs_f64() * 1e6);
+            client.close();
+            if !matches!(ok, Ok(true)) {
+                eprintln!("inline submit failed on {n}-node graph");
+                server.shutdown();
+                coord.shutdown();
+                return;
+            }
+        }
+
+        // Fingerprint series: one connection, warm the store with one
+        // submit, then time the reference-only repeats.
+        let mut client = NetClient::connect(addr, "").expect("connect");
+        let warm = WireRequest::single_head(
+            u64::MAX,
+            &g,
+            d,
+            &q,
+            &k,
+            &v,
+            0.125,
+            Backend::CpuCsr,
+        );
+        let _ = client.submit(&warm);
+        let mut fp_us = Vec::with_capacity(reps);
+        for r in 0..reps {
+            let req = WireRequest::single_head(
+                r as u64,
+                &g,
+                d,
+                &q,
+                &k,
+                &v,
+                0.125,
+                Backend::CpuCsr,
+            );
+            let t0 = Instant::now();
+            let _ = client.submit(&req);
+            fp_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        client.close();
+
+        inline_us.sort_by(|a, b| a.total_cmp(b));
+        fp_us.sort_by(|a, b| a.total_cmp(b));
+        println!(
+            "  n={:<12} {:>10.1}us {:>12.1}us {:>10}",
+            n,
+            inline_us[inline_us.len() / 2],
+            fp_us[fp_us.len() / 2],
+            csr_wire_bytes(&g)
+        );
+    }
+    println!();
+    println!("{}", coord.metrics().report());
+    server.shutdown();
+    coord.shutdown();
+}

@@ -274,6 +274,109 @@ impl ShardingCounters {
     }
 }
 
+/// Counters for the network serving layer (`crate::net`): connection and
+/// session lifecycle, the fingerprint handshake's upload/reuse split, and
+/// raw wire volume.  Sessions update these through the coordinator's
+/// shared [`Metrics`], so `report()` shows the wire front end and the
+/// batching core side by side.
+#[derive(Default)]
+pub struct NetCounters {
+    connections: AtomicU64,
+    auth_failures: AtomicU64,
+    protocol_errors: AtomicU64,
+    requests: AtomicU64,
+    graph_uploads: AtomicU64,
+    graph_reuses: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl NetCounters {
+    /// A connection was accepted (pre-handshake).
+    pub fn connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A handshake presented a bad or missing auth token.
+    pub fn auth_failure(&self) {
+        self.auth_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A session hit a framing/decode violation and closed.
+    pub fn protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submit was admitted into the coordinator from the wire.
+    pub fn request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submit carried its CSR inline (uploaded topology bytes).
+    pub fn graph_upload(&self) {
+        self.graph_uploads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submit resolved by fingerprint against the resident graph store.
+    pub fn graph_reuse(&self) {
+        self.graph_reuses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` frame bytes read off a socket (header included).
+    pub fn read(&self, n: u64) {
+        self.bytes_in.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` frame bytes written to a socket (header included).
+    pub fn wrote(&self, n: u64) {
+        self.bytes_out.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    pub fn auth_failures(&self) -> u64 {
+        self.auth_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn protocol_errors(&self) -> u64 {
+        self.protocol_errors.load(Ordering::Relaxed)
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn graph_uploads(&self) -> u64 {
+        self.graph_uploads.load(Ordering::Relaxed)
+    }
+
+    pub fn graph_reuses(&self) -> u64 {
+        self.graph_reuses.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out.load(Ordering::Relaxed)
+    }
+
+    /// Whether any wire traffic has been recorded (gates the report line,
+    /// keeping in-process serving logs byte-identical to previous
+    /// releases).
+    pub fn any(&self) -> bool {
+        self.connections() > 0
+            || self.auth_failures() > 0
+            || self.protocol_errors() > 0
+            || self.requests() > 0
+            || self.bytes_in() > 0
+            || self.bytes_out() > 0
+    }
+}
+
 /// Aggregate serving metrics over a run.
 pub struct Metrics {
     /// End-to-end request latency (admission → response, queueing
@@ -292,6 +395,9 @@ pub struct Metrics {
     /// Failure-recovery counters (panic isolation, retry/fallback ladder,
     /// deadline shedding, quarantine).
     pub faults: FaultCounters,
+    /// Network front-end counters (`crate::net`): sessions, handshake,
+    /// wire volume.
+    pub net: NetCounters,
     started: Instant,
     completed: Mutex<u64>,
     failed: Mutex<u64>,
@@ -307,6 +413,7 @@ impl Default for Metrics {
             planner: PlannerCounters::default(),
             sharding: ShardingCounters::default(),
             faults: FaultCounters::default(),
+            net: NetCounters::default(),
             started: Instant::now(),
             completed: Mutex::new(0),
             failed: Mutex::new(0),
@@ -411,6 +518,23 @@ impl Metrics {
                 f.quarantines(),
             ));
         }
+        // And the net line only appears when the coordinator is fronted by
+        // the TCP serving layer and traffic actually flowed.
+        let n = &self.net;
+        if n.any() {
+            line.push_str(&format!(
+                "  net conns={} requests={} uploads={} reuses={} \
+                 in={}B out={}B auth_fail={} proto_err={}",
+                n.connections(),
+                n.requests(),
+                n.graph_uploads(),
+                n.graph_reuses(),
+                n.bytes_in(),
+                n.bytes_out(),
+                n.auth_failures(),
+                n.protocol_errors(),
+            ));
+        }
         line
     }
 }
@@ -498,6 +622,40 @@ mod tests {
         assert!(
             r.contains(
                 "faults panics=1 retries=2 fallbacks=1 sheds=1 quarantines=1"
+            ),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn net_counters() {
+        let m = Metrics::new();
+        // No wire traffic: the report keeps the old shape.
+        assert!(!m.report().contains("net "));
+        assert!(!m.net.any());
+        m.net.connection();
+        m.net.request();
+        m.net.request();
+        m.net.graph_upload();
+        m.net.graph_reuse();
+        m.net.read(100);
+        m.net.read(50);
+        m.net.wrote(80);
+        m.net.auth_failure();
+        m.net.protocol_error();
+        assert_eq!(m.net.connections(), 1);
+        assert_eq!(m.net.requests(), 2);
+        assert_eq!(m.net.graph_uploads(), 1);
+        assert_eq!(m.net.graph_reuses(), 1);
+        assert_eq!(m.net.bytes_in(), 150);
+        assert_eq!(m.net.bytes_out(), 80);
+        assert_eq!(m.net.auth_failures(), 1);
+        assert_eq!(m.net.protocol_errors(), 1);
+        let r = m.report();
+        assert!(
+            r.contains(
+                "net conns=1 requests=2 uploads=1 reuses=1 in=150B \
+                 out=80B auth_fail=1 proto_err=1"
             ),
             "{r}"
         );

@@ -55,7 +55,7 @@ pub mod server;
 
 pub use cache::DriverCache;
 pub use metrics::{
-    BatchingCounters, FaultCounters, LatencyRecorder, Metrics,
+    BatchingCounters, FaultCounters, LatencyRecorder, Metrics, NetCounters,
     PlannerCounters, ShardingCounters,
 };
 pub use recover::Quarantine;

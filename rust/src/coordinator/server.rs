@@ -446,6 +446,12 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// A shared handle to the same metrics, for front ends (the network
+    /// serving layer) that outlive any one borrow of the coordinator.
+    pub fn metrics_arc(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
     /// The adaptive planner behind [`Backend::Auto`] routing — exposes the
     /// current cost-model calibration
     /// ([`Planner::snapshot`](crate::planner::Planner::snapshot)) and

@@ -15,9 +15,11 @@
 //! | §3.5 stability                     | [`stability`] | `stability` |
 //!
 //! Beyond the paper, [`planner`] (`repro plan`) audits the adaptive
-//! backend planner's per-dataset decisions (EXPERIMENTS.md §Planner), and
+//! backend planner's per-dataset decisions (EXPERIMENTS.md §Planner),
 //! [`shard`] (`repro shard`) audits the partition-parallel layer's cuts
-//! (EXPERIMENTS.md §Sharding).
+//! (EXPERIMENTS.md §Sharding), and [`serve_load`] (`repro serve`) drives
+//! the TCP serving layer with a multi-connection loadgen
+//! (EXPERIMENTS.md §Serving).
 
 pub mod ablations;
 pub mod fig5;
@@ -25,6 +27,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod planner;
 pub mod report;
+pub mod serve_load;
 pub mod shard;
 pub mod stability;
 pub mod table3;

@@ -1,0 +1,264 @@
+//! Wire-serving loadgen (EXPERIMENTS.md §Serving): N concurrent TCP
+//! clients × R requests over G shared graphs against a loopback
+//! [`NetServer`](crate::net::NetServer), measuring throughput and the
+//! fingerprint handshake's upload savings.
+//!
+//! Each client cycles through the shared graph set with fresh features
+//! per request, so after the first pass every submit travels as a bare
+//! fingerprint reference — the steady state the handshake exists for.
+//! The report pairs client-side [`ClientStats`] (uploads vs. skips,
+//! actual vs. naive CSR bytes) with the server's `Metrics` (net counters
+//! + `DriverCache` hits), tying the wire optimization to the
+//! preprocessing cache it fronts.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::graph::{generators, CsrGraph};
+use crate::kernels::Backend;
+use crate::net::{ClientStats, NetClient, NetConfig, NetServer, WireRequest};
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+
+use super::report::Table;
+
+/// Workload shape for one loadgen run.
+#[derive(Clone)]
+pub struct LoadSpec {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Requests each client submits.
+    pub requests_per_client: usize,
+    /// Distinct graphs shared by every client (cycled round-robin).
+    pub graphs: usize,
+    /// Feature dim (single-head, dv = d).
+    pub d: usize,
+    pub backend: Backend,
+    pub seed: u64,
+    /// Auth token presented by every client; `""` for an open server.
+    pub token: String,
+}
+
+impl Default for LoadSpec {
+    fn default() -> LoadSpec {
+        LoadSpec {
+            clients: 4,
+            requests_per_client: 16,
+            graphs: 4,
+            d: 32,
+            backend: Backend::Auto,
+            seed: 0x5E12_F00D,
+            token: String::new(),
+        }
+    }
+}
+
+struct ClientOutcome {
+    ok: u64,
+    failed: u64,
+    stats: ClientStats,
+}
+
+/// Run the loadgen against a coordinator started from `coord_cfg` and a
+/// listener from `net_cfg`, print the tables, and return the JSON report
+/// (the caller decides where to write it).
+pub fn run(
+    coord_cfg: CoordinatorConfig,
+    net_cfg: NetConfig,
+    spec: &LoadSpec,
+) -> Result<Json> {
+    let coord = Arc::new(Coordinator::start(coord_cfg)?);
+    let server = NetServer::serve(coord.clone(), net_cfg)
+        .context("starting loopback listener")?;
+    let addr = server.local_addr();
+
+    let mut rng = Rng::new(spec.seed);
+    let graphs: Arc<Vec<CsrGraph>> = Arc::new(
+        (0..spec.graphs.max(1))
+            .map(|i| {
+                let n = rng.range(64, 512);
+                let deg = 2.0 + rng.f64() * 6.0;
+                generators::erdos_renyi(n, deg, spec.seed ^ i as u64)
+                    .with_self_loops()
+            })
+            .collect(),
+    );
+    println!(
+        "serving on {addr}: {} clients x {} requests over {} graphs \
+         (d={}, backend={})",
+        spec.clients,
+        spec.requests_per_client,
+        graphs.len(),
+        spec.d,
+        spec.backend.name()
+    );
+
+    let t0 = Instant::now();
+    let (out_tx, out_rx) = channel::<ClientOutcome>();
+    let mut workers = Vec::new();
+    for c in 0..spec.clients.max(1) {
+        let graphs = graphs.clone();
+        let spec = spec.clone();
+        let out_tx = out_tx.clone();
+        workers.push(std::thread::spawn(move || {
+            let outcome = drive_client(addr, &graphs, &spec, c as u64);
+            let _ = out_tx.send(outcome);
+        }));
+    }
+    drop(out_tx);
+
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    let mut stats = ClientStats::default();
+    while let Ok(o) = out_rx.recv() {
+        ok += o.ok;
+        failed += o.failed;
+        stats.requests += o.stats.requests;
+        stats.graph_uploads += o.stats.graph_uploads;
+        stats.upload_skips += o.stats.upload_skips;
+        stats.graph_bytes_uploaded += o.stats.graph_bytes_uploaded;
+        stats.graph_bytes_naive += o.stats.graph_bytes_naive;
+        stats.bytes_sent += o.stats.bytes_sent;
+        stats.bytes_received += o.stats.bytes_received;
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let total = (spec.clients.max(1) * spec.requests_per_client) as u64;
+    let rps = if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 };
+    let savings = if stats.graph_bytes_naive > 0 {
+        1.0 - stats.graph_bytes_uploaded as f64 / stats.graph_bytes_naive as f64
+    } else {
+        0.0
+    };
+
+    let m = coord.metrics();
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["requests ok".into(), format!("{ok}/{total}")]);
+    t.row(vec!["wall".into(), format!("{wall_s:.2}s")]);
+    t.row(vec!["throughput".into(), format!("{rps:.1} req/s")]);
+    t.row(vec![
+        "graph uploads / skips".into(),
+        format!("{} / {}", stats.graph_uploads, stats.upload_skips),
+    ]);
+    t.row(vec![
+        "CSR bytes uploaded".into(),
+        format!(
+            "{} (naive {}, saved {:.0}%)",
+            stats.graph_bytes_uploaded,
+            stats.graph_bytes_naive,
+            savings * 100.0
+        ),
+    ]);
+    t.row(vec![
+        "wire bytes sent / received".into(),
+        format!("{} / {}", stats.bytes_sent, stats.bytes_received),
+    ]);
+    t.row(vec![
+        "server bsb-cache hit / miss".into(),
+        format!("{} / {}", m.batching.cache_hits(), m.batching.cache_misses()),
+    ]);
+    t.print();
+    println!("{}", m.report());
+
+    let j = json::obj(vec![
+        ("clients", json::num(spec.clients as f64)),
+        ("requests_per_client", json::num(spec.requests_per_client as f64)),
+        ("graphs", json::num(graphs.len() as f64)),
+        ("d", json::num(spec.d as f64)),
+        ("backend", json::s(spec.backend.name())),
+        ("ok", json::num(ok as f64)),
+        ("failed", json::num(failed as f64)),
+        ("wall_s", json::num(wall_s)),
+        ("throughput_rps", json::num(rps)),
+        ("graph_uploads", json::num(stats.graph_uploads as f64)),
+        ("upload_skips", json::num(stats.upload_skips as f64)),
+        (
+            "graph_bytes_uploaded",
+            json::num(stats.graph_bytes_uploaded as f64),
+        ),
+        ("graph_bytes_naive", json::num(stats.graph_bytes_naive as f64)),
+        ("upload_savings_ratio", json::num(savings)),
+        ("bytes_sent", json::num(stats.bytes_sent as f64)),
+        ("bytes_received", json::num(stats.bytes_received as f64)),
+        (
+            "server",
+            json::obj(vec![
+                ("connections", json::num(m.net.connections() as f64)),
+                ("net_requests", json::num(m.net.requests() as f64)),
+                ("graph_uploads", json::num(m.net.graph_uploads() as f64)),
+                ("graph_reuses", json::num(m.net.graph_reuses() as f64)),
+                ("bytes_in", json::num(m.net.bytes_in() as f64)),
+                ("bytes_out", json::num(m.net.bytes_out() as f64)),
+                ("cache_hits", json::num(m.batching.cache_hits() as f64)),
+                ("cache_misses", json::num(m.batching.cache_misses() as f64)),
+            ]),
+        ),
+    ]);
+
+    server.shutdown();
+    coord.shutdown();
+    Ok(j)
+}
+
+/// One client thread's life: connect, cycle graphs, submit, tally.
+fn drive_client(
+    addr: std::net::SocketAddr,
+    graphs: &[CsrGraph],
+    spec: &LoadSpec,
+    client_id: u64,
+) -> ClientOutcome {
+    let mut rng = Rng::new(spec.seed ^ (client_id.wrapping_mul(0x9E37_79B9)));
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    let mut client = match NetClient::connect(addr, &spec.token) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("client {client_id}: connect failed: {e}");
+            return ClientOutcome {
+                ok: 0,
+                failed: spec.requests_per_client as u64,
+                stats: ClientStats::default(),
+            };
+        }
+    };
+    for r in 0..spec.requests_per_client {
+        let g = &graphs[(client_id as usize + r) % graphs.len()];
+        let nd = g.n * spec.d;
+        let q = rng.normal_vec(nd, 1.0);
+        let k = rng.normal_vec(nd, 1.0);
+        let v = rng.normal_vec(nd, 1.0);
+        let req = WireRequest::single_head(
+            client_id << 32 | r as u64,
+            g,
+            spec.d,
+            &q,
+            &k,
+            &v,
+            1.0 / (spec.d as f32).sqrt(),
+            spec.backend,
+        );
+        match client.submit(&req) {
+            Ok(resp) if resp.result.is_ok() => ok += 1,
+            Ok(_) | Err(_) => failed += 1,
+        }
+    }
+    let stats = client.stats();
+    client.close();
+    ClientOutcome { ok, failed, stats }
+}
+
+/// Convenience used by tests and the report: upload savings implied by a
+/// stats aggregate.
+pub fn savings_ratio(stats: &ClientStats) -> f64 {
+    if stats.graph_bytes_naive == 0 {
+        return 0.0;
+    }
+    1.0 - stats.graph_bytes_uploaded as f64 / stats.graph_bytes_naive as f64
+}

@@ -66,6 +66,12 @@
 //!   (d, dv, heads, scale, resolved backend), fingerprint-keyed plan
 //!   cache, sharded routing of graphs above `max_plan_nodes`, request
 //!   server, metrics.
+//! * [`net`] — the network serving layer in front of the coordinator:
+//!   versioned length-prefixed binary wire protocol, threaded TCP
+//!   listener whose per-session flow control composes with the bounded
+//!   ingress queue, fingerprint handshake against a shared graph store,
+//!   and the blocking client library (DESIGN.md §13,
+//!   EXPERIMENTS.md §Serving).
 //! * [`model`] — Graph Transformer / GAT / AGNN inference runtimes; the GT
 //!   issues one multi-head `AttentionBatch` call per layer.
 //! * [`simulator`] — the SM active-time scheduling simulator (Fig. 7).
@@ -79,6 +85,7 @@ pub mod fault;
 pub mod graph;
 pub mod kernels;
 pub mod model;
+pub mod net;
 pub mod planner;
 pub mod runtime;
 pub mod shard;

@@ -16,7 +16,9 @@
 //! repro shard  [--datasets a,b,c] [--shards 2,4,8]  # sharding audit
 //! repro datasets            # list the calibrated suite
 //! repro infer  --dataset X --d 64 --blocks 10 [--backend fused3s|auto]
-//! repro serve  --requests 64 [--workers 2]   # serving-loop demo
+//! repro serve  [--clients 4] [--requests 16] [--graphs 4] [--host]
+//!              [--token T]             # TCP loopback loadgen (DESIGN.md §13)
+//! repro serve  --listen ADDR [--host] [--token T]   # serve-only mode
 //! ```
 //!
 //! Results print as aligned tables and are mirrored to `results/*.json`.
@@ -265,56 +267,82 @@ fn infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro serve` — the TCP serving layer (DESIGN.md §13).
+///
+/// Two modes:
+///
+/// * default: loopback loadgen — starts a coordinator + listener in this
+///   process, drives it with `--clients` concurrent wire clients, and
+///   reports throughput + the fingerprint handshake's upload savings.
+/// * `--listen ADDR`: serve-only — binds `ADDR` and serves until stdin
+///   reaches EOF (`repro serve --listen 127.0.0.1:7433 < /dev/null` for a
+///   bind check; pipe nothing to keep it up), then drains gracefully.
 fn serve(args: &Args) -> Result<()> {
-    use fused3s::coordinator::{AttnRequest, Coordinator, CoordinatorConfig};
-    use fused3s::util::prng::Rng;
-    use std::sync::mpsc::channel;
+    use fused3s::coordinator::{Coordinator, CoordinatorConfig, ExecutorKind};
+    use fused3s::experiments::serve_load::{self, LoadSpec};
+    use fused3s::net::{NetConfig, NetServer};
+    use std::sync::Arc;
 
-    let requests = args.usize_or("requests", 32)?;
-    let workers = args.usize_or("workers", 2)?;
-    let d = args.usize_or("d", 64)?;
-    let coord = Coordinator::start(CoordinatorConfig {
-        preprocess_workers: workers,
+    let mut coord_cfg = CoordinatorConfig {
+        preprocess_workers: args.usize_or("workers", 2)?,
         ..CoordinatorConfig::default()
-    })?;
-    println!("coordinator up ({workers} preprocess workers); submitting {requests} requests");
-    let mut rng = Rng::new(0x5E12);
-    let (tx, rx) = channel();
-    for i in 0..requests {
-        let n = rng.range(64, 1024);
-        let deg = 2.0 + rng.f64() * 8.0;
-        let g = fused3s::graph::generators::erdos_renyi(n, deg, i as u64)
-            .with_self_loops();
-        let nd = g.n * d;
-        coord.submit(AttnRequest::single_head(
-            i as u64,
-            g,
-            d,
-            rng.normal_vec(nd, 1.0),
-            rng.normal_vec(nd, 1.0),
-            rng.normal_vec(nd, 1.0),
-            1.0 / (d as f32).sqrt(),
-            Backend::Fused3S,
-            tx.clone(),
-        ))?;
+    };
+    // --host runs the kernels through the offline host emulation, so the
+    // serving path is drivable with no AOT artifacts (tests do the same).
+    if args.bool("host") {
+        coord_cfg.executor = ExecutorKind::HostEmulation;
     }
-    drop(tx);
-    let mut ok = 0;
-    while let Ok(resp) = rx.recv() {
-        if resp.result.is_ok() {
-            ok += 1;
-        }
+    let token = args.get_or("token", "");
+    let auth_tokens = if token.is_empty() {
+        Vec::new()
+    } else {
+        vec![token.clone()]
+    };
+
+    if let Some(addr) = args.get("listen") {
+        let coord = Arc::new(Coordinator::start(coord_cfg)?);
+        let server = NetServer::serve(
+            coord.clone(),
+            NetConfig {
+                addr: addr.to_string(),
+                auth_tokens,
+                ..NetConfig::default()
+            },
+        )?;
+        println!(
+            "serving on {} ({}); EOF on stdin shuts down",
+            server.local_addr(),
+            if token.is_empty() { "open" } else { "token auth" }
+        );
+        // Block until the operator closes stdin (^D or the pipe ends).
+        let mut sink = String::new();
+        let _ = std::io::Read::read_to_string(
+            &mut std::io::stdin().lock(),
+            &mut sink,
+        );
+        println!("stdin closed; draining");
+        server.shutdown();
+        coord.shutdown();
+        println!("{}", coord.metrics().report());
+        return Ok(());
     }
-    println!("{ok}/{requests} succeeded");
-    println!("{}", coord.metrics().report());
-    let prep = coord.metrics().preprocess.snapshot();
-    let exec = coord.metrics().execute.snapshot();
-    println!(
-        "preprocess p50={:.2}ms  execute p50={:.2}ms",
-        prep.p50_s * 1e3,
-        exec.p50_s * 1e3
-    );
-    coord.shutdown();
+
+    let spec = LoadSpec {
+        clients: args.usize_or("clients", 4)?,
+        requests_per_client: args.usize_or("requests", 16)?,
+        graphs: args.usize_or("graphs", 4)?,
+        d: args.usize_or("d", 32)?,
+        backend: Backend::parse(&args.get_or("backend", "auto"))?,
+        seed: args.u64_or("seed", 0x5E12_F00D)?,
+        token: token.clone(),
+    };
+    let j = serve_load::run(
+        coord_cfg,
+        NetConfig { auth_tokens, ..NetConfig::default() },
+        &spec,
+    )?;
+    let p = report::write_json("serve", &j)?;
+    println!("\nwrote {}", p.display());
     Ok(())
 }
 
@@ -325,6 +353,8 @@ fn print_usage() {
          datasets | table3 | table6 | table7 | fig5 | fig6 | fig7 | fig8 |\n  \
          ablate-split | ablate-reorder | ablate-compaction | ablate-buckets |\n  \
          stability | plan | shard | infer | serve\n\
-         common flags: --datasets a,b,c  --d 64  --quick  --backends x,y"
+         common flags: --datasets a,b,c  --d 64  --quick  --backends x,y\n\
+         serve: loopback loadgen by default (--clients N --requests R \
+         --graphs G --host --token T); --listen ADDR for serve-only"
     );
 }

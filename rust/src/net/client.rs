@@ -1,0 +1,365 @@
+//! Blocking client for the wire protocol — the library behind
+//! `repro serve`'s loadgen, `examples/serve.rs`, and the loopback
+//! differential suite.
+//!
+//! One [`NetClient`] owns one connection and submits one request at a
+//! time ([`NetClient::submit`] blocks until the response arrives); run
+//! several clients on threads for concurrency, exactly like in-process
+//! submitters.  The client drives the fingerprint handshake
+//! transparently: before the first submit of a graph it asks the server
+//! ([`Msg::GraphQuery`]) whether the fingerprint is resident, uploads the
+//! CSR inline only on a miss, and remembers server-known fingerprints so
+//! repeat graphs travel as 16 bytes of reference instead of the full
+//! topology.  [`ClientStats`] counts both sides of that bargain
+//! (uploads vs. skips, bytes up vs. down) — the loadgen's
+//! upload-savings evidence.
+
+use std::collections::HashSet;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::graph::CsrGraph;
+use crate::kernels::{AttnError, Backend};
+
+use super::frame::{
+    read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME_BYTES,
+};
+use super::proto::{
+    self, csr_wire_bytes, GraphRef, Msg, ResponseMsg, SubmitMsg,
+    CODE_GRAPH_UNKNOWN, CODE_PROTOCOL, VERSION,
+};
+
+/// Client-side transport failure (errors the *request* itself produced
+/// come back inside [`WireResponse::result`] instead).
+#[derive(Debug)]
+pub enum NetError {
+    /// Socket-level failure (connect, read, write, mid-stream close).
+    Io(String),
+    /// The server sent something outside the protocol, or flagged our
+    /// traffic as a protocol violation.
+    Protocol(String),
+    /// The server refused the handshake (auth or version).
+    Rejected(String),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io(m) => write!(f, "transport error: {m}"),
+            NetError::Protocol(m) => write!(f, "protocol error: {m}"),
+            NetError::Rejected(m) => write!(f, "handshake rejected: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<FrameError> for NetError {
+    fn from(e: FrameError) -> NetError {
+        match e {
+            FrameError::Io(io) => NetError::Io(io.to_string()),
+            other => NetError::Io(other.to_string()),
+        }
+    }
+}
+
+/// Counters over one connection's lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientStats {
+    /// `submit` calls completed (any outcome).
+    pub requests: u64,
+    /// Submits that carried the CSR inline.
+    pub graph_uploads: u64,
+    /// Submits that rode a fingerprint reference instead of re-uploading.
+    pub upload_skips: u64,
+    /// CSR bytes actually uploaded (inline submits only).
+    pub graph_bytes_uploaded: u64,
+    /// CSR bytes a handshake-less protocol would have uploaded (every
+    /// submit inline) — the denominator of the savings ratio.
+    pub graph_bytes_naive: u64,
+    /// Total frame bytes written / read (headers included).
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+/// One attention request, borrowed from the caller's buffers (the wire
+/// image of [`AttnRequest`](crate::coordinator::AttnRequest)).
+pub struct WireRequest<'a> {
+    pub id: u64,
+    pub graph: &'a CsrGraph,
+    pub d: usize,
+    pub dv: usize,
+    pub heads: usize,
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub scale: f32,
+    pub backend: Backend,
+    /// Server-side deadline measured from admission (micros resolution on
+    /// the wire; sub-microsecond values round to none).
+    pub deadline: Option<Duration>,
+}
+
+impl<'a> WireRequest<'a> {
+    /// Single-head `dv = d` request — the common shape, mirroring
+    /// [`AttnRequest::single_head`](crate::coordinator::AttnRequest::single_head).
+    #[allow(clippy::too_many_arguments)]
+    pub fn single_head(
+        id: u64,
+        graph: &'a CsrGraph,
+        d: usize,
+        q: &'a [f32],
+        k: &'a [f32],
+        v: &'a [f32],
+        scale: f32,
+        backend: Backend,
+    ) -> WireRequest<'a> {
+        WireRequest {
+            id,
+            graph,
+            d,
+            dv: d,
+            heads: 1,
+            q,
+            k,
+            v,
+            scale,
+            backend,
+            deadline: None,
+        }
+    }
+}
+
+/// A served response, lifted back to in-process types.
+pub struct WireResponse {
+    pub id: u64,
+    pub result: Result<Vec<f32>, AttnError>,
+    pub latency_s: f64,
+    pub preprocess_s: f64,
+    pub execute_s: f64,
+    pub batch_size: usize,
+    /// Backend that served the request (parsed from the wire name; `None`
+    /// when the request failed before execution or the name is unknown).
+    pub backend: Option<Backend>,
+}
+
+/// One blocking connection to a [`NetServer`](super::NetServer).
+pub struct NetClient {
+    stream: TcpStream,
+    /// Fingerprints the server is known to hold (populated by
+    /// `GraphStatus` answers and our own inline uploads).
+    known: HashSet<u64>,
+    stats: ClientStats,
+    max_frame: usize,
+    /// The per-session in-flight quota the server granted at handshake.
+    pub server_max_inflight: usize,
+}
+
+impl NetClient {
+    /// Connect + handshake.  `token` is ignored by open servers; pass
+    /// `""` there.
+    pub fn connect(
+        addr: impl ToSocketAddrs,
+        token: &str,
+    ) -> Result<NetClient, NetError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| NetError::Io(format!("connect: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let mut client = NetClient {
+            stream,
+            known: HashSet::new(),
+            stats: ClientStats::default(),
+            max_frame: DEFAULT_MAX_FRAME_BYTES,
+            server_max_inflight: 0,
+        };
+        client.send(&Msg::ClientHello {
+            version: VERSION,
+            token: token.to_string(),
+        })?;
+        match client.recv()? {
+            Msg::ServerHello { ok: true, max_inflight, .. } => {
+                client.server_max_inflight = max_inflight as usize;
+                Ok(client)
+            }
+            Msg::ServerHello { ok: false, detail, .. } => {
+                Err(NetError::Rejected(detail))
+            }
+            _ => Err(NetError::Protocol("expected server hello".into())),
+        }
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> ClientStats {
+        self.stats
+    }
+
+    /// Submit one request and block for its response.  Drives the
+    /// fingerprint handshake: query-once per new graph, upload inline
+    /// only on a miss, retry inline exactly once if the server evicted
+    /// the graph between our query and the submit.
+    pub fn submit(
+        &mut self,
+        req: &WireRequest<'_>,
+    ) -> Result<WireResponse, NetError> {
+        let fp = req.graph.fingerprint();
+        if !self.known.contains(&fp) {
+            self.send(&Msg::GraphQuery { fp })?;
+            match self.recv()? {
+                Msg::GraphStatus { fp: rfp, known } if rfp == fp => {
+                    if known {
+                        self.known.insert(fp);
+                    }
+                }
+                _ => {
+                    return Err(NetError::Protocol(
+                        "expected graph status".into(),
+                    ))
+                }
+            }
+        }
+        let inline = !self.known.contains(&fp);
+        match self.submit_once(req, fp, inline)? {
+            Outcome::Done(resp) => Ok(resp),
+            Outcome::GraphUnknown => {
+                // The store evicted the graph after our query (or a
+                // collision cross-check fired): re-upload inline, once.
+                self.known.remove(&fp);
+                match self.submit_once(req, fp, true)? {
+                    Outcome::Done(resp) => Ok(resp),
+                    Outcome::GraphUnknown => Err(NetError::Protocol(
+                        "server rejected an inline graph as unknown".into(),
+                    )),
+                }
+            }
+        }
+    }
+
+    /// Clean close: best-effort goodbye, then both halves down.
+    pub fn close(self) {
+        let bytes = Msg::Goodbye.encode();
+        let mut sock = &self.stream;
+        let _ = write_frame(&mut sock, &bytes, self.max_frame);
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    fn submit_once(
+        &mut self,
+        req: &WireRequest<'_>,
+        fp: u64,
+        inline: bool,
+    ) -> Result<Outcome, NetError> {
+        let graph = if inline {
+            GraphRef::Inline(req.graph.clone())
+        } else {
+            GraphRef::Fingerprint {
+                fp,
+                n: req.graph.n as u32,
+                nnz: req.graph.nnz() as u32,
+            }
+        };
+        let msg = Msg::Submit(SubmitMsg {
+            id: req.id,
+            graph,
+            d: req.d as u32,
+            dv: req.dv as u32,
+            heads: req.heads as u32,
+            scale: req.scale,
+            backend: req.backend.name().to_string(),
+            deadline_micros: req
+                .deadline
+                .map(|d| d.as_micros().min(u64::MAX as u128) as u64)
+                .unwrap_or(0),
+            q: req.q.to_vec(),
+            k: req.k.to_vec(),
+            v: req.v.to_vec(),
+        });
+        self.send(&msg)?;
+        let graph_bytes = csr_wire_bytes(req.graph);
+        self.stats.graph_bytes_naive += graph_bytes;
+        if inline {
+            self.stats.graph_uploads += 1;
+            self.stats.graph_bytes_uploaded += graph_bytes;
+        } else {
+            self.stats.upload_skips += 1;
+        }
+        let resp = match self.recv()? {
+            Msg::Response(r) => r,
+            _ => return Err(NetError::Protocol("expected response".into())),
+        };
+        if let Err((code, _)) = &resp.payload {
+            if *code == CODE_GRAPH_UNKNOWN {
+                return Ok(Outcome::GraphUnknown);
+            }
+        }
+        if resp.id != req.id {
+            return Err(NetError::Protocol(format!(
+                "response id {} for request {}",
+                resp.id, req.id
+            )));
+        }
+        if inline {
+            // The server now holds the graph under its fingerprint.
+            self.known.insert(fp);
+        }
+        self.stats.requests += 1;
+        Ok(Outcome::Done(from_wire_response(resp)?))
+    }
+
+    fn send(&mut self, msg: &Msg) -> Result<(), NetError> {
+        let bytes = msg.encode();
+        let mut sock = &self.stream;
+        write_frame(&mut sock, &bytes, self.max_frame)?;
+        self.stats.bytes_sent += 8 + bytes.len() as u64;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Msg, NetError> {
+        let mut sock = &self.stream;
+        let payload = read_frame(&mut sock, self.max_frame)?;
+        self.stats.bytes_received += 8 + payload.len() as u64;
+        Msg::decode(&payload)
+            .map_err(|e| NetError::Protocol(e.to_string()))
+    }
+}
+
+enum Outcome {
+    Done(WireResponse),
+    GraphUnknown,
+}
+
+fn from_wire_response(r: ResponseMsg) -> Result<WireResponse, NetError> {
+    match r.payload {
+        Ok(ok) => Ok(WireResponse {
+            id: r.id,
+            backend: if ok.backend.is_empty() {
+                None
+            } else {
+                Backend::parse(&ok.backend).ok()
+            },
+            result: Ok(ok.out),
+            latency_s: ok.latency_s,
+            preprocess_s: ok.preprocess_s,
+            execute_s: ok.execute_s,
+            batch_size: ok.batch_size as usize,
+        }),
+        Err((code, msg)) => {
+            if code == CODE_PROTOCOL {
+                return Err(NetError::Protocol(msg));
+            }
+            match proto::decode_attn_error(code, msg) {
+                Some(e) => Ok(WireResponse {
+                    id: r.id,
+                    result: Err(e),
+                    latency_s: 0.0,
+                    preprocess_s: 0.0,
+                    execute_s: 0.0,
+                    batch_size: 0,
+                    backend: None,
+                }),
+                None => Err(NetError::Protocol(format!(
+                    "unknown error code {code}"
+                ))),
+            }
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Length-prefixed framing over a byte stream.
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//! ┌────────────┬────────────┬───────────────────────┐
+//! │ magic u32  │ len u32    │ payload (len bytes)   │   all little-endian
+//! └────────────┴────────────┴───────────────────────┘
+//! ```
+//!
+//! The magic word rejects non-protocol peers (a browser, a port scanner)
+//! on the first 4 bytes; the length is validated against the session's
+//! `max_frame_bytes` *before* the payload buffer is allocated, so an
+//! absurd or hostile length prefix costs a structured
+//! [`FrameError::Oversize`], never memory.  A clean EOF exactly at a
+//! frame boundary is the normal end-of-stream ([`FrameError::Closed`]);
+//! EOF anywhere inside a frame is [`FrameError::Truncated`].
+
+use std::io::{ErrorKind, Read, Write};
+
+/// Frame magic: ASCII `F3SN` (Fused3S Net), little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"F3SN");
+
+/// Default per-frame payload cap (256 MiB — a 1M-node graph with d=64
+/// three-tensor features fits comfortably; sessions can lower it).
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// Transport-level failure while reading or writing one frame.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean EOF at a frame boundary — the peer hung up between messages.
+    Closed,
+    /// EOF inside a header or payload — the peer died mid-frame.
+    Truncated,
+    /// The first 4 bytes were not the protocol magic.
+    BadMagic(u32),
+    /// Declared payload length exceeds the session's cap.
+    Oversize { len: usize, max: usize },
+    /// Underlying socket error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed => f.write_str("connection closed"),
+            FrameError::Truncated => f.write_str("EOF inside a frame"),
+            FrameError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:#010x} (expected {MAGIC:#010x})")
+            }
+            FrameError::Oversize { len, max } => {
+                write!(f, "frame payload {len} bytes exceeds cap {max}")
+            }
+            FrameError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Write one frame (header + payload) and flush it.
+pub fn write_frame(
+    w: &mut impl Write,
+    payload: &[u8],
+    max: usize,
+) -> Result<(), FrameError> {
+    if payload.len() > max {
+        return Err(FrameError::Oversize { len: payload.len(), max });
+    }
+    let mut header = [0u8; 8];
+    header[..4].copy_from_slice(&MAGIC.to_le_bytes());
+    header[4..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header).map_err(FrameError::Io)?;
+    w.write_all(payload).map_err(FrameError::Io)?;
+    w.flush().map_err(FrameError::Io)
+}
+
+/// Read one frame's payload.  Distinguishes a clean close (EOF before any
+/// header byte) from a mid-frame disconnect.
+pub fn read_frame(
+    r: &mut impl Read,
+    max: usize,
+) -> Result<Vec<u8>, FrameError> {
+    let mut header = [0u8; 8];
+    let mut got = 0usize;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    FrameError::Closed
+                } else {
+                    FrameError::Truncated
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let magic = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let len =
+        u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    // Cap check BEFORE allocation: a hostile length prefix must not cost
+    // memory.
+    if len > max {
+        return Err(FrameError::Oversize { len, max });
+    }
+    let mut payload = vec![0u8; len];
+    match r.read_exact(&mut payload) {
+        Ok(()) => Ok(payload),
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => {
+            Err(FrameError::Truncated)
+        }
+        Err(e) => Err(FrameError::Io(e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello", 1024).unwrap();
+        write_frame(&mut buf, b"", 1024).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_frame(&mut c, 1024).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut c, 1024).unwrap(), b"");
+        assert!(matches!(read_frame(&mut c, 1024), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn bad_magic() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0xDEADBEEFu32.to_le_bytes());
+        buf.extend_from_slice(&4u32.to_le_bytes());
+        buf.extend_from_slice(b"oops");
+        let mut c = Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut c, 1024),
+            Err(FrameError::BadMagic(0xDEADBEEF))
+        ));
+    }
+
+    #[test]
+    fn oversize_rejected_before_alloc() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut c = Cursor::new(buf);
+        match read_frame(&mut c, 1024) {
+            Err(FrameError::Oversize { len, max }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(max, 1024);
+            }
+            other => panic!("expected Oversize, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn writer_respects_cap() {
+        let mut buf = Vec::new();
+        assert!(matches!(
+            write_frame(&mut buf, &[0u8; 64], 16),
+            Err(FrameError::Oversize { .. })
+        ));
+        assert!(buf.is_empty(), "nothing written after a cap refusal");
+    }
+
+    #[test]
+    fn truncated_header_and_payload() {
+        // 3 header bytes then EOF.
+        let mut c = Cursor::new(MAGIC.to_le_bytes()[..3].to_vec());
+        assert!(matches!(read_frame(&mut c, 64), Err(FrameError::Truncated)));
+        // Full header declaring 100 bytes, only 10 present.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.extend_from_slice(&[7u8; 10]);
+        let mut c = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut c, 1024), Err(FrameError::Truncated)));
+    }
+}

@@ -1,0 +1,210 @@
+//! The threaded TCP listener: accept loop + session lifecycle + graceful
+//! drain.
+//!
+//! [`NetServer::serve`] binds, spawns one accept thread, and hands each
+//! connection to a session thread ([`super::session`]).  Sessions feed
+//! the coordinator's bounded ingress directly — a blocked
+//! `Coordinator::submit` (backpressure) blocks that session's reader,
+//! which stops reading from its socket, which fills the kernel's TCP
+//! window, which blocks the client's writer: the in-process bounded-queue
+//! contract becomes end-to-end connection-level flow control with no
+//! extra buffering anywhere.
+//!
+//! [`NetServer::shutdown`] drains rather than drops: it stops accepting,
+//! then half-closes each session's *read* side only — in-flight requests
+//! keep their reply channels, the coordinator answers them through the
+//! batcher's normal drain path, and each session's forwarder flushes
+//! those responses to the socket before the connection closes.  The
+//! coordinator itself is NOT shut down here (it may be shared); callers
+//! stop it after the listener.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, Metrics};
+use crate::util::sync::lock_unpoisoned;
+
+use super::frame::DEFAULT_MAX_FRAME_BYTES;
+use super::session;
+use super::store::GraphStore;
+
+/// Listener + session policy.
+#[derive(Clone)]
+pub struct NetConfig {
+    /// Bind address; port 0 picks a free port (see
+    /// [`NetServer::local_addr`]).
+    pub addr: String,
+    /// Accepted auth tokens.  Empty = open server (no auth) — the
+    /// loopback/test default; production deployments list their tenants.
+    pub auth_tokens: Vec<String>,
+    /// Per-session in-flight request quota: a client with this many
+    /// unanswered submits blocks (connection-level flow control layered
+    /// on top of the coordinator's global backpressure).
+    pub max_inflight: usize,
+    /// Per-frame payload cap, enforced before allocation.
+    pub max_frame_bytes: usize,
+    /// LRU capacity of the shared uploaded-graph store (entries).
+    pub graph_capacity: usize,
+    /// How long a fresh connection may take to send its `ClientHello`
+    /// before the session gives up (slowloris guard).
+    pub handshake_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            auth_tokens: Vec::new(),
+            max_inflight: 8,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            graph_capacity: 256,
+            handshake_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// State shared by the accept loop and every session.
+pub(crate) struct Shared {
+    pub coord: Arc<Coordinator>,
+    pub store: GraphStore,
+    pub cfg: NetConfig,
+    pub metrics: Arc<Metrics>,
+    /// Set once by [`NetServer::shutdown`]; sessions poll it so quota
+    /// waiters and accept races unblock promptly.
+    pub closed: AtomicBool,
+}
+
+struct SessionHandle {
+    /// A clone of the session's stream, kept so shutdown can half-close
+    /// the read side from outside the session thread.
+    stream: TcpStream,
+    thread: JoinHandle<()>,
+}
+
+/// A running TCP front end over an `Arc<Coordinator>`.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    sessions: Arc<Mutex<Vec<SessionHandle>>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start serving `coord` over it.
+    pub fn serve(coord: Arc<Coordinator>, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let local_addr =
+            listener.local_addr().context("resolving bound address")?;
+        let metrics = coord.metrics_arc();
+        let shared = Arc::new(Shared {
+            store: GraphStore::new(cfg.graph_capacity),
+            coord,
+            cfg,
+            metrics,
+            closed: AtomicBool::new(false),
+        });
+        let sessions: Arc<Mutex<Vec<SessionHandle>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = shared.clone();
+            let sessions = sessions.clone();
+            std::thread::spawn(move || accept_loop(&listener, shared, sessions))
+        };
+        Ok(NetServer {
+            shared,
+            local_addr,
+            accept: Mutex::new(Some(accept)),
+            sessions,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, drain every live session, join every thread.
+    /// In-flight requests are answered before their connections close
+    /// (the forwarder flushes coordinator responses after the read side
+    /// is cut); idempotent.
+    pub fn shutdown(&self) {
+        if self.shared.closed.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the accept loop: a throwaway connection makes the blocking
+        // accept() return, after which it observes `closed` and exits.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = lock_unpoisoned(&self.accept).take() {
+            let _ = h.join();
+        }
+        let handles: Vec<SessionHandle> =
+            lock_unpoisoned(&self.sessions).drain(..).collect();
+        for h in handles {
+            // Half-close: the session's reader sees EOF and stops taking
+            // new requests; its write side stays open so the forwarder
+            // can still deliver every in-flight response.
+            let _ = h.stream.shutdown(Shutdown::Read);
+            let _ = h.thread.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    shared: Arc<Shared>,
+    sessions: Arc<Mutex<Vec<SessionHandle>>>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if shared.closed.load(Ordering::SeqCst) {
+                    // The shutdown wake-up (or a straggler racing it):
+                    // drop it and stop accepting.
+                    break;
+                }
+                // The handle clone lets shutdown cut the read side from
+                // outside; a clone failure means the socket is already
+                // dead, so the connection is refused.
+                let Ok(handle) = stream.try_clone() else {
+                    continue;
+                };
+                shared.metrics.net.connection();
+                let s = shared.clone();
+                let thread =
+                    std::thread::spawn(move || session::run(&s, stream));
+                let mut list = lock_unpoisoned(&sessions);
+                // Reap naturally finished sessions so a long-lived server
+                // doesn't accumulate dead handles.
+                let mut i = 0;
+                while i < list.len() {
+                    if list[i].thread.is_finished() {
+                        let done = list.remove(i);
+                        let _ = done.thread.join();
+                    } else {
+                        i += 1;
+                    }
+                }
+                list.push(SessionHandle { stream: handle, thread });
+            }
+            Err(_) => {
+                if shared.closed.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Transient accept error (EMFILE, aborted handshake):
+                // keep serving.
+            }
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Network serving layer: a binary wire protocol + session handling in
+//! front of the coordinator.
+//!
+//! ```text
+//!   client process                      server process
+//!   ──────────────                      ──────────────────────────────
+//!   NetClient ──TCP── accept loop ──► session (reader thread)
+//!     │ frame.rs        listener.rs      │  handshake (auth/version)
+//!     │ proto.rs                         │  fingerprint → GraphStore
+//!     │ wire.rs                          │  quota slot (Mutex+Condvar)
+//!     │                                  ▼
+//!     │                           Coordinator::submit  (bounded queue)
+//!     │                                  │  batcher → workers → executor
+//!     │                                  ▼
+//!     ◄──────────────────────────── forwarder thread (per session)
+//!                                     flushes AttnResponse frames
+//! ```
+//!
+//! Layering, bottom-up:
+//!
+//! * [`wire`] — primitive little-endian encode/decode with
+//!   allocation-safe length validation.
+//! * [`frame`] — `[MAGIC][len][payload]` framing over any
+//!   `Read`/`Write`, with the length cap enforced *before* allocation.
+//! * [`proto`] — the message vocabulary ([`proto::Msg`]): hello/ack,
+//!   graph query/status, submit, response, goodbye; CSR graphs are
+//!   structurally validated on decode.
+//! * [`store`] — the shared LRU of uploaded graphs that makes the
+//!   fingerprint handshake work across connections.
+//! * [`session`] (private) + [`listener`] — per-connection reader and
+//!   forwarder threads, auth, per-session in-flight quota, graceful
+//!   drain.
+//! * [`client`] — the blocking library used by `repro serve`, the
+//!   loadgen, and the differential tests.
+//!
+//! **Flow control** composes three bounded layers with zero additional
+//! buffering: a session that has `max_inflight` unanswered submits stops
+//! granting quota slots, which parks its reader; a parked reader stops
+//! draining the socket, so the kernel TCP window fills and the *client's*
+//! writer blocks.  Independently, `Coordinator::submit` blocks when the
+//! coordinator's ingress queue is full, with the same reader-parking
+//! effect.  The in-process backpressure contract becomes end-to-end
+//! connection-level flow control for free.
+//!
+//! **Fingerprint handshake.**  Graph topology dominates request bytes
+//! for small feature dims, and serving steady states replay the same
+//! graphs (the premise of the coordinator's `DriverCache`).  A client
+//! therefore asks `GraphQuery{fp}` before first use, uploads the CSR
+//! inline only on `known: false`, and afterwards submits by bare
+//! `(fp, n, nnz)` reference.  The server cross-checks `(n, nnz)` against
+//! the stored graph (collision guard) and answers
+//! [`proto::CODE_GRAPH_UNKNOWN`] on eviction or mismatch, which the
+//! client handles by re-uploading inline exactly once.  Combined with
+//! the fingerprint-keyed `DriverCache` behind the batcher, a repeat
+//! graph costs neither wire bytes nor preprocessing.
+//!
+//! Everything is std-only (threads + blocking sockets), matching the
+//! coordinator's no-async design; see DESIGN.md §13 for the frame
+//! grammar and the session state machine.
+
+pub mod client;
+pub mod frame;
+pub mod listener;
+pub mod proto;
+pub mod store;
+pub mod wire;
+
+mod session;
+
+pub use client::{ClientStats, NetClient, NetError, WireRequest, WireResponse};
+pub use listener::{NetConfig, NetServer};
+pub use store::GraphStore;

@@ -1,0 +1,556 @@
+//! The versioned message vocabulary (DESIGN.md §13).
+//!
+//! Each frame payload is `tag u8` + a tag-specific body encoded with
+//! [`wire`](super::wire).  The conversation:
+//!
+//! ```text
+//! client                                server
+//!   ── ClientHello{version, token} ──►
+//!   ◄── ServerHello{version, ok, …} ──     (reject ⇒ close)
+//!   ── GraphQuery{fp} ──►                  (optional, any time)
+//!   ◄── GraphStatus{fp, known} ──
+//!   ── Submit{…, GraphRef} ──►             (by fingerprint or inline CSR)
+//!   ◄── Response{id, output | error} ──    (order = coordinator completion)
+//!   ── Goodbye ──►                         (clean close)
+//! ```
+//!
+//! A [`Submit`](Msg::Submit) referencing an unknown fingerprint is
+//! answered with error code [`CODE_GRAPH_UNKNOWN`]; the client retries
+//! once with the CSR inline.  [`CODE_PROTOCOL`] marks a session-fatal
+//! protocol violation (the server answers best-effort with `id = 0` and
+//! closes).
+//!
+//! Inline CSR payloads are structurally validated at decode time — the
+//! full [`CsrGraph`] invariant (monotone `indptr`, in-range, strictly
+//! ascending row indices) — so no malformed topology can reach the BSB
+//! builder from the network.
+
+use crate::graph::CsrGraph;
+use crate::kernels::AttnError;
+
+use super::wire::{WireError, WireReader, WireWriter};
+
+/// Protocol version carried in the hello exchange.  The server rejects
+/// mismatches in [`ServerHello`](Msg::ServerHello) (carrying its own
+/// version so the client can report the skew precisely).
+pub const VERSION: u16 = 1;
+
+const TAG_CLIENT_HELLO: u8 = 1;
+const TAG_SERVER_HELLO: u8 = 2;
+const TAG_GRAPH_QUERY: u8 = 3;
+const TAG_GRAPH_STATUS: u8 = 4;
+const TAG_SUBMIT: u8 = 5;
+const TAG_RESPONSE: u8 = 6;
+const TAG_GOODBYE: u8 = 7;
+
+/// Error codes for the `Response` error arm.  1–6 mirror
+/// [`AttnError`]'s variants; 16+ are protocol-level conditions with no
+/// in-process analog.
+pub const CODE_BAD_SHAPE: u8 = 1;
+pub const CODE_PREPARE: u8 = 2;
+pub const CODE_EXECUTE: u8 = 3;
+pub const CODE_UNSUPPORTED: u8 = 4;
+pub const CODE_QUEUE_CLOSED: u8 = 5;
+pub const CODE_DEADLINE: u8 = 6;
+/// Submit-by-fingerprint missed the server's graph store: re-send inline.
+pub const CODE_GRAPH_UNKNOWN: u8 = 16;
+/// Session-fatal protocol violation (bad frame, unknown tag, malformed
+/// body); the server closes after sending this.
+pub const CODE_PROTOCOL: u8 = 19;
+
+/// How a [`Msg::Submit`] names its graph: a bare fingerprint (the repeat
+/// path — `n`/`nnz` ride along as the store's collision cross-check,
+/// mirroring the `DriverCache` contract) or the full CSR (first sight).
+pub enum GraphRef {
+    Fingerprint { fp: u64, n: u32, nnz: u32 },
+    Inline(CsrGraph),
+}
+
+/// Body of [`Msg::Submit`] — the wire image of
+/// [`AttnRequest`](crate::coordinator::AttnRequest).  Q/K/V are head-major
+/// (`heads × n × d` / `heads × n × dv`), exactly the in-process layout.
+pub struct SubmitMsg {
+    pub id: u64,
+    pub graph: GraphRef,
+    pub d: u32,
+    pub dv: u32,
+    pub heads: u32,
+    pub scale: f32,
+    /// Backend name (`Backend::name` vocabulary, including `"auto"`);
+    /// parsed server-side so an unknown name degrades to a structured
+    /// [`CODE_UNSUPPORTED`] response instead of a decode failure.
+    pub backend: String,
+    /// Deadline in microseconds from server admission; 0 = none.
+    pub deadline_micros: u64,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Success payload of [`Msg::Response`] — the wire image of a successful
+/// [`AttnResponse`](crate::coordinator::AttnResponse).
+pub struct OkPayload {
+    /// Head-major output (`heads × n × dv`), bit-exact f32.
+    pub out: Vec<f32>,
+    pub latency_s: f64,
+    pub preprocess_s: f64,
+    pub execute_s: f64,
+    pub batch_size: u32,
+    /// Name of the backend that served the request (`""` = unknown — the
+    /// request failed before any backend ran; unreachable on this arm but
+    /// kept symmetric with `AttnResponse::backend`).
+    pub backend: String,
+}
+
+/// Body of [`Msg::Response`].
+pub struct ResponseMsg {
+    pub id: u64,
+    pub payload: Result<OkPayload, (u8, String)>,
+}
+
+/// One protocol message (= one frame payload).
+pub enum Msg {
+    ClientHello { version: u16, token: String },
+    ServerHello { version: u16, ok: bool, detail: String, max_inflight: u32 },
+    GraphQuery { fp: u64 },
+    GraphStatus { fp: u64, known: bool },
+    Submit(SubmitMsg),
+    Response(ResponseMsg),
+    Goodbye,
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        match self {
+            Msg::ClientHello { version, token } => {
+                w.put_u8(TAG_CLIENT_HELLO);
+                w.put_u16(*version);
+                w.put_str(token);
+            }
+            Msg::ServerHello { version, ok, detail, max_inflight } => {
+                w.put_u8(TAG_SERVER_HELLO);
+                w.put_u16(*version);
+                w.put_u8(u8::from(*ok));
+                w.put_str(detail);
+                w.put_u32(*max_inflight);
+            }
+            Msg::GraphQuery { fp } => {
+                w.put_u8(TAG_GRAPH_QUERY);
+                w.put_u64(*fp);
+            }
+            Msg::GraphStatus { fp, known } => {
+                w.put_u8(TAG_GRAPH_STATUS);
+                w.put_u64(*fp);
+                w.put_u8(u8::from(*known));
+            }
+            Msg::Submit(s) => {
+                w.put_u8(TAG_SUBMIT);
+                w.put_u64(s.id);
+                match &s.graph {
+                    GraphRef::Fingerprint { fp, n, nnz } => {
+                        w.put_u8(0);
+                        w.put_u64(*fp);
+                        w.put_u32(*n);
+                        w.put_u32(*nnz);
+                    }
+                    GraphRef::Inline(g) => {
+                        w.put_u8(1);
+                        encode_graph(&mut w, g);
+                    }
+                }
+                w.put_u32(s.d);
+                w.put_u32(s.dv);
+                w.put_u32(s.heads);
+                w.put_f32(s.scale);
+                w.put_str(&s.backend);
+                w.put_u64(s.deadline_micros);
+                w.put_f32s(&s.q);
+                w.put_f32s(&s.k);
+                w.put_f32s(&s.v);
+            }
+            Msg::Response(r) => {
+                w.put_u8(TAG_RESPONSE);
+                w.put_u64(r.id);
+                match &r.payload {
+                    Ok(ok) => {
+                        w.put_u8(1);
+                        w.put_f64(ok.latency_s);
+                        w.put_f64(ok.preprocess_s);
+                        w.put_f64(ok.execute_s);
+                        w.put_u32(ok.batch_size);
+                        w.put_str(&ok.backend);
+                        w.put_f32s(&ok.out);
+                    }
+                    Err((code, msg)) => {
+                        w.put_u8(0);
+                        w.put_u8(*code);
+                        w.put_str(msg);
+                    }
+                }
+            }
+            Msg::Goodbye => w.put_u8(TAG_GOODBYE),
+        }
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Msg, WireError> {
+        let mut r = WireReader::new(payload);
+        let tag = r.take_u8()?;
+        let msg = match tag {
+            TAG_CLIENT_HELLO => Msg::ClientHello {
+                version: r.take_u16()?,
+                token: r.take_str()?,
+            },
+            TAG_SERVER_HELLO => Msg::ServerHello {
+                version: r.take_u16()?,
+                ok: r.take_u8()? != 0,
+                detail: r.take_str()?,
+                max_inflight: r.take_u32()?,
+            },
+            TAG_GRAPH_QUERY => Msg::GraphQuery { fp: r.take_u64()? },
+            TAG_GRAPH_STATUS => Msg::GraphStatus {
+                fp: r.take_u64()?,
+                known: r.take_u8()? != 0,
+            },
+            TAG_SUBMIT => {
+                let id = r.take_u64()?;
+                let graph = match r.take_u8()? {
+                    0 => GraphRef::Fingerprint {
+                        fp: r.take_u64()?,
+                        n: r.take_u32()?,
+                        nnz: r.take_u32()?,
+                    },
+                    1 => GraphRef::Inline(decode_graph(&mut r)?),
+                    other => {
+                        return Err(WireError::Malformed(format!(
+                            "unknown graph-ref tag {other}"
+                        )))
+                    }
+                };
+                Msg::Submit(SubmitMsg {
+                    id,
+                    graph,
+                    d: r.take_u32()?,
+                    dv: r.take_u32()?,
+                    heads: r.take_u32()?,
+                    scale: r.take_f32()?,
+                    backend: r.take_str()?,
+                    deadline_micros: r.take_u64()?,
+                    q: r.take_f32s()?,
+                    k: r.take_f32s()?,
+                    v: r.take_f32s()?,
+                })
+            }
+            TAG_RESPONSE => {
+                let id = r.take_u64()?;
+                let payload = if r.take_u8()? != 0 {
+                    let latency_s = r.take_f64()?;
+                    let preprocess_s = r.take_f64()?;
+                    let execute_s = r.take_f64()?;
+                    let batch_size = r.take_u32()?;
+                    let backend = r.take_str()?;
+                    let out = r.take_f32s()?;
+                    Ok(OkPayload {
+                        out,
+                        latency_s,
+                        preprocess_s,
+                        execute_s,
+                        batch_size,
+                        backend,
+                    })
+                } else {
+                    Err((r.take_u8()?, r.take_str()?))
+                };
+                Msg::Response(ResponseMsg { id, payload })
+            }
+            TAG_GOODBYE => Msg::Goodbye,
+            other => {
+                return Err(WireError::Malformed(format!(
+                    "unknown message tag {other}"
+                )))
+            }
+        };
+        r.expect_end()?;
+        Ok(msg)
+    }
+}
+
+/// CSR wire size in bytes (inside a `GraphRef::Inline`) — what a
+/// fingerprint-hit submit saves.
+pub fn csr_wire_bytes(g: &CsrGraph) -> u64 {
+    // n u64 + (count u64 + 4 bytes/elem) for indptr and indices.
+    8 + (8 + 4 * (g.indptr.len() as u64)) + (8 + 4 * (g.indices.len() as u64))
+}
+
+fn encode_graph(w: &mut WireWriter, g: &CsrGraph) {
+    w.put_u64(g.n as u64);
+    w.put_u32s(&g.indptr);
+    w.put_u32s(&g.indices);
+}
+
+/// Decode + fully validate a CSR graph.  Every invariant the in-process
+/// constructors guarantee is re-checked here: the network is the one
+/// place graphs arrive without having gone through `CsrGraph::from_edges`.
+fn decode_graph(r: &mut WireReader<'_>) -> Result<CsrGraph, WireError> {
+    let n64 = r.take_u64()?;
+    if n64 > u32::MAX as u64 {
+        return Err(WireError::Malformed(format!("graph n {n64} exceeds u32")));
+    }
+    let n = n64 as usize;
+    let indptr = r.take_u32s()?;
+    let indices = r.take_u32s()?;
+    if indptr.len() != n + 1 {
+        return Err(WireError::Malformed(format!(
+            "indptr has {} entries, expected n+1 = {}",
+            indptr.len(),
+            n + 1
+        )));
+    }
+    if indptr[0] != 0 {
+        return Err(WireError::Malformed("indptr[0] != 0".into()));
+    }
+    if indptr.windows(2).any(|w| w[1] < w[0]) {
+        return Err(WireError::Malformed("indptr not monotone".into()));
+    }
+    if indptr[n] as usize != indices.len() {
+        return Err(WireError::Malformed(format!(
+            "indptr[n] = {} but {} indices present",
+            indptr[n],
+            indices.len()
+        )));
+    }
+    for i in 0..n {
+        let row = &indices[indptr[i] as usize..indptr[i + 1] as usize];
+        // Strictly ascending ⇒ sorted + deduplicated + (via the bound
+        // check) in range: the CsrGraph invariant every kernel assumes.
+        for pair in row.windows(2) {
+            if pair[1] <= pair[0] {
+                return Err(WireError::Malformed(format!(
+                    "row {i} not strictly ascending"
+                )));
+            }
+        }
+        if let Some(&last) = row.last() {
+            if last as usize >= n {
+                return Err(WireError::Malformed(format!(
+                    "row {i} column {last} out of range (n = {n})"
+                )));
+            }
+        }
+    }
+    Ok(CsrGraph { n, indptr, indices })
+}
+
+/// Map an [`AttnError`] onto its wire code + message.
+pub fn encode_attn_error(e: &AttnError) -> (u8, String) {
+    match e {
+        AttnError::BadShape(m) => (CODE_BAD_SHAPE, m.clone()),
+        AttnError::Prepare(m) => (CODE_PREPARE, m.clone()),
+        AttnError::Execute(m) => (CODE_EXECUTE, m.clone()),
+        AttnError::Unsupported(m) => (CODE_UNSUPPORTED, m.clone()),
+        AttnError::QueueClosed => (CODE_QUEUE_CLOSED, String::new()),
+        AttnError::DeadlineExceeded => (CODE_DEADLINE, String::new()),
+    }
+}
+
+/// Map a wire code back onto an [`AttnError`]; `None` for protocol-level
+/// codes ([`CODE_GRAPH_UNKNOWN`], [`CODE_PROTOCOL`], unknown values) that
+/// have no in-process analog.
+pub fn decode_attn_error(code: u8, msg: String) -> Option<AttnError> {
+    Some(match code {
+        CODE_BAD_SHAPE => AttnError::BadShape(msg),
+        CODE_PREPARE => AttnError::Prepare(msg),
+        CODE_EXECUTE => AttnError::Execute(msg),
+        CODE_UNSUPPORTED => AttnError::Unsupported(msg),
+        CODE_QUEUE_CLOSED => AttnError::QueueClosed,
+        CODE_DEADLINE => AttnError::DeadlineExceeded,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn roundtrip(m: &Msg) -> Msg {
+        Msg::decode(&m.encode()).expect("roundtrip decode")
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        match roundtrip(&Msg::ClientHello {
+            version: VERSION,
+            token: "tok".into(),
+        }) {
+            Msg::ClientHello { version, token } => {
+                assert_eq!(version, VERSION);
+                assert_eq!(token, "tok");
+            }
+            _ => panic!("wrong tag"),
+        }
+        match roundtrip(&Msg::ServerHello {
+            version: 3,
+            ok: false,
+            detail: "nope".into(),
+            max_inflight: 7,
+        }) {
+            Msg::ServerHello { version, ok, detail, max_inflight } => {
+                assert_eq!((version, ok, max_inflight), (3, false, 7));
+                assert_eq!(detail, "nope");
+            }
+            _ => panic!("wrong tag"),
+        }
+    }
+
+    #[test]
+    fn submit_inline_roundtrip_preserves_graph_and_features() {
+        let g = generators::erdos_renyi(60, 4.0, 7).with_self_loops();
+        let q: Vec<f32> = (0..g.n * 4).map(|i| (i as f32).sin()).collect();
+        let m = Msg::Submit(SubmitMsg {
+            id: 42,
+            graph: GraphRef::Inline(g.clone()),
+            d: 4,
+            dv: 4,
+            heads: 1,
+            scale: 0.5,
+            backend: "fused3s".into(),
+            deadline_micros: 1500,
+            q: q.clone(),
+            k: q.clone(),
+            v: q.clone(),
+        });
+        match roundtrip(&m) {
+            Msg::Submit(s) => {
+                assert_eq!(s.id, 42);
+                assert_eq!(s.deadline_micros, 1500);
+                assert_eq!(s.backend, "fused3s");
+                match s.graph {
+                    GraphRef::Inline(g2) => {
+                        assert_eq!(g2, g);
+                        assert_eq!(g2.fingerprint(), g.fingerprint());
+                    }
+                    _ => panic!("wrong graph ref"),
+                }
+                assert_eq!(s.q, q);
+            }
+            _ => panic!("wrong tag"),
+        }
+    }
+
+    #[test]
+    fn response_ok_and_err_roundtrip() {
+        let m = Msg::Response(ResponseMsg {
+            id: 9,
+            payload: Ok(OkPayload {
+                out: vec![1.0, f32::NAN, -0.0],
+                latency_s: 0.25,
+                preprocess_s: 0.0625,
+                execute_s: 0.125,
+                batch_size: 3,
+                backend: "hybrid".into(),
+            }),
+        });
+        match roundtrip(&m) {
+            Msg::Response(r) => {
+                let ok = r.payload.expect("ok arm");
+                assert_eq!(ok.out.len(), 3);
+                assert!(ok.out[1].is_nan());
+                assert_eq!(ok.out[2].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(ok.batch_size, 3);
+                assert_eq!(ok.backend, "hybrid");
+            }
+            _ => panic!("wrong tag"),
+        }
+        let m = Msg::Response(ResponseMsg {
+            id: 1,
+            payload: Err((CODE_PREPARE, "boom".into())),
+        });
+        match roundtrip(&m) {
+            Msg::Response(r) => {
+                let (code, msg) = r.payload.expect_err("err arm");
+                assert_eq!(code, CODE_PREPARE);
+                assert_eq!(msg, "boom");
+            }
+            _ => panic!("wrong tag"),
+        }
+    }
+
+    #[test]
+    fn attn_error_codes_roundtrip() {
+        for e in [
+            AttnError::BadShape("a".into()),
+            AttnError::Prepare("b".into()),
+            AttnError::Execute("c".into()),
+            AttnError::Unsupported("d".into()),
+            AttnError::QueueClosed,
+            AttnError::DeadlineExceeded,
+        ] {
+            let (code, msg) = encode_attn_error(&e);
+            assert_eq!(decode_attn_error(code, msg), Some(e));
+        }
+        assert_eq!(decode_attn_error(CODE_GRAPH_UNKNOWN, String::new()), None);
+        assert_eq!(decode_attn_error(CODE_PROTOCOL, String::new()), None);
+    }
+
+    #[test]
+    fn unknown_tag_and_trailing_bytes_rejected() {
+        assert!(matches!(
+            Msg::decode(&[0xEE]),
+            Err(WireError::Malformed(_))
+        ));
+        let mut bytes = Msg::Goodbye.encode();
+        bytes.push(0);
+        assert!(matches!(Msg::decode(&bytes), Err(WireError::Malformed(_))));
+        assert!(matches!(
+            Msg::decode(&[]),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn malformed_graphs_rejected() {
+        let encode_raw = |n: u64, indptr: &[u32], indices: &[u32]| {
+            let mut w = WireWriter::new();
+            w.put_u8(TAG_SUBMIT);
+            w.put_u64(1); // id
+            w.put_u8(1); // inline
+            w.put_u64(n);
+            w.put_u32s(indptr);
+            w.put_u32s(indices);
+            w.put_u32(4);
+            w.put_u32(4);
+            w.put_u32(1);
+            w.put_f32(1.0);
+            w.put_str("cpu_csr");
+            w.put_u64(0);
+            w.put_f32s(&[]);
+            w.put_f32s(&[]);
+            w.put_f32s(&[]);
+            w.finish()
+        };
+        // Non-monotone indptr.
+        assert!(Msg::decode(&encode_raw(2, &[0, 2, 1], &[0, 1])).is_err());
+        // indptr[0] != 0.
+        assert!(Msg::decode(&encode_raw(2, &[1, 1, 2], &[0, 1])).is_err());
+        // Wrong indptr length.
+        assert!(Msg::decode(&encode_raw(2, &[0, 1], &[0])).is_err());
+        // indptr[n] disagrees with indices length.
+        assert!(Msg::decode(&encode_raw(2, &[0, 1, 2], &[0, 1, 1])).is_err());
+        // Column out of range.
+        assert!(Msg::decode(&encode_raw(2, &[0, 1, 2], &[0, 5])).is_err());
+        // Duplicate / unsorted row.
+        assert!(Msg::decode(&encode_raw(2, &[0, 2, 2], &[1, 1])).is_err());
+        // The well-formed version of the same shape decodes.
+        assert!(Msg::decode(&encode_raw(2, &[0, 1, 2], &[1, 0])).is_ok());
+    }
+
+    #[test]
+    fn csr_wire_bytes_matches_encoding() {
+        let g = generators::ring(40);
+        let mut w = WireWriter::new();
+        encode_graph(&mut w, &g);
+        assert_eq!(w.len() as u64, csr_wire_bytes(&g));
+    }
+}

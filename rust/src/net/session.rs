@@ -1,0 +1,401 @@
+//! Per-connection session: handshake → auth → request pump.
+//!
+//! Thread layout per connection (std threads, matching the coordinator):
+//!
+//! ```text
+//! session (reader) thread          forwarder thread
+//!   read_frame / decode              rx.recv()  ◄─ coordinator replies
+//!   auth + quota acquire             encode Response frame
+//!   resolve GraphRef via store       write (socket mutex)
+//!   Coordinator::submit  ──────►     quota release + notify
+//! ```
+//!
+//! Flow control composes three layers: the per-session in-flight quota
+//! (acquired before submit, released as each response is written), the
+//! coordinator's bounded ingress (a blocked `submit` blocks this reader),
+//! and TCP's own window (a blocked reader stops draining the socket).
+//!
+//! Failure policy: anything the coordinator can answer structurally
+//! (shape errors, prepare/execute failures, deadline sheds) flows back as
+//! a [`Msg::Response`] with the mapped error code and the session lives
+//! on.  Frame-level garbage (bad magic, truncation, unknown tags,
+//! malformed CSR) is session-fatal: the server best-effort sends a
+//! `Response{id: 0, CODE_PROTOCOL}` and closes.  Either way the reader
+//! drops its reply sender on exit, the forwarder drains every response
+//! still in flight, and no quota slot or batcher stage is left wedged.
+
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{AttnRequest, AttnResponse};
+use crate::kernels::Backend;
+use crate::util::sync::lock_unpoisoned;
+
+use super::frame::{read_frame, write_frame, FrameError};
+use super::listener::Shared;
+use super::proto::{
+    self, GraphRef, Msg, OkPayload, ResponseMsg, SubmitMsg, CODE_GRAPH_UNKNOWN,
+    CODE_PROTOCOL, VERSION,
+};
+
+/// In-flight slot counter + wakeup for one session.
+struct Quota {
+    slots: Mutex<usize>,
+    freed: Condvar,
+}
+
+/// Serve one connection to completion.  Never panics outward: every exit
+/// path drains the forwarder and closes the socket.
+pub(crate) fn run(shared: &Arc<Shared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    if !handshake(shared, &stream) {
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    }
+    // All writes (forwarder responses + reader-side error/status frames)
+    // serialize through one cloned handle behind a mutex, so frames never
+    // interleave.
+    let Ok(write_half) = stream.try_clone() else {
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    };
+    let writer = Arc::new(Mutex::new(write_half));
+    let quota =
+        Arc::new(Quota { slots: Mutex::new(0), freed: Condvar::new() });
+    let (tx, rx) = channel::<AttnResponse>();
+
+    let forwarder = {
+        let writer = writer.clone();
+        let quota = quota.clone();
+        let shared = shared.clone();
+        std::thread::spawn(move || {
+            while let Ok(resp) = rx.recv() {
+                let msg = Msg::Response(to_wire_response(resp));
+                // A write failure means the client is gone; keep draining
+                // so every reply sender disconnects and quota stays sane.
+                let _ = send(&shared, &writer, &msg);
+                let mut slots = lock_unpoisoned(&quota.slots);
+                *slots = slots.saturating_sub(1);
+                drop(slots);
+                quota.freed.notify_all();
+            }
+        })
+    };
+
+    reader_loop(shared, &stream, &writer, &quota, &tx);
+
+    // Dropping the master sender lets the forwarder's recv() disconnect
+    // once every in-flight request has been answered — the drain path.
+    drop(tx);
+    let _ = forwarder.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Read frames until the peer closes, a protocol violation occurs, or
+/// shutdown cuts the read side.
+fn reader_loop(
+    shared: &Arc<Shared>,
+    stream: &TcpStream,
+    writer: &Mutex<TcpStream>,
+    quota: &Arc<Quota>,
+    tx: &Sender<AttnResponse>,
+) {
+    let max = shared.cfg.max_frame_bytes;
+    loop {
+        let payload = match read_frame(&mut &*stream, max) {
+            Ok(p) => p,
+            Err(FrameError::Closed) => return,
+            Err(e) => {
+                // Mid-frame disconnects surface as Truncated/Io; hostile
+                // prefixes as BadMagic/Oversize.  All are session-fatal.
+                protocol_fatal(shared, writer, &e.to_string());
+                return;
+            }
+        };
+        shared.metrics.net.read(8 + payload.len() as u64);
+        let msg = match Msg::decode(&payload) {
+            Ok(m) => m,
+            Err(e) => {
+                protocol_fatal(shared, writer, &e.to_string());
+                return;
+            }
+        };
+        match msg {
+            Msg::GraphQuery { fp } => {
+                let known = shared.store.contains(fp);
+                if !send(shared, writer, &Msg::GraphStatus { fp, known }) {
+                    return;
+                }
+            }
+            Msg::Submit(sub) => {
+                if !handle_submit(shared, writer, quota, tx, sub) {
+                    return;
+                }
+            }
+            Msg::Goodbye => return,
+            // Server-to-client messages (or a second hello) arriving here
+            // mark a confused peer.
+            Msg::ClientHello { .. }
+            | Msg::ServerHello { .. }
+            | Msg::GraphStatus { .. }
+            | Msg::Response(_) => {
+                protocol_fatal(shared, writer, "unexpected message for server");
+                return;
+            }
+        }
+    }
+}
+
+/// Admit one submit.  Returns false when the session must close (socket
+/// dead or server shutting down); structured per-request failures return
+/// true and keep the session alive.
+fn handle_submit(
+    shared: &Arc<Shared>,
+    writer: &Mutex<TcpStream>,
+    quota: &Arc<Quota>,
+    tx: &Sender<AttnResponse>,
+    sub: SubmitMsg,
+) -> bool {
+    // Resolve the graph reference first — a fingerprint miss must be
+    // answered without consuming a quota slot (the client immediately
+    // retries inline, and a blocked slot would deadlock a full pipeline).
+    let graph = match sub.graph {
+        GraphRef::Inline(g) => {
+            let arc = Arc::new(g);
+            shared.store.insert(arc.clone());
+            shared.metrics.net.graph_upload();
+            arc
+        }
+        GraphRef::Fingerprint { fp, n, nnz } => {
+            match shared.store.get(fp, n as usize, nnz as usize) {
+                Some(g) => {
+                    shared.metrics.net.graph_reuse();
+                    g
+                }
+                None => {
+                    return send_error(
+                        shared,
+                        writer,
+                        sub.id,
+                        CODE_GRAPH_UNKNOWN,
+                        "graph not resident; re-send inline",
+                    );
+                }
+            }
+        }
+    };
+    let backend = match Backend::parse(&sub.backend) {
+        Ok(b) => b,
+        Err(e) => {
+            return send_error(
+                shared,
+                writer,
+                sub.id,
+                proto::CODE_UNSUPPORTED,
+                &format!("{e:#}"),
+            );
+        }
+    };
+    // Connection-level flow control: block until a slot frees (responses
+    // written) or the server starts draining.
+    if !acquire_slot(shared, quota) {
+        return false;
+    }
+    shared.metrics.net.request();
+    let req = AttnRequest {
+        id: sub.id,
+        // The coordinator owns its request's graph by value; the store
+        // keeps sharing the Arc, so this clone is the one topology copy
+        // per request (features already arrived owned).
+        graph: (*graph).clone(),
+        d: sub.d as usize,
+        dv: sub.dv as usize,
+        heads: sub.heads as usize,
+        q: sub.q,
+        k: sub.k,
+        v: sub.v,
+        scale: sub.scale,
+        backend,
+        deadline: (sub.deadline_micros > 0)
+            .then(|| Duration::from_micros(sub.deadline_micros)),
+        reply: tx.clone(),
+    };
+    if let Err(e) = shared.coord.submit(req) {
+        // The request never entered the pipeline: give the slot back and
+        // answer structurally.
+        release_slot(quota);
+        let (code, msg) = proto::encode_attn_error(&e);
+        return send_error(shared, writer, sub.id, code, &msg);
+    }
+    true
+}
+
+/// Block for an in-flight slot.  False once the server is draining.
+fn acquire_slot(shared: &Shared, quota: &Quota) -> bool {
+    let mut slots = lock_unpoisoned(&quota.slots);
+    loop {
+        if shared.closed.load(Ordering::SeqCst) {
+            return false;
+        }
+        if *slots < shared.cfg.max_inflight {
+            *slots += 1;
+            return true;
+        }
+        // Bounded wait so a shutdown during a full pipeline still gets
+        // observed (the forwarder also notifies on every release).
+        let (guard, _) = match quota
+            .freed
+            .wait_timeout(slots, Duration::from_millis(50))
+        {
+            Ok(x) => x,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        slots = guard;
+    }
+}
+
+fn release_slot(quota: &Quota) {
+    let mut slots = lock_unpoisoned(&quota.slots);
+    *slots = slots.saturating_sub(1);
+    drop(slots);
+    quota.freed.notify_all();
+}
+
+/// Hello exchange under the handshake read-timeout.  False = reject/close.
+fn handshake(shared: &Arc<Shared>, stream: &TcpStream) -> bool {
+    let _ = stream.set_read_timeout(Some(shared.cfg.handshake_timeout));
+    let max = shared.cfg.max_frame_bytes;
+    let payload = match read_frame(&mut &*stream, max) {
+        Ok(p) => p,
+        Err(FrameError::Closed) => return false, // probe connected + left
+        Err(_) => {
+            shared.metrics.net.protocol_error();
+            return false;
+        }
+    };
+    shared.metrics.net.read(8 + payload.len() as u64);
+    let (version, token) = match Msg::decode(&payload) {
+        Ok(Msg::ClientHello { version, token }) => (version, token),
+        _ => {
+            shared.metrics.net.protocol_error();
+            reject(shared, stream, "expected client hello");
+            return false;
+        }
+    };
+    if version != VERSION {
+        shared.metrics.net.protocol_error();
+        reject(
+            shared,
+            stream,
+            &format!("protocol version {version} unsupported (server: {VERSION})"),
+        );
+        return false;
+    }
+    if !shared.cfg.auth_tokens.is_empty()
+        && !shared.cfg.auth_tokens.iter().any(|t| t == &token)
+    {
+        shared.metrics.net.auth_failure();
+        reject(shared, stream, "invalid auth token");
+        return false;
+    }
+    let hello = Msg::ServerHello {
+        version: VERSION,
+        ok: true,
+        detail: String::new(),
+        max_inflight: shared.cfg.max_inflight as u32,
+    };
+    let bytes = hello.encode();
+    if write_frame(&mut &*stream, &bytes, max).is_err() {
+        return false;
+    }
+    shared.metrics.net.wrote(8 + bytes.len() as u64);
+    let _ = stream.set_read_timeout(None);
+    true
+}
+
+/// Best-effort rejection hello (the peer may already be gone).
+fn reject(shared: &Arc<Shared>, stream: &TcpStream, detail: &str) {
+    let msg = Msg::ServerHello {
+        version: VERSION,
+        ok: false,
+        detail: detail.to_string(),
+        max_inflight: 0,
+    };
+    let bytes = msg.encode();
+    if write_frame(&mut &*stream, &bytes, shared.cfg.max_frame_bytes).is_ok() {
+        shared.metrics.net.wrote(8 + bytes.len() as u64);
+    }
+}
+
+/// Count + best-effort-report a session-fatal protocol violation.
+fn protocol_fatal(shared: &Arc<Shared>, writer: &Mutex<TcpStream>, msg: &str) {
+    shared.metrics.net.protocol_error();
+    let _ = send(
+        shared,
+        writer,
+        &Msg::Response(ResponseMsg {
+            id: 0,
+            payload: Err((CODE_PROTOCOL, msg.to_string())),
+        }),
+    );
+}
+
+/// Send one per-request error response.  True while the socket still
+/// accepts writes.
+fn send_error(
+    shared: &Arc<Shared>,
+    writer: &Mutex<TcpStream>,
+    id: u64,
+    code: u8,
+    msg: &str,
+) -> bool {
+    send(
+        shared,
+        writer,
+        &Msg::Response(ResponseMsg {
+            id,
+            payload: Err((code, msg.to_string())),
+        }),
+    )
+}
+
+/// Encode + write one frame through the shared write half.
+fn send(shared: &Shared, writer: &Mutex<TcpStream>, msg: &Msg) -> bool {
+    let bytes = msg.encode();
+    let mut sock = lock_unpoisoned(writer);
+    match write_frame(&mut *sock, &bytes, shared.cfg.max_frame_bytes) {
+        Ok(()) => {
+            shared.metrics.net.wrote(8 + bytes.len() as u64);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// Lower an [`AttnResponse`] onto the wire shape.
+fn to_wire_response(resp: AttnResponse) -> ResponseMsg {
+    let id = resp.id;
+    match resp.result {
+        Ok(out) => ResponseMsg {
+            id,
+            payload: Ok(OkPayload {
+                out,
+                latency_s: resp.latency_s,
+                preprocess_s: resp.preprocess_s,
+                execute_s: resp.execute_s,
+                batch_size: resp.batch_size as u32,
+                backend: resp
+                    .backend
+                    .map(|b| b.name().to_string())
+                    .unwrap_or_default(),
+            }),
+        },
+        Err(e) => {
+            let (code, msg) = proto::encode_attn_error(&e);
+            ResponseMsg { id, payload: Err((code, msg)) }
+        }
+    }
+}

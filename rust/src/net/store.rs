@@ -1,0 +1,164 @@
+//! Server-side graph store behind the fingerprint handshake.
+//!
+//! The serving steady state replays the same topologies (the same reason
+//! the coordinator's `DriverCache` exists), so the listener keeps an LRU
+//! map `fingerprint → Arc<CsrGraph>` shared by every session: a client
+//! that has uploaded a graph once — on *any* connection — can afterwards
+//! submit by bare fingerprint and skip the CSR bytes entirely.
+//!
+//! Collision safety mirrors [`DriverCache`](crate::coordinator::DriverCache):
+//! a fingerprint hit is cross-checked against the submit's declared
+//! `(n, nnz)`, so a 2⁻⁶⁴ collision degrades to a
+//! [`CODE_GRAPH_UNKNOWN`](super::proto::CODE_GRAPH_UNKNOWN) reply (the
+//! client re-uploads inline) rather than attention over the wrong graph.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::graph::CsrGraph;
+use crate::util::sync::lock_unpoisoned;
+
+struct Slot {
+    graph: Arc<CsrGraph>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<u64, Slot>,
+    tick: u64,
+}
+
+/// LRU store of uploaded graphs, keyed by content fingerprint.
+pub struct GraphStore {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl GraphStore {
+    /// `capacity == 0` disables the store (every submit must inline its
+    /// graph; `GraphQuery` always answers unknown).
+    pub fn new(capacity: usize) -> GraphStore {
+        GraphStore {
+            capacity,
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+        }
+    }
+
+    /// Whether `fp` is resident (refreshes LRU recency — a client asking
+    /// about a graph is about to use it).
+    pub fn contains(&self, fp: u64) -> bool {
+        if self.capacity == 0 {
+            return false;
+        }
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&fp) {
+            Some(slot) => {
+                slot.last_used = tick;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Resolve a submit-by-fingerprint; `n`/`nnz` are the submit's
+    /// declared counts (collision cross-check).  A mismatch is a miss.
+    pub fn get(&self, fp: u64, n: usize, nnz: usize) -> Option<Arc<CsrGraph>> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        let slot = inner.map.get_mut(&fp)?;
+        if slot.graph.n != n || slot.graph.nnz() != nnz {
+            return None;
+        }
+        slot.last_used = tick;
+        Some(slot.graph.clone())
+    }
+
+    /// Register an uploaded graph under its own content fingerprint,
+    /// evicting least-recently-used entries to stay within capacity.
+    /// Returns how many were evicted.
+    pub fn insert(&self, graph: Arc<CsrGraph>) -> u64 {
+        if self.capacity == 0 {
+            return 0;
+        }
+        let fp = graph.fingerprint();
+        let mut inner = lock_unpoisoned(&self.inner);
+        let mut evicted = 0u64;
+        while inner.map.len() >= self.capacity && !inner.map.contains_key(&fp)
+        {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k)
+                // invariant: the loop condition guarantees len >= capacity
+                // >= 1, so the map cannot be empty here.
+                .expect("non-empty map");
+            inner.map.remove(&oldest);
+            evicted += 1;
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(fp, Slot { graph, last_used: tick });
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.inner).map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn insert_then_resolve_with_cross_check() {
+        let store = GraphStore::new(4);
+        let g = Arc::new(generators::ring(32)); // n=32, nnz=64
+        let fp = g.fingerprint();
+        assert!(!store.contains(fp));
+        store.insert(g.clone());
+        assert!(store.contains(fp));
+        assert!(store.get(fp, 32, 64).is_some());
+        // Declared counts disagreeing with the stored graph: miss.
+        assert!(store.get(fp, 33, 64).is_none());
+        assert!(store.get(fp, 32, 63).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let store = GraphStore::new(2);
+        let gs: Vec<Arc<CsrGraph>> =
+            (0..3).map(|i| Arc::new(generators::ring(16 + i))).collect();
+        store.insert(gs[0].clone());
+        store.insert(gs[1].clone());
+        // Touch 0 so 1 becomes the LRU entry.
+        assert!(store.contains(gs[0].fingerprint()));
+        let evicted = store.insert(gs[2].clone());
+        assert_eq!(evicted, 1);
+        assert!(store.contains(gs[0].fingerprint()));
+        assert!(!store.contains(gs[1].fingerprint()));
+        assert!(store.contains(gs[2].fingerprint()));
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let store = GraphStore::new(0);
+        let g = Arc::new(generators::ring(8));
+        assert_eq!(store.insert(g.clone()), 0);
+        assert!(!store.contains(g.fingerprint()));
+        assert!(store.get(g.fingerprint(), 8, 16).is_none());
+        assert!(store.is_empty());
+    }
+}

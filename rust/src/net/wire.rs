@@ -1,0 +1,328 @@
+//! Byte-level wire primitives: a little-endian bump writer and a
+//! bounds-checked reader.
+//!
+//! Everything on the wire is little-endian.  Variable-length fields carry
+//! an explicit count prefix (u32 for strings, u64 for numeric arrays) and
+//! the reader checks the declared count against the bytes *actually
+//! remaining* before allocating — a frame that lies about its own length
+//! costs a [`WireError::Truncated`], never an absurd allocation (the frame
+//! layer has already capped the total payload size, so `remaining()` is a
+//! trusted bound).
+
+/// Decode failure inside a frame payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The payload ended before a declared field — a truncated or lying
+    /// message body.
+    Truncated {
+        /// Bytes the field needed.
+        needed: usize,
+        /// Bytes left in the payload.
+        available: usize,
+    },
+    /// Structurally invalid content (unknown tag, bad UTF-8, inconsistent
+    /// CSR arrays, ...).
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { needed, available } => write!(
+                f,
+                "truncated payload: field needs {needed} bytes, {available} \
+                 remain"
+            ),
+            WireError::Malformed(m) => write!(f, "malformed payload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Append-only encoder over a growable byte buffer.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> WireWriter {
+        WireWriter::default()
+    }
+
+    /// Encoded bytes so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// UTF-8 string with a u32 byte-length prefix.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// u32 array with a u64 element-count prefix.
+    pub fn put_u32s(&mut self, vs: &[u32]) {
+        self.put_u64(vs.len() as u64);
+        self.buf.reserve(vs.len() * 4);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// f32 array (bit patterns) with a u64 element-count prefix — the
+    /// encoding is exact, so a round-trip preserves every payload bit
+    /// (including NaN payloads and signed zeros).
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_u64(vs.len() as u64);
+        self.buf.reserve(vs.len() * 4);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked cursor over a received payload.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> WireReader<'a> {
+        WireReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take_bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated {
+                needed: n,
+                available: self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take_bytes(1)?[0])
+    }
+
+    pub fn take_u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take_bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take_bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take_bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    /// String with a u32 length prefix; the bytes must be valid UTF-8.
+    pub fn take_str(&mut self) -> Result<String, WireError> {
+        let len = self.take_u32()? as usize;
+        let bytes = self.take_bytes(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("string is not UTF-8".into()))
+    }
+
+    /// Declared element count of an array field, validated against the
+    /// bytes actually remaining *before* any allocation happens.
+    fn take_count(&mut self, elem_bytes: usize) -> Result<usize, WireError> {
+        let count = self.take_u64()?;
+        let needed = count.checked_mul(elem_bytes as u64).ok_or_else(|| {
+            WireError::Malformed(format!("array count {count} overflows"))
+        })?;
+        if needed > self.remaining() as u64 {
+            return Err(WireError::Truncated {
+                needed: needed.min(usize::MAX as u64) as usize,
+                available: self.remaining(),
+            });
+        }
+        Ok(count as usize)
+    }
+
+    pub fn take_u32s(&mut self) -> Result<Vec<u32>, WireError> {
+        let count = self.take_count(4)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.take_u32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let count = self.take_count(4)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.take_f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Assert the payload is fully consumed — trailing garbage marks a
+    /// version-skewed or corrupted sender.
+    pub fn expect_end(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after message",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = WireWriter::new();
+        w.put_u8(7);
+        w.put_u16(513);
+        w.put_u32(70_000);
+        w.put_u64(1 << 40);
+        w.put_f32(-0.0);
+        w.put_f64(std::f64::consts::PI);
+        w.put_str("héllo");
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes);
+        assert_eq!(r.take_u8().unwrap(), 7);
+        assert_eq!(r.take_u16().unwrap(), 513);
+        assert_eq!(r.take_u32().unwrap(), 70_000);
+        assert_eq!(r.take_u64().unwrap(), 1 << 40);
+        assert_eq!(r.take_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.take_f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.take_str().unwrap(), "héllo");
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn arrays_roundtrip_bit_exact() {
+        let f = vec![1.5f32, f32::NAN, -0.0, f32::INFINITY, 1e-40];
+        let u = vec![0u32, 1, u32::MAX];
+        let mut w = WireWriter::new();
+        w.put_f32s(&f);
+        w.put_u32s(&u);
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes);
+        let f2 = r.take_f32s().unwrap();
+        assert_eq!(
+            f.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            f2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(r.take_u32s().unwrap(), u);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn lying_count_is_truncated_not_alloc() {
+        // Declares 2^61 floats in an 8-byte payload: the reader must
+        // refuse before allocating.
+        let mut w = WireWriter::new();
+        w.put_u64(1 << 61);
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes);
+        assert!(matches!(
+            r.take_f32s(),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn overflowing_count_is_malformed() {
+        let mut w = WireWriter::new();
+        w.put_u64(u64::MAX);
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes);
+        assert!(matches!(r.take_f32s(), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn truncated_scalar_and_string() {
+        let mut r = WireReader::new(&[1, 2]);
+        assert!(matches!(r.take_u32(), Err(WireError::Truncated { .. })));
+        let mut w = WireWriter::new();
+        w.put_u32(10); // 10-byte string, no bytes follow
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes);
+        assert!(matches!(r.take_str(), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn bad_utf8_is_malformed() {
+        let mut w = WireWriter::new();
+        w.put_u32(2);
+        let mut bytes = w.finish();
+        bytes.extend_from_slice(&[0xFF, 0xFE]);
+        let mut r = WireReader::new(&bytes);
+        assert!(matches!(r.take_str(), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut w = WireWriter::new();
+        w.put_u8(1);
+        w.put_u8(2);
+        let bytes = w.finish();
+        let mut r = WireReader::new(&bytes);
+        r.take_u8().unwrap();
+        assert!(matches!(r.expect_end(), Err(WireError::Malformed(_))));
+    }
+}

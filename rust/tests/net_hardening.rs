@@ -1,0 +1,538 @@
+//! Malformed-input hardening for the network serving layer (ISSUE 8,
+//! satellite 3): truncated frames, oversized length prefixes, bad
+//! magic/version/token, unknown tags, invalid CSR payloads, and
+//! mid-frame disconnects must surface as a structured error frame or a
+//! clean close — never a panic, a leaked quota slot, or a wedged
+//! batcher.
+//!
+//! One test arms the process-global fault hook, so every test in this
+//! binary serialises on `GATE` (and `scripts/verify.sh` additionally
+//! runs the suite with `--test-threads=1`).
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use fused3s::coordinator::{Coordinator, CoordinatorConfig, ExecutorKind};
+use fused3s::exec::ExecPolicy;
+use fused3s::fault::{self, FaultKind, FaultPlan, FaultSite};
+use fused3s::graph::{generators, CsrGraph};
+use fused3s::kernels::{AttnError, Backend};
+use fused3s::net::frame::{read_frame, write_frame, FrameError, MAGIC};
+use fused3s::net::proto::{
+    GraphRef, Msg, SubmitMsg, CODE_GRAPH_UNKNOWN, CODE_PROTOCOL, VERSION,
+};
+use fused3s::net::{NetClient, NetConfig, NetError, NetServer, WireRequest};
+use fused3s::util::prng::Rng;
+
+/// Serialises every test in this binary: one of them arms the
+/// process-global fault hook.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+const MAX: usize = 64 << 20;
+const D: usize = 4;
+
+fn serve(
+    cfg_mut: impl FnOnce(&mut CoordinatorConfig),
+    net_mut: impl FnOnce(&mut NetConfig),
+) -> (Arc<Coordinator>, NetServer) {
+    let mut cfg = CoordinatorConfig {
+        executor: ExecutorKind::HostEmulation,
+        preprocess_workers: 2,
+        queue_capacity: 16,
+        max_batch_requests: 1,
+        max_batch_delay: Duration::from_millis(300),
+        cache_capacity: 16,
+        exec: ExecPolicy::serial(),
+        ..CoordinatorConfig::default()
+    };
+    cfg_mut(&mut cfg);
+    let coord = Arc::new(Coordinator::start(cfg).expect("host coordinator"));
+    let mut net = NetConfig::default();
+    net_mut(&mut net);
+    let server = NetServer::serve(coord.clone(), net).expect("loopback bind");
+    (coord, server)
+}
+
+fn graph() -> CsrGraph {
+    generators::ring(16).with_self_loops()
+}
+
+fn features(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(n * D, 1.0),
+        rng.normal_vec(n * D, 1.0),
+        rng.normal_vec(n * D, 1.0),
+    )
+}
+
+/// Raw TCP connection that has completed a successful hello exchange.
+fn raw_connect(addr: SocketAddr) -> TcpStream {
+    let stream = TcpStream::connect(addr).expect("tcp connect");
+    let hello = Msg::ClientHello { version: VERSION, token: String::new() };
+    write_frame(&mut &stream, &hello.encode(), MAX).expect("hello");
+    let ack = read_frame(&mut &stream, MAX).expect("server hello");
+    assert!(
+        matches!(Msg::decode(&ack), Ok(Msg::ServerHello { ok: true, .. })),
+        "handshake must succeed before the hostile part of the test"
+    );
+    stream
+}
+
+/// A well-formed inline submit message (valid shapes, cpu_csr backend).
+fn good_submit(id: u64, g: &CsrGraph, seed: u64) -> Msg {
+    let (q, k, v) = features(g.n, seed);
+    Msg::Submit(SubmitMsg {
+        id,
+        graph: GraphRef::Inline(g.clone()),
+        d: D as u32,
+        dv: D as u32,
+        heads: 1,
+        scale: 0.5,
+        backend: "cpu_csr".into(),
+        deadline_micros: 0,
+        q,
+        k,
+        v,
+    })
+}
+
+/// Read one frame and decode it as a `Response`, returning
+/// `(id, Err((code, detail)))` or `(id, Ok(out_len))`.
+fn read_response(stream: &TcpStream) -> (u64, Result<usize, (u8, String)>) {
+    let payload = read_frame(&mut &*stream, MAX).expect("response frame");
+    match Msg::decode(&payload).expect("decode response") {
+        Msg::Response(r) => (r.id, r.payload.map(|ok| ok.out.len())),
+        _ => panic!("expected a response frame"),
+    }
+}
+
+/// The session must be gone: the next read yields EOF (or a reset,
+/// depending on how fast the server tore the socket down).
+fn assert_closed(stream: &TcpStream) {
+    match read_frame(&mut &*stream, MAX) {
+        Err(FrameError::Closed) | Err(FrameError::Io(_)) => {}
+        other => panic!("expected closed session, got {other:?}"),
+    }
+}
+
+/// The server survived: a brand-new client can still round-trip.
+fn assert_server_alive(addr: SocketAddr) {
+    let g = graph();
+    let (q, k, v) = features(g.n, 99);
+    let mut client = NetClient::connect(addr, "").expect("fresh connect");
+    client
+        .submit(&WireRequest::single_head(
+            424242,
+            &g,
+            D,
+            &q,
+            &k,
+            &v,
+            0.5,
+            Backend::CpuCsr,
+        ))
+        .expect("fresh submit")
+        .result
+        .expect("fresh result");
+    client.close();
+}
+
+#[test]
+fn bad_magic_is_session_fatal_not_server_fatal() {
+    let _g = gate();
+    let (coord, server) = serve(|_| {}, |_| {});
+    let stream = raw_connect(server.local_addr());
+    (&stream)
+        .write_all(&[0xDE, 0xAD, 0xBE, 0xEF, 4, 0, 0, 0, 1, 2, 3, 4])
+        .expect("write garbage");
+    let (id, payload) = read_response(&stream);
+    assert_eq!(id, 0, "protocol fatals carry the sentinel id 0");
+    assert_eq!(payload.expect_err("must be an error").0, CODE_PROTOCOL);
+    assert_closed(&stream);
+    assert!(coord.metrics().net.protocol_errors() >= 1);
+    assert_server_alive(server.local_addr());
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn oversize_length_prefix_is_rejected_before_allocation() {
+    let _g = gate();
+    let (coord, server) = serve(|_| {}, |_| {});
+    let stream = raw_connect(server.local_addr());
+    // A hostile header claiming a 4 GiB frame: the server must answer
+    // with a structured fatal (it never allocates the claimed buffer).
+    let mut hdr = Vec::new();
+    hdr.extend_from_slice(&MAGIC.to_le_bytes());
+    hdr.extend_from_slice(&u32::MAX.to_le_bytes());
+    (&stream).write_all(&hdr).expect("write oversize header");
+    let (id, payload) = read_response(&stream);
+    assert_eq!(id, 0);
+    assert_eq!(payload.expect_err("must be an error").0, CODE_PROTOCOL);
+    assert_closed(&stream);
+    assert_server_alive(server.local_addr());
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn truncated_frame_with_disconnect_cannot_wedge_the_server() {
+    let _g = gate();
+    let (coord, server) = serve(|_| {}, |_| {});
+    let stream = raw_connect(server.local_addr());
+    // Header promises 100 payload bytes; deliver 10 and cut the write
+    // side.  The server's read_exact sees UnexpectedEof → Truncated.
+    let mut partial = Vec::new();
+    partial.extend_from_slice(&MAGIC.to_le_bytes());
+    partial.extend_from_slice(&100u32.to_le_bytes());
+    partial.extend_from_slice(&[7u8; 10]);
+    (&stream).write_all(&partial).expect("write partial frame");
+    stream
+        .shutdown(std::net::Shutdown::Write)
+        .expect("half-close write side");
+    let (id, payload) = read_response(&stream);
+    assert_eq!(id, 0);
+    assert_eq!(payload.expect_err("must be an error").0, CODE_PROTOCOL);
+    assert_closed(&stream);
+    assert_server_alive(server.local_addr());
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn wrong_protocol_version_rejected_in_hello() {
+    let _g = gate();
+    let (coord, server) = serve(|_| {}, |_| {});
+    let stream =
+        TcpStream::connect(server.local_addr()).expect("tcp connect");
+    let hello = Msg::ClientHello { version: 99, token: String::new() };
+    write_frame(&mut &stream, &hello.encode(), MAX).expect("hello");
+    let ack = read_frame(&mut &stream, MAX).expect("rejection hello");
+    match Msg::decode(&ack).expect("decode") {
+        Msg::ServerHello { ok, detail, .. } => {
+            assert!(!ok);
+            assert!(
+                detail.contains("version"),
+                "rejection must name the version mismatch: {detail:?}"
+            );
+        }
+        _ => panic!("expected a server hello"),
+    }
+    assert_closed(&stream);
+    assert!(coord.metrics().net.protocol_errors() >= 1);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn bad_token_rejected_and_counted_good_token_still_works() {
+    let _g = gate();
+    let (coord, server) =
+        serve(|_| {}, |net| net.auth_tokens = vec!["sesame".to_string()]);
+    let err = NetClient::connect(server.local_addr(), "wrong")
+        .err()
+        .expect("wrong token must be rejected");
+    match err {
+        NetError::Rejected(detail) => {
+            assert!(
+                detail.contains("invalid auth token"),
+                "unexpected rejection detail {detail:?}"
+            );
+        }
+        other => panic!("expected auth rejection, got {other:?}"),
+    }
+    assert_eq!(coord.metrics().net.auth_failures(), 1);
+    // The failed attempt must not poison the listener for honest clients.
+    let g = graph();
+    let (q, k, v) = features(g.n, 5);
+    let mut client = NetClient::connect(server.local_addr(), "sesame")
+        .expect("authorized connect");
+    client
+        .submit(&WireRequest::single_head(
+            1,
+            &g,
+            D,
+            &q,
+            &k,
+            &v,
+            0.5,
+            Backend::CpuCsr,
+        ))
+        .expect("submit")
+        .result
+        .expect("result");
+    client.close();
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_message_tag_is_session_fatal() {
+    let _g = gate();
+    let (coord, server) = serve(|_| {}, |_| {});
+    let stream = raw_connect(server.local_addr());
+    write_frame(&mut &stream, &[42u8], MAX).expect("unknown tag frame");
+    let (id, payload) = read_response(&stream);
+    assert_eq!(id, 0);
+    assert_eq!(payload.expect_err("must be an error").0, CODE_PROTOCOL);
+    assert_closed(&stream);
+    assert_server_alive(server.local_addr());
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn malformed_csr_is_rejected_at_decode() {
+    let _g = gate();
+    let (coord, server) = serve(|_| {}, |_| {});
+    let stream = raw_connect(server.local_addr());
+    // A CSR no in-process constructor can produce: non-monotone indptr.
+    // `Msg::encode` serialises whatever it is given; the server-side
+    // decode re-checks every invariant precisely because the network is
+    // the one entry point that bypasses `CsrGraph::from_edges`.
+    let bad = CsrGraph {
+        n: 4,
+        indptr: vec![0, 3, 2, 5, 6],
+        indices: vec![0, 1, 2, 3, 0, 1],
+    };
+    let msg = Msg::Submit(SubmitMsg {
+        id: 9,
+        graph: GraphRef::Inline(bad),
+        d: D as u32,
+        dv: D as u32,
+        heads: 1,
+        scale: 0.5,
+        backend: "cpu_csr".into(),
+        deadline_micros: 0,
+        q: vec![0.0; 16],
+        k: vec![0.0; 16],
+        v: vec![0.0; 16],
+    });
+    write_frame(&mut &stream, &msg.encode(), MAX).expect("bad csr frame");
+    let (id, payload) = read_response(&stream);
+    assert_eq!(id, 0, "decode failures are session-fatal, sentinel id");
+    assert_eq!(payload.expect_err("must be an error").0, CODE_PROTOCOL);
+    assert_closed(&stream);
+    assert_server_alive(server.local_addr());
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn bad_shape_is_structured_and_the_session_survives() {
+    let _g = gate();
+    let (coord, server) = serve(|_| {}, |_| {});
+    let g = graph();
+    let (q, k, v) = features(g.n, 21);
+    let mut client =
+        NetClient::connect(server.local_addr(), "").expect("connect");
+    // q three floats short of n*d: decodes fine (length-prefixed), fails
+    // request validation in the batcher, and must come back as a typed
+    // BadShape on the same connection.
+    let short_q = &q[..q.len() - 3];
+    let bad = WireRequest::single_head(
+        1,
+        &g,
+        D,
+        short_q,
+        &k,
+        &v,
+        0.5,
+        Backend::CpuCsr,
+    );
+    let resp = client.submit(&bad).expect("transport must stay healthy");
+    assert!(
+        matches!(resp.result, Err(AttnError::BadShape(_))),
+        "want BadShape, got {:?}",
+        resp.result.map(|o| o.len())
+    );
+    // Same client, correct shapes: the error released its quota slot and
+    // left the session usable.
+    let good =
+        WireRequest::single_head(2, &g, D, &q, &k, &v, 0.5, Backend::CpuCsr);
+    client.submit(&good).expect("submit").result.expect("result");
+    client.close();
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn error_paths_do_not_leak_quota_slots() {
+    let _g = gate();
+    // Tiny per-session quota so a single leaked slot would deadlock the
+    // pipelined phase below (and fail the test by timeout).
+    let (coord, server) = serve(|_| {}, |net| net.max_inflight = 2);
+    let stream = raw_connect(server.local_addr());
+    let g = graph();
+
+    // Phase 1: six fingerprint misses — answered without touching quota.
+    for id in 1..=6u64 {
+        let msg = Msg::Submit(SubmitMsg {
+            id,
+            graph: GraphRef::Fingerprint {
+                fp: 0xDEAD_0000 + id,
+                n: g.n as u32,
+                nnz: g.indices.len() as u32,
+            },
+            d: D as u32,
+            dv: D as u32,
+            heads: 1,
+            scale: 0.5,
+            backend: "cpu_csr".into(),
+            deadline_micros: 0,
+            q: vec![0.0; g.n * D],
+            k: vec![0.0; g.n * D],
+            v: vec![0.0; g.n * D],
+        });
+        write_frame(&mut &stream, &msg.encode(), MAX).expect("miss frame");
+        let (rid, payload) = read_response(&stream);
+        assert_eq!(rid, id);
+        assert_eq!(
+            payload.expect_err("unknown graph must error").0,
+            CODE_GRAPH_UNKNOWN
+        );
+    }
+
+    // Phase 2: four pipelined bad-shape submits.  Each acquires a quota
+    // slot; with quota 2, submits 3 and 4 only get admitted if the error
+    // responses for 1 and 2 released theirs.
+    for id in 10..=13u64 {
+        let mut msg = good_submit(id, &g, id);
+        if let Msg::Submit(s) = &mut msg {
+            s.q.truncate(s.q.len() - 3);
+        }
+        write_frame(&mut &stream, &msg.encode(), MAX).expect("bad frame");
+    }
+    let mut ids = Vec::new();
+    for _ in 0..4 {
+        let (rid, payload) = read_response(&stream);
+        payload.expect_err("short q must fail validation");
+        ids.push(rid);
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, vec![10, 11, 12, 13]);
+
+    // Phase 3: three pipelined good submits through the same quota.
+    for id in 20..=22u64 {
+        write_frame(&mut &stream, &good_submit(id, &g, id).encode(), MAX)
+            .expect("good frame");
+    }
+    let mut ids = Vec::new();
+    for _ in 0..3 {
+        let (rid, payload) = read_response(&stream);
+        payload.expect("good submit must succeed");
+        ids.push(rid);
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, vec![20, 21, 22]);
+    drop(stream);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn mid_frame_disconnect_leaves_other_sessions_unaffected() {
+    let _g = gate();
+    let (coord, server) = serve(|_| {}, |_| {});
+    let addr = server.local_addr();
+    let g = graph();
+    let (q, k, v) = features(g.n, 33);
+    // Honest client connects first …
+    let mut honest = NetClient::connect(addr, "").expect("connect");
+    // … then a peer dies mid-frame.
+    let hostile = raw_connect(addr);
+    let mut partial = Vec::new();
+    partial.extend_from_slice(&MAGIC.to_le_bytes());
+    partial.extend_from_slice(&64u32.to_le_bytes());
+    partial.extend_from_slice(&[1u8; 8]);
+    (&hostile).write_all(&partial).expect("write partial frame");
+    drop(hostile);
+    // The honest session keeps serving.
+    for id in 0..3u64 {
+        honest
+            .submit(&WireRequest::single_head(
+                id,
+                &g,
+                D,
+                &q,
+                &k,
+                &v,
+                0.5,
+                Backend::CpuCsr,
+            ))
+            .expect("submit")
+            .result
+            .expect("result");
+    }
+    honest.close();
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn injected_faults_surface_as_structured_wire_errors() {
+    let _g = gate();
+    // Short quarantine so the post-fault recovery check converges fast.
+    let (coord, server) = serve(
+        |cfg| cfg.quarantine_ttl = Duration::from_millis(200),
+        |_| {},
+    );
+    let g = graph();
+    let (q, k, v) = features(g.n, 44);
+    let mut client =
+        NetClient::connect(server.local_addr(), "").expect("connect");
+
+    let guard = fault::install(
+        FaultPlan::new(7).with(FaultSite::Prepare, FaultKind::Error, 1.0),
+    );
+    let req =
+        WireRequest::single_head(1, &g, D, &q, &k, &v, 0.5, Backend::CpuCsr);
+    // The transport must stay healthy whatever the fault does; the
+    // degradation ladder may still serve a fallback (Ok) or exhaust into
+    // a typed error — both are structured outcomes, never a dead socket.
+    let resp = client.submit(&req).expect("transport survives faults");
+    if let Err(e) = resp.result {
+        assert!(
+            matches!(e, AttnError::Prepare(_) | AttnError::Execute(_)),
+            "fault must map to a typed prepare/execute error, got {e:?}"
+        );
+    }
+    drop(guard);
+
+    // Recovery: once the hook is gone and any quarantine expires, the
+    // same session serves normally again.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut id = 100u64;
+    loop {
+        let req = WireRequest::single_head(
+            id,
+            &g,
+            D,
+            &q,
+            &k,
+            &v,
+            0.5,
+            Backend::CpuCsr,
+        );
+        let resp = client.submit(&req).expect("transport alive");
+        if resp.result.is_ok() {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "coordinator did not recover after fault hook removal"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+        id += 1;
+    }
+    client.close();
+    server.shutdown();
+    coord.shutdown();
+}

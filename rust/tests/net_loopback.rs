@@ -1,0 +1,470 @@
+//! Loopback differential suite for the network serving layer (ISSUE 8):
+//! responses served over real TCP must bit-match the in-process
+//! `Coordinator::submit` path — same backends, same graphs, same
+//! features — and the fingerprint handshake must eliminate repeat CSR
+//! uploads end to end (client stats, server net counters, and
+//! DriverCache hits all agree).
+//!
+//! Everything runs offline (`ExecutorKind::HostEmulation`, no
+//! artifacts).  `scripts/verify.sh` runs this file explicitly with
+//! `--test-threads=1`.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fused3s::coordinator::{
+    AttnRequest, Coordinator, CoordinatorConfig, ExecutorKind,
+};
+use fused3s::exec::ExecPolicy;
+use fused3s::graph::{generators, CsrGraph};
+use fused3s::kernels::{AttnError, Backend};
+use fused3s::net::{NetClient, NetConfig, NetServer, WireRequest};
+use fused3s::planner::resolve_offline;
+use fused3s::util::prng::Rng;
+
+fn host_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        executor: ExecutorKind::HostEmulation,
+        preprocess_workers: 2,
+        queue_capacity: 16,
+        max_batch_requests: 1, // singleton batches: deterministic outputs
+        max_batch_delay: Duration::from_millis(300),
+        cache_capacity: 16,
+        // Serial host execution keeps outputs independent of thread
+        // scheduling, so wire vs in-process comparisons are bit-exact.
+        exec: ExecPolicy::serial(),
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn serve_host(
+    cfg_mut: impl FnOnce(&mut CoordinatorConfig),
+    net_mut: impl FnOnce(&mut NetConfig),
+) -> (Arc<Coordinator>, NetServer) {
+    let mut cfg = host_config();
+    cfg_mut(&mut cfg);
+    let coord = Arc::new(Coordinator::start(cfg).expect("host coordinator"));
+    let mut net = NetConfig::default();
+    net_mut(&mut net);
+    let server = NetServer::serve(coord.clone(), net).expect("loopback bind");
+    (coord, server)
+}
+
+fn features(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+    )
+}
+
+/// In-process reference: one blocking submit through the same coordinator.
+fn submit_inproc(
+    coord: &Coordinator,
+    id: u64,
+    g: &CsrGraph,
+    d: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    backend: Backend,
+) -> Vec<f32> {
+    let (tx, rx) = channel();
+    coord
+        .submit(AttnRequest::single_head(
+            id,
+            g.clone(),
+            d,
+            q.to_vec(),
+            k.to_vec(),
+            v.to_vec(),
+            0.25,
+            backend,
+            tx,
+        ))
+        .expect("in-process submit");
+    rx.recv_timeout(Duration::from_secs(120))
+        .expect("in-process response")
+        .result
+        .expect("in-process result")
+}
+
+#[test]
+fn wire_bit_matches_inprocess_across_backends() {
+    let (coord, server) = serve_host(|_| {}, |_| {});
+    let mut client =
+        NetClient::connect(server.local_addr(), "").expect("connect");
+    let d = 16;
+    let g = generators::erdos_renyi(300, 5.0, 11).with_self_loops();
+    let (q, k, v) = features(g.n, d, 7);
+    for (i, backend) in [
+        Backend::Fused3S,
+        Backend::Hybrid,
+        Backend::UnfusedStable,
+        Backend::CpuCsr,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let id = 1000 + i as u64;
+        let req =
+            WireRequest::single_head(id, &g, d, &q, &k, &v, 0.25, backend);
+        let wire = client.submit(&req).expect("wire submit");
+        assert_eq!(wire.id, id);
+        let wire_out = wire.result.expect("wire result");
+        let local_out =
+            submit_inproc(&coord, 2000 + i as u64, &g, d, &q, &k, &v, backend);
+        assert_eq!(
+            wire_out,
+            local_out,
+            "{}: wire response diverged from in-process submit",
+            backend.name()
+        );
+        assert_eq!(wire.batch_size, 1);
+    }
+    client.close();
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn wire_auto_resolves_like_offline_planner() {
+    // The resolve-offline-first idiom: a FRESH coordinator's first Auto
+    // request resolves with zero observations, i.e. with the same factory
+    // cost model `resolve_offline` uses locally.
+    let g = generators::erdos_renyi(400, 5.0, 41).with_self_loops();
+    let expected = resolve_offline(&g).backend;
+    let d = 16;
+    let (q, k, v) = features(g.n, d, 42);
+
+    let (coord, server) = serve_host(|_| {}, |_| {});
+    let mut client =
+        NetClient::connect(server.local_addr(), "").expect("connect");
+    let auto = client
+        .submit(&WireRequest::single_head(
+            1,
+            &g,
+            d,
+            &q,
+            &k,
+            &v,
+            0.25,
+            Backend::Auto,
+        ))
+        .expect("auto over wire");
+    let auto_out = auto.result.expect("auto result");
+    assert_eq!(
+        auto.backend,
+        Some(expected),
+        "wire response must report the planner's resolution"
+    );
+    let forced_out = submit_inproc(&coord, 2, &g, d, &q, &k, &v, expected);
+    assert_eq!(auto_out, forced_out, "auto-over-wire diverged from forced");
+    let m = coord.metrics();
+    assert_eq!(m.planner.auto_requests(), 1);
+    assert_eq!(m.planner.resolved_counts(), vec![(expected.name(), 1)]);
+    client.close();
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn fingerprint_handshake_eliminates_repeat_uploads() {
+    let (coord, server) = serve_host(|_| {}, |_| {});
+    let d = 8;
+    let g = generators::erdos_renyi(200, 4.0, 3).with_self_loops();
+    let repeats = 5usize;
+
+    let mut client =
+        NetClient::connect(server.local_addr(), "").expect("connect");
+    for r in 0..=repeats {
+        let (q, k, v) = features(g.n, d, 100 + r as u64);
+        let resp = client
+            .submit(&WireRequest::single_head(
+                r as u64,
+                &g,
+                d,
+                &q,
+                &k,
+                &v,
+                0.5,
+                Backend::CpuCsr,
+            ))
+            .expect("submit");
+        resp.result.expect("result");
+    }
+    let s = client.stats();
+    assert_eq!(s.graph_uploads, 1, "first sight uploads the CSR once");
+    assert_eq!(s.upload_skips, repeats as u64, "repeats ride the fingerprint");
+    assert!(
+        s.graph_bytes_uploaded * repeats as u64 <= s.graph_bytes_naive,
+        "measured upload bytes must drop vs naive: {} vs {}",
+        s.graph_bytes_uploaded,
+        s.graph_bytes_naive
+    );
+    client.close();
+
+    let m = coord.metrics();
+    assert_eq!(m.net.graph_uploads(), 1);
+    assert_eq!(m.net.graph_reuses(), repeats as u64);
+    // Behind the wire handshake sits the DriverCache keyed by the same
+    // fingerprint: every repeat is also a plan-cache hit.
+    assert!(
+        m.batching.cache_hits() >= repeats as u64,
+        "cache hits {} < {repeats}",
+        m.batching.cache_hits()
+    );
+
+    // A second connection benefits from the first one's upload: the store
+    // is shared server-side, so GraphQuery answers known and this client
+    // never uploads at all.
+    let mut client2 =
+        NetClient::connect(server.local_addr(), "").expect("connect 2");
+    let (q, k, v) = features(g.n, d, 999);
+    client2
+        .submit(&WireRequest::single_head(
+            77,
+            &g,
+            d,
+            &q,
+            &k,
+            &v,
+            0.5,
+            Backend::CpuCsr,
+        ))
+        .expect("submit on second connection")
+        .result
+        .expect("result");
+    let s2 = client2.stats();
+    assert_eq!(s2.graph_uploads, 0, "cross-connection graph reuse");
+    assert_eq!(s2.upload_skips, 1);
+    client2.close();
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_bit_match_reference() {
+    let (coord, server) = serve_host(|_| {}, |_| {});
+    let addr = server.local_addr();
+    let d = 8;
+    let g = generators::erdos_renyi(150, 4.0, 17).with_self_loops();
+    let (q, k, v) = features(g.n, d, 23);
+    let reference =
+        submit_inproc(&coord, 9000, &g, d, &q, &k, &v, Backend::CpuCsr);
+
+    let shared = Arc::new((g, q, k, v));
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let shared = shared.clone();
+        handles.push(std::thread::spawn(move || {
+            let (g, q, k, v) = &*shared;
+            let mut client = NetClient::connect(addr, "").expect("connect");
+            let mut outs = Vec::new();
+            for r in 0..3u64 {
+                let resp = client
+                    .submit(&WireRequest::single_head(
+                        c << 8 | r,
+                        g,
+                        d,
+                        q,
+                        k,
+                        v,
+                        0.25,
+                        Backend::CpuCsr,
+                    ))
+                    .expect("submit");
+                outs.push(resp.result.expect("result"));
+            }
+            client.close();
+            outs
+        }));
+    }
+    for h in handles {
+        for out in h.join().expect("client thread") {
+            assert_eq!(out, reference, "concurrent wire output diverged");
+        }
+    }
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn deadline_shed_travels_as_structured_error() {
+    // A parked request (large batch-delay, waiting for company that never
+    // comes) sheds at its deadline; the shed must cross the wire as the
+    // structured `DeadlineExceeded`, not a closed connection.
+    let (coord, server) = serve_host(
+        |cfg| {
+            cfg.max_batch_delay = Duration::from_secs(5);
+            cfg.max_batch_requests = 64;
+        },
+        |_| {},
+    );
+    let mut client =
+        NetClient::connect(server.local_addr(), "").expect("connect");
+    let d = 4;
+    let g = generators::ring(16).with_self_loops();
+    let (q, k, v) = features(g.n, d, 5);
+    let mut req =
+        WireRequest::single_head(1, &g, d, &q, &k, &v, 1.0, Backend::CpuCsr);
+    req.deadline = Some(Duration::from_millis(100));
+    let resp = client.submit(&req).expect("transport must stay healthy");
+    assert!(
+        matches!(resp.result, Err(AttnError::DeadlineExceeded)),
+        "want DeadlineExceeded, got {:?}",
+        resp.result.map(|v| v.len())
+    );
+    // The session survives a shed: the next (deadline-free) request works.
+    let ok = client
+        .submit(&WireRequest::single_head(
+            2,
+            &g,
+            d,
+            &q,
+            &k,
+            &v,
+            1.0,
+            Backend::CpuCsr,
+        ))
+        .expect("submit after shed");
+    ok.result.expect("post-shed result");
+    assert_eq!(coord.metrics().faults.deadline_sheds(), 1);
+    client.close();
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn pipelined_submits_all_answered() {
+    // Hand-rolled pipelining (NetClient is lock-step by design): push 3
+    // submit frames before reading any response, then collect all 3.
+    // Responses may arrive in any completion order.
+    use fused3s::net::frame::{read_frame, write_frame};
+    use fused3s::net::proto::{GraphRef, Msg, SubmitMsg, VERSION};
+
+    let (coord, server) = serve_host(|_| {}, |_| {});
+    let stream = std::net::TcpStream::connect(server.local_addr())
+        .expect("tcp connect");
+    let max = 64 << 20;
+    let hello = Msg::ClientHello { version: VERSION, token: String::new() };
+    write_frame(&mut &stream, &hello.encode(), max).expect("hello");
+    let ack = read_frame(&mut &stream, max).expect("server hello");
+    assert!(matches!(
+        Msg::decode(&ack).expect("decode hello"),
+        Msg::ServerHello { ok: true, .. }
+    ));
+
+    let d = 4usize;
+    let g = generators::ring(24).with_self_loops();
+    let (q, k, v) = features(g.n, d, 13);
+    for id in 1..=3u64 {
+        let msg = Msg::Submit(SubmitMsg {
+            id,
+            graph: GraphRef::Inline(g.clone()),
+            d: d as u32,
+            dv: d as u32,
+            heads: 1,
+            scale: 1.0,
+            backend: "cpu_csr".into(),
+            deadline_micros: 0,
+            q: q.clone(),
+            k: k.clone(),
+            v: v.clone(),
+        });
+        write_frame(&mut &stream, &msg.encode(), max).expect("submit frame");
+    }
+    let mut ids = Vec::new();
+    for _ in 0..3 {
+        let payload = read_frame(&mut &stream, max).expect("response frame");
+        match Msg::decode(&payload).expect("decode response") {
+            Msg::Response(r) => {
+                r.payload.expect("pipelined request must succeed");
+                ids.push(r.id);
+            }
+            _ => panic!("expected a response frame"),
+        }
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 2, 3], "every pipelined submit answered");
+    drop(stream);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_requests() {
+    let (coord, server) = serve_host(|_| {}, |_| {});
+    let addr = server.local_addr();
+    let d = 8;
+    let g = generators::erdos_renyi(200, 4.0, 29).with_self_loops();
+    let (q, k, v) = features(g.n, d, 31);
+
+    let worker = std::thread::spawn(move || {
+        let mut client = NetClient::connect(addr, "").expect("connect");
+        let mut completed = 0u64;
+        for r in 0..10_000u64 {
+            let req = WireRequest::single_head(
+                r,
+                &g,
+                d,
+                &q,
+                &k,
+                &v,
+                0.25,
+                Backend::CpuCsr,
+            );
+            match client.submit(&req) {
+                Ok(resp) => {
+                    // Drained responses are real results, not garbage.
+                    resp.result.expect("drained response is a result");
+                    completed += 1;
+                }
+                // The drain cut the read side: transport error, clean exit.
+                Err(_) => break,
+            }
+        }
+        completed
+    });
+
+    // Let a few requests land, then drain mid-stream.
+    std::thread::sleep(Duration::from_millis(150));
+    server.shutdown();
+    let completed =
+        worker.join().expect("client thread exits cleanly after drain");
+    assert!(completed >= 1, "no request completed before the drain");
+    coord.shutdown();
+}
+
+#[test]
+fn token_auth_happy_path() {
+    let (coord, server) = serve_host(
+        |_| {},
+        |net| net.auth_tokens = vec!["sesame".to_string()],
+    );
+    let mut client = NetClient::connect(server.local_addr(), "sesame")
+        .expect("authorized connect");
+    let d = 4;
+    let g = generators::ring(16).with_self_loops();
+    let (q, k, v) = features(g.n, d, 37);
+    client
+        .submit(&WireRequest::single_head(
+            1,
+            &g,
+            d,
+            &q,
+            &k,
+            &v,
+            1.0,
+            Backend::CpuCsr,
+        ))
+        .expect("submit")
+        .result
+        .expect("result");
+    assert_eq!(coord.metrics().net.auth_failures(), 0);
+    client.close();
+    server.shutdown();
+    coord.shutdown();
+}

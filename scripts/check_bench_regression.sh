@@ -1,0 +1,108 @@
+#!/usr/bin/env bash
+# Bench-baseline regression check (ISSUE 8, satellite 1).
+#
+# The repo pins normalized bench baselines at the root (BENCH_*.json).
+# `scripts/verify.sh` already fails when a baseline is *missing*; this
+# script goes further and fails when a freshly *regenerated* baseline
+# drifts outside a per-bench tolerance band:
+#
+#   * BENCH_packing.json  — regenerated via the deterministic reference
+#     model (scripts/packing_model.py --write): integer plan arithmetic,
+#     so the committed and fresh cell ratios must agree to ±0.02 abs.
+#     Any drift means the packing arithmetic (or its PRNG) changed.
+#   * BENCH_planner.json  — timing ratios, machine-scaled but still
+#     noisy; only checked when the file exists AND differs from the
+#     committed HEAD copy (i.e. `cargo bench --bench planner` was just
+#     rerun).  Each backend's time-ratio may move ±50% relative before
+#     we call it a regression.
+#
+# The committed packing baseline is restored after regeneration, so the
+# check never dirties the work tree.  Exit 0 with a warning when python3
+# is unavailable (the comparison needs it).
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "WARN: python3 unavailable, bench regression check skipped"
+    exit 0
+fi
+
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+# --- packing: deterministic, tight band ---------------------------------
+PACK="$ROOT/BENCH_packing.json"
+if [ -f "$PACK" ]; then
+    cp "$PACK" "$tmp/packing_committed.json"
+    python3 "$ROOT/scripts/packing_model.py" --write >/dev/null
+    mv "$PACK" "$tmp/packing_fresh.json"
+    # Restore the committed baseline *before* comparing so a failed
+    # comparison still leaves the tree clean.
+    cp "$tmp/packing_committed.json" "$PACK"
+    python3 - "$tmp/packing_committed.json" "$tmp/packing_fresh.json" <<'EOF'
+import json, sys
+
+TOL = 0.02  # absolute, on normalized cell ratios
+committed = json.load(open(sys.argv[1]))
+fresh = json.load(open(sys.argv[2]))
+cg, fg = committed["graphs"], fresh["graphs"]
+bad = 0
+for name in sorted(set(cg) | set(fg)):
+    if name not in cg or name not in fg:
+        print(f"packing: graph set changed: {name!r} present on one side only")
+        bad = 1
+        continue
+    for key in ("padded_cell_ratio", "dispatched_cell_ratio"):
+        a, b = float(cg[name][key]), float(fg[name][key])
+        if abs(a - b) > TOL:
+            print(
+                f"packing REGRESSION: {name}.{key}: committed {a:.6f} "
+                f"vs fresh {b:.6f} (tol +-{TOL})"
+            )
+            bad = 1
+sys.exit(bad)
+EOF
+    echo "packing baseline OK (fresh model within +-0.02 of committed)"
+else
+    echo "WARN: BENCH_packing.json absent, packing regression check skipped"
+fi
+
+# --- planner: timing ratios, wide band, only when freshly rerun ---------
+PLAN="$ROOT/BENCH_planner.json"
+if [ -f "$PLAN" ] \
+    && git -C "$ROOT" ls-files --error-unmatch BENCH_planner.json \
+        >/dev/null 2>&1; then
+    if git -C "$ROOT" diff --quiet -- BENCH_planner.json; then
+        echo "planner baseline unchanged vs HEAD (bench not rerun) — skipped"
+    else
+        git -C "$ROOT" show HEAD:BENCH_planner.json \
+            >"$tmp/planner_head.json"
+        python3 - "$tmp/planner_head.json" "$PLAN" <<'EOF'
+import json, sys
+
+TOL = 0.50  # relative, on time ratios (timing benches are noisy)
+head = json.load(open(sys.argv[1]))
+cur = json.load(open(sys.argv[2]))
+hg, cg = head["generators"], cur["generators"]
+bad = 0
+for gen in sorted(set(hg) & set(cg)):
+    for key, v in hg[gen].items():
+        if key == "resolved" or key not in cg[gen]:
+            continue
+        a, b = float(v), float(cg[gen][key])
+        if a > 0 and abs(b - a) / a > TOL:
+            print(
+                f"planner REGRESSION: {gen}.{key}: HEAD ratio {a:.4f} "
+                f"vs fresh {b:.4f} (tol +-{TOL*100:.0f}% rel)"
+            )
+            bad = 1
+sys.exit(bad)
+EOF
+        echo "planner baseline OK (fresh ratios within +-50% of HEAD)"
+    fi
+else
+    echo "planner baseline absent or untracked (timing bench) — skipped"
+fi
+
+echo "bench regression check OK"

@@ -53,6 +53,14 @@ grep -q '"padded_cell_ratio"' "$REPO_ROOT/BENCH_packing.json" || {
     echo "BENCH_packing.json lacks padded_cell_ratio entries"; exit 1; }
 echo "bench baseline presence OK"
 
+# ISSUE-8 regression gate: a *present but stale* baseline is as dangerous
+# as a missing one.  Regenerate the deterministic packing baseline from
+# the reference model and diff it against the committed copy (±0.02 abs
+# on cell ratios); compare a freshly rerun planner baseline against HEAD
+# (±50% rel on time ratios).  Restores the committed files afterwards.
+echo "== bench regression check (scripts/check_bench_regression.sh)"
+"$REPO_ROOT/scripts/check_bench_regression.sh"
+
 # ISSUE-6 hygiene gate: the coordinator and executor hot paths must not
 # grow new bare `unwrap()`/`expect()` calls — lock poisoning and fallible
 # seams go through util::sync::lock_unpoisoned or structured AttnError.
@@ -60,8 +68,10 @@ echo "bench baseline presence OK"
 # the comment block directly above it) says why with the word "invariant".
 # Test modules (everything after `#[cfg(test)]`) are exempt.  ISSUE 7
 # extends the file set with the geometry router and the hybrid driver —
-# new dispatch-path modules inherit the same hygiene bar.
-echo "== unwrap/expect lint (src/coordinator, src/exec, src/bsb/geometry.rs, src/kernels/hybrid.rs)"
+# new dispatch-path modules inherit the same hygiene bar; ISSUE 8 adds
+# the network serving layer (src/net/), which parses hostile input and
+# so must never unwrap its way into a session panic.
+echo "== unwrap/expect lint (src/coordinator, src/exec, src/bsb/geometry.rs, src/kernels/hybrid.rs, src/net)"
 awk '
     FNR == 1 { intest = 0; inv = 0 }
     /#\[cfg\(test\)\]/ { intest = 1 }
@@ -79,7 +89,8 @@ awk '
         inv = 0
     }
     END { exit bad }
-' src/coordinator/*.rs src/exec/*.rs src/bsb/geometry.rs src/kernels/hybrid.rs
+' src/coordinator/*.rs src/exec/*.rs src/bsb/geometry.rs \
+    src/kernels/hybrid.rs src/net/*.rs
 echo "unwrap/expect lint OK"
 
 if cargo fmt --version >/dev/null 2>&1; then
@@ -145,6 +156,16 @@ cargo test -q --test coordinator_stress --test coordinator_integration \
 # fault counters.  Serialized: the fault hook is process-global.
 echo "== chaos suite (--test-threads=1)"
 cargo test -q --test chaos -- --test-threads=1
+
+# The ISSUE-8 serving suite: responses served over loopback TCP must
+# bit-match the in-process submit path (per-backend and Backend::Auto,
+# fingerprint handshake, drain-on-shutdown), and hostile frames —
+# truncations, oversize prefixes, bad magic/version/token, invalid CSR,
+# mid-frame disconnects — must end in a structured error or clean close,
+# never a panic or leaked quota slot.  Serialized: the hardening suite
+# arms the process-global fault hook.
+echo "== net suite (--test-threads=1)"
+cargo test -q --test net_loopback --test net_hardening -- --test-threads=1
 
 # The redesigned public API must stay documented: rustdoc warnings
 # (broken intra-doc links, missing code-block languages, ...) are errors.

@@ -1,0 +1,208 @@
+//! `cargo bench streaming` — incremental BSB maintenance under churn
+//! (EXPERIMENTS.md §Streaming): delta-rebuild vs from-scratch build as a
+//! function of the dirty-window fraction.
+//!
+//! Each churn level evolves the `er_2048` workload through 8 seeded edit
+//! batches.  Two kinds of numbers come out:
+//!
+//! * **structural** (deterministic, machine-independent) — the dirty /
+//!   spliced row-window fractions and the delta-vs-CSR wire-byte ratio.
+//!   `scripts/streaming_model.py` replicates these in plain Python and
+//!   must agree bit-for-bit; they are what `BENCH_streaming.json` pins.
+//! * **timing** (informational, machine-scaled) — median wall time of
+//!   `incremental::rebuild` vs `bsb::build` on the same patched graph,
+//!   printed per level but *not* snapshotted (wall clock does not survive
+//!   container changes; the structural fractions do).
+//!
+//! Gates (asserted): every incremental rebuild is bit-identical to the
+//! from-scratch build, and the dirty fraction grows monotonically with
+//! the edit rate.
+//!
+//! Env knobs: `F3S_BENCH_FULL=1` for full repeat counts.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use fused3s::bsb::{self, incremental};
+use fused3s::graph::{generators, CsrGraph, GraphDelta};
+use fused3s::net::proto::{csr_wire_bytes, delta_wire_bytes};
+use fused3s::util::prng::Rng;
+use fused3s::util::timing::{bench, BenchConfig};
+
+const STEPS: usize = 8;
+const SEED: u64 = 0xBEEF;
+const EDIT_LEVELS: &[usize] = &[16, 64, 256, 1024];
+
+/// Seeded mixed edit batch — kept in lockstep with
+/// `scripts/streaming_model.py::churn()` (same RNG call order).
+fn churn(g: &CsrGraph, edits: usize, rng: &mut Rng) -> (Vec<(u32, u32)>, Vec<(u32, u32)>) {
+    let mut ins = Vec::new();
+    let mut rem = Vec::new();
+    for _ in 0..edits {
+        if rng.coin(0.5) {
+            let u = rng.below(g.n);
+            let row = g.row(u);
+            if !row.is_empty() {
+                rem.push((u as u32, row[rng.below(row.len())]));
+                continue;
+            }
+        }
+        ins.push((rng.below(g.n) as u32, rng.below(g.n) as u32));
+    }
+    ins.retain(|e| !rem.contains(e));
+    (ins, rem)
+}
+
+struct Row {
+    edits: usize,
+    dirty_rw_fraction: f64,
+    spliced_fraction: f64,
+    effective_inserts: usize,
+    effective_removes: usize,
+    delta_bytes_ratio: f64,
+    incremental_ms: f64,
+    scratch_ms: f64,
+}
+
+fn measure(base: &CsrGraph, edits: usize, cfg: &BenchConfig) -> Row {
+    let mut rng = Rng::new(SEED);
+    let mut g = base.clone();
+    let mut old = bsb::build(&g);
+    let num_rw = old.num_rw as u64;
+
+    let mut dirtied = 0u64;
+    let mut inserted = 0usize;
+    let mut removed = 0usize;
+    let mut delta_bytes = 0u64;
+    let mut naive_bytes = 0u64;
+    let mut last_patched = g.clone();
+    let mut last_dirty: Vec<u32> = Vec::new();
+    for _ in 0..STEPS {
+        let (ins, rem) = churn(&g, edits, &mut rng);
+        delta_bytes += delta_wire_bytes(ins.len(), rem.len());
+        let delta = GraphDelta::against(&g, ins, rem);
+        let (patched, report) = delta.applied(&g).expect("bench delta");
+        naive_bytes += csr_wire_bytes(&patched);
+        dirtied += report.dirty_rws.len() as u64;
+        inserted += report.inserted;
+        removed += report.removed;
+
+        // Bit-identity gate on every step, not just the timed one.
+        let (inc, stats) = incremental::rebuild(&old, &patched, &report.dirty_rws);
+        let scratch = bsb::build(&patched);
+        assert_eq!(inc, scratch, "edits={edits}: incremental BSB diverged");
+        assert_eq!(stats.rebuilt, report.dirty_rws.len());
+        old = inc;
+        last_patched = patched.clone();
+        last_dirty = report.dirty_rws.clone();
+        g = patched;
+    }
+
+    // Time the final step's rebuild both ways (same inputs, same output).
+    let prev = old.clone();
+    let r_inc = bench(&format!("incremental e{edits}"), cfg, || {
+        let (b, _) = incremental::rebuild(&prev, &last_patched, &last_dirty);
+        assert_eq!(b.n, last_patched.n);
+    });
+    let r_scr = bench(&format!("scratch e{edits}"), cfg, || {
+        let b = bsb::build(&last_patched);
+        assert_eq!(b.n, last_patched.n);
+    });
+
+    let total = (num_rw * STEPS as u64) as f64;
+    let dirty_rw_fraction = dirtied as f64 / total;
+    Row {
+        edits,
+        dirty_rw_fraction,
+        spliced_fraction: 1.0 - dirty_rw_fraction,
+        effective_inserts: inserted,
+        effective_removes: removed,
+        delta_bytes_ratio: delta_bytes as f64 / naive_bytes as f64,
+        incremental_ms: r_inc.median_ms(),
+        scratch_ms: r_scr.median_ms(),
+    }
+}
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    println!(
+        "streaming: incremental rebuild vs from-scratch on er_2048, \
+         {STEPS} steps per level (full={full})"
+    );
+    let base = generators::erdos_renyi(2048, 6.0, 7).with_self_loops();
+
+    let mut rows = Vec::new();
+    for &edits in EDIT_LEVELS {
+        let row = measure(&base, edits, &cfg);
+        let speedup = if row.incremental_ms > 0.0 {
+            row.scratch_ms / row.incremental_ms
+        } else {
+            0.0
+        };
+        println!(
+            "{{\"bench\":\"streaming\",\"edits_per_step\":{},\
+             \"dirty_rw_fraction\":{:.6},\"spliced_fraction\":{:.6},\
+             \"effective_inserts\":{},\"effective_removes\":{},\
+             \"delta_bytes_ratio\":{:.6},\"incremental_ms\":{:.3},\
+             \"scratch_ms\":{:.3},\"rebuild_speedup\":{speedup:.3}}}",
+            row.edits,
+            row.dirty_rw_fraction,
+            row.spliced_fraction,
+            row.effective_inserts,
+            row.effective_removes,
+            row.delta_bytes_ratio,
+            row.incremental_ms,
+            row.scratch_ms,
+        );
+        rows.push(row);
+    }
+
+    // More churn must dirty more windows (strictly, given these levels).
+    for pair in rows.windows(2) {
+        assert!(
+            pair[0].dirty_rw_fraction < pair[1].dirty_rw_fraction,
+            "dirty fraction must grow with the edit rate: {} vs {}",
+            pair[0].dirty_rw_fraction,
+            pair[1].dirty_rw_fraction
+        );
+    }
+
+    // Snapshot the structural baseline (same schema as
+    // scripts/streaming_model.py --write; timing fields excluded).
+    let mut levels = String::new();
+    let mut sorted: Vec<&Row> = rows.iter().collect();
+    // Lexicographic key order, matching the model's sorted JSON dump.
+    sorted.sort_by_key(|r| r.edits.to_string());
+    for (i, row) in sorted.iter().enumerate() {
+        if i > 0 {
+            levels.push(',');
+        }
+        write!(
+            levels,
+            "\n  \"{}\": {{\n   \"delta_bytes_ratio\": {:.6},\n   \
+             \"dirty_rw_fraction\": {:.6},\n   \"effective_inserts\": {},\n   \
+             \"effective_removes\": {},\n   \"spliced_fraction\": {:.6}\n  }}",
+            row.edits,
+            row.delta_bytes_ratio,
+            row.dirty_rw_fraction,
+            row.effective_inserts,
+            row.effective_removes,
+            row.spliced_fraction,
+        )
+        .unwrap();
+    }
+    let payload = format!(
+        "{{\n \"bench\": \"streaming\",\n \"config\": {{\n  \
+         \"edit_levels\": {EDIT_LEVELS:?},\n  \"graph\": \"er_2048\",\n  \
+         \"seed\": {SEED},\n  \"steps\": {STEPS}\n }},\n \
+         \"levels\": {{{levels}\n }},\n \"unit\": \"row-window fractions and \
+         wire-byte ratios (structure-only, no wall clock)\"\n}}\n",
+    );
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root");
+    let path = root.join("BENCH_streaming.json");
+    std::fs::write(&path, payload).expect("write BENCH_streaming.json");
+    println!("wrote {}", path.display());
+}

@@ -178,8 +178,11 @@ fn build_rw_range(
     out
 }
 
-/// Per-worker scratch reused across the shard's row windows.
-struct WindowScratch {
+/// Per-worker scratch reused across the shard's row windows.  `pub(crate)`
+/// so the incremental rebuilder (`bsb::incremental`) runs the *same*
+/// per-window code path as the from-scratch build — bit-identity between
+/// the two is by construction, not by parallel implementation.
+pub(crate) struct WindowScratch {
     /// Distinct (sorted) column ids present in the current row window.
     cols: Vec<u32>,
     /// Expanded block-column list (BCSR-like mode only).
@@ -188,7 +191,7 @@ struct WindowScratch {
 }
 
 impl WindowScratch {
-    fn new(n: usize) -> WindowScratch {
+    pub(crate) fn new(n: usize) -> WindowScratch {
         WindowScratch {
             cols: Vec::new(),
             bcsr_cols: Vec::new(),
@@ -229,7 +232,7 @@ impl ColPosMap {
 }
 
 /// Append one row window's TCBs to `sptd`/`bitmaps`; returns its TCB count.
-fn build_window(
+pub(crate) fn build_window(
     g: &CsrGraph,
     rw: usize,
     compact: bool,

@@ -1,0 +1,175 @@
+//! Delta-aware BSB maintenance: rebuild only the dirty row windows.
+//!
+//! Row windows are the builder's unit of independence (PR 1 shards the
+//! from-scratch build per RW), which makes them the natural unit of
+//! *invalidation* under topology churn: a [`GraphDelta`]
+//! (crate::graph::GraphDelta) reports exactly which windows changed, and
+//! [`rebuild`] recomputes those — column re-compaction, bucket re-packing,
+//! fresh bitmaps — through the **same** `build_window` code path the
+//! from-scratch builder uses, while splicing every clean window's
+//! `tro`/`sptd`/`bitmaps` stretch verbatim from the old BSB.
+//!
+//! Because dirty windows run the identical per-window code and clean
+//! windows are byte-copied, the result is `==` to
+//! [`builder::build`](super::builder::build) on the patched CSR *by
+//! construction* — and since the hybrid geometry router
+//! ([`route`](super::geometry::route)) is a pure function of the BSB and
+//! CSR shapes, every per-RW wide/narrow/dense decision is reproduced
+//! bit-identically too.  `rust/tests/streaming_equivalence.rs` pins both.
+
+use crate::graph::CsrGraph;
+use crate::TCB_C;
+
+use super::builder::{build_window, Bsb, WindowScratch};
+
+/// What an incremental rebuild did — feeds `Metrics.streaming`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IncrementalStats {
+    /// Row windows recomputed from the patched CSR.
+    pub rebuilt: usize,
+    /// Row windows spliced verbatim from the old BSB.
+    pub spliced: usize,
+}
+
+/// True when `old` can be incrementally patched toward `g`: same node
+/// count (deltas never add/remove nodes) and a consistent window count.
+/// Anything else must take the full-rebuild fallback.
+pub fn compatible(old: &Bsb, g: &CsrGraph) -> bool {
+    old.n == g.n && old.num_rw == g.n.div_ceil(crate::TCB_R)
+}
+
+/// Rebuild the compacted BSB for the patched graph `g`, recomputing only
+/// `dirty_rws` (sorted or not; out-of-range entries are a caller bug and
+/// panic) and splicing every other window from `old`.
+///
+/// `old` must be a *compacted* BSB of the pre-patch graph with the same
+/// `n` (see [`compatible`]); the BCSR-like ablation format has no
+/// incremental path.  Returns the new BSB plus splice statistics.
+pub fn rebuild(old: &Bsb, g: &CsrGraph, dirty_rws: &[u32]) -> (Bsb, IncrementalStats) {
+    assert!(compatible(old, g), "incremental rebuild needs matching n/num_rw");
+    let num_rw = old.num_rw;
+    let mut dirty = vec![false; num_rw];
+    for &rw in dirty_rws {
+        dirty[rw as usize] = true;
+    }
+
+    let mut tro: Vec<u32> = Vec::with_capacity(num_rw + 1);
+    tro.push(0);
+    // Dirty windows change TCB counts by at most their edit size; the old
+    // totals are the right ballpark for preallocation.
+    let mut sptd: Vec<u32> = Vec::with_capacity(old.sptd.len());
+    let mut bitmaps = Vec::with_capacity(old.bitmaps.len());
+    let mut scratch = WindowScratch::new(g.n);
+    let mut stats = IncrementalStats::default();
+
+    for rw in 0..num_rw {
+        let count = if dirty[rw] {
+            stats.rebuilt += 1;
+            build_window(g, rw, true, &mut scratch, &mut sptd, &mut bitmaps)
+        } else {
+            stats.spliced += 1;
+            let lo = old.tro[rw] as usize;
+            let hi = old.tro[rw + 1] as usize;
+            sptd.extend_from_slice(&old.sptd[lo * TCB_C..hi * TCB_C]);
+            bitmaps.extend_from_slice(&old.bitmaps[lo..hi]);
+            (hi - lo) as u32
+        };
+        // invariant: tro starts non-empty and grows every iteration.
+        let next = *tro.last().unwrap() + count;
+        tro.push(next);
+    }
+
+    (Bsb { n: g.n, num_rw, tro, sptd, bitmaps, nnz: g.nnz() }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsb::builder;
+    use crate::graph::delta::GraphDelta;
+    use crate::graph::generators;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn rebuild_equals_scratch() {
+        let g0 = generators::erdos_renyi(500, 5.0, 3);
+        let old = builder::build(&g0);
+        let delta = GraphDelta::against(
+            &g0,
+            vec![(1, 250), (100, 7), (499, 499)],
+            vec![(g0.row(0).first().map(|&v| (0u32, v))).unwrap_or((0, 0))]
+                .into_iter()
+                .filter(|&(u, v)| g0.has_edge(u as usize, v))
+                .collect(),
+        );
+        let (g1, report) = delta.applied(&g0).unwrap();
+        let (inc, stats) = rebuild(&old, &g1, &report.dirty_rws);
+        assert_eq!(inc, builder::build(&g1));
+        assert_eq!(stats.rebuilt, report.dirty_rws.len());
+        assert_eq!(stats.rebuilt + stats.spliced, old.num_rw);
+    }
+
+    #[test]
+    fn empty_dirty_set_is_identity() {
+        let g = generators::power_law(300, 4.0, 2.3, 9);
+        let old = builder::build(&g);
+        let (inc, stats) = rebuild(&old, &g, &[]);
+        assert_eq!(inc, old);
+        assert_eq!(stats.rebuilt, 0);
+        assert_eq!(stats.spliced, old.num_rw);
+    }
+
+    #[test]
+    fn all_dirty_equals_scratch() {
+        let g0 = generators::sbm(4, 64, 0.2, 0.01, 5);
+        let old = builder::build(&g0);
+        let all: Vec<u32> = (0..old.num_rw as u32).collect();
+        let (inc, stats) = rebuild(&old, &g0, &all);
+        assert_eq!(inc, old);
+        assert_eq!(stats.rebuilt, old.num_rw);
+    }
+
+    #[test]
+    fn window_emptied_by_delta() {
+        // Remove the only edge of RW 1: its TCB count drops to zero and
+        // downstream windows' tro offsets shift.
+        let g0 = crate::graph::CsrGraph::from_edges(48, &[(0, 1), (20, 2), (40, 3)])
+            .unwrap();
+        let old = builder::build(&g0);
+        let delta = GraphDelta::against(&g0, vec![], vec![(20, 2)]);
+        let (g1, report) = delta.applied(&g0).unwrap();
+        assert_eq!(report.dirty_rws, vec![1]);
+        let (inc, _) = rebuild(&old, &g1, &report.dirty_rws);
+        assert_eq!(inc, builder::build(&g1));
+        assert_eq!(inc.rw_tcbs(1), 0);
+    }
+
+    #[test]
+    fn randomized_churn_stays_bit_identical() {
+        let mut rng = Rng::new(21);
+        for _ in 0..6 {
+            let n = rng.range(17, 600);
+            let mut g = generators::erdos_renyi(n, 4.0, rng.next_u64());
+            let mut bsb = builder::build(&g);
+            for _step in 0..5 {
+                let mut ins = Vec::new();
+                let mut rem = Vec::new();
+                for _ in 0..rng.range(1, 20) {
+                    let u = rng.below(n) as u32;
+                    let v = rng.below(n) as u32;
+                    if rng.coin(0.5) {
+                        ins.push((u, v));
+                    } else {
+                        rem.push((u, v));
+                    }
+                }
+                ins.retain(|e| !rem.contains(e));
+                let delta = GraphDelta::against(&g, ins, rem);
+                let report = delta.apply(&mut g).unwrap();
+                let (next, _) = rebuild(&bsb, &g, &report.dirty_rws);
+                assert_eq!(next, builder::build(&g));
+                bsb = next;
+            }
+        }
+    }
+}

@@ -36,11 +36,13 @@ pub mod bucket;
 pub mod builder;
 pub mod footprint;
 pub mod geometry;
+pub mod incremental;
 pub mod reorder;
 pub mod serialize;
 pub mod stats;
 
 pub use builder::{build, build_bcsr_like, build_bcsr_like_with, build_with, Bsb};
+pub use incremental::{rebuild as rebuild_incremental, IncrementalStats};
 
 /// Row-window height r (rows per window = rows per TCB).
 pub const RW: usize = crate::TCB_R;

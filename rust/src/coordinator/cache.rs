@@ -125,6 +125,43 @@ impl DriverCache {
         lock_unpoisoned(&self.inner).map.remove(&(fp, backend)).is_some()
     }
 
+    /// Every backend currently holding a plan for `fp` (sorted by backend
+    /// name for determinism) — the set `update_graph` rebuilds under the
+    /// patched fingerprint before the old version is evicted.
+    pub fn backends_for(&self, fp: u64) -> Vec<Backend> {
+        let inner = lock_unpoisoned(&self.inner);
+        let mut out: Vec<Backend> = inner
+            .map
+            .keys()
+            .filter(|(k, _)| *k == fp)
+            .map(|&(_, b)| b)
+            .collect();
+        out.sort_by_key(|b| b.name());
+        out
+    }
+
+    /// Drop every backend's entry for `fp` — the version-swap eviction:
+    /// once a graph has been patched to a new fingerprint, no request will
+    /// ever carry the old one again, so all its plans leave the cache in
+    /// one step (in-flight executions keep their `Arc<Plan>`).  Returns
+    /// how many entries were removed.
+    pub fn evict_all(&self, fp: u64) -> usize {
+        if self.capacity == 0 {
+            return 0;
+        }
+        let mut inner = lock_unpoisoned(&self.inner);
+        let stale: Vec<(u64, Backend)> = inner
+            .map
+            .keys()
+            .filter(|(k, _)| *k == fp)
+            .copied()
+            .collect();
+        for key in &stale {
+            inner.map.remove(key);
+        }
+        stale.len()
+    }
+
     pub fn len(&self) -> usize {
         lock_unpoisoned(&self.inner).map.len()
     }
@@ -188,6 +225,22 @@ mod tests {
         assert!(cache.get(1, Backend::Fused3S, 16, 32).is_none());
         assert!(cache.get(1, Backend::CpuCsr, 16, 32).is_some());
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn per_fingerprint_enumeration_and_bulk_evict() {
+        let cache = DriverCache::new(8);
+        cache.insert(1, Backend::Fused3S, 16, 32, driver_for(16));
+        cache.insert(1, Backend::CpuCsr, 16, 32, driver_for(16));
+        cache.insert(2, Backend::Fused3S, 16, 32, driver_for(16));
+        let mut b = cache.backends_for(1);
+        b.sort_by_key(|x| x.name());
+        assert_eq!(b, vec![Backend::CpuCsr, Backend::Fused3S]);
+        assert_eq!(cache.backends_for(3), vec![]);
+        assert_eq!(cache.evict_all(1), 2);
+        assert_eq!(cache.evict_all(1), 0);
+        assert!(cache.get(1, Backend::Fused3S, 16, 32).is_none());
+        assert!(cache.get(2, Backend::Fused3S, 16, 32).is_some());
     }
 
     #[test]

@@ -131,6 +131,7 @@ impl BatchingCounters {
 pub struct PlannerCounters {
     auto_requests: AtomicU64,
     observations: AtomicU64,
+    invalidations: AtomicU64,
     resolved: Mutex<BTreeMap<&'static str, u64>>,
 }
 
@@ -147,6 +148,14 @@ impl PlannerCounters {
         self.observations.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one profile invalidation: a graph version changed under
+    /// `update_graph`, so memoised per-fingerprint routing decisions must
+    /// be re-derived (the old fingerprint's profile no longer describes
+    /// any servable graph).
+    pub fn invalidation(&self) {
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Requests that arrived as `Backend::Auto`.
     pub fn auto_requests(&self) -> u64 {
         self.auto_requests.load(Ordering::Relaxed)
@@ -155,6 +164,19 @@ impl PlannerCounters {
     /// Calibration observations fed back so far.
     pub fn observations(&self) -> u64 {
         self.observations.load(Ordering::Relaxed)
+    }
+
+    /// Profile invalidations recorded so far.
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations.load(Ordering::Relaxed)
+    }
+
+    /// Memo epoch for fingerprint-keyed routing decisions: moves whenever
+    /// the calibration gains an observation *or* a graph version is
+    /// invalidated, so the batcher's decision memo re-resolves in either
+    /// case.
+    pub fn epoch(&self) -> u64 {
+        self.observations().wrapping_add(self.invalidations())
     }
 
     /// Per-backend resolution counts, `(backend name, requests)`, sorted
@@ -377,6 +399,62 @@ impl NetCounters {
     }
 }
 
+/// Counters for the streaming-graph path
+/// ([`Coordinator::update_graph`](super::Coordinator::update_graph)): how
+/// many deltas were applied, how much of each rebuild the row-window
+/// splice saved, and how often the incremental path had to fall back to a
+/// from-scratch BSB build.
+#[derive(Default)]
+pub struct StreamingCounters {
+    deltas_applied: AtomicU64,
+    rws_dirtied: AtomicU64,
+    rws_spliced: AtomicU64,
+    full_rebuilds: AtomicU64,
+}
+
+impl StreamingCounters {
+    /// Record one applied delta whose incremental rebuild recomputed
+    /// `dirtied` row windows and spliced `spliced` from the old BSB.
+    pub fn delta_applied(&self, dirtied: usize, spliced: usize) {
+        self.deltas_applied.fetch_add(1, Ordering::Relaxed);
+        self.rws_dirtied.fetch_add(dirtied as u64, Ordering::Relaxed);
+        self.rws_spliced.fetch_add(spliced as u64, Ordering::Relaxed);
+    }
+
+    /// Record one full-rebuild fallback (no old BSB to splice from, an
+    /// incompatible shape, or a panic inside the incremental rebuild).
+    pub fn full_rebuild(&self) {
+        self.full_rebuilds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Deltas applied through `update_graph`.
+    pub fn deltas_applied(&self) -> u64 {
+        self.deltas_applied.load(Ordering::Relaxed)
+    }
+
+    /// Row windows recomputed across all applied deltas.
+    pub fn rws_dirtied(&self) -> u64 {
+        self.rws_dirtied.load(Ordering::Relaxed)
+    }
+
+    /// Row windows spliced verbatim across all applied deltas.
+    pub fn rws_spliced(&self) -> u64 {
+        self.rws_spliced.load(Ordering::Relaxed)
+    }
+
+    /// Incremental rebuilds that fell back to a from-scratch build.
+    pub fn full_rebuilds(&self) -> u64 {
+        self.full_rebuilds.load(Ordering::Relaxed)
+    }
+
+    /// Whether any streaming update has been recorded (gates the report
+    /// line, keeping static-topology serving logs byte-identical to
+    /// previous releases).
+    pub fn any(&self) -> bool {
+        self.deltas_applied() > 0 || self.full_rebuilds() > 0
+    }
+}
+
 /// Aggregate serving metrics over a run.
 pub struct Metrics {
     /// End-to-end request latency (admission → response, queueing
@@ -398,6 +476,9 @@ pub struct Metrics {
     /// Network front-end counters (`crate::net`): sessions, handshake,
     /// wire volume.
     pub net: NetCounters,
+    /// Streaming-graph counters (`update_graph`): applied deltas, dirty
+    /// vs spliced row windows, full-rebuild fallbacks.
+    pub streaming: StreamingCounters,
     started: Instant,
     completed: Mutex<u64>,
     failed: Mutex<u64>,
@@ -414,6 +495,7 @@ impl Default for Metrics {
             sharding: ShardingCounters::default(),
             faults: FaultCounters::default(),
             net: NetCounters::default(),
+            streaming: StreamingCounters::default(),
             started: Instant::now(),
             completed: Mutex::new(0),
             failed: Mutex::new(0),
@@ -516,6 +598,19 @@ impl Metrics {
                 f.fallbacks(),
                 f.deadline_sheds(),
                 f.quarantines(),
+            ));
+        }
+        // The streaming line only appears once a graph delta has actually
+        // flowed through `update_graph`.
+        let st = &self.streaming;
+        if st.any() {
+            line.push_str(&format!(
+                "  streaming deltas={} dirty_rws={} spliced_rws={} \
+                 full_rebuilds={}",
+                st.deltas_applied(),
+                st.rws_dirtied(),
+                st.rws_spliced(),
+                st.full_rebuilds(),
             ));
         }
         // And the net line only appears when the coordinator is fronted by
@@ -659,6 +754,39 @@ mod tests {
             ),
             "{r}"
         );
+    }
+
+    #[test]
+    fn streaming_counters() {
+        let m = Metrics::new();
+        // No streaming traffic: the report keeps the old shape.
+        assert!(!m.report().contains("streaming"));
+        assert!(!m.streaming.any());
+        m.streaming.delta_applied(3, 29);
+        m.streaming.delta_applied(1, 31);
+        m.streaming.full_rebuild();
+        assert_eq!(m.streaming.deltas_applied(), 2);
+        assert_eq!(m.streaming.rws_dirtied(), 4);
+        assert_eq!(m.streaming.rws_spliced(), 60);
+        assert_eq!(m.streaming.full_rebuilds(), 1);
+        let r = m.report();
+        assert!(
+            r.contains(
+                "streaming deltas=2 dirty_rws=4 spliced_rws=60 full_rebuilds=1"
+            ),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn planner_epoch_moves_on_invalidation() {
+        let m = Metrics::new();
+        let e0 = m.planner.epoch();
+        m.planner.observation();
+        assert_eq!(m.planner.epoch(), e0 + 1);
+        m.planner.invalidation();
+        assert_eq!(m.planner.epoch(), e0 + 2);
+        assert_eq!(m.planner.invalidations(), 1);
     }
 
     #[test]

@@ -56,8 +56,8 @@ pub mod server;
 pub use cache::DriverCache;
 pub use metrics::{
     BatchingCounters, FaultCounters, LatencyRecorder, Metrics, NetCounters,
-    PlannerCounters, ShardingCounters,
+    PlannerCounters, ShardingCounters, StreamingCounters,
 };
 pub use recover::Quarantine;
 pub use request::{AttnRequest, AttnResponse};
-pub use server::{Coordinator, CoordinatorConfig, ExecutorKind};
+pub use server::{Coordinator, CoordinatorConfig, ExecutorKind, UpdateReport};

@@ -62,10 +62,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::bsb::{self, incremental, Bsb};
 use crate::exec::{offline_manifest, Engine, ExecPolicy};
 use crate::fault::{self, FaultSite};
 use crate::graph::batch::batch_graph_refs;
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, GraphDelta};
 use crate::kernels::{AttentionBatch, AttnError, Backend, ExecCtx, Plan};
 use crate::planner::{self, CostModel, GraphProfile, Planner};
 use crate::runtime::{Manifest, Runtime};
@@ -201,6 +202,70 @@ struct Services {
     planner: Arc<Planner>,
     quarantine: Arc<Quarantine>,
     route: ShardRoute,
+    /// Compacted BSBs of streaming (delta-updated) graph versions, keyed
+    /// by fingerprint — what [`Coordinator::update_graph`] splices clean
+    /// row windows from.  Static-topology traffic never touches this.
+    bsbs: BsbRegistry,
+}
+
+/// A small LRU of `fingerprint → Arc<Bsb>` for graphs under streaming
+/// updates.  Separate from [`DriverCache`]: plans don't expose their BSB
+/// (sharded plans never had a whole-graph one), and only delta-updated
+/// versions need the splice source retained.
+struct BsbRegistry {
+    capacity: usize,
+    inner: Mutex<BsbRegistryInner>,
+}
+
+struct BsbRegistryInner {
+    map: std::collections::HashMap<u64, (Arc<Bsb>, u64)>,
+    tick: u64,
+}
+
+impl BsbRegistry {
+    fn new(capacity: usize) -> BsbRegistry {
+        BsbRegistry {
+            capacity,
+            inner: Mutex::new(BsbRegistryInner {
+                map: std::collections::HashMap::new(),
+                tick: 0,
+            }),
+        }
+    }
+
+    fn get(&self, fp: u64) -> Option<Arc<Bsb>> {
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        let slot = inner.map.get_mut(&fp)?;
+        slot.1 = tick;
+        Some(slot.0.clone())
+    }
+
+    fn insert(&self, fp: u64, bsb: Arc<Bsb>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut inner = lock_unpoisoned(&self.inner);
+        while inner.map.len() >= self.capacity && !inner.map.contains_key(&fp) {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(&k, _)| k);
+            match oldest {
+                Some(k) => inner.map.remove(&k),
+                None => break,
+            };
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(fp, (bsb, tick));
+    }
+
+    fn remove(&self, fp: u64) {
+        lock_unpoisoned(&self.inner).map.remove(&fp);
+    }
 }
 
 /// One coalesced unit of work travelling batcher → preprocessing.
@@ -279,6 +344,39 @@ pub struct Coordinator {
     planner: Arc<Planner>,
     calibration_path: Option<PathBuf>,
     stages: Mutex<Stages>,
+    /// Shared with the stage threads; [`Coordinator::update_graph`] uses it
+    /// to rebuild and atomically swap cached plans out of band.
+    services: Arc<Services>,
+}
+
+/// What [`Coordinator::update_graph`] did: the version edge, effective
+/// edit counts, the incremental-rebuild split, and which backends' plans
+/// were swapped to the patched fingerprint.
+#[derive(Clone, Debug)]
+pub struct UpdateReport {
+    /// Fingerprint of the base version (now evicted, unless the delta was
+    /// a no-op and the fingerprints coincide).
+    pub old_fp: u64,
+    /// Fingerprint of the patched version (now cache-hot).
+    pub new_fp: u64,
+    /// The patched graph — what subsequent requests should carry.
+    pub patched: Arc<CsrGraph>,
+    /// Edges actually added (no-op inserts excluded).
+    pub inserted: usize,
+    /// Edges actually dropped (no-op removes excluded).
+    pub removed: usize,
+    /// Row windows the delta dirtied (recomputed by the rebuild).
+    pub dirty_rws: usize,
+    /// Row windows spliced verbatim from the previous version's BSB
+    /// (zero when the update fell back to a full rebuild).
+    pub spliced_rws: usize,
+    /// Whether the BSB was rebuilt from scratch (first update of this
+    /// graph, incompatible previous version, or a caught panic in the
+    /// incremental path).
+    pub full_rebuild: bool,
+    /// Backends whose plans were rebuilt and swapped, in deterministic
+    /// (name) order.
+    pub plans_swapped: Vec<Backend>,
 }
 
 /// The coordinator's stage threads, joined (once) at shutdown.
@@ -338,6 +436,7 @@ impl Coordinator {
             planner: planner.clone(),
             quarantine: Arc::new(Quarantine::new(cfg.quarantine_ttl)),
             route: cfg.shard_route(),
+            bsbs: BsbRegistry::new(cfg.cache_capacity.max(1)),
         });
 
         // Bounded queues end to end: submit blocks (never drops) once the
@@ -413,6 +512,7 @@ impl Coordinator {
                 workers,
                 executor: Some(executor),
             }),
+            services,
         })
     }
 
@@ -458,6 +558,132 @@ impl Coordinator {
     /// accepts out-of-band observations.
     pub fn planner(&self) -> &Planner {
         &self.planner
+    }
+
+    /// Apply a [`GraphDelta`] to a served graph and atomically swap every
+    /// cached plan over to the patched version (DESIGN.md §14).
+    ///
+    /// The swap is *publish-then-retire*: the patched BSB is rebuilt (row
+    /// windows the delta left untouched are spliced from the previous
+    /// version's BSB when the registry still holds it), plans for every
+    /// backend cached under the old fingerprint are prepared and inserted
+    /// under the new fingerprint **first**, and only then is the old
+    /// version evicted.  Concurrent requests therefore always see either
+    /// the complete old version or the complete new one — never a
+    /// half-patched cache — and in-flight executions keep their
+    /// `Arc<Plan>` regardless.
+    ///
+    /// A panic inside the incremental rebuild (fault injection, latent
+    /// bug) is caught and degraded to a from-scratch build of the patched
+    /// graph; the update still completes.  Errors *validating* the delta
+    /// (stale base fingerprint, out-of-range endpoint, conflicting edit)
+    /// reject the update with the base version untouched and still served.
+    pub fn update_graph(
+        &self,
+        base: &CsrGraph,
+        delta: &GraphDelta,
+    ) -> std::result::Result<UpdateReport, AttnError> {
+        let svc = &self.services;
+        let (patched, report) = delta
+            .applied(base)
+            .map_err(|e| AttnError::Unsupported(format!("graph delta rejected: {e:#}")))?;
+        let (old_fp, new_fp) = (report.old_fp, report.new_fp);
+
+        // Rebuild the BSB, splicing clean row windows from the previous
+        // version when the registry still holds a compatible one.
+        let mut full_rebuild = false;
+        let mut spliced = 0usize;
+        let previous = svc
+            .bsbs
+            .get(old_fp)
+            .filter(|old| incremental::compatible(old, &patched));
+        let bsb = match previous {
+            Some(old) => {
+                let attempt = catch_unwind(AssertUnwindSafe(|| {
+                    fault::fire(FaultSite::Prepare)?;
+                    Ok::<_, AttnError>(incremental::rebuild(
+                        &old,
+                        &patched,
+                        &report.dirty_rws,
+                    ))
+                }));
+                match attempt {
+                    Ok(Ok((bsb, stats))) => {
+                        spliced = stats.spliced;
+                        bsb
+                    }
+                    Ok(Err(_)) => {
+                        full_rebuild = true;
+                        bsb::build_with(&patched, &svc.engine.pool)
+                    }
+                    Err(payload) => {
+                        svc.metrics.faults.panic_caught();
+                        eprintln!(
+                            "update_graph: incremental rebuild panicked ({}); \
+                             falling back to full rebuild",
+                            fault::panic_message(payload.as_ref())
+                        );
+                        full_rebuild = true;
+                        bsb::build_with(&patched, &svc.engine.pool)
+                    }
+                }
+            }
+            None => {
+                full_rebuild = true;
+                bsb::build_with(&patched, &svc.engine.pool)
+            }
+        };
+        let bsb = Arc::new(bsb);
+        svc.bsbs.insert(new_fp, bsb.clone());
+        if new_fp != old_fp {
+            svc.bsbs.remove(old_fp);
+        }
+
+        // Prepare the patched version's plans for every backend currently
+        // serving the old fingerprint (or the planner's pick when the old
+        // version was never cached), insert them under the new
+        // fingerprint, and only then retire the old entries.
+        let mut backends = svc.cache.backends_for(old_fp);
+        if backends.is_empty() {
+            backends.push(svc.planner.resolve(&patched).backend);
+        }
+        let mut plans_swapped = Vec::new();
+        for b in backends {
+            let plan = match Plan::from_bsb(&svc.man, (*bsb).clone(), b) {
+                Ok(p) => p,
+                // Backends that plan from the graph itself (dense, CPU
+                // CSR) can't reuse the BSB; plan them from scratch.
+                Err(AttnError::Unsupported(_)) => {
+                    Plan::new(&svc.man, &patched, b, &svc.engine)?
+                }
+                Err(e) => return Err(e),
+            };
+            svc.cache.insert(new_fp, b, patched.n, patched.nnz(), Arc::new(plan));
+            plans_swapped.push(b);
+        }
+        if new_fp != old_fp {
+            svc.cache.evict_all(old_fp);
+        }
+
+        svc.metrics.streaming.delta_applied(report.dirty_rws.len(), spliced);
+        if full_rebuild {
+            svc.metrics.streaming.full_rebuild();
+        }
+        // Backend decisions the batcher memoised against the old topology
+        // are stale; bumping the planner epoch invalidates the memo.
+        svc.metrics.planner.invalidation();
+
+        Ok(UpdateReport {
+            old_fp,
+            new_fp,
+            patched: Arc::new(patched),
+            inserted: report.inserted,
+            removed: report.removed,
+            dirty_rws: report.dirty_rws.len(),
+            spliced_rws: spliced,
+            full_rebuild,
+            plans_swapped,
+        })
     }
 
     /// Stop all stages, draining every queue — including requests still
@@ -569,7 +795,7 @@ fn batcher_loop(
             return None;
         }
         let fp = req.graph.fingerprint();
-        let epoch = metrics.planner.observations();
+        let epoch = metrics.planner.epoch();
         let (backend, cells) = match decisions.get(&fp) {
             Some(&(e, b, c)) if e == epoch => (b, c),
             _ => {

@@ -17,9 +17,11 @@
 //! Beyond the paper, [`planner`] (`repro plan`) audits the adaptive
 //! backend planner's per-dataset decisions (EXPERIMENTS.md §Planner),
 //! [`shard`] (`repro shard`) audits the partition-parallel layer's cuts
-//! (EXPERIMENTS.md §Sharding), and [`serve_load`] (`repro serve`) drives
+//! (EXPERIMENTS.md §Sharding), [`serve_load`] (`repro serve`) drives
 //! the TCP serving layer with a multi-connection loadgen
-//! (EXPERIMENTS.md §Serving).
+//! (EXPERIMENTS.md §Serving), and [`streaming`] (`repro stream`) drives
+//! the incremental-update path — wire deltas, dirty-window BSB rebuilds,
+//! atomic plan swaps (EXPERIMENTS.md §Streaming).
 
 pub mod ablations;
 pub mod fig5;
@@ -30,6 +32,7 @@ pub mod report;
 pub mod serve_load;
 pub mod shard;
 pub mod stability;
+pub mod streaming;
 pub mod table3;
 pub mod table6;
 pub mod table7;

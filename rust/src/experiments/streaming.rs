@@ -1,0 +1,260 @@
+//! Streaming-update audit (EXPERIMENTS.md §Streaming): drive the full
+//! delta path — wire `GraphUpdate` → coordinator `update_graph` →
+//! incremental BSB rebuild → atomic plan swap — over a loopback
+//! [`NetServer`](crate::net::NetServer) and report what churn costs.
+//!
+//! One client owns one evolving graph.  Each step it ships a batched
+//! edge delta (never the CSR), mirrors the patch locally, verifies the
+//! server's `new_fp` matches its own recompute (the versioned-
+//! fingerprint contract end to end), then submits attention requests
+//! against the patched topology by bare fingerprint reference — which
+//! must hit the swapped-in plan cache, never rebuild, and never serve
+//! the retired version.  The report ties together the client's byte
+//! savings (delta vs. naive re-upload), the server's streaming counters
+//! (dirtied vs. spliced row windows, full-rebuild fallbacks), and the
+//! plan-cache hit evidence for the swap.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::graph::{generators, CsrGraph, GraphDelta};
+use crate::kernels::Backend;
+use crate::net::{NetClient, NetConfig, NetServer, WireRequest};
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+
+use super::report::Table;
+
+/// Workload shape for one streaming run.
+#[derive(Clone)]
+pub struct StreamSpec {
+    /// Nodes in the evolving graph.
+    pub n: usize,
+    /// Delta batches applied in sequence.
+    pub steps: usize,
+    /// Edge edits (inserts + removes) per batch.
+    pub edits_per_step: usize,
+    /// Attention requests submitted against each patched version.
+    pub requests_per_step: usize,
+    /// Feature dim (single-head, dv = d).
+    pub d: usize,
+    pub backend: Backend,
+    pub seed: u64,
+}
+
+impl Default for StreamSpec {
+    fn default() -> StreamSpec {
+        StreamSpec {
+            n: 512,
+            steps: 8,
+            edits_per_step: 24,
+            requests_per_step: 4,
+            d: 32,
+            backend: Backend::Fused3S,
+            seed: 0x57AE_A119,
+        }
+    }
+}
+
+/// Run the streaming audit against a coordinator started from
+/// `coord_cfg` and a loopback listener from `net_cfg`, print the tables,
+/// and return the JSON report.
+pub fn run(
+    coord_cfg: CoordinatorConfig,
+    net_cfg: NetConfig,
+    spec: &StreamSpec,
+) -> Result<Json> {
+    let coord = Arc::new(Coordinator::start(coord_cfg)?);
+    let server = NetServer::serve(coord.clone(), net_cfg)
+        .context("starting loopback listener")?;
+    let addr = server.local_addr();
+
+    let mut rng = Rng::new(spec.seed);
+    let mut g = generators::erdos_renyi(spec.n.max(32), 5.0, spec.seed)
+        .with_self_loops();
+    println!(
+        "streaming on {addr}: {} steps x {} edits over n={} (d={}, backend={})",
+        spec.steps,
+        spec.edits_per_step,
+        g.n,
+        spec.d,
+        spec.backend.name()
+    );
+
+    let mut client = NetClient::connect(addr, "")
+        .map_err(|e| anyhow::anyhow!("connect: {e}"))?;
+    let t0 = Instant::now();
+
+    // Warm the base version: uploads the CSR once and caches its plan.
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    submit_burst(&mut client, &g, spec, &mut rng, &mut ok, &mut failed)?;
+
+    let mut deltas_ok = 0u64;
+    let mut full_rebuilds = 0u64;
+    let mut dirty_total = 0u64;
+    let mut spliced_total = 0u64;
+    for step in 0..spec.steps {
+        let (ins, rem) = random_edits(&g, spec.edits_per_step, &mut rng);
+        // Mirror the patch locally — the client-side recompute the
+        // server's answer must agree with.
+        let delta = GraphDelta::against(&g, ins.clone(), rem.clone());
+        let (patched, report) = delta
+            .applied(&g)
+            .context("local mirror of the delta failed")?;
+        let summary = client
+            .update_graph(&g, &ins, &rem)
+            .map_err(|e| anyhow::anyhow!("update_graph transport: {e}"))?
+            .map_err(|e| anyhow::anyhow!("server rejected delta: {e:?}"))?;
+        if summary.new_fp != patched.fingerprint() {
+            bail!(
+                "step {step}: server fp {:#x} != local recompute {:#x}",
+                summary.new_fp,
+                patched.fingerprint()
+            );
+        }
+        if summary.dirty_rws != report.dirty_rws.len() {
+            bail!(
+                "step {step}: server dirtied {} RWs, local delta says {}",
+                summary.dirty_rws,
+                report.dirty_rws.len()
+            );
+        }
+        deltas_ok += 1;
+        full_rebuilds += u64::from(summary.full_rebuild);
+        dirty_total += summary.dirty_rws as u64;
+        spliced_total += summary.spliced_rws as u64;
+        g = patched;
+        // Replay burst against the patched version: bare fingerprint
+        // references into the freshly swapped plan cache.
+        submit_burst(&mut client, &g, spec, &mut rng, &mut ok, &mut failed)?;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let stats = client.stats();
+    client.close();
+    let m = coord.metrics();
+    let st = &m.streaming;
+    let naive = stats.graph_bytes_naive;
+    let saved = if naive > 0 {
+        1.0 - stats.graph_bytes_uploaded as f64 / naive as f64
+    } else {
+        0.0
+    };
+    let splice_frac = if dirty_total + spliced_total > 0 {
+        spliced_total as f64 / (dirty_total + spliced_total) as f64
+    } else {
+        0.0
+    };
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["requests ok".into(), format!("{ok} ({failed} failed)")]);
+    t.row(vec!["deltas applied".into(), format!("{deltas_ok}")]);
+    t.row(vec![
+        "rw dirtied / spliced".into(),
+        format!("{dirty_total} / {spliced_total} ({:.0}% spliced)", splice_frac * 100.0),
+    ]);
+    t.row(vec!["full rebuilds".into(), format!("{full_rebuilds}")]);
+    t.row(vec![
+        "graph bytes shipped".into(),
+        format!("{} (naive {}, saved {:.0}%)", stats.graph_bytes_uploaded, naive, saved * 100.0),
+    ]);
+    t.row(vec![
+        "server bsb-cache hit / miss".into(),
+        format!("{} / {}", m.batching.cache_hits(), m.batching.cache_misses()),
+    ]);
+    t.row(vec!["wall".into(), format!("{wall_s:.2}s")]);
+    t.print();
+    println!("{}", m.report());
+
+    let j = json::obj(vec![
+        ("n", json::num(g.n as f64)),
+        ("steps", json::num(spec.steps as f64)),
+        ("edits_per_step", json::num(spec.edits_per_step as f64)),
+        ("requests_per_step", json::num(spec.requests_per_step as f64)),
+        ("d", json::num(spec.d as f64)),
+        ("backend", json::s(spec.backend.name())),
+        ("ok", json::num(ok as f64)),
+        ("failed", json::num(failed as f64)),
+        ("deltas_applied", json::num(st.deltas_applied() as f64)),
+        ("rws_dirtied", json::num(st.rws_dirtied() as f64)),
+        ("rws_spliced", json::num(st.rws_spliced() as f64)),
+        ("full_rebuilds", json::num(st.full_rebuilds() as f64)),
+        ("spliced_fraction", json::num(splice_frac)),
+        ("graph_bytes_uploaded", json::num(stats.graph_bytes_uploaded as f64)),
+        ("graph_bytes_naive", json::num(naive as f64)),
+        ("delta_savings_ratio", json::num(saved)),
+        ("cache_hits", json::num(m.batching.cache_hits() as f64)),
+        ("cache_misses", json::num(m.batching.cache_misses() as f64)),
+        ("wall_s", json::num(wall_s)),
+    ]);
+
+    server.shutdown();
+    coord.shutdown();
+    Ok(j)
+}
+
+/// Submit `requests_per_step` single-head requests against `g`, tallying
+/// outcomes.  Transport failure aborts the run (loopback should never).
+fn submit_burst(
+    client: &mut NetClient,
+    g: &CsrGraph,
+    spec: &StreamSpec,
+    rng: &mut Rng,
+    ok: &mut u64,
+    failed: &mut u64,
+) -> Result<()> {
+    for r in 0..spec.requests_per_step.max(1) {
+        let nd = g.n * spec.d;
+        let q = rng.normal_vec(nd, 1.0);
+        let k = rng.normal_vec(nd, 1.0);
+        let v = rng.normal_vec(nd, 1.0);
+        let req = WireRequest::single_head(
+            (*ok + *failed) ^ ((r as u64) << 48),
+            g,
+            spec.d,
+            &q,
+            &k,
+            &v,
+            1.0 / (spec.d as f32).sqrt(),
+            spec.backend,
+        );
+        match client.submit(&req) {
+            Ok(resp) if resp.result.is_ok() => *ok += 1,
+            Ok(_) => *failed += 1,
+            Err(e) => bail!("loopback submit transport failure: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Random edit batch against `g`: removes sampled from resident edges
+/// (so they take effect), inserts from fresh pairs, never overlapping.
+fn random_edits(
+    g: &CsrGraph,
+    edits: usize,
+    rng: &mut Rng,
+) -> (Vec<(u32, u32)>, Vec<(u32, u32)>) {
+    let mut ins = Vec::new();
+    let mut rem = Vec::new();
+    for _ in 0..edits.max(1) {
+        if rng.coin(0.5) {
+            let u = rng.below(g.n);
+            let row = g.row(u);
+            if !row.is_empty() {
+                rem.push((u as u32, row[rng.below(row.len())]));
+                continue;
+            }
+        }
+        let u = rng.below(g.n) as u32;
+        let v = rng.below(g.n) as u32;
+        ins.push((u, v));
+    }
+    // An edge in both lists is rejected as ambiguous server-side; keep
+    // the batch well-formed.
+    ins.retain(|e| !rem.contains(e));
+    (ins, rem)
+}

@@ -1,0 +1,390 @@
+//! Batched edge deltas against a fingerprinted CSR base — the streaming
+//! half of ROADMAP item 3.
+//!
+//! A [`GraphDelta`] carries edge inserts/removes pinned to the
+//! [`fingerprint`](CsrGraph::fingerprint) of the graph it was diffed
+//! against, so a patch can never be applied to the wrong version.
+//! [`GraphDelta::apply`] patches the CSR **in place** and reports the
+//! *dirty row windows*: the invalidation contract is per-row membership —
+//! a row window is dirty iff the adjacency of at least one of its rows
+//! actually changed.  (That is a refinement of "distinct column set
+//! changed": a TCB bitmap encodes *which row* holds each nonzero, so an
+//! insert that reuses a column another row already occupies still dirties
+//! the window, while a no-op insert of an existing edge dirties nothing.)
+//!
+//! The patched CSR is canonical — rows sorted ascending, deduplicated,
+//! `indptr` rebuilt — so its fingerprint equals a from-scratch
+//! [`CsrGraph::from_edges`] recompute on the patched edge set.  That
+//! equality is what lets the coordinator's `DriverCache` and the net
+//! layer's `GraphStore` treat "patched" and "re-uploaded" graphs as the
+//! same version.
+
+use anyhow::{bail, Result};
+
+use crate::graph::CsrGraph;
+use crate::TCB_R;
+
+/// A batch of edge inserts/removes against one base graph version.
+///
+/// Duplicates within `inserts` (or within `removes`) are tolerated and
+/// collapse to one change; an edge listed in *both* is rejected by
+/// [`apply`](GraphDelta::apply) as ambiguous.  Inserting an edge that is
+/// already present, or removing one that is absent, is a no-op and does
+/// not dirty its row window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphDelta {
+    /// Fingerprint of the base graph this delta was built against.
+    pub base_fp: u64,
+    /// Edges to add, as (row, col) in the base graph's node space.
+    pub inserts: Vec<(u32, u32)>,
+    /// Edges to drop, as (row, col).
+    pub removes: Vec<(u32, u32)>,
+}
+
+/// What [`GraphDelta::apply`] did: version edge, effective change counts,
+/// and the exact set of row windows whose contents changed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaReport {
+    /// Fingerprint before the patch (== the delta's `base_fp`).
+    pub old_fp: u64,
+    /// Fingerprint after the patch (== from-scratch recompute).
+    pub new_fp: u64,
+    /// Edges actually added (no-op inserts excluded).
+    pub inserted: usize,
+    /// Edges actually dropped (no-op removes excluded).
+    pub removed: usize,
+    /// Sorted row-window indices whose rows changed; exactly the windows
+    /// an incremental BSB rebuild must recompute.
+    pub dirty_rws: Vec<u32>,
+}
+
+impl GraphDelta {
+    /// A delta pinned to `base`'s current fingerprint.
+    pub fn against(base: &CsrGraph, inserts: Vec<(u32, u32)>, removes: Vec<(u32, u32)>) -> GraphDelta {
+        GraphDelta { base_fp: base.fingerprint(), inserts, removes }
+    }
+
+    /// The delta that turns `old` into `new` (both must share `n`).
+    /// Useful for differential tests and benches; O(nnz) two-pointer row
+    /// merge.
+    pub fn diff(old: &CsrGraph, new: &CsrGraph) -> GraphDelta {
+        assert_eq!(old.n, new.n, "diff requires equal node counts");
+        let mut inserts = Vec::new();
+        let mut removes = Vec::new();
+        for u in 0..old.n {
+            let (a, b) = (old.row(u), new.row(u));
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < a.len() || j < b.len() {
+                match (a.get(i), b.get(j)) {
+                    (Some(&x), Some(&y)) if x == y => {
+                        i += 1;
+                        j += 1;
+                    }
+                    (Some(&x), Some(&y)) if x < y => {
+                        removes.push((u as u32, x));
+                        i += 1;
+                    }
+                    (Some(_), Some(&y)) => {
+                        inserts.push((u as u32, y));
+                        j += 1;
+                    }
+                    (Some(&x), None) => {
+                        removes.push((u as u32, x));
+                        i += 1;
+                    }
+                    (None, Some(&y)) => {
+                        inserts.push((u as u32, y));
+                        j += 1;
+                    }
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        GraphDelta { base_fp: old.fingerprint(), inserts, removes }
+    }
+
+    /// True when the delta carries no edits at all.
+    pub fn is_empty(&self) -> bool {
+        self.inserts.is_empty() && self.removes.is_empty()
+    }
+
+    /// Total listed edits (before no-op filtering).
+    pub fn len(&self) -> usize {
+        self.inserts.len() + self.removes.len()
+    }
+
+    /// Validate ranges and base-version match without patching.
+    pub fn check(&self, g: &CsrGraph) -> Result<()> {
+        let fp = g.fingerprint();
+        if fp != self.base_fp {
+            bail!(
+                "delta base fingerprint {:#018x} does not match graph {:#018x}",
+                self.base_fp,
+                fp
+            );
+        }
+        for &(u, v) in self.inserts.iter().chain(self.removes.iter()) {
+            if u as usize >= g.n || v as usize >= g.n {
+                bail!("delta edge ({u},{v}) out of range for n={}", g.n);
+            }
+        }
+        Ok(())
+    }
+
+    /// Patch `g` in place; on success the CSR is canonical (rows sorted,
+    /// deduplicated) and the report's `new_fp` equals a from-scratch
+    /// [`CsrGraph::from_edges`] fingerprint on the patched edge set.  On
+    /// error `g` is untouched.
+    pub fn apply(&self, g: &mut CsrGraph) -> Result<DeltaReport> {
+        self.check(g)?;
+
+        let mut ins = self.inserts.clone();
+        ins.sort_unstable();
+        ins.dedup();
+        let mut rem = self.removes.clone();
+        rem.sort_unstable();
+        rem.dedup();
+
+        // Ambiguity check: the same edge on both sides has no defined order.
+        {
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < ins.len() && j < rem.len() {
+                match ins[i].cmp(&rem[j]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        let (u, v) = ins[i];
+                        bail!("edge ({u},{v}) listed as both insert and remove");
+                    }
+                }
+            }
+        }
+
+        let old_fp = self.base_fp;
+        let n = g.n;
+        let grow = ins.len();
+        let mut indices = Vec::with_capacity(g.indices.len() + grow);
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0u32);
+
+        let (mut ii, mut ri) = (0usize, 0usize);
+        let mut inserted = 0usize;
+        let mut removed = 0usize;
+        let mut dirty_rows: Vec<u32> = Vec::new();
+
+        for u in 0..n {
+            let row = g.row(u);
+            let ins_lo = ii;
+            while ii < ins.len() && ins[ii].0 as usize == u {
+                ii += 1;
+            }
+            let rem_lo = ri;
+            while ri < rem.len() && rem[ri].0 as usize == u {
+                ri += 1;
+            }
+            let row_ins = &ins[ins_lo..ii];
+            let row_rem = &rem[rem_lo..ri];
+
+            if row_ins.is_empty() && row_rem.is_empty() {
+                indices.extend_from_slice(row);
+                indptr.push(indices.len() as u32);
+                continue;
+            }
+
+            // Merge old ∪ inserts, skipping removes; all three inputs are
+            // sorted, so one forward pass keeps the row canonical.
+            let mut changed = false;
+            let (mut a, mut b) = (0usize, 0usize);
+            let mut r = 0usize;
+            loop {
+                let next_old = row.get(a).copied();
+                let next_ins = (b < row_ins.len()).then(|| row_ins[b].1);
+                let v = match (next_old, next_ins) {
+                    (Some(x), Some(y)) if x == y => {
+                        // No-op insert: edge already present.
+                        a += 1;
+                        b += 1;
+                        x
+                    }
+                    (Some(x), Some(y)) if x < y => {
+                        a += 1;
+                        x
+                    }
+                    (Some(_), Some(y)) | (None, Some(y)) => {
+                        b += 1;
+                        inserted += 1;
+                        changed = true;
+                        y
+                    }
+                    (Some(x), None) => {
+                        a += 1;
+                        x
+                    }
+                    (None, None) => break,
+                };
+                // Drop v when a pending remove names it (no-op removes —
+                // values never reached — simply fall off the cursor).
+                while r < row_rem.len() && row_rem[r].1 < v {
+                    r += 1;
+                }
+                if r < row_rem.len() && row_rem[r].1 == v {
+                    r += 1;
+                    removed += 1;
+                    changed = true;
+                    // An insert that re-adds a removed edge was rejected
+                    // above, so a dropped v is never re-pushed.
+                    continue;
+                }
+                indices.push(v);
+            }
+            if changed {
+                dirty_rows.push(u as u32);
+            }
+            indptr.push(indices.len() as u32);
+        }
+
+        g.indptr = indptr;
+        g.indices = indices;
+
+        let mut dirty_rws: Vec<u32> =
+            dirty_rows.iter().map(|&u| u / TCB_R as u32).collect();
+        dirty_rws.dedup(); // rows arrive sorted, so windows do too
+
+        Ok(DeltaReport {
+            old_fp,
+            new_fp: g.fingerprint(),
+            inserted,
+            removed,
+            dirty_rws,
+        })
+    }
+
+    /// Non-mutating convenience: clone, patch, return the patched graph.
+    pub fn applied(&self, g: &CsrGraph) -> Result<(CsrGraph, DeltaReport)> {
+        let mut patched = g.clone();
+        let report = self.apply(&mut patched)?;
+        Ok((patched, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::prng::Rng;
+
+    fn edges_of(g: &CsrGraph) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(g.nnz());
+        for u in 0..g.n {
+            for &v in g.row(u) {
+                out.push((u as u32, v));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn apply_matches_from_scratch() {
+        let g0 = generators::erdos_renyi(200, 4.0, 7);
+        let delta = GraphDelta::against(
+            &g0,
+            vec![(0, 5), (0, 6), (17, 3), (199, 0)],
+            vec![edges_of(&g0)[0], edges_of(&g0)[10]],
+        );
+        let mut g = g0.clone();
+        let report = delta.apply(&mut g).unwrap();
+
+        let mut want = edges_of(&g0);
+        want.retain(|e| !delta.removes.contains(e));
+        want.extend_from_slice(&delta.inserts);
+        let scratch = CsrGraph::from_edges(g0.n, &want).unwrap();
+        assert_eq!(g, scratch);
+        assert_eq!(report.new_fp, scratch.fingerprint());
+        assert_eq!(report.old_fp, g0.fingerprint());
+    }
+
+    #[test]
+    fn noop_edits_do_not_dirty() {
+        let g0 = CsrGraph::from_edges(64, &[(0, 1), (20, 3), (40, 5)]).unwrap();
+        // Insert an existing edge + remove an absent one: nothing changes.
+        let delta = GraphDelta::against(&g0, vec![(0, 1)], vec![(40, 7)]);
+        let mut g = g0.clone();
+        let report = delta.apply(&mut g).unwrap();
+        assert_eq!(g, g0);
+        assert_eq!(report.new_fp, report.old_fp);
+        assert_eq!(report.inserted, 0);
+        assert_eq!(report.removed, 0);
+        assert!(report.dirty_rws.is_empty());
+    }
+
+    #[test]
+    fn dirty_windows_are_exact() {
+        // Rows 0..16 = RW 0, 16..32 = RW 1, 32..48 = RW 2.
+        let g0 = CsrGraph::from_edges(48, &[(0, 1), (17, 2), (33, 3)]).unwrap();
+        let delta = GraphDelta::against(&g0, vec![(18, 9)], vec![(33, 3)]);
+        let (_, report) = delta.applied(&g0).unwrap();
+        assert_eq!(report.dirty_rws, vec![1, 2]);
+    }
+
+    #[test]
+    fn same_column_other_row_still_dirties() {
+        // Column 5 already present in RW 0 via row 0; inserting (1,5)
+        // leaves the window's distinct-column set unchanged but must still
+        // dirty it (the bitmap gains a bit in row 1).
+        let g0 = CsrGraph::from_edges(16, &[(0, 5)]).unwrap();
+        let delta = GraphDelta::against(&g0, vec![(1, 5)], vec![]);
+        let (g, report) = delta.applied(&g0).unwrap();
+        assert_eq!(report.dirty_rws, vec![0]);
+        assert_eq!(g.row(1), &[5]);
+    }
+
+    #[test]
+    fn conflicting_edit_rejected() {
+        let g0 = CsrGraph::from_edges(8, &[(0, 1)]).unwrap();
+        let delta = GraphDelta::against(&g0, vec![(2, 3)], vec![(2, 3)]);
+        let mut g = g0.clone();
+        assert!(delta.apply(&mut g).is_err());
+        assert_eq!(g, g0); // untouched on error
+    }
+
+    #[test]
+    fn stale_base_rejected() {
+        let g0 = CsrGraph::from_edges(8, &[(0, 1)]).unwrap();
+        let mut delta = GraphDelta::against(&g0, vec![(2, 3)], vec![]);
+        delta.base_fp ^= 1;
+        assert!(delta.apply(&mut g0.clone()).is_err());
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let g0 = CsrGraph::from_edges(8, &[(0, 1)]).unwrap();
+        let delta = GraphDelta::against(&g0, vec![(2, 99)], vec![]);
+        assert!(delta.apply(&mut g0.clone()).is_err());
+    }
+
+    #[test]
+    fn diff_roundtrips() {
+        let mut rng = Rng::new(11);
+        for _ in 0..8 {
+            let n = rng.range(1, 300);
+            let a = generators::erdos_renyi(n, 3.0, rng.next_u64());
+            let b = generators::erdos_renyi(n, 3.0, rng.next_u64());
+            let delta = GraphDelta::diff(&a, &b);
+            let (patched, report) = delta.applied(&a).unwrap();
+            assert_eq!(patched, b);
+            assert_eq!(report.new_fp, b.fingerprint());
+        }
+    }
+
+    #[test]
+    fn duplicate_edits_collapse() {
+        let g0 = CsrGraph::from_edges(8, &[(0, 1)]).unwrap();
+        let delta =
+            GraphDelta::against(&g0, vec![(2, 3), (2, 3), (2, 3)], vec![(0, 1), (0, 1)]);
+        let (g, report) = delta.applied(&g0).unwrap();
+        assert_eq!(report.inserted, 1);
+        assert_eq!(report.removed, 1);
+        assert_eq!(g.row(2), &[3]);
+        assert_eq!(g.row(0), &[] as &[u32]);
+    }
+}

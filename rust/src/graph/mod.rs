@@ -11,7 +11,9 @@
 pub mod batch;
 pub mod csr;
 pub mod datasets;
+pub mod delta;
 pub mod generators;
 pub mod io;
 
 pub use csr::CsrGraph;
+pub use delta::{DeltaReport, GraphDelta};

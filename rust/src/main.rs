@@ -19,6 +19,8 @@
 //! repro serve  [--clients 4] [--requests 16] [--graphs 4] [--host]
 //!              [--token T]             # TCP loopback loadgen (DESIGN.md §13)
 //! repro serve  --listen ADDR [--host] [--token T]   # serve-only mode
+//! repro stream [--steps 8] [--edits 24] [--requests 4] [--n 512] [--host]
+//!                                        # streaming-delta audit (§14)
 //! ```
 //!
 //! Results print as aligned tables and are mirrored to `results/*.json`.
@@ -221,6 +223,9 @@ fn run() -> Result<()> {
         "serve" => {
             serve(&args)?;
         }
+        "stream" => {
+            stream(&args)?;
+        }
         other => {
             print_usage();
             bail!("unknown subcommand '{other}'");
@@ -346,15 +351,48 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro stream` — the streaming-update audit (DESIGN.md §14): a
+/// loopback server absorbing batched edge deltas over the wire while a
+/// client verifies fingerprint agreement and replays requests against
+/// each patched version.
+fn stream(args: &Args) -> Result<()> {
+    use fused3s::coordinator::{CoordinatorConfig, ExecutorKind};
+    use fused3s::experiments::streaming::{self, StreamSpec};
+    use fused3s::net::NetConfig;
+
+    let mut coord_cfg = CoordinatorConfig {
+        preprocess_workers: args.usize_or("workers", 2)?,
+        ..CoordinatorConfig::default()
+    };
+    if args.bool("host") {
+        coord_cfg.executor = ExecutorKind::HostEmulation;
+    }
+    let spec = StreamSpec {
+        n: args.usize_or("n", 512)?,
+        steps: args.usize_or("steps", 8)?,
+        edits_per_step: args.usize_or("edits", 24)?,
+        requests_per_step: args.usize_or("requests", 4)?,
+        d: args.usize_or("d", 32)?,
+        backend: Backend::parse(&args.get_or("backend", "fused3s"))?,
+        seed: args.u64_or("seed", 0x57AE_A119)?,
+    };
+    let j = streaming::run(coord_cfg, NetConfig::default(), &spec)?;
+    let p = report::write_json("stream", &j)?;
+    println!("\nwrote {}", p.display());
+    Ok(())
+}
+
 fn print_usage() {
     println!(
         "repro — Fused3S reproduction harness\n\
          subcommands:\n  \
          datasets | table3 | table6 | table7 | fig5 | fig6 | fig7 | fig8 |\n  \
          ablate-split | ablate-reorder | ablate-compaction | ablate-buckets |\n  \
-         stability | plan | shard | infer | serve\n\
+         stability | plan | shard | infer | serve | stream\n\
          common flags: --datasets a,b,c  --d 64  --quick  --backends x,y\n\
          serve: loopback loadgen by default (--clients N --requests R \
-         --graphs G --host --token T); --listen ADDR for serve-only"
+         --graphs G --host --token T); --listen ADDR for serve-only\n\
+         stream: loopback streaming-delta audit (--steps N --edits E \
+         --requests R --n NODES --host)"
     );
 }

@@ -25,8 +25,8 @@ use super::frame::{
     read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME_BYTES,
 };
 use super::proto::{
-    self, csr_wire_bytes, GraphRef, Msg, ResponseMsg, SubmitMsg,
-    CODE_GRAPH_UNKNOWN, CODE_PROTOCOL, VERSION,
+    self, csr_wire_bytes, delta_wire_bytes, GraphRef, GraphUpdateMsg, Msg,
+    ResponseMsg, SubmitMsg, CODE_GRAPH_UNKNOWN, CODE_PROTOCOL, VERSION,
 };
 
 /// Client-side transport failure (errors the *request* itself produced
@@ -143,6 +143,20 @@ pub struct WireResponse {
     pub backend: Option<Backend>,
 }
 
+/// Server-side outcome of one [`NetClient::update_graph`] call, lifted
+/// back to in-process counts (the wire image of
+/// [`UpdateReport`](crate::coordinator::UpdateReport)).
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateSummary {
+    pub old_fp: u64,
+    pub new_fp: u64,
+    pub inserted: usize,
+    pub removed: usize,
+    pub dirty_rws: usize,
+    pub spliced_rws: usize,
+    pub full_rebuild: bool,
+}
+
 /// One blocking connection to a [`NetServer`](super::NetServer).
 pub struct NetClient {
     stream: TcpStream,
@@ -234,6 +248,54 @@ impl NetClient {
         }
     }
 
+    /// Ship a batched edge delta for `base` and block for the server's
+    /// swap summary — the streaming analog of [`NetClient::submit`]: the
+    /// base rides a bare fingerprint reference in the steady state
+    /// (deltas, not CSRs, cross the wire), falls back to inline exactly
+    /// once if the server evicted it, and the patched fingerprint is
+    /// remembered so follow-up submits skip their `GraphQuery`.
+    ///
+    /// The outer `Err` is transport/protocol failure; the inner `Err` is
+    /// the server structurally rejecting the delta (stale base,
+    /// out-of-range endpoint, conflicting edit) with the base version
+    /// still served.
+    pub fn update_graph(
+        &mut self,
+        base: &CsrGraph,
+        inserts: &[(u32, u32)],
+        removes: &[(u32, u32)],
+    ) -> Result<Result<UpdateSummary, AttnError>, NetError> {
+        let fp = base.fingerprint();
+        if !self.known.contains(&fp) {
+            self.send(&Msg::GraphQuery { fp })?;
+            match self.recv()? {
+                Msg::GraphStatus { fp: rfp, known } if rfp == fp => {
+                    if known {
+                        self.known.insert(fp);
+                    }
+                }
+                _ => {
+                    return Err(NetError::Protocol(
+                        "expected graph status".into(),
+                    ))
+                }
+            }
+        }
+        let inline = !self.known.contains(&fp);
+        match self.update_once(base, fp, inline, inserts, removes)? {
+            UpdateOutcome::Done(r) => Ok(r),
+            UpdateOutcome::BaseUnknown => {
+                self.known.remove(&fp);
+                match self.update_once(base, fp, true, inserts, removes)? {
+                    UpdateOutcome::Done(r) => Ok(r),
+                    UpdateOutcome::BaseUnknown => Err(NetError::Protocol(
+                        "server rejected an inline base as unknown".into(),
+                    )),
+                }
+            }
+        }
+    }
+
     /// Clean close: best-effort goodbye, then both halves down.
     pub fn close(self) {
         let bytes = Msg::Goodbye.encode();
@@ -305,6 +367,80 @@ impl NetClient {
         Ok(Outcome::Done(from_wire_response(resp)?))
     }
 
+    fn update_once(
+        &mut self,
+        base: &CsrGraph,
+        fp: u64,
+        inline: bool,
+        inserts: &[(u32, u32)],
+        removes: &[(u32, u32)],
+    ) -> Result<UpdateOutcome, NetError> {
+        let base_ref = if inline {
+            GraphRef::Inline(base.clone())
+        } else {
+            GraphRef::Fingerprint {
+                fp,
+                n: base.n as u32,
+                nnz: base.nnz() as u32,
+            }
+        };
+        self.send(&Msg::GraphUpdate(GraphUpdateMsg {
+            base: base_ref,
+            inserts: inserts.to_vec(),
+            removes: removes.to_vec(),
+        }))?;
+        // The naive protocol re-ships the whole patched CSR; the delta
+        // path ships edge edits (plus the base, once, when inline).
+        let base_bytes = csr_wire_bytes(base);
+        self.stats.graph_bytes_naive += base_bytes;
+        if inline {
+            self.stats.graph_uploads += 1;
+            self.stats.graph_bytes_uploaded += base_bytes;
+        } else {
+            self.stats.upload_skips += 1;
+        }
+        self.stats.graph_bytes_uploaded +=
+            delta_wire_bytes(inserts.len(), removes.len());
+        let upd = match self.recv()? {
+            Msg::GraphUpdated(u) => u,
+            _ => {
+                return Err(NetError::Protocol("expected update summary".into()))
+            }
+        };
+        match upd.payload {
+            Ok(s) => {
+                if inline {
+                    self.known.insert(fp);
+                }
+                // The server now holds (and serves) the patched version.
+                self.known.insert(s.new_fp);
+                Ok(UpdateOutcome::Done(Ok(UpdateSummary {
+                    old_fp: s.old_fp,
+                    new_fp: s.new_fp,
+                    inserted: s.inserted as usize,
+                    removed: s.removed as usize,
+                    dirty_rws: s.dirty_rws as usize,
+                    spliced_rws: s.spliced_rws as usize,
+                    full_rebuild: s.full_rebuild,
+                })))
+            }
+            Err((code, msg)) => {
+                if code == CODE_GRAPH_UNKNOWN {
+                    return Ok(UpdateOutcome::BaseUnknown);
+                }
+                if code == CODE_PROTOCOL {
+                    return Err(NetError::Protocol(msg));
+                }
+                match proto::decode_attn_error(code, msg) {
+                    Some(e) => Ok(UpdateOutcome::Done(Err(e))),
+                    None => Err(NetError::Protocol(format!(
+                        "unknown error code {code}"
+                    ))),
+                }
+            }
+        }
+    }
+
     fn send(&mut self, msg: &Msg) -> Result<(), NetError> {
         let bytes = msg.encode();
         let mut sock = &self.stream;
@@ -325,6 +461,11 @@ impl NetClient {
 enum Outcome {
     Done(WireResponse),
     GraphUnknown,
+}
+
+enum UpdateOutcome {
+    Done(Result<UpdateSummary, AttnError>),
+    BaseUnknown,
 }
 
 fn from_wire_response(r: ResponseMsg) -> Result<WireResponse, NetError> {

@@ -67,6 +67,8 @@ pub mod wire;
 
 mod session;
 
-pub use client::{ClientStats, NetClient, NetError, WireRequest, WireResponse};
+pub use client::{
+    ClientStats, NetClient, NetError, UpdateSummary, WireRequest, WireResponse,
+};
 pub use listener::{NetConfig, NetServer};
 pub use store::GraphStore;

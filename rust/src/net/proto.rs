@@ -42,6 +42,8 @@ const TAG_GRAPH_STATUS: u8 = 4;
 const TAG_SUBMIT: u8 = 5;
 const TAG_RESPONSE: u8 = 6;
 const TAG_GOODBYE: u8 = 7;
+const TAG_GRAPH_UPDATE: u8 = 8;
+const TAG_GRAPH_UPDATED: u8 = 9;
 
 /// Error codes for the `Response` error arm.  1–6 mirror
 /// [`AttnError`]'s variants; 16+ are protocol-level conditions with no
@@ -108,6 +110,39 @@ pub struct ResponseMsg {
     pub payload: Result<OkPayload, (u8, String)>,
 }
 
+/// Body of [`Msg::GraphUpdate`] — a batched edge delta against a graph
+/// version the server (usually) already holds.  The base rides the same
+/// [`GraphRef`] vocabulary as submits: by fingerprint in the steady
+/// state (the whole point — clients ship deltas, not CSRs), inline on
+/// first contact or after a [`CODE_GRAPH_UNKNOWN`] eviction bounce.
+pub struct GraphUpdateMsg {
+    pub base: GraphRef,
+    /// Edges to add, as (row, col).
+    pub inserts: Vec<(u32, u32)>,
+    /// Edges to drop, as (row, col).
+    pub removes: Vec<(u32, u32)>,
+}
+
+/// Success payload of [`Msg::GraphUpdated`] — the wire image of
+/// [`UpdateReport`](crate::coordinator::UpdateReport) (minus the patched
+/// graph itself, which stays server-side under `new_fp`).
+pub struct UpdateSummaryMsg {
+    pub old_fp: u64,
+    pub new_fp: u64,
+    pub inserted: u32,
+    pub removed: u32,
+    pub dirty_rws: u32,
+    pub spliced_rws: u32,
+    pub full_rebuild: bool,
+}
+
+/// Body of [`Msg::GraphUpdated`].  The error arm reuses the response
+/// code vocabulary: [`CODE_GRAPH_UNKNOWN`] (base not resident — re-send
+/// inline) or a mapped [`AttnError`] (delta rejected; base still served).
+pub struct GraphUpdatedMsg {
+    pub payload: Result<UpdateSummaryMsg, (u8, String)>,
+}
+
 /// One protocol message (= one frame payload).
 pub enum Msg {
     ClientHello { version: u16, token: String },
@@ -117,6 +152,8 @@ pub enum Msg {
     Submit(SubmitMsg),
     Response(ResponseMsg),
     Goodbye,
+    GraphUpdate(GraphUpdateMsg),
+    GraphUpdated(GraphUpdatedMsg),
 }
 
 impl Msg {
@@ -147,18 +184,7 @@ impl Msg {
             Msg::Submit(s) => {
                 w.put_u8(TAG_SUBMIT);
                 w.put_u64(s.id);
-                match &s.graph {
-                    GraphRef::Fingerprint { fp, n, nnz } => {
-                        w.put_u8(0);
-                        w.put_u64(*fp);
-                        w.put_u32(*n);
-                        w.put_u32(*nnz);
-                    }
-                    GraphRef::Inline(g) => {
-                        w.put_u8(1);
-                        encode_graph(&mut w, g);
-                    }
-                }
+                encode_graph_ref(&mut w, &s.graph);
                 w.put_u32(s.d);
                 w.put_u32(s.dv);
                 w.put_u32(s.heads);
@@ -190,6 +216,32 @@ impl Msg {
                 }
             }
             Msg::Goodbye => w.put_u8(TAG_GOODBYE),
+            Msg::GraphUpdate(u) => {
+                w.put_u8(TAG_GRAPH_UPDATE);
+                encode_graph_ref(&mut w, &u.base);
+                encode_edges(&mut w, &u.inserts);
+                encode_edges(&mut w, &u.removes);
+            }
+            Msg::GraphUpdated(u) => {
+                w.put_u8(TAG_GRAPH_UPDATED);
+                match &u.payload {
+                    Ok(s) => {
+                        w.put_u8(1);
+                        w.put_u64(s.old_fp);
+                        w.put_u64(s.new_fp);
+                        w.put_u32(s.inserted);
+                        w.put_u32(s.removed);
+                        w.put_u32(s.dirty_rws);
+                        w.put_u32(s.spliced_rws);
+                        w.put_u8(u8::from(s.full_rebuild));
+                    }
+                    Err((code, msg)) => {
+                        w.put_u8(0);
+                        w.put_u8(*code);
+                        w.put_str(msg);
+                    }
+                }
+            }
         }
         w.finish()
     }
@@ -215,19 +267,7 @@ impl Msg {
             },
             TAG_SUBMIT => {
                 let id = r.take_u64()?;
-                let graph = match r.take_u8()? {
-                    0 => GraphRef::Fingerprint {
-                        fp: r.take_u64()?,
-                        n: r.take_u32()?,
-                        nnz: r.take_u32()?,
-                    },
-                    1 => GraphRef::Inline(decode_graph(&mut r)?),
-                    other => {
-                        return Err(WireError::Malformed(format!(
-                            "unknown graph-ref tag {other}"
-                        )))
-                    }
-                };
+                let graph = decode_graph_ref(&mut r)?;
                 Msg::Submit(SubmitMsg {
                     id,
                     graph,
@@ -265,6 +305,27 @@ impl Msg {
                 Msg::Response(ResponseMsg { id, payload })
             }
             TAG_GOODBYE => Msg::Goodbye,
+            TAG_GRAPH_UPDATE => Msg::GraphUpdate(GraphUpdateMsg {
+                base: decode_graph_ref(&mut r)?,
+                inserts: decode_edges(&mut r)?,
+                removes: decode_edges(&mut r)?,
+            }),
+            TAG_GRAPH_UPDATED => {
+                let payload = if r.take_u8()? != 0 {
+                    Ok(UpdateSummaryMsg {
+                        old_fp: r.take_u64()?,
+                        new_fp: r.take_u64()?,
+                        inserted: r.take_u32()?,
+                        removed: r.take_u32()?,
+                        dirty_rws: r.take_u32()?,
+                        spliced_rws: r.take_u32()?,
+                        full_rebuild: r.take_u8()? != 0,
+                    })
+                } else {
+                    Err((r.take_u8()?, r.take_str()?))
+                };
+                Msg::GraphUpdated(GraphUpdatedMsg { payload })
+            }
             other => {
                 return Err(WireError::Malformed(format!(
                     "unknown message tag {other}"
@@ -283,10 +344,69 @@ pub fn csr_wire_bytes(g: &CsrGraph) -> u64 {
     8 + (8 + 4 * (g.indptr.len() as u64)) + (8 + 4 * (g.indices.len() as u64))
 }
 
+/// Delta wire size in bytes (edge lists only) — what a streaming update
+/// costs against [`csr_wire_bytes`] for re-shipping the whole patched CSR.
+pub fn delta_wire_bytes(inserts: usize, removes: usize) -> u64 {
+    // Two (count u64 + 8 bytes/edge) flattened edge lists.
+    (8 + 8 * inserts as u64) + (8 + 8 * removes as u64)
+}
+
 fn encode_graph(w: &mut WireWriter, g: &CsrGraph) {
     w.put_u64(g.n as u64);
     w.put_u32s(&g.indptr);
     w.put_u32s(&g.indices);
+}
+
+fn encode_graph_ref(w: &mut WireWriter, graph: &GraphRef) {
+    match graph {
+        GraphRef::Fingerprint { fp, n, nnz } => {
+            w.put_u8(0);
+            w.put_u64(*fp);
+            w.put_u32(*n);
+            w.put_u32(*nnz);
+        }
+        GraphRef::Inline(g) => {
+            w.put_u8(1);
+            encode_graph(w, g);
+        }
+    }
+}
+
+fn decode_graph_ref(r: &mut WireReader<'_>) -> Result<GraphRef, WireError> {
+    match r.take_u8()? {
+        0 => Ok(GraphRef::Fingerprint {
+            fp: r.take_u64()?,
+            n: r.take_u32()?,
+            nnz: r.take_u32()?,
+        }),
+        1 => Ok(GraphRef::Inline(decode_graph(r)?)),
+        other => {
+            Err(WireError::Malformed(format!("unknown graph-ref tag {other}")))
+        }
+    }
+}
+
+/// Edge lists travel flattened (`row, col` interleaved); endpoints are
+/// only range-checked against the *resolved base* server-side (the wire
+/// layer can't know `n` for a fingerprint ref).
+fn encode_edges(w: &mut WireWriter, edges: &[(u32, u32)]) {
+    let mut flat = Vec::with_capacity(edges.len() * 2);
+    for &(u, v) in edges {
+        flat.push(u);
+        flat.push(v);
+    }
+    w.put_u32s(&flat);
+}
+
+fn decode_edges(r: &mut WireReader<'_>) -> Result<Vec<(u32, u32)>, WireError> {
+    let flat = r.take_u32s()?;
+    if flat.len() % 2 != 0 {
+        return Err(WireError::Malformed(format!(
+            "edge list has odd element count {}",
+            flat.len()
+        )));
+    }
+    Ok(flat.chunks_exact(2).map(|p| (p[0], p[1])).collect())
 }
 
 /// Decode + fully validate a CSR graph.  Every invariant the in-process
@@ -544,6 +664,105 @@ mod tests {
         assert!(Msg::decode(&encode_raw(2, &[0, 2, 2], &[1, 1])).is_err());
         // The well-formed version of the same shape decodes.
         assert!(Msg::decode(&encode_raw(2, &[0, 1, 2], &[1, 0])).is_ok());
+    }
+
+    #[test]
+    fn graph_update_roundtrip_both_base_forms() {
+        let g = generators::ring(32);
+        let m = Msg::GraphUpdate(GraphUpdateMsg {
+            base: GraphRef::Fingerprint {
+                fp: g.fingerprint(),
+                n: 32,
+                nnz: 64,
+            },
+            inserts: vec![(0, 5), (17, 2)],
+            removes: vec![(3, 4)],
+        });
+        match roundtrip(&m) {
+            Msg::GraphUpdate(u) => {
+                match u.base {
+                    GraphRef::Fingerprint { fp, n, nnz } => {
+                        assert_eq!((fp, n, nnz), (g.fingerprint(), 32, 64));
+                    }
+                    _ => panic!("wrong base form"),
+                }
+                assert_eq!(u.inserts, vec![(0, 5), (17, 2)]);
+                assert_eq!(u.removes, vec![(3, 4)]);
+            }
+            _ => panic!("wrong tag"),
+        }
+        let m = Msg::GraphUpdate(GraphUpdateMsg {
+            base: GraphRef::Inline(g.clone()),
+            inserts: vec![],
+            removes: vec![(0, 1)],
+        });
+        match roundtrip(&m) {
+            Msg::GraphUpdate(u) => match u.base {
+                GraphRef::Inline(g2) => assert_eq!(g2, g),
+                _ => panic!("wrong base form"),
+            },
+            _ => panic!("wrong tag"),
+        }
+    }
+
+    #[test]
+    fn graph_updated_roundtrip_ok_and_err() {
+        let m = Msg::GraphUpdated(GraphUpdatedMsg {
+            payload: Ok(UpdateSummaryMsg {
+                old_fp: 7,
+                new_fp: 9,
+                inserted: 3,
+                removed: 1,
+                dirty_rws: 2,
+                spliced_rws: 14,
+                full_rebuild: false,
+            }),
+        });
+        match roundtrip(&m) {
+            Msg::GraphUpdated(u) => {
+                let s = u.payload.ok().expect("ok arm");
+                assert_eq!((s.old_fp, s.new_fp), (7, 9));
+                assert_eq!((s.inserted, s.removed), (3, 1));
+                assert_eq!((s.dirty_rws, s.spliced_rws), (2, 14));
+                assert!(!s.full_rebuild);
+            }
+            _ => panic!("wrong tag"),
+        }
+        let m = Msg::GraphUpdated(GraphUpdatedMsg {
+            payload: Err((CODE_GRAPH_UNKNOWN, "resend".into())),
+        });
+        match roundtrip(&m) {
+            Msg::GraphUpdated(u) => {
+                let (code, msg) = u.payload.err().expect("err arm");
+                assert_eq!(code, CODE_GRAPH_UNKNOWN);
+                assert_eq!(msg, "resend");
+            }
+            _ => panic!("wrong tag"),
+        }
+    }
+
+    #[test]
+    fn odd_edge_list_rejected() {
+        let mut w = WireWriter::new();
+        w.put_u8(TAG_GRAPH_UPDATE);
+        w.put_u8(0); // fingerprint base
+        w.put_u64(1);
+        w.put_u32(8);
+        w.put_u32(16);
+        w.put_u32s(&[0, 1, 2]); // 1.5 edges
+        w.put_u32s(&[]);
+        assert!(matches!(
+            Msg::decode(&w.finish()),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn delta_wire_bytes_matches_encoding() {
+        let mut w = WireWriter::new();
+        encode_edges(&mut w, &[(0, 1), (2, 3), (4, 5)]);
+        encode_edges(&mut w, &[(6, 7)]);
+        assert_eq!(w.len() as u64, delta_wire_bytes(3, 1));
     }
 
     #[test]

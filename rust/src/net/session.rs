@@ -31,13 +31,15 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::{AttnRequest, AttnResponse};
+use crate::graph::GraphDelta;
 use crate::kernels::Backend;
 use crate::util::sync::lock_unpoisoned;
 
 use super::frame::{read_frame, write_frame, FrameError};
 use super::listener::Shared;
 use super::proto::{
-    self, GraphRef, Msg, OkPayload, ResponseMsg, SubmitMsg, CODE_GRAPH_UNKNOWN,
+    self, GraphRef, GraphUpdateMsg, GraphUpdatedMsg, Msg, OkPayload,
+    ResponseMsg, SubmitMsg, UpdateSummaryMsg, CODE_GRAPH_UNKNOWN,
     CODE_PROTOCOL, VERSION,
 };
 
@@ -135,13 +137,19 @@ fn reader_loop(
                     return;
                 }
             }
+            Msg::GraphUpdate(up) => {
+                if !handle_graph_update(shared, writer, up) {
+                    return;
+                }
+            }
             Msg::Goodbye => return,
             // Server-to-client messages (or a second hello) arriving here
             // mark a confused peer.
             Msg::ClientHello { .. }
             | Msg::ServerHello { .. }
             | Msg::GraphStatus { .. }
-            | Msg::Response(_) => {
+            | Msg::Response(_)
+            | Msg::GraphUpdated(_) => {
                 protocol_fatal(shared, writer, "unexpected message for server");
                 return;
             }
@@ -231,6 +239,69 @@ fn handle_submit(
         return send_error(shared, writer, sub.id, code, &msg);
     }
     true
+}
+
+/// Apply one streaming delta (DESIGN.md §14).  The base resolves through
+/// the same [`GraphRef`] path submits use; the patched graph is inserted
+/// into the store under its new fingerprint so subsequent submits (and
+/// further deltas) ride bare references.  All outcomes — including a
+/// rejected delta — answer with [`Msg::GraphUpdated`] and keep the
+/// session alive; only a dead socket returns false.
+fn handle_graph_update(
+    shared: &Arc<Shared>,
+    writer: &Mutex<TcpStream>,
+    up: GraphUpdateMsg,
+) -> bool {
+    let base = match up.base {
+        GraphRef::Inline(g) => {
+            let arc = Arc::new(g);
+            shared.store.insert(arc.clone());
+            shared.metrics.net.graph_upload();
+            arc
+        }
+        GraphRef::Fingerprint { fp, n, nnz } => {
+            match shared.store.get(fp, n as usize, nnz as usize) {
+                Some(g) => {
+                    shared.metrics.net.graph_reuse();
+                    g
+                }
+                None => {
+                    return send(
+                        shared,
+                        writer,
+                        &Msg::GraphUpdated(GraphUpdatedMsg {
+                            payload: Err((
+                                CODE_GRAPH_UNKNOWN,
+                                "base graph not resident; re-send inline"
+                                    .to_string(),
+                            )),
+                        }),
+                    );
+                }
+            }
+        }
+    };
+    let delta = GraphDelta {
+        base_fp: base.fingerprint(),
+        inserts: up.inserts,
+        removes: up.removes,
+    };
+    let payload = match shared.coord.update_graph(&base, &delta) {
+        Ok(r) => {
+            shared.store.insert(r.patched.clone());
+            Ok(UpdateSummaryMsg {
+                old_fp: r.old_fp,
+                new_fp: r.new_fp,
+                inserted: r.inserted as u32,
+                removed: r.removed as u32,
+                dirty_rws: r.dirty_rws as u32,
+                spliced_rws: r.spliced_rws as u32,
+                full_rebuild: r.full_rebuild,
+            })
+        }
+        Err(e) => Err(proto::encode_attn_error(&e)),
+    };
+    send(shared, writer, &Msg::GraphUpdated(GraphUpdatedMsg { payload }))
 }
 
 /// Block for an in-flight slot.  False once the server is draining.

@@ -31,7 +31,7 @@ use fused3s::coordinator::{
     AttnRequest, AttnResponse, Coordinator, CoordinatorConfig, ExecutorKind,
 };
 use fused3s::fault::{self, FaultKind, FaultPlan, FaultSite};
-use fused3s::graph::{generators, CsrGraph};
+use fused3s::graph::{generators, CsrGraph, GraphDelta};
 use fused3s::kernels::{reference, AttentionProblem, AttnError, Backend};
 use fused3s::util::prng::Rng;
 
@@ -464,6 +464,210 @@ fn quarantined_backend_readmitted_after_ttl() {
     // tolerance (they ran different kernels, so no bit contract).
     assert!(reference::max_abs_diff(&out, &out3) < 0.15);
     coord.shutdown();
+}
+
+/// Seeded mixed edit batch for the streaming chaos tests: removes are
+/// sampled from resident edges so they take effect.
+fn churn(g: &CsrGraph, edits: usize, rng: &mut Rng) -> GraphDelta {
+    let mut ins = Vec::new();
+    let mut rem = Vec::new();
+    for _ in 0..edits {
+        if rng.coin(0.5) {
+            let u = rng.below(g.n);
+            let row = g.row(u);
+            if !row.is_empty() {
+                rem.push((u as u32, row[rng.below(row.len())]));
+                continue;
+            }
+        }
+        ins.push((rng.below(g.n) as u32, rng.below(g.n) as u32));
+    }
+    ins.retain(|e| !rem.contains(e));
+    GraphDelta::against(g, ins, rem)
+}
+
+/// Streaming chaos (ISSUE 9 satellite): a fault injected into the
+/// incremental BSB rebuild — panic or typed error — must not lose the
+/// update.  `update_graph` falls back to a full from-scratch rebuild,
+/// still swaps the version in, counts the fallback, and keeps serving
+/// correct answers afterwards.
+#[test]
+fn update_graph_fault_falls_back_to_full_rebuild() {
+    let _gate = gate();
+    quiet_panics();
+    let coord = Coordinator::start(config()).expect("start");
+    let g0 = generators::erdos_renyi(96, 4.0, 17).with_self_loops();
+    let mut rng = Rng::new(31);
+
+    // Seed the BSB registry: the first delta has nothing to splice from.
+    let d1 = churn(&g0, 20, &mut rng);
+    let (g1, _) = d1.applied(&g0).expect("mirror");
+    let r1 = coord.update_graph(&g0, &d1).expect("first update");
+    assert!(r1.full_rebuild, "no registered BSB yet");
+
+    // Panic inside the incremental rebuild: caught, full rebuild, swap
+    // still lands.
+    let guard = fault::install(
+        FaultPlan::new(7)
+            .with(FaultSite::Prepare, FaultKind::Panic, 1.0)
+            .with_budget(1),
+    );
+    let d2 = churn(&g1, 20, &mut rng);
+    let (g2, _) = d2.applied(&g1).expect("mirror");
+    let r2 = coord.update_graph(&g1, &d2).expect("update must survive the panic");
+    assert_eq!(r2.new_fp, g2.fingerprint());
+    assert!(r2.full_rebuild, "panic must route to the full rebuild");
+    assert_eq!(r2.spliced_rws, 0, "nothing spliced on the fallback path");
+    assert_eq!(guard.plan().injected_of_kind(FaultKind::Panic), 1);
+    drop(guard);
+
+    // A typed error takes the same fallback without a panic.
+    let guard = fault::install(
+        FaultPlan::new(9)
+            .with(FaultSite::Prepare, FaultKind::Error, 1.0)
+            .with_budget(1),
+    );
+    let d3 = churn(&g2, 20, &mut rng);
+    let (g3, _) = d3.applied(&g2).expect("mirror");
+    let r3 = coord.update_graph(&g2, &d3).expect("update must survive the error");
+    assert!(r3.full_rebuild);
+    drop(guard);
+
+    let m = coord.metrics();
+    assert_eq!(m.streaming.deltas_applied(), 3);
+    assert_eq!(m.streaming.full_rebuilds(), 3);
+    assert_eq!(m.faults.panics_caught_count(), 1, "exactly the injected panic");
+
+    // The fallback-built plan still answers to the dense oracle.
+    let resp = submit_one(&coord, 42, &g3, Backend::CpuCsr);
+    let out = resp.result.expect("serve after chaos");
+    close_to_dense(42, &g3, 1, &out);
+    coord.shutdown();
+}
+
+/// Streaming chaos: deltas racing live submits.  Every response must
+/// bit-match the fault-free baseline *for the graph version the request
+/// carried* — a half-patched plan, or a plan swapped under the wrong
+/// fingerprint, would perturb the bits.  Exactly-one-response holds
+/// throughout.
+#[test]
+fn update_graph_racing_submits_serves_each_version_bit_exact() {
+    let _gate = gate();
+    quiet_panics();
+    // Version chain g0 → g4, mirrored locally before any serving starts.
+    let mut rng = Rng::new(77);
+    let mut versions = vec![generators::erdos_renyi(80, 4.0, 23).with_self_loops()];
+    let mut deltas = Vec::new();
+    for _ in 0..4 {
+        let d = churn(versions.last().unwrap(), 16, &mut rng);
+        let (next, _) = d.applied(versions.last().unwrap()).expect("mirror");
+        deltas.push(d);
+        versions.push(next);
+    }
+
+    // Fault-free per-version baseline from an isolated coordinator.
+    let baseline: HashMap<u64, Vec<f32>> = {
+        let coord = Coordinator::start(config()).expect("baseline start");
+        let mut outs = HashMap::new();
+        for (vi, g) in versions.iter().enumerate() {
+            for slot in 0..3u64 {
+                let id = vi as u64 * 100 + slot;
+                let resp = submit_one(&coord, id, g, Backend::CpuCsr);
+                outs.insert(id, resp.result.expect("baseline ok"));
+            }
+        }
+        coord.shutdown();
+        outs
+    };
+
+    let coord = Arc::new(Coordinator::start(config()).expect("start"));
+    let versions = Arc::new(versions);
+    let mut submitters = Vec::new();
+    for t in 0..3usize {
+        let coord = Arc::clone(&coord);
+        let versions = Arc::clone(&versions);
+        submitters.push(std::thread::spawn(move || {
+            let mut pending = Vec::new();
+            for round in 0..versions.len() {
+                let vi = (round + t) % versions.len();
+                for slot in 0..3u64 {
+                    let id = vi as u64 * 100 + slot;
+                    let (req, rx) = request(id, &versions[vi], 1, Backend::CpuCsr, None);
+                    coord.submit(req).expect("submit");
+                    pending.push((id, rx));
+                }
+            }
+            pending
+        }));
+    }
+    // Race the whole delta chain against the submitters.
+    for (i, d) in deltas.iter().enumerate() {
+        let rep = coord.update_graph(&versions[i], d).expect("racing update");
+        assert_eq!(rep.new_fp, versions[i + 1].fingerprint());
+    }
+    let mut channels = Vec::new();
+    for h in submitters {
+        for (id, rx) in h.join().expect("submitter thread") {
+            let resp = rx.recv_timeout(LONG).expect("response");
+            assert_eq!(resp.id, id);
+            let out = resp.result.expect("racing request must succeed");
+            assert_eq!(
+                out, baseline[&id],
+                "request {id}: a racing delta perturbed the served output — \
+                 a half-patched or wrong-version plan answered"
+            );
+            channels.push((id, rx));
+        }
+    }
+    coord.shutdown();
+    for (id, rx) in &channels {
+        assert!(
+            matches!(rx.try_recv(), Err(TryRecvError::Disconnected)),
+            "request {id} got more than one response"
+        );
+    }
+}
+
+/// Streaming chaos: `update_graph` racing `shutdown`.  The out-of-band
+/// swap path does not ride the ingress queue, so it completes even while
+/// the stages drain — and every request accepted before the close is
+/// still answered exactly once.
+#[test]
+fn update_graph_racing_shutdown_stays_safe() {
+    let _gate = gate();
+    quiet_panics();
+    let coord = Arc::new(Coordinator::start(config()).expect("start"));
+    let g0 = generators::erdos_renyi(64, 4.0, 29).with_self_loops();
+    let mut rng = Rng::new(41);
+    let mut pending = Vec::new();
+    for id in 0..8u64 {
+        let (req, rx) = request(500 + id, &g0, 1, Backend::CpuCsr, None);
+        match coord.submit(req) {
+            Ok(()) => pending.push((500 + id, rx)),
+            Err(AttnError::QueueClosed) => {}
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+        }
+    }
+    let delta = churn(&g0, 12, &mut rng);
+    let updater = {
+        let coord = Arc::clone(&coord);
+        let g0 = g0.clone();
+        std::thread::spawn(move || coord.update_graph(&g0, &delta))
+    };
+    coord.shutdown(); // concurrent with the updater
+    let rep = updater
+        .join()
+        .expect("updater thread")
+        .expect("out-of-band update must not depend on the live queue");
+    assert_eq!(rep.old_fp, g0.fingerprint());
+    for (id, rx) in &pending {
+        let resp = rx
+            .recv_timeout(LONG)
+            .unwrap_or_else(|_| panic!("accepted request {id} never answered"));
+        assert_eq!(resp.id, *id);
+        assert!(resp.result.is_ok(), "request {id}: {:?}", resp.result.err());
+        assert!(matches!(rx.try_recv(), Err(TryRecvError::Disconnected)));
+    }
 }
 
 /// Regression (ISSUE 6 satellite): a per-shard prepare failure inside a

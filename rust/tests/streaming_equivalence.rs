@@ -1,0 +1,510 @@
+//! Streaming differential harness (ROADMAP item 3): incremental BSB
+//! maintenance under edge churn must be **indistinguishable** from
+//! throwing the old structures away and rebuilding from scratch.
+//!
+//! Three layers of the contract, each checked bit-for-bit:
+//!
+//! 1. **structure** — `incremental::rebuild` (dirty windows recomputed,
+//!    clean windows spliced from the old BSB) equals `bsb::build` on the
+//!    patched CSR, including the per-window hybrid routing decisions
+//!    derived from it;
+//! 2. **arithmetic** — plans built from the incremental BSB produce
+//!    bit-identical attention outputs to plans built from the scratch
+//!    BSB, across the generator suite × delta mixes × `heads ∈ {1,4}` ×
+//!    serial/parallel engines;
+//! 3. **serving** — `Coordinator::update_graph` atomically swaps the
+//!    cached plans: a replay burst on the patched fingerprint is
+//!    cache-hot (zero new misses), the retired fingerprint is evicted,
+//!    and outputs match a fresh serial oracle on the patched graph.
+//!
+//! A seeded fuzz walk (satellite 2) additionally pins the dirty-window
+//! contract itself: after every cumulative batch, the patched CSR is
+//! canonical, its fingerprint equals a from-scratch recompute, and the
+//! reported dirty set is *exactly* the windows whose row contents
+//! changed.  Everything runs offline under `ExecutorKind::HostEmulation`.
+
+use std::collections::HashSet;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use fused3s::bsb::geometry;
+use fused3s::bsb::incremental;
+use fused3s::bsb::reorder::Order;
+use fused3s::bsb::{self, Bsb};
+use fused3s::coordinator::{
+    AttnRequest, Coordinator, CoordinatorConfig, ExecutorKind,
+};
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::graph::{generators, CsrGraph, GraphDelta};
+use fused3s::kernels::{AttentionBatch, Backend, ExecCtx, Plan};
+use fused3s::runtime::Manifest;
+use fused3s::util::prng::Rng;
+use fused3s::TCB_R;
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+const HEAD_COUNTS: &[usize] = &[1, 4];
+const D: usize = 16;
+const SCALE: f32 = 0.25;
+const LONG: Duration = Duration::from_secs(120);
+
+fn manifest() -> Manifest {
+    // Matches the coordinator's HostEmulation bucketing configuration.
+    offline_manifest(8, BUCKETS, 128)
+}
+
+/// The ISSUE's generator mix (same shapes as `packing_equivalence.rs`,
+/// so the router exercises wide, narrow, and dense windows).
+fn graph_suite() -> Vec<(&'static str, CsrGraph)> {
+    vec![
+        ("er", generators::erdos_renyi(400, 5.0, 3).with_self_loops()),
+        ("sbm", generators::sbm(6, 24, 0.3, 0.02, 5).with_self_loops()),
+        ("star", generators::star(1500)),
+        ("power_law", generators::power_law(512, 6.0, 2.3, 9).with_self_loops()),
+    ]
+}
+
+#[derive(Clone, Copy, Debug)]
+enum DeltaMix {
+    InsertOnly,
+    RemoveOnly,
+    Mixed,
+}
+
+const MIXES: &[DeltaMix] = &[DeltaMix::InsertOnly, DeltaMix::RemoveOnly, DeltaMix::Mixed];
+
+/// A seeded edit batch of the requested mix.  Removes are sampled from
+/// resident edges so they take effect; inserts are fresh random pairs
+/// (the occasional duplicate of an existing edge is a legal no-op).
+fn edit_batch(
+    g: &CsrGraph,
+    mix: DeltaMix,
+    edits: usize,
+    rng: &mut Rng,
+) -> (Vec<(u32, u32)>, Vec<(u32, u32)>) {
+    let mut ins = Vec::new();
+    let mut rem = Vec::new();
+    for _ in 0..edits {
+        let remove = match mix {
+            DeltaMix::InsertOnly => false,
+            DeltaMix::RemoveOnly => true,
+            DeltaMix::Mixed => rng.coin(0.5),
+        };
+        if remove {
+            let u = rng.below(g.n);
+            let row = g.row(u);
+            if !row.is_empty() {
+                rem.push((u as u32, row[rng.below(row.len())]));
+            }
+            continue;
+        }
+        ins.push((rng.below(g.n) as u32, rng.below(g.n) as u32));
+    }
+    // The same edge on both sides is rejected as ambiguous; keep the
+    // batch well-formed.
+    ins.retain(|e| !rem.contains(e));
+    (ins, rem)
+}
+
+fn head_features(n: usize, heads: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(heads * n * D, 1.0),
+        rng.normal_vec(heads * n * D, 1.0),
+        rng.normal_vec(heads * n * D, 1.0),
+    )
+}
+
+/// Structural + routing + arithmetic differential for one (graph, mix)
+/// cell: incremental rebuild vs. from-scratch build on the patched CSR.
+fn check_delta_cell(name: &str, base: &CsrGraph, mix: DeltaMix, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let (ins, rem) = edit_batch(base, mix, 40, &mut rng);
+    let delta = GraphDelta::against(base, ins, rem);
+    let (patched, report) = delta
+        .applied(base)
+        .unwrap_or_else(|e| panic!("{name} {mix:?}: delta rejected: {e:#}"));
+
+    let tag = format!("{name} {mix:?}");
+    let old = bsb::build(base);
+    assert!(incremental::compatible(&old, &patched), "{tag}: same n, same windows");
+    let (inc, stats) = incremental::rebuild(&old, &patched, &report.dirty_rws);
+    let scratch = bsb::build(&patched);
+    assert_eq!(inc, scratch, "{tag}: incremental BSB diverged from scratch");
+    assert_eq!(
+        stats.rebuilt,
+        report.dirty_rws.len(),
+        "{tag}: every dirty window rebuilt, nothing else"
+    );
+    assert_eq!(
+        stats.rebuilt + stats.spliced,
+        scratch.num_rw,
+        "{tag}: rebuild/splice must partition the windows"
+    );
+
+    // Hybrid routing decisions per RW: pure function of the BSB, so the
+    // incremental build must route every window identically.
+    let man = manifest();
+    let route = |b: &Bsb| {
+        geometry::plan_hybrid(b, &man.t_buckets, man.rw_batch, Order::ByTcbDesc, man.chunk_t)
+    };
+    let (hp_inc, hp_scr) = (route(&inc), route(&scratch));
+    assert_eq!(hp_inc.routes, hp_scr.routes, "{tag}: per-window routing diverged");
+    assert_eq!(
+        hp_inc.stats.narrow_windows, hp_scr.stats.narrow_windows,
+        "{tag}: narrow-window accounting diverged"
+    );
+    assert_eq!(
+        hp_inc.stats.dense_windows, hp_scr.stats.dense_windows,
+        "{tag}: dense-window accounting diverged"
+    );
+
+    // Plan-output bit-match: hybrid plans built from each BSB, executed
+    // across the head sweep on both engine policies.
+    let inc_plan = Plan::from_bsb(&man, inc, Backend::Hybrid).expect("incremental plan");
+    let scr_plan = Plan::from_bsb(&man, scratch, Backend::Hybrid).expect("scratch plan");
+    for &heads in HEAD_COUNTS {
+        let (q, k, v) = head_features(patched.n, heads, seed ^ ((heads as u64) << 32));
+        let x = AttentionBatch::new(patched.n, D, D, heads, &q, &k, &v, SCALE);
+        for policy in [ExecPolicy::serial(), ExecPolicy { threads: 4, pipeline_depth: 2 }] {
+            let engine = Engine::new(policy);
+            let want = scr_plan
+                .execute(&mut ExecCtx::host(&engine), &x)
+                .expect("scratch run");
+            let got = inc_plan
+                .execute(&mut ExecCtx::host(&engine), &x)
+                .expect("incremental run");
+            assert_eq!(
+                got, want,
+                "{tag} heads={heads} {policy:?}: incremental plan output \
+                 diverged from scratch"
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_rebuild_bit_matches_scratch_across_suite() {
+    for (i, (name, g)) in graph_suite().iter().enumerate() {
+        for (j, &mix) in MIXES.iter().enumerate() {
+            check_delta_cell(name, g, mix, 1 + 100 * (i as u64 + 1) + j as u64);
+        }
+    }
+}
+
+/// All distinct columns per row window (the coarser "distinct column set"
+/// invalidation criterion the per-row contract refines).
+fn window_columns(g: &CsrGraph) -> Vec<HashSet<u32>> {
+    let num_rw = g.n.div_ceil(TCB_R);
+    let mut cols = vec![HashSet::new(); num_rw];
+    for u in 0..g.n {
+        cols[u / TCB_R].extend(g.row(u).iter().copied());
+    }
+    cols
+}
+
+/// Exact dirty set by brute force: windows where any row's adjacency
+/// differs between the two versions.
+fn changed_windows(old: &CsrGraph, new: &CsrGraph) -> Vec<u32> {
+    assert_eq!(old.n, new.n);
+    let num_rw = old.n.div_ceil(TCB_R);
+    (0..num_rw as u32)
+        .filter(|&w| {
+            let lo = w as usize * TCB_R;
+            let hi = (lo + TCB_R).min(old.n);
+            (lo..hi).any(|u| old.row(u) != new.row(u))
+        })
+        .collect()
+}
+
+/// CSR canonical-form invariants: monotone `indptr`, strictly ascending
+/// (hence duplicate-free) in-range rows.
+fn assert_csr_canonical(tag: &str, g: &CsrGraph) {
+    assert_eq!(g.indptr.len(), g.n + 1, "{tag}: indptr length");
+    assert_eq!(g.indptr[0], 0, "{tag}: indptr origin");
+    assert_eq!(g.indptr[g.n] as usize, g.indices.len(), "{tag}: indptr end");
+    for u in 0..g.n {
+        assert!(g.indptr[u] <= g.indptr[u + 1], "{tag}: indptr monotone at {u}");
+        let row = g.row(u);
+        for w in row.windows(2) {
+            assert!(w[0] < w[1], "{tag}: row {u} not strictly sorted: {w:?}");
+        }
+        if let Some(&last) = row.last() {
+            assert!((last as usize) < g.n, "{tag}: row {u} column out of range");
+        }
+    }
+}
+
+/// Satellite 2 — seeded fuzz walk: 1–50 cumulative delta batches; after
+/// every step the patched fingerprint equals a from-scratch recompute on
+/// the surviving edge set, the CSR stays canonical, the dirty-window set
+/// is exact, and the incrementally-maintained BSB (carried across steps,
+/// never rebuilt whole) still equals the scratch build.
+#[test]
+fn fuzz_cumulative_deltas_keep_every_invariant() {
+    for seed in [0xF0u64, 0xF1, 0xF2] {
+        let mut rng = Rng::new(seed);
+        let n = 64 + rng.below(192);
+        let mut g = generators::erdos_renyi(n, 4.0, seed).with_self_loops();
+        let mut bsb = bsb::build(&g);
+        let mut model: HashSet<(u32, u32)> = (0..g.n)
+            .flat_map(|u| g.row(u).iter().map(move |&v| (u as u32, v)).collect::<Vec<_>>())
+            .collect();
+        let steps = 1 + rng.below(50);
+        for step in 0..steps {
+            let tag = format!("seed={seed:#x} step={step}");
+            let mix = MIXES[rng.below(MIXES.len())];
+            let (ins, rem) = edit_batch(&g, mix, 1 + rng.below(24), &mut rng);
+            let delta = GraphDelta::against(&g, ins.clone(), rem.clone());
+            let (patched, report) = delta
+                .applied(&g)
+                .unwrap_or_else(|e| panic!("{tag}: delta rejected: {e:#}"));
+
+            // Versioned fingerprints: patched-in-place == from-scratch on
+            // the model edge set maintained independently.
+            for e in &rem {
+                model.remove(e);
+            }
+            model.extend(ins.iter().copied());
+            let edges: Vec<(u32, u32)> = model.iter().copied().collect();
+            let scratch_csr = CsrGraph::from_edges(g.n, &edges).expect("model edges");
+            assert_eq!(patched, scratch_csr, "{tag}: patched CSR != from-scratch");
+            assert_eq!(
+                report.new_fp,
+                scratch_csr.fingerprint(),
+                "{tag}: fingerprint != from-scratch recompute"
+            );
+            assert_eq!(report.old_fp, g.fingerprint(), "{tag}: old fingerprint");
+            assert_csr_canonical(&tag, &patched);
+
+            // Dirty-window exactness: precisely the windows whose row
+            // contents changed...
+            assert_eq!(
+                report.dirty_rws,
+                changed_windows(&g, &patched),
+                "{tag}: dirty set != brute-force row diff"
+            );
+            // ...and every window whose *distinct column set* changed is
+            // among them (the per-row contract refines the column one).
+            let (before, after) = (window_columns(&g), window_columns(&patched));
+            let dirty: HashSet<u32> = report.dirty_rws.iter().copied().collect();
+            for w in 0..before.len() {
+                if before[w] != after[w] {
+                    assert!(
+                        dirty.contains(&(w as u32)),
+                        "{tag}: window {w} changed columns but was not dirtied"
+                    );
+                }
+            }
+
+            // The BSB maintained only through incremental rebuilds stays
+            // bit-identical to scratch — drift cannot accumulate.
+            let (next, stats) = incremental::rebuild(&bsb, &patched, &report.dirty_rws);
+            assert_eq!(stats.rebuilt, report.dirty_rws.len(), "{tag}");
+            assert_eq!(next, bsb::build(&patched), "{tag}: BSB drift");
+            bsb = next;
+            g = patched;
+        }
+    }
+}
+
+fn host_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        executor: ExecutorKind::HostEmulation,
+        preprocess_workers: 2,
+        queue_capacity: 16,
+        max_batch_requests: 1,
+        max_batch_nodes: 1 << 20,
+        max_batch_delay: Duration::from_millis(1),
+        cache_capacity: 8,
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// Submit one single-head request per seed and return the outputs, in
+/// order.  `max_batch_requests = 1` keeps one cache lookup per request,
+/// so hit/miss deltas are exact.
+fn burst(coord: &Coordinator, g: &CsrGraph, backend: Backend, seeds: &[u64]) -> Vec<Vec<f32>> {
+    let mut pending = Vec::new();
+    for &s in seeds {
+        let (q, k, v) = head_features(g.n, 1, s);
+        let (tx, rx) = channel();
+        coord
+            .submit(AttnRequest {
+                id: s,
+                graph: g.clone(),
+                d: D,
+                dv: D,
+                heads: 1,
+                q,
+                k,
+                v,
+                scale: SCALE,
+                backend,
+                deadline: None,
+                reply: tx,
+            })
+            .expect("submit");
+        pending.push(rx);
+    }
+    pending
+        .into_iter()
+        .map(|rx| {
+            let resp = rx.recv_timeout(LONG).expect("response");
+            resp.result.expect("burst request must succeed")
+        })
+        .collect()
+}
+
+/// Fresh serial oracle for one graph (no shared state with the
+/// coordinator under test).
+fn oracle(g: &CsrGraph, backend: Backend, seeds: &[u64]) -> Vec<Vec<f32>> {
+    let man = manifest();
+    let serial = Engine::serial();
+    let plan = Plan::new(&man, g, backend, &serial).expect("oracle plan");
+    seeds
+        .iter()
+        .map(|&s| {
+            let (q, k, v) = head_features(g.n, 1, s);
+            let x = AttentionBatch::new(g.n, D, D, 1, &q, &k, &v, SCALE);
+            plan.execute(&mut ExecCtx::host(&serial), &x).expect("oracle run")
+        })
+        .collect()
+}
+
+/// Satellite 1 (serving leg) + the PR's acceptance criterion: after
+/// `update_graph`, a replay burst on the patched fingerprint takes zero
+/// new cache misses (the swapped-in plans are hot), the retired
+/// fingerprint is gone (probing it misses), and everything served before,
+/// during, and after bit-matches the per-version serial oracle.
+#[test]
+fn coordinator_update_swaps_cache_without_stale_hits() {
+    let backend = Backend::Fused3S;
+    let seeds: Vec<u64> = (0..4).map(|i| 7000 + i).collect();
+    let coord = Coordinator::start(host_config()).expect("start");
+    let g0 = generators::erdos_renyi(160, 5.0, 21).with_self_loops();
+
+    // Warm the base version: first burst populates the cache...
+    let got = burst(&coord, &g0, backend, &seeds);
+    assert_eq!(got, oracle(&g0, backend, &seeds), "base burst vs oracle");
+    let m = coord.metrics();
+    let warm_misses = m.batching.cache_misses();
+    assert!(warm_misses >= 1, "warm burst must have built the plan");
+    // ...and a second burst is fully cache-hot.
+    let _ = burst(&coord, &g0, backend, &seeds);
+    assert_eq!(m.batching.cache_misses(), warm_misses, "warm replay must not miss");
+
+    // First delta: nothing in the BSB registry yet, so the rebuild is
+    // full — but the swap contract is identical.
+    let mut rng = Rng::new(99);
+    let (ins, rem) = edit_batch(&g0, DeltaMix::Mixed, 30, &mut rng);
+    let delta = GraphDelta::against(&g0, ins, rem);
+    let (g1, local) = delta.applied(&g0).expect("local mirror");
+    let rep = coord.update_graph(&g0, &delta).expect("update_graph");
+    assert_eq!(rep.old_fp, g0.fingerprint());
+    assert_eq!(rep.new_fp, g1.fingerprint(), "server fp == local recompute");
+    assert_eq!(rep.dirty_rws, local.dirty_rws.len());
+    assert!(rep.full_rebuild, "no prior BSB registered: must fall back to full");
+    assert!(
+        rep.plans_swapped.contains(&backend),
+        "the served backend must be re-planned: {:?}",
+        rep.plans_swapped
+    );
+
+    // Replay burst on the patched version: ZERO new misses — the swap
+    // left the new fingerprint cache-hot — and outputs match a fresh
+    // oracle on the patched graph.
+    let miss_before = m.batching.cache_misses();
+    let got = burst(&coord, &g1, backend, &seeds);
+    assert_eq!(
+        m.batching.cache_misses(),
+        miss_before,
+        "stale-plan hit: replay after update_graph must be cache-hot"
+    );
+    assert_eq!(got, oracle(&g1, backend, &seeds), "patched burst vs oracle");
+
+    // The retired version is evicted: probing the old graph misses (a
+    // fresh plan gets built — it still *serves* correctly, it is just no
+    // longer resident).
+    let miss_before = m.batching.cache_misses();
+    let _ = burst(&coord, &g0, backend, &[seeds[0]]);
+    assert!(
+        m.batching.cache_misses() > miss_before,
+        "old fingerprint must have been evicted by the swap"
+    );
+
+    // Second delta chains off the registered BSB: incremental this time,
+    // with clean windows spliced, and the same zero-miss replay contract.
+    let (ins, rem) = edit_batch(&g1, DeltaMix::Mixed, 20, &mut rng);
+    let delta = GraphDelta::against(&g1, ins, rem);
+    let (g2, _) = delta.applied(&g1).expect("local mirror");
+    let rep = coord.update_graph(&g1, &delta).expect("second update");
+    assert_eq!(rep.new_fp, g2.fingerprint());
+    assert!(!rep.full_rebuild, "chained delta must rebuild incrementally");
+    assert!(rep.spliced_rws > 0, "clean windows must be spliced");
+    let miss_before = m.batching.cache_misses();
+    let got = burst(&coord, &g2, backend, &seeds);
+    assert_eq!(m.batching.cache_misses(), miss_before, "chained replay cache-hot");
+    assert_eq!(got, oracle(&g2, backend, &seeds), "chained burst vs oracle");
+
+    // Streaming counters reconcile with the two reports.
+    assert_eq!(m.streaming.deltas_applied(), 2);
+    assert_eq!(m.streaming.full_rebuilds(), 1);
+    assert!(m.streaming.rws_dirtied() > 0);
+    assert_eq!(m.streaming.rws_spliced() as usize, rep.spliced_rws);
+    coord.shutdown();
+}
+
+/// A malformed delta (edge out of range / ambiguous edit) is rejected
+/// without touching the served version: the base plan stays resident and
+/// keeps answering bit-identically.
+#[test]
+fn rejected_delta_leaves_the_old_version_serving() {
+    let backend = Backend::CpuCsr;
+    let coord = Coordinator::start(host_config()).expect("start");
+    let g = generators::sbm(4, 20, 0.25, 0.02, 8).with_self_loops();
+    let want = oracle(&g, backend, &[1]);
+    assert_eq!(burst(&coord, &g, backend, &[1]), want);
+    let m = coord.metrics();
+
+    let bad = GraphDelta::against(&g, vec![(0, 9999)], vec![]);
+    assert!(coord.update_graph(&g, &bad).is_err(), "out-of-range must reject");
+    let ambiguous = GraphDelta::against(&g, vec![(0, 1)], vec![(0, 1)]);
+    assert!(coord.update_graph(&g, &ambiguous).is_err(), "ambiguous must reject");
+    assert_eq!(m.streaming.deltas_applied(), 0, "rejected deltas must not count");
+
+    let miss_before = m.batching.cache_misses();
+    assert_eq!(burst(&coord, &g, backend, &[1]), want, "old version still serves");
+    assert_eq!(
+        m.batching.cache_misses(),
+        miss_before,
+        "rejected delta must not evict the served plan"
+    );
+    coord.shutdown();
+}
+
+/// A no-op delta (every edit cancels) keeps the fingerprint — the swap
+/// must not evict the plans it just refreshed.
+#[test]
+fn noop_delta_keeps_the_version_hot() {
+    let backend = Backend::CpuCsr;
+    let coord = Coordinator::start(host_config()).expect("start");
+    let g = generators::ring(64).with_self_loops();
+    let want = oracle(&g, backend, &[5]);
+    assert_eq!(burst(&coord, &g, backend, &[5]), want);
+    let m = coord.metrics();
+
+    // Insert an edge that already exists, remove one that does not.
+    let delta = GraphDelta::against(&g, vec![(0, 0)], vec![(1, 63)]);
+    let rep = coord.update_graph(&g, &delta).expect("no-op update");
+    assert_eq!(rep.old_fp, rep.new_fp, "no effective change keeps the version");
+    assert_eq!(rep.dirty_rws, 0);
+
+    let miss_before = m.batching.cache_misses();
+    assert_eq!(burst(&coord, &g, backend, &[5]), want);
+    assert_eq!(
+        m.batching.cache_misses(),
+        miss_before,
+        "self-swap must not evict the refreshed plan"
+    );
+    coord.shutdown();
+}

@@ -68,6 +68,49 @@ else
     echo "WARN: BENCH_packing.json absent, packing regression check skipped"
 fi
 
+# --- streaming: deterministic, tight band -------------------------------
+STREAM="$ROOT/BENCH_streaming.json"
+if [ -f "$STREAM" ]; then
+    cp "$STREAM" "$tmp/streaming_committed.json"
+    python3 "$ROOT/scripts/streaming_model.py" --write >/dev/null
+    mv "$STREAM" "$tmp/streaming_fresh.json"
+    cp "$tmp/streaming_committed.json" "$STREAM"
+    python3 - "$tmp/streaming_committed.json" "$tmp/streaming_fresh.json" <<'EOF'
+import json, sys
+
+TOL = 0.02  # absolute, on window fractions / byte ratios
+committed = json.load(open(sys.argv[1]))
+fresh = json.load(open(sys.argv[2]))
+cl, fl = committed["levels"], fresh["levels"]
+bad = 0
+for level in sorted(set(cl) | set(fl)):
+    if level not in cl or level not in fl:
+        print(f"streaming: edit-level set changed: {level!r} on one side only")
+        bad = 1
+        continue
+    for key in ("dirty_rw_fraction", "spliced_fraction", "delta_bytes_ratio"):
+        a, b = float(cl[level][key]), float(fl[level][key])
+        if abs(a - b) > TOL:
+            print(
+                f"streaming REGRESSION: {level}.{key}: committed {a:.6f} "
+                f"vs fresh {b:.6f} (tol +-{TOL})"
+            )
+            bad = 1
+    for key in ("effective_inserts", "effective_removes"):
+        a, b = int(cl[level][key]), int(fl[level][key])
+        if a != b:
+            print(
+                f"streaming REGRESSION: {level}.{key}: committed {a} "
+                f"vs fresh {b} (integer counts must match exactly)"
+            )
+            bad = 1
+sys.exit(bad)
+EOF
+    echo "streaming baseline OK (fresh model within +-0.02 of committed)"
+else
+    echo "WARN: BENCH_streaming.json absent, streaming regression check skipped"
+fi
+
 # --- planner: timing ratios, wide band, only when freshly rerun ---------
 PLAN="$ROOT/BENCH_planner.json"
 if [ -f "$PLAN" ] \
@@ -104,5 +147,45 @@ EOF
 else
     echo "planner baseline absent or untracked (timing bench) — skipped"
 fi
+
+# --- snapshot suite: timing ratios, wide band, only when freshly rerun --
+# BENCH_<bench>.json files written by scripts/bench_snapshot.sh share one
+# schema ({"keys": {key: ratio}}); compare each against its HEAD copy the
+# same way the planner baseline is handled.
+for bench in host_pipeline coordinator_batching multihead shard net_loopback; do
+    SNAP="$ROOT/BENCH_$bench.json"
+    if [ -f "$SNAP" ] \
+        && git -C "$ROOT" ls-files --error-unmatch "BENCH_$bench.json" \
+            >/dev/null 2>&1; then
+        if git -C "$ROOT" diff --quiet -- "BENCH_$bench.json"; then
+            echo "$bench snapshot unchanged vs HEAD (bench not rerun) — skipped"
+        else
+            git -C "$ROOT" show "HEAD:BENCH_$bench.json" \
+                >"$tmp/${bench}_head.json"
+            python3 - "$tmp/${bench}_head.json" "$SNAP" "$bench" <<'EOF'
+import json, sys
+
+TOL = 0.50  # relative, on machine-scaled ratios (timing benches are noisy)
+head = json.load(open(sys.argv[1]))
+cur = json.load(open(sys.argv[2]))
+bench = sys.argv[3]
+hk, ck = head.get("keys", {}), cur.get("keys", {})
+bad = 0
+for key in sorted(set(hk) & set(ck)):
+    a, b = float(hk[key]), float(ck[key])
+    if a > 0 and abs(b - a) / a > TOL:
+        print(
+            f"{bench} REGRESSION: {key}: HEAD ratio {a:.4f} "
+            f"vs fresh {b:.4f} (tol +-{TOL*100:.0f}% rel)"
+        )
+        bad = 1
+sys.exit(bad)
+EOF
+            echo "$bench snapshot OK (fresh ratios within +-50% of HEAD)"
+        fi
+    else
+        echo "$bench snapshot absent or untracked (timing bench) — skipped"
+    fi
+done
 
 echo "bench regression check OK"

@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Reference model of the streaming-churn structural arithmetic.
+
+Replicates, in plain Python, the deterministic pieces the streaming bench
+(`rust/benches/streaming.rs`) snapshots:
+
+* the repo PRNG and the `er_2048` generator (imported from
+  `packing_model.py` — bit-exact vs `util/prng.rs` / `graph/generators.rs`),
+* the seeded `churn()` edit-batch sampler (same RNG call order as the
+  bench's Rust copy),
+* `GraphDelta::apply`'s effective-change accounting: no-op-filtered
+  insert/remove counts and the dirty row-window set (per-row membership
+  diff, windows of 16 rows),
+* the wire cost model (`net::proto::delta_wire_bytes` vs
+  `csr_wire_bytes`).
+
+Everything is integer/set arithmetic over deterministic graphs — no
+timing — so the numbers are exactly reproducible and machine-independent.
+`python3 scripts/streaming_model.py` prints the per-level table and
+rewrites `BENCH_streaming.json` at the repo root when run with `--write`;
+the Rust bench computes the same quantities natively and must agree
+(EXPERIMENTS.md §Streaming documents the contract).  The bench's timing
+fields (incremental vs scratch rebuild wall time) are intentionally NOT
+part of the baseline: wall clock does not survive container changes.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from packing_model import Rng, erdos_renyi, with_self_loops  # noqa: E402
+
+TCB_R = 16
+STEPS = 8
+SEED = 0xBEEF
+EDIT_LEVELS = [16, 64, 256, 1024]
+
+
+def churn(adj, edits, rng):
+    """Seeded mixed edit batch — lockstep with benches/streaming.rs."""
+    n = len(adj)
+    ins, rem = [], []
+    for _ in range(edits):
+        if rng.coin(0.5):
+            u = rng.below(n)
+            row = adj[u]
+            if row:
+                rem.append((u, row[rng.below(len(row))]))
+                continue
+        ins.append((rng.below(n), rng.below(n)))
+    ins = [e for e in ins if e not in rem]
+    return ins, rem
+
+
+def apply_delta(adj, ins, rem):
+    """GraphDelta::apply in set arithmetic: returns (patched, inserted,
+    removed, dirty_rws) with no-op edits excluded, exactly like the Rust
+    merge."""
+    n = len(adj)
+    ins_by = {}
+    rem_by = {}
+    for u, v in ins:
+        ins_by.setdefault(u, set()).add(v)
+    for u, v in rem:
+        rem_by.setdefault(u, set()).add(v)
+    inserted = removed = 0
+    dirty_rows = []
+    patched = []
+    for u in range(n):
+        s = set(adj[u])
+        add = ins_by.get(u, set()) - s
+        drop = rem_by.get(u, set()) & s
+        inserted += len(add)
+        removed += len(drop)
+        ns = (s - drop) | add
+        if ns != s:
+            dirty_rows.append(u)
+        patched.append(sorted(ns))
+    dirty_rws = sorted({u // TCB_R for u in dirty_rows})
+    return patched, inserted, removed, dirty_rws
+
+
+def delta_wire_bytes(n_ins, n_rem):
+    return (8 + 8 * n_ins) + (8 + 8 * n_rem)
+
+
+def csr_wire_bytes(adj):
+    n = len(adj)
+    nnz = sum(len(r) for r in adj)
+    return 8 + (8 + 4 * (n + 1)) + (8 + 4 * nnz)
+
+
+def measure(base, edits):
+    rng = Rng(SEED)
+    adj = [list(r) for r in base]
+    num_rw = -(-len(adj) // TCB_R)
+    dirtied = inserted = removed = 0
+    delta_bytes = naive_bytes = 0
+    for _ in range(STEPS):
+        ins, rem = churn(adj, edits, rng)
+        delta_bytes += delta_wire_bytes(len(ins), len(rem))
+        adj, i, r, dirty = apply_delta(adj, ins, rem)
+        naive_bytes += csr_wire_bytes(adj)
+        dirtied += len(dirty)
+        inserted += i
+        removed += r
+    frac = dirtied / (num_rw * STEPS)
+    return {
+        "dirty_rw_fraction": round(frac, 6),
+        "spliced_fraction": round(1.0 - frac, 6),
+        "effective_inserts": inserted,
+        "effective_removes": removed,
+        "delta_bytes_ratio": round(delta_bytes / naive_bytes, 6),
+    }
+
+
+def main():
+    write = "--write" in sys.argv
+    base = with_self_loops(erdos_renyi(2048, 6.0, 7))
+    levels = {}
+    print(f"{'edits/step':>10} {'dirty_frac':>11} {'spliced':>9} "
+          f"{'ins':>7} {'rem':>7} {'bytes_ratio':>12}")
+    for edits in EDIT_LEVELS:
+        row = measure(base, edits)
+        print(f"{edits:>10} {row['dirty_rw_fraction']:>11.6f} "
+              f"{row['spliced_fraction']:>9.6f} {row['effective_inserts']:>7} "
+              f"{row['effective_removes']:>7} {row['delta_bytes_ratio']:>12.6f}")
+        levels[str(edits)] = row
+    if write:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = os.path.join(root, "BENCH_streaming.json")
+        payload = {
+            "bench": "streaming",
+            "unit": "row-window fractions and wire-byte ratios "
+                    "(structure-only, no wall clock)",
+            "config": {
+                "edit_levels": EDIT_LEVELS,
+                "graph": "er_2048",
+                "seed": SEED,
+                "steps": STEPS,
+            },
+            "levels": levels,
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

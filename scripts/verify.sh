@@ -51,6 +51,15 @@ if [ ! -f "$REPO_ROOT/BENCH_packing.json" ]; then
 fi
 grep -q '"padded_cell_ratio"' "$REPO_ROOT/BENCH_packing.json" || {
     echo "BENCH_packing.json lacks padded_cell_ratio entries"; exit 1; }
+# ISSUE-9 adds the structural streaming baseline (dirty/spliced window
+# fractions under churn) — deterministic like packing, so absence is fatal.
+if [ ! -f "$REPO_ROOT/BENCH_streaming.json" ]; then
+    echo "MISSING baseline: BENCH_streaming.json (run 'cargo bench --bench" \
+         "streaming' or 'python3 scripts/streaming_model.py --write')"
+    exit 1
+fi
+grep -q '"dirty_rw_fraction"' "$REPO_ROOT/BENCH_streaming.json" || {
+    echo "BENCH_streaming.json lacks dirty_rw_fraction entries"; exit 1; }
 echo "bench baseline presence OK"
 
 # ISSUE-8 regression gate: a *present but stale* baseline is as dangerous
@@ -70,8 +79,10 @@ echo "== bench regression check (scripts/check_bench_regression.sh)"
 # extends the file set with the geometry router and the hybrid driver —
 # new dispatch-path modules inherit the same hygiene bar; ISSUE 8 adds
 # the network serving layer (src/net/), which parses hostile input and
-# so must never unwrap its way into a session panic.
-echo "== unwrap/expect lint (src/coordinator, src/exec, src/bsb/geometry.rs, src/kernels/hybrid.rs, src/net)"
+# so must never unwrap its way into a session panic; ISSUE 9 adds the
+# streaming delta/incremental-rebuild modules, which sit on the
+# update_graph hot path and validate caller-supplied edit batches.
+echo "== unwrap/expect lint (src/coordinator, src/exec, src/bsb/geometry.rs, src/kernels/hybrid.rs, src/net, src/graph/delta.rs, src/bsb/incremental.rs)"
 awk '
     FNR == 1 { intest = 0; inv = 0 }
     /#\[cfg\(test\)\]/ { intest = 1 }
@@ -90,7 +101,8 @@ awk '
     }
     END { exit bad }
 ' src/coordinator/*.rs src/exec/*.rs src/bsb/geometry.rs \
-    src/kernels/hybrid.rs src/net/*.rs
+    src/kernels/hybrid.rs src/net/*.rs src/graph/delta.rs \
+    src/bsb/incremental.rs
 echo "unwrap/expect lint OK"
 
 if cargo fmt --version >/dev/null 2>&1; then
@@ -167,6 +179,16 @@ cargo test -q --test chaos -- --test-threads=1
 echo "== net suite (--test-threads=1)"
 cargo test -q --test net_loopback --test net_hardening -- --test-threads=1
 
+# The ISSUE-9 streaming suite: every delta-patched graph and incrementally
+# rebuilt BSB must bit-match the from-scratch build (generators × edit
+# mixes × heads × engines, plus a 1-50 batch cumulative fuzz), and
+# `Coordinator::update_graph` must swap plan versions atomically — zero
+# stale-plan cache hits after a swap, old version evicted only after the
+# new plans land.  Serialized: the cache-swap tests count process-global
+# hit/miss metrics.
+echo "== streaming suite (--test-threads=1)"
+cargo test -q --test streaming_equivalence -- --test-threads=1
+
 # The redesigned public API must stay documented: rustdoc warnings
 # (broken intra-doc links, missing code-block languages, ...) are errors.
 echo "== cargo doc --no-deps (warnings denied)"
@@ -180,5 +202,8 @@ echo " head-batching sweep, 'cargo bench --bench planner' for the"
 echo " auto-vs-fixed backend sweep, 'cargo bench --bench packing' for the"
 echo " hybrid-geometry padded-cell sweep, 'cargo bench --bench shard' for"
 echo " the sharded-vs-unsharded sweep, 'cargo bench --bench fault_overhead'"
-echo " for the disabled-injection hot-path cost; see EXPERIMENTS.md"
-echo " §Perf/§Batching/§Multi-head/§Planner/§Sharding/§Faults/§Packing)"
+echo " for the disabled-injection hot-path cost, 'cargo bench --bench"
+echo " streaming' for the incremental-vs-scratch rebuild sweep, and"
+echo " 'scripts/bench_snapshot.sh' to snapshot the whole suite as"
+echo " machine-scaled BENCH_*.json ratios; see EXPERIMENTS.md"
+echo " §Perf/§Batching/§Multi-head/§Planner/§Sharding/§Faults/§Packing/§Streaming)"

@@ -150,14 +150,53 @@ fn main() -> anyhow::Result<()> {
         println!("first failure: {e}");
     }
     println!("{}", coord.metrics().report());
-    let prep = coord.metrics().preprocess.snapshot();
-    let exec = coord.metrics().execute.snapshot();
-    println!(
-        "stage p50: preprocess {:.2} ms, execute {:.2} ms",
-        prep.p50_s * 1e3,
-        exec.p50_s * 1e3
-    );
+
+    // Per-stage latency breakdown, fetched the way an external operator
+    // would: a fresh wire client issuing MetricsQuery (DESIGN.md §15)
+    // rather than reaching into the in-process Metrics.
+    match NetClient::connect(addr, "").and_then(|mut c| {
+        let m = c.metrics();
+        c.close();
+        m
+    }) {
+        Ok(m) => print_stage_table(&m),
+        Err(e) => println!("metrics query failed: {e}"),
+    }
+
     server.shutdown();
     coord.shutdown();
     Ok(())
+}
+
+/// Render the wire metrics report's latency sections as a stage table.
+fn print_stage_table(m: &fused3s::util::json::Json) {
+    let ms = |stage: &str, field: &str| -> String {
+        m.req(stage)
+            .and_then(|s| s.req(field))
+            .and_then(|v| v.as_f64())
+            .map(|s| format!("{:.2}", s * 1e3))
+            .unwrap_or_else(|_| "-".into())
+    };
+    let count = |stage: &str| -> String {
+        m.req(stage)
+            .and_then(|s| s.req("count"))
+            .and_then(|v| v.as_f64())
+            .map(|c| format!("{c:.0}"))
+            .unwrap_or_else(|_| "-".into())
+    };
+    println!(
+        "{:<12} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "stage", "count", "p50 ms", "p95 ms", "p99 ms", "max ms"
+    );
+    for stage in ["latency", "preprocess", "execute"] {
+        println!(
+            "{:<12} {:>8} {:>10} {:>10} {:>10} {:>10}",
+            stage,
+            count(stage),
+            ms(stage, "p50_s"),
+            ms(stage, "p95_s"),
+            ms(stage, "p99_s"),
+            ms(stage, "max_s"),
+        );
+    }
 }

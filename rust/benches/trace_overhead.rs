@@ -1,0 +1,117 @@
+//! `cargo bench trace_overhead` — cost of the tracing seams
+//! (EXPERIMENTS.md §Tracing, DESIGN.md §15).
+//!
+//! The seams compile to one relaxed atomic load when no tracer is armed,
+//! and to nothing at all under `--no-default-features` (the `tracing`
+//! feature is off).  This bench measures the fused host path in three
+//! states inside one binary — disarmed, armed-but-unsampled (the request
+//! rolled 0, every hook short-circuits on the zero span), and
+//! armed-recording at `sample_rate = 1.0` inside a live span, where the
+//! engine stage seams actually write ring slots.  Bit-exactness between
+//! all states is asserted before any row prints: the instrumentation
+//! must not perturb the arithmetic.
+//!
+//! Env knobs: `F3S_BENCH_FULL=1` for full iteration counts,
+//! `F3S_TRACE_BENCH_N=<n>` to shrink the graph for smoke runs.
+
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::graph::generators;
+use fused3s::kernels::{AttentionBatch, AttentionProblem, Backend, ExecCtx, Plan};
+use fused3s::trace::{self, TraceConfig};
+use fused3s::util::prng::Rng;
+use fused3s::util::timing::{bench, BenchConfig};
+
+const BUCKETS: &[usize] = &[4, 8, 16, 32, 64, 128];
+
+fn main() {
+    let full = std::env::var("F3S_BENCH_FULL").is_ok();
+    let n: usize = std::env::var("F3S_TRACE_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2048);
+    let deg = 8.0;
+    let d = 32;
+    let cfg = if full { BenchConfig::default() } else { BenchConfig::quick() };
+    let compiled = cfg!(feature = "tracing");
+
+    println!(
+        "trace_overhead: erdos_renyi({n}, {deg}) d={d} \
+         (full={full}, tracing_compiled={compiled})"
+    );
+    let g = generators::erdos_renyi(n, deg, 1).with_self_loops();
+    let mut rng = Rng::new(2);
+    let q = rng.normal_vec(n * d, 1.0);
+    let k = rng.normal_vec(n * d, 1.0);
+    let v = rng.normal_vec(n * d, 1.0);
+    let x = AttentionProblem::new(n, d, &q, &k, &v, 0.125);
+    let batch = AttentionBatch::single(&x);
+    let man = offline_manifest(32, BUCKETS, 128);
+    let engine = Engine::new(ExecPolicy { threads: 4, pipeline_depth: 2 });
+    let plan = Plan::new(&man, &g, Backend::Fused3S, &engine).expect("plan");
+
+    let run = || {
+        plan.execute(&mut ExecCtx::host(&engine), &batch)
+            .expect("run")
+    };
+
+    // Bit-exactness gate first: neither the disarmed seams nor a fully
+    // recording tracer may change a single bit of the output.
+    let want = run();
+    {
+        let guard = trace::install(TraceConfig::default());
+        let span = guard.sample_request(1);
+        assert_ne!(span, 0, "rate 1.0 must sample");
+        assert_eq!(
+            trace::with_span(span, run),
+            want,
+            "recording run diverged"
+        );
+        assert!(guard.recorded() > 0, "recording run traced nothing");
+    }
+    assert_eq!(run(), want, "disarmed run diverged");
+
+    let disarmed = bench("disarmed", &cfg, || {
+        assert_eq!(run().len(), n * d);
+    });
+    let (unsampled, recording) = {
+        let guard = trace::install(TraceConfig::default());
+        // Unsampled: the hooks see span 0 and bail before the ring.
+        let unsampled = bench("armed unsampled", &cfg, || {
+            assert_eq!(run().len(), n * d);
+        });
+        let span = guard.sample_request(2);
+        let recording = bench("armed recording", &cfg, || {
+            assert_eq!(trace::with_span(span, run).len(), n * d);
+        });
+        (unsampled, recording)
+    };
+    let ratio = if disarmed.median_ms() > 0.0 {
+        unsampled.median_ms() / disarmed.median_ms()
+    } else {
+        1.0
+    };
+    let rec_ratio = if disarmed.median_ms() > 0.0 {
+        recording.median_ms() / disarmed.median_ms()
+    } else {
+        1.0
+    };
+    println!(
+        "{{\"bench\":\"trace_overhead\",\"n\":{n},\"deg\":{deg},\"d\":{d},\
+         \"tracing_compiled\":{compiled},\
+         \"disarmed_ms\":{:.3},\"armed_unsampled_ms\":{:.3},\
+         \"armed_recording_ms\":{:.3},\
+         \"armed_over_disarmed\":{ratio:.4},\
+         \"recording_over_disarmed\":{rec_ratio:.4},\
+         \"bit_identical\":true}}",
+        disarmed.median_ms(),
+        unsampled.median_ms(),
+        recording.median_ms(),
+    );
+    println!("  {}", disarmed.row());
+    println!("  {}", unsampled.row());
+    println!("  {}", recording.row());
+    println!(
+        "  armed(unsampled)/disarmed median ratio: {ratio:.4} \
+         (re-run with --no-default-features for the compiled-out baseline)"
+    );
+}

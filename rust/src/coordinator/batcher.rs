@@ -287,6 +287,7 @@ mod tests {
             scale: 1.0,
             backend: Backend::Fused3S,
             deadline: None,
+            span: 0,
             reply: tx,
         }
     }

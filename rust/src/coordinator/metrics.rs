@@ -8,8 +8,39 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::kernels::Backend;
+use crate::util::json::{arr, num, obj, Json};
 use crate::util::stats;
 use crate::util::sync::lock_unpoisoned;
+
+/// Log-spaced latency histogram buckets.  Bucket 0 catches everything at
+/// or below 1 µs (including NaN/negative junk from upstream bugs); bucket
+/// `i ≥ 1` covers `[bucket_floor_s(i), bucket_floor_s(i+1))`, doubling
+/// each step, so the last bucket opens at `1 µs · 2^26 ≈ 67 s` — wide
+/// enough for any latency this stack can produce.
+pub const HIST_BUCKETS: usize = 28;
+
+/// Closed-form lower bound of histogram bucket `i`, in seconds:
+/// `0` for bucket 0, `1e-6 · 2^(i-1)` otherwise.
+pub fn bucket_floor_s(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        1e-6 * f64::powi(2.0, (i - 1) as i32)
+    }
+}
+
+/// Which histogram bucket a sample lands in.  Monotone in `seconds`, and
+/// total: NaN and negatives land in bucket 0 rather than panicking.
+pub fn bucket_index(seconds: f64) -> usize {
+    if !(seconds > 1e-6) {
+        return 0;
+    }
+    let mut i = 1;
+    while i + 1 < HIST_BUCKETS && seconds >= bucket_floor_s(i + 1) {
+        i += 1;
+    }
+    i
+}
 
 /// Thread-safe latency recorder: accumulates raw per-event samples and
 /// summarises them on demand.
@@ -42,6 +73,18 @@ impl LatencyRecorder {
             mean_s: stats::mean(&v),
             max_s: v.last().copied().unwrap_or(0.0),
         }
+    }
+
+    /// Log-spaced distribution over every sample recorded so far:
+    /// `counts[i]` samples fell in
+    /// `[bucket_floor_s(i), bucket_floor_s(i+1))`.
+    pub fn histogram(&self) -> [u64; HIST_BUCKETS] {
+        let v = lock_unpoisoned(&self.samples);
+        let mut counts = [0u64; HIST_BUCKETS];
+        for &x in v.iter() {
+            counts[bucket_index(x)] += 1;
+        }
+        counts
     }
 }
 
@@ -480,8 +523,8 @@ pub struct Metrics {
     /// vs spliced row windows, full-rebuild fallbacks.
     pub streaming: StreamingCounters,
     started: Instant,
-    completed: Mutex<u64>,
-    failed: Mutex<u64>,
+    completed: AtomicU64,
+    failed: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -497,8 +540,8 @@ impl Default for Metrics {
             net: NetCounters::default(),
             streaming: StreamingCounters::default(),
             started: Instant::now(),
-            completed: Mutex::new(0),
-            failed: Mutex::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
         }
     }
 }
@@ -508,23 +551,24 @@ impl Metrics {
         Self::default()
     }
 
-    /// Record one finished request (success or failure).
+    /// Record one finished request (success or failure).  Lock-free: this
+    /// sits on the per-request hot path alongside the latency recorders.
     pub fn request_done(&self, ok: bool) {
         if ok {
-            *lock_unpoisoned(&self.completed) += 1;
+            self.completed.fetch_add(1, Ordering::Relaxed);
         } else {
-            *lock_unpoisoned(&self.failed) += 1;
+            self.failed.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     /// Requests completed successfully.
     pub fn completed(&self) -> u64 {
-        *lock_unpoisoned(&self.completed)
+        self.completed.load(Ordering::Relaxed)
     }
 
     /// Requests that finished with an error response.
     pub fn failed(&self) -> u64 {
-        *lock_unpoisoned(&self.failed)
+        self.failed.load(Ordering::Relaxed)
     }
 
     /// Completed requests per second since construction.
@@ -535,6 +579,121 @@ impl Metrics {
         } else {
             self.completed() as f64 / elapsed
         }
+    }
+
+    /// Full structured snapshot of every counter group plus latency
+    /// distributions, as a [`Json`] tree.  Unlike [`report`](Self::report)
+    /// — whose conditional sections keep old logs byte-identical — every
+    /// section is always present here (zeroed when idle), so consumers
+    /// (`repro metrics --connect`, the serve example's breakdown table)
+    /// never have to probe for keys.  Serialised over the wire as the
+    /// `MetricsReport` message (DESIGN.md §15).
+    pub fn to_json(&self) -> Json {
+        fn stage(r: &LatencyRecorder) -> Json {
+            let sum = r.snapshot();
+            let hist = r.histogram();
+            obj(vec![
+                ("count", num(sum.count as f64)),
+                ("p50_s", num(sum.p50_s)),
+                ("p95_s", num(sum.p95_s)),
+                ("p99_s", num(sum.p99_s)),
+                ("mean_s", num(sum.mean_s)),
+                ("max_s", num(sum.max_s)),
+                (
+                    "histogram_floors_s",
+                    arr((0..HIST_BUCKETS).map(|i| num(bucket_floor_s(i))).collect()),
+                ),
+                (
+                    "histogram_counts",
+                    arr(hist.iter().map(|&c| num(c as f64)).collect()),
+                ),
+            ])
+        }
+        let b = &self.batching;
+        let p = &self.planner;
+        let sh = &self.sharding;
+        let f = &self.faults;
+        let n = &self.net;
+        let st = &self.streaming;
+        let resolved: Vec<(&str, Json)> = p
+            .resolved_counts()
+            .into_iter()
+            .map(|(name, count)| (name, num(count as f64)))
+            .collect();
+        obj(vec![
+            (
+                "requests",
+                obj(vec![
+                    ("completed", num(self.completed() as f64)),
+                    ("failed", num(self.failed() as f64)),
+                    ("uptime_s", num(self.started.elapsed().as_secs_f64())),
+                    ("throughput_rps", num(self.throughput_rps())),
+                ]),
+            ),
+            ("latency", stage(&self.latency)),
+            ("preprocess", stage(&self.preprocess)),
+            ("execute", stage(&self.execute)),
+            (
+                "batching",
+                obj(vec![
+                    ("batches", num(b.batches() as f64)),
+                    ("coalesced_requests", num(b.coalesced_requests() as f64)),
+                    ("largest_batch", num(b.largest_batch() as f64)),
+                    ("cache_hits", num(b.cache_hits() as f64)),
+                    ("cache_misses", num(b.cache_misses() as f64)),
+                    ("cache_evictions", num(b.cache_evictions() as f64)),
+                ]),
+            ),
+            (
+                "planner",
+                obj(vec![
+                    ("auto_requests", num(p.auto_requests() as f64)),
+                    ("observations", num(p.observations() as f64)),
+                    ("invalidations", num(p.invalidations() as f64)),
+                    ("resolved", obj(resolved)),
+                ]),
+            ),
+            (
+                "sharding",
+                obj(vec![
+                    ("sharded_batches", num(sh.sharded_batches() as f64)),
+                    ("shards_executed", num(sh.shards_executed() as f64)),
+                    ("halo_rows_gathered", num(sh.halo_rows_gathered() as f64)),
+                ]),
+            ),
+            (
+                "faults",
+                obj(vec![
+                    ("panics_caught", num(f.panics_caught_count() as f64)),
+                    ("retries", num(f.retries() as f64)),
+                    ("fallbacks", num(f.fallbacks() as f64)),
+                    ("deadline_sheds", num(f.deadline_sheds() as f64)),
+                    ("quarantines", num(f.quarantines() as f64)),
+                ]),
+            ),
+            (
+                "net",
+                obj(vec![
+                    ("connections", num(n.connections() as f64)),
+                    ("auth_failures", num(n.auth_failures() as f64)),
+                    ("protocol_errors", num(n.protocol_errors() as f64)),
+                    ("requests", num(n.requests() as f64)),
+                    ("graph_uploads", num(n.graph_uploads() as f64)),
+                    ("graph_reuses", num(n.graph_reuses() as f64)),
+                    ("bytes_in", num(n.bytes_in() as f64)),
+                    ("bytes_out", num(n.bytes_out() as f64)),
+                ]),
+            ),
+            (
+                "streaming",
+                obj(vec![
+                    ("deltas_applied", num(st.deltas_applied() as f64)),
+                    ("rws_dirtied", num(st.rws_dirtied() as f64)),
+                    ("rws_spliced", num(st.rws_spliced() as f64)),
+                    ("full_rebuilds", num(st.full_rebuilds() as f64)),
+                ]),
+            ),
+        ])
     }
 
     pub fn report(&self) -> String {
@@ -787,6 +946,47 @@ mod tests {
         m.planner.invalidation();
         assert_eq!(m.planner.epoch(), e0 + 2);
         assert_eq!(m.planner.invalidations(), 1);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_closed_form() {
+        // Bucket 0 floor is exactly 0; every later floor is 1e-6 · 2^(i-1).
+        assert_eq!(bucket_floor_s(0), 0.0);
+        for i in 1..HIST_BUCKETS {
+            assert_eq!(bucket_floor_s(i), 1e-6 * f64::powi(2.0, i as i32 - 1));
+        }
+        // Floors are strictly increasing and each floor lands in its own
+        // bucket (intervals are closed below, open above).
+        for i in 1..HIST_BUCKETS {
+            assert!(bucket_floor_s(i) > bucket_floor_s(i - 1));
+            assert_eq!(bucket_index(bucket_floor_s(i)), i);
+        }
+        // Just below a floor falls in the previous bucket.
+        for i in 2..HIST_BUCKETS {
+            assert_eq!(bucket_index(bucket_floor_s(i) * (1.0 - 1e-12)), i - 1);
+        }
+        // Totality: junk and extremes never panic or escape the range.
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(1e-6), 0); // at-or-below 1 µs
+        assert_eq!(bucket_index(1e9), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_counts_samples() {
+        let r = LatencyRecorder::new();
+        r.record(0.0); // bucket 0
+        r.record(1.5e-6); // bucket 1
+        r.record(3e-6); // bucket 2
+        r.record(3.5e-6); // bucket 2
+        r.record(1e9); // top bucket
+        let h = r.histogram();
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[2], 2);
+        assert_eq!(h[HIST_BUCKETS - 1], 1);
+        assert_eq!(h.iter().sum::<u64>(), 5);
     }
 
     #[test]

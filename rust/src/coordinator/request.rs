@@ -36,6 +36,12 @@ pub struct AttnRequest {
     /// from live requests.  `None` (the default) never sheds.  A request
     /// whose execution has already started is allowed to finish.
     pub deadline: Option<Duration>,
+    /// Tracing span id (DESIGN.md §15).  `0` — the default — means "not
+    /// yet sampled": [`Coordinator::submit`](crate::coordinator::Coordinator::submit)
+    /// rolls the seeded sampling decision and stamps a nonzero id iff the
+    /// request is traced.  Front ends that sample earlier (the net
+    /// session, at decode time) pass their id through here.
+    pub span: u64,
     /// Where to deliver the result.
     pub reply: Sender<AttnResponse>,
 }
@@ -65,6 +71,10 @@ pub struct AttnResponse {
     /// failed before any backend executed (validation, shedding, queue
     /// teardown).
     pub backend: Option<Backend>,
+    /// The request's tracing span id (`0` = untraced), echoed back so
+    /// front ends (the net session's reply encoder) can attribute their
+    /// own events to the same span.
+    pub span: u64,
 }
 
 impl AttnRequest {
@@ -94,6 +104,7 @@ impl AttnRequest {
             scale,
             backend,
             deadline: None,
+            span: 0,
             reply,
         }
     }
@@ -139,6 +150,7 @@ mod tests {
             scale: 1.0,
             backend: Backend::Fused3S,
             deadline: None,
+            span: 0,
             reply: tx.clone(),
             graph: g.clone(),
         };
@@ -164,6 +176,7 @@ mod tests {
             scale: 1.0,
             backend: Backend::CpuCsr,
             deadline: None,
+            span: 0,
             reply: tx.clone(),
             graph: g.clone(),
         };
@@ -188,6 +201,7 @@ mod tests {
             scale: 1.0,
             backend: Backend::Fused3S,
             deadline: None,
+            span: 0,
             reply: tx.clone(),
             graph: g.clone(),
         };

@@ -71,6 +71,7 @@ use crate::kernels::{AttentionBatch, AttnError, Backend, ExecCtx, Plan};
 use crate::planner::{self, CostModel, GraphProfile, Planner};
 use crate::runtime::{Manifest, Runtime};
 use crate::shard::{ShardPolicy, ShardedPlan};
+use crate::trace::{self, TraceSite};
 use crate::util::sync::lock_unpoisoned;
 
 use super::batcher::{Admitted, BatchPolicy, Coalescer, Flush};
@@ -283,6 +284,8 @@ struct Entry {
     /// Absolute deadline (submit time + `AttnRequest::deadline`).
     expires: Option<Instant>,
     graph: CsrGraph,
+    /// Tracing span id (0 = untraced), threaded through to the response.
+    span: u64,
 }
 
 impl Entry {
@@ -523,7 +526,14 @@ impl Coordinator {
     /// latency of every auto-routed batch refines the planner's cost
     /// model.  After [`Coordinator::shutdown`] the queue is gone and
     /// submission fails with the structured [`AttnError::QueueClosed`].
-    pub fn submit(&self, req: AttnRequest) -> std::result::Result<(), AttnError> {
+    pub fn submit(&self, mut req: AttnRequest) -> std::result::Result<(), AttnError> {
+        // Roll the seeded sampling decision once per request (unless a
+        // front end — the net session — already did) and open the
+        // request's root span; `respond`/`answer_unserved` close it.
+        if req.span == 0 {
+            req.span = trace::sample_request(req.id);
+        }
+        trace::begin(TraceSite::Request, req.span, req.id);
         // Clone the sender out of the slot, then send *outside* the lock:
         // a send blocked on backpressure must not hold up other submitters
         // or the shutdown path.  A clone taken before shutdown closes the
@@ -533,12 +543,16 @@ impl Coordinator {
             let slot = lock_unpoisoned(&self.ingress);
             match slot.as_ref() {
                 Some(s) => s.clone(),
-                None => return Err(AttnError::QueueClosed),
+                None => {
+                    trace::end(TraceSite::Request, req.span);
+                    return Err(AttnError::QueueClosed);
+                }
             }
         };
-        sender
-            .send((req, Instant::now()))
-            .map_err(|_| AttnError::QueueClosed)
+        sender.send((req, Instant::now())).map_err(|e| {
+            trace::end(TraceSite::Request, (e.0).0.span);
+            AttnError::QueueClosed
+        })
     }
 
     /// The serving metrics (latency, batching, cache and planner counters).
@@ -588,6 +602,9 @@ impl Coordinator {
             .applied(base)
             .map_err(|e| AttnError::Unsupported(format!("graph delta rejected: {e:#}")))?;
         let (old_fp, new_fp) = (report.old_fp, report.new_fp);
+        // Graph updates carry no request span; sample one keyed on the new
+        // fingerprint so splice-vs-rebuild decisions show up in traces.
+        let uspan = trace::sample_request(new_fp);
 
         // Rebuild the BSB, splicing clean row windows from the previous
         // version when the registry still holds a compatible one.
@@ -599,6 +616,11 @@ impl Coordinator {
             .filter(|old| incremental::compatible(old, &patched));
         let bsb = match previous {
             Some(old) => {
+                trace::begin(
+                    TraceSite::BsbSplice,
+                    uspan,
+                    report.dirty_rws.len() as u64,
+                );
                 let attempt = catch_unwind(AssertUnwindSafe(|| {
                     fault::fire(FaultSite::Prepare)?;
                     Ok::<_, AttnError>(incremental::rebuild(
@@ -607,6 +629,7 @@ impl Coordinator {
                         &report.dirty_rws,
                     ))
                 }));
+                trace::end(TraceSite::BsbSplice, uspan);
                 match attempt {
                     Ok(Ok((bsb, stats))) => {
                         spliced = stats.spliced;
@@ -614,6 +637,8 @@ impl Coordinator {
                     }
                     Ok(Err(_)) => {
                         full_rebuild = true;
+                        let _b =
+                            trace::span(TraceSite::BsbBuild, uspan, patched.n as u64);
                         bsb::build_with(&patched, &svc.engine.pool)
                     }
                     Err(payload) => {
@@ -624,12 +649,15 @@ impl Coordinator {
                             fault::panic_message(payload.as_ref())
                         );
                         full_rebuild = true;
+                        let _b =
+                            trace::span(TraceSite::BsbBuild, uspan, patched.n as u64);
                         bsb::build_with(&patched, &svc.engine.pool)
                     }
                 }
             }
             None => {
                 full_rebuild = true;
+                let _b = trace::span(TraceSite::BsbBuild, uspan, patched.n as u64);
                 bsb::build_with(&patched, &svc.engine.pool)
             }
         };
@@ -728,6 +756,8 @@ fn answer_unserved(
     let latency_s = arrived.elapsed().as_secs_f64();
     metrics.request_done(false);
     metrics.latency.record(latency_s);
+    trace::instant(TraceSite::Respond, req.span, 0, 1);
+    trace::end(TraceSite::Request, req.span);
     let _ = req.reply.send(AttnResponse {
         id: req.id,
         result: Err(err),
@@ -736,6 +766,7 @@ fn answer_unserved(
         execute_s: 0.0,
         batch_size: 1,
         backend: None,
+        span: req.span,
     });
 }
 
@@ -790,6 +821,12 @@ fn batcher_loop(
         // refinement loop (no tune cells) and the decision memo.
         if req.graph.n > policy.max_plan_nodes {
             let d = planner.resolve_sharded(&req.graph, policy.max_plan_nodes);
+            trace::instant(
+                TraceSite::PlannerDecision,
+                req.span,
+                trace::backend_code(d.backend),
+                trace::ns(d.predicted_s),
+            );
             metrics.planner.auto_resolved(d.backend);
             req.backend = d.backend;
             return None;
@@ -800,6 +837,16 @@ fn batcher_loop(
             Some(&(e, b, c)) if e == epoch => (b, c),
             _ => {
                 let d = planner.resolve(&req.graph);
+                // Per-candidate predicted costs — memo hits skip the
+                // scoring pass, so these only appear on fresh resolutions.
+                for sc in &d.scores {
+                    trace::instant(
+                        TraceSite::PlannerScore,
+                        req.span,
+                        trace::backend_code(sc.backend),
+                        trace::ns(sc.predicted_s.unwrap_or(0.0)),
+                    );
+                }
                 if decisions.len() >= DECISION_MEMO_CAP {
                     decisions.clear();
                 }
@@ -807,6 +854,12 @@ fn batcher_loop(
                 (d.backend, d.cells)
             }
         };
+        trace::instant(
+            TraceSite::PlannerDecision,
+            req.span,
+            trace::backend_code(backend),
+            cells as u64,
+        );
         metrics.planner.auto_resolved(backend);
         req.backend = backend;
         Some(cells)
@@ -819,15 +872,18 @@ fn batcher_loop(
     let mut process = |co: &mut Coalescer, mut req: AttnRequest, arrived: Instant| -> bool {
         if req.deadline.map_or(false, |d| arrived.elapsed() >= d) {
             metrics.faults.deadline_shed();
+            trace::instant(TraceSite::DeadlineShed, req.span, 0, 0);
             answer_unserved(req, arrived, AttnError::DeadlineExceeded, &metrics);
             return true;
         }
+        trace::begin(TraceSite::Admission, req.span, req.graph.n as u64);
         let rolled = catch_unwind(AssertUnwindSafe(
             || -> std::result::Result<Option<f64>, AttnError> {
                 fault::fire(FaultSite::Batch)?;
                 Ok(resolve(&mut req))
             },
         ));
+        trace::end(TraceSite::Admission, req.span);
         let auto = match rolled {
             Ok(Ok(cells)) => cells,
             Ok(Err(e)) => {
@@ -865,6 +921,7 @@ fn batcher_loop(
                         let now = Instant::now();
                         for a in co.shed_expired(now) {
                             metrics.faults.deadline_shed();
+                            trace::instant(TraceSite::DeadlineShed, a.req.span, 0, 0);
                             answer_unserved(
                                 a.req,
                                 a.arrived,
@@ -913,6 +970,7 @@ fn batcher_loop(
         let now = Instant::now();
         for a in co.shed_expired(now) {
             metrics.faults.deadline_shed();
+            trace::instant(TraceSite::DeadlineShed, a.req.span, 0, 0);
             answer_unserved(a.req, a.arrived, AttnError::DeadlineExceeded, &metrics);
         }
         if !send_all(&tx, co.flush_due(now)) {
@@ -957,6 +1015,7 @@ fn prepare_job(job: Job, svc: &Services) -> Vec<PreparedBatch> {
     for a in job.entries {
         if a.expired(now) {
             metrics.faults.deadline_shed();
+            trace::instant(TraceSite::DeadlineShed, a.req.span, 0, 0);
             answer_unserved(a.req, a.arrived, AttnError::DeadlineExceeded, metrics);
             continue;
         }
@@ -981,9 +1040,31 @@ fn prepare_job(job: Job, svc: &Services) -> Vec<PreparedBatch> {
     let scale = valid[0].req.scale;
     let backend = valid[0].req.backend;
     let wants_tune = valid.iter().any(|a| a.auto_cells.is_some());
+    // Every traced member gets its own Prepare span (so per-request
+    // nesting holds across coalescing); inner seams (cache hit/miss, BSB
+    // build, shard prepare, ladder steps) attribute to the first traced
+    // member's span via the ambient thread-local.
+    let spans: Vec<u64> =
+        valid.iter().map(|a| a.req.span).filter(|&s| s != 0).collect();
+    for a in &valid {
+        trace::instant(
+            TraceSite::CoalesceWait,
+            a.req.span,
+            a.arrived.elapsed().as_micros() as u64,
+            valid.len() as u64,
+        );
+    }
     let refs: Vec<&CsrGraph> = valid.iter().map(|a| &a.req.graph).collect();
     let (merged, offsets) = batch_graph_refs(&refs);
-    let (plan, used) = plan_with_recovery(&merged, backend, svc);
+    for &s in &spans {
+        trace::begin(TraceSite::Prepare, s, merged.n as u64);
+    }
+    let primary = spans.first().copied().unwrap_or(0);
+    let (plan, used) =
+        trace::with_span(primary, || plan_with_recovery(&merged, backend, svc));
+    for &s in &spans {
+        trace::end(TraceSite::Prepare, s);
+    }
     match plan {
         Ok(plan) => {
             // The merged block-diagonal structure differs from any member's,
@@ -1019,6 +1100,7 @@ fn prepare_job(job: Job, svc: &Services) -> Vec<PreparedBatch> {
                 .into_iter()
                 .map(|a| Entry {
                     id: a.req.id,
+                    span: a.req.span,
                     reply: a.req.reply,
                     arrived: a.arrived,
                     expires: a.expires,
@@ -1058,7 +1140,18 @@ fn prepare_job(job: Job, svc: &Services) -> Vec<PreparedBatch> {
 /// rather than copied.
 fn prepare_single(a: Admitted, svc: &Services) -> PreparedBatch {
     let t0 = Instant::now();
-    let (plan, used) = plan_with_recovery(&a.req.graph, a.req.backend, svc);
+    let span = a.req.span;
+    trace::instant(
+        TraceSite::CoalesceWait,
+        span,
+        a.arrived.elapsed().as_micros() as u64,
+        1,
+    );
+    trace::begin(TraceSite::Prepare, span, a.req.graph.n as u64);
+    let (plan, used) = trace::with_span(span, || {
+        plan_with_recovery(&a.req.graph, a.req.backend, svc)
+    });
+    trace::end(TraceSite::Prepare, span);
     svc.metrics.batching.record_batch(1);
     let tune = match (a.auto_cells, plan.is_ok() && used == a.req.backend) {
         (Some(cells), true) => Some(TuneInfo {
@@ -1071,6 +1164,7 @@ fn prepare_single(a: Admitted, svc: &Services) -> PreparedBatch {
     let fp = a.req.graph.fingerprint();
     let entry = Entry {
         id: a.req.id,
+        span,
         reply: a.req.reply,
         arrived: a.arrived,
         expires: a.expires,
@@ -1132,11 +1226,18 @@ fn plan_with_recovery(
     svc: &Services,
 ) -> (std::result::Result<Arc<Plan>, AttnError>, Backend) {
     let fp = graph.fingerprint();
+    let span = trace::current_span();
     let mut backend = requested;
     if svc.quarantine.contains(fp, requested) {
         let exclude = svc.quarantine.quarantined_for(fp);
         if let Some(d) = svc.planner.resolve_excluding(graph, &exclude) {
             svc.metrics.faults.fallback();
+            trace::instant(
+                TraceSite::Fallback,
+                span,
+                trace::backend_code(d.backend),
+                0,
+            );
             backend = d.backend;
         }
     }
@@ -1145,6 +1246,12 @@ fn plan_with_recovery(
         let result = match try_prepare(graph, backend, svc) {
             Err(e) if retryable(&e) => {
                 svc.metrics.faults.retry();
+                trace::instant(
+                    TraceSite::Retry,
+                    span,
+                    trace::backend_code(backend),
+                    0,
+                );
                 try_prepare(graph, backend, svc)
             }
             other => other,
@@ -1154,6 +1261,12 @@ fn plan_with_recovery(
             Err(e) if retryable(&e) => {
                 svc.quarantine.insert(fp, backend);
                 svc.metrics.faults.quarantine();
+                trace::instant(
+                    TraceSite::Quarantine,
+                    span,
+                    trace::backend_code(backend),
+                    fp,
+                );
                 svc.cache.evict(fp, backend);
                 tried.push(backend);
                 let mut exclude = svc.quarantine.quarantined_for(fp);
@@ -1161,6 +1274,12 @@ fn plan_with_recovery(
                 match svc.planner.resolve_excluding(graph, &exclude) {
                     Some(d) => {
                         svc.metrics.faults.fallback();
+                        trace::instant(
+                            TraceSite::Fallback,
+                            span,
+                            trace::backend_code(d.backend),
+                            0,
+                        );
                         backend = d.backend;
                     }
                     None => return (Err(e), backend),
@@ -1229,11 +1348,20 @@ fn sharded_plan(
         .n
         .div_ceil(svc.route.max_plan_nodes)
         .clamp(2, svc.route.max_shards);
+    let span = trace::current_span();
+    let mut shard_idx = 0u64;
     let sharded = ShardedPlan::build(
         graph,
         backend,
         ShardPolicy::balanced(shards),
-        &mut |local, b| cached_plan(local, b, svc),
+        &mut |local, b| {
+            let sp =
+                trace::span(TraceSite::ShardPrepare, span, shard_idx);
+            shard_idx += 1;
+            let plan = cached_plan(local, b, svc);
+            drop(sp);
+            plan
+        },
     )?;
     let stats = sharded.stats();
     svc.metrics.sharding.record_batch(stats.shards, stats.halo_rows);
@@ -1251,11 +1379,15 @@ fn cached_plan(
 ) -> std::result::Result<Arc<Plan>, AttnError> {
     fault::fire(FaultSite::Prepare)?;
     let fp = graph.fingerprint();
+    let span = trace::current_span();
     if let Some(plan) = svc.cache.get(fp, backend, graph.n, graph.nnz()) {
         svc.metrics.batching.cache_hit();
+        trace::instant(TraceSite::CacheHit, span, fp, 0);
         return Ok(plan);
     }
     svc.metrics.batching.cache_miss();
+    trace::instant(TraceSite::CacheMiss, span, fp, 0);
+    let _build = trace::span(TraceSite::BsbBuild, span, graph.n as u64);
     match Plan::new(&svc.man, graph, backend, &svc.engine) {
         Ok(plan) => {
             let plan = Arc::new(plan);
@@ -1319,6 +1451,12 @@ fn attempt_backend(
     match once() {
         Err(e) if retryable(&e) => {
             svc.metrics.faults.retry();
+            trace::instant(
+                TraceSite::Retry,
+                trace::current_span(),
+                trace::backend_code(backend),
+                1,
+            );
             once()
         }
         other => other,
@@ -1348,6 +1486,13 @@ struct SingletonWork {
 /// with the bits, it was originally routed to.  Members that keep failing
 /// walk backend fallbacks until the candidate set is exhausted.
 fn serve_singleton(w: SingletonWork, svc: &Services, exec: &ExecBackend) {
+    // The entry's span becomes ambient so the inner prepare seams
+    // (cache, BSB build, ladder) attribute to this request.
+    let span = w.entry.span;
+    trace::with_span(span, move || serve_singleton_inner(w, svc, exec))
+}
+
+fn serve_singleton_inner(w: SingletonWork, svc: &Services, exec: &ExecBackend) {
     let SingletonWork {
         entry,
         q,
@@ -1362,8 +1507,10 @@ fn serve_singleton(w: SingletonWork, svc: &Services, exec: &ExecBackend) {
         batch_size,
     } = w;
     let fp = entry.graph.fingerprint();
+    let span = entry.span;
     let x = AttentionBatch::new(entry.graph.n, d, dv, heads, &q, &k, &v, scale);
     let t0 = Instant::now();
+    trace::begin(TraceSite::Execute, span, entry.graph.n as u64);
     let mut backend = start;
     // The merged batch quarantined its *own* fingerprint; this entry's
     // (fp, start) pair may be untainted, so only steer away if it too is
@@ -1372,6 +1519,12 @@ fn serve_singleton(w: SingletonWork, svc: &Services, exec: &ExecBackend) {
         let exclude = svc.quarantine.quarantined_for(fp);
         if let Some(dec) = svc.planner.resolve_excluding(&entry.graph, &exclude) {
             svc.metrics.faults.fallback();
+            trace::instant(
+                TraceSite::Fallback,
+                span,
+                trace::backend_code(dec.backend),
+                0,
+            );
             backend = dec.backend;
         }
     }
@@ -1381,6 +1534,7 @@ fn serve_singleton(w: SingletonWork, svc: &Services, exec: &ExecBackend) {
             Ok(out) => {
                 let execute_s = t0.elapsed().as_secs_f64();
                 svc.metrics.execute.record(execute_s);
+                trace::end(TraceSite::Execute, span);
                 respond(
                     entry,
                     Ok(out),
@@ -1395,6 +1549,12 @@ fn serve_singleton(w: SingletonWork, svc: &Services, exec: &ExecBackend) {
             Err(e) if retryable(&e) => {
                 svc.quarantine.insert(fp, backend);
                 svc.metrics.faults.quarantine();
+                trace::instant(
+                    TraceSite::Quarantine,
+                    span,
+                    trace::backend_code(backend),
+                    fp,
+                );
                 svc.cache.evict(fp, backend);
                 tried.push(backend);
                 let mut exclude = svc.quarantine.quarantined_for(fp);
@@ -1402,10 +1562,17 @@ fn serve_singleton(w: SingletonWork, svc: &Services, exec: &ExecBackend) {
                 match svc.planner.resolve_excluding(&entry.graph, &exclude) {
                     Some(dec) => {
                         svc.metrics.faults.fallback();
+                        trace::instant(
+                            TraceSite::Fallback,
+                            span,
+                            trace::backend_code(dec.backend),
+                            0,
+                        );
                         backend = dec.backend;
                     }
                     None => {
                         let execute_s = t0.elapsed().as_secs_f64();
+                        trace::end(TraceSite::Execute, span);
                         respond(
                             entry,
                             Err(e),
@@ -1421,6 +1588,7 @@ fn serve_singleton(w: SingletonWork, svc: &Services, exec: &ExecBackend) {
             }
             Err(e) => {
                 let execute_s = t0.elapsed().as_secs_f64();
+                trace::end(TraceSite::Execute, span);
                 respond(
                     entry,
                     Err(e),
@@ -1449,6 +1617,7 @@ fn executor_loop(exec: ExecBackend, rx: Receiver<PreparedBatch>, svc: Arc<Servic
         for (i, entry) in p.entries.into_iter().enumerate() {
             if entry.expired(now) {
                 svc.metrics.faults.deadline_shed();
+                trace::instant(TraceSite::DeadlineShed, entry.span, 1, 0);
                 respond(
                     entry,
                     Err(AttnError::DeadlineExceeded),
@@ -1489,12 +1658,32 @@ fn executor_loop(exec: ExecBackend, rx: Receiver<PreparedBatch>, svc: Arc<Servic
         let x = AttentionBatch::new(
             p.n_total, p.d, p.dv, p.heads, &p.q, &p.k, &p.v, p.scale,
         );
-        let mut result = exec_guarded(&plan, &x, &svc, &exec);
-        if let Err(e) = &result {
-            if retryable(e) {
-                svc.metrics.faults.retry();
-                result = exec_guarded(&plan, &x, &svc, &exec);
+        // One Execute span per traced member (per-request nesting); the
+        // engine-stage spans inside attribute to the first traced member.
+        let spans: Vec<u64> =
+            live.iter().map(|(_, e)| e.span).filter(|&s| s != 0).collect();
+        let primary = spans.first().copied().unwrap_or(0);
+        for &s in &spans {
+            trace::begin(TraceSite::Execute, s, p.n_total as u64);
+        }
+        let result = trace::with_span(primary, || {
+            let mut result = exec_guarded(&plan, &x, &svc, &exec);
+            if let Err(e) = &result {
+                if retryable(e) {
+                    svc.metrics.faults.retry();
+                    trace::instant(
+                        TraceSite::Retry,
+                        primary,
+                        trace::backend_code(p.backend),
+                        1,
+                    );
+                    result = exec_guarded(&plan, &x, &svc, &exec);
+                }
             }
+            result
+        });
+        for &s in &spans {
+            trace::end(TraceSite::Execute, s);
         }
         let execute_s = t0.elapsed().as_secs_f64();
         svc.metrics.execute.record(execute_s);
@@ -1535,6 +1724,12 @@ fn executor_loop(exec: ExecBackend, rx: Receiver<PreparedBatch>, svc: Arc<Servic
                 // cannot fail its batch-mates.
                 svc.quarantine.insert(p.fp, p.backend);
                 svc.metrics.faults.quarantine();
+                trace::instant(
+                    TraceSite::Quarantine,
+                    primary,
+                    trace::backend_code(p.backend),
+                    p.fp,
+                );
                 svc.cache.evict(p.fp, p.backend);
                 for (i, entry) in live {
                     let lo = p.offsets[i] as usize;
@@ -1598,6 +1793,13 @@ fn respond(
     let latency_s = entry.arrived.elapsed().as_secs_f64();
     metrics.request_done(result.is_ok());
     metrics.latency.record(latency_s);
+    trace::instant(
+        TraceSite::Respond,
+        entry.span,
+        u64::from(result.is_ok()),
+        batch_size as u64,
+    );
+    trace::end(TraceSite::Request, entry.span);
     let _ = entry.reply.send(AttnResponse {
         id: entry.id,
         result,
@@ -1606,5 +1808,6 @@ fn respond(
         execute_s,
         batch_size,
         backend,
+        span: entry.span,
     });
 }

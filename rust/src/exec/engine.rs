@@ -33,6 +33,7 @@ use crate::bsb::Bsb;
 use crate::fault::{self, FaultSite};
 use crate::kernels::gather::{self, CallBuffers};
 use crate::kernels::{AttentionBatch, AttentionProblem};
+use crate::trace::{self, TraceSite};
 
 use super::bufpool::BufferPool;
 use super::pool::WorkerPool;
@@ -125,17 +126,27 @@ impl Engine {
         if n == 0 {
             return Ok(());
         }
+        // Scoped workers don't inherit the caller's thread-local ambient
+        // span, so capture it once here and target it explicitly from every
+        // stage (gather/scatter run on their own threads when pipelined).
+        let ambient = trace::current_span();
         if self.policy.is_serial() {
             let mut bufs = self.buffers.acquire();
             let result = (|| -> Result<()> {
                 for i in 0..n {
                     fault::fire_unit(FaultSite::Gather);
+                    let g = trace::span(TraceSite::Gather, ambient, i as u64);
                     gather(i, &mut bufs);
+                    drop(g);
                     fault::fire(FaultSite::Dispatch)
                         .map_err(anyhow::Error::from)?;
+                    let d = trace::span(TraceSite::Dispatch, ambient, i as u64);
                     let outs = dispatch(i, &bufs)?;
+                    drop(d);
                     fault::fire_unit(FaultSite::Scatter);
+                    let s = trace::span(TraceSite::Scatter, ambient, i as u64);
                     scatter(i, outs);
+                    drop(s);
                 }
                 Ok(())
             })();
@@ -161,6 +172,10 @@ impl Engine {
                 for i in 0..n {
                     let Ok(mut bufs) = free_rx.recv() else { break };
                     fault::fire_unit(FaultSite::Gather);
+                    // Instants, not spans: gather overlaps dispatch in
+                    // wall-time, and overlapping B/E pairs on one tid
+                    // would mis-nest in the Chrome viewer.
+                    trace::instant(TraceSite::Gather, ambient, i as u64, 0);
                     gather(i, &mut bufs);
                     if full_tx.send((i, bufs)).is_err() {
                         break;
@@ -175,6 +190,7 @@ impl Engine {
             let scatterer = s.spawn(move || {
                 while let Ok((i, outs)) = done_rx.recv() {
                     fault::fire_unit(FaultSite::Scatter);
+                    trace::instant(TraceSite::Scatter, ambient, i as u64, 0);
                     scatter(i, outs);
                 }
             });
@@ -190,7 +206,10 @@ impl Engine {
                     failure = Some(anyhow::Error::from(e));
                     break;
                 }
-                match dispatch(i, &bufs) {
+                let d = trace::span(TraceSite::Dispatch, ambient, i as u64);
+                let dispatched = dispatch(i, &bufs);
+                drop(d);
+                match dispatched {
                     Ok(outs) => {
                         let _ = free_tx.send(bufs);
                         if done_tx.send((i, outs)).is_err() {

@@ -19,9 +19,11 @@
 //! [`shard`] (`repro shard`) audits the partition-parallel layer's cuts
 //! (EXPERIMENTS.md §Sharding), [`serve_load`] (`repro serve`) drives
 //! the TCP serving layer with a multi-connection loadgen
-//! (EXPERIMENTS.md §Serving), and [`streaming`] (`repro stream`) drives
+//! (EXPERIMENTS.md §Serving), [`streaming`] (`repro stream`) drives
 //! the incremental-update path — wire deltas, dirty-window BSB rebuilds,
-//! atomic plan swaps (EXPERIMENTS.md §Streaming).
+//! atomic plan swaps (EXPERIMENTS.md §Streaming), and [`trace_capture`]
+//! (`repro trace`) records a served workload as Chrome `trace_event`
+//! JSON (EXPERIMENTS.md §Tracing).
 
 pub mod ablations;
 pub mod fig5;
@@ -36,3 +38,4 @@ pub mod streaming;
 pub mod table3;
 pub mod table6;
 pub mod table7;
+pub mod trace_capture;

@@ -1,0 +1,74 @@
+//! `repro trace` — capture a Chrome `trace_event` timeline of a loopback
+//! serving workload (EXPERIMENTS.md §Tracing, DESIGN.md §15).
+//!
+//! Arms the process-global [`Tracer`](crate::trace::Tracer), drives the
+//! same multi-client TCP loadgen as `repro serve`, then snapshots the
+//! event ring as `results/trace.json` — loadable directly in
+//! `chrome://tracing` or <https://ui.perfetto.dev>.  Each traced request
+//! renders as one horizontal track (`tid` = span id) with its
+//! admission / coalesce / prepare / execute / respond children nested
+//! inside the request span.
+
+use anyhow::Result;
+
+use crate::coordinator::CoordinatorConfig;
+use crate::net::NetConfig;
+use crate::trace::{self, TraceConfig, TraceKind};
+use crate::util::json::Json;
+
+use super::report::Table;
+use super::serve_load::{self, LoadSpec};
+
+/// Drive the loadgen under an armed tracer and return the Chrome export.
+///
+/// The returned JSON is the `{"traceEvents": [...]}` object itself (not a
+/// wrapper), so the written file loads in the viewer unmodified.
+pub fn run(
+    coord_cfg: CoordinatorConfig,
+    net_cfg: NetConfig,
+    spec: &LoadSpec,
+    trace_cfg: TraceConfig,
+) -> Result<Json> {
+    let guard = trace::install(trace_cfg);
+    let _workload = serve_load::run(coord_cfg, net_cfg, spec)?;
+
+    // Snapshot after the server has drained: every span has closed, so
+    // the export is complete (see the quiescence note on `snapshot`).
+    let events = guard.snapshot();
+    let mut t = Table::new(&["site", "begin", "end", "instant"]);
+    let mut sites: Vec<(&'static str, [u64; 3])> = Vec::new();
+    for e in &events {
+        let k = match e.kind {
+            TraceKind::Begin => 0,
+            TraceKind::End => 1,
+            TraceKind::Instant => 2,
+        };
+        match sites.iter_mut().find(|(n, _)| *n == e.site.name()) {
+            Some((_, counts)) => counts[k] += 1,
+            None => {
+                let mut counts = [0u64; 3];
+                counts[k] += 1;
+                sites.push((e.site.name(), counts));
+            }
+        }
+    }
+    for (name, [b, e, i]) in &sites {
+        t.row(vec![
+            (*name).to_string(),
+            b.to_string(),
+            e.to_string(),
+            i.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "trace: {} events captured ({} recorded, {} dropped by the ring), \
+         sample_rate={}",
+        events.len(),
+        guard.recorded(),
+        guard.dropped(),
+        trace_cfg.sample_rate,
+    );
+
+    Ok(guard.chrome_json())
+}

@@ -44,6 +44,12 @@
 //!   the default-on `fault-injection` feature; the chaos suite
 //!   (`rust/tests/chaos.rs`) arms it around full coordinator runs
 //!   (DESIGN.md §11, EXPERIMENTS.md §Faults).
+//! * [`trace`] — structured per-request tracing: seeded-sampling spans in
+//!   a lock-free bounded ring at every serving seam, exported as Chrome
+//!   `trace_event` JSON (`repro trace`) and scraped live over the wire
+//!   (`MetricsQuery`/`MetricsReport`, `repro metrics --connect`) behind
+//!   the default-on `tracing` feature (DESIGN.md §15,
+//!   EXPERIMENTS.md §Tracing).
 //! * [`exec`] — the parallel pipelined host execution engine: scoped-thread
 //!   worker pool, call-buffer arena, the double-buffered
 //!   gather→dispatch→scatter pipeline (now over calls × heads), and the
@@ -90,6 +96,7 @@ pub mod planner;
 pub mod runtime;
 pub mod shard;
 pub mod simulator;
+pub mod trace;
 pub mod util;
 
 /// TCB row count (the paper's r; fixed by the m16n8k16 MMA shape).

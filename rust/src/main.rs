@@ -21,6 +21,10 @@
 //! repro serve  --listen ADDR [--host] [--token T]   # serve-only mode
 //! repro stream [--steps 8] [--edits 24] [--requests 4] [--n 512] [--host]
 //!                                        # streaming-delta audit (§14)
+//! repro trace  [--clients 4] [--requests 16] [--rate 1.0] [--host]
+//!              # Chrome trace_event capture -> results/trace.json (§15)
+//! repro metrics --connect ADDR [--token T]
+//!              # query a live server's metrics JSON over the wire
 //! ```
 //!
 //! Results print as aligned tables and are mirrored to `results/*.json`.
@@ -226,6 +230,12 @@ fn run() -> Result<()> {
         "stream" => {
             stream(&args)?;
         }
+        "trace" => {
+            trace(&args)?;
+        }
+        "metrics" => {
+            metrics(&args)?;
+        }
         other => {
             print_usage();
             bail!("unknown subcommand '{other}'");
@@ -382,17 +392,82 @@ fn stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro trace` — record a loopback serving workload under the armed
+/// tracer (DESIGN.md §15) and write the Chrome `trace_event` export to
+/// `results/trace.json`.
+fn trace(args: &Args) -> Result<()> {
+    use fused3s::coordinator::{CoordinatorConfig, ExecutorKind};
+    use fused3s::experiments::serve_load::LoadSpec;
+    use fused3s::experiments::trace_capture;
+    use fused3s::net::NetConfig;
+    use fused3s::trace::TraceConfig;
+
+    let mut coord_cfg = CoordinatorConfig {
+        preprocess_workers: args.usize_or("workers", 2)?,
+        ..CoordinatorConfig::default()
+    };
+    if args.bool("host") {
+        coord_cfg.executor = ExecutorKind::HostEmulation;
+    }
+    let spec = LoadSpec {
+        clients: args.usize_or("clients", 4)?,
+        requests_per_client: args.usize_or("requests", 16)?,
+        graphs: args.usize_or("graphs", 4)?,
+        d: args.usize_or("d", 32)?,
+        backend: Backend::parse(&args.get_or("backend", "auto"))?,
+        seed: args.u64_or("seed", 0x5E12_F00D)?,
+        token: args.get_or("token", ""),
+    };
+    let trace_cfg = TraceConfig {
+        seed: args.u64_or("trace-seed", TraceConfig::default().seed)?,
+        sample_rate: args.f64_or("rate", 1.0)?,
+        capacity: args.usize_or("capacity", TraceConfig::default().capacity)?,
+    };
+    let j = trace_capture::run(
+        coord_cfg,
+        NetConfig::default(),
+        &spec,
+        trace_cfg,
+    )?;
+    let p = report::write_json("trace", &j)?;
+    println!("\nwrote {} (load it in chrome://tracing or Perfetto)", p.display());
+    Ok(())
+}
+
+/// `repro metrics --connect ADDR` — query a live server's full metrics
+/// JSON over the wire (protocol tags 10/11) and print it.
+fn metrics(args: &Args) -> Result<()> {
+    use fused3s::net::NetClient;
+    use fused3s::util::json;
+
+    let Some(addr) = args.get("connect") else {
+        bail!("metrics requires --connect ADDR (e.g. 127.0.0.1:7433)");
+    };
+    let token = args.get_or("token", "");
+    let mut client = NetClient::connect(addr, &token)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let report = client
+        .metrics()
+        .map_err(|e| anyhow::anyhow!("metrics query: {e}"))?;
+    client.close();
+    println!("{}", json::to_string(&report));
+    Ok(())
+}
+
 fn print_usage() {
     println!(
         "repro — Fused3S reproduction harness\n\
          subcommands:\n  \
          datasets | table3 | table6 | table7 | fig5 | fig6 | fig7 | fig8 |\n  \
          ablate-split | ablate-reorder | ablate-compaction | ablate-buckets |\n  \
-         stability | plan | shard | infer | serve | stream\n\
+         stability | plan | shard | infer | serve | stream | trace | metrics\n\
          common flags: --datasets a,b,c  --d 64  --quick  --backends x,y\n\
          serve: loopback loadgen by default (--clients N --requests R \
          --graphs G --host --token T); --listen ADDR for serve-only\n\
          stream: loopback streaming-delta audit (--steps N --edits E \
-         --requests R --n NODES --host)"
+         --requests R --n NODES --host)\n\
+         trace: Chrome trace_event capture of a loopback workload \
+         (--rate F --capacity E --host) -> results/trace.json\n\
+         metrics: query a live server (--connect ADDR [--token T])"
     );
 }

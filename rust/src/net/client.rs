@@ -20,6 +20,7 @@ use std::time::Duration;
 
 use crate::graph::CsrGraph;
 use crate::kernels::{AttnError, Backend};
+use crate::util::json::Json;
 
 use super::frame::{
     read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME_BYTES,
@@ -293,6 +294,20 @@ impl NetClient {
                     )),
                 }
             }
+        }
+    }
+
+    /// Scrape the server's live metrics snapshot
+    /// ([`Metrics::to_json`](crate::coordinator::Metrics::to_json)):
+    /// send [`Msg::MetricsQuery`], block for the [`Msg::MetricsReport`],
+    /// and parse its JSON payload.
+    pub fn metrics(&mut self) -> Result<Json, NetError> {
+        self.send(&Msg::MetricsQuery)?;
+        match self.recv()? {
+            Msg::MetricsReport { json } => Json::parse(&json).map_err(|e| {
+                NetError::Protocol(format!("malformed metrics report: {e:#}"))
+            }),
+            _ => Err(NetError::Protocol("expected metrics report".into())),
         }
     }
 

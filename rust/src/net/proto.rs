@@ -11,6 +11,8 @@
 //!   ◄── GraphStatus{fp, known} ──
 //!   ── Submit{…, GraphRef} ──►             (by fingerprint or inline CSR)
 //!   ◄── Response{id, output | error} ──    (order = coordinator completion)
+//!   ── MetricsQuery ──►                    (optional, any time)
+//!   ◄── MetricsReport{json} ──             (Metrics::to_json snapshot)
 //!   ── Goodbye ──►                         (clean close)
 //! ```
 //!
@@ -44,6 +46,8 @@ const TAG_RESPONSE: u8 = 6;
 const TAG_GOODBYE: u8 = 7;
 const TAG_GRAPH_UPDATE: u8 = 8;
 const TAG_GRAPH_UPDATED: u8 = 9;
+const TAG_METRICS_QUERY: u8 = 10;
+const TAG_METRICS_REPORT: u8 = 11;
 
 /// Error codes for the `Response` error arm.  1–6 mirror
 /// [`AttnError`]'s variants; 16+ are protocol-level conditions with no
@@ -154,6 +158,16 @@ pub enum Msg {
     Goodbye,
     GraphUpdate(GraphUpdateMsg),
     GraphUpdated(GraphUpdatedMsg),
+    /// Ask the server for its full metrics snapshot (DESIGN.md §15).
+    /// Empty body; answered with [`Msg::MetricsReport`].
+    MetricsQuery,
+    /// The server's [`Metrics::to_json`] snapshot, serialised with
+    /// `util::json::to_string`.  Carried as a string rather than a wire
+    /// struct so the schema can grow (new counter groups, new histogram
+    /// shapes) without a protocol version bump.
+    ///
+    /// [`Metrics::to_json`]: crate::coordinator::Metrics::to_json
+    MetricsReport { json: String },
 }
 
 impl Msg {
@@ -216,6 +230,11 @@ impl Msg {
                 }
             }
             Msg::Goodbye => w.put_u8(TAG_GOODBYE),
+            Msg::MetricsQuery => w.put_u8(TAG_METRICS_QUERY),
+            Msg::MetricsReport { json } => {
+                w.put_u8(TAG_METRICS_REPORT);
+                w.put_str(json);
+            }
             Msg::GraphUpdate(u) => {
                 w.put_u8(TAG_GRAPH_UPDATE);
                 encode_graph_ref(&mut w, &u.base);
@@ -305,6 +324,10 @@ impl Msg {
                 Msg::Response(ResponseMsg { id, payload })
             }
             TAG_GOODBYE => Msg::Goodbye,
+            TAG_METRICS_QUERY => Msg::MetricsQuery,
+            TAG_METRICS_REPORT => {
+                Msg::MetricsReport { json: r.take_str()? }
+            }
             TAG_GRAPH_UPDATE => Msg::GraphUpdate(GraphUpdateMsg {
                 base: decode_graph_ref(&mut r)?,
                 inserts: decode_edges(&mut r)?,
@@ -737,6 +760,16 @@ mod tests {
                 assert_eq!(code, CODE_GRAPH_UNKNOWN);
                 assert_eq!(msg, "resend");
             }
+            _ => panic!("wrong tag"),
+        }
+    }
+
+    #[test]
+    fn metrics_query_and_report_roundtrip() {
+        assert!(matches!(roundtrip(&Msg::MetricsQuery), Msg::MetricsQuery));
+        let snapshot = r#"{"requests":{"completed":3,"failed":0}}"#;
+        match roundtrip(&Msg::MetricsReport { json: snapshot.into() }) {
+            Msg::MetricsReport { json } => assert_eq!(json, snapshot),
             _ => panic!("wrong tag"),
         }
     }

@@ -33,6 +33,8 @@ use std::time::Duration;
 use crate::coordinator::{AttnRequest, AttnResponse};
 use crate::graph::GraphDelta;
 use crate::kernels::Backend;
+use crate::trace::{self, TraceSite};
+use crate::util::json;
 use crate::util::sync::lock_unpoisoned;
 
 use super::frame::{read_frame, write_frame, FrameError};
@@ -75,10 +77,13 @@ pub(crate) fn run(shared: &Arc<Shared>, stream: TcpStream) {
         let shared = shared.clone();
         std::thread::spawn(move || {
             while let Ok(resp) = rx.recv() {
+                let span = resp.span;
                 let msg = Msg::Response(to_wire_response(resp));
                 // A write failure means the client is gone; keep draining
                 // so every reply sender disconnects and quota stays sane.
+                let encode = trace::span(TraceSite::NetEncode, span, 0);
                 let _ = send(&shared, &writer, &msg);
+                drop(encode);
                 let mut slots = lock_unpoisoned(&quota.slots);
                 *slots = slots.saturating_sub(1);
                 drop(slots);
@@ -142,6 +147,14 @@ fn reader_loop(
                     return;
                 }
             }
+            Msg::MetricsQuery => {
+                let report = Msg::MetricsReport {
+                    json: json::to_string(&shared.metrics.to_json()),
+                };
+                if !send(shared, writer, &report) {
+                    return;
+                }
+            }
             Msg::Goodbye => return,
             // Server-to-client messages (or a second hello) arriving here
             // mark a confused peer.
@@ -149,6 +162,7 @@ fn reader_loop(
             | Msg::ServerHello { .. }
             | Msg::GraphStatus { .. }
             | Msg::Response(_)
+            | Msg::MetricsReport { .. }
             | Msg::GraphUpdated(_) => {
                 protocol_fatal(shared, writer, "unexpected message for server");
                 return;
@@ -213,6 +227,13 @@ fn handle_submit(
         return false;
     }
     shared.metrics.net.request();
+    let span = trace::sample_request(sub.id);
+    trace::instant(
+        TraceSite::NetDecode,
+        span,
+        sub.id,
+        (sub.q.len() + sub.k.len() + sub.v.len()) as u64,
+    );
     let req = AttnRequest {
         id: sub.id,
         // The coordinator owns its request's graph by value; the store
@@ -229,6 +250,10 @@ fn handle_submit(
         backend,
         deadline: (sub.deadline_micros > 0)
             .then(|| Duration::from_micros(sub.deadline_micros)),
+        // The session rolls the sampling decision here (rather than
+        // leaving it to Coordinator::submit) so the decode seam can be
+        // attributed to the same span the serving core will carry.
+        span,
         reply: tx.clone(),
     };
     if let Err(e) = shared.coord.submit(req) {

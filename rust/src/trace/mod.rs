@@ -1,0 +1,754 @@
+//! Structured per-request tracing: a process-global, seeded-sampling,
+//! lock-free bounded ring buffer of [`TraceEvent`]s (DESIGN.md §15).
+//!
+//! The serving stack's metrics ([`crate::coordinator::metrics`]) answer
+//! *aggregate* questions; this subsystem answers "where did request X
+//! spend its 40 ms".  Spans are emitted at every existing seam — net
+//! session decode, admission, coalesce wait, plan-cache hit/miss, BSB
+//! build / incremental splice, planner decision (per-backend predicted
+//! costs and the winner), gather/dispatch/scatter per engine stage,
+//! per-shard preparation, retry/fallback ladder steps, reply encode —
+//! and exported as Chrome `trace_event` JSON loadable in
+//! `chrome://tracing` / Perfetto ([`Tracer::chrome_json`], surfaced by
+//! `repro trace`).
+//!
+//! Design mirrors the fault layer ([`crate::fault`]) exactly:
+//!
+//! * **Disarmed cost**: every hook is one relaxed atomic load when no
+//!   tracer is installed, and compiles out entirely without the
+//!   default-on `tracing` feature (`benches/trace_overhead.rs` pins both
+//!   costs, same disarmed-vs-armed pattern as `fault_overhead`).
+//! * **Seeded sampling**: whether a request is traced is a pure function
+//!   of `splitmix64(seed ^ id)` against `sample_rate`, so traced runs
+//!   are reproducible — and a differential test pins that tracing-armed
+//!   outputs stay bit-identical to tracing-disabled outputs.
+//! * **RAII guard**: [`install`] arms a process-global [`Tracer`] and
+//!   returns a [`TraceGuard`] that disarms on drop (latest install wins;
+//!   a stale guard dropping does not disarm a newer tracer).
+//!
+//! **Ring-buffer overflow semantics**: event slots are claimed by a
+//! wrapping atomic cursor; once more than `capacity` events have been
+//! recorded, new events overwrite the oldest (the tail of a long run
+//! survives, the head is dropped — [`Tracer::dropped`] counts the
+//! casualties).  Writers never block and never allocate.  A snapshot
+//! taken while writers are still active may observe a slot mid-overwrite;
+//! such torn slots are detected by their sequence stamp and skipped, so
+//! exports are race-free but should be taken after the workload
+//! quiesces for a complete picture.
+//!
+//! Span ids are u64s threaded through
+//! [`AttnRequest`](crate::coordinator::AttnRequest) /
+//! [`AttnResponse`](crate::coordinator::AttnResponse) (`0` = untraced);
+//! every emission helper no-ops on span 0, so the sampling decision made
+//! once at admission gates all downstream instrumentation.  Stages that
+//! cannot thread the id through their call signature (plan preparation,
+//! engine gather/dispatch/scatter) inherit it from a thread-ambient slot
+//! ([`with_span`] / [`current_span`]).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::sync::lock_unpoisoned;
+
+/// Where in the stack a trace event was emitted.  Names are stable — they
+/// are the `name` field of the Chrome export and the vocabulary DESIGN.md
+/// §15 documents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceSite {
+    /// Whole request: begin at admission ([`Coordinator::submit`]), end
+    /// when the response is sent.
+    ///
+    /// [`Coordinator::submit`]: crate::coordinator::Coordinator::submit
+    Request,
+    /// A submit frame decoded on a net session (instant; a = request id).
+    NetDecode,
+    /// A response frame encoded + flushed by a session forwarder.
+    NetEncode,
+    /// Batcher admission: deadline check + `Backend::Auto` resolution.
+    Admission,
+    /// Time a request waited in the coalescer before its batch was
+    /// prepared (instant; a = waited µs, b = batch size).
+    CoalesceWait,
+    /// The planner's verdict (instant; a = backend code, b = predicted ns).
+    PlannerDecision,
+    /// One candidate's line on the planner scoreboard (instant; a =
+    /// backend code, b = predicted ns; emitted once per feasible
+    /// candidate right before its [`TraceSite::PlannerDecision`]).
+    PlannerScore,
+    /// Plan-cache hit (instant; a = graph fingerprint).
+    CacheHit,
+    /// Plan-cache miss (instant; a = graph fingerprint).
+    CacheMiss,
+    /// BSB + bucket-plan build on a cache miss (span; a = n).
+    BsbBuild,
+    /// Incremental BSB rebuild for a graph delta (span; a = dirty RWs).
+    BsbSplice,
+    /// Whole preprocessing of one batch (merge + plan ladder).
+    Prepare,
+    /// One shard's plan preparation inside a sharded prepare (a = shard
+    /// index, within the parent request's span).
+    ShardPrepare,
+    /// Whole kernel execution of one batch.
+    Execute,
+    /// Engine pipeline stage: one item's K/V/feature gather (a = item).
+    Gather,
+    /// Engine pipeline stage: one item's kernel dispatch (a = item).
+    Dispatch,
+    /// Engine pipeline stage: one item's output scatter (a = item).
+    Scatter,
+    /// Degradation ladder: a retry of a failed prepare/execute (instant).
+    Retry,
+    /// Degradation ladder: re-resolution onto a fallback backend
+    /// (instant; a = backend code of the fallback).
+    Fallback,
+    /// Degradation ladder: a `(fingerprint, backend)` pair quarantined
+    /// (instant; a = backend code).
+    Quarantine,
+    /// A deadline shed at any queueing point (instant).
+    DeadlineShed,
+    /// The response handed to the reply channel (instant; a = 1 ok / 0
+    /// err, b = batch size).
+    Respond,
+}
+
+/// Every site, in stable order (the discriminant is the wire/export code).
+pub const TRACE_SITES: [TraceSite; 22] = [
+    TraceSite::Request,
+    TraceSite::NetDecode,
+    TraceSite::NetEncode,
+    TraceSite::Admission,
+    TraceSite::CoalesceWait,
+    TraceSite::PlannerDecision,
+    TraceSite::PlannerScore,
+    TraceSite::CacheHit,
+    TraceSite::CacheMiss,
+    TraceSite::BsbBuild,
+    TraceSite::BsbSplice,
+    TraceSite::Prepare,
+    TraceSite::ShardPrepare,
+    TraceSite::Execute,
+    TraceSite::Gather,
+    TraceSite::Dispatch,
+    TraceSite::Scatter,
+    TraceSite::Retry,
+    TraceSite::Fallback,
+    TraceSite::Quarantine,
+    TraceSite::DeadlineShed,
+    TraceSite::Respond,
+];
+
+impl TraceSite {
+    /// Stable index (used to pack events into ring slots).
+    pub fn index(self) -> usize {
+        match self {
+            TraceSite::Request => 0,
+            TraceSite::NetDecode => 1,
+            TraceSite::NetEncode => 2,
+            TraceSite::Admission => 3,
+            TraceSite::CoalesceWait => 4,
+            TraceSite::PlannerDecision => 5,
+            TraceSite::PlannerScore => 6,
+            TraceSite::CacheHit => 7,
+            TraceSite::CacheMiss => 8,
+            TraceSite::BsbBuild => 9,
+            TraceSite::BsbSplice => 10,
+            TraceSite::Prepare => 11,
+            TraceSite::ShardPrepare => 12,
+            TraceSite::Execute => 13,
+            TraceSite::Gather => 14,
+            TraceSite::Dispatch => 15,
+            TraceSite::Scatter => 16,
+            TraceSite::Retry => 17,
+            TraceSite::Fallback => 18,
+            TraceSite::Quarantine => 19,
+            TraceSite::DeadlineShed => 20,
+            TraceSite::Respond => 21,
+        }
+    }
+
+    fn from_index(i: usize) -> TraceSite {
+        TRACE_SITES[i.min(TRACE_SITES.len() - 1)]
+    }
+
+    /// The span/event name used in the Chrome export.
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceSite::Request => "request",
+            TraceSite::NetDecode => "net-decode",
+            TraceSite::NetEncode => "net-encode",
+            TraceSite::Admission => "admission",
+            TraceSite::CoalesceWait => "coalesce-wait",
+            TraceSite::PlannerDecision => "planner-decision",
+            TraceSite::PlannerScore => "planner-score",
+            TraceSite::CacheHit => "cache-hit",
+            TraceSite::CacheMiss => "cache-miss",
+            TraceSite::BsbBuild => "bsb-build",
+            TraceSite::BsbSplice => "bsb-splice",
+            TraceSite::Prepare => "prepare",
+            TraceSite::ShardPrepare => "shard-prepare",
+            TraceSite::Execute => "execute",
+            TraceSite::Gather => "gather",
+            TraceSite::Dispatch => "dispatch",
+            TraceSite::Scatter => "scatter",
+            TraceSite::Retry => "retry",
+            TraceSite::Fallback => "fallback",
+            TraceSite::Quarantine => "quarantine",
+            TraceSite::DeadlineShed => "deadline-shed",
+            TraceSite::Respond => "respond",
+        }
+    }
+}
+
+/// Event phase, matching Chrome `trace_event` `ph` values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Span begin (`"B"`).
+    Begin,
+    /// Span end (`"E"`).
+    End,
+    /// Instant event (`"i"`).
+    Instant,
+}
+
+impl TraceKind {
+    /// The Chrome `trace_event` phase letter for this kind.
+    pub fn ph(self) -> &'static str {
+        match self {
+            TraceKind::Begin => "B",
+            TraceKind::End => "E",
+            TraceKind::Instant => "i",
+        }
+    }
+}
+
+/// One recorded event (the snapshot form read back out of the ring).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Microseconds since the tracer was installed (monotonic clock).
+    pub ts_us: u64,
+    pub kind: TraceKind,
+    pub site: TraceSite,
+    /// The request's span id (`tid` in the Chrome export); never 0.
+    pub span: u64,
+    /// First numeric payload (meaning per [`TraceSite`] docs).
+    pub a: u64,
+    /// Second numeric payload.
+    pub b: u64,
+}
+
+/// Tracer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Seed of the splitmix64 sampling hash.
+    pub seed: u64,
+    /// Fraction of requests traced in `[0, 1]`; `>= 1.0` traces every
+    /// request, `0.0` arms the seams but samples nothing (the
+    /// overhead-bench configuration).
+    pub sample_rate: f64,
+    /// Ring capacity in events; oldest events are overwritten past it.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig { seed: 0x7ACE_5EED, sample_rate: 1.0, capacity: 65_536 }
+    }
+}
+
+/// One ring slot: a sequence stamp plus the packed event words.  `seq`
+/// is `claim_index + 1` (0 = never written) and is stored *last* with
+/// release ordering, so a reader that observes a consistent stamp
+/// observes the matching payload.
+struct Slot {
+    seq: AtomicU64,
+    ts_us: AtomicU64,
+    /// `kind << 8 | site_index`.
+    code: AtomicU64,
+    span: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            ts_us: AtomicU64::new(0),
+            code: AtomicU64::new(0),
+            span: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The process-global trace recorder: sampling decisions, span-id
+/// allocation, and the lock-free bounded event ring.
+pub struct Tracer {
+    cfg: TraceConfig,
+    epoch: Instant,
+    /// Next claim index (monotonic; slot = index % capacity).
+    cursor: AtomicU64,
+    /// Next span id minus one (span ids start at 1; 0 = untraced).
+    spans: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Tracer {
+        let capacity = cfg.capacity.max(1);
+        Tracer {
+            cfg,
+            epoch: Instant::now(),
+            cursor: AtomicU64::new(0),
+            spans: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Slot::empty()).collect(),
+        }
+    }
+
+    /// The sampling verdict for request `id` — a pure function of
+    /// `(seed, id)`, so the same workload traces the same requests on
+    /// every run.  Returns a fresh nonzero span id when sampled, 0
+    /// otherwise.
+    pub fn sample_request(&self, id: u64) -> u64 {
+        if self.cfg.sample_rate <= 0.0 {
+            return 0;
+        }
+        if self.cfg.sample_rate < 1.0 {
+            let x = splitmix64(self.cfg.seed ^ id);
+            let u = (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            if u >= self.cfg.sample_rate {
+                return 0;
+            }
+        }
+        self.spans.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record one event.  Never blocks, never allocates; a full ring
+    /// overwrites its oldest slot.
+    pub fn record(&self, kind: TraceKind, site: TraceSite, span: u64, a: u64, b: u64) {
+        if span == 0 {
+            return;
+        }
+        let idx = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(idx % self.slots.len() as u64) as usize];
+        let ts = self.epoch.elapsed().as_micros() as u64;
+        slot.ts_us.store(ts, Ordering::Relaxed);
+        slot.code.store(
+            ((kind as u64) << 8) | site.index() as u64,
+            Ordering::Relaxed,
+        );
+        slot.span.store(span, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.seq.store(idx + 1, Ordering::Release);
+    }
+
+    /// Total events recorded since install (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring overflow (oldest-first overwrite).
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Read the surviving events back out, oldest first.  Slots whose
+    /// stamp doesn't match an expected live claim index (mid-overwrite
+    /// tears, unwritten slots) are skipped, so this is safe concurrent
+    /// with writers — but take it after quiescence for a complete trace.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let end = self.cursor.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let start = end.saturating_sub(cap);
+        let mut out = Vec::with_capacity((end - start) as usize);
+        for idx in start..end {
+            let slot = &self.slots[(idx % cap) as usize];
+            if slot.seq.load(Ordering::Acquire) != idx + 1 {
+                continue; // torn or already overwritten again
+            }
+            let code = slot.code.load(Ordering::Relaxed);
+            let kind = match code >> 8 {
+                0 => TraceKind::Begin,
+                1 => TraceKind::End,
+                _ => TraceKind::Instant,
+            };
+            out.push(TraceEvent {
+                ts_us: slot.ts_us.load(Ordering::Relaxed),
+                kind,
+                site: TraceSite::from_index((code & 0xFF) as usize),
+                span: slot.span.load(Ordering::Relaxed),
+                a: slot.a.load(Ordering::Relaxed),
+                b: slot.b.load(Ordering::Relaxed),
+            });
+        }
+        out
+    }
+
+    /// The snapshot in Chrome `trace_event` JSON object format:
+    /// `{"traceEvents": [...]}`, loadable in `chrome://tracing` and
+    /// Perfetto.  Span id = `tid`, so each traced request reads as one
+    /// horizontal track with its prepare/execute/shard children nested
+    /// inside the request span.
+    pub fn chrome_json(&self) -> Json {
+        let events = self
+            .snapshot()
+            .into_iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("name", s(e.site.name())),
+                    ("ph", s(e.kind.ph())),
+                    ("pid", num(1.0)),
+                    ("tid", num(e.span as f64)),
+                    ("ts", num(e.ts_us as f64)),
+                    (
+                        "args",
+                        obj(vec![
+                            ("a", num(e.a as f64)),
+                            ("b", num(e.b as f64)),
+                        ]),
+                    ),
+                ];
+                if e.kind == TraceKind::Instant {
+                    fields.push(("s", s("t"))); // thread-scoped instant
+                }
+                obj(fields)
+            })
+            .collect();
+        obj(vec![
+            ("traceEvents", arr(events)),
+            ("displayTimeUnit", s("ms")),
+            ("otherData", obj(vec![
+                ("recorded", num(self.recorded() as f64)),
+                ("dropped", num(self.dropped() as f64)),
+                ("seed", num(self.cfg.seed as f64)),
+                ("sample_rate", num(self.cfg.sample_rate)),
+            ])),
+        ])
+    }
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static TRACER: Mutex<Option<Arc<Tracer>>> = Mutex::new(None);
+
+/// RAII handle for an installed tracer: keeps the [`Tracer`] alive (and
+/// readable — it derefs) and disarms the global hook on drop, unless a
+/// newer tracer has been installed since (latest install wins).
+pub struct TraceGuard {
+    tracer: Arc<Tracer>,
+}
+
+impl std::ops::Deref for TraceGuard {
+    type Target = Tracer;
+    fn deref(&self) -> &Tracer {
+        &self.tracer
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        let mut slot = lock_unpoisoned(&TRACER);
+        if slot.as_ref().is_some_and(|t| Arc::ptr_eq(t, &self.tracer)) {
+            *slot = None;
+            ACTIVE.store(false, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Arm the process-global tracer.  Hooks flip from one relaxed load to
+/// live recording until the returned guard drops.
+pub fn install(cfg: TraceConfig) -> TraceGuard {
+    let tracer = Arc::new(Tracer::new(cfg));
+    let mut slot = lock_unpoisoned(&TRACER);
+    *slot = Some(tracer.clone());
+    ACTIVE.store(true, Ordering::SeqCst);
+    TraceGuard { tracer }
+}
+
+/// Whether a tracer is armed — the single relaxed load every disarmed
+/// hook costs.
+#[inline]
+pub fn enabled() -> bool {
+    #[cfg(feature = "tracing")]
+    {
+        ACTIVE.load(Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "tracing"))]
+    {
+        false
+    }
+}
+
+/// The armed tracer, if any.
+#[inline]
+pub fn active() -> Option<Arc<Tracer>> {
+    #[cfg(feature = "tracing")]
+    {
+        if !ACTIVE.load(Ordering::Relaxed) {
+            return None;
+        }
+        lock_unpoisoned(&TRACER).clone()
+    }
+    #[cfg(not(feature = "tracing"))]
+    {
+        None
+    }
+}
+
+/// Sample request `id` against the armed tracer: a nonzero span id when
+/// this request should be traced, 0 when unsampled or disarmed.
+#[inline]
+pub fn sample_request(id: u64) -> u64 {
+    match active() {
+        Some(t) => t.sample_request(id),
+        None => 0,
+    }
+}
+
+/// Emit a span-begin event (no-op when disarmed or `span == 0`).
+#[inline]
+pub fn begin(site: TraceSite, span: u64, a: u64) {
+    if span != 0 {
+        if let Some(t) = active() {
+            t.record(TraceKind::Begin, site, span, a, 0);
+        }
+    }
+}
+
+/// Emit a span-end event (no-op when disarmed or `span == 0`).
+#[inline]
+pub fn end(site: TraceSite, span: u64) {
+    if span != 0 {
+        if let Some(t) = active() {
+            t.record(TraceKind::End, site, span, 0, 0);
+        }
+    }
+}
+
+/// Emit an instant event (no-op when disarmed or `span == 0`).
+#[inline]
+pub fn instant(site: TraceSite, span: u64, a: u64, b: u64) {
+    if span != 0 {
+        if let Some(t) = active() {
+            t.record(TraceKind::Instant, site, span, a, b);
+        }
+    }
+}
+
+/// RAII span: begin on construction, end on drop.  Cheap to construct
+/// when disarmed (one relaxed load, no allocation).
+pub struct Span {
+    site: TraceSite,
+    span: u64,
+}
+
+/// Open an RAII span (no-ops throughout when `span == 0` or disarmed).
+#[inline]
+pub fn span(site: TraceSite, span_id: u64, a: u64) -> Span {
+    begin(site, span_id, a);
+    Span { site, span: if enabled() { span_id } else { 0 } }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        end(self.site, self.span);
+    }
+}
+
+thread_local! {
+    /// The span id of the request this thread is currently working for —
+    /// how stages whose signatures can't carry the id (plan preparation,
+    /// engine pipeline stages) attribute their events.
+    static AMBIENT: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Run `f` with `span` as this thread's ambient span id.
+pub fn with_span<R>(span: u64, f: impl FnOnce() -> R) -> R {
+    let prev = AMBIENT.with(|c| c.replace(span));
+    let r = f();
+    AMBIENT.with(|c| c.set(prev));
+    r
+}
+
+/// This thread's ambient span id (0 outside any [`with_span`]).
+#[inline]
+pub fn current_span() -> u64 {
+    AMBIENT.with(|c| c.get())
+}
+
+/// A compact numeric code for a backend, for event payloads (the Chrome
+/// export carries numbers only).  Codes are stable and documented in
+/// DESIGN.md §15.
+pub fn backend_code(b: crate::kernels::Backend) -> u64 {
+    use crate::kernels::Backend::*;
+    match b {
+        Fused3S => 1,
+        Hybrid => 2,
+        Fused3SNoReorder => 3,
+        Fused3SSplitR => 4,
+        DfGnnLike => 5,
+        UnfusedNaive => 6,
+        UnfusedStable => 7,
+        Dense => 8,
+        CpuCsr => 9,
+        Auto => 0,
+    }
+}
+
+/// Seconds → integer nanoseconds, saturating (event payload encoding for
+/// predicted costs).
+pub fn ns(seconds: f64) -> u64 {
+    if seconds.is_finite() && seconds > 0.0 {
+        (seconds * 1e9).min(u64::MAX as f64) as u64
+    } else {
+        0
+    }
+}
+
+/// Same mix as the fault layer's sampler (Steele et al.'s SplitMix64):
+/// every bit of the seed affects every bit of the output, so nearby
+/// request ids decorrelate.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_and_rate_bounded() {
+        let t = Tracer::new(TraceConfig {
+            seed: 42,
+            sample_rate: 0.25,
+            capacity: 16,
+        });
+        let t2 = Tracer::new(TraceConfig {
+            seed: 42,
+            sample_rate: 0.25,
+            capacity: 16,
+        });
+        let mut sampled = 0usize;
+        for id in 0..4096u64 {
+            let a = t.sample_request(id);
+            let b = t2.sample_request(id);
+            assert_eq!(a != 0, b != 0, "sampling differs for id {id}");
+            if a != 0 {
+                sampled += 1;
+            }
+        }
+        // 25% ± generous slack; the point is "neither 0 nor 100%".
+        assert!((700..=1400).contains(&sampled), "sampled {sampled}/4096");
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let all = Tracer::new(TraceConfig {
+            seed: 1,
+            sample_rate: 1.0,
+            capacity: 4,
+        });
+        let none = Tracer::new(TraceConfig {
+            seed: 1,
+            sample_rate: 0.0,
+            capacity: 4,
+        });
+        for id in 0..64 {
+            assert_ne!(all.sample_request(id), 0);
+            assert_eq!(none.sample_request(id), 0);
+        }
+    }
+
+    #[test]
+    fn span_ids_unique_and_nonzero() {
+        let t = Tracer::new(TraceConfig::default());
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..100 {
+            let s = t.sample_request(id);
+            assert!(s != 0 && seen.insert(s), "span {s} reused");
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let t = Tracer::new(TraceConfig {
+            seed: 0,
+            sample_rate: 1.0,
+            capacity: 8,
+        });
+        for i in 0..20u64 {
+            t.record(TraceKind::Instant, TraceSite::Respond, 7, i, 0);
+        }
+        assert_eq!(t.recorded(), 20);
+        assert_eq!(t.dropped(), 12);
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 8);
+        // Oldest-first, and only the 8 newest survive.
+        let args: Vec<u64> = evs.iter().map(|e| e.a).collect();
+        assert_eq!(args, (12..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn span_zero_is_never_recorded() {
+        let t = Tracer::new(TraceConfig::default());
+        t.record(TraceKind::Begin, TraceSite::Prepare, 0, 0, 0);
+        assert_eq!(t.recorded(), 0);
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let t = Tracer::new(TraceConfig {
+            seed: 0,
+            sample_rate: 1.0,
+            capacity: 16,
+        });
+        t.record(TraceKind::Begin, TraceSite::Request, 3, 0, 0);
+        t.record(TraceKind::Instant, TraceSite::CacheMiss, 3, 99, 0);
+        t.record(TraceKind::End, TraceSite::Request, 3, 0, 0);
+        let j = t.chrome_json();
+        let evs = j
+            .req("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        assert_eq!(evs.len(), 3);
+        let field = |i: usize, k: &str| -> String {
+            evs[i]
+                .req(k)
+                .and_then(|v| v.as_str())
+                .expect("string field")
+                .to_string()
+        };
+        assert_eq!(field(0, "ph"), "B");
+        assert_eq!(field(0, "name"), "request");
+        assert_eq!(field(1, "ph"), "i");
+        assert_eq!(field(1, "s"), "t");
+        assert_eq!(field(2, "ph"), "E");
+        let tid = evs[0]
+            .req("tid")
+            .and_then(|v| v.as_f64())
+            .expect("tid number");
+        assert_eq!(tid, 3.0);
+    }
+
+    #[test]
+    fn site_roundtrip_and_names_distinct() {
+        let mut names = std::collections::HashSet::new();
+        for i in 0..22 {
+            let site = TraceSite::from_index(i);
+            assert_eq!(site.index(), i, "index roundtrip for {site:?}");
+            assert!(names.insert(site.name()), "duplicate name {}", site.name());
+        }
+    }
+
+    // The install/disarm global-hook test lives with the differential
+    // suite (rust/tests/tracing_differential.rs), which verify.sh runs
+    // serialized — the hook is process-global.
+}

@@ -113,6 +113,7 @@ fn request(
         scale: SCALE,
         backend,
         deadline,
+        span: 0,
         reply: tx,
     };
     (req, rx)

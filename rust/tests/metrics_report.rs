@@ -1,0 +1,173 @@
+//! Metrics report matrix (ISSUE 10 satellite): every conditional
+//! `Metrics::report()` section appears exactly when its counter group has
+//! recorded traffic, and the structured `Metrics::to_json()` snapshot —
+//! the payload of the wire `MetricsReport` message — round-trips through
+//! the repo's own JSON writer/parser unchanged.
+
+use fused3s::coordinator::metrics::{
+    bucket_floor_s, Metrics, HIST_BUCKETS,
+};
+use fused3s::kernels::Backend;
+use fused3s::util::json::{self, Json};
+
+/// Each conditional report section, the marker substring that identifies
+/// it, and a recorder that makes its `any()`/count gate fire.
+fn section_matrix() -> Vec<(&'static str, &'static str, fn(&Metrics))> {
+    vec![
+        ("planner", "planner auto=", |m: &Metrics| {
+            m.planner.auto_resolved(Backend::Fused3S)
+        }),
+        ("sharding", "sharding batches=", |m: &Metrics| {
+            m.sharding.record_batch(2, 10)
+        }),
+        ("faults", "faults panics=", |m: &Metrics| m.faults.retry()),
+        ("streaming", "streaming deltas=", |m: &Metrics| {
+            m.streaming.delta_applied(1, 3)
+        }),
+        ("net", "net conns=", |m: &Metrics| m.net.connection()),
+    ]
+}
+
+#[test]
+fn conditional_sections_appear_iff_traffic_exists() {
+    for (name, marker, arm) in section_matrix() {
+        // Quiet metrics: the section must be absent (old log shape).
+        let quiet = Metrics::new();
+        assert!(
+            !quiet.report().contains(marker),
+            "section '{name}' leaked into a quiet report"
+        );
+        // One recorded event: the section must appear.
+        let busy = Metrics::new();
+        arm(&busy);
+        assert!(
+            busy.report().contains(marker),
+            "section '{name}' missing after traffic: {}",
+            busy.report()
+        );
+        // Arming one section must not drag in the others.
+        for (other, other_marker, _) in section_matrix() {
+            if other != name {
+                assert!(
+                    !busy.report().contains(other_marker),
+                    "arming '{name}' surfaced unrelated section '{other}'"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn base_line_always_present() {
+    let m = Metrics::new();
+    let r = m.report();
+    for marker in ["requests=", "failed=", "latency", "batches=", "bsb-cache"] {
+        assert!(r.contains(marker), "base report lost '{marker}': {r}");
+    }
+}
+
+/// Populate every counter group so the JSON snapshot exercises all
+/// sections with nonzero values.
+fn populated() -> Metrics {
+    let m = Metrics::new();
+    m.request_done(true);
+    m.request_done(true);
+    m.request_done(false);
+    m.latency.record(0.004);
+    m.latency.record(0.012);
+    m.preprocess.record(0.002);
+    m.execute.record(0.0015);
+    m.batching.record_batch(3);
+    m.batching.cache_hit();
+    m.batching.cache_miss();
+    m.batching.cache_evicted(1);
+    m.planner.auto_resolved(Backend::Fused3S);
+    m.planner.auto_resolved(Backend::Hybrid);
+    m.planner.observation();
+    m.planner.invalidation();
+    m.sharding.record_batch(4, 64);
+    m.faults.panic_caught();
+    m.faults.retry();
+    m.faults.fallback();
+    m.faults.deadline_shed();
+    m.faults.quarantine();
+    m.net.connection();
+    m.net.request();
+    m.net.graph_upload();
+    m.net.graph_reuse();
+    m.net.read(256);
+    m.net.wrote(128);
+    m.streaming.delta_applied(5, 27);
+    m.streaming.full_rebuild();
+    m
+}
+
+#[test]
+fn to_json_has_every_section_even_when_idle() {
+    // Unlike report(), the structured snapshot never omits a section:
+    // wire consumers must not have to probe for keys.
+    let idle = Metrics::new().to_json();
+    for key in [
+        "requests", "latency", "preprocess", "execute", "batching",
+        "planner", "sharding", "faults", "net", "streaming",
+    ] {
+        assert!(idle.get(key).is_some(), "idle to_json missing '{key}'");
+    }
+}
+
+#[test]
+fn to_json_roundtrips_through_util_json() {
+    let j = populated().to_json();
+    let text = json::to_string(&j);
+    let back = Json::parse(&text).expect("to_json output must reparse");
+    assert_eq!(back, j, "to_json round-trip changed the tree");
+}
+
+#[test]
+fn to_json_values_reconcile_with_counters() {
+    let m = populated();
+    let j = m.to_json();
+    let n = |path: &[&str]| -> f64 {
+        let mut v = &j;
+        for k in path {
+            v = v.req(k).expect("key present");
+        }
+        v.as_f64().expect("number")
+    };
+    assert_eq!(n(&["requests", "completed"]), 2.0);
+    assert_eq!(n(&["requests", "failed"]), 1.0);
+    assert_eq!(n(&["latency", "count"]), 2.0);
+    assert_eq!(n(&["latency", "max_s"]), 0.012);
+    assert_eq!(n(&["batching", "batches"]), 1.0);
+    assert_eq!(n(&["batching", "coalesced_requests"]), 3.0);
+    assert_eq!(n(&["planner", "auto_requests"]), 2.0);
+    assert_eq!(n(&["planner", "resolved", "fused3s"]), 1.0);
+    assert_eq!(n(&["planner", "resolved", "hybrid"]), 1.0);
+    assert_eq!(n(&["sharding", "halo_rows_gathered"]), 64.0);
+    assert_eq!(n(&["faults", "retries"]), 1.0);
+    assert_eq!(n(&["net", "bytes_in"]), 256.0);
+    assert_eq!(n(&["streaming", "rws_spliced"]), 27.0);
+    assert_eq!(n(&["streaming", "full_rebuilds"]), 1.0);
+
+    // Histogram arrays are complete, aligned, and closed-form.
+    let floors = j
+        .req("latency")
+        .and_then(|l| l.req("histogram_floors_s"))
+        .and_then(|a| a.as_arr().map(<[Json]>::to_vec))
+        .expect("floors array");
+    let counts = j
+        .req("latency")
+        .and_then(|l| l.req("histogram_counts"))
+        .and_then(|a| a.as_arr().map(<[Json]>::to_vec))
+        .expect("counts array");
+    assert_eq!(floors.len(), HIST_BUCKETS);
+    assert_eq!(counts.len(), HIST_BUCKETS);
+    for (i, f) in floors.iter().enumerate() {
+        assert_eq!(f.as_f64().expect("floor"), bucket_floor_s(i));
+    }
+    let total: f64 = counts
+        .iter()
+        .map(|c| c.as_f64().expect("count"))
+        .sum();
+    assert_eq!(total, 2.0, "histogram total == latency sample count");
+}

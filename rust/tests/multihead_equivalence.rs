@@ -214,6 +214,7 @@ fn coordinator_multihead_host_emulation_bit_matches() {
                 scale,
                 backend: Backend::Fused3S,
                 deadline: None,
+                span: 0,
                 reply: tx.clone(),
             })
             .expect("submit");

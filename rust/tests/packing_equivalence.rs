@@ -272,6 +272,7 @@ fn coordinator_hybrid_host_emulation_bit_matches() {
                 scale,
                 backend: Backend::Hybrid,
                 deadline: None,
+                span: 0,
                 reply: tx.clone(),
             })
             .expect("submit");

@@ -341,6 +341,7 @@ fn burst(coord: &Coordinator, g: &CsrGraph, backend: Backend, seeds: &[u64]) -> 
                 scale: SCALE,
                 backend,
                 deadline: None,
+                span: 0,
                 reply: tx,
             })
             .expect("submit");

@@ -1,0 +1,307 @@
+//! Tracing differential harness (ISSUE 10): arming the process-global
+//! tracer must be **bit-invisible** to every numeric output — standalone
+//! plans and the full coordinator, including the sharded path — and the
+//! captured event stream must obey the span discipline the Chrome
+//! exporter depends on: balanced begin/end pairs per span, children
+//! strictly inside their request span, ring order consistent with the
+//! happens-before chain each request threads through the pipeline.
+//!
+//! The tracer is process-global (`trace::install` is latest-wins), so
+//! every test here serialises on one mutex; `scripts/verify.sh` also
+//! runs this suite with `--test-threads=1`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use fused3s::coordinator::{
+    AttnRequest, Coordinator, CoordinatorConfig, ExecutorKind,
+};
+use fused3s::exec::{offline_manifest, Engine, ExecPolicy};
+use fused3s::graph::{generators, CsrGraph};
+use fused3s::kernels::{AttentionBatch, Backend, ExecCtx, Plan};
+use fused3s::runtime::Manifest;
+use fused3s::trace::{self, TraceConfig, TraceKind, TraceSite};
+use fused3s::util::prng::Rng;
+
+/// One tracer per process: serialise every test in this file.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn manifest() -> Manifest {
+    offline_manifest(8, &[4, 8, 16, 32, 64, 128], 128)
+}
+
+fn features(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+        rng.normal_vec(n * d, 1.0),
+    )
+}
+
+/// The workload both sides of the differential run: standalone fused and
+/// hybrid plans, then the coordinator over normal, hybrid-routed and
+/// sharded requests.  Returns every output vector in a fixed order.
+fn run_workload() -> Vec<Vec<f32>> {
+    let man = manifest();
+    let serial = Engine::serial();
+    let d = 16;
+    let mut outs = Vec::new();
+
+    // Standalone plans: the library path with no coordinator at all.
+    let standalone: &[(CsrGraph, Backend)] = &[
+        (
+            generators::erdos_renyi(120, 5.0, 21).with_self_loops(),
+            Backend::Fused3S,
+        ),
+        (
+            generators::sbm(3, 24, 0.3, 0.02, 22).with_self_loops(),
+            Backend::Hybrid,
+        ),
+    ];
+    for (g, backend) in standalone {
+        let (q, k, v) = features(g.n, d, 7000 + g.n as u64);
+        let x = AttentionBatch::new(g.n, d, d, 1, &q, &k, &v, 0.25);
+        let plan = Plan::new(&man, g, *backend, &serial).expect("plan");
+        outs.push(
+            plan.execute(&mut ExecCtx::host(&serial), &x).expect("run"),
+        );
+    }
+
+    // The coordinator: normal, hybrid and sharded (n = 300 > cap 128).
+    let coord = Coordinator::start(CoordinatorConfig {
+        executor: ExecutorKind::HostEmulation,
+        preprocess_workers: 2,
+        queue_capacity: 16,
+        max_batch_requests: 4,
+        max_batch_delay: Duration::from_millis(1),
+        exec: ExecPolicy::serial(),
+        max_plan_nodes: 128,
+        max_shards: 8,
+        ..CoordinatorConfig::default()
+    })
+    .expect("coordinator");
+    let served: &[(CsrGraph, Backend)] = &[
+        (
+            generators::erdos_renyi(90, 4.0, 23).with_self_loops(),
+            Backend::Fused3S,
+        ),
+        (generators::star(70), Backend::Hybrid),
+        (
+            generators::erdos_renyi(300, 5.0, 24).with_self_loops(),
+            Backend::Fused3S,
+        ),
+    ];
+    let (tx, rx) = channel();
+    for (i, (g, backend)) in served.iter().enumerate() {
+        let (q, k, v) = features(g.n, d, 8000 + i as u64);
+        coord
+            .submit(AttnRequest::single_head(
+                i as u64,
+                g.clone(),
+                d,
+                q,
+                k,
+                v,
+                0.25,
+                *backend,
+                tx.clone(),
+            ))
+            .expect("submit");
+    }
+    drop(tx);
+    let mut got: HashMap<u64, Vec<f32>> = HashMap::new();
+    while let Ok(resp) = rx.recv_timeout(Duration::from_secs(120)) {
+        got.insert(resp.id, resp.result.expect("served result"));
+        if got.len() == served.len() {
+            break;
+        }
+    }
+    coord.shutdown();
+    assert_eq!(got.len(), served.len(), "missing coordinator responses");
+    for i in 0..served.len() {
+        outs.push(got.remove(&(i as u64)).expect("indexed response"));
+    }
+    outs
+}
+
+/// The acceptance contract: running the identical workload with the
+/// tracer armed at `sample_rate = 1.0` changes no output bit anywhere —
+/// tracing observes the pipeline, it never participates in it.
+#[test]
+fn armed_tracing_is_bit_invisible() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let baseline = run_workload();
+    assert!(!trace::enabled(), "no tracer may be armed for the baseline");
+
+    let armed = {
+        let guard = trace::install(TraceConfig {
+            sample_rate: 1.0,
+            ..TraceConfig::default()
+        });
+        let outs = run_workload();
+        assert!(
+            guard.recorded() > 0,
+            "the armed run must actually have traced something"
+        );
+        outs
+    };
+    assert!(!trace::enabled(), "guard drop must disarm the tracer");
+
+    assert_eq!(baseline.len(), armed.len());
+    for (i, (want, got)) in baseline.iter().zip(&armed).enumerate() {
+        assert_eq!(
+            want, got,
+            "workload output {i}: tracing perturbed the numerics"
+        );
+    }
+}
+
+/// Seeded sampling is a pure function of `(seed, request id)`: the same
+/// config picks the same requests on every install, a different seed
+/// picks a different subset, and the boundary rates pick all or nothing.
+#[test]
+fn sampling_is_seeded_and_reproducible() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let picks = |seed: u64, rate: f64| -> Vec<bool> {
+        let guard = trace::install(TraceConfig {
+            seed,
+            sample_rate: rate,
+            ..TraceConfig::default()
+        });
+        (0..512).map(|id| guard.sample_request(id) != 0).collect()
+    };
+    let a = picks(1, 0.5);
+    let b = picks(1, 0.5);
+    assert_eq!(a, b, "same (seed, rate) must sample the same requests");
+    let hits = a.iter().filter(|&&s| s).count();
+    assert!(
+        (1..512).contains(&hits),
+        "rate 0.5 over 512 ids picked {hits}: sampler is stuck"
+    );
+    let c = picks(2, 0.5);
+    assert_ne!(a, c, "a different seed must pick a different subset");
+    assert!(picks(3, 0.0).iter().all(|&s| !s), "rate 0 samples nothing");
+    assert!(picks(3, 1.0).iter().all(|&s| s), "rate 1 samples everything");
+    // Disarmed, the module hook refuses every request.
+    assert_eq!(trace::sample_request(42), 0);
+}
+
+/// Span discipline over a real traced serving run, checked in **ring
+/// order** (claim order respects the happens-before chain each request
+/// rides through submit → batcher → prepare → execute → respond):
+/// begin/end pairs balance per span, every stage happens inside its open
+/// request span, the sharded request emits per-shard prepare spans, and
+/// the Chrome export carries `tid` = span for every event.
+#[test]
+fn captured_spans_nest_and_export() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let guard = trace::install(TraceConfig {
+        sample_rate: 1.0,
+        ..TraceConfig::default()
+    });
+    run_workload();
+    let events = guard.snapshot();
+    assert_eq!(
+        guard.dropped(),
+        0,
+        "workload must fit the default ring for a complete check"
+    );
+    assert!(!events.is_empty());
+
+    let mut stacks: HashMap<u64, Vec<TraceSite>> = HashMap::new();
+    let mut open_requests: HashSet<u64> = HashSet::new();
+    let mut sites_seen: HashSet<&'static str> = HashSet::new();
+    let mut shard_prepares = 0usize;
+    for e in &events {
+        assert_ne!(e.span, 0, "span 0 events must never reach the ring");
+        sites_seen.insert(e.site.name());
+        match e.kind {
+            TraceKind::Begin => {
+                if e.site == TraceSite::Request {
+                    assert!(
+                        open_requests.insert(e.span),
+                        "span {} opened twice",
+                        e.span
+                    );
+                } else if matches!(
+                    e.site,
+                    TraceSite::Admission
+                        | TraceSite::Prepare
+                        | TraceSite::Execute
+                        | TraceSite::ShardPrepare
+                ) {
+                    assert!(
+                        open_requests.contains(&e.span),
+                        "{} began outside its request span {}",
+                        e.site.name(),
+                        e.span
+                    );
+                }
+                if e.site == TraceSite::ShardPrepare {
+                    shard_prepares += 1;
+                }
+                stacks.entry(e.span).or_default().push(e.site);
+            }
+            TraceKind::End => {
+                let stack = stacks.entry(e.span).or_default();
+                let top = stack.pop().unwrap_or_else(|| {
+                    panic!("{} end on span {} with an empty stack",
+                        e.site.name(), e.span)
+                });
+                assert_eq!(
+                    top,
+                    e.site,
+                    "span {}: {} ended while {} was open",
+                    e.span,
+                    e.site.name(),
+                    top.name()
+                );
+                if e.site == TraceSite::Request {
+                    open_requests.remove(&e.span);
+                }
+            }
+            TraceKind::Instant => {}
+        }
+    }
+    for (span, stack) in &stacks {
+        assert!(
+            stack.is_empty(),
+            "span {span} left {:?} open at quiescence",
+            stack.iter().map(|s| s.name()).collect::<Vec<_>>()
+        );
+    }
+    assert!(open_requests.is_empty(), "unclosed request spans");
+    for site in
+        ["request", "admission", "prepare", "execute", "respond"]
+    {
+        assert!(sites_seen.contains(site), "no '{site}' events captured");
+    }
+    assert!(
+        shard_prepares >= 2,
+        "the n=300 request under cap 128 must emit per-shard prepare spans"
+    );
+
+    // The Chrome export: an object the viewer loads directly, one event
+    // per ring entry, `tid` = span so requests render as tracks.
+    let chrome = guard.chrome_json();
+    let traced = chrome
+        .req("traceEvents")
+        .and_then(|t| t.as_arr().map(<[_]>::to_vec))
+        .expect("traceEvents array");
+    assert_eq!(traced.len(), events.len());
+    for (e, j) in events.iter().zip(&traced) {
+        let tid = j
+            .req("tid")
+            .and_then(fused3s::util::json::Json::as_f64)
+            .expect("tid");
+        assert_eq!(tid as u64, e.span, "tid must be the span id");
+        let ph = j
+            .req("ph")
+            .and_then(|p| p.as_str().map(str::to_string))
+            .expect("ph");
+        assert_eq!(ph, e.kind.ph());
+    }
+}

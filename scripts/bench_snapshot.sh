@@ -31,7 +31,7 @@ ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 REPEATS="${REPEATS:-3}"
 BENCHES=("$@")
 if [ ${#BENCHES[@]} -eq 0 ]; then
-    BENCHES=(streaming host_pipeline coordinator_batching multihead shard net_loopback)
+    BENCHES=(streaming host_pipeline coordinator_batching multihead shard net_loopback trace_overhead)
 fi
 
 have_cargo=1
@@ -123,6 +123,10 @@ def extract(path):
         for r in net_rows(path):
             if r["inline_us"] > 0:
                 got[f"n{r['n']}"] = r["fp_us"] / r["inline_us"]
+    elif bench == "trace_overhead":
+        for r in rows(path):
+            got["armed_over_disarmed"] = r["armed_over_disarmed"]
+            got["recording_over_disarmed"] = r["recording_over_disarmed"]
     return got
 
 samples = {}

@@ -152,7 +152,8 @@ fi
 # BENCH_<bench>.json files written by scripts/bench_snapshot.sh share one
 # schema ({"keys": {key: ratio}}); compare each against its HEAD copy the
 # same way the planner baseline is handled.
-for bench in host_pipeline coordinator_batching multihead shard net_loopback; do
+for bench in host_pipeline coordinator_batching multihead shard net_loopback \
+    trace_overhead; do
     SNAP="$ROOT/BENCH_$bench.json"
     if [ -f "$SNAP" ] \
         && git -C "$ROOT" ls-files --error-unmatch "BENCH_$bench.json" \

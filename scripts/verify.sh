@@ -81,8 +81,10 @@ echo "== bench regression check (scripts/check_bench_regression.sh)"
 # the network serving layer (src/net/), which parses hostile input and
 # so must never unwrap its way into a session panic; ISSUE 9 adds the
 # streaming delta/incremental-rebuild modules, which sit on the
-# update_graph hot path and validate caller-supplied edit batches.
-echo "== unwrap/expect lint (src/coordinator, src/exec, src/bsb/geometry.rs, src/kernels/hybrid.rs, src/net, src/graph/delta.rs, src/bsb/incremental.rs)"
+# update_graph hot path and validate caller-supplied edit batches; ISSUE
+# 10 adds the tracing ring (src/trace/), whose hooks run on every hot
+# path and must degrade to a no-op, never a panic.
+echo "== unwrap/expect lint (src/coordinator, src/exec, src/bsb/geometry.rs, src/kernels/hybrid.rs, src/net, src/graph/delta.rs, src/bsb/incremental.rs, src/trace)"
 awk '
     FNR == 1 { intest = 0; inv = 0 }
     /#\[cfg\(test\)\]/ { intest = 1 }
@@ -102,7 +104,7 @@ awk '
     END { exit bad }
 ' src/coordinator/*.rs src/exec/*.rs src/bsb/geometry.rs \
     src/kernels/hybrid.rs src/net/*.rs src/graph/delta.rs \
-    src/bsb/incremental.rs
+    src/bsb/incremental.rs src/trace/*.rs
 echo "unwrap/expect lint OK"
 
 if cargo fmt --version >/dev/null 2>&1; then
@@ -189,6 +191,16 @@ cargo test -q --test net_loopback --test net_hardening -- --test-threads=1
 echo "== streaming suite (--test-threads=1)"
 cargo test -q --test streaming_equivalence -- --test-threads=1
 
+# The ISSUE-10 tracing suite: arming the process-global tracer at
+# sample_rate 1.0 must be bit-invisible to every output (standalone plans,
+# coordinator, sharded path); the captured ring must show balanced span
+# nesting in claim order and a Chrome-loadable export; and the metrics
+# report matrix pins report()/to_json() section behaviour.  Serialized:
+# trace::install is latest-wins process-global.
+echo "== tracing suite (--test-threads=1)"
+cargo test -q --test tracing_differential --test metrics_report \
+    -- --test-threads=1
+
 # The redesigned public API must stay documented: rustdoc warnings
 # (broken intra-doc links, missing code-block languages, ...) are errors.
 echo "== cargo doc --no-deps (warnings denied)"
@@ -203,7 +215,8 @@ echo " auto-vs-fixed backend sweep, 'cargo bench --bench packing' for the"
 echo " hybrid-geometry padded-cell sweep, 'cargo bench --bench shard' for"
 echo " the sharded-vs-unsharded sweep, 'cargo bench --bench fault_overhead'"
 echo " for the disabled-injection hot-path cost, 'cargo bench --bench"
-echo " streaming' for the incremental-vs-scratch rebuild sweep, and"
-echo " 'scripts/bench_snapshot.sh' to snapshot the whole suite as"
-echo " machine-scaled BENCH_*.json ratios; see EXPERIMENTS.md"
-echo " §Perf/§Batching/§Multi-head/§Planner/§Sharding/§Faults/§Packing/§Streaming)"
+echo " trace_overhead' for the disarmed/armed tracing seam cost, 'cargo"
+echo " bench --bench streaming' for the incremental-vs-scratch rebuild"
+echo " sweep, and 'scripts/bench_snapshot.sh' to snapshot the whole suite"
+echo " as machine-scaled BENCH_*.json ratios; see EXPERIMENTS.md"
+echo " §Perf/§Batching/§Multi-head/§Planner/§Sharding/§Faults/§Packing/§Streaming/§Tracing)"
